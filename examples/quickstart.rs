@@ -1,0 +1,107 @@
+//! End-to-end quickstart: the full lk-spec pipeline on one small model.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Steps (all on the public API, no Python anywhere):
+//!   1. generate the synthetic domain corpora
+//!   2. pretrain the `dense-s` target LM            (L3 driving AOT XLA)
+//!   3. train an EAGLE-3 speculator twice: KL baseline vs the paper's
+//!      hybrid LK^λ (η=3) objective                 (one artifact, two
+//!      runtime loss configs — the "drop-in" property)
+//!   4. serve batched requests through the speculative-decoding engine
+//!      with exact rejection sampling and report τ + speedup for both
+//!
+//! The full-protocol sweep (`make experiments`) reproduces the paper's
+//! LK > KL ordering; this quickstart's single noisy cell demonstrates
+//! the PIPELINE (train→serve→measure) in a few minutes of CPU time.
+
+use std::path::Path;
+
+use lk_spec::config::{LossSpec, TrainPreset};
+use lk_spec::data::corpus::{Corpus, CorpusSpec};
+use lk_spec::data::grammar::Domain;
+use lk_spec::eval::{eval_cell, EvalMode, EvalSettings};
+use lk_spec::runtime::Runtime;
+use lk_spec::train::{DraftTrainer, RunDirs, TargetTrainer};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let work = Path::new("runs/quickstart");
+    let data = work.join("data");
+
+    // 1. corpora --------------------------------------------------------
+    let corpus = Corpus::generate(
+        &data,
+        &CorpusSpec {
+            train_tokens: 120_000,
+            ..Default::default()
+        },
+    )?;
+
+    // 2. target pretrain --------------------------------------------------
+    let rt = Runtime::new(artifacts)?;
+    let dirs = RunDirs::new(work);
+    let target = "dense-s";
+    if !dirs.target_ckpt(target).exists() {
+        let preset = TrainPreset {
+            steps: 300,
+            ..TrainPreset::target(target)
+        };
+        let final_loss =
+            TargetTrainer { rt: &rt, dirs: RunDirs::new(work) }.train(target, &corpus, &preset, 50)?;
+        println!("target pretrained, final LM loss {final_loss:.3}");
+    }
+
+    // 3. speculators: KL vs LK^λ -----------------------------------------
+    let draft = "eagle3@dense-s";
+    for loss in [LossSpec::kl(), LossSpec::lk_lambda(3.0)] {
+        let stem = format!("{}__{}", draft.replace('@', "_"), loss.tag);
+        if dirs.draft_ckpt(&stem).exists() {
+            continue;
+        }
+        let preset = TrainPreset {
+            steps: 200,
+            ..TrainPreset::draft(target, "eagle3")
+        };
+        let m = DraftTrainer { rt: &rt, dirs: RunDirs::new(work) }
+            .train(draft, &loss, &corpus, &preset, 50)?;
+        println!(
+            "trained {} with {}: mean acceptance {:.3}",
+            draft, loss.label, m.mean_alpha
+        );
+    }
+
+    // 4. serve + compare ---------------------------------------------------
+    println!("\n{:<22} {:>7} {:>9} {:>9}", "objective", "tau", "tok/s", "speedup");
+    let settings = EvalSettings {
+        n_prompts: 8,
+        n_time_prompts: 2,
+        ..Default::default()
+    };
+    let mut taus = Vec::new();
+    for loss in [LossSpec::kl(), LossSpec::lk_lambda(3.0)] {
+        let cell = eval_cell(
+            &rt, &dirs, &corpus, draft, &loss.tag, Domain::Chat, EvalMode::T1,
+            7, &settings, false,
+        )?;
+        println!(
+            "{:<22} {:>7.3} {:>9.1} {:>9.2}",
+            loss.label, cell.tau, cell.spec_tps, cell.speedup
+        );
+        taus.push(cell.tau);
+    }
+    println!(
+        "\nLK^λ vs KL on τ: {:+.1}%  (paper: +3.9% at T=1 for this pair; at the\n\
+         quickstart's 200-step budget single-cell τ is noisy to ±5% — run\n\
+         `make experiments` for the full-protocol comparison, which\n\
+         reproduces the LK > KL ordering)",
+        (taus[1] / taus[0] - 1.0) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Batched serving demo through the router (the vLLM-shaped front-end):
+//! bounded-queue admission, bucketed continuous batching, a worker thread
+//! owning the engine, per-request metrics.
+//!
+//! Requires trained checkpoints (run `make drafts` or the quickstart
+//! first). Usage:
+//!
+//! ```text
+//! cargo run --release --example serve_spec -- \
+//!     [--draft eagle3@dense-s] [--loss lkl-eta3] [--requests 16] [--runs runs]
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Context;
+
+use lk_spec::data::corpus::Corpus;
+use lk_spec::data::grammar::Domain;
+use lk_spec::runtime::Runtime;
+use lk_spec::server::{Router, RouterConfig, SpecEngine};
+use lk_spec::train::RunDirs;
+use lk_spec::util::{Args, Json};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let draft = args.opt_or("draft", "eagle3@dense-s").to_string();
+    let loss = args.opt_or("loss", "lkl-eta3").to_string();
+    let n_requests = args.opt_usize("requests", 16)?;
+    let max_new = args.opt_usize("max-new", 32)?;
+    let runs = PathBuf::from(args.opt_or("runs", "runs"));
+    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let data = PathBuf::from(args.opt_or("data", "data"));
+    args.finish()?;
+
+    let corpus = Corpus::open(&data)?;
+    let prompts = corpus.load(Domain::Chat, "eval")?.prompts(n_requests, 16);
+
+    let draft2 = draft.clone();
+    let router = Router::spawn(RouterConfig::default(), move || {
+        let rt = Box::leak(Box::new(Runtime::new(&artifacts)?));
+        let dirs = RunDirs::new(&runs);
+        let dspec = rt.manifest.draft(&draft2)?.clone();
+        let tckpt = lk_spec::tensor::read_checkpoint(&dirs.target_ckpt(&dspec.target))
+            .context("target checkpoint (run `make targets` first)")?;
+        let stem = format!("{}__{loss}", draft2.replace('@', "_"));
+        let dckpt = lk_spec::tensor::read_checkpoint(&dirs.draft_ckpt(&stem))
+            .context("draft checkpoint (run `make drafts` first)")?;
+        let vocab_map = if dspec.arch == "eagle3" {
+            let j = Json::parse_file(&dirs.vocab_map())?;
+            Some(
+                j.get("map")
+                    .as_arr()
+                    .context("map")?
+                    .iter()
+                    .map(|x| x.as_i64().unwrap_or(0) as i32)
+                    .collect::<Vec<i32>>(),
+            )
+        } else {
+            None
+        };
+        let mut engine =
+            SpecEngine::new(rt, &draft2, &tckpt, &dckpt, vocab_map, Default::default())?;
+        Ok(move |prompts: &[Vec<i32>], max_new: usize| engine.generate_batch(prompts, max_new))
+    })?;
+
+    println!("submitting {} requests (draft={draft})…", prompts.len());
+    let t0 = std::time::Instant::now();
+    let receivers: Vec<_> = prompts
+        .iter()
+        .map(|p| router.submit(p.clone(), max_new))
+        .collect::<anyhow::Result<_>>()?;
+    let mut tokens = 0usize;
+    let mut taus = Vec::new();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let res = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
+        println!(
+            "  req {i:>2}: {:>3} tokens  tau={:.2}  {:>6.0} ms",
+            res.tokens.len(),
+            res.stats.tau(),
+            res.latency_ms
+        );
+        tokens += res.tokens.len();
+        taus.push(res.stats.tau());
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "\nthroughput: {:.1} tok/s over {} requests, mean tau {:.2}",
+        tokens as f64 / secs,
+        prompts.len(),
+        taus.iter().sum::<f64>() / taus.len() as f64
+    );
+    router.shutdown();
+    Ok(())
+}

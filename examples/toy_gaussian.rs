@@ -1,0 +1,65 @@
+//! Figure 2 reproduction: fit a single Gaussian to a bimodal mixture
+//! under forward KL, reverse KL and TV; report the density overlap
+//! (= continuous acceptance rate, paper Appendix C).
+//!
+//! ```text
+//! cargo run --release --example toy_gaussian
+//! ```
+//!
+//! Expected qualitative pattern (paper Fig. 2): forward KL mass-covers,
+//! reverse KL mode-seeks, TV finds the overlap-maximizing compromise and
+//! wins by several points of acceptance.
+
+use lk_spec::spec::overlap::{fit, grid, overlap, Mixture, Objective};
+
+fn ascii_plot(target: &Mixture, mu: f64, sigma: f64) -> String {
+    // crude terminal density sketch: target '#', fit 'o', both '@'
+    let xs = grid(-6.0, 6.0, 61);
+    let rows = 8;
+    let pmax = xs.iter().map(|&x| target.pdf(x)).fold(0.0, f64::max);
+    let mut canvas = vec![vec![' '; xs.len()]; rows];
+    for (i, &x) in xs.iter().enumerate() {
+        let tp = ((target.pdf(x) / pmax) * (rows as f64 - 1.0)).round() as usize;
+        let qp = ((lk_spec::spec::overlap::gauss_pdf(x, mu, sigma) / pmax)
+            * (rows as f64 - 1.0))
+            .round() as usize;
+        let tp = tp.min(rows - 1);
+        let qp = qp.min(rows - 1);
+        canvas[rows - 1 - tp][i] = '#';
+        canvas[rows - 1 - qp][i] = if canvas[rows - 1 - qp][i] == '#' { '@' } else { 'o' };
+    }
+    canvas
+        .into_iter()
+        .map(|r| r.into_iter().collect::<String>())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn main() {
+    let target = Mixture::paper_toy();
+    let xs = grid(-12.0, 12.0, 2001);
+    println!("fitting one Gaussian to the bimodal target (Figure 2):\n");
+    let mut results = Vec::new();
+    for obj in [Objective::ForwardKl, Objective::ReverseKl, Objective::Tv] {
+        let (mu, sigma, val) = fit(obj, &target, &xs);
+        let alpha = overlap(&target, mu, sigma, &xs);
+        println!(
+            "{:<10}  mu={:+.2}  sigma={:.2}  objective={:.4}  alpha={:.1}%",
+            obj.name(),
+            mu,
+            sigma,
+            val,
+            alpha * 100.0
+        );
+        println!("{}\n", ascii_plot(&target, mu, sigma));
+        results.push((obj, alpha));
+    }
+    let a_tv = results[2].1;
+    println!(
+        "TV wins by {:+.1}pp over forward KL and {:+.1}pp over reverse KL\n\
+         (paper: 60.2% vs 50.2% / 50.8% on its mixture — TV maximizes the\n\
+         overlap because alpha = 1 - TV exactly).",
+        (a_tv - results[0].1) * 100.0,
+        (a_tv - results[1].1) * 100.0
+    );
+}

@@ -1,0 +1,61 @@
+//! Train one speculator with any LK-family objective and watch the
+//! per-head acceptance/λ dynamics — the paper's §4.2 curriculum in action
+//! (λ starts near 1 = KL-dominated, decays as acceptance rises).
+//!
+//! ```text
+//! cargo run --release --example train_speculator -- \
+//!     [--draft eagle3@dense-s] [--loss lkl-eta3] [--steps 150]
+//! ```
+//!
+//! Requires `make data targets` (or the quickstart) to have produced the
+//! corpus + target checkpoint.
+
+use std::path::PathBuf;
+
+use lk_spec::config::{LossSpec, TrainPreset};
+use lk_spec::data::corpus::Corpus;
+use lk_spec::runtime::Runtime;
+use lk_spec::train::{DraftTrainer, RunDirs};
+use lk_spec::util::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let draft = args.opt_or("draft", "eagle3@dense-s").to_string();
+    let loss = LossSpec::parse(args.opt_or("loss", "lkl-eta3"))?;
+    let steps = args.opt_usize("steps", 150)?;
+    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let data = PathBuf::from(args.opt_or("data", "data"));
+    let runs = PathBuf::from(args.opt_or("runs", "runs"));
+    args.finish()?;
+
+    lk_spec::util::log::set_level(3); // show every logged step
+
+    let rt = Runtime::new(&artifacts)?;
+    let corpus = Corpus::open(&data)?;
+    let dspec = rt.manifest.draft(&draft)?;
+    let preset = TrainPreset {
+        steps,
+        ..TrainPreset::draft(&dspec.target, &dspec.arch)
+    };
+    let trainer = DraftTrainer {
+        rt: &rt,
+        dirs: RunDirs::new(&runs),
+    };
+    let metrics = trainer.train(&draft, &loss, &corpus, &preset, 10)?;
+    println!("\nfinal per-head acceptance rates (position 1..K):");
+    for (i, (a, l)) in metrics
+        .alpha_heads
+        .iter()
+        .zip(&metrics.lambda_heads)
+        .enumerate()
+    {
+        println!("  head {}: alpha={:.3}  lambda={:.3}", i + 1, a, l);
+    }
+    println!(
+        "\nNote the paper's two signatures: alpha decays with head depth\n\
+         (deeper positions are harder) and lambda = exp(-eta*alpha) is\n\
+         correspondingly higher for deeper heads — more KL guidance where\n\
+         alignment is weak (§4.2, MTP rationale in §5.2)."
+    );
+    Ok(())
+}

@@ -1,0 +1,514 @@
+"""AOT lowering: every (config, entrypoint) -> artifacts/<name>.hlo.txt.
+
+This is the ONLY place Python executes in the system's lifecycle: it
+lowers the L2/L1 graphs once, writes HLO **text** plus `manifest.json`
+(the Rust runtime's packing contract), and exits. Python never runs on
+any training, serving or benchmarking path.
+
+HLO *text* — not ``lowered.compile()`` artifacts nor serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Manifest contract (consumed by rust/src/runtime/manifest.rs):
+
+  {
+    "version": 1,
+    "vocab": 512, "k_heads": 6, "span": 64, "prompt_len": 32, ...
+    "targets": { "<name>": { <arch fields>,
+        "params":  [ {"name","shape","dtype"}... ],   # checkpoint order
+        "entries": { "<entry>": {"file", "inputs": [...], "outputs": [...] } } } },
+    "drafts":  { "<arch>@<target>": { ... same structure ... } }
+  }
+
+Every entry's inputs/outputs are FLAT ordered lists; pytrees are
+flattened with `jax.tree_util` default ordering (sorted dict keys) and
+the manifest records the leaf path names so Rust checkpoints/params are
+keyed by name, never by position guessing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import drafts as D
+from . import model as M
+from . import train as T
+
+# ---------------------------------------------------------------------------
+# global shape constants (mirrored in rust/src/config)
+# ---------------------------------------------------------------------------
+
+SPAN = 48          # draft-training span S
+K_HEADS = 6        # trained draft positions (serving may chain further)
+TRAIN_BATCH = 4
+PROMPT_LEN = 32    # prefill bucket
+VERIFY_T = 8       # K+1 tokens per verification round (K=7 eval max)
+SERVE_BATCHES = (1, 4)
+DRAFT_VOCAB = 320
+
+# The sweep needs these (target, arch) pairs (DESIGN.md §5):
+#   eagle3 on all non-mtp targets; medusa+mlp on dense-s; mtp on mtp-l.
+def draft_pairs() -> list[D.DraftConfig]:
+    pairs = []
+    for tname, tcfg in M.TARGETS.items():
+        if tname == "mtp-l":
+            pairs.append(D.DraftConfig(arch="mtp", target=tcfg, k_heads=K_HEADS))
+        else:
+            pairs.append(
+                D.DraftConfig(
+                    arch="eagle3", target=tcfg, k_heads=K_HEADS,
+                    draft_vocab=DRAFT_VOCAB,
+                )
+            )
+    dense_s = M.TARGETS["dense-s"]
+    pairs.append(D.DraftConfig(arch="medusa", target=dense_s, k_heads=K_HEADS))
+    pairs.append(D.DraftConfig(arch="mlp", target=dense_s, k_heads=K_HEADS))
+    return pairs
+
+
+# ---------------------------------------------------------------------------
+# flatten helpers
+# ---------------------------------------------------------------------------
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_spec(tree) -> tuple[list[dict], object]:
+    """(ordered [{name, shape, dtype}], treedef) for a params template."""
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    spec = [
+        {
+            "name": _leaf_name(path),
+            "shape": list(leaf.shape),
+            "dtype": str(leaf.dtype),
+        }
+        for path, leaf in leaves_with_path
+    ]
+    return spec, treedef
+
+
+def shape_structs(tree) -> list[jax.ShapeDtypeStruct]:
+    return [
+        jax.ShapeDtypeStruct(l.shape, l.dtype)
+        for l in jax.tree_util.tree_leaves(tree)
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class EntryWriter:
+    """Lowers entry functions and records their manifest rows."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.stats = []
+
+    def lower(self, name: str, fn, arg_groups: list[tuple[str, list]], outputs_fn=None):
+        """Lower `fn(*flat_args)` at the shapes given by arg_groups.
+
+        arg_groups: [(group_name, [ShapeDtypeStruct or concrete-template])].
+        Returns the manifest entry dict.
+        """
+        flat_specs = []
+        inputs_manifest = []
+        for gname, structs in arg_groups:
+            for i, s in enumerate(structs):
+                flat_specs.append(jax.ShapeDtypeStruct(s.shape, s.dtype))
+                inputs_manifest.append(
+                    {
+                        "group": gname,
+                        "index": i,
+                        "shape": list(s.shape),
+                        "dtype": str(s.dtype),
+                    }
+                )
+        t0 = time.time()
+        lowered = jax.jit(fn, keep_unused=True).lower(*flat_specs)
+        out_tree = jax.eval_shape(fn, *flat_specs)
+        out_flat = jax.tree_util.tree_leaves(out_tree)
+        outputs_manifest = [
+            {"shape": list(o.shape), "dtype": str(o.dtype)} for o in out_flat
+        ]
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        dt = time.time() - t0
+        self.stats.append((name, len(text), dt))
+        print(f"  lowered {name}: {len(text)//1024} KiB in {dt:.1f}s", flush=True)
+        return {
+            "file": fname,
+            "inputs": inputs_manifest,
+            "outputs": outputs_manifest,
+        }
+
+
+# ---------------------------------------------------------------------------
+# scalar spec shorthands
+# ---------------------------------------------------------------------------
+
+def f32(shape=()):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape=()):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u32(shape=()):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# target entries
+# ---------------------------------------------------------------------------
+
+def lower_target(w: EntryWriter, cfg: M.TargetConfig) -> dict:
+    template = jax.eval_shape(
+        lambda: M.init_target(jax.random.PRNGKey(0), cfg)
+    )
+    pspec, tdef = tree_spec(template)
+    pstructs = shape_structs(template)
+    n_params = len(pstructs)
+
+    def unflatten(flat):
+        return jax.tree_util.tree_unflatten(tdef, list(flat))
+
+    entries = {}
+
+    # --- init ---------------------------------------------------------
+    def init_fn(seed):
+        key = jax.random.wrap_key_data(seed, impl="threefry2x32")
+        return tuple(jax.tree_util.tree_leaves(M.init_target(key, cfg)))
+
+    entries["init"] = w.lower(
+        f"tgt_{cfg.name}_init", init_fn, [("seed", [u32((2,))])]
+    )
+
+    # --- train step ----------------------------------------------------
+    tokens_spec = i32((TRAIN_BATCH, SPAN + K_HEADS + 2))
+
+    def train_fn(*flat):
+        p = unflatten(flat[:n_params])
+        m = unflatten(flat[n_params : 2 * n_params])
+        v = unflatten(flat[2 * n_params : 3 * n_params])
+        step, tokens, lr = flat[3 * n_params :]
+        new_p, new_m, new_v, metrics = T.target_train_step(
+            p, m, v, step, tokens, lr, cfg
+        )
+        return (
+            tuple(jax.tree_util.tree_leaves(new_p))
+            + tuple(jax.tree_util.tree_leaves(new_m))
+            + tuple(jax.tree_util.tree_leaves(new_v))
+            + (metrics,)
+        )
+
+    entries["train_step"] = w.lower(
+        f"tgt_{cfg.name}_train_step",
+        train_fn,
+        [
+            ("params", pstructs),
+            ("opt_m", pstructs),
+            ("opt_v", pstructs),
+            ("step", [i32()]),
+            ("tokens", [tokens_spec]),
+            ("lr", [f32()]),
+        ],
+    )
+
+    # --- prefill / verify / decode per serve batch ---------------------
+    for b in SERVE_BATCHES:
+        def prefill_fn(*flat, b=b):
+            p = unflatten(flat[:n_params])
+            tokens, length = flat[n_params:]
+            return M.target_prefill(p, tokens, length, cfg)
+
+        entries[f"prefill_b{b}"] = w.lower(
+            f"tgt_{cfg.name}_prefill_b{b}",
+            prefill_fn,
+            [
+                ("params", pstructs),
+                ("tokens", [i32((b, PROMPT_LEN))]),
+                ("length", [i32()]),
+            ],
+        )
+
+        kv_spec = f32(
+            (cfg.n_layers, 2, b, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+        )
+        for ename, t in (("verify", VERIFY_T), ("decode", 1)):
+            def step_fn(*flat, t=t):
+                p = unflatten(flat[:n_params])
+                kv, tokens, pos = flat[n_params:]
+                return M.target_verify(p, kv, tokens, pos, cfg)
+
+            entries[f"{ename}_b{b}"] = w.lower(
+                f"tgt_{cfg.name}_{ename}_b{b}",
+                step_fn,
+                [
+                    ("params", pstructs),
+                    ("kv", [kv_spec]),
+                    ("tokens", [i32((b, t))]),
+                    ("pos", [i32((b,))]),  # per-row positions
+                ],
+            )
+
+    return {
+        "kind": "target",
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "head_dim": cfg.head_dim,
+        "n_experts": cfg.n_experts,
+        "has_mtp": cfg.has_mtp,
+        "max_seq": cfg.max_seq,
+        "feat_dim": cfg.feat_dim,
+        "params": pspec,
+        "entries": entries,
+    }
+
+
+# ---------------------------------------------------------------------------
+# draft entries
+# ---------------------------------------------------------------------------
+
+def lower_draft(w: EntryWriter, dcfg: D.DraftConfig) -> dict:
+    tcfg = dcfg.target
+    t_template = jax.eval_shape(lambda: M.init_target(jax.random.PRNGKey(0), tcfg))
+    t_structs = shape_structs(t_template)
+    _, t_def = tree_spec(t_template)
+    n_t = len(t_structs)
+
+    d_template = jax.eval_shape(lambda: D.init_draft(jax.random.PRNGKey(0), dcfg))
+    d_spec, d_def = tree_spec(d_template)
+    d_structs = shape_structs(d_template)
+    n_d = len(d_structs)
+
+    def unflat_t(flat):
+        return jax.tree_util.tree_unflatten(t_def, list(flat))
+
+    def unflat_d(flat):
+        return jax.tree_util.tree_unflatten(d_def, list(flat))
+
+    tag = dcfg.name.replace("@", "_")
+    entries = {}
+
+    # --- init -----------------------------------------------------------
+    def init_fn(seed):
+        key = jax.random.wrap_key_data(seed, impl="threefry2x32")
+        return tuple(jax.tree_util.tree_leaves(D.init_draft(key, dcfg)))
+
+    entries["init"] = w.lower(f"dr_{tag}_init", init_fn, [("seed", [u32((2,))])])
+
+    # --- train step -------------------------------------------------------
+    tokens_spec = i32((TRAIN_BATCH, SPAN + K_HEADS + 1))
+    use_vmap = dcfg.arch == "eagle3"
+    vm_group = [("vocab_map", [i32((dcfg.draft_vocab,))])] if use_vmap else []
+
+    def train_fn(*flat):
+        tp = unflat_t(flat[:n_t])
+        dp = unflat_d(flat[n_t : n_t + n_d])
+        m = unflat_d(flat[n_t + n_d : n_t + 2 * n_d])
+        v = unflat_d(flat[n_t + 2 * n_d : n_t + 3 * n_d])
+        rest = flat[n_t + 3 * n_d :]
+        if use_vmap:
+            step, tokens, loss_w, eta, gamma, lr, vocab_map = rest
+        else:
+            step, tokens, loss_w, eta, gamma, lr = rest
+            vocab_map = None
+        new_p, new_m, new_v, metrics = T.draft_train_step(
+            tp, dp, m, v, step, tokens, loss_w, eta, gamma, lr, vocab_map,
+            dcfg, SPAN,
+        )
+        return (
+            tuple(jax.tree_util.tree_leaves(new_p))
+            + tuple(jax.tree_util.tree_leaves(new_m))
+            + tuple(jax.tree_util.tree_leaves(new_v))
+            + (metrics,)
+        )
+
+    entries["train_step"] = w.lower(
+        f"dr_{tag}_train_step",
+        train_fn,
+        [
+            ("tparams", t_structs),
+            ("dparams", d_structs),
+            ("opt_m", d_structs),
+            ("opt_v", d_structs),
+            ("step", [i32()]),
+            ("tokens", [tokens_spec]),
+            ("loss_weights", [f32((4,))]),
+            ("eta", [f32()]),
+            ("gamma", [f32()]),
+            ("lr", [f32()]),
+        ]
+        + vm_group,
+    )
+
+    # --- serving entries -------------------------------------------------
+    d = tcfg.d_model
+    for b in SERVE_BATCHES:
+        if dcfg.is_recurrent:
+            dkv_spec = f32((2, b, tcfg.n_heads, tcfg.max_seq, tcfg.head_dim))
+            fdim = dcfg.fuse_dim
+            for ename, t in (("extend_p", PROMPT_LEN), ("extend_k", VERIFY_T)):
+                def ext_fn(*flat, t=t):
+                    tp = unflat_t(flat[:n_t])
+                    dp = unflat_d(flat[n_t : n_t + n_d])
+                    dkv, feats, tokens_next, pos = flat[n_t + n_d :]
+                    return D.draft_extend(dp, tp, dkv, feats, tokens_next, pos, dcfg)
+
+                entries[f"{ename}_b{b}"] = w.lower(
+                    f"dr_{tag}_{ename}_b{b}",
+                    ext_fn,
+                    [
+                        ("tparams", t_structs),
+                        ("dparams", d_structs),
+                        ("dkv", [dkv_spec]),
+                        ("feats", [f32((b, t, fdim))]),
+                        ("tokens_next", [i32((b, t))]),
+                        ("pos", [i32((b,))]),  # per-row positions
+                    ],
+                )
+
+            def step_fn(*flat):
+                tp = unflat_t(flat[:n_t])
+                dp = unflat_d(flat[n_t : n_t + n_d])
+                dkv, h_prev, token, pos = flat[n_t + n_d :]
+                return D.draft_step(dp, tp, dkv, h_prev, token, pos, dcfg)
+
+            entries[f"step_b{b}"] = w.lower(
+                f"dr_{tag}_step_b{b}",
+                step_fn,
+                [
+                    ("tparams", t_structs),
+                    ("dparams", d_structs),
+                    ("dkv", [dkv_spec]),
+                    ("h_prev", [f32((b, d))]),
+                    ("token", [i32((b,))]),
+                    ("pos", [i32((b,))]),  # per-row positions
+                ],
+            )
+        elif dcfg.arch == "medusa":
+            def prop_fn(*flat):
+                dp = unflat_d(flat[:n_d])
+                (hidden,) = flat[n_d:]
+                return D.medusa_propose(dp, hidden, dcfg)
+
+            entries[f"propose_b{b}"] = w.lower(
+                f"dr_{tag}_propose_b{b}",
+                prop_fn,
+                [("dparams", d_structs), ("hidden", [f32((b, d))])],
+            )
+        elif dcfg.arch == "mlp":
+            def mstep_fn(*flat):
+                tp = unflat_t(flat[:n_t])
+                dp = unflat_d(flat[n_t : n_t + n_d])
+                state, token, head_idx = flat[n_t + n_d :]
+                return D.mlp_step(dp, tp, state, token, head_idx, dcfg)
+
+            entries[f"step_b{b}"] = w.lower(
+                f"dr_{tag}_step_b{b}",
+                mstep_fn,
+                [
+                    ("tparams", t_structs),
+                    ("dparams", d_structs),
+                    ("state", [f32((b, d))]),
+                    ("token", [i32((b,))]),
+                    ("head_idx", [i32()]),
+                ],
+            )
+
+    return {
+        "kind": "draft",
+        "arch": dcfg.arch,
+        "target": tcfg.name,
+        "k_heads": dcfg.k_heads,
+        "draft_vocab": dcfg.out_vocab,
+        "is_recurrent": dcfg.is_recurrent,
+        "fuse_dim": dcfg.fuse_dim if dcfg.is_recurrent else d,
+        "own_head": dcfg.own_head,
+        "params": d_spec,
+        "entries": entries,
+    }
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated subset of config names (targets or drafts) to lower",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    w = EntryWriter(args.out)
+    manifest: dict = {
+        "version": 1,
+        "vocab": 512,
+        "k_heads": K_HEADS,
+        "span": SPAN,
+        "train_batch": TRAIN_BATCH,
+        "prompt_len": PROMPT_LEN,
+        "verify_t": VERIFY_T,
+        "serve_batches": list(SERVE_BATCHES),
+        "draft_vocab": DRAFT_VOCAB,
+        "targets": {},
+        "drafts": {},
+    }
+
+    t0 = time.time()
+    for name, cfg in M.TARGETS.items():
+        if only and name not in only:
+            continue
+        print(f"[target {name}]", flush=True)
+        manifest["targets"][name] = lower_target(w, cfg)
+    for dcfg in draft_pairs():
+        if only and dcfg.name not in only and dcfg.target.name not in only:
+            continue
+        print(f"[draft {dcfg.name}]", flush=True)
+        manifest["drafts"][dcfg.name] = lower_draft(w, dcfg)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    total = sum(s[1] for s in w.stats)
+    print(
+        f"wrote {len(w.stats)} artifacts ({total//1024} KiB) + manifest in "
+        f"{time.time()-t0:.0f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

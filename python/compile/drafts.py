@@ -1,0 +1,334 @@
+"""L2: the four draft/speculator architectures (paper §5.2, App. E).
+
+  * EAGLE-3   — single transformer block over fused multi-layer target
+                features, recurrent across draft positions, truncated
+                output vocabulary (FR-Spec style), frozen target embedding.
+  * MTP       — DeepSeek-style multi-token-prediction module: same
+                recurrent shape as EAGLE but fuses only the last hidden
+                state and shares the target's unembedding; initialized
+                from the natively-pretrained module and fine-tuned.
+  * MEDUSA    — K independent residual-MLP heads over the last hidden
+                state, conditionally-independent parallel prediction.
+  * MLP       — multi-stage MLP speculator (Wertheimer et al.): per-head
+                recurrent state update from the previous state and the
+                embedding of the (sampled / teacher-forced) token.
+
+All are pure functions of explicit parameter pytrees. Training uses the
+"training-time test" unroll: head n re-runs the block over the whole
+sequence with inputs shifted by n and hiddens from head n-1, mirroring
+inference recurrence (simplification vs EAGLE-3's mixed-level attention
+is documented in DESIGN.md).
+
+Index convention (matches the serving engine): target feature f_t is the
+fusion output after processing token x_t; head n at position t predicts
+x_{t+n+1} and is scored against the target distribution softmax(z_p[t+n]).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftConfig:
+    """One speculator configuration, tied to a TargetConfig."""
+
+    arch: str  # "eagle3" | "mtp" | "medusa" | "mlp"
+    target: M.TargetConfig
+    k_heads: int = 6
+    draft_vocab: int = 320  # truncated vocab (eagle3 only; others full)
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}@{self.target.name}"
+
+    @property
+    def is_recurrent(self) -> bool:
+        return self.arch in ("eagle3", "mtp")
+
+    @property
+    def fuse_dim(self) -> int:
+        """Width of the fused target features consumed by the draft."""
+        return self.target.feat_dim if self.arch == "eagle3" else self.target.d_model
+
+    @property
+    def out_vocab(self) -> int:
+        return self.draft_vocab if self.arch == "eagle3" else self.target.vocab
+
+    @property
+    def own_head(self) -> bool:
+        """MTP shares the target unembedding; everything else trains one."""
+        return self.arch != "mtp"
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_draft(key, cfg: DraftConfig, dtype=jnp.float32) -> dict[str, Any]:
+    d = cfg.target.d_model
+    keys = jax.random.split(key, 8)
+    if cfg.is_recurrent:
+        p: dict[str, Any] = {
+            "fc_fuse": jax.random.normal(keys[0], (cfg.fuse_dim, d), dtype)
+            * (2.0 / cfg.fuse_dim) ** 0.5,
+            "fc_in": jax.random.normal(keys[1], (2 * d, d), dtype)
+            * (2.0 / (2 * d)) ** 0.5,
+            "layer": M.layer_init(keys[2], draft_layer_cfg(cfg), dtype),
+            "final_norm": jnp.ones((d,), dtype),
+        }
+        if cfg.arch == "mtp":
+            p["norm_emb"] = jnp.ones((d,), dtype)
+            p["norm_h"] = jnp.ones((d,), dtype)
+        if cfg.own_head:
+            p["head"] = (
+                jax.random.normal(keys[3], (d, cfg.out_vocab), dtype)
+                * (2.0 / d) ** 0.5
+            )
+        return p
+    if cfg.arch == "medusa":
+        heads = []
+        for n in range(cfg.k_heads):
+            k1, k2 = jax.random.split(keys[n % 8], 2)
+            k1 = jax.random.fold_in(k1, n)
+            k2 = jax.random.fold_in(k2, n)
+            heads.append(
+                {
+                    "w1": jax.random.normal(k1, (d, d), dtype) * (2.0 / d) ** 0.5,
+                    "head": jax.random.normal(k2, (d, cfg.out_vocab), dtype)
+                    * (2.0 / d) ** 0.5,
+                }
+            )
+        return {"heads": heads}
+    if cfg.arch == "mlp":
+        heads = []
+        for n in range(cfg.k_heads):
+            ks = jax.random.split(jax.random.fold_in(keys[n % 8], n), 3)
+            heads.append(
+                {
+                    "ws": jax.random.normal(ks[0], (d, d), dtype) * (2.0 / d) ** 0.5,
+                    "we": jax.random.normal(ks[1], (d, d), dtype) * (2.0 / d) ** 0.5,
+                    "head": jax.random.normal(ks[2], (d, cfg.out_vocab), dtype)
+                    * (2.0 / d) ** 0.5,
+                }
+            )
+        return {"heads": heads, "norm": jnp.ones((d,), dtype)}
+    raise ValueError(cfg.arch)
+
+
+def _dense_layer_cfg(tcfg: M.TargetConfig) -> M.TargetConfig:
+    """EAGLE draft blocks are always DENSE, even for MoE targets (paper
+    App. E: d_ffn = num_experts_per_tok × d_expert)."""
+    if tcfg.n_experts == 0:
+        return tcfg
+    ffn_mult = 2 * tcfg.expert_mult  # top-2 × per-expert intermediate
+    return dataclasses.replace(tcfg, n_experts=0, ffn_mult=ffn_mult)
+
+
+def draft_layer_cfg(cfg: DraftConfig) -> M.TargetConfig:
+    """Layer config for the draft block. EAGLE-3 uses a dense block even on
+    MoE targets; the MTP module retains the target's (possibly MoE)
+    architecture (paper §5.2)."""
+    if cfg.arch == "mtp":
+        return cfg.target
+    return _dense_layer_cfg(cfg.target)
+
+
+def init_mtp_from_target(tparams) -> dict[str, Any]:
+    """The MTP speculator's parameters ARE the target's pretrained MTP
+    module (paper: fine-tune the released module). Restructure into the
+    recurrent-draft layout (fc_fuse <- proj, etc.)."""
+    mtp = tparams["mtp"]
+    return {
+        "fc_fuse": jnp.eye(mtp["proj"].shape[1], dtype=mtp["proj"].dtype),
+        "fc_in": mtp["proj"],
+        "norm_emb": mtp["norm_emb"],
+        "norm_h": mtp["norm_h"],
+        "layer": mtp["layer"],
+        "final_norm": mtp["final_norm"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# recurrent drafts (EAGLE-3 / MTP): block application
+# ---------------------------------------------------------------------------
+
+def _recurrent_input(dparams, cfg: DraftConfig, tok_emb, h_prev):
+    """fc_in(concat(emb, h_prev)) with MTP's extra input norms."""
+    if cfg.arch == "mtp":
+        tok_emb = M.rmsnorm(tok_emb, dparams["norm_emb"])
+        h_prev = M.rmsnorm(h_prev, dparams["norm_h"])
+    z = jnp.concatenate([tok_emb, h_prev], axis=-1)
+    return z @ dparams["fc_in"]
+
+
+def _draft_head(dparams, tparams, cfg: DraftConfig, h):
+    hn = M.rmsnorm(h, dparams["final_norm"])
+    w = dparams["head"] if cfg.own_head else tparams["head"]
+    return hn @ w
+
+
+def draft_extend(
+    dparams,
+    tparams,
+    dkv: jax.Array,
+    feats: jax.Array,
+    tokens_next: jax.Array,
+    pos,
+    cfg: DraftConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Process T accepted positions through the draft block (recurrent
+    archs). Used both as prompt prefill (pos=0, T=Sp) and as the
+    post-verification extension (T=K+1).
+
+    Args:
+      dkv: [2, B, H, Smax, Dh] draft KV cache
+      feats: [B, T, F] target fusion features for the positions
+      tokens_next: [B, T] token following each position (x_{t+1})
+      pos: absolute position of feats[:, 0]
+
+    Returns (q_logits [B, T, Vd], h [B, T, d], dkv').
+    The engine picks index n_acc-1 from q_logits/h for the next round.
+    """
+    lcfg = draft_layer_cfg(cfg)
+    g0 = feats @ dparams["fc_fuse"]
+    emb = jnp.take(tparams["embed"], tokens_next, axis=0)
+    x = _recurrent_input(dparams, cfg, emb, g0)
+    x, kv = M.transformer_layer(
+        dparams["layer"], x, lcfg, kv=(dkv[0], dkv[1]), pos=pos
+    )
+    logits = _draft_head(dparams, tparams, cfg, x)
+    return logits, x, jnp.stack(kv)
+
+
+def draft_step(
+    dparams,
+    tparams,
+    dkv: jax.Array,
+    h_prev: jax.Array,
+    token: jax.Array,
+    pos,
+    cfg: DraftConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One autoregressive drafting step (recurrent archs).
+
+    Unlike `draft_extend`, the recurrent state input is the previous
+    draft-block hidden (EAGLE recurrence) and is fed to fc_in DIRECTLY —
+    no fc_fuse, which only applies to target features.
+
+    Args:
+      h_prev: [B, d] previous draft hidden (from `draft_extend` outputs at
+        the last accepted index, or from the previous `draft_step`)
+      token: [B] the most recent drafted token
+
+    Returns (q_logits [B, Vd], h [B, d], dkv').
+    """
+    lcfg = draft_layer_cfg(cfg)
+    emb = jnp.take(tparams["embed"], token, axis=0)  # [B, d]
+    x = _recurrent_input(dparams, cfg, emb, h_prev)[:, None, :]  # [B, 1, d]
+    x, kv = M.transformer_layer(
+        dparams["layer"], x, lcfg, kv=(dkv[0], dkv[1]), pos=pos
+    )
+    logits = _draft_head(dparams, tparams, cfg, x)
+    return logits[:, 0], x[:, 0], jnp.stack(kv)
+
+
+def draft_train_unroll(
+    dparams,
+    tparams,
+    feats: jax.Array,
+    tokens: jax.Array,
+    cfg: DraftConfig,
+) -> jax.Array:
+    """Training-time-test unroll for recurrent drafts.
+
+    Args:
+      feats: [B, S, F] target features (frozen) for positions 0..S-1
+      tokens: [B, S+K] ground-truth tokens x_0..x_{S+K-1}
+
+    Head n (1-indexed) at position t consumes embed(x_{t+n}) and the
+    previous head's hidden g^{n-1}_t, predicting x_{t+n+1}.
+
+    Returns q_logits [K, B, S, Vd].
+    """
+    k = cfg.k_heads
+    s = feats.shape[1]
+    lcfg = draft_layer_cfg(cfg)
+    g = feats @ dparams["fc_fuse"]  # g^0
+    out = []
+    for n in range(1, k + 1):
+        tok_n = jax.lax.dynamic_slice_in_dim(tokens, n, s, axis=1)  # x_{t+n}
+        emb = jnp.take(tparams["embed"], tok_n, axis=0)
+        x = _recurrent_input(dparams, cfg, emb, g)
+        x, _ = M.transformer_layer(dparams["layer"], x, lcfg)
+        out.append(_draft_head(dparams, tparams, cfg, x))
+        g = x
+    return jnp.stack(out)
+
+
+# ---------------------------------------------------------------------------
+# MEDUSA
+# ---------------------------------------------------------------------------
+
+def medusa_propose(dparams, hidden: jax.Array, cfg: DraftConfig) -> jax.Array:
+    """All K head logits from the last hidden state.
+
+    hidden: [B, d] (or [B, S, d] during training) -> [K, B(, S), V].
+    Head n: h' = h + SiLU(W1 h); logits = h' @ head  (residual MLP block).
+    """
+    outs = []
+    for hp in dparams["heads"]:
+        hprime = hidden + jax.nn.silu(hidden @ hp["w1"])
+        outs.append(hprime @ hp["head"])
+    return jnp.stack(outs)
+
+
+# ---------------------------------------------------------------------------
+# MLP speculator
+# ---------------------------------------------------------------------------
+
+def mlp_step(
+    dparams, tparams, state: jax.Array, token: jax.Array, head_idx, cfg: DraftConfig
+) -> tuple[jax.Array, jax.Array]:
+    """One MLP-speculator stage: state' = SiLU(Ws state + We emb(token)).
+
+    head_idx selects the per-position weights (scalar; staged weights are
+    stacked so one lowered artifact serves all K steps).
+    """
+    ws = jnp.stack([h["ws"] for h in dparams["heads"]])  # [K, d, d]
+    we = jnp.stack([h["we"] for h in dparams["heads"]])
+    wh = jnp.stack([h["head"] for h in dparams["heads"]])
+    ws_n = jax.lax.dynamic_index_in_dim(ws, head_idx, keepdims=False)
+    we_n = jax.lax.dynamic_index_in_dim(we, head_idx, keepdims=False)
+    wh_n = jax.lax.dynamic_index_in_dim(wh, head_idx, keepdims=False)
+    emb = jnp.take(tparams["embed"], token, axis=0)
+    new_state = jax.nn.silu(state @ ws_n + emb @ we_n)
+    logits = M.rmsnorm(new_state, dparams["norm"]) @ wh_n
+    return logits, new_state
+
+
+def mlp_train_unroll(
+    dparams, tparams, hidden: jax.Array, tokens: jax.Array, cfg: DraftConfig
+) -> jax.Array:
+    """Teacher-forced MLP speculator unroll.
+
+    hidden: [B, S, d] last-layer target hiddens; tokens [B, S+K].
+    state_0 = hidden_t; stage n consumes x_{t+n}; logits_n predict x_{t+n+1}.
+    Returns [K, B, S, V].
+    """
+    s = hidden.shape[1]
+    state = hidden
+    outs = []
+    for n in range(1, cfg.k_heads + 1):
+        hp = dparams["heads"][n - 1]
+        tok_n = jax.lax.dynamic_slice_in_dim(tokens, n, s, axis=1)
+        emb = jnp.take(tparams["embed"], tok_n, axis=0)
+        state = jax.nn.silu(state @ hp["ws"] + emb @ hp["we"])
+        outs.append(M.rmsnorm(state, dparams["norm"]) @ hp["head"])
+    return jnp.stack(outs)

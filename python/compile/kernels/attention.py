@@ -1,0 +1,138 @@
+"""L1 Pallas kernel: causal flash-style attention.
+
+Used by the target transformer blocks and the EAGLE-3 draft layer. The
+schedule is the TPU adaptation of the GPU flash-attention pattern
+(DESIGN.md §3): instead of a threadblock per query tile with shared-memory
+KV staging, we run a sequential grid over (batch·head, query-block,
+kv-block) with the online-softmax accumulators (m, l, o) living in the
+revisited output blocks, and BlockSpec expressing the HBM→VMEM staging of
+K/V tiles.
+
+Masking is positional: query at absolute position ``q_offset + i`` may
+attend to kv index j iff ``j <= pos`` and ``j < kv_len`` — this supports
+all three runtime shapes with one kernel:
+
+  * prefill   (q_offset = 0, kv_len = S)
+  * verify    (q_offset = ctx, kv block holds ctx + K + 1 entries)
+  * decode    (Sq = 1)
+
+``interpret=True`` is mandatory on the CPU PJRT plugin (real-TPU lowering
+emits Mosaic custom-calls the CPU client cannot run); numerics are
+validated against `ref.causal_attention`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Q_BLOCK = 64
+KV_BLOCK = 64
+
+_NEG_BIG = -1e30
+
+
+def _attn_kernel(
+    qoff_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+    *, kv_block: int, scale: float,
+):
+    """Online-softmax attention over one (bh, q-block) with sequential kv grid.
+
+    Accumulators per query row (live in revisited output blocks):
+      m — running max of scores, l — running sum of exp(scores − m),
+      o — running weighted value sum, rescaled when m changes.
+    """
+    kb = pl.program_id(2)
+    q = q_ref[...][0]  # [Qb, D]
+    k = k_ref[...][0]  # [Kb, D]
+    v = v_ref[...][0]  # [Kb, D]
+    qoff = qoff_ref[0]
+    kvlen = kvlen_ref[0]
+
+    scores = jnp.dot(q, k.T) * scale  # [Qb, Kb]
+    qpos = qoff + pl.program_id(1) * q.shape[0] + jax.lax.iota(jnp.int32, q.shape[0])
+    jpos = kb * kv_block + jax.lax.iota(jnp.int32, k.shape[0])
+    mask = (jpos[None, :] <= qpos[:, None]) & (jpos[None, :] < kvlen)
+    scores = jnp.where(mask, scores, _NEG_BIG)
+    blk_m = jnp.max(scores, axis=-1)  # [Qb]
+
+    @pl.when(kb == 0)
+    def _init():
+        e = jnp.exp(scores - blk_m[:, None])
+        # Fully-masked rows (qpos < 0 never happens; padding rows handled
+        # by caller) still produce finite output via the exp of -BIG.
+        m_ref[...] = blk_m[None]
+        l_ref[...] = jnp.sum(e, axis=-1)[None]
+        o_ref[...] = jnp.dot(e, v)[None]
+
+    @pl.when(kb > 0)
+    def _accum():
+        m_old = m_ref[...][0]
+        l_old = l_ref[...][0]
+        o_old = o_ref[...][0]
+        m_new = jnp.maximum(m_old, blk_m)
+        corr = jnp.exp(m_old - m_new)
+        e = jnp.exp(scores - m_new[:, None])
+        m_ref[...] = m_new[None]
+        l_ref[...] = (l_old * corr + jnp.sum(e, axis=-1))[None]
+        o_ref[...] = (o_old * corr[:, None] + jnp.dot(e, v))[None]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_offset: jax.Array | int,
+    kv_len: jax.Array | int,
+    q_block: int = Q_BLOCK,
+    kv_block: int = KV_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Causal attention [B, H, Sq, D] x [B, H, Sk, D] -> [B, H, Sq, D].
+
+    Matches `ref.causal_attention`. Sq/Sk are padded to tile boundaries by
+    the caller; invalid kv entries are excluded via ``kv_len``.
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    assert sq % q_block == 0 and sk % kv_block == 0, (sq, sk, q_block, kv_block)
+    bh = b * h
+    q3 = q.reshape(bh, sq, d)
+    k3 = k.reshape(bh, sk, d)
+    v3 = v.reshape(bh, sk, d)
+    qoff = jnp.asarray(q_offset, jnp.int32).reshape(1)
+    kvl = jnp.asarray(kv_len, jnp.int32).reshape(1)
+    grid = (bh, sq // q_block, sk // kv_block)
+    kernel = functools.partial(
+        _attn_kernel, kv_block=kv_block, scale=1.0 / float(d) ** 0.5
+    )
+    scalar_spec = pl.BlockSpec((1,), lambda bhi, qi, ki: (0,))
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            scalar_spec,
+            scalar_spec,
+            pl.BlockSpec((1, q_block, d), lambda bhi, qi, ki: (bhi, qi, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda bhi, qi, ki: (bhi, ki, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda bhi, qi, ki: (bhi, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_block, d), lambda bhi, qi, ki: (bhi, qi, 0)),
+            pl.BlockSpec((1, q_block), lambda bhi, qi, ki: (bhi, qi)),
+            pl.BlockSpec((1, q_block), lambda bhi, qi, ki: (bhi, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, sq), q.dtype),
+            jax.ShapeDtypeStruct((bh, sq), q.dtype),
+        ],
+        interpret=interpret,
+    )(qoff, kvl, q3, k3, v3)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, sq, d)

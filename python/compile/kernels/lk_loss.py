@@ -1,0 +1,277 @@
+"""L1 Pallas kernels for the LK-loss family (paper §4, Appendix A).
+
+The compute hot-spot of LK-loss training is a *fused dual-softmax
+reduction* over the vocabulary axis: for every (batch, position, head) row
+we need logsumexp(z_p), logsumexp(z_q) and then three reductions coupling
+the two distributions — Σ min(p,q) (acceptance), Σ|p−q| (TV) and
+Σ p̃ log(p̃/q) (KL). A naive implementation materializes five V-sized
+intermediates in HBM per row; these kernels stream the logits through
+VMEM-resident tiles instead.
+
+Hardware adaptation (DESIGN.md §3): the paper trained on GPUs where this
+fusion is a warp-level blockReduce over shared memory. On TPU we express
+the same schedule with a sequential grid over (row-block, vocab-block)
+tiles and running accumulators that live in the (revisited) output block:
+
+  pass A  `softmax_stats_kernel` — online (m, Σe^{z−m}) per row for z_p
+          and z_q (one traversal each);
+  pass B  `lk_reduce_kernel`     — one further traversal computing all
+          four coupled reductions with p, q reconstructed on the fly from
+          logits + normalizers; nothing of size V ever leaves VMEM.
+
+Grid iteration order on TPU is sequential, which makes the
+init-on-first-block / accumulate-on-rest pattern sound; ``interpret=True``
+(mandatory on the CPU-only PJRT plugin — real-TPU lowering emits Mosaic
+custom-calls the CPU client cannot execute) preserves those semantics
+exactly, so correctness is validated on CPU and the BlockSpec schedule is
+what we carry to real hardware.
+
+All kernels are exposed through `fused_lk_terms` / `fused_softmax_stats`,
+which `compile.losses` wraps in a custom-VJP (closed-form backward from
+paper Appendix A — see `ref.grad_*`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row/vocab tile sizes. On real TPU these are tuned to the 16 MB VMEM
+# budget (see DESIGN.md §7 for the footprint estimate at production
+# shapes). On the CPU interpret path each grid step lowers to a
+# while-loop iteration, so the AOT defaults collapse the grid (one block
+# covers our tiny shapes); python/tests pass small explicit block sizes
+# to exercise true multi-block accumulation.
+ROW_BLOCK = 4096
+VOCAB_BLOCK = 512
+
+_NEG_BIG = -1e30
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pick_block(n: int, want: int) -> int:
+    """Largest divisor of n that is <= want (keeps grids exact without
+    padding; tile-boundary padding is a real-TPU concern only)."""
+    b = min(want, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# pass A: online softmax statistics
+# ---------------------------------------------------------------------------
+
+def _softmax_stats_kernel(z_ref, m_ref, s_ref, *, nvb: int):
+    """Online (running max, running scaled sum-exp) accumulation.
+
+    Grid is (row_blocks, vocab_blocks); vocab is the innermost, sequential
+    dimension. The output blocks for a given row block are revisited across
+    vocab steps and act as accumulators:
+
+      m_new = max(m, max_j z_j)
+      s_new = s * exp(m - m_new) + Σ_j exp(z_j - m_new)
+
+    After the last vocab step, logsumexp = m + log(s).
+    """
+    j = pl.program_id(1)
+    z = z_ref[...]  # [Rb, Vb]
+    blk_m = jnp.max(z, axis=-1)  # [Rb]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = blk_m
+        s_ref[...] = jnp.sum(jnp.exp(z - blk_m[:, None]), axis=-1)
+
+    @pl.when(j > 0)
+    def _accum():
+        m_old = m_ref[...]
+        s_old = s_ref[...]
+        m_new = jnp.maximum(m_old, blk_m)
+        s_new = s_old * jnp.exp(m_old - m_new) + jnp.sum(
+            jnp.exp(z - m_new[:, None]), axis=-1
+        )
+        m_ref[...] = m_new
+        s_ref[...] = s_new
+
+
+def fused_softmax_stats(
+    z: jax.Array,
+    row_block: int = ROW_BLOCK,
+    vocab_block: int = VOCAB_BLOCK,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Rowwise (max, logsumexp) of ``z`` [N, V] via the Pallas pass-A kernel.
+
+    V must be a multiple of ``vocab_block`` and N of ``row_block`` — the
+    caller (aot/model code) always pads shapes to tile boundaries; tests
+    exercise both exact and padded shapes through the public wrappers.
+    """
+    n, v = z.shape
+    row_block = _pick_block(n, row_block)
+    vocab_block = _pick_block(v, vocab_block)
+    nrb, nvb = n // row_block, v // vocab_block
+    kernel = functools.partial(_softmax_stats_kernel, nvb=nvb)
+    m, s = pl.pallas_call(
+        kernel,
+        grid=(nrb, nvb),
+        in_specs=[pl.BlockSpec((row_block, vocab_block), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((row_block,), lambda i, j: (i,)),
+            pl.BlockSpec((row_block,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), z.dtype),
+            jax.ShapeDtypeStruct((n,), z.dtype),
+        ],
+        interpret=interpret,
+    )(z)
+    return m, m + jnp.log(s)
+
+
+# ---------------------------------------------------------------------------
+# pass B: fused LK reductions
+# ---------------------------------------------------------------------------
+
+def _lk_reduce_kernel(
+    zp_ref, zq_ref, lsep_ref, lsepsub_ref, lseq_ref,
+    alpha_ref, tv_ref, kl_ref, pin_ref,
+):
+    """One VMEM traversal computing all coupled reductions.
+
+    Reconstructs p, p̃ and q tile-by-tile from logits and the pass-A
+    normalizers, then accumulates:
+
+      alpha += Σ min(p, q)          (acceptance, against ORIGINAL p)
+      tv_in += Σ |p − q|            (in-support TV part, against p)
+      kl    += Σ p̃ (log p̃ − log q)  (masked-target KL, paper §4.4)
+      p_in  += Σ p                  (target mass inside draft vocab)
+
+    For the full-vocabulary case the caller passes lse_p_sub == lse_p so
+    p̃ == p and tv/alpha/kl are all against the same p, with p_in → 1.
+    """
+    j = pl.program_id(1)
+    zp = zp_ref[...]
+    zq = zq_ref[...]
+    logp = zp - lsep_ref[...][:, None]
+    logpt = zp - lsepsub_ref[...][:, None]
+    logq = zq - lseq_ref[...][:, None]
+    p = jnp.exp(logp)
+    pt = jnp.exp(logpt)
+    q = jnp.exp(logq)
+
+    blk_alpha = jnp.sum(jnp.minimum(p, q), axis=-1)
+    blk_tv = jnp.sum(jnp.abs(p - q), axis=-1)
+    # p̃ → 0 ⇒ p̃·(logp̃ − logq) → 0; logits are finite so no NaN arises.
+    blk_kl = jnp.sum(pt * (logpt - logq), axis=-1)
+    blk_pin = jnp.sum(p, axis=-1)
+
+    @pl.when(j == 0)
+    def _init():
+        alpha_ref[...] = blk_alpha
+        tv_ref[...] = blk_tv
+        kl_ref[...] = blk_kl
+        pin_ref[...] = blk_pin
+
+    @pl.when(j > 0)
+    def _accum():
+        alpha_ref[...] += blk_alpha
+        tv_ref[...] += blk_tv
+        kl_ref[...] += blk_kl
+        pin_ref[...] += blk_pin
+
+
+def fused_lk_reduce(
+    z_p: jax.Array,
+    z_q: jax.Array,
+    lse_p: jax.Array,
+    lse_p_sub: jax.Array,
+    lse_q: jax.Array,
+    row_block: int = ROW_BLOCK,
+    vocab_block: int = VOCAB_BLOCK,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Pass-B kernel: (alpha, tv_in, kl, p_in) rowwise over [N, V] tiles."""
+    n, v = z_p.shape
+    assert z_q.shape == (n, v)
+    row_block = _pick_block(n, row_block)
+    vocab_block = _pick_block(v, vocab_block)
+    nrb, nvb = n // row_block, v // vocab_block
+    row_spec = pl.BlockSpec((row_block,), lambda i, j: (i,))
+    mat_spec = pl.BlockSpec((row_block, vocab_block), lambda i, j: (i, j))
+    outs = pl.pallas_call(
+        _lk_reduce_kernel,
+        grid=(nrb, nvb),
+        in_specs=[mat_spec, mat_spec, row_spec, row_spec, row_spec],
+        out_specs=[row_spec, row_spec, row_spec, row_spec],
+        out_shape=[jax.ShapeDtypeStruct((n,), z_p.dtype)] * 4,
+        interpret=interpret,
+    )(z_p, z_q, lse_p, lse_p_sub, lse_q)
+    return tuple(outs)
+
+
+# ---------------------------------------------------------------------------
+# public fused entrypoints
+# ---------------------------------------------------------------------------
+
+def fused_lk_terms(
+    z_p: jax.Array, z_q: jax.Array, interpret: bool = True
+) -> dict[str, jax.Array]:
+    """Full-vocabulary LK terms via the two-pass Pallas pipeline.
+
+    Matches `ref.lk_terms` (tested): returns rowwise alpha, tv, kl.
+    Accepts [..., V]; leading dims are flattened into the row axis.
+    """
+    shape = z_p.shape[:-1]
+    v = z_p.shape[-1]
+    zp2 = z_p.reshape(-1, v)
+    zq2 = z_q.reshape(-1, v)
+    _, lse_p = fused_softmax_stats(zp2, interpret=interpret)
+    _, lse_q = fused_softmax_stats(zq2, interpret=interpret)
+    alpha, tv_in, kl, _ = fused_lk_reduce(
+        zp2, zq2, lse_p, lse_p, lse_q, interpret=interpret
+    )
+    return {
+        "alpha": alpha.reshape(shape),
+        "tv": (0.5 * tv_in).reshape(shape),
+        "kl": kl.reshape(shape),
+    }
+
+
+def fused_lk_terms_truncated(
+    z_p_full: jax.Array,
+    z_q: jax.Array,
+    vocab_map: jax.Array,
+    interpret: bool = True,
+) -> dict[str, jax.Array]:
+    """Truncated-vocabulary LK terms (paper §4.4) via the Pallas pipeline.
+
+    alpha/tv measured against the ORIGINAL target distribution (normalizer
+    lse over the full vocab); KL against the masked target p̃ (normalizer
+    over the sub-vocab). Matches `ref.lk_terms_truncated`.
+    """
+    shape = z_p_full.shape[:-1]
+    v_full = z_p_full.shape[-1]
+    vd = z_q.shape[-1]
+    zp_full2 = z_p_full.reshape(-1, v_full)
+    zq2 = z_q.reshape(-1, vd)
+    zp_sub2 = jnp.take(zp_full2, vocab_map, axis=-1)
+    _, lse_p_full = fused_softmax_stats(zp_full2, interpret=interpret)
+    _, lse_p_sub = fused_softmax_stats(zp_sub2, interpret=interpret)
+    _, lse_q = fused_softmax_stats(zq2, interpret=interpret)
+    alpha, tv_in, kl, p_in = fused_lk_reduce(
+        zp_sub2, zq2, lse_p_full, lse_p_sub, lse_q, interpret=interpret
+    )
+    tv = 0.5 * (tv_in + (1.0 - p_in))
+    return {
+        "alpha": alpha.reshape(shape),
+        "tv": tv.reshape(shape),
+        "kl": kl.reshape(shape),
+        "p_in": p_in.reshape(shape),
+    }

@@ -1,0 +1,215 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: `python/tests/` asserts the Pallas
+kernels (run under ``interpret=True``) match these to tight tolerances over
+hypothesis-generated shape/dtype/value sweeps, and the closed-form LK
+gradients (paper Appendix A) match ``jax.grad`` of these.
+
+Everything here is straightforward, numerically-careful jnp — no tiling,
+no online accumulation — so it is easy to audit against the paper's
+equations:
+
+  alpha(p, q)   = sum_i min(p_i, q_i)                      (paper eq. 1)
+  TV(p, q)      = 0.5 * sum_i |p_i - q_i|
+  KL(p, q)      = sum_i p_i log(p_i / q_i)
+  L_LK^alpha    = -log alpha                               (paper §4.3)
+  L_LK^lambda   = lambda*KL + (1-lambda)*TV                (paper §4.2)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# softmax statistics
+# ---------------------------------------------------------------------------
+
+def softmax_stats(z: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Rowwise (max, logsumexp) of logits ``z`` with shape [..., V]."""
+    m = jnp.max(z, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(z - m[..., None]), axis=-1))
+    return m, lse
+
+
+def softmax(z: jax.Array) -> jax.Array:
+    return jax.nn.softmax(z, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# LK reduction terms (full-vocabulary case)
+# ---------------------------------------------------------------------------
+
+def lk_terms(z_p: jax.Array, z_q: jax.Array) -> dict[str, jax.Array]:
+    """Acceptance-rate-family reductions between two logit rows.
+
+    Args:
+      z_p: target logits [..., V]
+      z_q: draft logits  [..., V]
+
+    Returns dict with rowwise [...]-shaped arrays:
+      alpha : sum min(p, q)          -- acceptance rate (eq. 1)
+      tv    : 0.5 sum |p - q|        -- total variation (== 1 - alpha)
+      kl    : sum p log(p/q)         -- forward KL(p || q)
+    """
+    p = softmax(z_p)
+    q = softmax(z_q)
+    alpha = jnp.sum(jnp.minimum(p, q), axis=-1)
+    tv = 0.5 * jnp.sum(jnp.abs(p - q), axis=-1)
+    # p log(p/q) computed in logit space for stability: log p - log q =
+    # (z_p - lse_p) - (z_q - lse_q).
+    _, lse_p = softmax_stats(z_p)
+    _, lse_q = softmax_stats(z_q)
+    logp = z_p - lse_p[..., None]
+    logq = z_q - lse_q[..., None]
+    kl = jnp.sum(p * (logp - logq), axis=-1)
+    return {"alpha": alpha, "tv": tv, "kl": kl}
+
+
+# ---------------------------------------------------------------------------
+# LK reduction terms (truncated draft vocabulary, paper §4.4)
+# ---------------------------------------------------------------------------
+
+def lk_terms_truncated(
+    z_p_full: jax.Array, z_q: jax.Array, vocab_map: jax.Array
+) -> dict[str, jax.Array]:
+    """LK terms when the draft head emits logits over a sub-vocabulary.
+
+    The draft distribution q lives on the truncated vocabulary (FR-Spec
+    style); outside it q == 0. Per paper §4.4:
+
+      * alpha and TV are computed against the ORIGINAL target distribution
+        p (tokens outside the sub-vocab contribute min(p,0)=0 to alpha and
+        |p - 0| = p to TV);
+      * KL must use the masked/renormalized target p~ = softmax(z_p | sub)
+        (otherwise it is infinite) -- the "proxy of a proxy".
+
+    Args:
+      z_p_full : [..., V] target logits over the full vocabulary
+      z_q      : [..., Vd] draft logits over the truncated vocabulary
+      vocab_map: [Vd] int32, truncated-index -> full-vocab-index
+
+    Returns rowwise arrays: alpha, tv, kl, p_in (target mass inside the
+    truncated vocabulary).
+    """
+    p_full = softmax(z_p_full)
+    q = softmax(z_q)
+    p_sub = jnp.take(p_full, vocab_map, axis=-1)  # [..., Vd], true p on sub
+    p_in = jnp.sum(p_sub, axis=-1)
+    alpha = jnp.sum(jnp.minimum(p_sub, q), axis=-1)
+    # TV against the original p: inside-sub |p - q| plus the mass outside.
+    tv = 0.5 * (jnp.sum(jnp.abs(p_sub - q), axis=-1) + (1.0 - p_in))
+    # Masked-target KL(p~ || q).
+    z_p_sub = jnp.take(z_p_full, vocab_map, axis=-1)
+    _, lse_psub = softmax_stats(z_p_sub)
+    _, lse_q = softmax_stats(z_q)
+    p_tilde = jnp.exp(z_p_sub - lse_psub[..., None])
+    kl = jnp.sum(
+        p_tilde * ((z_p_sub - lse_psub[..., None]) - (z_q - lse_q[..., None])),
+        axis=-1,
+    )
+    return {"alpha": alpha, "tv": tv, "kl": kl, "p_in": p_in}
+
+
+# ---------------------------------------------------------------------------
+# Closed-form gradients (paper Appendix A) -- the custom-VJP backward path
+# ---------------------------------------------------------------------------
+
+def grad_kl(p_tilde: jax.Array, q: jax.Array) -> jax.Array:
+    """nabla_{z_q} KL(p~ || q) = q - p~   (A.2)."""
+    return q - p_tilde
+
+
+def grad_tv(p: jax.Array, q: jax.Array) -> jax.Array:
+    """nabla_{z_q} TV(p, q) = 0.5 q (s - E_q[s]), s = sign(q - p)  (A.3).
+
+    Valid for the truncated case too (off-support |p| terms carry no z_q
+    dependence), with p the true target restricted to the sub-vocabulary.
+    """
+    s = jnp.sign(q - p)
+    es = jnp.sum(q * s, axis=-1, keepdims=True)
+    return 0.5 * q * (s - es)
+
+
+def grad_alpha(p: jax.Array, q: jax.Array) -> jax.Array:
+    """nabla_{z_q} alpha = q (a - E_q[a]), a = 1{q < p}.
+
+    Derivation: alpha = sum_i min(p_i, q_i); d min/d q_i = 1{q_i < p_i}
+    (subgradient 0 at ties), then chain through the softmax Jacobian.
+    Note alpha = 1 - TV so this equals -2*grad_tv up to the tie convention.
+    """
+    a = (q < p).astype(q.dtype)
+    ea = jnp.sum(q * a, axis=-1, keepdims=True)
+    return q * (a - ea)
+
+
+def grad_log_alpha_loss(p: jax.Array, q: jax.Array, alpha: jax.Array) -> jax.Array:
+    """nabla_{z_q} (-log alpha) = (1/alpha) nabla_{z_q} TV   (A.4)."""
+    return -grad_alpha(p, q) / alpha[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Attention reference
+# ---------------------------------------------------------------------------
+
+def causal_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_offset: jax.Array | int,
+    kv_len: jax.Array | int,
+) -> jax.Array:
+    """Masked causal attention used by target & draft blocks.
+
+    Args:
+      q: [B, H, Sq, D] queries for absolute positions
+         q_offset .. q_offset+Sq-1
+      k: [B, H, Sk, D] key buffer; index j holds the key for absolute
+         position j (entries beyond the written region are garbage)
+      v: [B, H, Sk, D]
+      q_offset: scalar, absolute position of q[.., 0, :]
+      kv_len: scalar, number of valid kv entries *including* the in-flight
+        query block (i.e. total sequence length after this call)
+
+    Query at absolute position t attends to kv index j iff j <= t and
+    j < kv_len. Garbage cache entries are excluded because they live at
+    indices >= kv_len.
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    sq, sk = q.shape[2], k.shape[2]
+    qpos = q_offset + jnp.arange(sq)[:, None]  # [Sq, 1] absolute positions
+    jpos = jnp.arange(sk)[None, :]  # [1, Sk]
+    mask = (jpos <= qpos) & (jpos < kv_len)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)
+
+
+# ---------------------------------------------------------------------------
+# Verification reference (speculative sampling, Leviathan et al. 2023)
+# ---------------------------------------------------------------------------
+
+def verify_probs(
+    p: jax.Array, q: jax.Array, drafted: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Acceptance probabilities and residual distributions.
+
+    Args:
+      p: [K, V] target probabilities at the K drafted positions
+      q: [K, V] draft probabilities at the K drafted positions
+      drafted: [K] int32 drafted token ids
+
+    Returns:
+      beta: [K] acceptance probability min(1, p(x)/q(x)) for each draft
+      residual: [K, V] renormalized max(p - q, 0) to sample on rejection
+    """
+    px = jnp.take_along_axis(p, drafted[:, None], axis=-1)[:, 0]
+    qx = jnp.take_along_axis(q, drafted[:, None], axis=-1)[:, 0]
+    beta = jnp.minimum(1.0, px / jnp.maximum(qx, 1e-30))
+    res = jnp.maximum(p - q, 0.0)
+    norm = jnp.sum(res, axis=-1, keepdims=True)
+    # If p == q exactly the residual is empty; fall back to p.
+    residual = jnp.where(norm > 0, res / jnp.maximum(norm, 1e-30), p)
+    return beta, residual

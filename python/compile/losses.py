@@ -1,0 +1,218 @@
+"""L2: the LK loss family (paper §4) with closed-form custom-VJP.
+
+Forward: the fused Pallas reduction kernels (`kernels.lk_loss`).
+Backward: the paper's Appendix-A closed forms —
+
+    ∇_{z_q} KL(p̃‖q)   = q − p̃                       (A.2)
+    ∇_{z_q} TV(p, q)  = ½ q ⊙ (s − E_q[s])           (A.3)
+    ∇_{z_q} α         = q ⊙ (a − E_q[a]),  a = 1{q<p}
+    ∇_{z_q} (−log α)  = (1/α) ∇ TV                   (A.4)
+
+The closed forms are exact (tests check them against jax.grad of the ref
+implementation) and avoid differentiating through the interpret-mode
+Pallas kernels, which do not support autodiff. The target side (z_p) is
+always frozen — draft training never backprops into the target.
+
+Loss selection is runtime data: `draft_loss` takes a 4-vector of weights
+(w_kl, w_tv, w_lkα, w_lkλ) plus η and γ scalars, so a single lowered
+train-step artifact serves every loss configuration in the paper's sweeps
+("drop-in replacement", §1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lk_loss as lk_kernels
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP fused term computation
+# ---------------------------------------------------------------------------
+#
+# lk_terms_op(z_p_sub, z_q, lse_p_full, lse_p_sub, lse_q)
+#   -> (alpha, tv, kl, p_in)
+#
+# z_p_sub   : [N, Vd] target logits gathered onto the draft vocabulary
+# z_q       : [N, Vd] draft logits
+# lse_p_full: [N] logsumexp of the FULL target row (defines the original p)
+# lse_p_sub : [N] logsumexp of z_p_sub (defines the masked target p̃)
+# lse_q     : [N]
+#
+# Full-vocabulary case: pass lse_p_sub == lse_p_full (then p̃ == p, p_in→1).
+
+
+@jax.custom_vjp
+def lk_terms_op(z_p_sub, z_q, lse_p_full, lse_p_sub, lse_q):
+    alpha, tv_in, kl, p_in = lk_kernels.fused_lk_reduce(
+        z_p_sub, z_q, lse_p_full, lse_p_sub, lse_q
+    )
+    tv = 0.5 * (tv_in + (1.0 - p_in))
+    return alpha, tv, kl, p_in
+
+
+def _lk_terms_fwd(z_p_sub, z_q, lse_p_full, lse_p_sub, lse_q):
+    out = lk_terms_op(z_p_sub, z_q, lse_p_full, lse_p_sub, lse_q)
+    # Residuals: logits + normalizers (distributions are recomputed in the
+    # backward — cheaper than storing three V-sized probability tensors).
+    return out, (z_p_sub, z_q, lse_p_full, lse_p_sub, lse_q, out[0])
+
+
+def _lk_terms_bwd(res, cts):
+    z_p_sub, z_q, lse_p_full, lse_p_sub, lse_q, alpha = res
+    d_alpha, d_tv, d_kl, d_pin = cts
+    p = jnp.exp(z_p_sub - lse_p_full[:, None])  # original target on sub-vocab
+    pt = jnp.exp(z_p_sub - lse_p_sub[:, None])  # masked target p̃
+    q = jnp.exp(z_q - lse_q[:, None])
+
+    # Appendix-A closed forms (w.r.t. draft logits only; target frozen).
+    a = (q < p).astype(q.dtype)
+    ea = jnp.sum(q * a, axis=-1, keepdims=True)
+    g_alpha = q * (a - ea)
+
+    s = jnp.sign(q - p)
+    es = jnp.sum(q * s, axis=-1, keepdims=True)
+    g_tv = 0.5 * q * (s - es)
+
+    g_kl = q - pt
+
+    dzq = (
+        d_alpha[:, None] * g_alpha
+        + d_tv[:, None] * g_tv
+        + d_kl[:, None] * g_kl
+    )
+    # p_in and everything flowing through z_p / normalizers is frozen.
+    zero = jnp.zeros_like(lse_q)
+    return jnp.zeros_like(z_p_sub), dzq, zero, zero, zero
+
+
+lk_terms_op.defvjp(_lk_terms_fwd, _lk_terms_bwd)
+
+
+def lk_terms(
+    z_p_full: jax.Array, z_q: jax.Array, vocab_map: jax.Array | None = None
+) -> dict[str, jax.Array]:
+    """Differentiable (w.r.t. z_q) LK terms for [..., V]-shaped logits.
+
+    With ``vocab_map`` (int32 [Vd]) the draft logits live on a truncated
+    vocabulary; α/TV are measured against the original target distribution
+    and KL against the masked target (paper §4.4).
+    """
+    lead = z_q.shape[:-1]
+    z_p2 = jax.lax.stop_gradient(z_p_full).reshape(-1, z_p_full.shape[-1])
+    z_q2 = z_q.reshape(-1, z_q.shape[-1])
+    _, lse_p_full = lk_kernels.fused_softmax_stats(z_p2)
+    if vocab_map is None:
+        z_p_sub = z_p2
+        lse_p_sub = lse_p_full
+    else:
+        z_p_sub = jnp.take(z_p2, vocab_map, axis=-1)
+        _, lse_p_sub = lk_kernels.fused_softmax_stats(z_p_sub)
+    _, lse_q = lk_kernels.fused_softmax_stats(jax.lax.stop_gradient(z_q2))
+    # lse_q is a function of z_q, but the closed-form backward already
+    # accounts for the full softmax Jacobian, so it enters as a frozen
+    # auxiliary value (stop_gradient above).
+    alpha, tv, kl, p_in = lk_terms_op(z_p_sub, z_q2, lse_p_full, lse_p_sub, lse_q)
+    return {
+        "alpha": alpha.reshape(lead),
+        "tv": tv.reshape(lead),
+        "kl": kl.reshape(lead),
+        "p_in": p_in.reshape(lead),
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-head loss assembly with the adaptive λ schedule
+# ---------------------------------------------------------------------------
+
+def adaptive_lambda(alpha_agg: jax.Array, eta: jax.Array) -> jax.Array:
+    """λ = exp(−η · sg[α])  (paper eq. 5). α is aggregated over batch and
+    sequence dims per head before entering the schedule."""
+    return jnp.exp(-eta * jax.lax.stop_gradient(alpha_agg))
+
+
+def head_loss(
+    terms: dict[str, jax.Array],
+    mask: jax.Array,
+    loss_weights: jax.Array,
+    eta: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Masked-mean loss for one draft head.
+
+    Args:
+      terms: alpha/tv/kl arrays of shape [B, S]
+      mask: [B, S] validity (positions where the head's prediction target
+        exists within the window)
+      loss_weights: [4] = (w_kl, w_tv, w_lkα, w_lkλ)
+      eta: scalar for the adaptive schedule
+
+    Returns (loss, alpha_agg, lam).
+    """
+    msum = jnp.maximum(jnp.sum(mask), 1.0)
+
+    def mmean(x):
+        return jnp.sum(x * mask) / msum
+
+    alpha_agg = mmean(terms["alpha"])
+    lam = adaptive_lambda(alpha_agg, eta)
+    kl_m = mmean(terms["kl"])
+    tv_m = mmean(terms["tv"])
+    # −log α is averaged over positions (log of per-position marginal
+    # acceptance likelihoods — the MLE view of §4.3). Clamp for the rare
+    # fully-disjoint row.
+    nla_m = mmean(-jnp.log(jnp.maximum(terms["alpha"], 1e-12)))
+    w = loss_weights
+    loss = (
+        w[0] * kl_m
+        + w[1] * tv_m
+        + w[2] * nla_m
+        + w[3] * (lam * kl_m + (1.0 - lam) * tv_m)
+    )
+    return loss, alpha_agg, lam
+
+
+def draft_loss(
+    z_p_full: jax.Array,
+    z_q_heads: jax.Array,
+    head_masks: jax.Array,
+    loss_weights: jax.Array,
+    eta: jax.Array,
+    gamma: jax.Array,
+    vocab_map: jax.Array | None = None,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Aggregate LK loss across K draft heads (paper §5.3).
+
+    Args:
+      z_p_full: [K, B, S, V] target logits aligned per head (head n at
+        position t is compared against the target's distribution for
+        token t+n+1, i.e. target logits at t+n — the caller pre-shifts)
+      z_q_heads: [K, B, S, Vd] draft logits per head
+      head_masks: [K, B, S] position validity per head
+      loss_weights: [4]; eta, gamma: scalars
+
+    Head n receives weight γ^{n-1}, normalized — prioritizing early
+    positions, which drive acceptance length.
+
+    Returns (total_loss, metrics) with metrics:
+      alpha_heads [K], lambda_heads [K], mean_alpha scalar.
+    """
+    k = z_q_heads.shape[0]
+    losses, alphas, lams = [], [], []
+    for n in range(k):
+        terms = lk_terms(z_p_full[n], z_q_heads[n], vocab_map=vocab_map)
+        loss_n, alpha_n, lam_n = head_loss(
+            terms, head_masks[n], loss_weights, eta
+        )
+        losses.append(loss_n)
+        alphas.append(alpha_n)
+        lams.append(lam_n)
+    hw = gamma ** jnp.arange(k, dtype=z_q_heads.dtype)
+    hw = hw / jnp.sum(hw)
+    total = sum(hw[n] * losses[n] for n in range(k))
+    metrics = {
+        "alpha_heads": jnp.stack(alphas),
+        "lambda_heads": jnp.stack(lams),
+        "mean_alpha": jnp.mean(jnp.stack(alphas)),
+    }
+    return total, metrics

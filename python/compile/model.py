@@ -1,0 +1,406 @@
+"""L2: target transformer models (dense & mixture-of-experts).
+
+Tiny but architecturally faithful analogs of the paper's six target
+models (DESIGN.md §2): RMSNorm, RoPE, SwiGLU FFN, optional top-2 MoE
+blocks, multi-layer feature taps for EAGLE-3 fusion, and an optional
+native MTP module (DeepSeek-V3 analog). Everything is a pure function of
+explicit parameter pytrees so the AOT layer can flatten them into a
+stable manifest contract with the Rust runtime.
+
+Graph entrypoints (lowered per config by `aot.py`):
+
+  forward   — full-sequence training forward (logits + fusion feats)
+  prefill   — prompt ingestion: fills the KV cache, returns logits/feats
+  verify    — K+1-token speculative verification step against the cache
+              (also lowered at T=1 as the vanilla `decode` baseline)
+
+KV cache layout: [L, 2, B, H, Smax, Dh] — a dense per-sequence buffer.
+Rollback after rejected drafts is free: the engine only tracks the valid
+length; stale entries are either masked (j <= qpos, j < kv_len) or
+overwritten by the next verify block at the same positions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetConfig:
+    """Architecture of one target model (analog mapping in DESIGN.md §2)."""
+
+    name: str
+    vocab: int = 512
+    d_model: int = 96
+    n_layers: int = 4
+    n_heads: int = 4
+    ffn_mult: int = 4  # dense FFN intermediate = ffn_mult * d
+    n_experts: int = 0  # 0 = dense; >0 = MoE with top-2 routing
+    expert_mult: int = 2  # per-expert intermediate = expert_mult * d
+    has_mtp: bool = False  # native multi-token-prediction module
+    max_seq: int = 112  # KV buffer length (prompt + generation + drafts)
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def feat_dim(self) -> int:
+        """EAGLE-3 fusion feature width: low/mid/high layer taps."""
+        return 3 * self.d_model
+
+    @property
+    def taps(self) -> tuple[int, int, int]:
+        low, mid, hi = 0, self.n_layers // 2, self.n_layers - 1
+        return low, mid, hi
+
+
+# ---------------------------------------------------------------------------
+# parameter initialization
+# ---------------------------------------------------------------------------
+
+def _dense_ffn_init(key, d, f, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    sc_in = (2.0 / d) ** 0.5
+    sc_out = (2.0 / f) ** 0.5
+    return {
+        "w1": jax.random.normal(k1, (d, f), dtype) * sc_in,
+        "w3": jax.random.normal(k2, (d, f), dtype) * sc_in,
+        "w2": jax.random.normal(k3, (f, d), dtype) * sc_out,
+    }
+
+
+def layer_init(key, cfg: TargetConfig, dtype=jnp.float32) -> dict[str, Any]:
+    """One transformer block's parameters (shared by target & drafts)."""
+    d = cfg.d_model
+    keys = jax.random.split(key, 8)
+    sc = (2.0 / d) ** 0.5
+    p = {
+        "wq": jax.random.normal(keys[0], (d, d), dtype) * sc,
+        "wk": jax.random.normal(keys[1], (d, d), dtype) * sc,
+        "wv": jax.random.normal(keys[2], (d, d), dtype) * sc,
+        "wo": jax.random.normal(keys[3], (d, d), dtype) * sc,
+        "ln1": jnp.ones((d,), dtype),
+        "ln2": jnp.ones((d,), dtype),
+    }
+    if cfg.n_experts > 0:
+        fe = cfg.expert_mult * d
+        ek = jax.random.split(keys[4], 4)
+        sc_in = (2.0 / d) ** 0.5
+        sc_out = (2.0 / fe) ** 0.5
+        p["moe"] = {
+            "gate": jax.random.normal(ek[0], (d, cfg.n_experts), dtype) * sc_in,
+            "w1": jax.random.normal(ek[1], (cfg.n_experts, d, fe), dtype) * sc_in,
+            "w3": jax.random.normal(ek[2], (cfg.n_experts, d, fe), dtype) * sc_in,
+            "w2": jax.random.normal(ek[3], (cfg.n_experts, fe, d), dtype) * sc_out,
+        }
+    else:
+        p["ffn"] = _dense_ffn_init(keys[5], d, cfg.ffn_mult * d, dtype)
+    return p
+
+
+def init_target(key, cfg: TargetConfig, dtype=jnp.float32) -> dict[str, Any]:
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model), dtype) * 0.02,
+        "layers": [layer_init(keys[1 + i], cfg, dtype) for i in range(cfg.n_layers)],
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "head": jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab), dtype)
+        * (2.0 / cfg.d_model) ** 0.5,
+    }
+    if cfg.has_mtp:
+        mk = jax.random.split(keys[-1], 3)
+        params["mtp"] = {
+            "proj": jax.random.normal(mk[0], (2 * cfg.d_model, cfg.d_model), dtype)
+            * (2.0 / (2 * cfg.d_model)) ** 0.5,
+            "norm_emb": jnp.ones((cfg.d_model,), dtype),
+            "norm_h": jnp.ones((cfg.d_model,), dtype),
+            "layer": layer_init(mk[1], cfg, dtype),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [B, H, S, Dh]; positions: [B, S] absolute
+    (per-row offsets — the serving engine batches sequences of different
+    lengths, so each row carries its own position base)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=x.dtype) / half)  # [half]
+    ang = positions.astype(x.dtype)[..., None] * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[:, None, :, :]  # broadcast over heads
+    sin = jnp.sin(ang)[:, None, :, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _jnp_attention(q, k, v, q_offset, kv_len):
+    """Reference-path attention (XLA-fused); see kernels.attention for the
+    Pallas version. Profiling note (DESIGN.md §7): interpret-mode Pallas in
+    the serving hot path costs while-loop dispatch per tile on CPU, so the
+    lowered artifacts use this path; the Pallas kernel is validated against
+    the same oracle and is the real-TPU implementation.
+
+    q_offset / kv_len are [B] vectors (per-row positions)."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    sq, sk = q.shape[2], k.shape[2]
+    qpos = q_offset[:, None, None] + jnp.arange(sq)[None, :, None]  # [B,Sq,1]
+    jpos = jnp.arange(sk)[None, None, :]  # [1,1,Sk]
+    mask = (jpos <= qpos) & (jpos < kv_len[:, None, None])  # [B,Sq,Sk]
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)
+
+
+def attention_block(
+    lp: dict[str, Any],
+    x: jax.Array,
+    cfg: TargetConfig,
+    kv: tuple[jax.Array, jax.Array] | None,
+    pos,
+    use_pallas: bool = False,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Self-attention sublayer with optional external KV cache.
+
+    Args:
+      x: [B, S, d] (already normed)
+      kv: optional (k_cache, v_cache) [B, H, Smax, Dh] to read/extend
+      pos: ABSOLUTE position of x[:, 0] per row — scalar or [B] vector
+        (the engine batches sequences of different lengths)
+
+    Returns (attn_out [B, S, d], new (k, v) caches). Without an external
+    cache, k/v are just the block's own keys (training path).
+    """
+    h = cfg.n_heads
+    b = x.shape[0]
+    q = _split_heads(x @ lp["wq"], h)
+    k = _split_heads(x @ lp["wk"], h)
+    v = _split_heads(x @ lp["wv"], h)
+    s = x.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))  # [B]
+    positions = pos[:, None] + jnp.arange(s)[None, :]  # [B, S]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if kv is None:
+        kc, vc = k, v
+        kv_len = jnp.full((b,), s, jnp.int32)
+        q_offset = jnp.zeros((b,), jnp.int32)
+    else:
+        kc, vc = kv
+        for bi in range(b):  # B <= 4; unrolled per-row scatter
+            kc = jax.lax.dynamic_update_slice(
+                kc, k[bi : bi + 1], (bi, 0, pos[bi], 0)
+            )
+            vc = jax.lax.dynamic_update_slice(
+                vc, v[bi : bi + 1], (bi, 0, pos[bi], 0)
+            )
+        kv_len = pos + s
+        q_offset = pos
+    if use_pallas:
+        # The Pallas kernel takes scalar offsets (single-sequence shapes);
+        # used on the training path where pos == 0 for every row.
+        out = attn_kernels.flash_attention(q, kc, vc, 0, s)
+    else:
+        out = _jnp_attention(q, kc, vc, q_offset, kv_len)
+    return _merge_heads(out) @ lp["wo"], (kc, vc)
+
+
+def ffn_block(lp: dict[str, Any], x: jax.Array, cfg: TargetConfig) -> jax.Array:
+    """SwiGLU FFN — dense, or top-2 MoE (dense dispatch over E tiny experts;
+    at this scale computing all experts and masking is cheaper than gather
+    scatter, and it lowers to clean HLO)."""
+    if cfg.n_experts == 0:
+        f = lp["ffn"]
+        return (jax.nn.silu(x @ f["w1"]) * (x @ f["w3"])) @ f["w2"]
+    moe = lp["moe"]
+    gate_logits = x @ moe["gate"]  # [B, S, E]
+    # Manual top-2 via max/mask/max: jax.lax.top_k lowers to an HLO TopK
+    # attribute ("largest") that xla_extension 0.5.1's text parser rejects,
+    # so the routing is expressed with plain reductions instead. A tiny
+    # deterministic bias breaks ties so the one-hots are exact.
+    e = cfg.n_experts
+    g = gate_logits - jnp.arange(e, dtype=x.dtype) * 1e-6
+    m1 = jnp.max(g, axis=-1, keepdims=True)
+    oh1 = (g == m1).astype(x.dtype)  # [B, S, E]
+    g2 = jnp.where(oh1 > 0, -jnp.inf, g)
+    m2 = jnp.max(g2, axis=-1, keepdims=True)
+    oh2 = (g2 == m2).astype(x.dtype)
+    top_w = jax.nn.softmax(
+        jnp.concatenate([m1, m2], axis=-1), axis=-1
+    )  # renormalized top-2 [B, S, 2]
+    # combined per-expert weight: [B, S, E]
+    wts = top_w[..., 0:1] * oh1 + top_w[..., 1:2] * oh2
+
+    def expert(i):
+        return (jax.nn.silu(x @ moe["w1"][i]) * (x @ moe["w3"][i])) @ moe["w2"][i]
+
+    all_out = jnp.stack([expert(i) for i in range(e)])  # [E, B, S, d]
+    return jnp.einsum("bse,ebsd->bsd", wts, all_out)
+
+
+def transformer_layer(
+    lp, x, cfg, kv=None, pos=0, use_pallas=False
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    a, new_kv = attention_block(lp, rmsnorm(x, lp["ln1"]), cfg, kv, pos, use_pallas)
+    x = x + a
+    x = x + ffn_block(lp, rmsnorm(x, lp["ln2"]), cfg)
+    return x, new_kv
+
+
+# ---------------------------------------------------------------------------
+# graph entrypoints
+# ---------------------------------------------------------------------------
+
+def target_forward(
+    params, tokens: jax.Array, cfg: TargetConfig, use_pallas: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Training forward. tokens [B, S] -> (logits [B, S, V], feats [B, S, 3d])."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    taps = set(cfg.taps)
+    feats = []
+    for i, lp in enumerate(params["layers"]):
+        x, _ = transformer_layer(lp, x, cfg, use_pallas=use_pallas)
+        if i in taps:
+            feats.append(x)
+    while len(feats) < 3:  # duplicate taps in very shallow configs
+        feats.append(feats[-1])
+    h = rmsnorm(x, params["final_norm"])
+    logits = h @ params["head"]
+    return logits, jnp.concatenate(feats[:3], axis=-1)
+
+
+def target_prefill(
+    params, tokens: jax.Array, length, cfg: TargetConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Prompt ingestion. tokens [B, Sp] (valid prefix ``length``).
+
+    Returns (logits [B, Sp, V], kv [L, 2, B, H, Smax, Dh], feats [B, Sp, 3d]).
+    Positions >= length produce garbage that is never read: the engine
+    reads logits/feats at length-1 and the next verify overwrites cache
+    entries from ``pos = length`` on.
+    """
+    b, sp = tokens.shape
+    del length  # causality alone protects the valid prefix
+    x = jnp.take(params["embed"], tokens, axis=0)
+    kv_shape = (b, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    taps = set(cfg.taps)
+    feats = []
+    kvs = []
+    for i, lp in enumerate(params["layers"]):
+        kv0 = (jnp.zeros(kv_shape, x.dtype), jnp.zeros(kv_shape, x.dtype))
+        x, kv_i = transformer_layer(lp, x, cfg, kv=kv0, pos=0)
+        kvs.append(jnp.stack(kv_i))  # [2, B, H, Smax, Dh]
+        if i in taps:
+            feats.append(x)
+    while len(feats) < 3:
+        feats.append(feats[-1])
+    h = rmsnorm(x, params["final_norm"])
+    logits = h @ params["head"]
+    return logits, jnp.stack(kvs), jnp.concatenate(feats[:3], axis=-1)
+
+
+def target_verify(
+    params, kv: jax.Array, tokens: jax.Array, pos, cfg: TargetConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Speculative verification step (T = K+1 tokens, or T=1 for vanilla
+    decode). tokens [B, T] are written to the cache at positions
+    pos..pos+T-1 and attended causally against the valid prefix.
+
+    Returns (logits [B, T, V], kv', feats [B, T, 3d]).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    taps = set(cfg.taps)
+    feats = []
+    new_kvs = []
+    for i, lp in enumerate(params["layers"]):
+        kv_i = (kv[i, 0], kv[i, 1])
+        x, kv_i = transformer_layer(lp, x, cfg, kv=kv_i, pos=pos)
+        new_kvs.append(jnp.stack(kv_i))
+        if i in taps:
+            feats.append(x)
+    while len(feats) < 3:
+        feats.append(feats[-1])
+    h = rmsnorm(x, params["final_norm"])
+    logits = h @ params["head"]
+    return logits, jnp.stack(new_kvs), jnp.concatenate(feats[:3], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# native MTP module forward (DeepSeek-V3 analog)
+# ---------------------------------------------------------------------------
+
+def mtp_combine(params, tok_emb: jax.Array, h_prev: jax.Array) -> jax.Array:
+    """MTP input fusion: concat(RMSNorm(emb), RMSNorm(h_prev)) @ proj."""
+    mtp = params["mtp"]
+    z = jnp.concatenate(
+        [rmsnorm(tok_emb, mtp["norm_emb"]), rmsnorm(h_prev, mtp["norm_h"])],
+        axis=-1,
+    )
+    return z @ mtp["proj"]
+
+
+def mtp_forward_train(
+    params, tokens: jax.Array, hidden: jax.Array, cfg: TargetConfig
+) -> jax.Array:
+    """MTP-1 logits during target pretraining (predicts x_{t+2} from
+    hidden_t and embed(x_{t+1})): tokens [B, S] are the *next* tokens
+    (pre-shifted by the caller), hidden [B, S, d] the final-layer stream.
+    """
+    emb = jnp.take(params["embed"], tokens, axis=0)
+    x = mtp_combine(params, emb, hidden)
+    x, _ = transformer_layer(params["mtp"]["layer"], x, cfg)
+    h = rmsnorm(x, params["mtp"]["final_norm"])
+    return h @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# the six paper-analog target configurations (DESIGN.md §2 table)
+# ---------------------------------------------------------------------------
+
+TARGETS: dict[str, TargetConfig] = {
+    # Llama-3.1-8B-Instruct analog (dense, small)
+    "dense-s": TargetConfig(name="dense-s", d_model=96, n_layers=4, n_heads=4),
+    # Llama-3.3-70B-Instruct analog (dense, deeper/wider)
+    "dense-m": TargetConfig(name="dense-m", d_model=128, n_layers=6, n_heads=8),
+    # gpt-oss-20b analog (MoE, small)
+    "moe-s": TargetConfig(name="moe-s", d_model=96, n_layers=4, n_heads=4, n_experts=4),
+    # gpt-oss-120b analog (MoE, medium)
+    "moe-m": TargetConfig(name="moe-m", d_model=128, n_layers=5, n_heads=8, n_experts=4),
+    # Qwen3-235B-A22B analog (MoE, large)
+    "moe-l": TargetConfig(name="moe-l", d_model=160, n_layers=6, n_heads=8, n_experts=4),
+    # DeepSeek-V3 analog (MoE, large, native MTP module)
+    "mtp-l": TargetConfig(
+        name="mtp-l", d_model=160, n_layers=6, n_heads=8, n_experts=4, has_mtp=True
+    ),
+}

@@ -1,0 +1,193 @@
+"""L2: training steps (AdamW) for targets and drafts (paper §5.3).
+
+Hyperparameters follow the paper: AdamW with (β1, β2) = (0.9, 0.95),
+global-norm gradient clipping at 0.5, cosine LR schedule with warmup —
+the schedule itself is computed by the Rust trainer, which passes the
+per-step learning rate as a scalar input (keeping the artifact free of
+training-length constants).
+
+Both train steps are pure functions
+    (params, m, v, step, batch, hyper-scalars) -> (params', m', v', metrics)
+lowered once by `aot.py` and driven from `rust/src/train/`. Loss selection
+for drafts is runtime data (loss_weights/eta/gamma) so one artifact serves
+the paper's entire objective sweep.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import drafts as D
+from . import losses
+from . import model as M
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+CLIP_NORM = 0.5
+MTP_PRETRAIN_WEIGHT = 0.3  # weight of the MTP-1 auxiliary loss in pretrain
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x * x) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+def adamw_update(params, grads, m, v, step, lr):
+    """One AdamW step. ``step`` is 1-based (i32 scalar)."""
+    t = step.astype(jnp.float32)
+    b1c = 1.0 - ADAM_B1**t
+    b2c = 1.0 - ADAM_B2**t
+
+    def upd(p, g, m_, v_):
+        m_new = ADAM_B1 * m_ + (1.0 - ADAM_B1) * g
+        v_new = ADAM_B2 * v_ + (1.0 - ADAM_B2) * g * g
+        mh = m_new / b1c
+        vh = v_new / b2c
+        return p - lr * mh / (jnp.sqrt(vh) + ADAM_EPS), m_new, v_new
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    new = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [x[0] for x in new])
+    new_m = jax.tree_util.tree_unflatten(tdef, [x[1] for x in new])
+    new_v = jax.tree_util.tree_unflatten(tdef, [x[2] for x in new])
+    return new_p, new_m, new_v
+
+
+def zeros_like_tree(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+# ---------------------------------------------------------------------------
+# target pretraining step
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token-level CE. logits [B, S, V], labels [B, S] int."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def target_train_step(
+    params, m, v, step, tokens: jax.Array, lr, cfg: M.TargetConfig
+):
+    """Next-token LM pretraining; for has_mtp configs the native MTP module
+    is co-trained on its 1-step-ahead objective only (DeepSeek-style: the
+    released module is trained for the FIRST draft position — the decline
+    at later positions is exactly what §5.2 fine-tuning addresses).
+
+    tokens: [B, S+2] (the +2 supplies labels for LM and MTP-1).
+    Returns (params', m', v', metrics[2] = [lm_loss, mtp_loss]).
+    """
+
+    def loss_fn(p):
+        s = tokens.shape[1] - 2
+        inp = tokens[:, :s]  # x_0..x_{s-1}
+        logits, feats = M.target_forward(p, inp, cfg)
+        lm = cross_entropy(logits, tokens[:, 1 : s + 1])
+        mtp_loss = jnp.zeros(())
+        if cfg.has_mtp:
+            hidden = feats[..., -cfg.d_model :]
+            mtp_logits = M.mtp_forward_train(p, tokens[:, 1 : s + 1], hidden, cfg)
+            mtp_loss = cross_entropy(mtp_logits, tokens[:, 2 : s + 2])
+        return lm + MTP_PRETRAIN_WEIGHT * mtp_loss, (lm, mtp_loss)
+
+    grads, (lm, mtp_loss) = jax.grad(loss_fn, has_aux=True)(params)
+    grads, _ = clip_by_global_norm(grads, CLIP_NORM)
+    new_p, new_m, new_v = adamw_update(params, grads, m, v, step, lr)
+    return new_p, new_m, new_v, jnp.stack([lm, mtp_loss])
+
+
+# ---------------------------------------------------------------------------
+# draft training step
+# ---------------------------------------------------------------------------
+
+def draft_train_step(
+    tparams,
+    dparams,
+    m,
+    v,
+    step,
+    tokens: jax.Array,
+    loss_weights: jax.Array,
+    eta: jax.Array,
+    gamma: jax.Array,
+    lr: jax.Array,
+    vocab_map: jax.Array | None,
+    dcfg: D.DraftConfig,
+    span: int,
+):
+    """One LK-loss training step for any draft architecture.
+
+    Args:
+      tokens: [B, span+K+1] ground-truth window (the +K+1 supplies shifted
+        inputs and the deepest head's comparison position)
+      loss_weights: [4] = (w_kl, w_tv, w_lkα, w_lkλ) — runtime loss config
+      vocab_map: [Vd] int32 (eagle3) or None
+
+    Returns (dparams', m', v', metrics[2 + 2K]) with metrics layout
+    [loss, mean_alpha, alpha_head_1..K, lambda_head_1..K].
+    """
+    k = dcfg.k_heads
+    tcfg = dcfg.target
+    s = span
+    # Frozen target pass over the whole window (positions 0..span+K-1).
+    t_inp = tokens[:, : s + k]
+    tlogits, tfeats = M.target_forward(tparams, t_inp, tcfg)
+    tlogits = jax.lax.stop_gradient(tlogits)
+    tfeats = jax.lax.stop_gradient(tfeats)
+    # Head n compares against target logits at positions n..n+span-1.
+    z_p = jnp.stack(
+        [jax.lax.dynamic_slice_in_dim(tlogits, n, s, axis=1) for n in range(1, k + 1)]
+    )  # [K, B, S, V]
+    masks = jnp.ones(z_p.shape[:3], tlogits.dtype)
+
+    def loss_fn(dp):
+        if dcfg.arch == "eagle3":
+            feats = tfeats[:, :s]
+            zq = D.draft_train_unroll(dp, tparams, feats, tokens, dcfg)
+        elif dcfg.arch == "mtp":
+            feats = tfeats[:, :s, -tcfg.d_model :]
+            zq = D.draft_train_unroll(dp, tparams, feats, tokens, dcfg)
+        elif dcfg.arch == "medusa":
+            hidden = tfeats[:, :s, -tcfg.d_model :]
+            zq = D.medusa_propose(dp, hidden, dcfg)
+        elif dcfg.arch == "mlp":
+            hidden = tfeats[:, :s, -tcfg.d_model :]
+            zq = D.mlp_train_unroll(dp, tparams, hidden, tokens, dcfg)
+        else:
+            raise ValueError(dcfg.arch)
+        total, metrics = losses.draft_loss(
+            z_p, zq, masks, loss_weights, eta, gamma,
+            vocab_map=vocab_map if dcfg.arch == "eagle3" else None,
+        )
+        return total, metrics
+
+    (loss_val, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(dparams)
+    grads, _ = clip_by_global_norm(grads, CLIP_NORM)
+    new_p, new_m, new_v = adamw_update(dparams, grads, m, v, step, lr)
+    metric_vec = jnp.concatenate(
+        [
+            jnp.stack([loss_val, metrics["mean_alpha"]]),
+            metrics["alpha_heads"],
+            metrics["lambda_heads"],
+        ]
+    )
+    return new_p, new_m, new_v, metric_vec

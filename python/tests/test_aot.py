@@ -1,0 +1,92 @@
+"""AOT contract tests: manifest structure, HLO text properties, and the
+flatten-order naming convention Rust depends on."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, drafts as D, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_configs():
+    m = manifest()
+    assert set(m["targets"]) == set(M.TARGETS)
+    pairs = {d.name for d in aot.draft_pairs()}
+    assert set(m["drafts"]) == pairs
+    assert m["vocab"] == 512 and m["k_heads"] == 6
+
+
+def test_manifest_entries_and_files_exist():
+    m = manifest()
+    for section in ("targets", "drafts"):
+        for name, spec in m[section].items():
+            assert spec["params"], name
+            for ename, e in spec["entries"].items():
+                path = os.path.join(ART, e["file"])
+                assert os.path.exists(path), f"{name}:{ename} missing {e['file']}"
+                assert e["inputs"] and e["outputs"], f"{name}:{ename}"
+
+
+def test_hlo_text_parses_as_module():
+    m = manifest()
+    f = m["targets"]["dense-s"]["entries"]["decode_b1"]["file"]
+    text = open(os.path.join(ART, f)).read()
+    assert text.startswith("HloModule"), text[:40]
+    # 64-bit-id safety: text interchange regenerates ids (see aot.py doc)
+    assert "ENTRY" in text
+
+
+def test_param_names_are_stable_paths():
+    m = manifest()
+    names = [p["name"] for p in m["targets"]["mtp-l"]["params"]]
+    assert "embed" in names and "head" in names
+    assert any(n.startswith("mtp/") for n in names), "mtp module params present"
+    assert any(n.startswith("layers/0/") for n in names)
+    # mirror of the python flatten order
+    template = jax.eval_shape(
+        lambda: M.init_target(jax.random.PRNGKey(0), M.TARGETS["mtp-l"])
+    )
+    spec, _ = aot.tree_spec(template)
+    assert [s["name"] for s in spec] == names
+
+
+def test_train_step_io_counts():
+    """train_step returns params' + m' + v' + metrics, inputs include the
+    runtime loss-selection scalars."""
+    m = manifest()
+    d = m["drafts"]["eagle3@dense-s"]
+    n = len(d["params"])
+    e = d["entries"]["train_step"]
+    groups = [i["group"] for i in e["inputs"]]
+    for g in ("tparams", "dparams", "opt_m", "opt_v", "loss_weights", "eta", "gamma", "lr", "vocab_map"):
+        assert g in groups, g
+    assert len(e["outputs"]) == 3 * n + 1
+    # metrics vector layout [loss, mean_alpha, alpha*K, lambda*K]
+    assert e["outputs"][-1]["shape"] == [2 + 2 * m["k_heads"]]
+
+
+def test_serving_entry_shapes():
+    m = manifest()
+    t = m["targets"]["dense-s"]
+    v1 = t["entries"]["verify_b1"]
+    assert v1["outputs"][0]["shape"] == [1, m["verify_t"], 512]
+    kv_shape = v1["outputs"][1]["shape"]
+    assert kv_shape == [
+        t["n_layers"], 2, 1, t["n_heads"], t["max_seq"], t["head_dim"]
+    ]
+    d = m["drafts"]["eagle3@dense-s"]
+    s4 = d["entries"]["step_b4"]
+    assert s4["outputs"][0]["shape"] == [4, d["draft_vocab"]]

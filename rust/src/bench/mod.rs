@@ -1,0 +1,132 @@
+//! Benchmark support (criterion is unavailable offline): a small
+//! warmup/iterate/stats harness for micro-benches plus markdown table
+//! rendering shared by the per-paper-table bench binaries, which write
+//! their regenerated tables to `results/`.
+
+use std::time::Instant;
+
+use crate::util::Percentiles;
+
+/// Measure a closure: warmup then timed iterations; returns stats in ms.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut pct = Percentiles::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        pct.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: pct.mean(),
+        p50_ms: pct.pct(50.0),
+        p95_ms: pct.pct(95.0),
+    }
+}
+
+/// Markdown table builder.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("## {}\n\n", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.header, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out.push('\n');
+        out
+    }
+
+    /// Print to stdout and append to `results/<file>.md`.
+    pub fn emit(&self, file: &str) -> anyhow::Result<()> {
+        let text = self.render();
+        print!("{text}");
+        let dir = std::path::Path::new("results");
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{file}.md")), &text)?;
+        Ok(())
+    }
+}
+
+pub fn fmt(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+/// Graceful skip for benches whose inputs (trained checkpoints / result
+/// cells) are not present — keeps `cargo bench` green on a fresh clone.
+pub fn skip(msg: &str) {
+    println!("SKIP: {msg}");
+    println!("      run `make data targets drafts && ./target/release/lk-spec eval-all` first");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("## T"));
+        assert!(s.contains("| a  | bb |") || s.contains("| a | bb |"));
+        assert!(s.contains("| 1"));
+    }
+
+    #[test]
+    fn bench_measures() {
+        let r = bench("noop", 2, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_ms < 10.0);
+    }
+}

@@ -1,0 +1,294 @@
+//! Configuration system: loss specifications, training presets and the
+//! experiment plan that maps every paper table/figure to concrete runs
+//! (DESIGN.md §5). Benches and the CLI both consume this module so the
+//! sweep definitions live in exactly one place.
+
+use anyhow::{bail, Result};
+
+/// Paper §5.3 defaults.
+pub const LEARNING_RATE: f64 = 4e-4;
+pub const WARMUP_STEPS: usize = 100;
+pub const GAMMA: f64 = 0.8;
+pub const DEFAULT_ETA: f64 = 3.0;
+
+/// A draft-training objective: weights over (KL, TV, L_LK^α, L_LK^λ)
+/// plus the adaptive-schedule temperature η (paper §4.2/4.3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LossSpec {
+    /// short stable identifier used in file names and result tables
+    pub tag: String,
+    /// pretty name for reports (matches the paper's notation)
+    pub label: String,
+    pub weights: [f32; 4],
+    pub eta: f32,
+}
+
+impl LossSpec {
+    pub fn kl() -> LossSpec {
+        LossSpec {
+            tag: "kl".into(),
+            label: "KL".into(),
+            weights: [1.0, 0.0, 0.0, 0.0],
+            eta: DEFAULT_ETA as f32,
+        }
+    }
+
+    pub fn tv() -> LossSpec {
+        LossSpec {
+            tag: "tv".into(),
+            label: "TV".into(),
+            weights: [0.0, 1.0, 0.0, 0.0],
+            eta: DEFAULT_ETA as f32,
+        }
+    }
+
+    pub fn lk_alpha() -> LossSpec {
+        LossSpec {
+            tag: "lka".into(),
+            label: "L_LK^alpha".into(),
+            weights: [0.0, 0.0, 1.0, 0.0],
+            eta: DEFAULT_ETA as f32,
+        }
+    }
+
+    pub fn lk_lambda(eta: f64) -> LossSpec {
+        LossSpec {
+            tag: format!("lkl-eta{}", trim_num(eta)),
+            label: format!("L_LK^lambda (eta={})", trim_num(eta)),
+            weights: [0.0, 0.0, 0.0, 1.0],
+            eta: eta as f32,
+        }
+    }
+
+    /// Fixed-mixture ablation λ=const: λ·KL + (1−λ)·TV (§6.1).
+    pub fn lk_fixed(lambda: f64) -> LossSpec {
+        LossSpec {
+            tag: format!("lkl-fixed{}", trim_num(lambda)),
+            label: format!("L_LK^lambda (lambda={})", trim_num(lambda)),
+            weights: [lambda as f32, 1.0 - lambda as f32, 0.0, 0.0],
+            eta: DEFAULT_ETA as f32,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<LossSpec> {
+        if let Some(rest) = s.strip_prefix("lkl-eta") {
+            return Ok(LossSpec::lk_lambda(rest.parse()?));
+        }
+        if let Some(rest) = s.strip_prefix("lkl-fixed") {
+            return Ok(LossSpec::lk_fixed(rest.parse()?));
+        }
+        match s {
+            "kl" => Ok(LossSpec::kl()),
+            "tv" => Ok(LossSpec::tv()),
+            "lka" => Ok(LossSpec::lk_alpha()),
+            other => bail!(
+                "unknown loss '{other}' (want kl | tv | lka | lkl-eta<η> | lkl-fixed<λ>)"
+            ),
+        }
+    }
+}
+
+fn trim_num(x: f64) -> String {
+    let s = format!("{x}");
+    s
+}
+
+/// Training durations. Paper trains 10 epochs over 660K samples; our
+/// single-core budget scales that down while keeping the LR schedule
+/// shape (cosine + warmup).
+#[derive(Clone, Debug)]
+pub struct TrainPreset {
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup: usize,
+    pub gamma: f64,
+    pub seed: u64,
+}
+
+impl TrainPreset {
+    pub fn target(target: &str) -> TrainPreset {
+        let steps = match target {
+            "dense-s" | "moe-s" => 700,
+            "dense-m" | "moe-m" => 500,
+            _ => 400, // moe-l / mtp-l
+        };
+        TrainPreset {
+            steps,
+            lr: 1e-3, // LM pretraining takes a hotter schedule than drafts
+            warmup: 60,
+            gamma: GAMMA,
+            seed: 7,
+        }
+    }
+
+    pub fn draft(target: &str, arch: &str) -> TrainPreset {
+        let steps = match (target, arch) {
+            (_, "mtp") => 200, // fine-tuning a pretrained module (1 epoch)
+            ("dense-s", _) | ("moe-s", _) => 350,
+            _ => 240,
+        };
+        TrainPreset {
+            steps,
+            lr: LEARNING_RATE,
+            warmup: WARMUP_STEPS.min(steps / 4),
+            gamma: GAMMA,
+            seed: 11,
+        }
+    }
+
+    /// Cosine LR with linear warmup (paper §5.3).
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if step < self.warmup {
+            return self.lr * (step as f64 + 1.0) / self.warmup as f64;
+        }
+        let t = (step - self.warmup) as f64 / (self.steps - self.warmup).max(1) as f64;
+        0.5 * self.lr * (1.0 + (std::f64::consts::PI * t).cos())
+    }
+}
+
+/// One experiment cell: which draft checkpoint to evaluate.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub draft: String, // manifest draft name, e.g. "eagle3@dense-s"
+    pub loss: LossSpec,
+}
+
+impl RunSpec {
+    pub fn new(draft: &str, loss: LossSpec) -> RunSpec {
+        RunSpec {
+            draft: draft.to_string(),
+            loss,
+        }
+    }
+
+    /// Stable checkpoint file stem.
+    pub fn stem(&self) -> String {
+        format!("{}__{}", self.draft.replace('@', "_"), self.loss.tag)
+    }
+}
+
+/// MTP "original" pseudo-run: the module as it came out of target
+/// pretraining, evaluated without fine-tuning (Table 2's "MTP original").
+pub const MTP_ORIGINAL_TAG: &str = "original";
+
+/// The full experiment plan (DESIGN.md §5). Every bench pulls its run
+/// list from these functions, so the sweep is defined once.
+pub mod plan {
+    use super::*;
+
+    /// Table 1: the full objective sweep on the Llama-3.1-8B analog.
+    pub fn table1() -> Vec<RunSpec> {
+        let mut runs = Vec::new();
+        for loss in [
+            LossSpec::kl(),
+            LossSpec::tv(),
+            LossSpec::lk_alpha(),
+            LossSpec::lk_fixed(0.5),
+            LossSpec::lk_lambda(0.7),
+            LossSpec::lk_lambda(1.0),
+            LossSpec::lk_lambda(3.0),
+            LossSpec::lk_lambda(10.0),
+        ] {
+            runs.push(RunSpec::new("eagle3@dense-s", loss));
+        }
+        // Paper uses η=10 for MEDUSA (slower acceptance growth) and η=3
+        // for the MLP speculator.
+        for loss in [LossSpec::kl(), LossSpec::lk_alpha(), LossSpec::lk_lambda(10.0)] {
+            runs.push(RunSpec::new("medusa@dense-s", loss));
+        }
+        for loss in [LossSpec::kl(), LossSpec::lk_alpha(), LossSpec::lk_lambda(3.0)] {
+            runs.push(RunSpec::new("mlp@dense-s", loss));
+        }
+        runs
+    }
+
+    /// Table 2: KL vs LK^λ(η=3) across all six targets (+ MTP rows).
+    pub fn table2() -> Vec<RunSpec> {
+        let mut runs = Vec::new();
+        for target in ["dense-s", "dense-m", "moe-s", "moe-m", "moe-l"] {
+            for loss in [LossSpec::kl(), LossSpec::lk_lambda(3.0)] {
+                runs.push(RunSpec::new(&format!("eagle3@{target}"), loss));
+            }
+        }
+        for loss in [LossSpec::kl(), LossSpec::lk_lambda(3.0)] {
+            runs.push(RunSpec::new("mtp@mtp-l", loss));
+        }
+        runs
+    }
+
+    /// Figure 1: τ vs K for four objectives on the Qwen3-235B analog.
+    pub fn fig1() -> Vec<RunSpec> {
+        [
+            LossSpec::kl(),
+            LossSpec::tv(),
+            LossSpec::lk_alpha(),
+            LossSpec::lk_lambda(3.0),
+        ]
+        .into_iter()
+        .map(|l| RunSpec::new("eagle3@moe-l", l))
+        .collect()
+    }
+
+    /// Everything that needs a trained checkpoint (deduplicated).
+    pub fn all_runs() -> Vec<RunSpec> {
+        let mut runs = table1();
+        for r in table2().into_iter().chain(fig1()) {
+            if !runs.iter().any(|e| e.stem() == r.stem()) {
+                runs.push(r);
+            }
+        }
+        runs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_parse_roundtrip() {
+        for spec in [
+            LossSpec::kl(),
+            LossSpec::tv(),
+            LossSpec::lk_alpha(),
+            LossSpec::lk_lambda(3.0),
+            LossSpec::lk_lambda(0.7),
+            LossSpec::lk_fixed(0.5),
+        ] {
+            let re = LossSpec::parse(&spec.tag).unwrap();
+            assert_eq!(re, spec);
+        }
+        assert!(LossSpec::parse("nope").is_err());
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let p = TrainPreset {
+            steps: 200,
+            lr: 1e-3,
+            warmup: 20,
+            gamma: 0.8,
+            seed: 0,
+        };
+        assert!(p.lr_at(0) < p.lr_at(10));
+        assert!((p.lr_at(19) - 1e-3).abs() < 1e-9);
+        assert!(p.lr_at(100) < 1e-3);
+        assert!(p.lr_at(199) < p.lr_at(100));
+        assert!(p.lr_at(199) >= 0.0);
+    }
+
+    #[test]
+    fn plan_covers_paper_sweeps() {
+        assert_eq!(plan::table1().len(), 8 + 3 + 3);
+        assert_eq!(plan::table2().len(), 12);
+        assert_eq!(plan::fig1().len(), 4);
+        let all = plan::all_runs();
+        // dedup leaves: t1(14) + t2 unique(10: dense-s kl/lkl3 already in t1)
+        // + fig1 unique(2: moe-l tv/lka)
+        assert_eq!(all.len(), 14 + 10 + 2);
+        let mut stems: Vec<String> = all.iter().map(|r| r.stem()).collect();
+        stems.sort();
+        stems.dedup();
+        assert_eq!(stems.len(), all.len(), "stems unique");
+    }
+}

@@ -1,0 +1,246 @@
+//! Corpus files and training/eval datasets.
+//!
+//! On-disk format per (domain, split): `<dir>/<domain>.<split>.tok` —
+//! header "LKC1" + u32 count + count × i32 LE tokens (documents are
+//! EOS-terminated, concatenated back-to-back). Deliberately flat so the
+//! batcher can sample windows with zero parsing.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::grammar::{Domain, DOMAINS};
+use super::{BOS, EOS};
+use crate::util::Pcg64;
+
+const MAGIC: &[u8; 4] = b"LKC1";
+
+/// Generation settings for one corpus build.
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    pub seed: u64,
+    pub train_tokens: usize,
+    pub eval_docs: usize,
+    pub doc_len: usize,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec {
+            seed: 0xC0FFEE,
+            train_tokens: 400_000,
+            eval_docs: 64,
+            doc_len: 160,
+        }
+    }
+}
+
+/// A generated corpus directory.
+pub struct Corpus {
+    pub dir: PathBuf,
+}
+
+impl Corpus {
+    /// Generate all (domain × {train, eval}) files under `dir`.
+    pub fn generate(dir: &Path, spec: &CorpusSpec) -> Result<Corpus> {
+        std::fs::create_dir_all(dir)?;
+        for (di, domain) in DOMAINS.iter().enumerate() {
+            // independent streams per (domain, split)
+            let mut rng = Pcg64::new(spec.seed, (di as u64) * 2 + 1);
+            let mut train = Vec::with_capacity(spec.train_tokens + spec.doc_len);
+            while train.len() < spec.train_tokens {
+                train.extend(domain.generate(&mut rng, spec.doc_len));
+            }
+            write_tokens(&dir.join(format!("{}.train.tok", domain.name())), &train)?;
+
+            let mut rng = Pcg64::new(spec.seed, (di as u64) * 2 + 2);
+            let mut eval = Vec::new();
+            for _ in 0..spec.eval_docs {
+                eval.extend(domain.generate(&mut rng, spec.doc_len));
+            }
+            write_tokens(&dir.join(format!("{}.eval.tok", domain.name())), &eval)?;
+        }
+        crate::info!("generated corpus at {}", dir.display());
+        Ok(Corpus { dir: dir.to_path_buf() })
+    }
+
+    pub fn open(dir: &Path) -> Result<Corpus> {
+        for d in DOMAINS {
+            let p = dir.join(format!("{}.train.tok", d.name()));
+            if !p.exists() {
+                bail!(
+                    "corpus file {} missing — run `lk-spec gen-data` first",
+                    p.display()
+                );
+            }
+        }
+        Ok(Corpus { dir: dir.to_path_buf() })
+    }
+
+    pub fn load(&self, domain: Domain, split: &str) -> Result<Dataset> {
+        let path = self.dir.join(format!("{}.{split}.tok", domain.name()));
+        Ok(Dataset {
+            domain,
+            tokens: read_tokens(&path)?,
+        })
+    }
+
+    /// Equal-parts mixture of all domains' training streams.
+    pub fn load_mixture(&self, split: &str) -> Result<Vec<Dataset>> {
+        DOMAINS.iter().map(|&d| self.load(d, split)).collect()
+    }
+}
+
+fn write_tokens(path: &Path, tokens: &[i32]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(tokens.len() as u32).to_le_bytes())?;
+    for &t in tokens {
+        f.write_all(&t.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_tokens(path: &Path) -> Result<Vec<i32>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not an LKC1 corpus", path.display());
+    }
+    let mut cnt = [0u8; 4];
+    f.read_exact(&mut cnt)?;
+    let n = u32::from_le_bytes(cnt) as usize;
+    let mut bytes = vec![0u8; n * 4];
+    f.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// One domain's token stream with window/prompt sampling.
+pub struct Dataset {
+    pub domain: Domain,
+    pub tokens: Vec<i32>,
+}
+
+impl Dataset {
+    /// Sample a [b, w] batch of training windows (flattened row-major).
+    /// Windows are uniform random offsets into the stream; a BOS is
+    /// prepended so every window starts from a defined state.
+    pub fn sample_batch(&self, rng: &mut Pcg64, b: usize, w: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(b * w);
+        for _ in 0..b {
+            let start = rng.below(self.tokens.len().saturating_sub(w));
+            out.push(BOS);
+            out.extend_from_slice(&self.tokens[start..start + w - 1]);
+        }
+        out
+    }
+
+    /// Extract up to `n` evaluation prompts of exactly `len` tokens (BOS +
+    /// the first len-1 tokens of each document).
+    pub fn prompts(&self, n: usize, len: usize) -> Vec<Vec<i32>> {
+        let mut prompts = Vec::new();
+        let mut start = 0usize;
+        for (i, &t) in self.tokens.iter().enumerate() {
+            if t == EOS {
+                if i - start >= len {
+                    let mut p = Vec::with_capacity(len);
+                    p.push(BOS);
+                    p.extend_from_slice(&self.tokens[start..start + len - 1]);
+                    prompts.push(p);
+                    if prompts.len() == n {
+                        break;
+                    }
+                }
+                start = i + 1;
+            }
+        }
+        prompts
+    }
+}
+
+/// Round-robin mixture batcher over several datasets (target pretraining).
+pub struct MixtureBatcher<'a> {
+    pub datasets: &'a [Dataset],
+    next: usize,
+}
+
+impl<'a> MixtureBatcher<'a> {
+    pub fn new(datasets: &'a [Dataset]) -> Self {
+        MixtureBatcher { datasets, next: 0 }
+    }
+
+    /// Rows alternate across domains so every batch sees the mixture.
+    pub fn sample_batch(&mut self, rng: &mut Pcg64, b: usize, w: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(b * w);
+        for _ in 0..b {
+            let ds = &self.datasets[self.next % self.datasets.len()];
+            self.next += 1;
+            let start = rng.below(ds.tokens.len().saturating_sub(w));
+            out.push(BOS);
+            out.extend_from_slice(&ds.tokens[start..start + w - 1]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp() -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lkc_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn generate_open_load_roundtrip() {
+        let dir = tmp();
+        let spec = CorpusSpec {
+            train_tokens: 5_000,
+            eval_docs: 8,
+            ..Default::default()
+        };
+        Corpus::generate(&dir, &spec).unwrap();
+        let c = Corpus::open(&dir).unwrap();
+        for d in DOMAINS {
+            let train = c.load(d, "train").unwrap();
+            assert!(train.tokens.len() >= 5_000);
+            let eval = c.load(d, "eval").unwrap();
+            let prompts = eval.prompts(4, 16);
+            assert_eq!(prompts.len(), 4);
+            for p in &prompts {
+                assert_eq!(p.len(), 16);
+                assert_eq!(p[0], BOS);
+            }
+        }
+    }
+
+    #[test]
+    fn batches_shaped_and_deterministic() {
+        let dir = tmp().join("b");
+        Corpus::generate(
+            &dir,
+            &CorpusSpec {
+                train_tokens: 4_000,
+                eval_docs: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let c = Corpus::open(&dir).unwrap();
+        let ds = c.load(Domain::Math, "train").unwrap();
+        let a = ds.sample_batch(&mut Pcg64::new(5, 1), 4, 56);
+        let b = ds.sample_batch(&mut Pcg64::new(5, 1), 4, 56);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4 * 56);
+        assert!(a.iter().all(|&t| (0..512).contains(&t)));
+    }
+}

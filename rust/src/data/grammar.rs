@@ -1,0 +1,390 @@
+//! The three synthetic domain grammars.
+//!
+//! Requirements that matter for reproducing the paper's phenomenology:
+//!  * the induced next-token distributions must be PEAKED on few tokens
+//!    (the concentrated-p regime of Appendix A.5) with domain-dependent
+//!    entropy: code < math-answer < chat;
+//!  * long-range structure (topics, balanced brackets, carries) so a
+//!    4-6 layer target genuinely outperforms the 1-layer draft — the
+//!    capacity gap that motivates LK losses;
+//!  * pure functions of a `Pcg64` so corpora are bit-reproducible.
+
+use crate::data::{EOS, FIRST_CONTENT, VOCAB};
+use crate::util::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    Chat,
+    Code,
+    Math,
+}
+
+pub const DOMAINS: [Domain; 3] = [Domain::Chat, Domain::Code, Domain::Math];
+
+impl Domain {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Domain::Chat => "chat",
+            Domain::Code => "code",
+            Domain::Math => "math",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Domain> {
+        match s {
+            "chat" => Ok(Domain::Chat),
+            "code" => Ok(Domain::Code),
+            "math" => Ok(Domain::Math),
+            other => anyhow::bail!("unknown domain '{other}'"),
+        }
+    }
+
+    /// Generate one document of roughly `target_len` tokens (EOS-terminated).
+    pub fn generate(&self, rng: &mut Pcg64, target_len: usize) -> Vec<i32> {
+        let mut out = match self {
+            Domain::Chat => chat_doc(rng, target_len),
+            Domain::Code => code_doc(rng, target_len),
+            Domain::Math => math_doc(rng, target_len),
+        };
+        out.push(EOS);
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// chat: topic-state Markov chain with Zipfian emissions
+// ---------------------------------------------------------------------------
+//
+// 8 topics × 48-token bands (overlapping), sticky topic transitions, and a
+// per-topic bigram kernel: next token depends on (topic, prev token bucket),
+// giving an LM-learnable but non-trivial conditional with entropy ≈ 3-4 bits.
+
+const N_TOPICS: usize = 8;
+const TOPIC_BAND: usize = 48;
+
+fn chat_token(rng: &mut Pcg64, topic: usize, prev: i32) -> i32 {
+    let base = FIRST_CONTENT as usize + topic * 56; // overlapping bands
+    // Bigram structure: half the time continue an arithmetic-progression
+    // "phrase" from prev, otherwise draw a fresh Zipf rank in the band.
+    if prev >= FIRST_CONTENT && rng.uniform() < 0.55 {
+        let step = 1 + (prev as usize * 7 + topic) % 5;
+        let tok = base + ((prev as usize - base).wrapping_add(step)) % TOPIC_BAND;
+        return tok.min(VOCAB - 1) as i32;
+    }
+    let rank = rng.zipf(TOPIC_BAND, 1.3);
+    (base + rank).min(VOCAB - 1) as i32
+}
+
+fn chat_doc(rng: &mut Pcg64, target_len: usize) -> Vec<i32> {
+    let mut topic = rng.below(N_TOPICS);
+    let mut out = Vec::with_capacity(target_len + 1);
+    let mut prev = -1;
+    while out.len() < target_len {
+        // sticky topic switches (~7% per token)
+        if rng.uniform() < 0.07 {
+            topic = rng.below(N_TOPICS);
+        }
+        let tok = chat_token(rng, topic, prev);
+        out.push(tok);
+        prev = tok;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// code: balanced-bracket CFG with a reused identifier pool
+// ---------------------------------------------------------------------------
+//
+// Token map (fixed):
+//   keywords   [430..446)   (fn, let, if, ret, loop, ...)
+//   operators  [446..462)
+//   brackets   462 '(' 463 ')' 464 '{' 465 '}'
+//   separators 466 ';' 467 ',' 468 '\n'
+//   identifiers: small per-document pool drawn from [FIRST..128)
+//   numbers: digit tokens 470..480
+
+const KW: i32 = 430;
+const OP: i32 = 446;
+const LPAR: i32 = 462;
+const RPAR: i32 = 463;
+const LBRACE: i32 = 464;
+const RBRACE: i32 = 465;
+const SEMI: i32 = 466;
+const COMMA: i32 = 467;
+const NL: i32 = 468;
+const DIGIT0: i32 = 470;
+
+struct CodeGen<'a> {
+    rng: &'a mut Pcg64,
+    idents: Vec<i32>,
+    out: Vec<i32>,
+    depth: usize,
+}
+
+impl<'a> CodeGen<'a> {
+    fn ident(&mut self) -> i32 {
+        // Heavy reuse: Zipf over the pool, exactly like real code.
+        let rank = self.rng.zipf(self.idents.len(), 1.4);
+        self.idents[rank]
+    }
+
+    fn number(&mut self) {
+        let n = 1 + self.rng.below(2);
+        for _ in 0..n {
+            let d = self.rng.below(10) as i32;
+            self.out.push(DIGIT0 + d);
+        }
+    }
+
+    fn expr(&mut self, budget: usize) {
+        // term (op term)*
+        if self.rng.uniform() < 0.3 {
+            self.number();
+        } else {
+            let id = self.ident();
+            self.out.push(id);
+        }
+        if budget > 0 && self.rng.uniform() < 0.5 {
+            self.out.push(OP + self.rng.below(16) as i32);
+            self.expr(budget - 1);
+        }
+    }
+
+    fn call(&mut self) {
+        let id = self.ident();
+        self.out.push(id);
+        self.out.push(LPAR);
+        let n_args = self.rng.below(3);
+        for i in 0..n_args {
+            if i > 0 {
+                self.out.push(COMMA);
+            }
+            self.expr(1);
+        }
+        self.out.push(RPAR);
+    }
+
+    fn stmt(&mut self, limit: usize) {
+        if self.out.len() >= limit {
+            return;
+        }
+        let choice = self.rng.uniform();
+        if choice < 0.18 && self.depth < 3 {
+            // block: kw expr { stmts }
+            self.out.push(KW + self.rng.below(8) as i32);
+            self.expr(1);
+            self.out.push(LBRACE);
+            self.out.push(NL);
+            self.depth += 1;
+            let n = 1 + self.rng.below(3);
+            for _ in 0..n {
+                self.stmt(limit);
+            }
+            self.depth -= 1;
+            self.out.push(RBRACE);
+            self.out.push(NL);
+        } else if choice < 0.55 {
+            // let ident = expr ;
+            self.out.push(KW + 8);
+            let id = self.ident();
+            self.out.push(id);
+            self.out.push(OP); // '='
+            self.expr(2);
+            self.out.push(SEMI);
+            self.out.push(NL);
+        } else {
+            self.call();
+            self.out.push(SEMI);
+            self.out.push(NL);
+        }
+    }
+}
+
+fn code_doc(rng: &mut Pcg64, target_len: usize) -> Vec<i32> {
+    let pool = 4 + rng.below(8);
+    let idents: Vec<i32> = (0..pool)
+        .map(|_| FIRST_CONTENT + rng.below(125) as i32)
+        .collect();
+    let mut g = CodeGen {
+        rng,
+        idents,
+        out: Vec::with_capacity(target_len + 16),
+        depth: 0,
+    };
+    while g.out.len() < target_len {
+        g.stmt(target_len);
+    }
+    g.out
+}
+
+// ---------------------------------------------------------------------------
+// math: arithmetic with deterministic answers
+// ---------------------------------------------------------------------------
+//
+// Problems "a OP b = result ;" with multi-digit numbers as digit-token
+// sequences; the result digits are fully determined by the prefix, giving
+// the GSM8K-like pattern of uncertain problem statements followed by
+// highly-predictable answer spans.
+
+const EQ: i32 = 480;
+const PLUS: i32 = 481;
+const TIMES: i32 = 482;
+const MINUS: i32 = 483;
+
+fn push_number(out: &mut Vec<i32>, mut n: u32) {
+    let mut digits = Vec::new();
+    loop {
+        digits.push(DIGIT0 + (n % 10) as i32);
+        n /= 10;
+        if n == 0 {
+            break;
+        }
+    }
+    digits.reverse();
+    out.extend(digits);
+}
+
+fn math_doc(rng: &mut Pcg64, target_len: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(target_len + 12);
+    while out.len() < target_len {
+        let a = rng.range(2, 100) as u32;
+        let b = rng.range(2, 100) as u32;
+        let (op, r) = match rng.below(3) {
+            0 => (PLUS, a + b),
+            1 => (TIMES, a * b),
+            _ => (MINUS, a.max(b) - a.min(b)),
+        };
+        push_number(&mut out, a);
+        out.push(op);
+        push_number(&mut out, b);
+        out.push(EQ);
+        push_number(&mut out, r);
+        out.push(SEMI);
+        out.push(NL);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        for d in DOMAINS {
+            let a = d.generate(&mut Pcg64::new(1, 2), 200);
+            let b = d.generate(&mut Pcg64::new(1, 2), 200);
+            assert_eq!(a, b, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn tokens_in_range_and_terminated() {
+        let mut rng = Pcg64::new(3, 0);
+        for d in DOMAINS {
+            for _ in 0..20 {
+                let doc = d.generate(&mut rng, 150);
+                assert_eq!(*doc.last().unwrap(), EOS);
+                for &t in &doc[..doc.len() - 1] {
+                    assert!(
+                        (FIRST_CONTENT..VOCAB as i32).contains(&t),
+                        "{d:?} token {t} out of range"
+                    );
+                }
+                assert!(doc.len() >= 150);
+            }
+        }
+    }
+
+    #[test]
+    fn code_brackets_balanced() {
+        let mut rng = Pcg64::new(7, 0);
+        for _ in 0..10 {
+            let doc = code_doc(&mut rng, 300);
+            let mut paren = 0i32;
+            let mut brace = 0i32;
+            for &t in &doc {
+                match t {
+                    LPAR => paren += 1,
+                    RPAR => paren -= 1,
+                    LBRACE => brace += 1,
+                    RBRACE => brace -= 1,
+                    _ => {}
+                }
+                assert!(paren >= 0 && brace >= 0);
+            }
+            assert_eq!(paren, 0);
+            assert_eq!(brace, 0);
+        }
+    }
+
+    #[test]
+    fn math_answers_correct() {
+        let mut rng = Pcg64::new(11, 0);
+        let doc = math_doc(&mut rng, 400);
+        // Parse back "a op b = r ;" groups and check arithmetic.
+        let mut i = 0;
+        let read_num = |doc: &[i32], i: &mut usize| -> u32 {
+            let mut n = 0u32;
+            while *i < doc.len() && (DIGIT0..DIGIT0 + 10).contains(&doc[*i]) {
+                n = n * 10 + (doc[*i] - DIGIT0) as u32;
+                *i += 1;
+            }
+            n
+        };
+        let mut checked = 0;
+        while i < doc.len() {
+            let a = read_num(&doc, &mut i);
+            if i >= doc.len() {
+                break;
+            }
+            let op = doc[i];
+            i += 1;
+            let b = read_num(&doc, &mut i);
+            assert_eq!(doc[i], EQ);
+            i += 1;
+            let r = read_num(&doc, &mut i);
+            let want = match op {
+                PLUS => a + b,
+                TIMES => a * b,
+                MINUS => a.max(b) - a.min(b),
+                _ => panic!("bad op {op}"),
+            };
+            assert_eq!(r, want);
+            checked += 1;
+            assert_eq!(doc[i], SEMI);
+            i += 2; // SEMI NL
+        }
+        assert!(checked > 10);
+    }
+
+    #[test]
+    fn entropy_ordering_code_below_chat() {
+        // Rough unigram-entropy sanity: code should be far more repetitive.
+        let mut rng = Pcg64::new(5, 0);
+        let ent = |d: Domain, rng: &mut Pcg64| {
+            let mut counts = vec![0f64; VOCAB];
+            let mut total = 0f64;
+            for _ in 0..30 {
+                for t in d.generate(rng, 300) {
+                    counts[t as usize] += 1.0;
+                    total += 1.0;
+                }
+            }
+            counts
+                .iter()
+                .filter(|&&c| c > 0.0)
+                .map(|&c| {
+                    let p = c / total;
+                    -p * p.log2()
+                })
+                .sum::<f64>()
+        };
+        let e_code = ent(Domain::Code, &mut rng);
+        let e_chat = ent(Domain::Chat, &mut rng);
+        assert!(
+            e_code < e_chat,
+            "code entropy {e_code:.2} should be < chat {e_chat:.2}"
+        );
+    }
+}

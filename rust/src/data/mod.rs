@@ -1,0 +1,31 @@
+//! Data substrate: synthetic domain corpora, datasets and batching.
+//!
+//! The paper trains on Infinity-Instruct prompts with target-generated
+//! responses and evaluates on MT-Bench / HumanEval / GSM8K. None are
+//! available offline, so we build three seeded token-grammar *domains*
+//! whose entropy profiles mirror those benchmarks (DESIGN.md §2):
+//!
+//!   * `chat` — topic-Markov chains with Zipfian emission (conversational,
+//!     moderate entropy → MT-Bench analog)
+//!   * `code` — balanced-bracket CFG with a small reused identifier pool
+//!     (low entropy, long predictable stretches → HumanEval analog)
+//!   * `math` — arithmetic problems whose answer digits are deterministic
+//!     given the prefix (spiky entropy → GSM8K analog)
+//!
+//! Targets pretrain on the mixture; drafts distill on the same streams;
+//! evaluation prompts come from held-out documents of each domain.
+
+pub mod corpus;
+pub mod grammar;
+pub mod vocab;
+
+pub use corpus::{Corpus, Dataset};
+pub use grammar::{Domain, DOMAINS};
+pub use vocab::build_vocab_map;
+
+/// Reserved token ids (grammars emit ids in [FIRST_CONTENT, VOCAB)).
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const FIRST_CONTENT: i32 = 3;
+pub const VOCAB: usize = 512;

@@ -1,0 +1,75 @@
+//! Truncated draft vocabulary (FR-Spec style, paper §4.4 / §5.2).
+//!
+//! The EAGLE-3 drafts emit logits over the `draft_vocab` most frequent
+//! tokens of the training mixture. `build_vocab_map` computes that subset
+//! and returns it sorted ascending (a stable, test-friendly order); the
+//! inverse map lets the engine translate full-vocab ids when scattering
+//! draft probabilities during verification.
+
+use super::corpus::Dataset;
+
+/// Returns (vocab_map, coverage): `vocab_map[i]` is the full-vocab id of
+/// truncated id `i`; coverage is the fraction of corpus mass retained.
+pub fn build_vocab_map(datasets: &[Dataset], vocab: usize, draft_vocab: usize) -> (Vec<i32>, f64) {
+    let mut counts = vec![0u64; vocab];
+    let mut total = 0u64;
+    for ds in datasets {
+        for &t in &ds.tokens {
+            counts[t as usize] += 1;
+            total += 1;
+        }
+    }
+    // Reserved tokens (PAD/BOS/EOS) are always included so the draft can
+    // terminate sequences.
+    let mut order: Vec<usize> = (0..vocab).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse((i < 3) as u64 * u64::MAX / 2 + counts[i]));
+    let mut keep: Vec<i32> = order[..draft_vocab].iter().map(|&i| i as i32).collect();
+    keep.sort_unstable();
+    let kept_mass: u64 = keep.iter().map(|&i| counts[i as usize]).sum();
+    (keep, kept_mass as f64 / total.max(1) as f64)
+}
+
+/// Inverse of the vocab map: full id -> truncated id (or None).
+pub fn invert_vocab_map(vocab_map: &[i32], vocab: usize) -> Vec<Option<u16>> {
+    let mut inv = vec![None; vocab];
+    for (i, &full) in vocab_map.iter().enumerate() {
+        inv[full as usize] = Some(i as u16);
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::grammar::Domain;
+    use crate::util::Pcg64;
+
+    fn dataset() -> Dataset {
+        let mut rng = Pcg64::new(1, 0);
+        let mut tokens = Vec::new();
+        for _ in 0..50 {
+            tokens.extend(Domain::Chat.generate(&mut rng, 200));
+        }
+        Dataset {
+            domain: Domain::Chat,
+            tokens,
+        }
+    }
+
+    #[test]
+    fn map_sorted_reserved_kept_high_coverage() {
+        let ds = dataset();
+        let (map, coverage) = build_vocab_map(std::slice::from_ref(&ds), 512, 320);
+        assert_eq!(map.len(), 320);
+        assert!(map.windows(2).all(|w| w[0] < w[1]), "sorted, unique");
+        for r in 0..3 {
+            assert!(map.contains(&r), "reserved token {r} kept");
+        }
+        assert!(coverage > 0.8, "coverage {coverage}");
+        let inv = invert_vocab_map(&map, 512);
+        for (i, &full) in map.iter().enumerate() {
+            assert_eq!(inv[full as usize], Some(i as u16));
+        }
+        assert_eq!(inv.iter().filter(|x| x.is_some()).count(), 320);
+    }
+}

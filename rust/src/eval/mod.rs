@@ -1,0 +1,238 @@
+//! Evaluation harness: computes the paper's metrics for trained
+//! speculators — average acceptance length τ (§5.5), per-position
+//! acceptance rates, and wall-clock speedup vs vanilla autoregressive
+//! decoding (Table 4) — and caches every cell as JSON under
+//! `runs/results/` so benches regenerate tables without re-running.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::data::corpus::Corpus;
+use crate::data::grammar::Domain;
+use crate::runtime::Runtime;
+use crate::server::engine::{EngineOpts, SpecEngine};
+use crate::spec::accept::AcceptanceStats;
+use crate::spec::sampling::SamplingMode;
+use crate::tensor::read_checkpoint;
+use crate::train::RunDirs;
+use crate::util::Json;
+
+/// Evaluation temperature/sampling setting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalMode {
+    T0,
+    T1,
+    T1GreedyDraft, // Appendix D ablation
+}
+
+impl EvalMode {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            EvalMode::T0 => "t0",
+            EvalMode::T1 => "t1",
+            EvalMode::T1GreedyDraft => "t1gd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<EvalMode> {
+        match s {
+            "t0" => Ok(EvalMode::T0),
+            "t1" => Ok(EvalMode::T1),
+            "t1gd" => Ok(EvalMode::T1GreedyDraft),
+            other => anyhow::bail!("unknown eval mode '{other}' (t0|t1|t1gd)"),
+        }
+    }
+
+    pub fn sampling(&self) -> SamplingMode {
+        match self {
+            EvalMode::T0 => SamplingMode::Greedy,
+            EvalMode::T1 => SamplingMode::Stochastic,
+            EvalMode::T1GreedyDraft => SamplingMode::GreedyDraft,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalSettings {
+    pub n_prompts: usize,
+    pub n_time_prompts: usize, // batch-1 timed subset (Table 4)
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub seed: u64,
+    pub measure_speedup: bool,
+}
+
+impl Default for EvalSettings {
+    fn default() -> Self {
+        EvalSettings {
+            n_prompts: 16,
+            n_time_prompts: 3,
+            prompt_len: 16,
+            max_new: 40,
+            seed: 2024,
+            measure_speedup: true,
+        }
+    }
+}
+
+/// One result cell (one draft × loss × domain × mode × K).
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub tau: f64,
+    pub alpha_pos: Vec<f64>,
+    pub spec_tps: f64,
+    pub vanilla_tps: f64,
+    pub speedup: f64,
+}
+
+pub fn cell_name(stem: &str, domain: Domain, mode: EvalMode, k: usize) -> String {
+    format!("{stem}__{}__{}__k{k}", domain.name(), mode.tag())
+}
+
+/// Evaluate one cell; reuses the cached JSON if present (pass
+/// `force = true` to re-run).
+#[allow(clippy::too_many_arguments)]
+pub fn eval_cell(
+    rt: &Runtime,
+    dirs: &RunDirs,
+    corpus: &Corpus,
+    draft: &str,
+    loss_tag: &str,
+    domain: Domain,
+    mode: EvalMode,
+    k: usize,
+    settings: &EvalSettings,
+    force: bool,
+) -> Result<Cell> {
+    let stem = format!("{}__{}", draft.replace('@', "_"), loss_tag);
+    let path = dirs.results(&cell_name(&stem, domain, mode, k));
+    if path.exists() && !force {
+        return read_cell(&path);
+    }
+
+    let dspec = rt.manifest.draft(draft)?.clone();
+    let tckpt = read_checkpoint(&dirs.target_ckpt(&dspec.target))
+        .with_context(|| format!("target checkpoint for {draft}"))?;
+    let dckpt = read_checkpoint(&dirs.draft_ckpt(&stem))
+        .with_context(|| format!("draft checkpoint {stem}"))?;
+    let vocab_map = if dspec.arch == "eagle3" {
+        let j = Json::parse_file(&dirs.vocab_map())?;
+        Some(
+            j.get("map")
+                .as_arr()
+                .context("vocab map")?
+                .iter()
+                .map(|x| x.as_i64().unwrap_or(0) as i32)
+                .collect::<Vec<i32>>(),
+        )
+    } else {
+        None
+    };
+
+    let opts = EngineOpts {
+        k_draft: k,
+        temperature: 1.0,
+        mode: mode.sampling(),
+        seed: settings.seed,
+    };
+    let mut engine = SpecEngine::new(rt, draft, &tckpt, &dckpt, vocab_map, opts)?;
+
+    let ds = corpus.load(domain, "eval")?;
+    let prompts = ds.prompts(settings.n_prompts, settings.prompt_len);
+    anyhow::ensure!(!prompts.is_empty(), "no eval prompts for {domain:?}");
+
+    // --- τ over all prompts, batched in groups of 4 -----------------------
+    let mut stats = AcceptanceStats::new(engine.k_draft());
+    for chunk in prompts.chunks(4) {
+        let results = engine.generate_batch(chunk, settings.max_new)?;
+        for r in &results {
+            stats.merge(&r.stats);
+        }
+    }
+
+    // --- timed batch-1 subset (Table 4 low-latency setting) ---------------
+    let (mut spec_tps, mut vanilla_tps) = (0.0, 0.0);
+    if settings.measure_speedup {
+        let timed = &prompts[..settings.n_time_prompts.min(prompts.len())];
+        let mut spec_tokens = 0usize;
+        let mut spec_secs = 0f64;
+        for p in timed {
+            let r = &engine.generate_batch(std::slice::from_ref(p), settings.max_new)?[0];
+            spec_tokens += r.tokens.len();
+            spec_secs += r.latency_ms / 1e3;
+        }
+        let mut van_tokens = 0usize;
+        let mut van_secs = 0f64;
+        for p in timed {
+            let r = engine.generate_vanilla(p, settings.max_new)?;
+            van_tokens += r.tokens.len();
+            van_secs += r.latency_ms / 1e3;
+        }
+        spec_tps = spec_tokens as f64 / spec_secs.max(1e-9);
+        vanilla_tps = van_tokens as f64 / van_secs.max(1e-9);
+    }
+
+    let cell = Cell {
+        tau: stats.tau(),
+        alpha_pos: stats.alpha_per_position(),
+        spec_tps,
+        vanilla_tps,
+        speedup: if vanilla_tps > 0.0 {
+            spec_tps / vanilla_tps
+        } else {
+            0.0
+        },
+    };
+    write_cell(&path, &cell)?;
+    crate::info!(
+        "cell {stem} {} {} k{k}: tau={:.3} speedup={:.2}",
+        domain.name(),
+        mode.tag(),
+        cell.tau,
+        cell.speedup
+    );
+    Ok(cell)
+}
+
+fn write_cell(path: &Path, c: &Cell) -> Result<()> {
+    Json::obj(vec![
+        ("tau", Json::Num(c.tau)),
+        ("alpha_pos", Json::arr_f64(&c.alpha_pos)),
+        ("spec_tps", Json::Num(c.spec_tps)),
+        ("vanilla_tps", Json::Num(c.vanilla_tps)),
+        ("speedup", Json::Num(c.speedup)),
+    ])
+    .write_file(path)
+}
+
+pub fn read_cell(path: &Path) -> Result<Cell> {
+    let j = Json::parse_file(path)?;
+    Ok(Cell {
+        tau: j.req_f64("tau")?,
+        alpha_pos: j
+            .get("alpha_pos")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(0.0))
+            .collect(),
+        spec_tps: j.req_f64("spec_tps")?,
+        vanilla_tps: j.req_f64("vanilla_tps")?,
+        speedup: j.req_f64("speedup")?,
+    })
+}
+
+/// Try to read a cached cell without recomputing (for benches).
+pub fn cached_cell(
+    dirs: &RunDirs,
+    draft: &str,
+    loss_tag: &str,
+    domain: Domain,
+    mode: EvalMode,
+    k: usize,
+) -> Option<Cell> {
+    let stem = format!("{}__{}", draft.replace('@', "_"), loss_tag);
+    let path = dirs.results(&cell_name(&stem, domain, mode, k));
+    read_cell(&path).ok()
+}

@@ -1,0 +1,37 @@
+//! # lk-spec
+//!
+//! Reproduction of "LK Losses: Direct Acceptance Rate Optimization for
+//! Speculative Decoding" (ICML 2026) as a three-layer Rust + JAX + Pallas
+//! system: a speculator **training framework** with the LK loss family as
+//! first-class objectives, and a speculative-decoding **serving engine**
+//! (continuous batcher, KV manager, draft-then-verify scheduler, exact
+//! rejection sampling). Python/JAX only ever runs at build time
+//! (`make artifacts`); every runtime path is Rust driving AOT-compiled
+//! XLA executables through PJRT.
+//!
+//! See DESIGN.md for the system inventory and experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+#[macro_use]
+pub mod util;
+
+pub mod tensor;
+
+pub mod runtime;
+
+/// Re-export for examples/benches.
+pub use anyhow;
+
+pub mod data;
+
+pub mod spec;
+
+pub mod config;
+
+pub mod train;
+
+pub mod server;
+
+pub mod eval;
+
+pub mod bench;

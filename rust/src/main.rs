@@ -1,0 +1,400 @@
+//! lk-spec CLI — the single entrypoint for the whole pipeline:
+//!
+//!   gen-data      generate the synthetic domain corpora
+//!   train-target  pretrain target LMs (drives tgt_*_train_step artifacts)
+//!   train-draft   train speculators with any LK-family objective
+//!   eval          evaluate τ / speedup cells (cached as JSON)
+//!   eval-all      run every cell the paper tables need
+//!   serve         demo: router + engine serving a batch of requests
+//!   report        print cached results summary
+//!
+//! Typical full reproduction: `make experiments` (see Makefile), which is
+//! gen-data → train-target --all → train-draft --all → cargo bench.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use lk_spec::config::{plan, LossSpec, TrainPreset, MTP_ORIGINAL_TAG};
+use lk_spec::data::corpus::{Corpus, CorpusSpec};
+use lk_spec::data::grammar::{Domain, DOMAINS};
+use lk_spec::eval::{eval_cell, EvalMode, EvalSettings};
+use lk_spec::runtime::Runtime;
+use lk_spec::server::{Router, RouterConfig};
+use lk_spec::train::{DraftTrainer, RunDirs, TargetTrainer};
+use lk_spec::util::{Args, Json};
+use lk_spec::{info, warn_log};
+
+fn main() {
+    let args = Args::parse_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    if args.flag("verbose") {
+        lk_spec::util::log::set_level(3);
+    } else if args.flag("quiet") {
+        lk_spec::util::log::set_level(1);
+    }
+    let sub = args.subcommand.clone().unwrap_or_default();
+    match sub.as_str() {
+        "gen-data" => gen_data(args),
+        "train-target" => train_target(args),
+        "train-draft" => train_draft(args),
+        "eval" => eval_cmd(args),
+        "eval-all" => eval_all(args),
+        "serve" => serve_demo(args),
+        "report" => report(args),
+        "" | "help" => {
+            print_help();
+            args.finish()
+        }
+        other => bail!("unknown subcommand '{other}' — try `lk-spec help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "lk-spec — LK-loss speculative decoding framework\n\
+         \n\
+         subcommands:\n\
+           gen-data      --out data [--seed N] [--train-tokens N]\n\
+           train-target  --target NAME | --all  [--data D] [--runs R] [--steps N]\n\
+           train-draft   --draft A@T --loss L | --all  [--steps N]\n\
+           eval          --draft A@T --loss L [--domain D] [--mode t0|t1|t1gd] [--k K]\n\
+           eval-all      run every paper-table cell (idempotent, cached)\n\
+           serve         --draft A@T --loss L [--requests N] — router demo\n\
+           report        print cached result cells\n\
+         \n\
+         common options: --artifacts DIR (default artifacts), --runs DIR\n\
+         (default runs), --data DIR (default data), --verbose, --quiet"
+    );
+}
+
+fn dirs_of(args: &Args) -> (PathBuf, PathBuf, PathBuf) {
+    (
+        PathBuf::from(args.opt_or("artifacts", "artifacts")),
+        PathBuf::from(args.opt_or("data", "data")),
+        PathBuf::from(args.opt_or("runs", "runs")),
+    )
+}
+
+fn gen_data(args: &Args) -> Result<()> {
+    let (_, data, _) = dirs_of(args);
+    let out = PathBuf::from(args.opt_or("out", data.to_str().unwrap()));
+    let spec = CorpusSpec {
+        seed: args.opt_u64("seed", CorpusSpec::default().seed)?,
+        train_tokens: args.opt_usize("train-tokens", CorpusSpec::default().train_tokens)?,
+        eval_docs: args.opt_usize("eval-docs", CorpusSpec::default().eval_docs)?,
+        doc_len: CorpusSpec::default().doc_len,
+    };
+    args.finish()?;
+    Corpus::generate(&out, &spec)?;
+    Ok(())
+}
+
+fn train_target(args: &Args) -> Result<()> {
+    let (artifacts, data, runs) = dirs_of(args);
+    let all = args.flag("all");
+    let only = args.opt("target").map(str::to_string);
+    let steps_override = args.opt_usize("steps", 0)?;
+    let force = args.flag("force");
+    args.finish()?;
+
+    let rt = Runtime::new(&artifacts)?;
+    let corpus = Corpus::open(&data)?;
+    let trainer = TargetTrainer {
+        rt: &rt,
+        dirs: RunDirs::new(&runs),
+    };
+    let targets: Vec<String> = match (&only, all) {
+        (Some(t), _) => vec![t.clone()],
+        (None, true) => rt.manifest.targets.keys().cloned().collect(),
+        _ => bail!("pass --target NAME or --all"),
+    };
+    for t in &targets {
+        if trainer.dirs.target_ckpt(t).exists() && !force {
+            info!("[{t}] checkpoint exists, skipping (--force to retrain)");
+            continue;
+        }
+        let mut preset = TrainPreset::target(t);
+        if steps_override > 0 {
+            preset.steps = steps_override;
+        }
+        trainer.train(t, &corpus, &preset, 50)?;
+    }
+    Ok(())
+}
+
+fn train_draft(args: &Args) -> Result<()> {
+    let (artifacts, data, runs) = dirs_of(args);
+    let all = args.flag("all");
+    let draft = args.opt("draft").map(str::to_string);
+    let loss = args.opt("loss").map(str::to_string);
+    let steps_override = args.opt_usize("steps", 0)?;
+    let force = args.flag("force");
+    args.finish()?;
+
+    let rt = Runtime::new(&artifacts)?;
+    let corpus = Corpus::open(&data)?;
+    let dirs = RunDirs::new(&runs);
+    let trainer = DraftTrainer { rt: &rt, dirs };
+
+    let runs_list = match (all, &draft, &loss) {
+        (true, _, _) => plan::all_runs(),
+        (false, Some(d), Some(l)) => {
+            vec![lk_spec::config::RunSpec::new(d, LossSpec::parse(l)?)]
+        }
+        _ => bail!("pass --draft A@T --loss L, or --all"),
+    };
+
+    // MTP "original" baseline checkpoints (no training — Table 2 row).
+    for r in &runs_list {
+        if r.draft.starts_with("mtp@") {
+            let stem = format!("{}__{MTP_ORIGINAL_TAG}", r.draft.replace('@', "_"));
+            if !trainer.dirs.draft_ckpt(&stem).exists() {
+                trainer.save_mtp_original(&r.draft)?;
+                info!("saved MTP original checkpoint for {}", r.draft);
+            }
+        }
+    }
+
+    let total = runs_list.len();
+    for (i, r) in runs_list.iter().enumerate() {
+        let stem = r.stem();
+        if trainer.dirs.draft_ckpt(&stem).exists() && !force {
+            info!("[{stem}] checkpoint exists, skipping");
+            continue;
+        }
+        let dspec = rt.manifest.draft(&r.draft)?;
+        let mut preset = TrainPreset::draft(&dspec.target, &dspec.arch);
+        if steps_override > 0 {
+            preset.steps = steps_override;
+        }
+        info!(
+            "=== draft run {}/{total}: {stem} ({} steps)",
+            i + 1,
+            preset.steps
+        );
+        trainer.train(&r.draft, &r.loss, &corpus, &preset, 50)?;
+    }
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    let (artifacts, data, runs) = dirs_of(args);
+    let draft = args.opt("draft").context("--draft required")?.to_string();
+    let loss = args.opt_or("loss", "kl").to_string();
+    let domain = Domain::parse(args.opt_or("domain", "chat"))?;
+    let mode = EvalMode::parse(args.opt_or("mode", "t1"))?;
+    let k = args.opt_usize("k", 7)?;
+    let n_prompts = args.opt_usize("prompts", 16)?;
+    let max_new = args.opt_usize("max-new", 40)?;
+    let force = args.flag("force");
+    args.finish()?;
+
+    let rt = Runtime::new(&artifacts)?;
+    let corpus = Corpus::open(&data)?;
+    let dirs = RunDirs::new(&runs);
+    let settings = EvalSettings {
+        n_prompts,
+        max_new,
+        ..Default::default()
+    };
+    let cell = eval_cell(
+        &rt, &dirs, &corpus, &draft, &loss, domain, mode, k, &settings, force,
+    )?;
+    println!(
+        "tau={:.3} alpha_pos={:?} spec_tps={:.1} vanilla_tps={:.1} speedup={:.2}",
+        cell.tau,
+        cell.alpha_pos
+            .iter()
+            .map(|a| (a * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>(),
+        cell.spec_tps,
+        cell.vanilla_tps,
+        cell.speedup
+    );
+    Ok(())
+}
+
+/// Every cell the paper tables/figures consume (idempotent; cached cells
+/// are skipped unless --force).
+fn eval_all(args: &Args) -> Result<()> {
+    let (artifacts, data, runs) = dirs_of(args);
+    let force = args.flag("force");
+    args.finish()?;
+
+    let rt = Runtime::new(&artifacts)?;
+    let corpus = Corpus::open(&data)?;
+    let dirs = RunDirs::new(&runs);
+    let settings = EvalSettings::default();
+
+    let mut cells = 0usize;
+    let t0 = std::time::Instant::now();
+
+    // Tables 1/2 (+ Table 4 columns measured alongside): all runs × 3
+    // domains × {t0, t1} at the default chain length.
+    for r in plan::all_runs() {
+        let dspec = rt.manifest.draft(&r.draft)?;
+        let k = if dspec.is_recurrent { 7 } else { dspec.k_heads };
+        for domain in DOMAINS {
+            for mode in [EvalMode::T0, EvalMode::T1] {
+                eval_cell(
+                    &rt, &dirs, &corpus, &r.draft, &r.loss.tag, domain, mode, k,
+                    &settings, force,
+                )?;
+                cells += 1;
+            }
+        }
+    }
+
+    // MTP original row (Table 2).
+    for domain in DOMAINS {
+        for mode in [EvalMode::T0, EvalMode::T1] {
+            eval_cell(
+                &rt, &dirs, &corpus, "mtp@mtp-l", MTP_ORIGINAL_TAG, domain, mode, 7,
+                &settings, force,
+            )?;
+            cells += 1;
+        }
+    }
+
+    // Figure 1: τ vs K on the Qwen3 analog, chat domain, T=1.
+    for r in plan::fig1() {
+        for k in 1..=7usize {
+            eval_cell(
+                &rt, &dirs, &corpus, &r.draft, &r.loss.tag, Domain::Chat,
+                EvalMode::T1, k, &settings, force,
+            )?;
+            cells += 1;
+        }
+    }
+
+    // Appendix D: greedy-draft bug vs exact rejection sampling.
+    for loss in [LossSpec::kl(), LossSpec::lk_lambda(3.0)] {
+        for domain in DOMAINS {
+            eval_cell(
+                &rt, &dirs, &corpus, "eagle3@dense-s", &loss.tag, domain,
+                EvalMode::T1GreedyDraft, 7, &settings, force,
+            )?;
+            cells += 1;
+        }
+    }
+
+    info!(
+        "eval-all: {cells} cells ready in {:.0}s",
+        t0.elapsed().as_secs_f64()
+    );
+    // Perf accounting for the §Perf log.
+    for (name, calls, ms) in rt.exec_report().iter().take(12) {
+        info!("  exec {name}: {calls} calls, {ms:.0} ms total");
+    }
+    Ok(())
+}
+
+/// Serving demo: spin the router, submit a burst of prompts, print
+/// metrics (the quickstart example does the same through the public API).
+fn serve_demo(args: &Args) -> Result<()> {
+    let (artifacts, data, runs) = dirs_of(args);
+    let draft = args.opt_or("draft", "eagle3@dense-s").to_string();
+    let loss = args.opt_or("loss", "lkl-eta3").to_string();
+    let n_requests = args.opt_usize("requests", 12)?;
+    let max_new = args.opt_usize("max-new", 32)?;
+    args.finish()?;
+
+    let corpus = Corpus::open(&data)?;
+    let prompts = corpus.load(Domain::Chat, "eval")?.prompts(n_requests, 16);
+
+    let router = Router::spawn(RouterConfig::default(), move || {
+        // Built inside the worker thread: PJRT state never crosses threads.
+        let rt = Box::leak(Box::new(Runtime::new(&artifacts)?));
+        let dirs = RunDirs::new(&runs);
+        let dspec = rt.manifest.draft(&draft)?.clone();
+        let tckpt = lk_spec::tensor::read_checkpoint(&dirs.target_ckpt(&dspec.target))?;
+        let stem = format!("{}__{loss}", draft.replace('@', "_"));
+        let dckpt = lk_spec::tensor::read_checkpoint(&dirs.draft_ckpt(&stem))?;
+        let vocab_map = if dspec.arch == "eagle3" {
+            let j = Json::parse_file(&dirs.vocab_map())?;
+            Some(
+                j.get("map")
+                    .as_arr()
+                    .context("map")?
+                    .iter()
+                    .map(|x| x.as_i64().unwrap_or(0) as i32)
+                    .collect::<Vec<i32>>(),
+            )
+        } else {
+            None
+        };
+        let mut engine = lk_spec::server::SpecEngine::new(
+            rt,
+            &draft,
+            &tckpt,
+            &dckpt,
+            vocab_map,
+            Default::default(),
+        )?;
+        Ok(move |prompts: &[Vec<i32>], max_new: usize| engine.generate_batch(prompts, max_new))
+    })?;
+
+    info!("submitting {} requests…", prompts.len());
+    let t0 = std::time::Instant::now();
+    let receivers: Vec<_> = prompts
+        .iter()
+        .map(|p| router.submit(p.clone(), max_new))
+        .collect::<Result<_>>()?;
+    let mut total_tokens = 0usize;
+    let mut taus = Vec::new();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        match rx.recv()? {
+            Ok(res) => {
+                total_tokens += res.tokens.len();
+                taus.push(res.stats.tau());
+                info!(
+                    "request {i}: {} tokens, tau={:.2}, {:.0} ms",
+                    res.tokens.len(),
+                    res.stats.tau(),
+                    res.latency_ms
+                );
+            }
+            Err(e) => warn_log!("request {i} failed: {e}"),
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let mean_tau = taus.iter().sum::<f64>() / taus.len().max(1) as f64;
+    println!(
+        "served {} requests, {total_tokens} tokens in {secs:.2}s ({:.1} tok/s), mean tau {mean_tau:.2}",
+        prompts.len(),
+        total_tokens as f64 / secs,
+    );
+    router.shutdown();
+    Ok(())
+}
+
+fn report(args: &Args) -> Result<()> {
+    let (_, _, runs) = dirs_of(args);
+    args.finish()?;
+    let dir = runs.join("results");
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .with_context(|| format!("no results in {}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    entries.sort();
+    println!("{:<64} {:>6} {:>8} {:>8}", "cell", "tau", "tps", "speedup");
+    for p in entries {
+        if let Ok(c) = lk_spec::eval::read_cell(&p) {
+            let name = p.file_stem().unwrap().to_string_lossy();
+            println!(
+                "{:<64} {:>6.3} {:>8.1} {:>8.2}",
+                name, c.tau, c.spec_tps, c.speedup
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,216 @@
+//! Parsed view of `artifacts/manifest.json` — the packing contract
+//! between the AOT layer (python/compile/aot.py) and this runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::DType;
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub group: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<TensorSpec>, // names empty (positional)
+}
+
+#[derive(Debug, Clone)]
+pub struct TargetSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_experts: usize,
+    pub has_mtp: bool,
+    pub max_seq: usize,
+    pub feat_dim: usize,
+    pub params: Vec<TensorSpec>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct DraftSpec {
+    pub name: String,
+    pub arch: String,
+    pub target: String,
+    pub k_heads: usize,
+    pub draft_vocab: usize,
+    pub is_recurrent: bool,
+    pub fuse_dim: usize,
+    pub own_head: bool,
+    pub params: Vec<TensorSpec>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub k_heads: usize,
+    pub span: usize,
+    pub train_batch: usize,
+    pub prompt_len: usize,
+    pub verify_t: usize,
+    pub serve_batches: Vec<usize>,
+    pub draft_vocab: usize,
+    pub targets: BTreeMap<String, TargetSpec>,
+    pub drafts: BTreeMap<String, DraftSpec>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    let mut out = Vec::new();
+    for item in j.as_arr().context("expected array of tensor specs")? {
+        out.push(TensorSpec {
+            name: item.req_str("name")?.to_string(),
+            shape: item
+                .get("shape")
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: DType::parse(item.req_str("dtype")?)?,
+        });
+    }
+    Ok(out)
+}
+
+fn entry_spec(j: &Json) -> Result<EntrySpec> {
+    let mut inputs = Vec::new();
+    for item in j.get("inputs").as_arr().context("inputs")? {
+        inputs.push(ArgSpec {
+            group: item.req_str("group")?.to_string(),
+            shape: item
+                .get("shape")
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: DType::parse(item.req_str("dtype")?)?,
+        });
+    }
+    let mut outputs = Vec::new();
+    for item in j.get("outputs").as_arr().context("outputs")? {
+        outputs.push(TensorSpec {
+            name: String::new(),
+            shape: item
+                .get("shape")
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: DType::parse(item.req_str("dtype")?)?,
+        });
+    }
+    Ok(EntrySpec {
+        file: j.req_str("file")?.to_string(),
+        inputs,
+        outputs,
+    })
+}
+
+fn entries_map(j: &Json) -> Result<BTreeMap<String, EntrySpec>> {
+    let mut out = BTreeMap::new();
+    for (name, e) in j.as_obj().context("entries")? {
+        out.insert(name.clone(), entry_spec(e)?);
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        if j.req_usize("version")? != 1 {
+            bail!("unsupported manifest version");
+        }
+        let mut targets = BTreeMap::new();
+        for (name, t) in j.get("targets").as_obj().context("targets")? {
+            targets.insert(
+                name.clone(),
+                TargetSpec {
+                    name: name.clone(),
+                    vocab: t.req_usize("vocab")?,
+                    d_model: t.req_usize("d_model")?,
+                    n_layers: t.req_usize("n_layers")?,
+                    n_heads: t.req_usize("n_heads")?,
+                    head_dim: t.req_usize("head_dim")?,
+                    n_experts: t.req_usize("n_experts")?,
+                    has_mtp: t.get("has_mtp").as_bool().unwrap_or(false),
+                    max_seq: t.req_usize("max_seq")?,
+                    feat_dim: t.req_usize("feat_dim")?,
+                    params: tensor_specs(t.get("params"))?,
+                    entries: entries_map(t.get("entries"))?,
+                },
+            );
+        }
+        let mut drafts = BTreeMap::new();
+        for (name, d) in j.get("drafts").as_obj().context("drafts")? {
+            drafts.insert(
+                name.clone(),
+                DraftSpec {
+                    name: name.clone(),
+                    arch: d.req_str("arch")?.to_string(),
+                    target: d.req_str("target")?.to_string(),
+                    k_heads: d.req_usize("k_heads")?,
+                    draft_vocab: d.req_usize("draft_vocab")?,
+                    is_recurrent: d.get("is_recurrent").as_bool().unwrap_or(false),
+                    fuse_dim: d.req_usize("fuse_dim")?,
+                    own_head: d.get("own_head").as_bool().unwrap_or(true),
+                    params: tensor_specs(d.get("params"))?,
+                    entries: entries_map(d.get("entries"))?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            vocab: j.req_usize("vocab")?,
+            k_heads: j.req_usize("k_heads")?,
+            span: j.req_usize("span")?,
+            train_batch: j.req_usize("train_batch")?,
+            prompt_len: j.req_usize("prompt_len")?,
+            verify_t: j.req_usize("verify_t")?,
+            serve_batches: j
+                .get("serve_batches")
+                .as_arr()
+                .context("serve_batches")?
+                .iter()
+                .map(|b| b.as_usize().unwrap_or(0))
+                .collect(),
+            draft_vocab: j.req_usize("draft_vocab")?,
+            targets,
+            drafts,
+        })
+    }
+
+    pub fn target(&self, name: &str) -> Result<&TargetSpec> {
+        self.targets
+            .get(name)
+            .with_context(|| format!("unknown target '{name}'"))
+    }
+
+    pub fn draft(&self, name: &str) -> Result<&DraftSpec> {
+        self.drafts
+            .get(name)
+            .with_context(|| format!("unknown draft '{name}'"))
+    }
+}

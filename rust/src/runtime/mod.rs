@@ -1,0 +1,220 @@
+//! XLA/PJRT runtime: loads AOT artifacts (HLO text) and executes them.
+//!
+//! One `Runtime` owns the PJRT CPU client and a lazy executable cache
+//! keyed by artifact file. All I/O crosses the boundary as `HostTensor`
+//! (packing in `pack.rs`); callers never touch `xla::Literal` directly.
+//!
+//! The pattern follows /opt/xla-example/load_hlo: HLO text →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `compile` →
+//! `execute`, with `return_tuple=True` lowering so every entry returns a
+//! single tuple literal that is decomposed positionally against the
+//! manifest's output spec.
+
+pub mod manifest;
+pub mod pack;
+
+pub use manifest::{ArgSpec, DraftSpec, EntrySpec, Manifest, TargetSpec, TensorSpec};
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::HostTensor;
+
+/// A compiled entrypoint plus its manifest spec.
+pub struct Executable {
+    pub name: String,
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// cumulative execution stats (for the perf pass)
+    pub calls: std::cell::Cell<u64>,
+    pub exec_ns: std::cell::Cell<u64>,
+}
+
+impl Executable {
+    /// Execute with device buffers (the hot path). Parameters live as
+    /// cached buffers across calls; only dynamic inputs are uploaded.
+    ///
+    /// Output handling is deliberately SYNCHRONOUS (`to_literal_sync` on
+    /// the result tuple): the upstream `execute` entrypoint leaks every
+    /// input device buffer (`buffer.release()` without a matching free —
+    /// see xla_rs.cc), and un-awaited async executions additionally pile
+    /// up retained state. Managing input buffers ourselves via
+    /// `execute_b` and forcing completion before returning keeps the
+    /// process at a flat RSS (verified by the §Perf leak probes).
+    pub fn run_bufs(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            args.len() == self.spec.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.name,
+            self.spec.inputs.len(),
+            args.len()
+        );
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        self.calls.set(self.calls.get() + 1);
+        self.exec_ns
+            .set(self.exec_ns.get() + t0.elapsed().as_nanos() as u64);
+        tuple
+            .to_tuple()
+            .with_context(|| format!("{}: untupling", self.name))
+    }
+
+    /// Upload a literal to a device buffer on this executable's client.
+    pub fn buffer(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.exe
+            .client()
+            .buffer_from_host_literal(None, lit)
+            .with_context(|| format!("{}: uploading input", self.name))
+    }
+
+    /// Execute with literal inputs (uploads fresh buffers per call).
+    pub fn run_lits(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs: Vec<xla::PjRtBuffer> =
+            args.iter().map(|l| self.buffer(l)).collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.run_bufs(&refs)
+    }
+
+    /// Fetch output `idx` of a `run_*` result as a host tensor.
+    pub fn output_host(&self, outs: &[xla::Literal], idx: usize) -> Result<HostTensor> {
+        pack::from_literal(&outs[idx], &self.spec.outputs[idx], &self.name)
+    }
+
+    /// Execute with host tensors; returns outputs per the manifest spec.
+    /// (Training path — full shape validation, host round-trip.)
+    pub fn run(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = &self.spec;
+        anyhow::ensure!(
+            args.len() == spec.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.name,
+            spec.inputs.len(),
+            args.len()
+        );
+        for (i, (a, s)) in args.iter().zip(&spec.inputs).enumerate() {
+            anyhow::ensure!(
+                a.shape == s.shape && a.dtype == s.dtype,
+                "{}: input {i} ({}) mismatch: got {:?} {:?}, want {:?} {:?}",
+                self.name,
+                s.group,
+                a.dtype,
+                a.shape,
+                s.dtype,
+                s.shape
+            );
+        }
+        let literals: Vec<xla::Literal> =
+            args.iter().map(pack::to_literal).collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        let outs = self.run_lits(&refs)?;
+        outs.iter()
+            .zip(&spec.outputs)
+            .map(|(lit, ospec)| pack::from_literal(lit, ospec, &self.name))
+            .collect()
+    }
+}
+
+/// PJRT client + executable cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+    pub compile_ns: std::cell::Cell<u64>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)
+            .with_context(|| format!("loading manifest from {}", artifacts_dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: RefCell::new(BTreeMap::new()),
+            compile_ns: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Load (compile) one entry, memoized by artifact file name.
+    pub fn load(&self, spec: &EntrySpec, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(&spec.file) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.compile_ns
+            .set(self.compile_ns.get() + t0.elapsed().as_nanos() as u64);
+        crate::debug_log!(
+            "compiled {} in {:.0} ms",
+            spec.file,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        let e = Rc::new(Executable {
+            name: name.to_string(),
+            spec: spec.clone(),
+            exe,
+            calls: std::cell::Cell::new(0),
+            exec_ns: std::cell::Cell::new(0),
+        });
+        self.cache.borrow_mut().insert(spec.file.clone(), e.clone());
+        Ok(e)
+    }
+
+    /// Upload a literal to a device buffer (engine state/param caching).
+    pub fn to_buffer(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .context("uploading buffer")
+    }
+
+    /// Convenience: load a target entry by (target, entry) names.
+    pub fn target_entry(&self, target: &str, entry: &str) -> Result<Rc<Executable>> {
+        let t = self.manifest.target(target)?;
+        let spec = t
+            .entries
+            .get(entry)
+            .with_context(|| format!("target {target} has no entry '{entry}'"))?;
+        self.load(spec, &format!("tgt:{target}:{entry}"))
+    }
+
+    /// Convenience: load a draft entry by (draft, entry) names.
+    pub fn draft_entry(&self, draft: &str, entry: &str) -> Result<Rc<Executable>> {
+        let d = self.manifest.draft(draft)?;
+        let spec = d
+            .entries
+            .get(entry)
+            .with_context(|| format!("draft {draft} has no entry '{entry}'"))?;
+        self.load(spec, &format!("dr:{draft}:{entry}"))
+    }
+
+    /// Execution-time accounting across all cached executables (perf pass).
+    pub fn exec_report(&self) -> Vec<(String, u64, f64)> {
+        let mut rows: Vec<(String, u64, f64)> = self
+            .cache
+            .borrow()
+            .values()
+            .map(|e| (e.name.clone(), e.calls.get(), e.exec_ns.get() as f64 / 1e6))
+            .filter(|(_, c, _)| *c > 0)
+            .collect();
+        rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        rows
+    }
+}

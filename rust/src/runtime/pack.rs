@@ -1,0 +1,66 @@
+//! HostTensor <-> xla::Literal packing.
+
+use anyhow::{bail, Context, Result};
+
+use super::TensorSpec;
+use crate::tensor::{DType, HostTensor};
+
+fn elem(d: DType) -> xla::ElementType {
+    match d {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+        DType::U32 => xla::ElementType::U32,
+    }
+}
+
+pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(elem(t.dtype), &t.shape, &t.data)
+        .context("creating literal")
+}
+
+pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec, ctx: &str) -> Result<HostTensor> {
+    let n: usize = spec.shape.iter().product();
+    Ok(match spec.dtype {
+        DType::F32 => {
+            let mut buf = vec![0f32; n];
+            lit.copy_raw_to(&mut buf)
+                .with_context(|| format!("{ctx}: copying f32 output"))?;
+            HostTensor::from_f32(&spec.shape, &buf)
+        }
+        DType::I32 => {
+            let mut buf = vec![0i32; n];
+            lit.copy_raw_to(&mut buf)
+                .with_context(|| format!("{ctx}: copying i32 output"))?;
+            HostTensor::from_i32(&spec.shape, &buf)
+        }
+        DType::U32 => {
+            let mut buf = vec![0u32; n];
+            lit.copy_raw_to(&mut buf)
+                .with_context(|| format!("{ctx}: copying u32 output"))?;
+            HostTensor::from_u32(&spec.shape, &buf)
+        }
+    })
+}
+
+/// Decompose a tuple literal into host tensors per the output spec.
+pub fn from_tuple(
+    tuple: xla::Literal,
+    outputs: &[TensorSpec],
+    ctx: &str,
+) -> Result<Vec<HostTensor>> {
+    let parts = tuple
+        .to_tuple()
+        .with_context(|| format!("{ctx}: untupling"))?;
+    if parts.len() != outputs.len() {
+        bail!(
+            "{ctx}: expected {} outputs, tuple has {}",
+            outputs.len(),
+            parts.len()
+        );
+    }
+    parts
+        .iter()
+        .zip(outputs)
+        .map(|(lit, spec)| from_literal(lit, spec, ctx))
+        .collect()
+}

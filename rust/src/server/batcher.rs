@@ -1,0 +1,161 @@
+//! Request admission & batching policy (pure logic — unit-testable
+//! without PJRT).
+//!
+//! The engine executes lockstep groups at the lowered batch buckets
+//! (manifest `serve_batches`, e.g. {1, 4}). The batcher accumulates
+//! queued requests and decides when to form a group: as soon as a full
+//! bucket is available, or when the oldest request has waited longer
+//! than `max_wait`, whichever comes first — the standard
+//! latency/throughput trade of continuous batching front-ends.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub buckets: Vec<usize>,
+    pub max_wait: Duration,
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            buckets: vec![1, 4],
+            max_wait: Duration::from_millis(20),
+            queue_cap: 256,
+        }
+    }
+}
+
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    queue: VecDeque<Pending<T>>,
+    pub rejected: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(!cfg.buckets.is_empty());
+        let mut cfg = cfg;
+        cfg.buckets.sort_unstable();
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+            rejected: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Admit a request; Err(payload) when the queue is full (backpressure).
+    pub fn push(&mut self, payload: T) -> Result<(), T> {
+        if self.queue.len() >= self.cfg.queue_cap {
+            self.rejected += 1;
+            return Err(payload);
+        }
+        self.queue.push_back(Pending {
+            payload,
+            enqueued: Instant::now(),
+        });
+        Ok(())
+    }
+
+    fn max_bucket(&self) -> usize {
+        *self.cfg.buckets.last().unwrap()
+    }
+
+    /// Bucket that fits `n` requests best (smallest bucket >= n, else max).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        *self
+            .cfg
+            .buckets
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or_else(|| self.cfg.buckets.last().unwrap())
+    }
+
+    /// Pop the next group to run, or None to keep waiting.
+    ///
+    /// Policy: run when a full max-bucket is queued; otherwise run
+    /// whatever is queued once the oldest request exceeded max_wait.
+    pub fn next_group(&mut self, now: Instant) -> Option<Vec<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.max_bucket();
+        let stale = now.duration_since(self.queue[0].enqueued) >= self.cfg.max_wait;
+        if !full && !stale {
+            return None;
+        }
+        let n = self.queue.len().min(self.max_bucket());
+        Some(self.queue.drain(..n).map(|p| p.payload).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_wait_ms: u64) -> BatcherConfig {
+        BatcherConfig {
+            buckets: vec![1, 4],
+            max_wait: Duration::from_millis(max_wait_ms),
+            queue_cap: 4,
+        }
+    }
+
+    #[test]
+    fn full_bucket_dispatches_immediately() {
+        let mut b = Batcher::new(cfg(1000));
+        for i in 0..4 {
+            b.push(i).unwrap();
+        }
+        let g = b.next_group(Instant::now()).unwrap();
+        assert_eq!(g, vec![0, 1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn partial_waits_then_flushes() {
+        let mut b = Batcher::new(cfg(0)); // max_wait = 0 -> immediate
+        b.push(7).unwrap();
+        let g = b.next_group(Instant::now()).unwrap();
+        assert_eq!(g, vec![7]);
+
+        let mut b = Batcher::new(cfg(10_000));
+        b.push(7).unwrap();
+        assert!(b.next_group(Instant::now()).is_none(), "should wait");
+    }
+
+    #[test]
+    fn backpressure_rejects_over_cap() {
+        let mut b = Batcher::new(cfg(1000));
+        for i in 0..4 {
+            b.push(i).unwrap();
+        }
+        assert_eq!(b.push(99), Err(99));
+        assert_eq!(b.rejected, 1);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let b: Batcher<u32> = Batcher::new(cfg(0));
+        assert_eq!(b.bucket_for(1), 1);
+        assert_eq!(b.bucket_for(2), 4);
+        assert_eq!(b.bucket_for(4), 4);
+        assert_eq!(b.bucket_for(9), 4);
+    }
+}

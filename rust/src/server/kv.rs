@@ -1,0 +1,166 @@
+//! KV-cache management.
+//!
+//! The engine keeps each decode group's caches PACKED in the batched
+//! layout the executables expect (target kv [L,2,B,H,Smax,Dh], draft kv
+//! [2,B,H,Smax,Dh]); a sequence's cache is a batch ROW. Steady-state
+//! rounds therefore move zero cache bytes on the host — the tensors flow
+//! executable-to-executable — and only group membership changes (a
+//! request joining/leaving under continuous batching) pay one row copy.
+//!
+//! `SlotMap` tracks row occupancy; `copy_row` is the strided row mover.
+
+use anyhow::Result;
+
+use crate::tensor::HostTensor;
+
+/// Copy batch row `src_b` of `src` into row `dst_b` of `dst`, where the
+/// batch dimension is `axis` in both tensors (all other dims equal).
+pub fn copy_row(
+    dst: &mut HostTensor,
+    dst_b: usize,
+    src: &HostTensor,
+    src_b: usize,
+    axis: usize,
+) -> Result<()> {
+    anyhow::ensure!(dst.dtype == src.dtype, "dtype mismatch");
+    anyhow::ensure!(
+        dst.shape.len() == src.shape.len(),
+        "rank mismatch {:?} vs {:?}",
+        dst.shape,
+        src.shape
+    );
+    for (i, (&d, &s)) in dst.shape.iter().zip(&src.shape).enumerate() {
+        if i != axis {
+            anyhow::ensure!(d == s, "dim {i} mismatch {:?} vs {:?}", dst.shape, src.shape);
+        }
+    }
+    let db = dst.shape[axis];
+    let sb = src.shape[axis];
+    anyhow::ensure!(dst_b < db && src_b < sb, "row out of range");
+    let outer: usize = dst.shape[..axis].iter().product();
+    let inner: usize = dst.shape[axis + 1..].iter().product::<usize>() * dst.dtype.size();
+    for o in 0..outer {
+        let doff = (o * db + dst_b) * inner;
+        let soff = (o * sb + src_b) * inner;
+        dst.data[doff..doff + inner].copy_from_slice(&src.data[soff..soff + inner]);
+    }
+    Ok(())
+}
+
+/// Row-slot occupancy for one decode group (continuous batching).
+#[derive(Debug, Clone)]
+pub struct SlotMap {
+    /// slot -> sequence id (None = free / padding row)
+    slots: Vec<Option<u64>>,
+    high_water: usize,
+}
+
+impl SlotMap {
+    pub fn new(capacity: usize) -> SlotMap {
+        SlotMap {
+            slots: vec![None; capacity],
+            high_water: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.occupied() == self.slots.len()
+    }
+
+    pub fn alloc(&mut self, seq_id: u64) -> Option<usize> {
+        let slot = self.slots.iter().position(|s| s.is_none())?;
+        self.slots[slot] = Some(seq_id);
+        self.high_water = self.high_water.max(self.occupied());
+        Some(slot)
+    }
+
+    pub fn free(&mut self, seq_id: u64) -> Option<usize> {
+        let slot = self.slots.iter().position(|s| *s == Some(seq_id))?;
+        self.slots[slot] = None;
+        Some(slot)
+    }
+
+    pub fn slot_of(&self, seq_id: u64) -> Option<usize> {
+        self.slots.iter().position(|s| *s == Some(seq_id))
+    }
+
+    pub fn iter_occupied(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.map(|id| (i, id)))
+    }
+
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    #[test]
+    fn copy_row_middle_axis() {
+        // [2, 3, 2] with batch axis 1
+        let src = HostTensor::from_f32(
+            &[2, 3, 2],
+            &[
+                0., 1., 10., 11., 20., 21., //
+                100., 101., 110., 111., 120., 121.,
+            ],
+        );
+        let mut dst = HostTensor::zeros(DType::F32, &[2, 4, 2]);
+        copy_row(&mut dst, 3, &src, 1, 1).unwrap();
+        let d = dst.as_f32();
+        assert_eq!(&d[6..8], &[10., 11.]); // outer 0, row 3
+        assert_eq!(&d[14..16], &[110., 111.]); // outer 1, row 3
+        assert!(d[..6].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn copy_row_axis0_roundtrip() {
+        let src = HostTensor::from_i32(&[2, 3], &[1, 2, 3, 4, 5, 6]);
+        let mut dst = HostTensor::zeros(DType::I32, &[1, 3]);
+        copy_row(&mut dst, 0, &src, 1, 0).unwrap();
+        assert_eq!(dst.as_i32(), vec![4, 5, 6]);
+        let mut back = HostTensor::zeros(DType::I32, &[2, 3]);
+        copy_row(&mut back, 1, &dst, 0, 0).unwrap();
+        assert_eq!(&back.as_i32()[3..], &[4, 5, 6]);
+    }
+
+    #[test]
+    fn copy_row_rejects_mismatch() {
+        let src = HostTensor::zeros(DType::F32, &[2, 3]);
+        let mut dst = HostTensor::zeros(DType::F32, &[2, 4]);
+        assert!(copy_row(&mut dst, 0, &src, 0, 0).is_err());
+        let mut dst2 = HostTensor::zeros(DType::I32, &[2, 3]);
+        assert!(copy_row(&mut dst2, 0, &src, 0, 0).is_err());
+    }
+
+    #[test]
+    fn slotmap_alloc_free() {
+        let mut m = SlotMap::new(4);
+        assert_eq!(m.alloc(10), Some(0));
+        assert_eq!(m.alloc(11), Some(1));
+        assert_eq!(m.occupied(), 2);
+        assert_eq!(m.free(10), Some(0));
+        assert_eq!(m.alloc(12), Some(0)); // reuses freed slot
+        assert_eq!(m.slot_of(12), Some(0));
+        assert_eq!(m.slot_of(99), None);
+        assert_eq!(m.high_water(), 2);
+        m.alloc(13);
+        m.alloc(14);
+        assert!(m.is_full());
+        assert_eq!(m.alloc(15), None);
+    }
+}

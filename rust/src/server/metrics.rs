@@ -1,0 +1,84 @@
+//! Engine metrics: counters + latency distributions, with a
+//! Prometheus-style text exposition for scraping/debugging.
+
+use crate::util::{OnlineStats, Percentiles};
+
+use super::engine::RequestResult;
+
+#[derive(Default)]
+pub struct EngineMetrics {
+    pub requests: u64,
+    pub tokens_out: u64,
+    pub rounds: u64,
+    pub drafted: u64,
+    pub accepted: u64,
+    pub latency_ms: Percentiles,
+    pub tau: OnlineStats,
+}
+
+impl EngineMetrics {
+    pub fn observe_request(&mut self, r: &RequestResult) {
+        self.requests += 1;
+        self.tokens_out += r.tokens.len() as u64;
+        self.rounds += r.rounds;
+        self.drafted += r.stats.drafted.iter().sum::<u64>();
+        self.accepted += r.stats.accepted.iter().sum::<u64>();
+        self.latency_ms.push(r.latency_ms);
+        self.tau.push(r.stats.tau());
+    }
+
+    pub fn acceptance_ratio(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Prometheus-style text block.
+    pub fn render(&mut self, engine: &str) -> String {
+        let mut out = String::new();
+        let mut line = |name: &str, v: f64| {
+            out.push_str(&format!("lkspec_{name}{{engine=\"{engine}\"}} {v}\n"));
+        };
+        line("requests_total", self.requests as f64);
+        line("tokens_out_total", self.tokens_out as f64);
+        line("rounds_total", self.rounds as f64);
+        line("drafted_total", self.drafted as f64);
+        line("accepted_total", self.accepted as f64);
+        line("acceptance_ratio", self.acceptance_ratio());
+        line("tau_mean", self.tau.mean());
+        if !self.latency_ms.is_empty() {
+            line("latency_ms_p50", self.latency_ms.pct(50.0));
+            line("latency_ms_p95", self.latency_ms.pct(95.0));
+            line("latency_ms_p99", self.latency_ms.pct(99.0));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::accept::AcceptanceStats;
+
+    #[test]
+    fn observe_and_render() {
+        let mut m = EngineMetrics::default();
+        let mut stats = AcceptanceStats::new(4);
+        stats.record_round(4, 3);
+        m.observe_request(&RequestResult {
+            tokens: vec![1, 2, 3, 4],
+            stats,
+            latency_ms: 12.5,
+            rounds: 1,
+        });
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.tokens_out, 4);
+        assert_eq!(m.accepted, 3);
+        assert!((m.acceptance_ratio() - 0.75).abs() < 1e-12);
+        let text = m.render("test");
+        assert!(text.contains("lkspec_requests_total{engine=\"test\"} 1"));
+        assert!(text.contains("latency_ms_p50"));
+    }
+}

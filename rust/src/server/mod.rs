@@ -1,0 +1,20 @@
+//! Serving engine (L3): the vLLM-shaped coordination layer around the
+//! AOT-compiled target/draft executables.
+//!
+//!   * `kv`      — KV-cache slot management and batch-row packing
+//!   * `engine`  — draft-then-verify decode loop (groups of sequences in
+//!     lockstep), exact rejection sampling via `spec::sampling`, vanilla
+//!     autoregressive baseline
+//!   * `batcher` — request admission / bucket selection / slot assignment
+//!   * `router`  — thread-backed front-end with bounded queues and
+//!     backpressure
+//!   * `metrics` — engine + per-request counters, Prometheus-style text
+
+pub mod batcher;
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+pub mod router;
+
+pub use engine::{EngineOpts, RequestResult, SpecEngine};
+pub use router::{Router, RouterConfig};

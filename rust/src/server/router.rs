@@ -1,0 +1,229 @@
+//! Request router: a thread-backed front-end around one engine worker.
+//!
+//! The engine (and everything PJRT) is deliberately single-threaded and
+//! !Send, so the router owns it inside a dedicated worker thread
+//! (leader/worker shape). Clients submit requests through a bounded
+//! channel (backpressure) and receive results on per-request reply
+//! channels. The worker loop runs the batcher policy: drain the queue,
+//! group by bucket, run lockstep groups, reply.
+//!
+//! tokio is unavailable offline (DESIGN.md §2); std threads + mpsc
+//! channels implement the same event-loop shape.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::engine::RequestResult;
+
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub reply: mpsc::Sender<Result<RequestResult, String>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    pub batcher: BatcherConfig,
+    /// Poll interval of the worker loop when idle.
+    pub idle_poll: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            batcher: BatcherConfig::default(),
+            idle_poll: Duration::from_millis(1),
+        }
+    }
+}
+
+enum Msg {
+    Submit(Request),
+    Shutdown,
+}
+
+/// Client handle; cheap to clone (multiple submitters).
+pub struct Router {
+    tx: mpsc::SyncSender<Msg>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Spawn the worker. `make_engine` runs INSIDE the worker thread and
+    /// builds the engine there (PJRT types never cross threads). It
+    /// receives nothing and returns a closure that executes one group:
+    /// `run_group(prompts, max_new) -> Result<Vec<RequestResult>>`.
+    pub fn spawn<F, G>(cfg: RouterConfig, make_engine: F) -> Result<Router>
+    where
+        F: FnOnce() -> Result<G> + Send + 'static,
+        G: FnMut(&[Vec<i32>], usize) -> Result<Vec<RequestResult>>,
+    {
+        let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.batcher.queue_cap);
+        let worker = std::thread::Builder::new()
+            .name("lkspec-engine".into())
+            .spawn(move || {
+                let mut run_group = match make_engine() {
+                    Ok(g) => g,
+                    Err(e) => {
+                        // Drain & fail every request until shutdown.
+                        let msg = format!("engine init failed: {e:#}");
+                        while let Ok(m) = rx.recv() {
+                            match m {
+                                Msg::Submit(req) => {
+                                    let _ = req.reply.send(Err(msg.clone()));
+                                }
+                                Msg::Shutdown => break,
+                            }
+                        }
+                        return;
+                    }
+                };
+                let mut batcher: Batcher<Request> = Batcher::new(cfg.batcher.clone());
+                let mut shutdown = false;
+                loop {
+                    // Admit what's queued (non-blocking drain).
+                    loop {
+                        match rx.try_recv() {
+                            Ok(Msg::Submit(req)) => {
+                                if let Err(req) = batcher.push(req) {
+                                    let _ = req
+                                        .reply
+                                        .send(Err("queue full (backpressure)".into()));
+                                }
+                            }
+                            Ok(Msg::Shutdown) => {
+                                shutdown = true;
+                                break;
+                            }
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                shutdown = true;
+                                break;
+                            }
+                        }
+                    }
+                    if let Some(group) = batcher.next_group(Instant::now()) {
+                        let prompts: Vec<Vec<i32>> =
+                            group.iter().map(|r| r.prompt.clone()).collect();
+                        let max_new =
+                            group.iter().map(|r| r.max_new).max().unwrap_or(16);
+                        match run_group(&prompts, max_new) {
+                            Ok(results) => {
+                                for (req, res) in group.into_iter().zip(results) {
+                                    let _ = req.reply.send(Ok(res));
+                                }
+                            }
+                            Err(e) => {
+                                let msg = format!("engine error: {e:#}");
+                                for req in group {
+                                    let _ = req.reply.send(Err(msg.clone()));
+                                }
+                            }
+                        }
+                        continue; // check queue again immediately
+                    }
+                    if shutdown && batcher.is_empty() {
+                        break;
+                    }
+                    std::thread::sleep(cfg.idle_poll);
+                }
+            })
+            .context("spawning engine worker")?;
+        Ok(Router {
+            tx,
+            worker: Some(worker),
+        })
+    }
+
+    /// Submit a request; returns the reply receiver.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+    ) -> Result<mpsc::Receiver<Result<RequestResult, String>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(Request {
+                prompt,
+                max_new,
+                reply,
+            }))
+            .context("router worker gone")?;
+        Ok(rx)
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::accept::AcceptanceStats;
+
+    /// Router logic is engine-agnostic: test with a stub group runner.
+    #[test]
+    fn routes_and_replies_in_order() {
+        let cfg = RouterConfig {
+            batcher: BatcherConfig {
+                buckets: vec![1, 4],
+                max_wait: Duration::from_millis(1),
+                queue_cap: 16,
+            },
+            idle_poll: Duration::from_micros(200),
+        };
+        let router = Router::spawn(cfg, || {
+            Ok(move |prompts: &[Vec<i32>], max_new: usize| {
+                Ok(prompts
+                    .iter()
+                    .map(|p| RequestResult {
+                        tokens: p.iter().map(|t| t + 1000).take(max_new).collect(),
+                        stats: AcceptanceStats::new(4),
+                        latency_ms: 0.1,
+                        rounds: 1,
+                    })
+                    .collect())
+            })
+        })
+        .unwrap();
+        let rx1 = router.submit(vec![1, 2], 8).unwrap();
+        let rx2 = router.submit(vec![3, 4], 8).unwrap();
+        let r1 = rx1.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        let r2 = rx2.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(r1.tokens, vec![1001, 1002]);
+        assert_eq!(r2.tokens, vec![1003, 1004]);
+        router.shutdown();
+    }
+
+    #[test]
+    fn engine_init_failure_propagates() {
+        let router = Router::spawn(RouterConfig::default(), || {
+            Err::<fn(&[Vec<i32>], usize) -> Result<Vec<RequestResult>>, _>(anyhow::anyhow!(
+                "boom"
+            ))
+        })
+        .unwrap();
+        let rx = router.submit(vec![1, 2], 4).unwrap();
+        let res = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(res.is_err());
+        assert!(res.unwrap_err().contains("boom"));
+        router.shutdown();
+    }
+}

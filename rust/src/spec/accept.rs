@@ -1,0 +1,132 @@
+//! Acceptance bookkeeping: per-position acceptance rates and the paper's
+//! primary metric τ = K · (#accepted / #drafted) + 1 (§5.5).
+
+/// Accumulates accept/draft counts per draft position plus round shapes.
+#[derive(Clone, Debug)]
+pub struct AcceptanceStats {
+    pub k: usize,
+    /// drafted[i] / accepted[i]: counts at draft position i (0-based).
+    pub drafted: Vec<u64>,
+    pub accepted: Vec<u64>,
+    /// Histogram of per-round accepted-prefix lengths (0..=K).
+    pub prefix_hist: Vec<u64>,
+    pub rounds: u64,
+    pub generated_tokens: u64,
+}
+
+impl AcceptanceStats {
+    pub fn new(k: usize) -> Self {
+        AcceptanceStats {
+            k,
+            drafted: vec![0; k],
+            accepted: vec![0; k],
+            prefix_hist: vec![0; k + 1],
+            rounds: 0,
+            generated_tokens: 0,
+        }
+    }
+
+    /// Record one verification round: `n_drafted` tokens proposed
+    /// (normally K; fewer near a length cap), accepted prefix length
+    /// `n_accepted` <= n_drafted.
+    pub fn record_round(&mut self, n_drafted: usize, n_accepted: usize) {
+        assert!(n_accepted <= n_drafted && n_drafted <= self.k);
+        for i in 0..n_drafted {
+            self.drafted[i] += 1;
+        }
+        for i in 0..n_accepted {
+            self.accepted[i] += 1;
+        }
+        self.prefix_hist[n_accepted] += 1;
+        self.rounds += 1;
+        // accepted prefix + the bonus/replacement token
+        self.generated_tokens += n_accepted as u64 + 1;
+    }
+
+    /// τ with the paper's convention: K × acceptance-ratio + 1 (the +1 is
+    /// the bonus token always emitted per round).
+    pub fn tau(&self) -> f64 {
+        let drafted: u64 = self.drafted.iter().sum();
+        let accepted: u64 = self.accepted.iter().sum();
+        if drafted == 0 {
+            return 1.0;
+        }
+        self.k as f64 * (accepted as f64 / drafted as f64) + 1.0
+    }
+
+    /// Mean accepted tokens per round including the bonus (equals τ when
+    /// every round drafts exactly K).
+    pub fn tokens_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            return 1.0;
+        }
+        self.generated_tokens as f64 / self.rounds as f64
+    }
+
+    /// Per-position conditional acceptance rate α_i.
+    pub fn alpha_per_position(&self) -> Vec<f64> {
+        (0..self.k)
+            .map(|i| {
+                if self.drafted[i] == 0 {
+                    0.0
+                } else {
+                    self.accepted[i] as f64 / self.drafted[i] as f64
+                }
+            })
+            .collect()
+    }
+
+    pub fn merge(&mut self, other: &AcceptanceStats) {
+        assert_eq!(self.k, other.k);
+        for i in 0..self.k {
+            self.drafted[i] += other.drafted[i];
+            self.accepted[i] += other.accepted[i];
+        }
+        for i in 0..=self.k {
+            self.prefix_hist[i] += other.prefix_hist[i];
+        }
+        self.rounds += other.rounds;
+        self.generated_tokens += other.generated_tokens;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_formula() {
+        let mut s = AcceptanceStats::new(4);
+        // two rounds: accept 4/4 then 2/4 -> ratio 6/8, tau = 4*0.75+1 = 4
+        s.record_round(4, 4);
+        s.record_round(4, 2);
+        assert!((s.tau() - 4.0).abs() < 1e-12);
+        assert_eq!(s.generated_tokens, 4 + 1 + 2 + 1);
+        assert_eq!(s.prefix_hist, vec![0, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn alpha_positionwise_monotone_counts() {
+        let mut s = AcceptanceStats::new(3);
+        s.record_round(3, 1);
+        s.record_round(3, 3);
+        s.record_round(3, 0);
+        let a = s.alpha_per_position();
+        assert_eq!(a, vec![2.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0]);
+        // accepted counts can never exceed drafted
+        for i in 0..3 {
+            assert!(s.accepted[i] <= s.drafted[i]);
+        }
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = AcceptanceStats::new(2);
+        a.record_round(2, 1);
+        let mut b = AcceptanceStats::new(2);
+        b.record_round(2, 2);
+        a.merge(&b);
+        assert_eq!(a.rounds, 2);
+        assert!((a.tau() - (2.0 * (3.0 / 4.0) + 1.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,19 @@
+//! Speculative-decoding core: the sampling and verification arithmetic
+//! (Leviathan et al. 2023) plus the paper-specific analysis utilities.
+//!
+//! Submodules:
+//!  * `sampling`  — temperature softmax, categorical / greedy / residual
+//!    sampling, the EXACT rejection rule and the broken greedy-draft rule
+//!    (Appendix D ablation)
+//!  * `accept`    — acceptance bookkeeping: per-position rates, τ
+//!  * `gradients` — closed-form ∇KL / ∇TV / ∇L_LK^α on host, used by the
+//!    Table 3 bench and cross-checked against finite differences in tests
+//!  * `overlap`   — 1-D Gaussian/mixture overlap machinery for Figure 2
+
+pub mod accept;
+pub mod gradients;
+pub mod overlap;
+pub mod sampling;
+
+pub use accept::AcceptanceStats;
+pub use sampling::{softmax_t, SamplingMode};

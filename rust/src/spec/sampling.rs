@@ -1,0 +1,289 @@
+//! Sampling & the speculative rejection rule.
+//!
+//! The serving engine receives LOGITS from the XLA executables; every
+//! distributional decision (temperature, greedy-vs-stochastic, the accept
+//! draw, residual resampling) is made here, in one audited place. This is
+//! the piece the paper had to patch vLLM for (§5.4 / Appendix D): vLLM
+//! sampled drafts greedily while verifying against temperature-scaled
+//! targets, silently deflating acceptance at T=1. Both behaviours are
+//! implemented; `SamplingMode::GreedyDraft` reproduces the bug for the
+//! Appendix D ablation.
+
+use crate::util::Pcg64;
+
+/// How drafts are sampled and verified.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplingMode {
+    /// T=0 everywhere: draft argmax, accept iff target argmax agrees.
+    Greedy,
+    /// Exact lossless speculative sampling at the given temperature:
+    /// draft x ~ q, accept w.p. min(1, p(x)/q(x)), resample from
+    /// normalized max(p-q, 0) on rejection. Preserves the target
+    /// distribution exactly (property-tested).
+    Stochastic,
+    /// Appendix D: draft argmax (q(x) treated as 1) but stochastic accept
+    /// against temperature-scaled p — the upstream-vLLM bug.
+    GreedyDraft,
+}
+
+impl SamplingMode {
+    pub fn parse(s: &str) -> anyhow::Result<SamplingMode> {
+        match s {
+            "greedy" | "t0" => Ok(SamplingMode::Greedy),
+            "stochastic" | "t1" => Ok(SamplingMode::Stochastic),
+            "greedy-draft" => Ok(SamplingMode::GreedyDraft),
+            other => anyhow::bail!("unknown sampling mode '{other}'"),
+        }
+    }
+}
+
+/// Temperature softmax. T=0 is handled by callers via argmax.
+pub fn softmax_t(logits: &[f32], temp: f32) -> Vec<f32> {
+    debug_assert!(temp > 0.0);
+    let inv = 1.0 / temp;
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut out: Vec<f32> = logits.iter().map(|&z| ((z - m) * inv).exp()).collect();
+    let sum: f32 = out.iter().sum();
+    let norm = 1.0 / sum;
+    for p in &mut out {
+        *p *= norm;
+    }
+    out
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sample an index from a normalized distribution via inverse CDF.
+pub fn sample_categorical(rng: &mut Pcg64, probs: &[f32]) -> usize {
+    let mut u = rng.uniform() as f32;
+    for (i, &p) in probs.iter().enumerate() {
+        u -= p;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    // Floating-point slack: return the last token with nonzero mass.
+    probs
+        .iter()
+        .rposition(|&p| p > 0.0)
+        .unwrap_or(probs.len() - 1)
+}
+
+/// Outcome of verifying one drafted token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Accept,
+    /// Rejected; the replacement token sampled from the residual.
+    Reject { replacement: i32 },
+}
+
+/// The exact speculative rejection rule for one position.
+///
+/// * `p` — target distribution at this position (full vocab, normalized)
+/// * `q` — draft distribution over the full vocab (zeros outside the
+///   truncated draft vocabulary are fine: drafted x always has q(x) > 0)
+/// * `x` — the drafted token id
+pub fn verify_token(
+    rng: &mut Pcg64,
+    p: &[f32],
+    q: &[f32],
+    x: usize,
+    mode: SamplingMode,
+) -> Verdict {
+    match mode {
+        SamplingMode::Greedy => {
+            if argmax(p) == x {
+                Verdict::Accept
+            } else {
+                Verdict::Reject {
+                    replacement: argmax(p) as i32,
+                }
+            }
+        }
+        SamplingMode::Stochastic => {
+            let beta = if q[x] > 0.0 { (p[x] / q[x]).min(1.0) } else { 0.0 };
+            if (rng.uniform() as f32) < beta {
+                Verdict::Accept
+            } else {
+                Verdict::Reject {
+                    replacement: sample_residual(rng, p, q) as i32,
+                }
+            }
+        }
+        SamplingMode::GreedyDraft => {
+            // Upstream-vLLM bug: x is argmax(q), acceptance prob becomes
+            // min(1, p(x)/1) = p(x); on rejection upstream resamples from
+            // max(p - q, 0) with the REAL q — keep that to match.
+            let beta = p[x].min(1.0);
+            if (rng.uniform() as f32) < beta {
+                Verdict::Accept
+            } else {
+                Verdict::Reject {
+                    replacement: sample_residual(rng, p, q) as i32,
+                }
+            }
+        }
+    }
+}
+
+/// Sample from normalized max(p - q, 0); falls back to p when p == q.
+pub fn sample_residual(rng: &mut Pcg64, p: &[f32], q: &[f32]) -> usize {
+    let mut total = 0f64;
+    for i in 0..p.len() {
+        let r = p[i] - q[i];
+        if r > 0.0 {
+            total += r as f64;
+        }
+    }
+    if total <= 0.0 {
+        return sample_categorical(rng, p);
+    }
+    let mut u = rng.uniform() * total;
+    let mut last = 0;
+    for i in 0..p.len() {
+        let r = (p[i] - q[i]).max(0.0);
+        if r > 0.0 {
+            last = i;
+            u -= r as f64;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+    }
+    last
+}
+
+/// Host-side acceptance-rate computation α = Σ min(p, q) (paper eq. 1).
+pub fn acceptance_rate(p: &[f32], q: &[f32]) -> f64 {
+    p.iter()
+        .zip(q)
+        .map(|(&a, &b)| a.min(b) as f64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dist(rng: &mut Pcg64, v: usize, sharp: f32) -> Vec<f32> {
+        let logits: Vec<f32> = (0..v).map(|_| rng.normal() as f32 * sharp).collect();
+        softmax_t(&logits, 1.0)
+    }
+
+    #[test]
+    fn softmax_t_normalizes_and_sharpens() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let p1 = softmax_t(&logits, 1.0);
+        let p01 = softmax_t(&logits, 0.1);
+        assert!((p1.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p01[2] > p1[2]); // lower temperature concentrates
+    }
+
+    /// THE core invariant (Leviathan Thm. 1): speculative sampling with an
+    /// arbitrary q preserves the target distribution exactly.
+    #[test]
+    fn rejection_sampling_preserves_target() {
+        let mut rng = Pcg64::new(42, 0);
+        let v = 16;
+        let p = dist(&mut rng, v, 2.0);
+        let q = dist(&mut rng, v, 2.0);
+        let n = 300_000;
+        let mut counts = vec![0f64; v];
+        for _ in 0..n {
+            let x = sample_categorical(&mut rng, &q);
+            match verify_token(&mut rng, &p, &q, x, SamplingMode::Stochastic) {
+                Verdict::Accept => counts[x] += 1.0,
+                Verdict::Reject { replacement } => counts[replacement as usize] += 1.0,
+            }
+        }
+        for i in 0..v {
+            let emp = counts[i] / n as f64;
+            assert!(
+                (emp - p[i] as f64).abs() < 0.005,
+                "token {i}: empirical {emp:.4} vs target {:.4}",
+                p[i]
+            );
+        }
+    }
+
+    #[test]
+    fn acceptance_matches_alpha() {
+        // E[accept] over x~q must equal alpha = sum min(p, q).
+        let mut rng = Pcg64::new(7, 0);
+        let v = 12;
+        let p = dist(&mut rng, v, 1.5);
+        let q = dist(&mut rng, v, 1.5);
+        let alpha = acceptance_rate(&p, &q);
+        let n = 200_000;
+        let mut acc = 0f64;
+        for _ in 0..n {
+            let x = sample_categorical(&mut rng, &q);
+            if matches!(
+                verify_token(&mut rng, &p, &q, x, SamplingMode::Stochastic),
+                Verdict::Accept
+            ) {
+                acc += 1.0;
+            }
+        }
+        assert!(
+            (acc / n as f64 - alpha).abs() < 0.005,
+            "empirical {} vs alpha {alpha}",
+            acc / n as f64
+        );
+    }
+
+    #[test]
+    fn greedy_draft_depresses_acceptance_on_diffuse_targets() {
+        // Appendix D: with diffuse p and q = p, exact rejection accepts at
+        // rate 1 but greedy-draft accepts at only p(argmax).
+        let v = 32;
+        let p = vec![1.0 / v as f32; v];
+        let q = p.clone();
+        let mut rng = Pcg64::new(9, 0);
+        let n = 50_000;
+        let mut acc_exact = 0;
+        let mut acc_greedy = 0;
+        for _ in 0..n {
+            let x = sample_categorical(&mut rng, &q);
+            if matches!(
+                verify_token(&mut rng, &p, &q, x, SamplingMode::Stochastic),
+                Verdict::Accept
+            ) {
+                acc_exact += 1;
+            }
+            let xg = argmax(&q);
+            if matches!(
+                verify_token(&mut rng, &p, &q, xg, SamplingMode::GreedyDraft),
+                Verdict::Accept
+            ) {
+                acc_greedy += 1;
+            }
+        }
+        assert_eq!(acc_exact, n);
+        let rate = acc_greedy as f64 / n as f64;
+        assert!(rate < 0.1, "greedy-draft rate {rate} should be ~1/32");
+    }
+
+    #[test]
+    fn greedy_mode_accepts_iff_argmax_agrees() {
+        let p = vec![0.1f32, 0.7, 0.2];
+        let q = vec![0.3f32, 0.4, 0.3];
+        let mut rng = Pcg64::new(1, 0);
+        assert_eq!(
+            verify_token(&mut rng, &p, &q, 1, SamplingMode::Greedy),
+            Verdict::Accept
+        );
+        assert_eq!(
+            verify_token(&mut rng, &p, &q, 0, SamplingMode::Greedy),
+            Verdict::Reject { replacement: 1 }
+        );
+    }
+}

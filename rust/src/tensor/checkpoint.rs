@@ -1,0 +1,193 @@
+//! `.lkt` checkpoint format: named tensors + a JSON metadata blob.
+//!
+//! Layout (all integers little-endian):
+//!
+//!   magic   "LKT1" (4 bytes)
+//!   meta_len: u32, meta: JSON bytes (run config, step, seeds, ...)
+//!   count:  u32
+//!   repeated count times:
+//!     name_len: u32, name bytes (utf-8)
+//!     dtype:  u8 (0=f32, 1=i32, 2=u32)
+//!     rank:   u8
+//!     dims:   rank × u32
+//!     data:   product(dims) × 4 bytes
+//!
+//! Deliberately minimal — no compression, no alignment tricks — but with
+//! full validation on read. Tested by round-trip and corruption tests.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{DType, HostTensor};
+use crate::util::Json;
+
+const MAGIC: &[u8; 4] = b"LKT1";
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub meta: Json,
+    pub tensors: BTreeMap<String, HostTensor>,
+}
+
+impl Checkpoint {
+    pub fn new(meta: Json) -> Checkpoint {
+        Checkpoint {
+            meta,
+            tensors: BTreeMap::new(),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("checkpoint missing tensor '{name}'"))
+    }
+}
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::I32 => 1,
+        DType::U32 => 2,
+    }
+}
+
+fn code_dtype(c: u8) -> Result<DType> {
+    Ok(match c {
+        0 => DType::F32,
+        1 => DType::I32,
+        2 => DType::U32,
+        other => bail!("bad dtype code {other}"),
+    })
+}
+
+pub fn write_checkpoint(path: &Path, ckpt: &Checkpoint) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("lkt.tmp");
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(MAGIC)?;
+        let meta = ckpt.meta.to_string().into_bytes();
+        f.write_all(&(meta.len() as u32).to_le_bytes())?;
+        f.write_all(&meta)?;
+        f.write_all(&(ckpt.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &ckpt.tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&[dtype_code(t.dtype), t.shape.len() as u8])?;
+            for &d in &t.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            f.write_all(&t.data)?;
+        }
+    }
+    // Atomic replace so a crash mid-write never corrupts a checkpoint.
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+pub fn read_checkpoint(path: &Path) -> Result<Checkpoint> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not an LKT1 checkpoint", path.display());
+    }
+    let meta_len = read_u32(&mut f)? as usize;
+    if meta_len > 64 << 20 {
+        bail!("unreasonable metadata size {meta_len}");
+    }
+    let mut meta_bytes = vec![0u8; meta_len];
+    f.read_exact(&mut meta_bytes)?;
+    let meta = Json::parse(std::str::from_utf8(&meta_bytes)?)
+        .map_err(|e| anyhow::anyhow!("checkpoint metadata: {e}"))?;
+    let count = read_u32(&mut f)? as usize;
+    if count > 1 << 20 {
+        bail!("unreasonable tensor count {count}");
+    }
+    let mut tensors = BTreeMap::new();
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        if name_len > 4096 {
+            bail!("unreasonable tensor name length {name_len}");
+        }
+        let mut name_bytes = vec![0u8; name_len];
+        f.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes)?;
+        let mut hdr = [0u8; 2];
+        f.read_exact(&mut hdr)?;
+        let dtype = code_dtype(hdr[0])?;
+        let rank = hdr[1] as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        if n > 1 << 28 {
+            bail!("unreasonable tensor size {n} for '{name}'");
+        }
+        let mut data = vec![0u8; n * dtype.size()];
+        f.read_exact(&mut data)
+            .with_context(|| format!("truncated tensor data for '{name}'"))?;
+        tensors.insert(name, HostTensor { dtype, shape, data });
+    }
+    Ok(Checkpoint { meta, tensors })
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("lkt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut c = Checkpoint::new(Json::obj(vec![("step", Json::Num(7.0))]));
+        c.tensors.insert(
+            "layer/w".into(),
+            HostTensor::from_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]),
+        );
+        c.tensors
+            .insert("tokens".into(), HostTensor::from_i32(&[3], &[5, -6, 7]));
+        let path = tmpdir().join("rt.lkt");
+        write_checkpoint(&path, &c).unwrap();
+        let c2 = read_checkpoint(&path).unwrap();
+        assert_eq!(c2.meta.get("step").as_f64(), Some(7.0));
+        assert_eq!(c2.tensors.len(), 2);
+        assert_eq!(c2.get("layer/w").unwrap().as_f32(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c2.get("tokens").unwrap().as_i32(), vec![5, -6, 7]);
+        assert_eq!(c2.get("tokens").unwrap().shape, vec![3]);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let path = tmpdir().join("bad.lkt");
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(read_checkpoint(&path).is_err());
+        let mut c = Checkpoint::new(Json::Null);
+        c.tensors
+            .insert("t".into(), HostTensor::from_f32(&[4], &[0.0; 4]));
+        write_checkpoint(&path, &c).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 3); // chop tensor data
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_checkpoint(&path).is_err());
+    }
+}

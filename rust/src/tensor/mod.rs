@@ -1,0 +1,176 @@
+//! Host tensor representation and the `.lkt` checkpoint format.
+//!
+//! `HostTensor` is the bridge type between the Rust world (corpus
+//! batches, checkpoints, sampled tokens) and the XLA runtime (Literals).
+//! Conversions to/from `xla::Literal` live in `runtime::pack` so this
+//! module stays pure and unit-testable without PJRT.
+
+pub mod checkpoint;
+
+pub use checkpoint::{read_checkpoint, write_checkpoint, Checkpoint};
+
+/// Element type of a host tensor (matches the manifest dtype strings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> anyhow::Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            "uint32" => Ok(DType::U32),
+            other => anyhow::bail!("unsupported dtype '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+            DType::U32 => "uint32",
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+/// Dense row-major host tensor. Data is stored as raw little-endian bytes
+/// so checkpoint IO and literal packing are straight memcpys.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn zeros(dtype: DType, shape: &[usize]) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor {
+            dtype,
+            shape: shape.to_vec(),
+            data: vec![0u8; n * dtype.size()],
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor {
+            dtype: DType::F32,
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], values: &[i32]) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor {
+            dtype: DType::I32,
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_u32(shape: &[usize], values: &[u32]) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor {
+            dtype: DType::U32,
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::from_f32(&[], &[v])
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::from_i32(&[], &[v])
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    /// f32 view at a flat offset range (no copy of the whole tensor).
+    pub fn f32_at(&self, idx: usize) -> f32 {
+        assert_eq!(self.dtype, DType::F32);
+        let o = idx * 4;
+        f32::from_le_bytes([
+            self.data[o],
+            self.data[o + 1],
+            self.data[o + 2],
+            self.data[o + 3],
+        ])
+    }
+
+    pub fn i32_at(&self, idx: usize) -> i32 {
+        assert_eq!(self.dtype, DType::I32);
+        let o = idx * 4;
+        i32::from_le_bytes([
+            self.data[o],
+            self.data[o + 1],
+            self.data[o + 2],
+            self.data[o + 3],
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::from_f32(&[2, 3], &[1.0, -2.5, 3.0, 0.0, 5.5, -6.25]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.as_f32(), vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.25]);
+        assert_eq!(t.f32_at(4), 5.5);
+    }
+
+    #[test]
+    fn zeros_and_scalars() {
+        let z = HostTensor::zeros(DType::I32, &[4]);
+        assert_eq!(z.as_i32(), vec![0; 4]);
+        assert_eq!(HostTensor::scalar_f32(7.0).as_f32(), vec![7.0]);
+        assert_eq!(HostTensor::scalar_i32(-3).as_i32(), vec![-3]);
+    }
+}

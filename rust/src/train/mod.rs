@@ -1,0 +1,498 @@
+//! Training orchestrator (L3): drives the AOT-lowered train-step
+//! executables for target pretraining and draft distillation.
+//!
+//! The Rust side owns everything stateful: parameter/optimizer buffers,
+//! the cosine LR schedule, batching, seeding, metric logs and
+//! checkpointing. The XLA artifacts are pure functions; one draft
+//! train-step artifact serves every objective because the loss selection
+//! (weights, η, γ) is runtime data — the paper's "drop-in replacement"
+//! property made literal.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{LossSpec, TrainPreset};
+use crate::data::corpus::{Corpus, MixtureBatcher};
+use crate::data::vocab::build_vocab_map;
+use crate::runtime::{Runtime, TensorSpec};
+use crate::tensor::{read_checkpoint, write_checkpoint, Checkpoint, HostTensor};
+#[cfg(test)]
+use crate::tensor::DType;
+use crate::util::{Json, Pcg64};
+
+/// Where runs live on disk.
+pub struct RunDirs {
+    pub root: PathBuf,
+}
+
+impl RunDirs {
+    pub fn new(root: &Path) -> RunDirs {
+        RunDirs {
+            root: root.to_path_buf(),
+        }
+    }
+
+    pub fn target_ckpt(&self, target: &str) -> PathBuf {
+        self.root.join("targets").join(format!("{target}.lkt"))
+    }
+
+    pub fn draft_ckpt(&self, stem: &str) -> PathBuf {
+        self.root.join("drafts").join(format!("{stem}.lkt"))
+    }
+
+    pub fn metrics(&self, stem: &str) -> PathBuf {
+        self.root.join("metrics").join(format!("{stem}.json"))
+    }
+
+    pub fn vocab_map(&self) -> PathBuf {
+        self.root.join("vocab_map.json")
+    }
+
+    pub fn results(&self, name: &str) -> PathBuf {
+        self.root.join("results").join(format!("{name}.json"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// param pytree <-> checkpoint plumbing
+// ---------------------------------------------------------------------------
+
+/// Save ordered param tensors under their manifest names.
+pub fn params_to_checkpoint(
+    specs: &[TensorSpec],
+    params: &[HostTensor],
+    meta: Json,
+) -> Checkpoint {
+    assert_eq!(specs.len(), params.len());
+    let mut ckpt = Checkpoint::new(meta);
+    for (s, p) in specs.iter().zip(params) {
+        ckpt.tensors.insert(s.name.clone(), p.clone());
+    }
+    ckpt
+}
+
+/// Load params in manifest order, validating shapes.
+pub fn checkpoint_to_params(specs: &[TensorSpec], ckpt: &Checkpoint) -> Result<Vec<HostTensor>> {
+    specs
+        .iter()
+        .map(|s| {
+            let t = ckpt.get(&s.name)?;
+            if t.shape != s.shape {
+                bail!(
+                    "checkpoint tensor '{}' shape {:?} != manifest {:?}",
+                    s.name,
+                    t.shape,
+                    s.shape
+                );
+            }
+            Ok(t.clone())
+        })
+        .collect()
+}
+
+fn zeros_like(specs: &[TensorSpec]) -> Vec<HostTensor> {
+    specs
+        .iter()
+        .map(|s| HostTensor::zeros(s.dtype, &s.shape))
+        .collect()
+}
+
+fn seed_tensor(seed: u64) -> HostTensor {
+    HostTensor::from_u32(&[2], &[(seed >> 32) as u32, seed as u32])
+}
+
+// ---------------------------------------------------------------------------
+// target pretraining
+// ---------------------------------------------------------------------------
+
+pub struct TargetTrainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub dirs: RunDirs,
+}
+
+impl<'rt> TargetTrainer<'rt> {
+    /// Pretrain one target LM on the domain mixture; writes checkpoint +
+    /// loss-curve metrics. Returns the final LM loss.
+    pub fn train(
+        &self,
+        target: &str,
+        corpus: &Corpus,
+        preset: &TrainPreset,
+        log_every: usize,
+    ) -> Result<f64> {
+        let spec = self.rt.manifest.target(target)?.clone();
+        let init = self.rt.target_entry(target, "init")?;
+        let step_exe = self.rt.target_entry(target, "train_step")?;
+
+        let mut params = init.run(&[seed_tensor(preset.seed ^ hash_name(target))])?;
+        let mut m = zeros_like(&spec.params);
+        let mut v = zeros_like(&spec.params);
+
+        let datasets = corpus.load_mixture("train")?;
+        let mut batcher = MixtureBatcher::new(&datasets);
+        let mut rng = Pcg64::new(preset.seed, hash_name(target));
+
+        let b = self.rt.manifest.train_batch;
+        let w = self.rt.manifest.span + self.rt.manifest.k_heads + 2;
+        let mut curve = Vec::new();
+        let mut last = f64::NAN;
+        let t0 = std::time::Instant::now();
+        for step in 0..preset.steps {
+            let tokens = HostTensor::from_i32(&[b, w], &batcher.sample_batch(&mut rng, b, w));
+            let mut args = Vec::with_capacity(3 * params.len() + 3);
+            args.extend(params.iter().cloned());
+            args.extend(m.iter().cloned());
+            args.extend(v.iter().cloned());
+            args.push(HostTensor::scalar_i32(step as i32 + 1));
+            args.push(tokens);
+            args.push(HostTensor::scalar_f32(preset.lr_at(step) as f32));
+            let mut out = step_exe.run(&args)?;
+            let metrics = out.pop().context("missing metrics")?.as_f32();
+            let n = spec.params.len();
+            v = out.split_off(2 * n);
+            m = out.split_off(n);
+            params = out;
+            last = metrics[0] as f64;
+            if step % log_every == 0 || step + 1 == preset.steps {
+                curve.push(Json::arr_f64(&[step as f64, metrics[0] as f64, metrics[1] as f64]));
+                crate::info!(
+                    "[{target}] step {step}/{}: lm_loss={:.4} mtp={:.4}",
+                    preset.steps,
+                    metrics[0],
+                    metrics[1]
+                );
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let meta = Json::obj(vec![
+            ("kind", Json::Str("target".into())),
+            ("target", Json::Str(target.into())),
+            ("steps", Json::Num(preset.steps as f64)),
+            ("seed", Json::Num(preset.seed as f64)),
+            ("final_loss", Json::Num(last)),
+        ]);
+        write_checkpoint(
+            &self.dirs.target_ckpt(target),
+            &params_to_checkpoint(&spec.params, &params, meta),
+        )?;
+        Json::obj(vec![
+            ("curve", Json::Arr(curve)),
+            ("seconds", Json::Num(secs)),
+        ])
+        .write_file(&self.dirs.metrics(&format!("target_{target}")))?;
+        crate::info!("[{target}] pretrained in {secs:.0}s, final loss {last:.4}");
+        Ok(last)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// draft training
+// ---------------------------------------------------------------------------
+
+pub struct DraftTrainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub dirs: RunDirs,
+}
+
+/// Per-step metric record for the training log.
+#[derive(Debug, Clone)]
+pub struct DraftStepMetrics {
+    pub loss: f64,
+    pub mean_alpha: f64,
+    pub alpha_heads: Vec<f64>,
+    pub lambda_heads: Vec<f64>,
+}
+
+impl<'rt> DraftTrainer<'rt> {
+    /// Ensure the truncated draft vocabulary exists (computed from the
+    /// training mixture, FR-Spec style) and return it.
+    pub fn vocab_map(&self, corpus: &Corpus) -> Result<Vec<i32>> {
+        let path = self.dirs.vocab_map();
+        if path.exists() {
+            let j = Json::parse_file(&path)?;
+            return Ok(j
+                .get("map")
+                .as_arr()
+                .context("vocab map")?
+                .iter()
+                .map(|x| x.as_i64().unwrap_or(0) as i32)
+                .collect());
+        }
+        let datasets = corpus.load_mixture("train")?;
+        let (map, coverage) =
+            build_vocab_map(&datasets, self.rt.manifest.vocab, self.rt.manifest.draft_vocab);
+        Json::obj(vec![
+            ("map", Json::Arr(map.iter().map(|&i| Json::Num(i as f64)).collect())),
+            ("coverage", Json::Num(coverage)),
+        ])
+        .write_file(&path)?;
+        crate::info!(
+            "built draft vocab map ({} of {}, {:.1}% corpus mass)",
+            map.len(),
+            self.rt.manifest.vocab,
+            coverage * 100.0
+        );
+        Ok(map)
+    }
+
+    /// Initialize draft params: from seed, or for the MTP arch from the
+    /// pretrained target module (paper §5.2: fine-tune the released MTP).
+    pub fn init_params(
+        &self,
+        draft: &str,
+        target_ckpt: &Checkpoint,
+        seed: u64,
+    ) -> Result<Vec<HostTensor>> {
+        let dspec = self.rt.manifest.draft(draft)?.clone();
+        if dspec.arch == "mtp" {
+            return mtp_params_from_target(&dspec.params, target_ckpt);
+        }
+        let init = self.rt.draft_entry(draft, "init")?;
+        init.run(&[seed_tensor(seed ^ hash_name(draft))])
+    }
+
+    /// Train one draft with the given objective. Returns final metrics.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train(
+        &self,
+        draft: &str,
+        loss: &LossSpec,
+        corpus: &Corpus,
+        preset: &TrainPreset,
+        log_every: usize,
+    ) -> Result<DraftStepMetrics> {
+        let dspec = self.rt.manifest.draft(draft)?.clone();
+        let tname = dspec.target.clone();
+        let tspec = self.rt.manifest.target(&tname)?.clone();
+        let step_exe = self.rt.draft_entry(draft, "train_step")?;
+
+        let tckpt_path = self.dirs.target_ckpt(&tname);
+        if !tckpt_path.exists() {
+            bail!(
+                "target checkpoint {} missing — run `lk-spec train-target --target {tname}` first",
+                tckpt_path.display()
+            );
+        }
+        let tckpt = read_checkpoint(&tckpt_path)?;
+        let tparams = checkpoint_to_params(&tspec.params, &tckpt)?;
+
+        let mut dparams = self.init_params(draft, &tckpt, preset.seed)?;
+        let mut m = zeros_like(&dspec.params);
+        let mut v = zeros_like(&dspec.params);
+
+        let needs_vmap = dspec.arch == "eagle3";
+        let vmap = if needs_vmap {
+            Some(HostTensor::from_i32(
+                &[self.rt.manifest.draft_vocab],
+                &self.vocab_map(corpus)?,
+            ))
+        } else {
+            None
+        };
+
+        let datasets = corpus.load_mixture("train")?;
+        let mut batcher = MixtureBatcher::new(&datasets);
+        let mut rng = Pcg64::new(preset.seed, hash_name(draft) ^ hash_name(&loss.tag));
+
+        let b = self.rt.manifest.train_batch;
+        let w = self.rt.manifest.span + self.rt.manifest.k_heads + 1;
+        let k = self.rt.manifest.k_heads;
+        let stem = format!("{}__{}", draft.replace('@', "_"), loss.tag);
+        let mut curve = Vec::new();
+        let mut final_metrics = DraftStepMetrics {
+            loss: f64::NAN,
+            mean_alpha: 0.0,
+            alpha_heads: vec![0.0; k],
+            lambda_heads: vec![0.0; k],
+        };
+        let t0 = std::time::Instant::now();
+        for step in 0..preset.steps {
+            let tokens = HostTensor::from_i32(&[b, w], &batcher.sample_batch(&mut rng, b, w));
+            let mut args = Vec::with_capacity(tparams.len() + 3 * dparams.len() + 8);
+            args.extend(tparams.iter().cloned());
+            args.extend(dparams.iter().cloned());
+            args.extend(m.iter().cloned());
+            args.extend(v.iter().cloned());
+            args.push(HostTensor::scalar_i32(step as i32 + 1));
+            args.push(tokens);
+            args.push(HostTensor::from_f32(&[4], &loss.weights));
+            args.push(HostTensor::scalar_f32(loss.eta));
+            args.push(HostTensor::scalar_f32(preset.gamma as f32));
+            args.push(HostTensor::scalar_f32(preset.lr_at(step) as f32));
+            if let Some(vm) = &vmap {
+                args.push(vm.clone());
+            }
+            let mut out = step_exe.run(&args)?;
+            let metrics = out.pop().context("missing metrics")?.as_f32();
+            let n = dspec.params.len();
+            v = out.split_off(2 * n);
+            m = out.split_off(n);
+            dparams = out;
+            final_metrics = DraftStepMetrics {
+                loss: metrics[0] as f64,
+                mean_alpha: metrics[1] as f64,
+                alpha_heads: metrics[2..2 + k].iter().map(|&x| x as f64).collect(),
+                lambda_heads: metrics[2 + k..2 + 2 * k].iter().map(|&x| x as f64).collect(),
+            };
+            if step % log_every == 0 || step + 1 == preset.steps {
+                curve.push(Json::arr_f64(&[
+                    step as f64,
+                    final_metrics.loss,
+                    final_metrics.mean_alpha,
+                ]));
+                crate::info!(
+                    "[{stem}] step {step}/{}: loss={:.4} alpha={:.4} lam1={:.3}",
+                    preset.steps,
+                    final_metrics.loss,
+                    final_metrics.mean_alpha,
+                    final_metrics.lambda_heads[0]
+                );
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let meta = Json::obj(vec![
+            ("kind", Json::Str("draft".into())),
+            ("draft", Json::Str(draft.into())),
+            ("loss", Json::Str(loss.tag.clone())),
+            ("steps", Json::Num(preset.steps as f64)),
+            ("seed", Json::Num(preset.seed as f64)),
+            ("final_alpha", Json::Num(final_metrics.mean_alpha)),
+        ]);
+        write_checkpoint(
+            &self.dirs.draft_ckpt(&stem),
+            &params_to_checkpoint(&dspec.params, &dparams, meta),
+        )?;
+        Json::obj(vec![
+            ("curve", Json::Arr(curve)),
+            ("seconds", Json::Num(secs)),
+            (
+                "alpha_heads",
+                Json::arr_f64(&final_metrics.alpha_heads),
+            ),
+            (
+                "lambda_heads",
+                Json::arr_f64(&final_metrics.lambda_heads),
+            ),
+        ])
+        .write_file(&self.dirs.metrics(&stem))?;
+        crate::info!(
+            "[{stem}] trained in {secs:.0}s, mean alpha {:.4}",
+            final_metrics.mean_alpha
+        );
+        Ok(final_metrics)
+    }
+
+    /// Write the "MTP original" pseudo-checkpoint: the module exactly as
+    /// target pretraining left it (Table 2 baseline row).
+    pub fn save_mtp_original(&self, draft: &str) -> Result<()> {
+        let dspec = self.rt.manifest.draft(draft)?.clone();
+        let tckpt = read_checkpoint(&self.dirs.target_ckpt(&dspec.target))?;
+        let params = mtp_params_from_target(&dspec.params, &tckpt)?;
+        let stem = format!(
+            "{}__{}",
+            draft.replace('@', "_"),
+            crate::config::MTP_ORIGINAL_TAG
+        );
+        let meta = Json::obj(vec![
+            ("kind", Json::Str("draft".into())),
+            ("draft", Json::Str(draft.into())),
+            ("loss", Json::Str(crate::config::MTP_ORIGINAL_TAG.into())),
+        ]);
+        write_checkpoint(
+            &self.dirs.draft_ckpt(&stem),
+            &params_to_checkpoint(&dspec.params, &params, meta),
+        )?;
+        Ok(())
+    }
+}
+
+/// Restructure the target's pretrained MTP module into the draft layout
+/// (mirror of python drafts.init_mtp_from_target; the name mapping is the
+/// contract documented there): fc_fuse <- identity, fc_in <- mtp/proj,
+/// everything else <- mtp/<name>.
+pub fn mtp_params_from_target(
+    dspecs: &[TensorSpec],
+    tckpt: &Checkpoint,
+) -> Result<Vec<HostTensor>> {
+    dspecs
+        .iter()
+        .map(|s| {
+            if s.name == "fc_fuse" {
+                let d = s.shape[0];
+                anyhow::ensure!(s.shape == vec![d, d], "fc_fuse must be square");
+                let mut eye = vec![0f32; d * d];
+                for i in 0..d {
+                    eye[i * d + i] = 1.0;
+                }
+                return Ok(HostTensor::from_f32(&s.shape, &eye));
+            }
+            let tname = if s.name == "fc_in" {
+                "mtp/proj".to_string()
+            } else {
+                format!("mtp/{}", s.name)
+            };
+            let t = tckpt.get(&tname)?;
+            anyhow::ensure!(
+                t.shape == s.shape,
+                "mtp param '{}' shape {:?} != draft '{}' {:?}",
+                tname,
+                t.shape,
+                s.name,
+                s.shape
+            );
+            Ok(t.clone())
+        })
+        .collect()
+}
+
+pub fn hash_name(s: &str) -> u64 {
+    // FNV-1a — stable across runs/platforms (std hasher is not).
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_stable() {
+        assert_eq!(hash_name("dense-s"), hash_name("dense-s"));
+        assert_ne!(hash_name("dense-s"), hash_name("dense-m"));
+    }
+
+    #[test]
+    fn checkpoint_param_roundtrip() {
+        let specs = vec![
+            TensorSpec {
+                name: "a/w".into(),
+                shape: vec![2, 2],
+                dtype: DType::F32,
+            },
+            TensorSpec {
+                name: "b".into(),
+                shape: vec![3],
+                dtype: DType::F32,
+            },
+        ];
+        let params = vec![
+            HostTensor::from_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]),
+            HostTensor::from_f32(&[3], &[5.0, 6.0, 7.0]),
+        ];
+        let ckpt = params_to_checkpoint(&specs, &params, Json::Null);
+        let back = checkpoint_to_params(&specs, &ckpt).unwrap();
+        assert_eq!(back, params);
+        // shape mismatch rejected
+        let bad_specs = vec![TensorSpec {
+            name: "a/w".into(),
+            shape: vec![4],
+            dtype: DType::F32,
+        }];
+        assert!(checkpoint_to_params(&bad_specs, &ckpt).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `lk-spec <subcommand> [--flag] [--key value]... [positional]...`
+//! Flags and options are declared implicitly by access; `finish()` rejects
+//! unconsumed arguments so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Boolean flags (never consume a following value). Anything else after
+/// `--` is a key expecting a value (`--key value` or `--key=value`).
+const KNOWN_FLAGS: &[&str] = &[
+    "all",
+    "verbose",
+    "quiet",
+    "greedy-draft",
+    "no-spec",
+    "force",
+    "help",
+    "fresh",
+];
+
+#[derive(Debug)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(argv: Vec<String>) -> Args {
+        let mut subcommand = None;
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positionals = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if KNOWN_FLAGS.contains(&name) {
+                    flags.push(name.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(name.to_string());
+                }
+            } else {
+                positionals.push(arg);
+            }
+        }
+        Args {
+            subcommand,
+            options,
+            flags,
+            positionals,
+            consumed: std::cell::RefCell::new(Vec::new()),
+        }
+    }
+
+    fn mark(&self, name: &str) {
+        self.consumed.borrow_mut().push(name.to_string());
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.mark(name);
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.mark(name);
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Comma-separated list option.
+    pub fn opt_list(&self, name: &str) -> Vec<String> {
+        self.opt(name)
+            .map(|s| s.split(',').map(|p| p.trim().to_string()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Error on any option/flag that was never consumed (typo guard).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.options.keys() {
+            if !consumed.iter().any(|c| c == k) {
+                anyhow::bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !consumed.iter().any(|c| c == f) {
+                anyhow::bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = args("train-draft --arch eagle3 --steps 400 --verbose pos1");
+        assert_eq!(a.subcommand.as_deref(), Some("train-draft"));
+        assert_eq!(a.opt("arch"), Some("eagle3"));
+        assert_eq!(a.opt_usize("steps", 0).unwrap(), 400);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals(), ["pos1"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = args("x --lr=0.001 --list=a,b,c");
+        assert_eq!(a.opt_f64("lr", 0.0).unwrap(), 0.001);
+        assert_eq!(a.opt_list("list"), ["a", "b", "c"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = args("x --tpyo 3");
+        assert!(a.finish().is_err());
+    }
+}

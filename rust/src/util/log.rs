@@ -1,0 +1,69 @@
+//! Leveled stderr logging with wall-clock timestamps and scoped timers.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+pub static LEVEL: AtomicU8 = AtomicU8::new(2); // 0=error 1=warn 2=info 3=debug
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn enabled(level: u8) -> bool {
+    LEVEL.load(Ordering::Relaxed) >= level
+}
+
+#[macro_export]
+macro_rules! log_at {
+    ($lvl:expr, $tag:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($lvl) {
+            eprintln!("[{:>8.2}s {}] {}", $crate::util::log::uptime(), $tag, format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::log_at!(2, "info ", $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($($arg:tt)*) => { $crate::log_at!(1, "warn ", $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! debug_log {
+    ($($arg:tt)*) => { $crate::log_at!(3, "debug", $($arg)*) };
+}
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn uptime() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// RAII timer that logs its scope's duration at debug level.
+pub struct ScopeTimer {
+    name: &'static str,
+    start: Instant,
+}
+
+impl ScopeTimer {
+    pub fn new(name: &'static str) -> Self {
+        ScopeTimer {
+            name,
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Drop for ScopeTimer {
+    fn drop(&mut self) {
+        crate::log_at!(3, "timer", "{}: {:.1} ms", self.name, self.elapsed_ms());
+    }
+}

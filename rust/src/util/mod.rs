@@ -1,0 +1,16 @@
+//! Foundation substrates built from scratch for the offline environment
+//! (no serde / clap / rand / criterion in the vendored registry — see
+//! DESIGN.md §2): deterministic RNG, JSON codec, CLI parsing, logging
+//! and simple streaming statistics.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Pcg64;
+pub use stats::{OnlineStats, Percentiles};

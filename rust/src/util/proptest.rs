@@ -1,0 +1,96 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! `forall` runs a property over N generated cases from a seeded Pcg64;
+//! on failure it reruns the same case to print it (cases are pure
+//! functions of the RNG) and panics with the case index + seed so the
+//! exact failure is reproducible. No shrinking — generators are kept
+//! small and structured instead.
+
+use super::rng::Pcg64;
+
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` over `cases` generated inputs; panic on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Pcg64) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for i in 0..cases {
+        let mut rng = Pcg64::new(seed, i as u64);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed}):\n  {msg}\n  case: {case:?}"
+            );
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use super::Pcg64;
+
+    /// Random probability distribution of size `v` with controllable
+    /// sharpness (higher = more peaked).
+    pub fn dist(rng: &mut Pcg64, v: usize, sharp: f64) -> Vec<f32> {
+        let logits: Vec<f64> = (0..v).map(|_| rng.normal() * sharp).collect();
+        let m = logits.iter().cloned().fold(f64::MIN, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|&z| (z - m).exp()).collect();
+        let s: f64 = exps.iter().sum();
+        exps.iter().map(|&e| (e / s) as f32).collect()
+    }
+
+    pub fn tokens(rng: &mut Pcg64, n: usize, vocab: usize) -> Vec<i32> {
+        (0..n).map(|_| rng.below(vocab) as i32).collect()
+    }
+
+    pub fn f32s(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_true_props() {
+        forall(
+            "below in range",
+            1,
+            100,
+            |rng| (rng.below(17), 17usize),
+            |&(x, n)| {
+                if x < n {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= {n}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn forall_reports_failures() {
+        forall(
+            "must fail",
+            2,
+            10,
+            |rng| rng.below(10),
+            |&x| if x < 5 { Ok(()) } else { Err("too big".into()) },
+        );
+    }
+
+    #[test]
+    fn dist_generator_normalized() {
+        let mut rng = Pcg64::new(3, 0);
+        let d = gen::dist(&mut rng, 32, 2.0);
+        let s: f32 = d.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(d.iter().all(|&p| p >= 0.0));
+    }
+}

@@ -1,0 +1,332 @@
+//! Integration tests over the PJRT runtime + engine. These need
+//! `artifacts/` (built by `make artifacts`); each test skips gracefully
+//! when artifacts are absent so `cargo test` stays green pre-build.
+//!
+//! The heavyweight invariant here is greedy losslessness: at T=0,
+//! speculative decoding must produce EXACTLY the vanilla greedy sequence
+//! — any engine bookkeeping bug (positions, KV rollback, bonus-token
+//! indices) breaks it immediately.
+
+use std::path::{Path, PathBuf};
+
+use lk_spec::data::corpus::{Corpus, CorpusSpec};
+use lk_spec::eval::EvalMode;
+use lk_spec::runtime::Runtime;
+use lk_spec::server::engine::{EngineOpts, SpecEngine};
+use lk_spec::tensor::{read_checkpoint, HostTensor};
+use lk_spec::train::{checkpoint_to_params, params_to_checkpoint, DraftTrainer, RunDirs, TargetTrainer};
+use lk_spec::util::{Json, Pcg64};
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        println!("SKIP: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+/// Shared tiny work dir with a small corpus + quickly-trained dense-s
+/// target and eagle3 draft (trained once per machine, reused below).
+fn fixture(rt: &Runtime) -> (PathBuf, Corpus) {
+    {
+        let work = std::env::temp_dir().join("lkspec_itest");
+        let data = work.join("data");
+        let corpus = Corpus::generate(
+            &data,
+            &CorpusSpec {
+                train_tokens: 30_000,
+                eval_docs: 8,
+                ..Default::default()
+            },
+        )
+        .expect("corpus");
+        let dirs = RunDirs::new(&work);
+        if !dirs.target_ckpt("dense-s").exists() {
+            let preset = lk_spec::config::TrainPreset {
+                steps: 60,
+                ..lk_spec::config::TrainPreset::target("dense-s")
+            };
+            TargetTrainer { rt, dirs: RunDirs::new(&work) }
+                .train("dense-s", &corpus, &preset, 30)
+                .expect("target train");
+        }
+        if !dirs.draft_ckpt("eagle3_dense-s__kl").exists() {
+            let preset = lk_spec::config::TrainPreset {
+                steps: 40,
+                ..lk_spec::config::TrainPreset::draft("dense-s", "eagle3")
+            };
+            DraftTrainer { rt, dirs: RunDirs::new(&work) }
+                .train(
+                    "eagle3@dense-s",
+                    &lk_spec::config::LossSpec::kl(),
+                    &corpus,
+                    &preset,
+                    20,
+                )
+                .expect("draft train");
+        }
+        (work, corpus)
+    }
+}
+
+fn engine_for<'rt>(
+    rt: &'rt Runtime,
+    work: &Path,
+    mode: EvalMode,
+    k: usize,
+    seed: u64,
+) -> SpecEngine<'rt> {
+    let dirs = RunDirs::new(work);
+    let tckpt = read_checkpoint(&dirs.target_ckpt("dense-s")).unwrap();
+    let dckpt = read_checkpoint(&dirs.draft_ckpt("eagle3_dense-s__kl")).unwrap();
+    let vm = Json::parse_file(&dirs.vocab_map())
+        .unwrap()
+        .get("map")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i32)
+        .collect::<Vec<_>>();
+    SpecEngine::new(
+        rt,
+        "eagle3@dense-s",
+        &tckpt,
+        &dckpt,
+        Some(vm),
+        EngineOpts {
+            k_draft: k,
+            temperature: 1.0,
+            mode: mode.sampling(),
+            seed,
+        },
+    )
+    .unwrap()
+}
+
+/// One sequential suite: Runtime/PJRT state is !Send, and the fixture
+/// (compiled executables, trained tiny checkpoints) is expensive, so the
+/// engine-level checks share one runtime in a single #[test].
+#[test]
+fn engine_integration_suite() {
+    let Some(p) = artifacts() else { return };
+    let rt = Runtime::new(p).expect("runtime");
+    let (work, corpus) = fixture(&rt);
+    init_executables_produce_manifest_shapes(&rt);
+    train_step_decreases_loss_from_scratch(&rt, &corpus);
+    greedy_spec_equals_vanilla(&rt, &work, &corpus);
+    stochastic_deterministic_given_seed(&rt, &work, &corpus);
+    batch_rows_independent(&rt, &work, &corpus);
+    k_sweep_shapes(&rt, &work, &corpus);
+    greedy_draft_not_better(&rt, &work, &corpus);
+    mtp_param_mapping(&rt);
+}
+
+// ---------------------------------------------------------------------------
+
+fn init_executables_produce_manifest_shapes(rt: &Runtime) {
+    println!("== init_executables_produce_manifest_shapes");
+    for target in ["dense-s", "moe-s"] {
+        let spec = rt.manifest.target(target).unwrap().clone();
+        let init = rt.target_entry(target, "init").unwrap();
+        let params = init
+            .run(&[HostTensor::from_u32(&[2], &[1, 2])])
+            .unwrap();
+        assert_eq!(params.len(), spec.params.len());
+        for (p, s) in params.iter().zip(&spec.params) {
+            assert_eq!(p.shape, s.shape, "param {}", s.name);
+        }
+        // params must round-trip through the checkpoint layer
+        let ck = params_to_checkpoint(&spec.params, &params, Json::Null);
+        let back = checkpoint_to_params(&spec.params, &ck).unwrap();
+        assert_eq!(back, params);
+    }
+}
+
+fn train_step_decreases_loss_from_scratch(rt: &Runtime, corpus: &Corpus) {
+    println!("== train_step_decreases_loss_from_scratch");
+    // 25 fresh steps on dense-s must reduce LM loss vs step 1.
+    let spec = rt.manifest.target("dense-s").unwrap().clone();
+    let init = rt.target_entry("dense-s", "init").unwrap();
+    let step_exe = rt.target_entry("dense-s", "train_step").unwrap();
+    let mut params = init.run(&[HostTensor::from_u32(&[2], &[7, 8])]).unwrap();
+    let mut m: Vec<HostTensor> = spec
+        .params
+        .iter()
+        .map(|s| HostTensor::zeros(s.dtype, &s.shape))
+        .collect();
+    let mut v = m.clone();
+    let ds = corpus
+        .load(lk_spec::data::grammar::Domain::Math, "train")
+        .unwrap();
+    let mut rng = Pcg64::new(5, 5);
+    let b = rt.manifest.train_batch;
+    let w = rt.manifest.span + rt.manifest.k_heads + 2;
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 1..=25 {
+        let tokens = HostTensor::from_i32(&[b, w], &ds.sample_batch(&mut rng, b, w));
+        let mut args: Vec<HostTensor> = Vec::new();
+        args.extend(params.iter().cloned());
+        args.extend(m.iter().cloned());
+        args.extend(v.iter().cloned());
+        args.push(HostTensor::scalar_i32(step));
+        args.push(tokens);
+        args.push(HostTensor::scalar_f32(2e-3));
+        let mut out = step_exe.run(&args).unwrap();
+        let metrics = out.pop().unwrap().as_f32();
+        let n = spec.params.len();
+        v = out.split_off(2 * n);
+        m = out.split_off(n);
+        params = out;
+        last = metrics[0];
+        first.get_or_insert(metrics[0]);
+    }
+    assert!(
+        last < first.unwrap() * 0.9,
+        "loss {} -> {last} did not drop",
+        first.unwrap()
+    );
+}
+
+/// T=0 speculative decoding is LOSSLESS: byte-identical to vanilla greedy.
+fn greedy_spec_equals_vanilla(rt: &Runtime, work: &Path, corpus: &Corpus) {
+    println!("== greedy_spec_equals_vanilla");
+    let prompts = corpus
+        .load(lk_spec::data::grammar::Domain::Code, "eval")
+        .unwrap()
+        .prompts(3, 12);
+    let mut engine = engine_for(rt, work, EvalMode::T0, 7, 99);
+    for p in &prompts {
+        let spec = engine.generate_batch(std::slice::from_ref(p), 24).unwrap();
+        let vanilla = engine.generate_vanilla(p, 24).unwrap();
+        assert_eq!(
+            spec[0].tokens[..24.min(spec[0].tokens.len())],
+            vanilla.tokens[..24.min(vanilla.tokens.len())],
+            "greedy speculative output diverged from vanilla greedy"
+        );
+    }
+}
+
+/// Stochastic decoding is reproducible from the seed and the engine
+/// produces sane acceptance statistics.
+fn stochastic_deterministic_given_seed(rt: &Runtime, work: &Path, corpus: &Corpus) {
+    println!("== stochastic_deterministic_given_seed");
+    let prompts = corpus
+        .load(lk_spec::data::grammar::Domain::Chat, "eval")
+        .unwrap()
+        .prompts(2, 12);
+    // engines scoped one-at-a-time (PJRT CPU buffer lifetimes interact
+    // badly with several live engines under load — see §Perf notes)
+    let r1 = {
+        let mut e1 = engine_for(rt, work, EvalMode::T1, 7, 1234);
+        e1.generate_batch(&prompts, 24).unwrap()
+    };
+    let r2 = {
+        let mut e2 = engine_for(rt, work, EvalMode::T1, 7, 1234);
+        e2.generate_batch(&prompts, 24).unwrap()
+    };
+    for (a, b) in r1.iter().zip(&r2) {
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.stats.tau(), b.stats.tau());
+    }
+    // different seed -> (almost surely) different sample path
+    let r3 = {
+        let mut e3 = engine_for(rt, work, EvalMode::T1, 7, 4321);
+        e3.generate_batch(&prompts, 24).unwrap()
+    };
+    assert_ne!(r1[0].tokens, r3[0].tokens);
+    // stats sanity
+    let s = &r1[0].stats;
+    assert!(s.rounds > 0);
+    assert!(s.tau() >= 1.0 && s.tau() <= 8.0);
+    let alphas = s.alpha_per_position();
+    assert!(alphas.iter().all(|&a| (0.0..=1.0).contains(&a)));
+}
+
+/// Batched lockstep decoding must give each sequence the same results it
+/// would get alone (same seed -> same tokens), proving per-row position
+/// handling and padding isolation.
+fn batch_rows_independent(rt: &Runtime, work: &Path, corpus: &Corpus) {
+    println!("== batch_rows_independent");
+    let prompts = corpus
+        .load(lk_spec::data::grammar::Domain::Math, "eval")
+        .unwrap()
+        .prompts(3, 12);
+    // batch of 3 (padded to bucket 4)
+    let mut eb = engine_for(rt, work, EvalMode::T0, 7, 7);
+    let batch = eb.generate_batch(&prompts, 20).unwrap();
+    for (i, p) in prompts.iter().enumerate() {
+        let mut e1 = engine_for(rt, work, EvalMode::T0, 7, 7);
+        let solo = e1.generate_batch(std::slice::from_ref(p), 20).unwrap();
+        assert_eq!(
+            batch[i].tokens, solo[0].tokens,
+            "row {i} diverges between batched and solo decoding"
+        );
+    }
+}
+
+/// K sweep: τ is computed against the requested chain length.
+fn k_sweep_shapes(rt: &Runtime, work: &Path, corpus: &Corpus) {
+    println!("== k_sweep_shapes");
+    let prompts = corpus
+        .load(lk_spec::data::grammar::Domain::Code, "eval")
+        .unwrap()
+        .prompts(2, 12);
+    for k in [1usize, 3, 7] {
+        let mut e = engine_for(rt, work, EvalMode::T1, k, 11);
+        assert_eq!(e.k_draft(), k);
+        let r = e.generate_batch(&prompts, 16).unwrap();
+        assert_eq!(r[0].stats.k, k);
+        assert!(r[0].stats.tau() <= k as f64 + 1.0 + 1e-9);
+    }
+}
+
+/// Greedy-draft (Appendix D) must not raise acceptance above exact
+/// rejection sampling on the same engine/seed/domain.
+fn greedy_draft_not_better(rt: &Runtime, work: &Path, corpus: &Corpus) {
+    println!("== greedy_draft_not_better");
+    let prompts = corpus
+        .load(lk_spec::data::grammar::Domain::Chat, "eval")
+        .unwrap()
+        .prompts(4, 12);
+    let re = {
+        let mut exact = engine_for(rt, work, EvalMode::T1, 7, 3);
+        exact.generate_batch(&prompts, 32).unwrap()
+    };
+    let rb = {
+        let mut buggy = engine_for(rt, work, EvalMode::T1GreedyDraft, 7, 3);
+        buggy.generate_batch(&prompts, 32).unwrap()
+    };
+    let tau_e: f64 = re.iter().map(|r| r.stats.tau()).sum::<f64>() / re.len() as f64;
+    let tau_b: f64 = rb.iter().map(|r| r.stats.tau()).sum::<f64>() / rb.len() as f64;
+    assert!(
+        tau_e >= tau_b - 0.35,
+        "exact {tau_e:.3} unexpectedly far below greedy-draft {tau_b:.3}"
+    );
+}
+
+/// mtp draft params restructure from the target checkpoint by name.
+fn mtp_param_mapping(rt: &Runtime) {
+    println!("== mtp_param_mapping");
+    let dspec = rt.manifest.draft("mtp@mtp-l").unwrap().clone();
+    let tspec = rt.manifest.target("mtp-l").unwrap().clone();
+    let init = rt.target_entry("mtp-l", "init").unwrap();
+    let tparams = init.run(&[HostTensor::from_u32(&[2], &[3, 4])]).unwrap();
+    let tck = params_to_checkpoint(&tspec.params, &tparams, Json::Null);
+    let dparams = lk_spec::train::mtp_params_from_target(&dspec.params, &tck).unwrap();
+    assert_eq!(dparams.len(), dspec.params.len());
+    // fc_in must be the target's mtp/proj verbatim
+    let idx = dspec.params.iter().position(|s| s.name == "fc_in").unwrap();
+    assert_eq!(&dparams[idx], tck.get("mtp/proj").unwrap());
+    // fc_fuse is the identity
+    let idx = dspec.params.iter().position(|s| s.name == "fc_fuse").unwrap();
+    let eye = dparams[idx].as_f32();
+    let d = dspec.params[idx].shape[0];
+    for i in 0..d {
+        for j in 0..d {
+            assert_eq!(eye[i * d + j], if i == j { 1.0 } else { 0.0 });
+        }
+    }
+}

@@ -1,0 +1,468 @@
+//! Property-based test suites over the coordinator's pure logic:
+//! sampling/verification invariants, data-plane round-trips, batching
+//! policy, grammar guarantees. These run without PJRT or artifacts.
+
+use lk_spec::data::corpus::Dataset;
+use lk_spec::data::grammar::{Domain, DOMAINS};
+use lk_spec::data::vocab::{build_vocab_map, invert_vocab_map};
+use lk_spec::server::batcher::{Batcher, BatcherConfig};
+use lk_spec::server::kv::copy_row;
+use lk_spec::spec::accept::AcceptanceStats;
+use lk_spec::spec::gradients;
+use lk_spec::spec::sampling::{
+    acceptance_rate, sample_categorical, softmax_t, verify_token, SamplingMode, Verdict,
+};
+use lk_spec::tensor::{read_checkpoint, write_checkpoint, Checkpoint, DType, HostTensor};
+use lk_spec::util::proptest::{forall, gen};
+use lk_spec::util::{Json, Pcg64};
+
+// ---------------------------------------------------------------------------
+// speculative sampling invariants
+// ---------------------------------------------------------------------------
+
+/// THE theorem (Leviathan et al. 2023, Thm. 1): for arbitrary (p, q) the
+/// accept-or-resample procedure outputs exactly p. Checked empirically
+/// across random distribution pairs of varied sharpness and size.
+#[test]
+fn prop_rejection_sampling_is_lossless() {
+    forall(
+        "rejection sampling preserves p",
+        0xA11CE,
+        8,
+        |rng| {
+            let v = [4, 8, 16, 48][rng.below(4)];
+            let sharp_p = 1.0 + rng.uniform() * 3.0;
+            let sharp_q = 1.0 + rng.uniform() * 3.0;
+            let p = gen::dist(rng, v, sharp_p);
+            let q = gen::dist(rng, v, sharp_q);
+            (p, q, rng.next_u64())
+        },
+        |(p, q, seed)| {
+            let v = p.len();
+            let n = 120_000;
+            let mut rng = Pcg64::new(*seed, 1);
+            let mut counts = vec![0f64; v];
+            for _ in 0..n {
+                let x = sample_categorical(&mut rng, q);
+                match verify_token(&mut rng, p, q, x, SamplingMode::Stochastic) {
+                    Verdict::Accept => counts[x] += 1.0,
+                    Verdict::Reject { replacement } => counts[replacement as usize] += 1.0,
+                }
+            }
+            for i in 0..v {
+                let emp = counts[i] / n as f64;
+                let tol = 0.012 + 3.0 * (p[i] as f64 / n as f64).sqrt();
+                if (emp - p[i] as f64).abs() > tol {
+                    return Err(format!("token {i}: |{emp:.4} - {:.4}| > {tol:.4}", p[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_acceptance_equals_alpha() {
+    forall(
+        "E[accept] == sum min(p,q)",
+        0xBEE,
+        6,
+        |rng| {
+            let v = [8, 32, 128][rng.below(3)];
+            (
+                gen::dist(rng, v, 2.0),
+                gen::dist(rng, v, 2.0),
+                rng.next_u64(),
+            )
+        },
+        |(p, q, seed)| {
+            let alpha = acceptance_rate(p, q);
+            let mut rng = Pcg64::new(*seed, 2);
+            let n = 80_000;
+            let mut acc = 0u64;
+            for _ in 0..n {
+                let x = sample_categorical(&mut rng, q);
+                if matches!(
+                    verify_token(&mut rng, p, q, x, SamplingMode::Stochastic),
+                    Verdict::Accept
+                ) {
+                    acc += 1;
+                }
+            }
+            let emp = acc as f64 / n as f64;
+            if (emp - alpha).abs() > 0.015 {
+                return Err(format!("empirical {emp:.4} vs alpha {alpha:.4}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_greedy_draft_never_beats_exact() {
+    // Appendix D: with q == p the exact rule accepts at rate 1 while the
+    // greedy-draft bug accepts at only max(p).
+    forall(
+        "greedy-draft <= exact when q=p",
+        0xD00D,
+        32,
+        |rng| {
+            let sharp = 1.0 + rng.uniform() * 4.0;
+            gen::dist(rng, 32, sharp)
+        },
+        |p| {
+            let exact = acceptance_rate(p, p); // == 1
+            let greedy =
+                *p.iter().max_by(|a, b| a.partial_cmp(b).unwrap()).unwrap() as f64;
+            if greedy <= exact + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("{greedy} > {exact}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_softmax_t_temperature_ordering() {
+    forall(
+        "lower T concentrates mass on argmax",
+        0x7E4,
+        64,
+        |rng| gen::f32s(rng, 24, 2.0),
+        |logits| {
+            let p1 = softmax_t(logits, 1.0);
+            let p05 = softmax_t(logits, 0.5);
+            let am = lk_spec::spec::sampling::argmax(logits);
+            let s1: f32 = p1.iter().sum();
+            if (s1 - 1.0).abs() > 1e-5 {
+                return Err(format!("not normalized: {s1}"));
+            }
+            if p05[am] < p1[am] - 1e-6 {
+                return Err(format!("T=0.5 mass {} < T=1 {}", p05[am], p1[am]));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tau_bounds() {
+    // τ ∈ [1, K+1]; merge == concat.
+    forall(
+        "tau within bounds and merge-consistent",
+        0x7A0,
+        64,
+        |rng| {
+            let k = 1 + rng.below(7);
+            let rounds: Vec<(usize, usize)> = (0..1 + rng.below(30))
+                .map(|_| {
+                    let d = 1 + rng.below(k);
+                    (d, rng.below(d + 1))
+                })
+                .collect();
+            (k, rounds)
+        },
+        |(k, rounds)| {
+            let mut a = AcceptanceStats::new(*k);
+            let mut b = AcceptanceStats::new(*k);
+            let mut whole = AcceptanceStats::new(*k);
+            for (i, &(d, acc)) in rounds.iter().enumerate() {
+                whole.record_round(d, acc);
+                if i % 2 == 0 {
+                    a.record_round(d, acc)
+                } else {
+                    b.record_round(d, acc)
+                }
+            }
+            a.merge(&b);
+            if (a.tau() - whole.tau()).abs() > 1e-12 {
+                return Err("merge != concat".into());
+            }
+            if whole.tau() < 1.0 - 1e-12 || whole.tau() > *k as f64 + 1.0 + 1e-12 {
+                return Err(format!("tau {} out of bounds", whole.tau()));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// closed-form gradients vs finite differences (random regimes)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gradients_match_finite_differences() {
+    forall(
+        "closed forms == FD over random logits",
+        0x96AD,
+        10,
+        |rng| (gen::f32s(rng, 16, 2.0), gen::f32s(rng, 16, 1.0)),
+        |(zp, zq)| {
+            let p = softmax_t(zp, 1.0);
+            let q = softmax_t(zq, 1.0);
+            let analytic = gradients::grad_kl(&p, &q);
+            let eps = 1e-3f32;
+            for j in 0..zq.len() {
+                let mut zp_ = zq.clone();
+                zp_[j] += eps;
+                let mut zm_ = zq.clone();
+                zm_[j] -= eps;
+                let fd = (gradients::kl_loss(&p, &softmax_t(&zp_, 1.0))
+                    - gradients::kl_loss(&p, &softmax_t(&zm_, 1.0)))
+                    / (2.0 * eps as f64);
+                if (fd - analytic[j] as f64).abs() > 5e-3 {
+                    return Err(format!("kl grad[{j}]: fd {fd} vs {}", analytic[j]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// data plane round-trips
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+        3 => {
+            let n = rng.below(12);
+            Json::Str(
+                (0..n)
+                    .map(|_| char::from_u32(0x20 + rng.below(0x250) as u32).unwrap_or('x'))
+                    .collect(),
+            )
+        }
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    forall(
+        "json parse(serialize(v)) == v",
+        0x15DA,
+        128,
+        |rng| random_json(rng, 3),
+        |v| {
+            let s = v.to_string();
+            let back = Json::parse(&s).map_err(|e| e.to_string())?;
+            if &back != v {
+                return Err(format!("{s} -> {back:?}"));
+            }
+            let pretty = Json::parse(&v.to_string_pretty()).map_err(|e| e.to_string())?;
+            if &pretty != v {
+                return Err("pretty roundtrip differs".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_checkpoint_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("lk_prop_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    forall(
+        "checkpoint write/read identity",
+        0xC4C4,
+        24,
+        |rng| {
+            let n_tensors = 1 + rng.below(5);
+            let tensors: Vec<(String, HostTensor)> = (0..n_tensors)
+                .map(|i| {
+                    let rank = rng.below(4);
+                    let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(6)).collect();
+                    let n: usize = shape.iter().product();
+                    let t = match rng.below(3) {
+                        0 => HostTensor::from_f32(&shape, &gen::f32s(rng, n, 10.0)),
+                        1 => HostTensor::from_i32(&shape, &gen::tokens(rng, n, 1000)),
+                        _ => HostTensor::from_u32(
+                            &shape,
+                            &(0..n).map(|_| rng.next_u32()).collect::<Vec<_>>(),
+                        ),
+                    };
+                    (format!("t/{i}"), t)
+                })
+                .collect();
+            (tensors, rng.next_u64())
+        },
+        |(tensors, salt)| {
+            let mut c = Checkpoint::new(Json::obj(vec![("salt", Json::Num(*salt as f64))]));
+            for (name, t) in tensors {
+                c.tensors.insert(name.clone(), t.clone());
+            }
+            let path = dir.join(format!("{salt:x}.lkt"));
+            write_checkpoint(&path, &c).map_err(|e| e.to_string())?;
+            let back = read_checkpoint(&path).map_err(|e| e.to_string())?;
+            std::fs::remove_file(&path).ok();
+            if back.tensors.len() != tensors.len() {
+                return Err("tensor count".into());
+            }
+            for (name, t) in tensors {
+                if back.tensors.get(name) != Some(t) {
+                    return Err(format!("tensor '{name}' differs"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_copy_row_identity() {
+    forall(
+        "copy_row moves exactly one row",
+        0xF0F0,
+        48,
+        |rng| {
+            let rank = 2 + rng.below(3);
+            let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(5)).collect();
+            let axis = rng.below(rank);
+            let n: usize = shape.iter().product();
+            (shape.clone(), axis, gen::f32s(rng, n, 1.0))
+        },
+        |(shape, axis, data)| {
+            let src = HostTensor::from_f32(shape, data);
+            let mut dst = HostTensor::zeros(DType::F32, shape);
+            let b = shape[*axis];
+            let src_b = b / 2;
+            copy_row(&mut dst, 0, &src, src_b, *axis).map_err(|e| e.to_string())?;
+            let sv = src.as_f32();
+            let dv = dst.as_f32();
+            let outer: usize = shape[..*axis].iter().product();
+            let inner: usize = shape[*axis + 1..].iter().product();
+            for o in 0..outer {
+                for i in 0..inner {
+                    let d0 = dv[(o * b) * inner + i];
+                    let s0 = sv[(o * b + src_b) * inner + i];
+                    if d0 != s0 {
+                        return Err(format!("row copy mismatch at ({o},{i})"));
+                    }
+                    for r in 1..b {
+                        if dv[(o * b + r) * inner + i] != 0.0 {
+                            return Err(format!("row {r} polluted"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// grammars & vocab
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_grammars_deterministic_and_in_range() {
+    forall(
+        "domain docs reproducible, ids in range, EOS-terminated",
+        0x94A2,
+        36,
+        |rng| (DOMAINS[rng.below(3)], rng.next_u64(), 60 + rng.below(200)),
+        |(domain, seed, len)| {
+            let a = domain.generate(&mut Pcg64::new(*seed, 5), *len);
+            let b = domain.generate(&mut Pcg64::new(*seed, 5), *len);
+            if a != b {
+                return Err("non-deterministic".into());
+            }
+            if *a.last().unwrap() != lk_spec::data::EOS {
+                return Err("missing EOS".into());
+            }
+            if a.len() < *len {
+                return Err(format!("too short: {} < {len}", a.len()));
+            }
+            for &t in &a[..a.len() - 1] {
+                if !(lk_spec::data::FIRST_CONTENT..lk_spec::data::VOCAB as i32).contains(&t) {
+                    return Err(format!("token {t} out of range"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_vocab_map_invariants() {
+    forall(
+        "vocab map sorted/unique/invertible, coverage monotone",
+        0x10CA,
+        12,
+        |rng| {
+            let mut tokens = Vec::new();
+            let domain = DOMAINS[rng.below(3)];
+            for _ in 0..6 {
+                tokens.extend(domain.generate(rng, 200));
+            }
+            tokens
+        },
+        |tokens| {
+            let ds = Dataset {
+                domain: Domain::Chat,
+                tokens: tokens.clone(),
+            };
+            let dss = std::slice::from_ref(&ds);
+            let (m1, c1) = build_vocab_map(dss, 512, 128);
+            let (m2, c2) = build_vocab_map(dss, 512, 320);
+            if !(m1.windows(2).all(|w| w[0] < w[1]) && m2.windows(2).all(|w| w[0] < w[1])) {
+                return Err("not sorted/unique".into());
+            }
+            if c2 < c1 - 1e-12 {
+                return Err(format!("coverage not monotone: {c1} > {c2}"));
+            }
+            let inv = invert_vocab_map(&m2, 512);
+            for (i, &f) in m2.iter().enumerate() {
+                if inv[f as usize] != Some(i as u16) {
+                    return Err("inverse map broken".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// batcher policy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_never_exceeds_bucket_and_preserves_order() {
+    forall(
+        "batcher FIFO + bucket cap",
+        0xBA7C,
+        64,
+        |rng| 1 + rng.below(40),
+        |n| {
+            let mut b = Batcher::new(BatcherConfig {
+                buckets: vec![1, 4],
+                max_wait: std::time::Duration::ZERO,
+                queue_cap: 1024,
+            });
+            for i in 0..*n {
+                b.push(i).map_err(|_| "push rejected".to_string())?;
+            }
+            let mut seen = Vec::new();
+            while let Some(g) = b.next_group(std::time::Instant::now()) {
+                if g.len() > 4 {
+                    return Err(format!("group of {} > bucket 4", g.len()));
+                }
+                seen.extend(g);
+            }
+            if seen != (0..*n).collect::<Vec<_>>() {
+                return Err("order not preserved".into());
+            }
+            Ok(())
+        },
+    );
+}

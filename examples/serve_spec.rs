@@ -1,6 +1,9 @@
 //! Batched serving demo through the router (the vLLM-shaped front-end):
-//! bounded-queue admission, bucketed continuous batching, a worker thread
-//! owning the engine, per-request metrics.
+//! bounded-queue admission, continuous batching with mid-flight
+//! join/leave (a finished sequence's KV row is reused by the next queued
+//! request), a worker thread owning the engine, per-request metrics —
+//! including true per-session queue wait, time-to-first-token and
+//! latency rather than the old group-total stamp.
 //!
 //! Requires trained checkpoints (run `make drafts` or the quickstart
 //! first). Usage:
@@ -58,9 +61,10 @@ fn main() -> anyhow::Result<()> {
         } else {
             None
         };
-        let mut engine =
-            SpecEngine::new(rt, &draft2, &tckpt, &dckpt, vocab_map, Default::default())?;
-        Ok(move |prompts: &[Vec<i32>], max_new: usize| engine.generate_batch(prompts, max_new))
+        // SpecEngine implements SchedulerCore; the router's worker wraps
+        // it in a continuous-batching Scheduler, so sequences join and
+        // leave the running decode group mid-flight.
+        SpecEngine::new(rt, &draft2, &tckpt, &dckpt, vocab_map, Default::default())
     })?;
 
     println!("submitting {} requests (draft={draft})…", prompts.len());
@@ -74,9 +78,11 @@ fn main() -> anyhow::Result<()> {
     for (i, rx) in receivers.into_iter().enumerate() {
         let res = rx.recv()?.map_err(|e| anyhow::anyhow!(e))?;
         println!(
-            "  req {i:>2}: {:>3} tokens  tau={:.2}  {:>6.0} ms",
+            "  req {i:>2}: {:>3} tokens  tau={:.2}  queue {:>5.0} ms  ttft {:>5.0} ms  total {:>6.0} ms",
             res.tokens.len(),
             res.stats.tau(),
+            res.queue_ms,
+            res.ttft_ms,
             res.latency_ms
         );
         tokens += res.tokens.len();

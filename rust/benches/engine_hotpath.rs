@@ -5,16 +5,73 @@
 //! Needs artifacts + a dense-s target/draft checkpoint (kl).
 
 use std::path::Path;
+use std::time::Instant;
 
 use lk_spec::bench::{bench, skip, Table};
 use lk_spec::data::corpus::Corpus;
 use lk_spec::data::grammar::Domain;
 use lk_spec::eval::{EvalMode, EvalSettings};
 use lk_spec::runtime::Runtime;
+use lk_spec::server::batcher::BatcherConfig;
+use lk_spec::server::{Scheduler, SimCore};
 use lk_spec::tensor::HostTensor;
 use lk_spec::train::RunDirs;
 
+/// Host-side scheduler bookkeeping cost (slot allocation, join/leave,
+/// metrics) measured against the PJRT-free SimCore — isolates the
+/// continuous-batching overhead the engine adds per round. Always runs,
+/// even without artifacts.
+fn bench_scheduler_overhead() -> anyhow::Result<()> {
+    let mut table = Table::new(
+        "Scheduler bookkeeping overhead (SimCore, buckets {1,4})",
+        &["scenario", "mean ms", "p95 ms", "p99 ms"],
+    );
+    for (name, n_requests, max_new) in [
+        ("drain 32 × 16tok", 32usize, 16usize),
+        ("drain 64 × 32tok", 64, 32),
+        ("churn 128 × 8tok", 128, 8),
+    ] {
+        let r = bench(name, 2, 20, || {
+            let cfg = BatcherConfig {
+                buckets: vec![1, 4],
+                max_wait: std::time::Duration::ZERO,
+                queue_cap: 4096,
+            };
+            let mut sched = Scheduler::new(SimCore::new(4, 0xBE5C, vec![1, 4]), cfg);
+            let mut served = 0usize;
+            // Prime a full bucket, then trickle the rest so the
+            // join-mid-flight path (not just group formation) is hot.
+            let mut submitted = 0usize;
+            while submitted < 4.min(n_requests) {
+                sched
+                    .submit(vec![1 + submitted as i32, 2, 3], max_new)
+                    .unwrap();
+                submitted += 1;
+            }
+            while served < n_requests {
+                if submitted < n_requests {
+                    sched
+                        .submit(vec![1 + submitted as i32, 2, 3], max_new)
+                        .unwrap();
+                    submitted += 1;
+                }
+                served += sched.tick(Instant::now()).unwrap().len();
+            }
+            assert!(sched.is_idle());
+        });
+        table.row(vec![
+            name.to_string(),
+            format!("{:.3}", r.mean_ms),
+            format!("{:.3}", r.p95_ms),
+            format!("{:.3}", r.p99_ms),
+        ]);
+    }
+    table.emit("scheduler_overhead")?;
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    bench_scheduler_overhead()?;
     if !Path::new("artifacts/manifest.json").exists() {
         skip("artifacts missing");
         return Ok(());

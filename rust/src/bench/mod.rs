@@ -14,6 +14,7 @@ pub struct BenchResult {
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
+    pub p99_ms: f64,
 }
 
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
@@ -32,6 +33,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         mean_ms: pct.mean(),
         p50_ms: pct.pct(50.0),
         p95_ms: pct.pct(95.0),
+        p99_ms: pct.pct(99.0),
     }
 }
 
@@ -128,5 +130,6 @@ mod tests {
         });
         assert_eq!(r.iters, 10);
         assert!(r.mean_ms < 10.0);
+        assert!(r.p99_ms >= r.p50_ms);
     }
 }

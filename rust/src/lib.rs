@@ -4,7 +4,8 @@
 //! Speculative Decoding" (ICML 2026) as a three-layer Rust + JAX + Pallas
 //! system: a speculator **training framework** with the LK loss family as
 //! first-class objectives, and a speculative-decoding **serving engine**
-//! (continuous batcher, KV manager, draft-then-verify scheduler, exact
+//! (pluggable `DraftBackend` architectures, continuous-batching
+//! scheduler with mid-flight join/leave over slot-mapped KV rows, exact
 //! rejection sampling). Python/JAX only ever runs at build time
 //! (`make artifacts`); every runtime path is Rust driving AOT-compiled
 //! XLA executables through PJRT.

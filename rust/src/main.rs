@@ -330,15 +330,9 @@ fn serve_demo(args: &Args) -> Result<()> {
         } else {
             None
         };
-        let mut engine = lk_spec::server::SpecEngine::new(
-            rt,
-            &draft,
-            &tckpt,
-            &dckpt,
-            vocab_map,
-            Default::default(),
-        )?;
-        Ok(move |prompts: &[Vec<i32>], max_new: usize| engine.generate_batch(prompts, max_new))
+        // The engine implements SchedulerCore: the router's worker wraps
+        // it in a continuous-batching Scheduler (join/leave mid-flight).
+        lk_spec::server::SpecEngine::new(rt, &draft, &tckpt, &dckpt, vocab_map, Default::default())
     })?;
 
     info!("submitting {} requests…", prompts.len());
@@ -355,9 +349,11 @@ fn serve_demo(args: &Args) -> Result<()> {
                 total_tokens += res.tokens.len();
                 taus.push(res.stats.tau());
                 info!(
-                    "request {i}: {} tokens, tau={:.2}, {:.0} ms",
+                    "request {i}: {} tokens, tau={:.2}, queue {:.0} ms, ttft {:.0} ms, total {:.0} ms",
                     res.tokens.len(),
                     res.stats.tau(),
+                    res.queue_ms,
+                    res.ttft_ms,
                     res.latency_ms
                 );
             }

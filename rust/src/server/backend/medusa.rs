@@ -1,0 +1,95 @@
+//! MEDUSA draft backend: K parallel heads proposing from one conditioning
+//! hidden state; no draft-side KV, so continuous-batching joins move only
+//! the per-sequence hidden (carried inside `SeqState`).
+
+use anyhow::Result;
+
+use crate::runtime::{DraftSpec, Runtime};
+use crate::tensor::HostTensor;
+
+use super::{
+    arg_refs, lit_f32, pickup_hidden_advance, pickup_hidden_bootstrap, upload, DraftBackend,
+    EngineCx, GroupState,
+};
+
+pub struct Medusa;
+
+impl DraftBackend for Medusa {
+    fn name(&self) -> &'static str {
+        "medusa"
+    }
+
+    fn max_k(&self, _rt: &Runtime, dspec: &DraftSpec) -> usize {
+        dspec.k_heads
+    }
+
+    fn bootstrap(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        _tok_flat: &[i32],
+        feats: &HostTensor,
+    ) -> Result<()> {
+        pickup_hidden_bootstrap(cx, g, feats);
+        Ok(())
+    }
+
+    fn propose(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &mut [Vec<i32>],
+        q_full: &mut [Vec<Vec<f32>>],
+    ) -> Result<()> {
+        let b = g.b;
+        let k = cx.k;
+        let d = cx.tspec.d_model;
+        let vocab = cx.tspec.vocab;
+        let propose = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("propose_b{b}"))?;
+        let mut hidden = vec![0f32; b * d];
+        for (row, seq) in g.seqs.iter().enumerate() {
+            hidden[row * d..(row + 1) * d].copy_from_slice(&seq.hidden);
+        }
+        let dyn_in = [lit_f32(&[b, d], &hidden)?];
+        let dyn_b = upload(cx.rt, &dyn_in)?;
+        let args = arg_refs(&cx.dparams, &[], &dyn_b);
+        let outs = propose.run_bufs(&args)?;
+        let logits = propose.output_host(&outs, 0)?.as_f32(); // [K,B,V]
+        for row in 0..b {
+            for i in 0..k {
+                let off = (i * b + row) * vocab;
+                let (qf, qc) = cx.draft_dist(&logits[off..off + vocab]);
+                let xi = cx.sample_draft(&mut g.seqs[row].rng, &qc);
+                drafts[row][i] = cx.draft_token_id(xi);
+                q_full[row].push(qf);
+            }
+        }
+        Ok(())
+    }
+
+    fn advance(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        _drafts: &[Vec<i32>],
+        n_acc: &[usize],
+        feats: &HostTensor,
+    ) -> Result<()> {
+        pickup_hidden_advance(cx, g, n_acc, feats);
+        Ok(())
+    }
+
+    fn adopt_row(
+        &self,
+        _cx: &EngineCx,
+        _dst: &mut GroupState,
+        _dst_row: usize,
+        _src: &GroupState,
+        _src_row: usize,
+    ) -> Result<()> {
+        // All draft state is per-sequence host state; nothing packed.
+        Ok(())
+    }
+}

@@ -1,0 +1,102 @@
+//! MLP-speculator draft backend: a per-head recurrent MLP state threaded
+//! through K chained `step` calls. Like MEDUSA there is no draft-side KV;
+//! the conditioning hidden lives in `SeqState` and joins are free.
+
+use anyhow::Result;
+
+use crate::runtime::{DraftSpec, Runtime};
+use crate::tensor::HostTensor;
+
+use super::{
+    arg_refs, lit_f32, lit_i32, lit_scalar_i32, pickup_hidden_advance, pickup_hidden_bootstrap,
+    tensor_row, upload, DraftBackend, EngineCx, GroupState,
+};
+
+pub struct Mlp;
+
+impl DraftBackend for Mlp {
+    fn name(&self) -> &'static str {
+        "mlp"
+    }
+
+    fn max_k(&self, _rt: &Runtime, dspec: &DraftSpec) -> usize {
+        dspec.k_heads
+    }
+
+    fn bootstrap(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        _tok_flat: &[i32],
+        feats: &HostTensor,
+    ) -> Result<()> {
+        pickup_hidden_bootstrap(cx, g, feats);
+        Ok(())
+    }
+
+    fn propose(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &mut [Vec<i32>],
+        q_full: &mut [Vec<Vec<f32>>],
+    ) -> Result<()> {
+        let b = g.b;
+        let k = cx.k;
+        let d = cx.tspec.d_model;
+        let vocab = cx.tspec.vocab;
+        let step = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("step_b{b}"))?;
+        let mut state = vec![0f32; b * d];
+        for (row, seq) in g.seqs.iter().enumerate() {
+            state[row * d..(row + 1) * d].copy_from_slice(&seq.hidden);
+        }
+        let mut state_t = lit_f32(&[b, d], &state)?;
+        let mut toks: Vec<i32> = g.seqs.iter().map(|s| s.last_token).collect();
+        for i in 0..k {
+            let dyn_in = [
+                state_t,
+                lit_i32(&[b], &toks)?,
+                lit_scalar_i32(i as i32)?,
+            ];
+            let dyn_b = upload(cx.rt, &dyn_in)?;
+            let args = arg_refs(&cx.tparams, &cx.dparams, &dyn_b);
+            let outs = step.run_bufs(&args)?;
+            let lg = step.output_host(&outs, 0)?;
+            for row in 0..b {
+                let lrow = tensor_row(&lg, row, &[b, vocab], 0);
+                let (qf, qc) = cx.draft_dist(&lrow);
+                let xi = cx.sample_draft(&mut g.seqs[row].rng, &qc);
+                drafts[row][i] = cx.draft_token_id(xi);
+                q_full[row].push(qf);
+                toks[row] = drafts[row][i];
+            }
+            state_t = outs.into_iter().nth(1).unwrap();
+        }
+        Ok(())
+    }
+
+    fn advance(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        _drafts: &[Vec<i32>],
+        n_acc: &[usize],
+        feats: &HostTensor,
+    ) -> Result<()> {
+        pickup_hidden_advance(cx, g, n_acc, feats);
+        Ok(())
+    }
+
+    fn adopt_row(
+        &self,
+        _cx: &EngineCx,
+        _dst: &mut GroupState,
+        _dst_row: usize,
+        _src: &GroupState,
+        _src_row: usize,
+    ) -> Result<()> {
+        Ok(())
+    }
+}

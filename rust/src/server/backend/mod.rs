@@ -1,0 +1,350 @@
+//! Draft-architecture backends behind the `DraftBackend` trait.
+//!
+//! The decode loop in `server::engine` is architecture-agnostic: it owns
+//! the target prefill/verify calls, the exact acceptance rule and all
+//! sequence bookkeeping, and delegates every draft-model interaction to a
+//! `DraftBackend`. A new draft architecture plugs in by implementing the
+//! trait and registering in `make_backend` — the engine itself never
+//! matches on an architecture enum.
+//!
+//! The trait has four duties, mirroring the four places the old engine
+//! dispatched on its private `Kind`:
+//!
+//!   * `bootstrap` — build draft-side state from the target prefill
+//!     (draft-KV extension for recurrent archs, hidden pickup for
+//!     parallel-head archs);
+//!   * `propose`   — produce K draft tokens + full-vocab q distributions
+//!     per batch row (all sampling host-side via `spec::sampling`);
+//!   * `advance`   — roll draft state past this round's accepted prefix
+//!     using the verify pass's features;
+//!   * `adopt_row` — copy one row of packed draft state between groups
+//!     (the continuous-batching join path; per-sequence host state moves
+//!     with the `SeqState` itself).
+
+pub mod medusa;
+pub mod mlp;
+pub mod recurrent;
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{pack, DraftSpec, Runtime, TargetSpec, TensorSpec};
+use crate::spec::accept::AcceptanceStats;
+use crate::spec::sampling::{self, SamplingMode};
+use crate::tensor::{DType, HostTensor};
+use crate::util::Pcg64;
+
+use super::engine::EngineOpts;
+use super::kv;
+
+/// Batch axis of the packed target KV cache [L, 2, B, H, Smax, Dh].
+pub const TKV_BATCH_AXIS: usize = 2;
+/// Batch axis of the packed draft KV cache [2, B, H, Smax, Dh].
+pub const DKV_BATCH_AXIS: usize = 1;
+
+/// Shared engine context every backend call receives: the runtime, model
+/// specs, cached parameter buffers and the sampling configuration.
+pub struct EngineCx<'rt> {
+    pub rt: &'rt Runtime,
+    pub tspec: TargetSpec,
+    pub dspec: DraftSpec,
+    pub tparams: Vec<xla::PjRtBuffer>,
+    pub dparams: Vec<xla::PjRtBuffer>,
+    // Source literals MUST outlive the buffers: BufferFromHostLiteral's
+    // h2d copy is asynchronous and references the literal from a worker
+    // thread (upstream xla_rs awaits the ready future for this reason).
+    pub(crate) _param_lits: Vec<xla::Literal>,
+    pub vocab_map: Option<Vec<i32>>,
+    pub opts: EngineOpts,
+    /// Drafts per round (opts.k_draft clamped to the backend's max).
+    pub k: usize,
+}
+
+impl<'rt> EngineCx<'rt> {
+    /// Smallest lowered serve bucket that fits `n` sequences.
+    pub fn bucket(&self, n: usize) -> usize {
+        *self
+            .rt
+            .manifest
+            .serve_batches
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or_else(|| self.rt.manifest.serve_batches.last().unwrap())
+    }
+
+    /// Draft logits (possibly truncated vocab) -> (q over full vocab,
+    /// q over draft vocab) at the engine temperature.
+    pub fn draft_dist(&self, logits: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let qc = sampling::softmax_t(logits, self.opts.temperature.max(1e-3));
+        match &self.vocab_map {
+            None => (qc.clone(), qc),
+            Some(map) => {
+                let mut full = vec![0f32; self.tspec.vocab];
+                for (i, &fid) in map.iter().enumerate() {
+                    full[fid as usize] = qc[i];
+                }
+                (full, qc)
+            }
+        }
+    }
+
+    pub fn draft_token_id(&self, compact_idx: usize) -> i32 {
+        match &self.vocab_map {
+            None => compact_idx as i32,
+            Some(map) => map[compact_idx],
+        }
+    }
+
+    pub fn sample_draft(&self, rng: &mut Pcg64, q_compact: &[f32]) -> usize {
+        match self.opts.mode {
+            SamplingMode::Stochastic => sampling::sample_categorical(rng, q_compact),
+            SamplingMode::Greedy | SamplingMode::GreedyDraft => sampling::argmax(q_compact),
+        }
+    }
+
+    pub fn sample_target(&self, rng: &mut Pcg64, p: &[f32]) -> i32 {
+        match self.opts.mode {
+            SamplingMode::Greedy => sampling::argmax(p) as i32,
+            _ => sampling::sample_categorical(rng, p) as i32,
+        }
+    }
+}
+
+/// Per-sequence decode state. Host-side only; the packed KV rows live in
+/// `GroupState`. Index contract (mirrors python/compile/drafts.py):
+/// `len` = processed target positions; `last_token` = accepted but not
+/// yet processed; a round's verify block occupies positions len..len+K
+/// and its logits[i] give p(·| …, block[..=i]).
+pub struct SeqState {
+    /// Stable request id; also keys the RNG stream, so results do not
+    /// depend on batch composition or admission order.
+    pub id: u64,
+    pub len: usize,
+    pub last_token: i32,
+    pub generated: Vec<i32>,
+    pub max_new: usize,
+    pub rng: Pcg64,
+    pub stats: AcceptanceStats,
+    pub done: bool,
+    /// [d] MEDUSA/MLP conditioning hidden.
+    pub hidden: Vec<f32>,
+    /// Recurrent archs: q-logits for draft 1 of the next round.
+    pub q1: Vec<f32>,
+    /// Submission time (queue wait + latency are measured from here).
+    pub enqueued: Instant,
+    pub queue_ms: f64,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+    pub rounds: u64,
+}
+
+/// A decode group with packed caches. Rows are slot-mapped sessions
+/// under the scheduler (a finished row is freed and reused mid-flight);
+/// under the lockstep `generate_batch` path rows are fixed for the
+/// group's lifetime.
+pub struct GroupState {
+    pub b: usize,
+    /// Row-indexed sequence states (padding rows start `done`).
+    pub seqs: Vec<SeqState>,
+    pub tkv: xla::Literal,
+    /// Shape/dtype of `tkv` (for host row copies on join).
+    pub tkv_spec: TensorSpec,
+    pub dkv: Option<xla::Literal>,
+    pub dkv_spec: Option<TensorSpec>,
+    /// [B, d] recurrent hidden carry.
+    pub h_prev: Option<xla::Literal>,
+}
+
+/// Behaviour class of a draft architecture. Object-safe: the engine
+/// stores a `Box<dyn DraftBackend>`.
+pub trait DraftBackend {
+    /// Human-readable architecture tag (diagnostics only).
+    fn name(&self) -> &'static str;
+
+    /// Maximum chain length this architecture supports per round.
+    fn max_k(&self, rt: &Runtime, dspec: &DraftSpec) -> usize;
+
+    /// Build draft-side state for a freshly prefilled group. `tok_flat`
+    /// is the [B*Sp] prompt block fed to the target prefill; `feats` its
+    /// [B, Sp, feat_dim] feature output. Sequence lengths and bootstrap
+    /// tokens are read from `g.seqs`.
+    fn bootstrap(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        tok_flat: &[i32],
+        feats: &HostTensor,
+    ) -> Result<()>;
+
+    /// Draft `cx.k` tokens per row, filling `drafts[row][i]` (full-vocab
+    /// token ids) and `q_full[row][i]` (full-vocab draft distributions).
+    fn propose(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &mut [Vec<i32>],
+        q_full: &mut [Vec<Vec<f32>>],
+    ) -> Result<()>;
+
+    /// Advance draft state past this round's accepted prefixes.
+    /// `n_acc[row]` is the accepted prefix length; `feats` the verify
+    /// pass's [B, Vt, feat_dim] features.
+    fn advance(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &[Vec<i32>],
+        n_acc: &[usize],
+        feats: &HostTensor,
+    ) -> Result<()>;
+
+    /// Copy row `src_row` of `src`'s packed draft state into row
+    /// `dst_row` of `dst` (continuous-batching join). Per-sequence host
+    /// state (`SeqState`) is moved by the caller.
+    fn adopt_row(
+        &self,
+        cx: &EngineCx,
+        dst: &mut GroupState,
+        dst_row: usize,
+        src: &GroupState,
+        src_row: usize,
+    ) -> Result<()>;
+}
+
+/// Registry: architecture string -> backend.
+pub fn make_backend(arch: &str) -> Result<Box<dyn DraftBackend>> {
+    match arch {
+        "eagle3" | "mtp" => Ok(Box::new(recurrent::Recurrent)),
+        "medusa" => Ok(Box::new(medusa::Medusa)),
+        "mlp" => Ok(Box::new(mlp::Mlp)),
+        other => bail!("unknown draft arch '{other}'"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared hidden-pickup helpers (parallel-head archs: MEDUSA, MLP)
+// ---------------------------------------------------------------------------
+
+/// Bootstrap: pick up the last prompt position's hidden slice per row.
+pub(crate) fn pickup_hidden_bootstrap(cx: &EngineCx, g: &mut GroupState, feats: &HostTensor) {
+    let sp = cx.rt.manifest.prompt_len;
+    let d = cx.tspec.d_model;
+    let f3 = cx.tspec.feat_dim;
+    let feats_full = feats.as_f32();
+    for (row, seq) in g.seqs.iter_mut().enumerate() {
+        let c = seq.len;
+        let off = (row * sp + c - 1) * f3 + (f3 - d);
+        seq.hidden = feats_full[off..off + d].to_vec();
+    }
+}
+
+/// Advance: pick up the hidden at the accepted-prefix boundary per row.
+pub(crate) fn pickup_hidden_advance(
+    cx: &EngineCx,
+    g: &mut GroupState,
+    n_acc: &[usize],
+    feats: &HostTensor,
+) {
+    let vt = cx.rt.manifest.verify_t;
+    let d = cx.tspec.d_model;
+    let f3 = cx.tspec.feat_dim;
+    let feats_full = feats.as_f32();
+    for row in 0..g.b {
+        let j = n_acc[row];
+        let off = (row * vt + j) * f3 + (f3 - d);
+        g.seqs[row].hidden = feats_full[off..off + d].to_vec();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal plumbing shared by the engine and the backends
+// ---------------------------------------------------------------------------
+
+/// Upload dynamic inputs. SAFETY CONTRACT: the source literals must stay
+/// alive until the call consuming these buffers has been synced (the h2d
+/// copy is async and borrows the literal) — every call site keeps the
+/// `dyn_in` array in scope across `run_bufs`, which force-syncs outputs.
+pub(crate) fn upload(rt: &Runtime, lits: &[xla::Literal]) -> Result<Vec<xla::PjRtBuffer>> {
+    lits.iter().map(|l| rt.to_buffer(l)).collect()
+}
+
+/// Upload parameters, returning the buffers AND the literals backing
+/// them — the engine stores both so the async copies can never outlive
+/// their source (the crash mode this fixed is documented in
+/// EXPERIMENTS.md §Perf).
+pub(crate) fn upload_params(
+    rt: &Runtime,
+    params: &[HostTensor],
+) -> Result<(Vec<xla::PjRtBuffer>, Vec<xla::Literal>)> {
+    let lits: Vec<xla::Literal> = params.iter().map(pack::to_literal).collect::<Result<_>>()?;
+    let bufs: Vec<xla::PjRtBuffer> =
+        lits.iter().map(|l| rt.to_buffer(l)).collect::<Result<_>>()?;
+    Ok((bufs, lits))
+}
+
+pub(crate) fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    pack::to_literal(&HostTensor::from_f32(shape, data))
+}
+
+pub(crate) fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    pack::to_literal(&HostTensor::from_i32(shape, data))
+}
+
+pub(crate) fn lit_scalar_i32(v: i32) -> Result<xla::Literal> {
+    pack::to_literal(&HostTensor::scalar_i32(v))
+}
+
+pub(crate) fn lit_zeros_f32(shape: &[usize]) -> Result<xla::Literal> {
+    pack::to_literal(&HostTensor::zeros(DType::F32, shape))
+}
+
+/// params1 ++ params2 ++ dynamic — as the &buffer slice run_bufs wants.
+pub(crate) fn arg_refs<'a>(
+    p1: &'a [xla::PjRtBuffer],
+    p2: &'a [xla::PjRtBuffer],
+    dynamic: &'a [xla::PjRtBuffer],
+) -> Vec<&'a xla::PjRtBuffer> {
+    p1.iter().chain(p2.iter()).chain(dynamic.iter()).collect()
+}
+
+/// Extract `tensor[row, idx, :]` from a [B, N, D]-shaped host tensor (or
+/// `tensor[row, :]` from [B, D] with idx = 0).
+pub(crate) fn tensor_row(t: &HostTensor, row: usize, shape: &[usize], idx: usize) -> Vec<f32> {
+    debug_assert_eq!(t.shape, shape);
+    let dlast = *shape.last().unwrap();
+    let n_mid = if shape.len() == 3 { shape[1] } else { 1 };
+    let off = (row * n_mid + idx) * dlast;
+    t.data[off * 4..(off + dlast) * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Copy one batch row between two packed literals (join path). Both
+/// literals round-trip through the host; the strided move itself is
+/// `kv::copy_row`. Returns the updated destination literal.
+pub(crate) fn copy_literal_row(
+    dst: &xla::Literal,
+    dst_spec: &TensorSpec,
+    dst_row: usize,
+    src: &xla::Literal,
+    src_spec: &TensorSpec,
+    src_row: usize,
+    axis: usize,
+) -> Result<xla::Literal> {
+    let mut host_dst = pack::from_literal(dst, dst_spec, "copy_literal_row:dst")?;
+    let host_src = pack::from_literal(src, src_spec, "copy_literal_row:src")?;
+    kv::copy_row(&mut host_dst, dst_row, &host_src, src_row, axis)?;
+    pack::to_literal(&host_dst)
+}
+
+/// Ad-hoc tensor spec for literals whose shape the engine knows exactly
+/// (e.g. the [B, d] recurrent hidden carry).
+pub(crate) fn spec_f32(shape: Vec<usize>) -> TensorSpec {
+    TensorSpec {
+        name: String::new(),
+        shape,
+        dtype: DType::F32,
+    }
+}

@@ -1,0 +1,237 @@
+//! Recurrent draft backend (EAGLE-3 / MTP): own KV cache + hidden-state
+//! recurrence. Drafting chains `step` calls; bootstrap/advance extend the
+//! draft KV with fused target features via the `extend_p` / `extend_k`
+//! entries.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{DraftSpec, Runtime};
+use crate::tensor::HostTensor;
+
+use super::{
+    arg_refs, copy_literal_row, lit_f32, lit_i32, lit_zeros_f32, spec_f32, tensor_row, upload,
+    DraftBackend, EngineCx, GroupState, DKV_BATCH_AXIS,
+};
+
+pub struct Recurrent;
+
+impl DraftBackend for Recurrent {
+    fn name(&self) -> &'static str {
+        "recurrent"
+    }
+
+    fn max_k(&self, rt: &Runtime, _dspec: &DraftSpec) -> usize {
+        // May exceed the K=6 trained heads up to verify_t - 1 = 7.
+        rt.manifest.verify_t - 1
+    }
+
+    fn bootstrap(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        tok_flat: &[i32],
+        feats: &HostTensor,
+    ) -> Result<()> {
+        let b = g.b;
+        let sp = cx.rt.manifest.prompt_len;
+        let d = cx.tspec.d_model;
+        let fdim = cx.dspec.fuse_dim;
+        let f3 = cx.tspec.feat_dim;
+        let feats_full = feats.as_f32();
+        let mut feats_in = vec![0f32; b * sp * fdim];
+        let mut tnext = vec![0i32; b * sp];
+        for (row, seq) in g.seqs.iter().enumerate() {
+            let c = seq.len;
+            for t in 0..sp {
+                let base = (row * sp + t) * f3;
+                feats_in[(row * sp + t) * fdim..(row * sp + t + 1) * fdim]
+                    .copy_from_slice(&feats_full[base + (f3 - fdim)..base + f3]);
+            }
+            for t in 0..c - 1 {
+                tnext[row * sp + t] = tok_flat[row * sp + t + 1];
+            }
+            tnext[row * sp + c - 1] = seq.last_token;
+        }
+        let extend = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("extend_p_b{b}"))?;
+        let dkv0 = lit_zeros_f32(&[
+            2,
+            b,
+            cx.tspec.n_heads,
+            cx.tspec.max_seq,
+            cx.tspec.head_dim,
+        ])?;
+        let dyn_in = [
+            dkv0,
+            lit_f32(&[b, sp, fdim], &feats_in)?,
+            lit_i32(&[b, sp], &tnext)?,
+            lit_i32(&[b], &vec![0i32; b])?,
+        ];
+        let dyn_b = upload(cx.rt, &dyn_in)?;
+        let args = arg_refs(&cx.tparams, &cx.dparams, &dyn_b);
+        let outs = extend.run_bufs(&args)?;
+        let q_all = extend.output_host(&outs, 0)?; // [B,Sp,Vd]
+        let h_all = extend.output_host(&outs, 1)?; // [B,Sp,d]
+        let vd = cx.dspec.draft_vocab;
+        let mut hprev = vec![0f32; b * d];
+        for (row, seq) in g.seqs.iter_mut().enumerate() {
+            let c = seq.len;
+            seq.q1 = tensor_row(&q_all, row, &[b, sp, vd], c - 1);
+            hprev[row * d..(row + 1) * d]
+                .copy_from_slice(&tensor_row(&h_all, row, &[b, sp, d], c - 1));
+        }
+        g.dkv_spec = Some(extend.spec.outputs[2].clone());
+        g.dkv = Some(outs.into_iter().nth(2).unwrap());
+        g.h_prev = Some(lit_f32(&[b, d], &hprev)?);
+        Ok(())
+    }
+
+    fn propose(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &mut [Vec<i32>],
+        q_full: &mut [Vec<Vec<f32>>],
+    ) -> Result<()> {
+        let b = g.b;
+        let k = cx.k;
+        let step = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("step_b{b}"))?;
+        let vd = cx.dspec.draft_vocab;
+        let mut q_logits: Vec<Vec<f32>> = g.seqs.iter().map(|s| s.q1.clone()).collect();
+        for i in 0..k {
+            let mut toks = vec![0i32; b];
+            for row in 0..b {
+                let (qf, qc) = cx.draft_dist(&q_logits[row]);
+                let xi = cx.sample_draft(&mut g.seqs[row].rng, &qc);
+                drafts[row][i] = cx.draft_token_id(xi);
+                q_full[row].push(qf);
+                toks[row] = drafts[row][i];
+            }
+            if i + 1 == k {
+                break; // q_{k+1} never needed
+            }
+            let pos: Vec<i32> = g.seqs.iter().map(|s| (s.len + i) as i32).collect();
+            let dyn_in = [
+                g.dkv.take().context("dkv")?,
+                g.h_prev.take().context("h_prev")?,
+                lit_i32(&[b], &toks)?,
+                lit_i32(&[b], &pos)?,
+            ];
+            let dyn_b = upload(cx.rt, &dyn_in)?;
+            let args = arg_refs(&cx.tparams, &cx.dparams, &dyn_b);
+            let outs = step.run_bufs(&args)?;
+            let ql = step.output_host(&outs, 0)?;
+            for row in 0..b {
+                q_logits[row] = tensor_row(&ql, row, &[b, vd], 0);
+            }
+            let mut it = outs.into_iter();
+            let _ = it.next(); // logits
+            g.h_prev = Some(it.next().unwrap());
+            g.dkv = Some(it.next().unwrap());
+        }
+        Ok(())
+    }
+
+    fn advance(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &[Vec<i32>],
+        n_acc: &[usize],
+        feats: &HostTensor,
+    ) -> Result<()> {
+        let b = g.b;
+        let vt = cx.rt.manifest.verify_t;
+        let d = cx.tspec.d_model;
+        let fdim = cx.dspec.fuse_dim;
+        let f3 = cx.tspec.feat_dim;
+        let feats_full = feats.as_f32();
+        let mut feats_in = vec![0f32; b * vt * fdim];
+        let mut tnext = vec![0i32; b * vt];
+        let mut pos = vec![0i32; b];
+        for row in 0..b {
+            let seq = &g.seqs[row];
+            let j = n_acc[row];
+            for t in 0..vt {
+                let base = (row * vt + t) * f3;
+                feats_in[(row * vt + t) * fdim..(row * vt + t + 1) * fdim]
+                    .copy_from_slice(&feats_full[base + (f3 - fdim)..base + f3]);
+            }
+            for (t, item) in drafts[row].iter().enumerate().take(j) {
+                tnext[row * vt + t] = *item;
+            }
+            tnext[row * vt + j] = seq.last_token;
+            // extend starts where this round's verify block started
+            pos[row] = if seq.done {
+                (seq.len.saturating_sub(1 + j)) as i32
+            } else {
+                (seq.len - 1 - j) as i32
+            };
+        }
+        let extend = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("extend_k_b{b}"))?;
+        let dyn_in = [
+            g.dkv.take().context("dkv")?,
+            lit_f32(&[b, vt, fdim], &feats_in)?,
+            lit_i32(&[b, vt], &tnext)?,
+            lit_i32(&[b], &pos)?,
+        ];
+        let dyn_b = upload(cx.rt, &dyn_in)?;
+        let args = arg_refs(&cx.tparams, &cx.dparams, &dyn_b);
+        let outs = extend.run_bufs(&args)?;
+        let q_all = extend.output_host(&outs, 0)?;
+        let h_all = extend.output_host(&outs, 1)?;
+        let vd = cx.dspec.draft_vocab;
+        let mut hprev = vec![0f32; b * d];
+        for row in 0..b {
+            let j = n_acc[row];
+            let seq = &mut g.seqs[row];
+            seq.q1 = tensor_row(&q_all, row, &[b, vt, vd], j);
+            hprev[row * d..(row + 1) * d]
+                .copy_from_slice(&tensor_row(&h_all, row, &[b, vt, d], j));
+        }
+        g.dkv = Some(outs.into_iter().nth(2).unwrap());
+        g.h_prev = Some(lit_f32(&[b, d], &hprev)?);
+        Ok(())
+    }
+
+    fn adopt_row(
+        &self,
+        cx: &EngineCx,
+        dst: &mut GroupState,
+        dst_row: usize,
+        src: &GroupState,
+        src_row: usize,
+    ) -> Result<()> {
+        // Draft KV row.
+        let dst_dkv = dst.dkv.take().context("adopt_row: dst dkv")?;
+        let dkv = copy_literal_row(
+            &dst_dkv,
+            dst.dkv_spec.as_ref().context("adopt_row: dst dkv spec")?,
+            dst_row,
+            src.dkv.as_ref().context("adopt_row: src dkv")?,
+            src.dkv_spec.as_ref().context("adopt_row: src dkv spec")?,
+            src_row,
+            DKV_BATCH_AXIS,
+        )?;
+        dst.dkv = Some(dkv);
+        // Hidden carry row [B, d].
+        let d = cx.tspec.d_model;
+        let dst_h = dst.h_prev.take().context("adopt_row: dst h_prev")?;
+        let h = copy_literal_row(
+            &dst_h,
+            &spec_f32(vec![dst.b, d]),
+            dst_row,
+            src.h_prev.as_ref().context("adopt_row: src h_prev")?,
+            &spec_f32(vec![src.b, d]),
+            src_row,
+            0,
+        )?;
+        dst.h_prev = Some(h);
+        Ok(())
+    }
+}

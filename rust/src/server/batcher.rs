@@ -103,6 +103,24 @@ impl<T> Batcher<T> {
         let n = self.queue.len().min(self.max_bucket());
         Some(self.queue.drain(..n).map(|p| p.payload).collect())
     }
+
+    /// Pop up to `n` queued requests immediately, bypassing the group
+    /// policy — the continuous-batching join path: a free slot in a
+    /// running group should never idle while requests wait.
+    pub fn take(&mut self, n: usize) -> Vec<T> {
+        let n = n.min(self.queue.len());
+        self.queue.drain(..n).map(|p| p.payload).collect()
+    }
+
+    /// Return a request to the FRONT of the queue (it stays next in
+    /// line). Used when a popped group exceeds the engine's bucket
+    /// capacity and the tail must wait for the next group.
+    pub fn requeue_front(&mut self, payload: T) {
+        self.queue.push_front(Pending {
+            payload,
+            enqueued: Instant::now(),
+        });
+    }
 }
 
 #[cfg(test)]
@@ -157,5 +175,51 @@ mod tests {
         assert_eq!(b.bucket_for(2), 4);
         assert_eq!(b.bucket_for(4), 4);
         assert_eq!(b.bucket_for(9), 4);
+    }
+
+    #[test]
+    fn take_bypasses_wait_policy_and_preserves_order() {
+        let mut b = Batcher::new(cfg(10_000)); // long max_wait
+        for i in 0..3 {
+            b.push(i).unwrap();
+        }
+        // The group policy would wait (partial bucket, not stale) …
+        assert!(b.next_group(Instant::now()).is_none());
+        // … but take() hands requests over immediately, FIFO.
+        assert_eq!(b.take(2), vec![0, 1]);
+        assert_eq!(b.len(), 1);
+        // Over-asking is clamped to what is queued.
+        assert_eq!(b.take(10), vec![2]);
+        assert!(b.take(5).is_empty());
+    }
+
+    #[test]
+    fn max_wait_flushes_partial_bucket() {
+        let mut b = Batcher::new(BatcherConfig {
+            buckets: vec![1, 4],
+            max_wait: Duration::from_millis(1),
+            queue_cap: 8,
+        });
+        let before = Instant::now();
+        b.push(42).unwrap();
+        // Not stale at the enqueue instant (clamped duration_since = 0) …
+        assert!(b.next_group(before).is_none());
+        // … but definitely stale past max_wait.
+        let later = Instant::now() + Duration::from_millis(5);
+        assert_eq!(b.next_group(later), Some(vec![42]));
+    }
+
+    #[test]
+    fn requeue_front_keeps_fifo_position() {
+        let mut b = Batcher::new(cfg(0));
+        b.push(1).unwrap();
+        b.push(2).unwrap();
+        let popped = b.take(2);
+        assert_eq!(popped, vec![1, 2]);
+        // Returning 2 then 1 (reverse pop order) restores 1, 2, ...
+        b.requeue_front(2);
+        b.requeue_front(1);
+        b.push(3).unwrap();
+        assert_eq!(b.take(3), vec![1, 2, 3]);
     }
 }

@@ -1,42 +1,56 @@
 //! The speculative-decoding engine: draft-then-verify decode loop.
 //!
 //! One `SpecEngine` serves one (target, draft) pair. Sequences decode in
-//! lockstep *groups* whose KV caches live packed in batched XLA literals
-//! that flow executable-to-executable without host round-trips (only
+//! *groups* whose KV caches live packed in batched XLA literals that flow
+//! executable-to-executable without host round-trips (only
 //! logits/features — a few KB — are pulled to the host each round). Per
 //! round, for a group:
 //!
-//!   1. drafts: K tokens per sequence — chained `draft step` calls for
-//!      recurrent archs (EAGLE-3 / MTP), one `propose` for MEDUSA, K
-//!      `mlp step`s for the MLP speculator; ALL sampling happens here in
+//!   1. drafts: K tokens per sequence via the architecture's
+//!      `DraftBackend` (`server::backend`); ALL sampling happens here in
 //!      Rust (`spec::sampling`), the executables only produce logits;
 //!   2. verify: one target call over [last_token, draft_1..draft_K];
 //!   3. acceptance: the exact Leviathan rule per position (or the greedy
 //!      / greedy-draft variants), residual resampling, bonus token;
-//!   4. state advance: draft-cache extension with the accepted positions'
-//!      fused features (recurrent) or hidden pickup (MEDUSA/MLP).
+//!   4. state advance: backend-specific draft-state roll past the
+//!      accepted prefix.
 //!
-//! Index contract (mirrors python/compile/drafts.py):
-//!   `len` = processed target positions; `last_token` = accepted but not
-//!   yet processed; the verify block occupies positions len..len+K and
-//!   its logits[i] give p(·| …, block[..=i]).
+//! The engine knows nothing about draft architectures — dispatch lives
+//! entirely behind the `DraftBackend` trait, so new architectures plug in
+//! without touching this loop. Group membership is managed above this
+//! layer: `server::scheduler` runs groups as slot-mapped sessions with
+//! mid-flight join/leave, while `generate_batch` below drives the classic
+//! run-to-completion lockstep path (the evaluation protocol).
+//!
+//! Per-request RNG streams are keyed by a stable request id (not by
+//! bootstrap order), so a sequence's sample path is independent of batch
+//! composition, padding and admission order.
 
-use anyhow::{bail, Context, Result};
+use std::time::Instant;
 
-use crate::runtime::{pack, DraftSpec, Runtime, TargetSpec};
+use anyhow::{bail, Result};
+
+use crate::runtime::Runtime;
 use crate::spec::accept::AcceptanceStats;
 use crate::spec::sampling::{self, SamplingMode, Verdict};
-use crate::tensor::{Checkpoint, HostTensor};
-
+use crate::tensor::Checkpoint;
 use crate::train::checkpoint_to_params;
 use crate::util::Pcg64;
 
-/// Draft-architecture behaviour class.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Kind {
-    Recurrent, // eagle3 / mtp: own KV cache + hidden-state recurrence
-    Medusa,    // parallel heads from one hidden state
-    Mlp,       // per-head recurrent MLP state
+use super::backend::{
+    arg_refs, copy_literal_row, lit_i32, lit_scalar_i32, make_backend, tensor_row, upload,
+    upload_params, DraftBackend, EngineCx, GroupState, SeqState, TKV_BATCH_AXIS,
+};
+use super::metrics::EngineMetrics;
+use super::scheduler::{AdmitReq, SchedulerCore};
+
+/// RNG stream ids for padding rows (clones of a real row that keep the
+/// executables' batch shape full); far above any realistic request id.
+const PAD_STREAM_BASE: u64 = 0x7add_0000_0000_0000;
+
+/// Per-request RNG: one independent PCG stream per stable request id.
+pub fn request_rng(seed: u64, request_id: u64) -> Pcg64 {
+    Pcg64::new(seed, 1 + request_id)
 }
 
 #[derive(Clone, Debug)]
@@ -66,47 +80,22 @@ impl Default for EngineOpts {
 pub struct RequestResult {
     pub tokens: Vec<i32>,
     pub stats: AcceptanceStats,
+    /// Submission → completion for THIS request (per-session, not the
+    /// group total: sequences finishing early report their own latency).
     pub latency_ms: f64,
+    /// Submission → first emitted token (prefill bootstrap included).
+    pub ttft_ms: f64,
+    /// Submission → admission into a decode group (queue wait).
+    pub queue_ms: f64,
+    /// Draft-verify rounds this request participated in.
     pub rounds: u64,
 }
 
-struct SeqState {
-    len: usize,      // processed target positions
-    last_token: i32, // accepted, unprocessed
-    generated: Vec<i32>,
-    max_new: usize,
-    rng: Pcg64,
-    stats: AcceptanceStats,
-    done: bool,
-    hidden: Vec<f32>, // [d] MEDUSA/MLP conditioning hidden
-    q1: Vec<f32>,     // recurrent: q-logits for draft 1 of next round
-}
-
-/// A lockstep decode group with packed caches (literals stay device-side).
-struct Group {
-    b: usize,
-    seqs: Vec<SeqState>, // indices == batch rows (padding rows cloned)
-    tkv: xla::Literal,
-    dkv: Option<xla::Literal>,
-    h_prev: Option<xla::Literal>, // [B, d]
-}
-
 pub struct SpecEngine<'rt> {
-    pub rt: &'rt Runtime,
-    tspec: TargetSpec,
-    dspec: DraftSpec,
-    kind: Kind,
-    tparams: Vec<xla::PjRtBuffer>,
-    dparams: Vec<xla::PjRtBuffer>,
-    // Source literals MUST outlive the buffers: BufferFromHostLiteral's
-    // h2d copy is asynchronous and references the literal from a worker
-    // thread (upstream xla_rs awaits the ready future for this reason).
-    _param_lits: Vec<xla::Literal>,
-    vocab_map: Option<Vec<i32>>,
-    pub opts: EngineOpts,
-    k: usize, // drafts per round
-    pub metrics: super::metrics::EngineMetrics,
-    next_seed: u64,
+    cx: EngineCx<'rt>,
+    backend: Box<dyn DraftBackend>,
+    pub metrics: EngineMetrics,
+    next_req_id: u64,
 }
 
 impl<'rt> SpecEngine<'rt> {
@@ -120,19 +109,11 @@ impl<'rt> SpecEngine<'rt> {
     ) -> Result<SpecEngine<'rt>> {
         let dspec = rt.manifest.draft(draft_name)?.clone();
         let tspec = rt.manifest.target(&dspec.target)?.clone();
-        let kind = match dspec.arch.as_str() {
-            "eagle3" | "mtp" => Kind::Recurrent,
-            "medusa" => Kind::Medusa,
-            "mlp" => Kind::Mlp,
-            other => bail!("unknown arch {other}"),
-        };
+        let backend = make_backend(&dspec.arch)?;
         if dspec.arch == "eagle3" && vocab_map.is_none() {
             bail!("eagle3 needs a vocab map");
         }
-        let max_k = match kind {
-            Kind::Recurrent => rt.manifest.verify_t - 1,
-            _ => dspec.k_heads,
-        };
+        let max_k = backend.max_k(rt, &dspec);
         let mut opts = opts;
         opts.k_draft = opts.k_draft.min(max_k);
         // Parameters are uploaded ONCE as device buffers and reused by
@@ -143,203 +124,135 @@ impl<'rt> SpecEngine<'rt> {
         let mut _param_lits = tlits;
         _param_lits.extend(dlits);
         Ok(SpecEngine {
-            rt,
-            tspec,
-            dspec,
-            kind,
-            tparams,
-            dparams,
-            _param_lits,
-            vocab_map,
-            k: opts.k_draft,
-            opts,
-            metrics: super::metrics::EngineMetrics::default(),
-            next_seed: 1,
+            cx: EngineCx {
+                rt,
+                tspec,
+                dspec,
+                tparams,
+                dparams,
+                _param_lits,
+                vocab_map,
+                k: opts.k_draft,
+                opts,
+            },
+            backend,
+            metrics: EngineMetrics::default(),
+            next_req_id: 0,
         })
     }
 
     pub fn target_name(&self) -> &str {
-        &self.tspec.name
+        &self.cx.tspec.name
     }
 
     pub fn k_draft(&self) -> usize {
-        self.k
+        self.cx.k
     }
 
-    fn bucket(&self, n: usize) -> usize {
-        *self
-            .rt
-            .manifest
-            .serve_batches
-            .iter()
-            .find(|&&b| b >= n)
-            .unwrap_or_else(|| self.rt.manifest.serve_batches.last().unwrap())
+    pub fn opts(&self) -> &EngineOpts {
+        &self.cx.opts
     }
 
-    // ------------------------------------------------------------------
-    // distribution helpers
-    // ------------------------------------------------------------------
-
-    /// Draft logits (possibly truncated vocab) -> (q over full vocab,
-    /// q over draft vocab) at the engine temperature.
-    fn draft_dist(&self, logits: &[f32]) -> (Vec<f32>, Vec<f32>) {
-        let qc = sampling::softmax_t(logits, self.opts.temperature.max(1e-3));
-        match &self.vocab_map {
-            None => (qc.clone(), qc),
-            Some(map) => {
-                let mut full = vec![0f32; self.tspec.vocab];
-                for (i, &fid) in map.iter().enumerate() {
-                    full[fid as usize] = qc[i];
-                }
-                (full, qc)
-            }
-        }
-    }
-
-    fn draft_token_id(&self, compact_idx: usize) -> i32 {
-        match &self.vocab_map {
-            None => compact_idx as i32,
-            Some(map) => map[compact_idx],
-        }
-    }
-
-    fn sample_draft(&self, rng: &mut Pcg64, q_compact: &[f32]) -> usize {
-        match self.opts.mode {
-            SamplingMode::Stochastic => sampling::sample_categorical(rng, q_compact),
-            SamplingMode::Greedy | SamplingMode::GreedyDraft => sampling::argmax(q_compact),
-        }
-    }
-
-    fn sample_target(&self, rng: &mut Pcg64, p: &[f32]) -> i32 {
-        match self.opts.mode {
-            SamplingMode::Greedy => sampling::argmax(p) as i32,
-            _ => sampling::sample_categorical(rng, p) as i32,
-        }
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     // ------------------------------------------------------------------
     // group construction (prefill path)
     // ------------------------------------------------------------------
 
-    fn make_group(&mut self, prompts: &[Vec<i32>], max_new: usize) -> Result<Group> {
-        let n = prompts.len();
-        let b = self.bucket(n);
-        let sp = self.rt.manifest.prompt_len;
-        let d = self.tspec.d_model;
-        let vocab = self.tspec.vocab;
+    /// Target prefill + per-sequence bootstrap + backend draft bootstrap
+    /// for `reqs`, padded up to the serve bucket. Row i hosts reqs[i];
+    /// padding rows clone the last request but start `done`.
+    fn bootstrap_group(&mut self, reqs: &[AdmitReq]) -> Result<GroupState> {
+        let n = reqs.len();
+        anyhow::ensure!(n > 0, "empty group");
+        let t_admit = Instant::now();
+        let b = self.cx.bucket(n);
+        anyhow::ensure!(n <= b, "group of {n} exceeds the largest serve bucket {b}");
+        let sp = self.cx.rt.manifest.prompt_len;
+        let vocab = self.cx.tspec.vocab;
 
         // --- target prefill ------------------------------------------
         let mut tok_flat = vec![0i32; b * sp];
         let mut lens = vec![0usize; b];
         for row in 0..b {
-            let p = &prompts[row.min(n - 1)]; // clone last prompt into padding
-            anyhow::ensure!(p.len() >= 2 && p.len() <= sp, "prompt length {} not in 2..={sp}", p.len());
+            let p = &reqs[row.min(n - 1)].prompt; // clone last prompt into padding
+            anyhow::ensure!(
+                p.len() >= 2 && p.len() <= sp,
+                "prompt length {} not in 2..={sp}",
+                p.len()
+            );
             lens[row] = p.len();
             tok_flat[row * sp..row * sp + p.len()].copy_from_slice(p);
         }
-        let prefill = self.rt.target_entry(&self.tspec.name, &format!("prefill_b{b}"))?;
+        let prefill = self
+            .cx
+            .rt
+            .target_entry(&self.cx.tspec.name, &format!("prefill_b{b}"))?;
         let dyn_in = [
             lit_i32(&[b, sp], &tok_flat)?,
             lit_scalar_i32(lens[0] as i32)?,
         ];
-        let dyn_b = upload(self.rt, &dyn_in)?;
-        let args = arg_refs(&self.tparams, &[], &dyn_b);
+        let dyn_b = upload(self.cx.rt, &dyn_in)?;
+        let args = arg_refs(&self.cx.tparams, &[], &dyn_b);
         let outs = prefill.run_bufs(&args)?;
         let logits = prefill.output_host(&outs, 0)?;
         let feats = prefill.output_host(&outs, 2)?;
+        let tkv_spec = prefill.spec.outputs[1].clone();
         let tkv = outs.into_iter().nth(1).unwrap();
 
         // --- per-sequence bootstrap -----------------------------------
         let mut seqs = Vec::with_capacity(b);
         for row in 0..b {
+            let is_pad = row >= n;
+            let req = &reqs[row.min(n - 1)];
             let c = lens[row];
-            let mut rng = Pcg64::new(self.opts.seed, self.next_seed);
-            self.next_seed += 1;
+            let stream_id = if is_pad {
+                PAD_STREAM_BASE + row as u64
+            } else {
+                req.id
+            };
+            let mut rng = request_rng(self.cx.opts.seed, stream_id);
             let lrow = tensor_row(&logits, row, &[b, sp, vocab], c - 1);
-            let p = sampling::softmax_t(&lrow, self.opts.temperature.max(1e-3));
-            let first = self.sample_target(&mut rng, &p);
+            let p = sampling::softmax_t(&lrow, self.cx.opts.temperature.max(1e-3));
+            let first = self.cx.sample_target(&mut rng, &p);
             seqs.push(SeqState {
+                id: stream_id,
                 len: c,
                 last_token: first,
                 generated: vec![first],
-                max_new,
+                max_new: req.max_new,
                 rng,
-                stats: AcceptanceStats::new(self.k),
-                done: row >= n, // padding rows start done
+                stats: AcceptanceStats::new(self.cx.k),
+                done: is_pad, // padding rows start done
                 hidden: Vec::new(),
                 q1: Vec::new(),
+                enqueued: req.enqueued,
+                queue_ms: t_admit.saturating_duration_since(req.enqueued).as_secs_f64() * 1e3,
+                ttft_ms: 0.0,
+                total_ms: 0.0,
+                rounds: 0,
             });
         }
 
-        let mut group = Group {
+        let mut group = GroupState {
             b,
             seqs,
             tkv,
+            tkv_spec,
             dkv: None,
+            dkv_spec: None,
             h_prev: None,
         };
 
-        // --- draft bootstrap -------------------------------------------
-        match self.kind {
-            Kind::Recurrent => {
-                let fdim = self.dspec.fuse_dim;
-                let f3 = self.tspec.feat_dim;
-                let feats_full = feats.as_f32();
-                let mut feats_in = vec![0f32; b * sp * fdim];
-                let mut tnext = vec![0i32; b * sp];
-                for (row, seq) in group.seqs.iter().enumerate() {
-                    let c = seq.len;
-                    for t in 0..sp {
-                        let base = (row * sp + t) * f3;
-                        feats_in[(row * sp + t) * fdim..(row * sp + t + 1) * fdim]
-                            .copy_from_slice(&feats_full[base + (f3 - fdim)..base + f3]);
-                    }
-                    for t in 0..c - 1 {
-                        tnext[row * sp + t] = tok_flat[row * sp + t + 1];
-                    }
-                    tnext[row * sp + c - 1] = seq.last_token;
-                }
-                let extend = self
-                    .rt
-                    .draft_entry(&self.dspec.name, &format!("extend_p_b{b}"))?;
-                let dkv0 = lit_zeros_f32(&[
-                    2,
-                    b,
-                    self.tspec.n_heads,
-                    self.tspec.max_seq,
-                    self.tspec.head_dim,
-                ])?;
-                let dyn_in = [
-                    dkv0,
-                    lit_f32(&[b, sp, fdim], &feats_in)?,
-                    lit_i32(&[b, sp], &tnext)?,
-                    lit_i32(&[b], &vec![0i32; b])?,
-                ];
-                let dyn_b = upload(self.rt, &dyn_in)?;
-                let args = arg_refs(&self.tparams, &self.dparams, &dyn_b);
-                let outs = extend.run_bufs(&args)?;
-                let q_all = extend.output_host(&outs, 0)?; // [B,Sp,Vd]
-                let h_all = extend.output_host(&outs, 1)?; // [B,Sp,d]
-                let vd = self.dspec.draft_vocab;
-                let mut hprev = vec![0f32; b * d];
-                for (row, seq) in group.seqs.iter_mut().enumerate() {
-                    let c = seq.len;
-                    seq.q1 = tensor_row(&q_all, row, &[b, sp, vd], c - 1);
-                    hprev[row * d..(row + 1) * d]
-                        .copy_from_slice(&tensor_row(&h_all, row, &[b, sp, d], c - 1));
-                }
-                group.dkv = Some(outs.into_iter().nth(2).unwrap());
-                group.h_prev = Some(lit_f32(&[b, d], &hprev)?);
-            }
-            Kind::Medusa | Kind::Mlp => {
-                let f3 = self.tspec.feat_dim;
-                let feats_full = feats.as_f32();
-                for (row, seq) in group.seqs.iter_mut().enumerate() {
-                    let c = seq.len;
-                    let off = (row * sp + c - 1) * f3 + (f3 - d);
-                    seq.hidden = feats_full[off..off + d].to_vec();
-                }
-            }
+        // --- draft bootstrap ------------------------------------------
+        self.backend
+            .bootstrap(&self.cx, &mut group, &tok_flat, &feats)?;
+
+        // The first token exists as soon as the bootstrap sampled it.
+        for seq in group.seqs.iter_mut().take(n) {
+            seq.ttft_ms = seq.enqueued.elapsed().as_secs_f64() * 1e3;
         }
         Ok(group)
     }
@@ -348,116 +261,23 @@ impl<'rt> SpecEngine<'rt> {
     // one draft-verify round for the whole group
     // ------------------------------------------------------------------
 
-    fn round(&mut self, g: &mut Group) -> Result<()> {
+    fn decode_round(&mut self, g: &mut GroupState) -> Result<()> {
         let b = g.b;
-        let k = self.k;
-        let vt = self.rt.manifest.verify_t;
-        let vocab = self.tspec.vocab;
-        let d = self.tspec.d_model;
+        let k = self.cx.k;
+        let vt = self.cx.rt.manifest.verify_t;
+        let vocab = self.cx.tspec.vocab;
 
-        // --- 1. draft K tokens per row ---------------------------------
+        // --- 1. draft K tokens per row (backend-specific) --------------
         let mut drafts = vec![vec![0i32; k]; b];
         let mut q_full: Vec<Vec<Vec<f32>>> = vec![Vec::with_capacity(k); b];
-        match self.kind {
-            Kind::Recurrent => {
-                let step = self
-                    .rt
-                    .draft_entry(&self.dspec.name, &format!("step_b{b}"))?;
-                let vd = self.dspec.draft_vocab;
-                let mut q_logits: Vec<Vec<f32>> =
-                    g.seqs.iter().map(|s| s.q1.clone()).collect();
-                for i in 0..k {
-                    let mut toks = vec![0i32; b];
-                    for row in 0..b {
-                        let (qf, qc) = self.draft_dist(&q_logits[row]);
-                        let xi = self.sample_draft(&mut g.seqs[row].rng, &qc);
-                        drafts[row][i] = self.draft_token_id(xi);
-                        q_full[row].push(qf);
-                        toks[row] = drafts[row][i];
-                    }
-                    if i + 1 == k {
-                        break; // q_{k+1} never needed
-                    }
-                    let pos: Vec<i32> = g.seqs.iter().map(|s| (s.len + i) as i32).collect();
-                    let dyn_in = [
-                        g.dkv.take().context("dkv")?,
-                        g.h_prev.take().context("h_prev")?,
-                        lit_i32(&[b], &toks)?,
-                        lit_i32(&[b], &pos)?,
-                    ];
-                    let dyn_b = upload(self.rt, &dyn_in)?;
-                    let args = arg_refs(&self.tparams, &self.dparams, &dyn_b);
-                    let outs = step.run_bufs(&args)?;
-                    let ql = step.output_host(&outs, 0)?;
-                    for row in 0..b {
-                        q_logits[row] = tensor_row(&ql, row, &[b, vd], 0);
-                    }
-                    let mut it = outs.into_iter();
-                    let _ = it.next(); // logits
-                    g.h_prev = Some(it.next().unwrap());
-                    g.dkv = Some(it.next().unwrap());
-                }
-            }
-            Kind::Medusa => {
-                let propose = self
-                    .rt
-                    .draft_entry(&self.dspec.name, &format!("propose_b{b}"))?;
-                let mut hidden = vec![0f32; b * d];
-                for (row, seq) in g.seqs.iter().enumerate() {
-                    hidden[row * d..(row + 1) * d].copy_from_slice(&seq.hidden);
-                }
-                let dyn_in = [lit_f32(&[b, d], &hidden)?];
-                let dyn_b = upload(self.rt, &dyn_in)?;
-                let args = arg_refs(&self.dparams, &[], &dyn_b);
-                let outs = propose.run_bufs(&args)?;
-                let logits = propose.output_host(&outs, 0)?.as_f32(); // [K,B,V]
-                for row in 0..b {
-                    for i in 0..k {
-                        let off = (i * b + row) * vocab;
-                        let (qf, qc) = self.draft_dist(&logits[off..off + vocab]);
-                        let xi = self.sample_draft(&mut g.seqs[row].rng, &qc);
-                        drafts[row][i] = self.draft_token_id(xi);
-                        q_full[row].push(qf);
-                    }
-                }
-            }
-            Kind::Mlp => {
-                let step = self
-                    .rt
-                    .draft_entry(&self.dspec.name, &format!("step_b{b}"))?;
-                let mut state = vec![0f32; b * d];
-                for (row, seq) in g.seqs.iter().enumerate() {
-                    state[row * d..(row + 1) * d].copy_from_slice(&seq.hidden);
-                }
-                let mut state_t = lit_f32(&[b, d], &state)?;
-                let mut toks: Vec<i32> = g.seqs.iter().map(|s| s.last_token).collect();
-                for i in 0..k {
-                    let dyn_in = [
-                        state_t,
-                        lit_i32(&[b], &toks)?,
-                        lit_scalar_i32(i as i32)?,
-                    ];
-                    let dyn_b = upload(self.rt, &dyn_in)?;
-                    let args = arg_refs(&self.tparams, &self.dparams, &dyn_b);
-                    let outs = step.run_bufs(&args)?;
-                    let lg = step.output_host(&outs, 0)?;
-                    for row in 0..b {
-                        let lrow = tensor_row(&lg, row, &[b, vocab], 0);
-                        let (qf, qc) = self.draft_dist(&lrow);
-                        let xi = self.sample_draft(&mut g.seqs[row].rng, &qc);
-                        drafts[row][i] = self.draft_token_id(xi);
-                        q_full[row].push(qf);
-                        toks[row] = drafts[row][i];
-                    }
-                    state_t = outs.into_iter().nth(1).unwrap();
-                }
-            }
-        }
+        self.backend
+            .propose(&self.cx, g, &mut drafts, &mut q_full)?;
 
-        // --- 2. verify ---------------------------------------------------
+        // --- 2. verify --------------------------------------------------
         let verify = self
+            .cx
             .rt
-            .target_entry(&self.tspec.name, &format!("verify_b{b}"))?;
+            .target_entry(&self.cx.tspec.name, &format!("verify_b{b}"))?;
         let mut vtok = vec![0i32; b * vt];
         for (row, seq) in g.seqs.iter().enumerate() {
             vtok[row * vt] = seq.last_token;
@@ -468,15 +288,15 @@ impl<'rt> SpecEngine<'rt> {
         let pos: Vec<i32> = g.seqs.iter().map(|s| s.len as i32).collect();
         let tkv = std::mem::replace(&mut g.tkv, lit_scalar_i32(0)?); // placeholder
         let dyn_in = [tkv, lit_i32(&[b, vt], &vtok)?, lit_i32(&[b], &pos)?];
-        let dyn_b = upload(self.rt, &dyn_in)?;
-        let args = arg_refs(&self.tparams, &[], &dyn_b);
+        let dyn_b = upload(self.cx.rt, &dyn_in)?;
+        let args = arg_refs(&self.cx.tparams, &[], &dyn_b);
         let outs = verify.run_bufs(&args)?;
         let logits = verify.output_host(&outs, 0)?; // [B, vt, V]
         let feats = verify.output_host(&outs, 2)?; // [B, vt, 3d]
         g.tkv = outs.into_iter().nth(1).unwrap();
 
-        // --- 3. acceptance per row ---------------------------------------
-        let temp = self.opts.temperature.max(1e-3);
+        // --- 3. acceptance per row --------------------------------------
+        let temp = self.cx.opts.temperature.max(1e-3);
         let mut n_acc = vec![0usize; b];
         for row in 0..b {
             let seq = &mut g.seqs[row];
@@ -489,8 +309,13 @@ impl<'rt> SpecEngine<'rt> {
                 let l = tensor_row(&logits, row, &[b, vt, vocab], j);
                 let p = sampling::softmax_t(&l, temp);
                 let x = drafts[row][j] as usize;
-                match sampling::verify_token(&mut seq.rng, &p, &q_full[row][j], x, self.opts.mode)
-                {
+                match sampling::verify_token(
+                    &mut seq.rng,
+                    &p,
+                    &q_full[row][j],
+                    x,
+                    self.cx.opts.mode,
+                ) {
                     Verdict::Accept => j += 1,
                     Verdict::Reject { replacement: r } => {
                         replacement = Some(r);
@@ -507,118 +332,87 @@ impl<'rt> SpecEngine<'rt> {
                 None => {
                     let l = tensor_row(&logits, row, &[b, vt, vocab], j);
                     let p = sampling::softmax_t(&l, temp);
-                    self.sample_target(&mut seq.rng, &p)
+                    self.cx.sample_target(&mut seq.rng, &p)
                 }
             };
             seq.generated.push(y);
             seq.len += 1 + j; // last_token + accepted drafts now processed
             seq.last_token = y;
+            seq.rounds += 1;
             n_acc[row] = j;
             if seq.generated.len() >= seq.max_new {
                 seq.done = true;
+                seq.total_ms = seq.enqueued.elapsed().as_secs_f64() * 1e3;
             }
         }
 
-        // --- 4. advance draft state --------------------------------------
-        match self.kind {
-            Kind::Recurrent => {
-                let fdim = self.dspec.fuse_dim;
-                let f3 = self.tspec.feat_dim;
-                let feats_full = feats.as_f32();
-                let mut feats_in = vec![0f32; b * vt * fdim];
-                let mut tnext = vec![0i32; b * vt];
-                let mut pos = vec![0i32; b];
-                for row in 0..b {
-                    let seq = &g.seqs[row];
-                    let j = n_acc[row];
-                    for t in 0..vt {
-                        let base = (row * vt + t) * f3;
-                        feats_in[(row * vt + t) * fdim..(row * vt + t + 1) * fdim]
-                            .copy_from_slice(&feats_full[base + (f3 - fdim)..base + f3]);
-                    }
-                    for (t, item) in drafts[row].iter().enumerate().take(j) {
-                        tnext[row * vt + t] = *item;
-                    }
-                    tnext[row * vt + j] = seq.last_token;
-                    // extend starts where this round's verify block started
-                    pos[row] = if seq.done {
-                        (seq.len.saturating_sub(1 + j)) as i32
-                    } else {
-                        (seq.len - 1 - j) as i32
-                    };
-                }
-                let extend = self
-                    .rt
-                    .draft_entry(&self.dspec.name, &format!("extend_k_b{b}"))?;
-                let dyn_in = [
-                    g.dkv.take().context("dkv")?,
-                    lit_f32(&[b, vt, fdim], &feats_in)?,
-                    lit_i32(&[b, vt], &tnext)?,
-                    lit_i32(&[b], &pos)?,
-                ];
-                let dyn_b = upload(self.rt, &dyn_in)?;
-                let args = arg_refs(&self.tparams, &self.dparams, &dyn_b);
-                let outs = extend.run_bufs(&args)?;
-                let q_all = extend.output_host(&outs, 0)?;
-                let h_all = extend.output_host(&outs, 1)?;
-                let vd = self.dspec.draft_vocab;
-                let mut hprev = vec![0f32; b * d];
-                for row in 0..b {
-                    let j = n_acc[row];
-                    let seq = &mut g.seqs[row];
-                    seq.q1 = tensor_row(&q_all, row, &[b, vt, vd], j);
-                    hprev[row * d..(row + 1) * d]
-                        .copy_from_slice(&tensor_row(&h_all, row, &[b, vt, d], j));
-                }
-                g.dkv = Some(outs.into_iter().nth(2).unwrap());
-                g.h_prev = Some(lit_f32(&[b, d], &hprev)?);
-            }
-            Kind::Medusa | Kind::Mlp => {
-                let f3 = self.tspec.feat_dim;
-                let feats_full = feats.as_f32();
-                for row in 0..b {
-                    let j = n_acc[row];
-                    let off = (row * vt + j) * f3 + (f3 - d);
-                    g.seqs[row].hidden = feats_full[off..off + d].to_vec();
-                }
-            }
-        }
+        // --- 4. advance draft state (backend-specific) ------------------
+        self.backend
+            .advance(&self.cx, g, &drafts, &n_acc, &feats)?;
         Ok(())
+    }
+
+    fn result_of(seq: &SeqState) -> RequestResult {
+        RequestResult {
+            tokens: seq.generated.clone(),
+            stats: seq.stats.clone(),
+            latency_ms: seq.total_ms,
+            ttft_ms: seq.ttft_ms,
+            queue_ms: seq.queue_ms,
+            rounds: seq.rounds,
+        }
     }
 
     // ------------------------------------------------------------------
     // public entry points
     // ------------------------------------------------------------------
 
-    /// Run a batch of prompts to completion in lockstep. Returns results
-    /// in prompt order.
+    /// Run a batch of prompts to completion in lockstep (the evaluation
+    /// protocol: the group runs until every row finishes). Returns
+    /// results in prompt order with true per-session latencies.
     pub fn generate_batch(
         &mut self,
         prompts: &[Vec<i32>],
         max_new: usize,
     ) -> Result<Vec<RequestResult>> {
-        anyhow::ensure!(!prompts.is_empty());
-        let t0 = std::time::Instant::now();
-        let mut g = self.make_group(prompts, max_new)?;
+        let reqs: Vec<(Vec<i32>, usize)> =
+            prompts.iter().map(|p| (p.clone(), max_new)).collect();
+        self.generate_batch_with(&reqs)
+    }
+
+    /// Lockstep decode with a per-request generation cap.
+    pub fn generate_batch_with(
+        &mut self,
+        requests: &[(Vec<i32>, usize)],
+    ) -> Result<Vec<RequestResult>> {
+        anyhow::ensure!(!requests.is_empty());
+        let now = Instant::now();
+        let reqs: Vec<AdmitReq> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, (p, max_new))| AdmitReq {
+                id: self.next_req_id + i as u64,
+                prompt: p.clone(),
+                max_new: *max_new,
+                enqueued: now,
+            })
+            .collect();
+        self.next_req_id += requests.len() as u64;
+        let max_new_cap = requests.iter().map(|(_, m)| *m).max().unwrap_or(16);
+        let mut g = self.bootstrap_group(&reqs)?;
         let mut rounds = 0u64;
         while g.seqs.iter().any(|s| !s.done) {
-            self.round(&mut g)?;
+            self.decode_round(&mut g)?;
             rounds += 1;
-            if rounds > (max_new * 4 + 16) as u64 {
+            if rounds > (max_new_cap * 4 + 16) as u64 {
                 bail!("round budget exceeded — engine stuck?");
             }
         }
-        let total_ms = t0.elapsed().as_secs_f64() * 1e3;
         let results: Vec<RequestResult> = g
             .seqs
             .iter()
-            .take(prompts.len())
-            .map(|s| RequestResult {
-                tokens: s.generated.clone(),
-                stats: s.stats.clone(),
-                latency_ms: total_ms,
-                rounds,
-            })
+            .take(requests.len())
+            .map(Self::result_of)
             .collect();
         for r in &results {
             self.metrics.observe_request(r);
@@ -629,114 +423,112 @@ impl<'rt> SpecEngine<'rt> {
     /// Vanilla autoregressive baseline (no speculation): one target
     /// decode call per token. Used for Table 4 speedups.
     pub fn generate_vanilla(&mut self, prompt: &[i32], max_new: usize) -> Result<RequestResult> {
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let b = 1usize;
-        let sp = self.rt.manifest.prompt_len;
-        let vocab = self.tspec.vocab;
+        let sp = self.cx.rt.manifest.prompt_len;
+        let vocab = self.cx.tspec.vocab;
         anyhow::ensure!(prompt.len() >= 2 && prompt.len() <= sp);
         let mut tok_flat = vec![0i32; sp];
         tok_flat[..prompt.len()].copy_from_slice(prompt);
-        let prefill = self.rt.target_entry(&self.tspec.name, "prefill_b1")?;
+        let prefill = self.cx.rt.target_entry(&self.cx.tspec.name, "prefill_b1")?;
         let dyn_in = [
             lit_i32(&[b, sp], &tok_flat)?,
             lit_scalar_i32(prompt.len() as i32)?,
         ];
-        let dyn_b = upload(self.rt, &dyn_in)?;
-        let args = arg_refs(&self.tparams, &[], &dyn_b);
+        let dyn_b = upload(self.cx.rt, &dyn_in)?;
+        let args = arg_refs(&self.cx.tparams, &[], &dyn_b);
         let outs = prefill.run_bufs(&args)?;
         let logits = prefill.output_host(&outs, 0)?;
         let mut tkv = outs.into_iter().nth(1).unwrap();
 
-        let mut rng = Pcg64::new(self.opts.seed, 0x7a71);
-        let temp = self.opts.temperature.max(1e-3);
+        let mut rng = Pcg64::new(self.cx.opts.seed, 0x7a71);
+        let temp = self.cx.opts.temperature.max(1e-3);
         let lrow = tensor_row(&logits, 0, &[b, sp, vocab], prompt.len() - 1);
         let p = sampling::softmax_t(&lrow, temp);
-        let mut last = self.sample_target(&mut rng, &p);
+        let mut last = self.cx.sample_target(&mut rng, &p);
+        let ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
         let mut generated = vec![last];
         let mut len = prompt.len();
-        let decode = self.rt.target_entry(&self.tspec.name, "decode_b1")?;
+        let decode = self.cx.rt.target_entry(&self.cx.tspec.name, "decode_b1")?;
         while generated.len() < max_new {
             let dyn_in = [tkv, lit_i32(&[b, 1], &[last])?, lit_i32(&[b], &[len as i32])?];
-            let dyn_b = upload(self.rt, &dyn_in)?;
-            let args = arg_refs(&self.tparams, &[], &dyn_b);
+            let dyn_b = upload(self.cx.rt, &dyn_in)?;
+            let args = arg_refs(&self.cx.tparams, &[], &dyn_b);
             let outs = decode.run_bufs(&args)?;
             let lg = decode.output_host(&outs, 0)?;
             let lrow = tensor_row(&lg, 0, &[b, 1, vocab], 0);
             let p = sampling::softmax_t(&lrow, temp);
-            last = self.sample_target(&mut rng, &p);
+            last = self.cx.sample_target(&mut rng, &p);
             generated.push(last);
             len += 1;
             tkv = outs.into_iter().nth(1).unwrap();
         }
         Ok(RequestResult {
             tokens: generated,
-            stats: AcceptanceStats::new(self.k),
+            stats: AcceptanceStats::new(self.cx.k),
             latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+            ttft_ms,
+            queue_ms: 0.0,
             rounds: max_new as u64,
         })
     }
 }
 
 // ---------------------------------------------------------------------------
-// small helpers
+// continuous-batching driver interface
 // ---------------------------------------------------------------------------
 
-/// Upload dynamic inputs. SAFETY CONTRACT: the source literals must stay
-/// alive until the call consuming these buffers has been synced (the h2d
-/// copy is async and borrows the literal) — every call site keeps the
-/// `dyn_in` array in scope across `run_bufs`, which force-syncs outputs.
-fn upload(rt: &Runtime, lits: &[xla::Literal]) -> Result<Vec<xla::PjRtBuffer>> {
-    lits.iter().map(|l| rt.to_buffer(l)).collect()
-}
+impl<'rt> SchedulerCore for SpecEngine<'rt> {
+    type Group = GroupState;
 
-/// Upload parameters, returning the buffers AND the literals backing
-/// them — the engine stores both so the async copies can never outlive
-/// their source (the crash mode this fixed is documented in
-/// EXPERIMENTS.md §Perf).
-fn upload_params(
-    rt: &Runtime,
-    params: &[HostTensor],
-) -> Result<(Vec<xla::PjRtBuffer>, Vec<xla::Literal>)> {
-    let lits: Vec<xla::Literal> = params.iter().map(pack::to_literal).collect::<Result<_>>()?;
-    let bufs: Vec<xla::PjRtBuffer> =
-        lits.iter().map(|l| rt.to_buffer(l)).collect::<Result<_>>()?;
-    Ok((bufs, lits))
-}
+    fn bucket(&self, n: usize) -> usize {
+        self.cx.bucket(n)
+    }
 
-fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
-    pack::to_literal(&HostTensor::from_f32(shape, data))
-}
+    fn bootstrap(&mut self, reqs: &[AdmitReq]) -> Result<GroupState> {
+        // Scheduler-assigned ids are authoritative; keep the engine's own
+        // counter ahead of them so lockstep calls never reuse a stream.
+        if let Some(max_id) = reqs.iter().map(|r| r.id).max() {
+            self.next_req_id = self.next_req_id.max(max_id + 1);
+        }
+        self.bootstrap_group(reqs)
+    }
 
-fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
-    pack::to_literal(&HostTensor::from_i32(shape, data))
-}
+    /// Admit one request into free row `row` of a running group: per-row
+    /// prefill at the smallest bucket, then a one-row KV copy into the
+    /// group's packed caches (plus backend draft state adoption).
+    fn join(&mut self, g: &mut GroupState, row: usize, req: &AdmitReq) -> Result<()> {
+        anyhow::ensure!(row < g.b, "join row {row} out of range (b={})", g.b);
+        self.next_req_id = self.next_req_id.max(req.id + 1);
+        let mut mini = self.bootstrap_group(std::slice::from_ref(req))?;
+        g.tkv = copy_literal_row(
+            &g.tkv,
+            &g.tkv_spec,
+            row,
+            &mini.tkv,
+            &mini.tkv_spec,
+            0,
+            TKV_BATCH_AXIS,
+        )?;
+        self.backend.adopt_row(&self.cx, g, row, &mini, 0)?;
+        g.seqs[row] = mini.seqs.swap_remove(0);
+        Ok(())
+    }
 
-fn lit_scalar_i32(v: i32) -> Result<xla::Literal> {
-    pack::to_literal(&HostTensor::scalar_i32(v))
-}
+    fn round(&mut self, g: &mut GroupState) -> Result<()> {
+        self.decode_round(g)
+    }
 
-fn lit_zeros_f32(shape: &[usize]) -> Result<xla::Literal> {
-    pack::to_literal(&HostTensor::zeros(crate::tensor::DType::F32, shape))
-}
+    fn row_done(&self, g: &GroupState, row: usize) -> bool {
+        g.seqs[row].done
+    }
 
-/// params1 ++ params2 ++ dynamic — as the &buffer slice run_bufs wants.
-fn arg_refs<'a>(
-    p1: &'a [xla::PjRtBuffer],
-    p2: &'a [xla::PjRtBuffer],
-    dynamic: &'a [xla::PjRtBuffer],
-) -> Vec<&'a xla::PjRtBuffer> {
-    p1.iter().chain(p2.iter()).chain(dynamic.iter()).collect()
-}
-
-/// Extract `tensor[row, idx, :]` from a [B, N, D]-shaped host tensor (or
-/// `tensor[row, :]` from [B, D] with idx = 0).
-fn tensor_row(t: &HostTensor, row: usize, shape: &[usize], idx: usize) -> Vec<f32> {
-    debug_assert_eq!(t.shape, shape);
-    let dlast = *shape.last().unwrap();
-    let n_mid = if shape.len() == 3 { shape[1] } else { 1 };
-    let off = (row * n_mid + idx) * dlast;
-    t.data[off * 4..(off + dlast) * 4]
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect()
+    fn take_result(&mut self, g: &mut GroupState, row: usize) -> RequestResult {
+        let res = Self::result_of(&g.seqs[row]);
+        self.metrics.observe_request(&res);
+        // The row keeps decoding as inert padding until a join replaces
+        // it; mark it as such so no session state leaks.
+        g.seqs[row].id = PAD_STREAM_BASE;
+        res
+    }
 }

@@ -147,6 +147,43 @@ mod tests {
         assert!(copy_row(&mut dst2, 0, &src, 0, 0).is_err());
     }
 
+    /// The join path's actual shapes: draft KV [2, B, H, S, Dh] moved on
+    /// axis 1 between buckets of different B (mini b=1 group -> b=4
+    /// group), i.e. strided copies with unequal batch dims.
+    #[test]
+    fn copy_row_draft_kv_shape_across_buckets() {
+        let (h, s, dh) = (2usize, 3usize, 2usize);
+        let n_src = 2 * 1 * h * s * dh;
+        let src = HostTensor::from_f32(
+            &[2, 1, h, s, dh],
+            &(0..n_src).map(|i| i as f32).collect::<Vec<_>>(),
+        );
+        let mut dst = HostTensor::zeros(DType::F32, &[2, 4, h, s, dh]);
+        copy_row(&mut dst, 2, &src, 0, 1).unwrap();
+        let d = dst.as_f32();
+        let inner = h * s * dh;
+        for kv in 0..2 {
+            for row in 0..4 {
+                for i in 0..inner {
+                    let got = d[(kv * 4 + row) * inner + i];
+                    if row == 2 {
+                        assert_eq!(got, (kv * inner + i) as f32, "kv {kv} i {i}");
+                    } else {
+                        assert_eq!(got, 0.0, "row {row} polluted");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn copy_row_out_of_range_rejected() {
+        let src = HostTensor::zeros(DType::F32, &[2, 3]);
+        let mut dst = HostTensor::zeros(DType::F32, &[2, 3]);
+        assert!(copy_row(&mut dst, 2, &src, 0, 0).is_err());
+        assert!(copy_row(&mut dst, 0, &src, 3, 1).is_err());
+    }
+
     #[test]
     fn slotmap_alloc_free() {
         let mut m = SlotMap::new(4);
@@ -162,5 +199,33 @@ mod tests {
         m.alloc(14);
         assert!(m.is_full());
         assert_eq!(m.alloc(15), None);
+    }
+
+    /// Continuous-batching churn: iter_occupied tracks live sessions in
+    /// slot order, freeing an unknown id is a no-op, and the high-water
+    /// mark survives the group draining.
+    #[test]
+    fn slotmap_churn_iteration_and_high_water() {
+        let mut m = SlotMap::new(3);
+        assert_eq!(m.free(42), None, "freeing unknown id is None");
+        m.alloc(100);
+        m.alloc(101);
+        m.alloc(102);
+        assert_eq!(
+            m.iter_occupied().collect::<Vec<_>>(),
+            vec![(0, 100), (1, 101), (2, 102)]
+        );
+        m.free(101); // leave mid-flight
+        assert_eq!(
+            m.iter_occupied().collect::<Vec<_>>(),
+            vec![(0, 100), (2, 102)]
+        );
+        assert_eq!(m.alloc(103), Some(1), "join reuses the freed row");
+        m.free(100);
+        m.free(102);
+        m.free(103);
+        assert_eq!(m.occupied(), 0);
+        assert_eq!(m.high_water(), 3, "high water survives draining");
+        assert!(!m.is_full());
     }
 }

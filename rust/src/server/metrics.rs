@@ -1,10 +1,14 @@
-//! Engine metrics: counters + latency distributions, with a
-//! Prometheus-style text exposition for scraping/debugging.
+//! Engine + scheduler metrics: counters and latency distributions, with
+//! a Prometheus-style text exposition for scraping/debugging.
+
+use std::time::Instant;
 
 use crate::util::{OnlineStats, Percentiles};
 
 use super::engine::RequestResult;
 
+/// Per-engine request counters (both the lockstep and scheduled paths
+/// feed these through `observe_request`).
 #[derive(Default)]
 pub struct EngineMetrics {
     pub requests: u64,
@@ -13,6 +17,8 @@ pub struct EngineMetrics {
     pub drafted: u64,
     pub accepted: u64,
     pub latency_ms: Percentiles,
+    pub ttft_ms: Percentiles,
+    pub queue_ms: Percentiles,
     pub tau: OnlineStats,
 }
 
@@ -24,6 +30,8 @@ impl EngineMetrics {
         self.drafted += r.stats.drafted.iter().sum::<u64>();
         self.accepted += r.stats.accepted.iter().sum::<u64>();
         self.latency_ms.push(r.latency_ms);
+        self.ttft_ms.push(r.ttft_ms);
+        self.queue_ms.push(r.queue_ms);
         self.tau.push(r.stats.tau());
     }
 
@@ -53,6 +61,98 @@ impl EngineMetrics {
             line("latency_ms_p95", self.latency_ms.pct(95.0));
             line("latency_ms_p99", self.latency_ms.pct(99.0));
         }
+        if !self.ttft_ms.is_empty() {
+            line("ttft_ms_p50", self.ttft_ms.pct(50.0));
+            line("ttft_ms_p95", self.ttft_ms.pct(95.0));
+        }
+        if !self.queue_ms.is_empty() {
+            line("queue_ms_p50", self.queue_ms.pct(50.0));
+            line("queue_ms_p95", self.queue_ms.pct(95.0));
+        }
+        out
+    }
+}
+
+/// Scheduler-level serving metrics: occupancy, queue waits, throughput
+/// and the join/leave churn of continuous batching.
+#[derive(Default)]
+pub struct SchedulerMetrics {
+    /// Sessions completed (results handed back).
+    pub sessions: u64,
+    /// Sessions admitted into groups (bootstrap + joins).
+    pub sessions_admitted: u64,
+    pub tokens_out: u64,
+    /// Decode rounds executed across all groups.
+    pub rounds: u64,
+    pub groups_formed: u64,
+    pub groups_retired: u64,
+    /// Mid-flight admissions into a running group.
+    pub joins: u64,
+    /// Occupied/capacity sampled once per round.
+    pub slot_occupancy: OnlineStats,
+    pub queue_wait_ms: Percentiles,
+    pub ttft_ms: Percentiles,
+    pub latency_ms: Percentiles,
+    started: Option<Instant>,
+}
+
+impl SchedulerMetrics {
+    /// Mark serving start (first admission); anchors the tok/s gauge.
+    pub fn note_started(&mut self) {
+        self.started.get_or_insert_with(Instant::now);
+    }
+
+    pub fn observe_session(&mut self, r: &RequestResult) {
+        self.sessions += 1;
+        self.tokens_out += r.tokens.len() as u64;
+        self.queue_wait_ms.push(r.queue_ms);
+        self.ttft_ms.push(r.ttft_ms);
+        self.latency_ms.push(r.latency_ms);
+    }
+
+    /// Aggregate decode throughput since the first admission.
+    pub fn tokens_per_second(&self) -> f64 {
+        match self.started {
+            None => 0.0,
+            Some(t0) => {
+                let secs = t0.elapsed().as_secs_f64();
+                if secs <= 0.0 {
+                    0.0
+                } else {
+                    self.tokens_out as f64 / secs
+                }
+            }
+        }
+    }
+
+    /// Prometheus-style text block (lkspec_sched_* namespace).
+    pub fn render(&mut self, engine: &str) -> String {
+        let mut out = String::new();
+        let tps = self.tokens_per_second();
+        let mut line = |name: &str, v: f64| {
+            out.push_str(&format!("lkspec_sched_{name}{{engine=\"{engine}\"}} {v}\n"));
+        };
+        line("sessions_total", self.sessions as f64);
+        line("sessions_admitted_total", self.sessions_admitted as f64);
+        line("tokens_out_total", self.tokens_out as f64);
+        line("rounds_total", self.rounds as f64);
+        line("groups_formed_total", self.groups_formed as f64);
+        line("groups_retired_total", self.groups_retired as f64);
+        line("joins_total", self.joins as f64);
+        line("slot_occupancy_mean", self.slot_occupancy.mean());
+        line("tokens_per_second", tps);
+        if !self.queue_wait_ms.is_empty() {
+            line("queue_wait_ms_p50", self.queue_wait_ms.pct(50.0));
+            line("queue_wait_ms_p95", self.queue_wait_ms.pct(95.0));
+        }
+        if !self.ttft_ms.is_empty() {
+            line("ttft_ms_p50", self.ttft_ms.pct(50.0));
+            line("ttft_ms_p95", self.ttft_ms.pct(95.0));
+        }
+        if !self.latency_ms.is_empty() {
+            line("latency_ms_p50", self.latency_ms.pct(50.0));
+            line("latency_ms_p95", self.latency_ms.pct(95.0));
+        }
         out
     }
 }
@@ -62,17 +162,23 @@ mod tests {
     use super::*;
     use crate::spec::accept::AcceptanceStats;
 
+    fn result(latency_ms: f64, ttft_ms: f64, queue_ms: f64) -> RequestResult {
+        let mut stats = AcceptanceStats::new(4);
+        stats.record_round(4, 3);
+        RequestResult {
+            tokens: vec![1, 2, 3, 4],
+            stats,
+            latency_ms,
+            ttft_ms,
+            queue_ms,
+            rounds: 1,
+        }
+    }
+
     #[test]
     fn observe_and_render() {
         let mut m = EngineMetrics::default();
-        let mut stats = AcceptanceStats::new(4);
-        stats.record_round(4, 3);
-        m.observe_request(&RequestResult {
-            tokens: vec![1, 2, 3, 4],
-            stats,
-            latency_ms: 12.5,
-            rounds: 1,
-        });
+        m.observe_request(&result(12.5, 4.0, 1.0));
         assert_eq!(m.requests, 1);
         assert_eq!(m.tokens_out, 4);
         assert_eq!(m.accepted, 3);
@@ -80,5 +186,25 @@ mod tests {
         let text = m.render("test");
         assert!(text.contains("lkspec_requests_total{engine=\"test\"} 1"));
         assert!(text.contains("latency_ms_p50"));
+        assert!(text.contains("ttft_ms_p50"));
+    }
+
+    #[test]
+    fn scheduler_metrics_gauges() {
+        let mut m = SchedulerMetrics::default();
+        assert_eq!(m.tokens_per_second(), 0.0);
+        m.note_started();
+        m.observe_session(&result(20.0, 5.0, 2.0));
+        m.observe_session(&result(30.0, 6.0, 3.0));
+        m.slot_occupancy.push(0.75);
+        m.joins += 1;
+        assert_eq!(m.sessions, 2);
+        assert_eq!(m.tokens_out, 8);
+        assert!(m.tokens_per_second() > 0.0);
+        let text = m.render("e");
+        assert!(text.contains("lkspec_sched_sessions_total{engine=\"e\"} 2"));
+        assert!(text.contains("lkspec_sched_joins_total{engine=\"e\"} 1"));
+        assert!(text.contains("lkspec_sched_slot_occupancy_mean"));
+        assert!(text.contains("lkspec_sched_queue_wait_ms_p50"));
     }
 }

@@ -1,20 +1,31 @@
 //! Serving engine (L3): the vLLM-shaped coordination layer around the
 //! AOT-compiled target/draft executables.
 //!
-//!   * `kv`      — KV-cache slot management and batch-row packing
-//!   * `engine`  — draft-then-verify decode loop (groups of sequences in
-//!     lockstep), exact rejection sampling via `spec::sampling`, vanilla
+//!   * `kv`        — KV-cache slot management and batch-row packing
+//!   * `backend`   — the `DraftBackend` trait + per-architecture
+//!     implementations (recurrent EAGLE-3/MTP, MEDUSA, MLP); new draft
+//!     architectures plug in here without touching the decode loop
+//!   * `engine`    — architecture-agnostic draft-then-verify decode loop,
+//!     exact rejection sampling via `spec::sampling`, vanilla
 //!     autoregressive baseline
-//!   * `batcher` — request admission / bucket selection / slot assignment
-//!   * `router`  — thread-backed front-end with bounded queues and
-//!     backpressure
-//!   * `metrics` — engine + per-request counters, Prometheus-style text
+//!   * `batcher`   — request admission / bucket selection policy
+//!   * `scheduler` — continuous batching: decode groups as slot-mapped
+//!     sessions with mid-flight join/leave (one-row KV copies)
+//!   * `router`    — thread-backed front-end with bounded queues and
+//!     backpressure, driving the scheduler
+//!   * `metrics`   — engine + scheduler counters, Prometheus-style text
+//!
+//! See DESIGN.md §3–§4 for the layering contract.
 
+pub mod backend;
 pub mod batcher;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
 pub mod router;
+pub mod scheduler;
 
+pub use backend::DraftBackend;
 pub use engine::{EngineOpts, RequestResult, SpecEngine};
 pub use router::{Router, RouterConfig};
+pub use scheduler::{AdmitReq, Scheduler, SchedulerCore, SimCore};

@@ -1,23 +1,28 @@
-//! Request router: a thread-backed front-end around one engine worker.
+//! Request router: a thread-backed front-end around one scheduler
+//! worker.
 //!
 //! The engine (and everything PJRT) is deliberately single-threaded and
 //! !Send, so the router owns it inside a dedicated worker thread
 //! (leader/worker shape). Clients submit requests through a bounded
 //! channel (backpressure) and receive results on per-request reply
-//! channels. The worker loop runs the batcher policy: drain the queue,
-//! group by bucket, run lockstep groups, reply.
+//! channels. The worker loop drives a `Scheduler` over the engine's
+//! `SchedulerCore` face: drain the submit channel, tick the scheduler
+//! (admit / join / decode round / harvest), reply per finished session —
+//! results stream back as sessions finish, not when their group does.
 //!
 //! tokio is unavailable offline (DESIGN.md §2); std threads + mpsc
 //! channels implement the same event-loop shape.
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::BatcherConfig;
 use super::engine::RequestResult;
+use super::scheduler::{Scheduler, SchedulerCore};
 
 pub struct Request {
     pub prompt: Vec<i32>,
@@ -53,21 +58,22 @@ pub struct Router {
 }
 
 impl Router {
-    /// Spawn the worker. `make_engine` runs INSIDE the worker thread and
-    /// builds the engine there (PJRT types never cross threads). It
-    /// receives nothing and returns a closure that executes one group:
-    /// `run_group(prompts, max_new) -> Result<Vec<RequestResult>>`.
-    pub fn spawn<F, G>(cfg: RouterConfig, make_engine: F) -> Result<Router>
+    /// Spawn the worker. `make_core` runs INSIDE the worker thread and
+    /// builds the decode core there (PJRT types never cross threads); a
+    /// `Scheduler` wraps it for continuous batching. `SpecEngine`
+    /// implements `SchedulerCore`, so the typical factory returns the
+    /// engine directly.
+    pub fn spawn<F, C>(cfg: RouterConfig, make_core: F) -> Result<Router>
     where
-        F: FnOnce() -> Result<G> + Send + 'static,
-        G: FnMut(&[Vec<i32>], usize) -> Result<Vec<RequestResult>>,
+        F: FnOnce() -> Result<C> + Send + 'static,
+        C: SchedulerCore + 'static,
     {
         let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.batcher.queue_cap);
         let worker = std::thread::Builder::new()
             .name("lkspec-engine".into())
             .spawn(move || {
-                let mut run_group = match make_engine() {
-                    Ok(g) => g,
+                let core = match make_core() {
+                    Ok(c) => c,
                     Err(e) => {
                         // Drain & fail every request until shutdown.
                         let msg = format!("engine init failed: {e:#}");
@@ -82,17 +88,24 @@ impl Router {
                         return;
                     }
                 };
-                let mut batcher: Batcher<Request> = Batcher::new(cfg.batcher.clone());
+                let mut sched = Scheduler::new(core, cfg.batcher.clone());
+                let mut replies: HashMap<u64, mpsc::Sender<Result<RequestResult, String>>> =
+                    HashMap::new();
                 let mut shutdown = false;
                 loop {
                     // Admit what's queued (non-blocking drain).
                     loop {
                         match rx.try_recv() {
                             Ok(Msg::Submit(req)) => {
-                                if let Err(req) = batcher.push(req) {
-                                    let _ = req
-                                        .reply
-                                        .send(Err("queue full (backpressure)".into()));
+                                match sched.submit(req.prompt, req.max_new) {
+                                    Ok(id) => {
+                                        replies.insert(id, req.reply);
+                                    }
+                                    Err(_) => {
+                                        let _ = req
+                                            .reply
+                                            .send(Err("queue full (backpressure)".into()));
+                                    }
                                 }
                             }
                             Ok(Msg::Shutdown) => {
@@ -106,30 +119,34 @@ impl Router {
                             }
                         }
                     }
-                    if let Some(group) = batcher.next_group(Instant::now()) {
-                        let prompts: Vec<Vec<i32>> =
-                            group.iter().map(|r| r.prompt.clone()).collect();
-                        let max_new =
-                            group.iter().map(|r| r.max_new).max().unwrap_or(16);
-                        match run_group(&prompts, max_new) {
-                            Ok(results) => {
-                                for (req, res) in group.into_iter().zip(results) {
-                                    let _ = req.reply.send(Ok(res));
-                                }
-                            }
-                            Err(e) => {
-                                let msg = format!("engine error: {e:#}");
-                                for req in group {
-                                    let _ = req.reply.send(Err(msg.clone()));
+                    match sched.tick(Instant::now()) {
+                        Ok(done) => {
+                            for (id, res) in done {
+                                if let Some(reply) = replies.remove(&id) {
+                                    let _ = reply.send(Ok(res));
                                 }
                             }
                         }
-                        continue; // check queue again immediately
+                        Err(e) => {
+                            // Engine fault: fail everything in flight or
+                            // queued, reset, and keep serving — a fresh
+                            // group may still succeed.
+                            let msg = format!("engine error: {e:#}");
+                            for (_, reply) in replies.drain() {
+                                let _ = reply.send(Err(msg.clone()));
+                            }
+                            sched.reset();
+                        }
                     }
-                    if shutdown && batcher.is_empty() {
+                    if shutdown && sched.is_idle() {
                         break;
                     }
-                    std::thread::sleep(cfg.idle_poll);
+                    // Sleep whenever no group is decoding — idle, or
+                    // queued requests waiting out the batching window —
+                    // so partial-bucket waits don't busy-spin a core.
+                    if sched.in_flight() == 0 {
+                        std::thread::sleep(cfg.idle_poll);
+                    }
                 }
             })
             .context("spawning engine worker")?;
@@ -176,48 +193,67 @@ impl Drop for Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::spec::accept::AcceptanceStats;
+    use crate::server::scheduler::SimCore;
 
-    /// Router logic is engine-agnostic: test with a stub group runner.
-    #[test]
-    fn routes_and_replies_in_order() {
-        let cfg = RouterConfig {
+    fn cfg() -> RouterConfig {
+        RouterConfig {
             batcher: BatcherConfig {
                 buckets: vec![1, 4],
                 max_wait: Duration::from_millis(1),
                 queue_cap: 16,
             },
             idle_poll: Duration::from_micros(200),
-        };
-        let router = Router::spawn(cfg, || {
-            Ok(move |prompts: &[Vec<i32>], max_new: usize| {
-                Ok(prompts
-                    .iter()
-                    .map(|p| RequestResult {
-                        tokens: p.iter().map(|t| t + 1000).take(max_new).collect(),
-                        stats: AcceptanceStats::new(4),
-                        latency_ms: 0.1,
-                        rounds: 1,
-                    })
-                    .collect())
-            })
-        })
-        .unwrap();
+        }
+    }
+
+    /// Router logic is engine-agnostic: test with the simulated core.
+    /// SimCore echoes `prompt[j % len] + 1000` as token j.
+    #[test]
+    fn routes_and_replies_per_session() {
+        let router = Router::spawn(cfg(), || Ok(SimCore::new(4, 7, vec![1, 4]))).unwrap();
         let rx1 = router.submit(vec![1, 2], 8).unwrap();
         let rx2 = router.submit(vec![3, 4], 8).unwrap();
         let r1 = rx1.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
         let r2 = rx2.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
-        assert_eq!(r1.tokens, vec![1001, 1002]);
-        assert_eq!(r2.tokens, vec![1003, 1004]);
+        assert_eq!(r1.tokens[..2], [1001, 1002]);
+        assert_eq!(r2.tokens[..2], [1003, 1004]);
+        assert_eq!(r1.tokens.len(), 8);
+        assert_eq!(r2.tokens.len(), 8);
+        assert!(r1.latency_ms >= 0.0 && r1.ttft_ms >= 0.0);
+        router.shutdown();
+    }
+
+    /// Sessions with different lengths come back as they finish, and a
+    /// late request is still served by the same worker.
+    #[test]
+    fn streams_results_as_sessions_finish() {
+        let router = Router::spawn(cfg(), || Ok(SimCore::new(4, 11, vec![1, 4]))).unwrap();
+        let rx_short = router.submit(vec![1, 2], 3).unwrap();
+        let rx_long = router.submit(vec![5, 6], 48).unwrap();
+        let short = rx_short
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+        assert_eq!(short.tokens.len(), 3);
+        // Submit after the first result: joins or forms a new group.
+        let rx_late = router.submit(vec![8, 9], 4).unwrap();
+        let late = rx_late
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+        assert_eq!(late.tokens[..1], [1008]);
+        let long = rx_long
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+        assert_eq!(long.tokens.len(), 48);
         router.shutdown();
     }
 
     #[test]
     fn engine_init_failure_propagates() {
         let router = Router::spawn(RouterConfig::default(), || {
-            Err::<fn(&[Vec<i32>], usize) -> Result<Vec<RequestResult>>, _>(anyhow::anyhow!(
-                "boom"
-            ))
+            Err::<SimCore, _>(anyhow::anyhow!("boom"))
         })
         .unwrap();
         let rx = router.submit(vec![1, 2], 4).unwrap();

@@ -76,6 +76,20 @@ impl AcceptanceStats {
             .collect()
     }
 
+    /// Grow to `k` draft positions (counts for the new positions start
+    /// at zero). Lets stats recorded at a smaller chain length — e.g. a
+    /// session served while the engine was clamped to a parallel-head
+    /// architecture's head count — merge into a wider accumulator.
+    pub fn widen(&mut self, k: usize) {
+        if k <= self.k {
+            return;
+        }
+        self.drafted.resize(k, 0);
+        self.accepted.resize(k, 0);
+        self.prefix_hist.resize(k + 1, 0);
+        self.k = k;
+    }
+
     pub fn merge(&mut self, other: &AcceptanceStats) {
         assert_eq!(self.k, other.k);
         for i in 0..self.k {
@@ -128,5 +142,58 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.rounds, 2);
         assert!((a.tau() - (2.0 * (3.0 / 4.0) + 1.0)).abs() < 1e-12);
+    }
+
+    /// Short final rounds near a length cap: fewer than K drafted, and
+    /// zero-draft bookkeeping never divides by zero.
+    #[test]
+    fn short_final_rounds() {
+        let mut s = AcceptanceStats::new(4);
+        s.record_round(4, 4);
+        s.record_round(2, 1); // capped round: only 2 drafted
+        assert_eq!(s.drafted, vec![2, 2, 1, 1]);
+        assert_eq!(s.accepted, vec![2, 1, 1, 1]);
+        assert_eq!(s.prefix_hist, vec![0, 1, 0, 0, 1]);
+        assert_eq!(s.generated_tokens, 5 + 2);
+        // positions never drafted report alpha 0, not NaN
+        let fresh = AcceptanceStats::new(3);
+        assert_eq!(fresh.alpha_per_position(), vec![0.0, 0.0, 0.0]);
+        assert_eq!(fresh.tau(), 1.0);
+    }
+
+    /// record_round enforces the k-cap.
+    #[test]
+    #[should_panic]
+    fn record_rejects_over_k() {
+        let mut s = AcceptanceStats::new(3);
+        s.record_round(4, 0);
+    }
+
+    /// widen grows the position axis so smaller-k stats can merge into a
+    /// wider accumulator; tau is preserved by zero-padding.
+    #[test]
+    fn widen_enables_cross_k_merge() {
+        let mut small = AcceptanceStats::new(2);
+        small.record_round(2, 2);
+        let tau_before = small.tau();
+        small.widen(4);
+        assert_eq!(small.k, 4);
+        assert_eq!(small.drafted, vec![1, 1, 0, 0]);
+        assert_eq!(small.prefix_hist.len(), 5);
+        // ratio unchanged, but tau now scales with the wider K
+        assert!((small.tau() - (4.0 * 1.0 + 1.0)).abs() < 1e-12);
+        assert!(tau_before < small.tau());
+
+        let mut wide = AcceptanceStats::new(4);
+        wide.record_round(4, 1);
+        wide.merge(&small);
+        assert_eq!(wide.rounds, 2);
+        assert_eq!(wide.drafted, vec![2, 2, 1, 1]);
+        assert_eq!(wide.accepted, vec![2, 1, 0, 0]);
+
+        // widen to a smaller/equal k is a no-op
+        let mut s = AcceptanceStats::new(3);
+        s.widen(2);
+        assert_eq!(s.k, 3);
     }
 }

@@ -7,12 +7,16 @@
 //! — any engine bookkeeping bug (positions, KV rollback, bonus-token
 //! indices) breaks it immediately.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
 use lk_spec::data::corpus::{Corpus, CorpusSpec};
 use lk_spec::eval::EvalMode;
 use lk_spec::runtime::Runtime;
+use lk_spec::server::batcher::BatcherConfig;
 use lk_spec::server::engine::{EngineOpts, SpecEngine};
+use lk_spec::server::{RequestResult, Scheduler};
 use lk_spec::tensor::{read_checkpoint, HostTensor};
 use lk_spec::train::{checkpoint_to_params, params_to_checkpoint, DraftTrainer, RunDirs, TargetTrainer};
 use lk_spec::util::{Json, Pcg64};
@@ -117,7 +121,9 @@ fn engine_integration_suite() {
     train_step_decreases_loss_from_scratch(&rt, &corpus);
     greedy_spec_equals_vanilla(&rt, &work, &corpus);
     stochastic_deterministic_given_seed(&rt, &work, &corpus);
+    stochastic_composition_independent(&rt, &work, &corpus);
     batch_rows_independent(&rt, &work, &corpus);
+    scheduler_join_matches_lockstep(&rt, &work, &corpus);
     k_sweep_shapes(&rt, &work, &corpus);
     greedy_draft_not_better(&rt, &work, &corpus);
     mtp_param_mapping(&rt);
@@ -243,6 +249,114 @@ fn stochastic_deterministic_given_seed(rt: &Runtime, work: &Path, corpus: &Corpu
     assert!(s.tau() >= 1.0 && s.tau() <= 8.0);
     let alphas = s.alpha_per_position();
     assert!(alphas.iter().all(|&a| (0.0..=1.0).contains(&a)));
+}
+
+/// Per-request RNG streams are keyed by stable request ids, so a
+/// sequence's stochastic sample path is independent of batch
+/// composition: one batch of 3 (ids 0..2) must equal three sequential
+/// solo calls on a fresh engine (also ids 0..2). The old per-bootstrap
+/// `next_seed` counter failed exactly this (padding rows consumed
+/// seeds).
+fn stochastic_composition_independent(rt: &Runtime, work: &Path, corpus: &Corpus) {
+    println!("== stochastic_composition_independent");
+    let prompts = corpus
+        .load(lk_spec::data::grammar::Domain::Chat, "eval")
+        .unwrap()
+        .prompts(3, 12);
+    let batched = {
+        let mut e = engine_for(rt, work, EvalMode::T1, 7, 31);
+        e.generate_batch(&prompts, 20).unwrap()
+    };
+    let mut solo = Vec::new();
+    {
+        let mut e = engine_for(rt, work, EvalMode::T1, 7, 31);
+        for p in &prompts {
+            solo.push(e.generate_batch(std::slice::from_ref(p), 20).unwrap().remove(0));
+        }
+    }
+    for (i, (a, b)) in batched.iter().zip(&solo).enumerate() {
+        assert_eq!(
+            a.tokens, b.tokens,
+            "request {i}: tokens depend on batch composition"
+        );
+        assert_eq!(a.stats.accepted, b.stats.accepted, "request {i} stats");
+    }
+}
+
+/// Continuous batching on the REAL engine: a queued request joins the
+/// decode group mid-flight (one-row KV copy + per-row prefill) after
+/// another sequence finishes, and every session's tokens and
+/// per-position acceptance stats are identical to the lockstep
+/// run-to-completion path with the same seed/request ids.
+fn scheduler_join_matches_lockstep(rt: &Runtime, work: &Path, corpus: &Corpus) {
+    println!("== scheduler_join_matches_lockstep");
+    let prompts = corpus
+        .load(lk_spec::data::grammar::Domain::Chat, "eval")
+        .unwrap()
+        .prompts(5, 12);
+    assert!(prompts.len() >= 5, "need 5 eval prompts");
+    let caps = [6usize, 28, 28, 28, 12];
+    let cfg = BatcherConfig {
+        buckets: rt.manifest.serve_batches.clone(),
+        max_wait: Duration::ZERO,
+        queue_cap: 16,
+    };
+
+    // --- continuous path: 4 upfront, the 5th submitted after the first
+    // session finishes, so it can only be served via a mid-flight join.
+    let engine = engine_for(rt, work, EvalMode::T1, 7, 77);
+    let mut sched = Scheduler::new(engine, cfg);
+    for i in 0..4 {
+        sched.submit(prompts[i].clone(), caps[i]).unwrap();
+    }
+    let mut got: BTreeMap<u64, RequestResult> = BTreeMap::new();
+    let mut guard = 0;
+    while got.is_empty() {
+        for (id, r) in sched.tick(Instant::now()).unwrap() {
+            got.insert(id, r);
+        }
+        guard += 1;
+        assert!(guard < 500, "no session finished");
+    }
+    sched.submit(prompts[4].clone(), caps[4]).unwrap();
+    while !sched.is_idle() {
+        for (id, r) in sched.tick(Instant::now()).unwrap() {
+            got.insert(id, r);
+        }
+        guard += 1;
+        assert!(guard < 2000, "scheduler did not converge");
+    }
+    assert_eq!(got.len(), 5);
+    assert!(
+        sched.metrics.joins >= 1,
+        "expected the late request to join mid-flight"
+    );
+    assert!(sched.metrics.slot_occupancy.mean() > 0.0);
+
+    // --- lockstep reference: same seed, same request ids (0..3 then 4).
+    let mut e2 = engine_for(rt, work, EvalMode::T1, 7, 77);
+    let reqs: Vec<(Vec<i32>, usize)> = (0..4).map(|i| (prompts[i].clone(), caps[i])).collect();
+    let mut reference = e2.generate_batch_with(&reqs).unwrap();
+    reference.extend(
+        e2.generate_batch_with(&[(prompts[4].clone(), caps[4])])
+            .unwrap(),
+    );
+    for (i, b) in reference.iter().enumerate() {
+        let a = &got[&(i as u64)];
+        assert_eq!(
+            a.tokens, b.tokens,
+            "session {i}: continuous path diverged from lockstep"
+        );
+        assert_eq!(
+            a.stats.drafted, b.stats.drafted,
+            "session {i}: per-position drafted counts differ"
+        );
+        assert_eq!(
+            a.stats.accepted, b.stats.accepted,
+            "session {i}: per-position acceptance stats differ"
+        );
+        assert_eq!(a.stats.prefix_hist, b.stats.prefix_hist, "session {i}");
+    }
 }
 
 /// Batched lockstep decoding must give each sequence the same results it

@@ -42,6 +42,7 @@ from jax._src.lib import xla_client as xc
 from . import drafts as D
 from . import model as M
 from . import train as T
+from . import verify_device as VD
 
 # ---------------------------------------------------------------------------
 # global shape constants (mirrored in rust/src/config)
@@ -277,6 +278,60 @@ def lower_target(w: EntryWriter, cfg: M.TargetConfig) -> dict:
                 ],
             )
 
+        # --- device-resident verify: target forward + fused rejection
+        # sampling in one graph. Draft q's arrive as K separate [B, V]
+        # device tensors (the draft *_sample entries produce them);
+        # randomness is host-fed per-position uniforms. Returns only
+        # O(B·K) verdict integers plus device-side kv/feats/hidden —
+        # full-vocab logits never leave the graph (verify_device.py).
+        kq = VERIFY_T - 1
+
+        def verify_fused_fn(*flat):
+            p = unflatten(flat[:n_params])
+            kv, tokens, pos = flat[n_params : n_params + 3]
+            qs = flat[n_params + 3 : n_params + 3 + kq]
+            u_acc, u_samp, temp, mode, k_active = flat[n_params + 3 + kq :]
+            logits, kv2, feats = M.target_verify(p, kv, tokens, pos, cfg)
+            q = jnp.stack(qs, axis=1)  # [B, K, V]
+            n_acc, toks = VD.fused_verify(
+                logits, q, tokens[:, 1:], u_acc, u_samp, temp, mode, k_active
+            )
+            h_sel = VD.pick_hidden(feats, n_acc, cfg.d_model)
+            return n_acc, toks, kv2, feats, h_sel
+
+        entries[f"verify_fused_b{b}"] = w.lower(
+            f"tgt_{cfg.name}_verify_fused_b{b}",
+            verify_fused_fn,
+            [
+                ("params", pstructs),
+                ("kv", [kv_spec]),
+                ("tokens", [i32((b, VERIFY_T))]),
+                ("pos", [i32((b,))]),
+                ("q", [f32((b, cfg.vocab))] * kq),
+                ("u_acc", [f32((b, kq))]),
+                ("u_samp", [f32((b,))]),
+                ("temp", [f32()]),
+                ("mode", [i32()]),
+                ("k_active", [i32()]),
+            ],
+        )
+
+        # --- device-side one-row KV copy for scheduler joins: splice a
+        # freshly prefilled bucket-1 cache row into a running group's
+        # packed cache without the host round-trip.
+        kv1_spec = f32(
+            (cfg.n_layers, 2, 1, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+        )
+
+        def kv_copy_row_fn(dst, src, row):
+            return (jax.lax.dynamic_update_slice(dst, src, (0, 0, row, 0, 0, 0)),)
+
+        entries[f"kv_copy_row_b{b}"] = w.lower(
+            f"tgt_{cfg.name}_kv_copy_row_b{b}",
+            kv_copy_row_fn,
+            [("dst", [kv_spec]), ("src", [kv1_spec]), ("row", [i32()])],
+        )
+
     return {
         "kind": "target",
         "vocab": cfg.vocab,
@@ -414,6 +469,109 @@ def lower_draft(w: EntryWriter, dcfg: D.DraftConfig) -> dict:
                     ("pos", [i32((b,))]),  # per-row positions
                 ],
             )
+
+            # --- device-verify variants: draft sampling happens in-graph
+            # from host-fed uniforms; the full-vocab q flows on to the
+            # target's verify_fused entry without touching the host.
+            vm_in = vm_group  # eagle3: trailing vocab_map input
+
+            def step_sample_fn(*flat):
+                tp = unflat_t(flat[:n_t])
+                dp = unflat_d(flat[n_t : n_t + n_d])
+                rest = flat[n_t + n_d :]
+                if use_vmap:
+                    dkv, h_prev, token, pos, u, temp, mode, vocab_map = rest
+                else:
+                    dkv, h_prev, token, pos, u, temp, mode = rest
+                    vocab_map = None
+                qlog, h, dkv2 = D.draft_step(dp, tp, dkv, h_prev, token, pos, dcfg)
+                tok, q_full = VD.draft_q_and_sample(
+                    qlog, u, temp, mode, vocab_map, tcfg.vocab
+                )
+                return tok, q_full, h, dkv2
+
+            entries[f"step_sample_b{b}"] = w.lower(
+                f"dr_{tag}_step_sample_b{b}",
+                step_sample_fn,
+                [
+                    ("tparams", t_structs),
+                    ("dparams", d_structs),
+                    ("dkv", [dkv_spec]),
+                    ("h_prev", [f32((b, d))]),
+                    ("token", [i32((b,))]),
+                    ("pos", [i32((b,))]),
+                    ("u", [f32((b,))]),
+                    ("temp", [f32()]),
+                    ("mode", [i32()]),
+                ]
+                + vm_in,
+            )
+
+            # Extend + in-graph pickup of the next round's first draft:
+            # consumes the verify pass's FULL [B, T, 3d] features (device
+            # tensor), slices the draft's fusion columns internally, and
+            # gathers q/h at the per-row accepted-prefix index `sel`.
+            for ename, t in (
+                ("extend_p_sample", PROMPT_LEN),
+                ("extend_k_sample", VERIFY_T),
+            ):
+                def ext_sample_fn(*flat, t=t):
+                    tp = unflat_t(flat[:n_t])
+                    dp = unflat_d(flat[n_t : n_t + n_d])
+                    rest = flat[n_t + n_d :]
+                    if use_vmap:
+                        (dkv, feats_full, tokens_next, pos, sel, u, temp,
+                         mode, vocab_map) = rest
+                    else:
+                        (dkv, feats_full, tokens_next, pos, sel, u, temp,
+                         mode) = rest
+                        vocab_map = None
+                    feats = feats_full[..., tcfg.feat_dim - fdim :]
+                    qlog, h, dkv2 = D.draft_extend(
+                        dp, tp, dkv, feats, tokens_next, pos, dcfg
+                    )
+                    q_sel = jnp.take_along_axis(
+                        qlog, sel[:, None, None], axis=1
+                    )[:, 0]
+                    h_sel = jnp.take_along_axis(
+                        h, sel[:, None, None], axis=1
+                    )[:, 0]
+                    tok, q_full = VD.draft_q_and_sample(
+                        q_sel, u, temp, mode, vocab_map, tcfg.vocab
+                    )
+                    return tok, q_full, h_sel, dkv2
+
+                entries[f"{ename}_b{b}"] = w.lower(
+                    f"dr_{tag}_{ename}_b{b}",
+                    ext_sample_fn,
+                    [
+                        ("tparams", t_structs),
+                        ("dparams", d_structs),
+                        ("dkv", [dkv_spec]),
+                        ("feats", [f32((b, t, tcfg.feat_dim))]),
+                        ("tokens_next", [i32((b, t))]),
+                        ("pos", [i32((b,))]),
+                        ("sel", [i32((b,))]),
+                        ("u", [f32((b,))]),
+                        ("temp", [f32()]),
+                        ("mode", [i32()]),
+                    ]
+                    + vm_in,
+                )
+
+            # Device-side one-row draft-KV copy (scheduler joins).
+            dkv1_spec = f32((2, 1, tcfg.n_heads, tcfg.max_seq, tcfg.head_dim))
+
+            def dkv_copy_row_fn(dst, src, row):
+                return (
+                    jax.lax.dynamic_update_slice(dst, src, (0, row, 0, 0, 0)),
+                )
+
+            entries[f"dkv_copy_row_b{b}"] = w.lower(
+                f"dr_{tag}_dkv_copy_row_b{b}",
+                dkv_copy_row_fn,
+                [("dst", [dkv_spec]), ("src", [dkv1_spec]), ("row", [i32()])],
+            )
         elif dcfg.arch == "medusa":
             def prop_fn(*flat):
                 dp = unflat_d(flat[:n_d])
@@ -424,6 +582,33 @@ def lower_draft(w: EntryWriter, dcfg: D.DraftConfig) -> dict:
                 f"dr_{tag}_propose_b{b}",
                 prop_fn,
                 [("dparams", d_structs), ("hidden", [f32((b, d))])],
+            )
+
+            def prop_sample_fn(*flat):
+                dp = unflat_d(flat[:n_d])
+                hidden, u, temp, mode = flat[n_d:]
+                logits = D.medusa_propose(dp, hidden, dcfg)  # [K, B, V]
+                toks, qs = [], []
+                for i in range(dcfg.k_heads):
+                    tok, qf = VD.draft_q_and_sample(
+                        logits[i], u[:, i], temp, mode
+                    )
+                    toks.append(tok)
+                    qs.append(qf)
+                # tokens [B, K] to the host (O(B·K) ints); one [B, V] q
+                # tensor per head straight into verify_fused.
+                return (jnp.stack(toks, axis=1),) + tuple(qs)
+
+            entries[f"propose_sample_b{b}"] = w.lower(
+                f"dr_{tag}_propose_sample_b{b}",
+                prop_sample_fn,
+                [
+                    ("dparams", d_structs),
+                    ("hidden", [f32((b, d))]),
+                    ("u", [f32((b, dcfg.k_heads))]),
+                    ("temp", [f32()]),
+                    ("mode", [i32()]),
+                ],
             )
         elif dcfg.arch == "mlp":
             def mstep_fn(*flat):
@@ -441,6 +626,31 @@ def lower_draft(w: EntryWriter, dcfg: D.DraftConfig) -> dict:
                     ("state", [f32((b, d))]),
                     ("token", [i32((b,))]),
                     ("head_idx", [i32()]),
+                ],
+            )
+
+            def mstep_sample_fn(*flat):
+                tp = unflat_t(flat[:n_t])
+                dp = unflat_d(flat[n_t : n_t + n_d])
+                state, token, head_idx, u, temp, mode = flat[n_t + n_d :]
+                logits, new_state = D.mlp_step(
+                    dp, tp, state, token, head_idx, dcfg
+                )
+                tok, qf = VD.draft_q_and_sample(logits, u, temp, mode)
+                return tok, qf, new_state
+
+            entries[f"step_sample_b{b}"] = w.lower(
+                f"dr_{tag}_step_sample_b{b}",
+                mstep_sample_fn,
+                [
+                    ("tparams", t_structs),
+                    ("dparams", d_structs),
+                    ("state", [f32((b, d))]),
+                    ("token", [i32((b,))]),
+                    ("head_idx", [i32()]),
+                    ("u", [f32((b,))]),
+                    ("temp", [f32()]),
+                    ("mode", [i32()]),
                 ],
             )
 

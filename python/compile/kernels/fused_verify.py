@@ -1,0 +1,250 @@
+"""L1 Pallas kernel: fused softmax + rejection verify + residual sampling.
+
+The device-resident verify pipeline (see `compile.verify_device` for the
+layer contract and the pure-jnp serving graphs) replaces the serving
+engine's per-round `[K+1, V]` logits round-trip with O(K) verdicts. This
+module is the blocked Pallas realization of that round for one sequence:
+everything of size V — the temperature softmax, the p(x)/q(x) gathers,
+the residual mass and both inverse-CDF selections — streams through
+VMEM tiles in three sequential phases over the vocabulary axis, and only
+[K+1]-sized statistics ever land in HBM:
+
+  phase 0  online softmax stats (running max / scaled sum-exp), the
+           z(x), q(x) gathers at the drafted tokens and the running
+           argmax (greedy mode);
+  phase 1  with the normalizers final: residual mass Σ max(p−q, 0) and
+           the inverse-CDF selection over p (the bonus / fallback
+           sample) with a running-cumsum carry;
+  phase 2  with the residual mass final: the inverse-CDF selection over
+           the *unnormalized* residual against the threshold u·Z_res
+           (equivalent to normalizing, without materializing it).
+
+The [K+1]-level epilogue (accept chain, mode dispatch, token scatter) is
+plain jnp — it is O(K) work. Selection semantics match
+`verify_device.categorical_from_uniform` and the Rust host path: first
+index with cumsum >= u, else the last index with positive mass.
+
+As with the other kernels, grid iteration is sequential so the
+init-on-first-block / accumulate-on-rest pattern is sound, and
+``interpret=True`` is mandatory on the CPU-only PJRT plugin; tests
+cross-check against `verify_device.fused_verify` on multi-block grids.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import verify_device as VD
+
+VOCAB_BLOCK = 128
+
+
+def _pick_block(n: int, want: int) -> int:
+    b = min(want, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _fused_verify_kernel(
+    z_ref, q_ref, drafted_ref, u_ref, inv_ref,
+    m_ref, s_ref, zx_ref, qx_ref, amax_ref,
+    zres_ref, cump_ref, cumr_ref,
+    selp_ref, lastp_ref, selr_ref, lastr_ref,
+    *, vb: int,
+):
+    """Three sequential vocab traversals with [K+1]-sized carries.
+
+    Grid is (3, vocab_blocks); all outputs use the same revisited row
+    block, so they persist as accumulators across both grid dimensions.
+    Probabilities are formed as exp((z - m)·inv) — subtract-then-scale,
+    the same per-element order as `spec::sampling::softmax_t` and
+    `verify_device.temp_softmax`.
+    """
+    ph = pl.program_id(0)
+    j = pl.program_id(1)
+    z = z_ref[...]        # [K1, Vb] raw logits
+    q = q_ref[...]        # [K1, Vb] draft probs (zero row appended for K)
+    drafted = drafted_ref[...]  # [K1]
+    u = u_ref[...]        # [K1] sample uniform (broadcast)
+    inv = inv_ref[...]    # [K1] 1/temperature (broadcast)
+    cols = j * vb + jax.lax.iota(jnp.int32, vb)
+
+    @pl.when((ph == 0) & (j == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], -1e30)
+        s_ref[...] = jnp.zeros_like(s_ref[...])
+        zx_ref[...] = jnp.zeros_like(zx_ref[...])
+        qx_ref[...] = jnp.zeros_like(qx_ref[...])
+        amax_ref[...] = jnp.zeros_like(amax_ref[...])
+        zres_ref[...] = jnp.zeros_like(zres_ref[...])
+        cump_ref[...] = jnp.zeros_like(cump_ref[...])
+        cumr_ref[...] = jnp.zeros_like(cumr_ref[...])
+        selp_ref[...] = jnp.full_like(selp_ref[...], -1)
+        lastp_ref[...] = jnp.full_like(lastp_ref[...], -1)
+        selr_ref[...] = jnp.full_like(selr_ref[...], -1)
+        lastr_ref[...] = jnp.full_like(lastr_ref[...], -1)
+
+    @pl.when(ph == 0)
+    def _stats():
+        # Online (m, s) with rescaling; first-occurrence running argmax;
+        # masked gathers of z and q at the drafted token.
+        m_old = m_ref[...]
+        blk_m = jnp.max(z, axis=-1)
+        blk_am = jnp.argmax(z, axis=-1).astype(jnp.int32)
+        m_new = jnp.maximum(m_old, blk_m)
+        s_ref[...] = s_ref[...] * jnp.exp((m_old - m_new) * inv) + jnp.sum(
+            jnp.exp((z - m_new[:, None]) * inv[:, None]), axis=-1
+        )
+        m_ref[...] = m_new
+        amax_ref[...] = jnp.where(
+            blk_m > m_old, j * vb + blk_am, amax_ref[...]
+        )
+        hit = cols[None, :] == drafted[:, None]
+        zx_ref[...] += jnp.sum(jnp.where(hit, z, 0.0), axis=-1)
+        qx_ref[...] += jnp.sum(jnp.where(hit, q, 0.0), axis=-1)
+
+    @pl.when(ph == 1)
+    def _mass_and_p_select():
+        p = (
+            jnp.exp((z - m_ref[...][:, None]) * inv[:, None])
+            / s_ref[...][:, None]
+        )
+        zres_ref[...] += jnp.sum(jnp.maximum(p - q, 0.0), axis=-1)
+        c = cump_ref[...][:, None] + jnp.cumsum(p, axis=-1)
+        hit = c >= u[:, None]
+        any_hit = jnp.any(hit, axis=-1)
+        first = j * vb + jnp.argmax(hit, axis=-1).astype(jnp.int32)
+        selp_ref[...] = jnp.where(
+            (selp_ref[...] < 0) & any_hit, first, selp_ref[...]
+        )
+        nz = p > 0
+        last = j * vb + (vb - 1) - jnp.argmax(
+            jnp.flip(nz, axis=-1), axis=-1
+        ).astype(jnp.int32)
+        lastp_ref[...] = jnp.where(jnp.any(nz, axis=-1), last, lastp_ref[...])
+        cump_ref[...] += jnp.sum(p, axis=-1)
+
+    @pl.when(ph == 2)
+    def _residual_select():
+        p = (
+            jnp.exp((z - m_ref[...][:, None]) * inv[:, None])
+            / s_ref[...][:, None]
+        )
+        res = jnp.maximum(p - q, 0.0)
+        # Threshold u·Z_res ≡ selecting from the normalized residual.
+        t = u * zres_ref[...]
+        c = cumr_ref[...][:, None] + jnp.cumsum(res, axis=-1)
+        hit = c >= t[:, None]
+        any_hit = jnp.any(hit, axis=-1)
+        first = j * vb + jnp.argmax(hit, axis=-1).astype(jnp.int32)
+        selr_ref[...] = jnp.where(
+            (selr_ref[...] < 0) & any_hit, first, selr_ref[...]
+        )
+        nz = res > 0
+        last = j * vb + (vb - 1) - jnp.argmax(
+            jnp.flip(nz, axis=-1), axis=-1
+        ).astype(jnp.int32)
+        lastr_ref[...] = jnp.where(jnp.any(nz, axis=-1), last, lastr_ref[...])
+        cumr_ref[...] += jnp.sum(res, axis=-1)
+
+
+def fused_verify_row(
+    logits: jax.Array,   # [K+1, V] target logits for the verify block
+    q: jax.Array,        # [K, V] full-vocab draft distributions
+    drafted: jax.Array,  # [K] i32 drafted token ids
+    u_acc: jax.Array,    # [K] accept uniforms
+    u_samp: jax.Array,   # [] sample uniform
+    temp: jax.Array,
+    mode: jax.Array,
+    k_active: jax.Array,
+    vocab_block: int = VOCAB_BLOCK,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """One sequence's fused verify round; matches
+    `verify_device._verify_row` (tested)."""
+    k1, v = logits.shape
+    k = q.shape[0]
+    vb = _pick_block(v, vocab_block)
+    nvb = v // vb
+    z = logits
+    inv = 1.0 / jnp.maximum(temp, 1e-3)
+    inv_full = jnp.broadcast_to(inv, (k1,)).astype(z.dtype)
+    q_pad = jnp.concatenate([q, jnp.zeros((k1 - k, v), q.dtype)], axis=0)
+    drafted_pad = jnp.concatenate(
+        [drafted.astype(jnp.int32), jnp.zeros((k1 - k,), jnp.int32)], axis=0
+    )
+    u_full = jnp.broadcast_to(u_samp, (k1,)).astype(z.dtype)
+    row_spec = pl.BlockSpec((k1,), lambda ph, j: (0,))
+    mat_spec = pl.BlockSpec((k1, vb), lambda ph, j: (0, j))
+    f = jax.ShapeDtypeStruct((k1,), z.dtype)
+    i = jax.ShapeDtypeStruct((k1,), jnp.int32)
+    kernel = functools.partial(_fused_verify_kernel, vb=vb)
+    (m, s, zx, qx, amax, zres, _cp, _cr, selp, lastp, selr, lastr) = (
+        pl.pallas_call(
+            kernel,
+            grid=(3, nvb),
+            in_specs=[mat_spec, mat_spec, row_spec, row_spec, row_spec],
+            out_specs=[row_spec] * 5 + [row_spec] * 3 + [row_spec] * 4,
+            out_shape=[f, f, f, f, i, f, f, f, i, i, i, i],
+            interpret=interpret,
+        )(z, q_pad, drafted_pad, u_full, inv_full)
+    )
+
+    # [K+1]-level epilogue: accept chain + mode dispatch + token scatter.
+    px = jnp.exp((zx - m) * inv) / s
+    sel_p = jnp.where(selp >= 0, selp, jnp.where(lastp >= 0, lastp, v - 1))
+    sel_r = jnp.where(selr >= 0, selr, jnp.where(lastr >= 0, lastr, v - 1))
+    res_sample = jnp.where(zres > 0, sel_r, sel_p)
+
+    pxk, qxk = px[:k], qx[:k]
+    beta_sto = jnp.where(
+        qxk > 0, jnp.minimum(1.0, pxk / jnp.maximum(qxk, 1e-30)), 0.0
+    )
+    beta_gd = jnp.minimum(1.0, pxk)
+    agree = amax[:k] == drafted.astype(jnp.int32)
+    acc_prob = jnp.where(
+        mode == VD.MODE_GREEDY,
+        agree.astype(z.dtype),
+        jnp.where(mode == VD.MODE_GREEDY_DRAFT, beta_gd, beta_sto),
+    )
+    live = jnp.arange(k, dtype=jnp.int32) < k_active
+    acc = (u_acc < acc_prob) & live
+    n_acc = jnp.sum(jnp.cumprod(acc.astype(jnp.int32)))
+    is_bonus = n_acc >= k_active
+    tok_sampled = jnp.where(
+        is_bonus, jnp.take(sel_p, n_acc), jnp.take(res_sample, n_acc)
+    )
+    token = jnp.where(
+        mode == VD.MODE_GREEDY, jnp.take(amax, n_acc), tok_sampled
+    ).astype(jnp.int32)
+    idx = jnp.arange(k1, dtype=jnp.int32)
+    out = jnp.where(idx < n_acc, drafted_pad, 0)
+    out = jnp.where(idx == n_acc, token, out)
+    return n_acc.astype(jnp.int32), out
+
+
+def fused_verify(
+    logits: jax.Array,
+    q: jax.Array,
+    drafted: jax.Array,
+    u_acc: jax.Array,
+    u_samp: jax.Array,
+    temp: jax.Array,
+    mode: jax.Array,
+    k_active: jax.Array,
+    vocab_block: int = VOCAB_BLOCK,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched fused verify: [B, K+1, V] in, (n_acc [B], tokens [B, K+1])
+    out. Matches `verify_device.fused_verify`."""
+    row = functools.partial(
+        fused_verify_row, vocab_block=vocab_block, interpret=interpret
+    )
+    return jax.vmap(row, in_axes=(0, 0, 0, 0, 0, None, None, None))(
+        logits, q, drafted, u_acc, u_samp, temp, mode, k_active
+    )

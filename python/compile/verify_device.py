@@ -1,0 +1,190 @@
+"""Device-resident verification & sampling graphs (L1 -> AOT).
+
+The serving engine's historical hot path pulled `[B, K+1, V]` full-vocab
+target logits (plus every draft q distribution) to the host each round
+and ran softmax + rejection sampling in Rust. The functions here move
+that arithmetic in-graph so a decode round returns only O(B*K) integers:
+`n_accepted`, the accepted/replacement token ids, and the bonus token.
+
+Randomness stays HOST-OWNED: the engine draws per-position uniforms from
+the existing request-keyed PCG64 streams and feeds them in as plain f32
+inputs, so a sequence's sample path remains a pure function of
+(seed, request id) — batch-composition independence and the scheduler's
+continuous-vs-lockstep equivalence tests carry over unchanged.
+
+Shared contract with `rust/src/spec/sampling.rs` (kept in lockstep; the
+Rust side documents the same rules):
+
+  * inverse-CDF selection returns the FIRST index with cumsum >= u,
+    falling back to the LAST index with positive mass (fp slack);
+  * acceptance at position j draws `u_acc[j] < beta_j` with
+    beta = min(1, p(x)/q(x)) (stochastic), min(1, p(x)) (greedy-draft,
+    the Appendix D bug) or the argmax-agreement indicator (greedy);
+  * on the first rejection the replacement is sampled from the
+    normalized residual max(p - q, 0) using the round's single sample
+    uniform; on full acceptance the bonus token is sampled from p with
+    that same uniform (exactly one of the two is consumed per round);
+  * mode codes: 0 = greedy, 1 = stochastic, 2 = greedy-draft.
+
+All ops are plain jnp so the graphs AOT-lower portably; the blocked
+Pallas realization of the fused round lives in `kernels/fused_verify.py`
+and is cross-checked against these functions by `tests/test_kernels.py`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MODE_GREEDY = 0
+MODE_STOCHASTIC = 1
+MODE_GREEDY_DRAFT = 2
+
+
+def categorical_from_uniform(probs: jax.Array, u: jax.Array) -> jax.Array:
+    """Inverse-CDF sample: first index with cumsum(probs) >= u.
+
+    Mirrors `spec::sampling::categorical_from_uniform`: when fp slack
+    leaves no index selected (u > total mass), fall back to the last
+    index carrying positive mass.
+    """
+    v = probs.shape[-1]
+    cum = jnp.cumsum(probs, axis=-1)
+    hit = cum >= u[..., None] if u.ndim else cum >= u
+    first = jnp.argmax(hit, axis=-1)
+    nz = probs > 0
+    last_nz = (v - 1) - jnp.argmax(jnp.flip(nz, axis=-1), axis=-1)
+    last_nz = jnp.where(jnp.any(nz, axis=-1), last_nz, v - 1)
+    return jnp.where(jnp.any(hit, axis=-1), first, last_nz).astype(jnp.int32)
+
+
+def temp_softmax(logits: jax.Array, temp: jax.Array) -> jax.Array:
+    """Temperature softmax matching `spec::sampling::softmax_t` — same
+    per-element op order ((z - max)·inv, then exp) so the two paths can
+    only diverge through reduction ordering, not formulation."""
+    inv = 1.0 / jnp.maximum(temp, 1e-3)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp((logits - m) * inv)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def draft_q_and_sample(
+    logits_c: jax.Array,
+    u: jax.Array,
+    temp: jax.Array,
+    mode: jax.Array,
+    vocab_map: jax.Array | None = None,
+    full_vocab: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """In-graph draft sampling from (possibly truncated-vocab) logits.
+
+    Args:
+      logits_c: [B, Vd] draft logits over the draft vocabulary
+      u: [B] host-fed uniforms (consumed only in stochastic mode — the
+        host feeds constants and skips its RNG draw for greedy modes)
+      vocab_map: [Vd] truncated-index -> full-vocab-index (eagle3), or
+        None when the draft emits full-vocab logits
+
+    Returns (token [B] i32 full-vocab ids, q_full [B, V] f32) — the q
+    output is consumed by `fused_verify` downstream without ever being
+    materialized on the host.
+    """
+    qc = temp_softmax(logits_c, temp)
+    tok_sto = categorical_from_uniform(qc, u)
+    tok_greedy = jnp.argmax(qc, axis=-1).astype(jnp.int32)
+    tok_c = jnp.where(mode == MODE_STOCHASTIC, tok_sto, tok_greedy)
+    if vocab_map is None:
+        return tok_c, qc
+    b = logits_c.shape[0]
+    q_full = (
+        jnp.zeros((b, full_vocab), qc.dtype).at[:, vocab_map].set(qc)
+    )
+    return jnp.take(vocab_map, tok_c), q_full
+
+
+def _verify_row(
+    logits: jax.Array,   # [K+1, V] target logits for the verify block
+    q: jax.Array,        # [K, V] full-vocab draft distributions
+    drafted: jax.Array,  # [K] i32 full-vocab drafted ids
+    u_acc: jax.Array,    # [K] accept uniforms
+    u_samp: jax.Array,   # [] sample uniform (residual OR bonus)
+    temp: jax.Array,
+    mode: jax.Array,
+    k_active: jax.Array,  # [] i32: live chain length this round (<= K)
+) -> tuple[jax.Array, jax.Array]:
+    k1, v = logits.shape
+    k = q.shape[0]
+    p = temp_softmax(logits, temp)  # [K+1, V]
+    pk = p[:k]
+    px = jnp.take_along_axis(pk, drafted[:, None], axis=-1)[:, 0]
+    qx = jnp.take_along_axis(q, drafted[:, None], axis=-1)[:, 0]
+    beta_sto = jnp.minimum(1.0, px / jnp.maximum(qx, 1e-30))
+    beta_sto = jnp.where(qx > 0, beta_sto, 0.0)
+    beta_gd = jnp.minimum(1.0, px)
+    agree = jnp.argmax(pk, axis=-1).astype(jnp.int32) == drafted
+    acc_prob = jnp.where(
+        mode == MODE_GREEDY,
+        agree.astype(p.dtype),
+        jnp.where(mode == MODE_GREEDY_DRAFT, beta_gd, beta_sto),
+    )
+    live = jnp.arange(k, dtype=jnp.int32) < k_active
+    acc = (u_acc < acc_prob) & live
+    n_acc = jnp.sum(jnp.cumprod(acc.astype(jnp.int32)))
+    # Position of the non-draft emission: residual replacement at the
+    # first rejection, or the bonus continuation after a clean sweep.
+    p_stop = jnp.take(p, n_acc, axis=0)
+    q_pad = jnp.concatenate([q, jnp.zeros((k1 - k, v), q.dtype)], axis=0)
+    q_stop = jnp.take(q_pad, n_acc, axis=0)
+    is_bonus = n_acc >= k_active
+    res = jnp.maximum(p_stop - q_stop, 0.0)
+    zres = jnp.sum(res)
+    # Residual selection thresholds the UNNORMALIZED residual cumsum at
+    # u·Z_res — the same formulation as `residual_from_uniform` and the
+    # Pallas kernel's phase 2 (equivalent to normalizing first, without
+    # introducing a differently-rounded division).
+    tok_res = categorical_from_uniform(res, u_samp * zres)
+    tok_p = categorical_from_uniform(p_stop, u_samp)
+    tok_sampled = jnp.where(
+        is_bonus, tok_p, jnp.where(zres > 0, tok_res, tok_p)
+    )
+    tok_greedy = jnp.argmax(p_stop).astype(jnp.int32)
+    token = jnp.where(mode == MODE_GREEDY, tok_greedy, tok_sampled)
+    idx = jnp.arange(k1, dtype=jnp.int32)
+    drafted_pad = jnp.concatenate(
+        [drafted, jnp.zeros((k1 - k,), jnp.int32)], axis=0
+    )
+    out = jnp.where(idx < n_acc, drafted_pad, 0)
+    out = jnp.where(idx == n_acc, token, out)
+    return n_acc.astype(jnp.int32), out
+
+
+def fused_verify(
+    logits: jax.Array,   # [B, K+1, V]
+    q: jax.Array,        # [B, K, V]
+    drafted: jax.Array,  # [B, K] i32
+    u_acc: jax.Array,    # [B, K]
+    u_samp: jax.Array,   # [B]
+    temp: jax.Array,
+    mode: jax.Array,
+    k_active: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched fused softmax + rejection verify + residual/bonus sample.
+
+    Returns (n_acc [B] i32, tokens_out [B, K+1] i32) where
+    tokens_out[b, :n_acc[b]] echoes the accepted drafts and
+    tokens_out[b, n_acc[b]] is the replacement/bonus emission.
+    """
+    return jax.vmap(
+        _verify_row, in_axes=(0, 0, 0, 0, 0, None, None, None)
+    )(logits, q, drafted, u_acc, u_samp, temp, mode, k_active)
+
+
+def pick_hidden(feats: jax.Array, sel: jax.Array, d: int) -> jax.Array:
+    """Per-row gather of the last-d feature slice at index `sel`.
+
+    feats [B, T, F], sel [B] i32 -> [B, d]: the conditioning hidden the
+    parallel-head drafts (MEDUSA/MLP) pick up at the accepted-prefix
+    boundary — done in-graph so features never reach the host.
+    """
+    h = jnp.take_along_axis(feats, sel[:, None, None], axis=1)[:, 0, :]
+    return h[..., h.shape[-1] - d :]

@@ -90,3 +90,47 @@ def test_serving_entry_shapes():
     d = m["drafts"]["eagle3@dense-s"]
     s4 = d["entries"]["step_b4"]
     assert s4["outputs"][0]["shape"] == [4, d["draft_vocab"]]
+
+
+def test_device_verify_entry_shapes():
+    """The device-resident verify contract: uniforms in, O(B·K) verdicts
+    out; q arrives as K separate [B, V] device tensors."""
+    m = manifest()
+    t = m["targets"]["dense-s"]
+    kq = m["verify_t"] - 1
+    vf = t["entries"]["verify_fused_b4"]
+    groups = [i["group"] for i in vf["inputs"]]
+    assert groups.count("q") == kq
+    for g in ("u_acc", "u_samp", "temp", "mode", "k_active"):
+        assert g in groups, g
+    # outputs: n_acc, tokens_out, kv', feats, h_sel
+    assert vf["outputs"][0] == {"shape": [4], "dtype": "int32"}
+    assert vf["outputs"][1] == {"shape": [4, m["verify_t"]], "dtype": "int32"}
+    assert vf["outputs"][4]["shape"] == [4, t["d_model"]]
+    # device row copy: bucket-1 src spliced into the packed cache
+    cp = t["entries"]["kv_copy_row_b4"]
+    assert cp["inputs"][1]["shape"][2] == 1
+    assert cp["outputs"][0]["shape"] == cp["inputs"][0]["shape"]
+
+
+def test_device_draft_sample_entries():
+    """Every draft arch carries its device-sampling entries: token ids to
+    the host, full-vocab q on device."""
+    m = manifest()
+    v = m["vocab"]
+    e3 = m["drafts"]["eagle3@dense-s"]["entries"]
+    ss = e3["step_sample_b4"]
+    assert ss["outputs"][0] == {"shape": [4], "dtype": "int32"}
+    assert ss["outputs"][1]["shape"] == [4, v]  # full vocab, not draft_vocab
+    assert any(i["group"] == "vocab_map" for i in ss["inputs"])
+    ek = e3["extend_k_sample_b4"]
+    feats = next(i for i in ek["inputs"] if i["group"] == "feats")
+    assert feats["shape"] == [4, m["verify_t"],
+                              m["targets"]["dense-s"]["feat_dim"]]
+    assert "dkv_copy_row_b4" in e3
+    md = m["drafts"]["medusa@dense-s"]["entries"]["propose_sample_b4"]
+    assert md["outputs"][0] == {"shape": [4, m["k_heads"]], "dtype": "int32"}
+    assert len(md["outputs"]) == 1 + m["k_heads"]
+    ml = m["drafts"]["mlp@dense-s"]["entries"]["step_sample_b4"]
+    assert ml["outputs"][0] == {"shape": [4], "dtype": "int32"}
+    assert ml["outputs"][1]["shape"] == [4, v]

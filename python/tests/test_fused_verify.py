@@ -1,0 +1,208 @@
+"""Device-verify correctness: the blocked Pallas round
+(`kernels.fused_verify`) against the jnp serving graph
+(`compile.verify_device`) against a literal transcription of the Rust
+host path (`spec::sampling::verify_round`) — the three implementations
+whose agreement the engine's host/device parity rests on.
+
+Deliberately hypothesis-free so the suite runs on minimal images; the
+randomized sweeps are seeded and exhaustive over (mode, block size).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import verify_device as VD
+from compile.kernels import fused_verify
+
+
+def rand(key, shape, scale):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# host-path mirrors (keep in lockstep with rust/src/spec/sampling.rs)
+# ---------------------------------------------------------------------------
+
+def _host_categorical(p, u):
+    """Mirror of `spec::sampling::categorical_from_uniform`."""
+    c = 0.0
+    for i, x in enumerate(p):
+        c += x
+        if c >= u:
+            return i
+    nz = [i for i, x in enumerate(p) if x > 0]
+    return nz[-1] if nz else len(p) - 1
+
+
+def _host_verify_round(logits, q, drafted, u_acc, u_samp, temp, mode, k_active):
+    """Mirror of `spec::sampling::verify_round` (the Rust host path)."""
+    k1, _ = logits.shape
+
+    def softmax_t(z, t):
+        z = z / max(t, 1e-3)
+        e = np.exp(z - z.max())
+        return e / e.sum()
+
+    p = np.stack([softmax_t(logits[j], temp) for j in range(k1)])
+    j = 0
+    while j < k_active:
+        x = drafted[j]
+        if mode == VD.MODE_GREEDY:
+            ok = int(np.argmax(p[j])) == x
+        elif mode == VD.MODE_STOCHASTIC:
+            beta = min(1.0, p[j][x] / q[j][x]) if q[j][x] > 0 else 0.0
+            ok = u_acc[j] < beta
+        else:  # greedy-draft (Appendix D): beta = min(1, p(x))
+            ok = u_acc[j] < min(1.0, p[j][x])
+        if not ok:
+            break
+        j += 1
+    if mode == VD.MODE_GREEDY:
+        tok = int(np.argmax(p[j]))
+    elif j >= k_active:
+        tok = _host_categorical(p[j], u_samp)  # bonus
+    else:
+        res = np.maximum(p[j] - q[j], 0.0)
+        z = res.sum()
+        if z > 0:
+            tok = _host_categorical(res / max(z, 1e-30), u_samp)
+        else:
+            tok = _host_categorical(p[j], u_samp)  # p == q fallback
+    return j, tok
+
+
+# ---------------------------------------------------------------------------
+# three-way agreement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [0, 1, 2])
+@pytest.mark.parametrize("vb", [16, 64])
+def test_kernel_matches_device_graph_and_host_loop(mode, vb):
+    rng = np.random.default_rng(100 + mode)
+    for trial in range(40):
+        k1, v = 8, 64
+        k = k1 - 1
+        temp = float(rng.choice([0.7, 1.0, 1.5]))
+        k_active = int(rng.integers(1, k + 1))
+        logits = rng.normal(0, 2, (k1, v)).astype(np.float32)
+        q = np.asarray(
+            jax.nn.softmax(jnp.asarray(rng.normal(0, 2, (k, v)), jnp.float32))
+        )
+        drafted = rng.integers(0, v, k).astype(np.int32)
+        u_acc = rng.random(k).astype(np.float32)
+        u_samp = np.float32(rng.random())
+        args = (
+            jnp.asarray(logits), jnp.asarray(q), jnp.asarray(drafted),
+            jnp.asarray(u_acc), jnp.asarray(u_samp), jnp.float32(temp),
+            jnp.int32(mode), jnp.int32(k_active),
+        )
+        na_k, tok_k = fused_verify.fused_verify_row(*args, vocab_block=vb)
+        na_g, tok_g = VD._verify_row(*args)
+        assert int(na_k) == int(na_g), trial
+        np.testing.assert_array_equal(
+            np.asarray(tok_k)[: int(na_g) + 1],
+            np.asarray(tok_g)[: int(na_g) + 1],
+        )
+        hj, htok = _host_verify_round(
+            logits.astype(np.float64), q.astype(np.float64), drafted,
+            u_acc, float(u_samp), temp, mode, k_active,
+        )
+        assert int(na_g) == hj, trial
+        assert int(np.asarray(tok_g)[hj]) == htok, trial
+
+
+def test_accepts_all_when_q_equals_p():
+    p_logits = rand(30, (8, 64), 2.0)
+    q = jax.nn.softmax(p_logits)[:7]
+    drafted = jnp.arange(7, dtype=jnp.int32)
+    n_acc, toks = fused_verify.fused_verify_row(
+        p_logits, q, drafted, jnp.full((7,), 0.999, jnp.float32),
+        jnp.float32(0.5), jnp.float32(1.0), jnp.int32(1), jnp.int32(7),
+        vocab_block=16,
+    )
+    assert int(n_acc) == 7  # beta == 1 everywhere when q == p
+    np.testing.assert_array_equal(np.asarray(toks)[:7], np.arange(7))
+
+
+def test_k_active_caps_acceptance():
+    """Short chains (k < K) must stop at k_active and emit a bonus there —
+    the zero-padded q inputs beyond k_active may never be 'accepted'."""
+    p_logits = rand(31, (8, 64), 2.0)
+    q = jax.nn.softmax(p_logits)[:7]
+    drafted = jnp.arange(7, dtype=jnp.int32)
+    for ka in (1, 3):
+        n_acc, _ = fused_verify.fused_verify_row(
+            p_logits, q, drafted, jnp.full((7,), 0.0, jnp.float32),
+            jnp.float32(0.5), jnp.float32(1.0), jnp.int32(1), jnp.int32(ka),
+            vocab_block=16,
+        )
+        assert int(n_acc) == ka
+
+
+def test_preserves_target_distribution():
+    """Leviathan Thm. 1 on the fused path: accepted-or-replacement output
+    of a k=1 round is distributed exactly as p (the same machinery as
+    `spec::sampling::rejection_sampling_preserves_target`)."""
+    rng = np.random.default_rng(9)
+    v = 16
+    logits = rng.normal(0, 2, (1, 2, v)).astype(np.float32)
+    q = np.asarray(
+        jax.nn.softmax(jnp.asarray(rng.normal(0, 2, (v,)), jnp.float32))
+    )
+
+    def p_of(z):
+        e = np.exp(z - z.max())
+        return e / e.sum()
+
+    p = p_of(logits[0, 0])
+    n = 40_000
+    drafted = np.array(
+        [_host_categorical(q, u) for u in rng.random(n)], np.int32
+    )
+    n_acc, toks = VD.fused_verify(
+        jnp.broadcast_to(jnp.asarray(logits), (n, 2, v)),
+        jnp.broadcast_to(jnp.asarray(q, jnp.float32)[None, None], (n, 1, v)),
+        jnp.asarray(drafted)[:, None],
+        jnp.asarray(rng.random((n, 1)), jnp.float32),
+        jnp.asarray(rng.random(n), jnp.float32),
+        jnp.float32(1.0), jnp.int32(1), jnp.int32(1),
+    )
+    emitted = np.asarray(toks)[:, 0]  # accepted draft or its replacement
+    counts = np.bincount(emitted, minlength=v) / n
+    np.testing.assert_allclose(counts, p, atol=0.012)
+
+
+def test_categorical_from_uniform_edges():
+    # fp slack past the total mass falls back to the last positive index
+    p = jnp.array([0.3, 0.0, 0.2, 0.0], jnp.float32)
+    assert int(VD.categorical_from_uniform(p, jnp.float32(0.9))) == 2
+    assert int(VD.categorical_from_uniform(p, jnp.float32(0.1))) == 0
+    assert int(VD.categorical_from_uniform(p, jnp.float32(0.35))) == 2
+
+
+def test_draft_sample_scatters_truncated_vocab():
+    rng = np.random.default_rng(7)
+    vm = jnp.asarray(np.sort(rng.choice(64, 16, replace=False)).astype(np.int32))
+    logits = jnp.asarray(rng.normal(0, 1, (4, 16)).astype(np.float32))
+    tok, qf = VD.draft_q_and_sample(
+        logits, jnp.asarray(rng.random(4).astype(np.float32)),
+        jnp.float32(1.0), jnp.int32(1), vm, 64,
+    )
+    assert tok.shape == (4,) and qf.shape == (4, 64)
+    np.testing.assert_allclose(np.asarray(qf).sum(-1), 1.0, atol=1e-5)
+    allowed = set(np.asarray(vm).tolist())
+    assert all(int(t) in allowed for t in tok)
+    off = np.setdiff1d(np.arange(64), np.asarray(vm))
+    assert np.all(np.asarray(qf)[:, off] == 0.0)
+
+
+def test_pick_hidden_gathers_last_slice():
+    rng = np.random.default_rng(3)
+    f = jnp.asarray(rng.normal(0, 1, (2, 5, 12)), jnp.float32)
+    sel = jnp.array([3, 0], jnp.int32)
+    h = VD.pick_hidden(f, sel, 4)
+    assert h.shape == (2, 4)
+    np.testing.assert_allclose(np.asarray(h)[0], np.asarray(f)[0, 3, 8:])
+    np.testing.assert_allclose(np.asarray(h)[1], np.asarray(f)[1, 0, 8:])

@@ -13,6 +13,9 @@ use lk_spec::data::grammar::Domain;
 use lk_spec::eval::{EvalMode, EvalSettings};
 use lk_spec::runtime::Runtime;
 use lk_spec::server::batcher::BatcherConfig;
+use lk_spec::server::metrics::{
+    device_bytes_per_round, host_draft_bytes_per_round, host_verify_bytes_per_round,
+};
 use lk_spec::server::{Scheduler, SimCore};
 use lk_spec::tensor::HostTensor;
 use lk_spec::train::RunDirs;
@@ -70,8 +73,87 @@ fn bench_scheduler_overhead() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Steady-state device→host transfer per decode round, host vs device
+/// verify path, from the closed forms in `server::metrics` at the
+/// manifest's own dims (512 vocab, Vt=8, 3d=288 features). Always runs —
+/// this is the analytic side of the ISSUE-2 acceptance criterion; the
+/// live counter below cross-checks it when artifacts exist.
+fn bench_verify_transfer() -> anyhow::Result<()> {
+    let (vt, vocab, vd, d, f3) = (8usize, 512usize, 320usize, 96usize, 288usize);
+    let mut table = Table::new(
+        "Verify-path d2h transfer per round (analytic, manifest dims)",
+        &["arch", "B", "K", "host B/round", "device B/round", "reduction"],
+    );
+    for (arch, k) in [("eagle3", 7usize), ("medusa", 6), ("mlp", 6)] {
+        for b in [1usize, 4] {
+            let host = host_verify_bytes_per_round(b, vt, vocab, f3)
+                + host_draft_bytes_per_round(arch, b, k, vocab, vd, d, vt);
+            let dev = device_bytes_per_round(b, k, vt);
+            table.row(vec![
+                arch.to_string(),
+                b.to_string(),
+                k.to_string(),
+                host.to_string(),
+                dev.to_string(),
+                format!("{:.0}x", host as f64 / dev as f64),
+            ]);
+        }
+    }
+    table.emit("verify_transfer")?;
+    Ok(())
+}
+
+/// Live `bytes_to_host_per_round` on the real engine, forced host vs
+/// forced device, proving the analytic table against the runtime's
+/// `output_host` accounting. Needs artifacts + the dense-s/eagle3
+/// checkpoints (skips quietly otherwise, like the end-to-end section).
+fn bench_live_transfer(rt: &Runtime, dirs: &RunDirs) -> anyhow::Result<()> {
+    use lk_spec::server::engine::{EngineOpts, SpecEngine, VerifyPath};
+    use lk_spec::tensor::read_checkpoint;
+    use lk_spec::util::Json;
+    if !rt.has_target_entry("dense-s", "verify_fused_b1") {
+        println!("live transfer: artifacts predate device verify — host path only");
+        return Ok(());
+    }
+    let tckpt = read_checkpoint(&dirs.target_ckpt("dense-s"))?;
+    let dckpt = read_checkpoint(&dirs.draft_ckpt("eagle3_dense-s__kl"))?;
+    let vm: Vec<i32> = Json::parse_file(&dirs.vocab_map())?
+        .get("map")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|x| x.as_i64().unwrap_or(0) as i32)
+        .collect();
+    let mut table = Table::new(
+        "Verify-path d2h transfer per round (measured, eagle3@dense-s b=1)",
+        &["path", "bytes/round"],
+    );
+    for path in [VerifyPath::Host, VerifyPath::Device] {
+        let mut engine = SpecEngine::new(
+            rt,
+            "eagle3@dense-s",
+            &tckpt,
+            &dckpt,
+            Some(vm.clone()),
+            EngineOpts {
+                verify_path: path,
+                ..Default::default()
+            },
+        )?;
+        let prompt: Vec<i32> = vec![5, 6, 7, 8];
+        let _ = engine.generate_batch(std::slice::from_ref(&prompt), 24)?;
+        table.row(vec![
+            engine.verify_path().to_string(),
+            format!("{:.0}", engine.metrics.bytes_to_host_per_round()),
+        ]);
+    }
+    table.emit("verify_transfer_live")?;
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     bench_scheduler_overhead()?;
+    bench_verify_transfer()?;
     if !Path::new("artifacts/manifest.json").exists() {
         skip("artifacts missing");
         return Ok(());
@@ -122,6 +204,7 @@ fn main() -> anyhow::Result<()> {
         skip("checkpoints missing — per-executable numbers above still valid");
         return Ok(());
     }
+    bench_live_transfer(&rt, &dirs)?;
     let corpus = Corpus::open(Path::new("data"))?;
     // Standard settings so this re-evaluation is interchangeable with the
     // cached cell it refreshes (same cell name => must be same protocol).

@@ -135,6 +135,7 @@ pub fn eval_cell(
         temperature: 1.0,
         mode: mode.sampling(),
         seed: settings.seed,
+        ..Default::default()
     };
     let mut engine = SpecEngine::new(rt, draft, &tckpt, &dckpt, vocab_map, opts)?;
 

@@ -33,6 +33,11 @@ pub struct Executable {
     /// cumulative execution stats (for the perf pass)
     pub calls: std::cell::Cell<u64>,
     pub exec_ns: std::cell::Cell<u64>,
+    /// Bytes materialized for host-side processing through `output_host`
+    /// — the architectural device→host transfer measure the serving
+    /// metrics report (outputs that flow executable-to-executable as
+    /// literals are device-resident by this runtime's convention).
+    pub d2h_bytes: std::cell::Cell<u64>,
 }
 
 impl Executable {
@@ -88,7 +93,9 @@ impl Executable {
 
     /// Fetch output `idx` of a `run_*` result as a host tensor.
     pub fn output_host(&self, outs: &[xla::Literal], idx: usize) -> Result<HostTensor> {
-        pack::from_literal(&outs[idx], &self.spec.outputs[idx], &self.name)
+        let t = pack::from_literal(&outs[idx], &self.spec.outputs[idx], &self.name)?;
+        self.d2h_bytes.set(self.d2h_bytes.get() + t.data.len() as u64);
+        Ok(t)
     }
 
     /// Execute with host tensors; returns outputs per the manifest spec.
@@ -173,6 +180,7 @@ impl Runtime {
             exe,
             calls: std::cell::Cell::new(0),
             exec_ns: std::cell::Cell::new(0),
+            d2h_bytes: std::cell::Cell::new(0),
         });
         self.cache.borrow_mut().insert(spec.file.clone(), e.clone());
         Ok(e)
@@ -203,6 +211,34 @@ impl Runtime {
             .get(entry)
             .with_context(|| format!("draft {draft} has no entry '{entry}'"))?;
         self.load(spec, &format!("dr:{draft}:{entry}"))
+    }
+
+    /// Does `target` carry an entry by this name? Artifact sets lowered
+    /// before a feature existed simply lack its entries; callers gate
+    /// optional device paths on this and fall back to the host path.
+    pub fn has_target_entry(&self, target: &str, entry: &str) -> bool {
+        self.manifest
+            .targets
+            .get(target)
+            .is_some_and(|t| t.entries.contains_key(entry))
+    }
+
+    pub fn has_draft_entry(&self, draft: &str, entry: &str) -> bool {
+        self.manifest
+            .drafts
+            .get(draft)
+            .is_some_and(|d| d.entries.contains_key(entry))
+    }
+
+    /// Total bytes materialized host-side via `output_host` across all
+    /// cached executables — the engine samples this around each decode
+    /// round for the `bytes_to_host_per_round` metric.
+    pub fn d2h_bytes_total(&self) -> u64 {
+        self.cache
+            .borrow()
+            .values()
+            .map(|e| e.d2h_bytes.get())
+            .sum()
     }
 
     /// Execution-time accounting across all cached executables (perf pass).

@@ -1,15 +1,22 @@
 //! MEDUSA draft backend: K parallel heads proposing from one conditioning
 //! hidden state; no draft-side KV, so continuous-batching joins move only
-//! the per-sequence hidden (carried inside `SeqState`).
+//! the per-sequence hidden (carried inside `SeqState` on the host path,
+//! as the `[B, d]` `h_prev` literal on the device path).
+//!
+//! Device verify path: one `propose_sample` call samples every head
+//! in-graph from host-fed uniforms and hands the K full-vocab q tensors
+//! straight to the fused verify entry; the conditioning hidden for the
+//! next round is the verify pass's in-graph pickup (`h_sel`).
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::runtime::{DraftSpec, Runtime};
 use crate::tensor::HostTensor;
 
 use super::{
-    arg_refs, lit_f32, pickup_hidden_advance, pickup_hidden_bootstrap, upload, DraftBackend,
-    EngineCx, GroupState,
+    adopt_hidden_row, arg_refs, hidden_lit, lit_f32, lit_scalar_f32, lit_scalar_i32,
+    pickup_hidden_advance, pickup_hidden_bootstrap, upload, DraftBackend, EngineCx, GroupState,
+    QFlat, DUMMY_UNIFORM,
 };
 
 pub struct Medusa;
@@ -23,6 +30,13 @@ impl DraftBackend for Medusa {
         dspec.k_heads
     }
 
+    fn supports_device(&self, rt: &Runtime, dspec: &DraftSpec) -> bool {
+        rt.manifest
+            .serve_batches
+            .iter()
+            .all(|&b| rt.has_draft_entry(&dspec.name, &format!("propose_sample_b{b}")))
+    }
+
     fn bootstrap(
         &self,
         cx: &EngineCx,
@@ -31,6 +45,9 @@ impl DraftBackend for Medusa {
         feats: &HostTensor,
     ) -> Result<()> {
         pickup_hidden_bootstrap(cx, g, feats);
+        if cx.device_verify {
+            g.h_prev = Some(hidden_lit(g, cx.tspec.d_model)?);
+        }
         Ok(())
     }
 
@@ -39,7 +56,7 @@ impl DraftBackend for Medusa {
         cx: &EngineCx,
         g: &mut GroupState,
         drafts: &mut [Vec<i32>],
-        q_full: &mut [Vec<Vec<f32>>],
+        q: &mut QFlat,
     ) -> Result<()> {
         let b = g.b;
         let k = cx.k;
@@ -60,10 +77,55 @@ impl DraftBackend for Medusa {
         for row in 0..b {
             for i in 0..k {
                 let off = (i * b + row) * vocab;
-                let (qf, qc) = cx.draft_dist(&logits[off..off + vocab]);
-                let xi = cx.sample_draft(&mut g.seqs[row].rng, &qc);
+                let (full, compact) = q.slot(row, i);
+                cx.write_draft_dist(&logits[off..off + vocab], compact, full);
+                let xi = cx.sample_draft(&mut g.seqs[row].rng, compact);
                 drafts[row][i] = cx.draft_token_id(xi);
-                q_full[row].push(qf);
+            }
+        }
+        Ok(())
+    }
+
+    fn propose_device(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &mut [Vec<i32>],
+        q_dev: &mut Vec<xla::Literal>,
+    ) -> Result<()> {
+        let b = g.b;
+        let k = cx.k;
+        let kh = cx.dspec.k_heads;
+        // Row-major uniform draws mirror the host path's per-row loop;
+        // heads beyond this round's k get inert constants (their
+        // in-graph samples are discarded).
+        let mut u = vec![DUMMY_UNIFORM; b * kh];
+        for (row, seq) in g.seqs.iter_mut().enumerate() {
+            for i in 0..k {
+                u[row * kh + i] = cx.draft_uniform(&mut seq.rng);
+            }
+        }
+        let propose = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("propose_sample_b{b}"))?;
+        let dyn_in = [
+            g.h_prev.take().context("medusa device hidden")?,
+            lit_f32(&[b, kh], &u)?,
+            lit_scalar_f32(cx.opts.temperature.max(1e-3))?,
+            lit_scalar_i32(cx.opts.mode.device_code())?,
+        ];
+        let dyn_b = upload(cx.rt, &dyn_in)?;
+        let args = arg_refs(&cx.dparams, &[], &dyn_b);
+        let outs = propose.run_bufs(&args)?;
+        let toks = propose.output_host(&outs, 0)?.as_i32(); // [B, Kh] — O(B·K) ints
+        for (row, dr) in drafts.iter_mut().enumerate() {
+            for (i, slot) in dr.iter_mut().enumerate() {
+                *slot = toks[row * kh + i];
+            }
+        }
+        for (i, lit) in outs.into_iter().enumerate().skip(1) {
+            if i <= k {
+                q_dev.push(lit); // q_0..q_{k-1}, device-resident
             }
         }
         Ok(())
@@ -81,15 +143,35 @@ impl DraftBackend for Medusa {
         Ok(())
     }
 
-    fn adopt_row(
+    fn advance_device(
         &self,
         _cx: &EngineCx,
-        _dst: &mut GroupState,
-        _dst_row: usize,
-        _src: &GroupState,
-        _src_row: usize,
+        g: &mut GroupState,
+        _drafts: &[Vec<i32>],
+        _n_acc: &[usize],
+        _n_acc_lit: xla::Literal,
+        _feats: xla::Literal,
+        h_sel: xla::Literal,
     ) -> Result<()> {
-        // All draft state is per-sequence host state; nothing packed.
+        // The verify pass already picked the accepted-boundary hidden
+        // in-graph; it becomes next round's conditioning as-is.
+        g.h_prev = Some(h_sel);
+        Ok(())
+    }
+
+    fn adopt_row(
+        &self,
+        cx: &EngineCx,
+        dst: &mut GroupState,
+        dst_row: usize,
+        src: &GroupState,
+        src_row: usize,
+    ) -> Result<()> {
+        // Host path: all draft state is per-sequence host state. Device
+        // path: the conditioning hidden lives in the packed literal.
+        if cx.device_verify {
+            adopt_hidden_row(cx, dst, dst_row, src, src_row)?;
+        }
         Ok(())
     }
 }

@@ -1,15 +1,21 @@
 //! MLP-speculator draft backend: a per-head recurrent MLP state threaded
 //! through K chained `step` calls. Like MEDUSA there is no draft-side KV;
-//! the conditioning hidden lives in `SeqState` and joins are free.
+//! the conditioning hidden lives in `SeqState` (host path) or the packed
+//! `h_prev` literal (device path) and joins are cheap.
+//!
+//! Device verify path: each chained `step_sample` call samples its token
+//! in-graph from a host-fed uniform and keeps the full-vocab q resident
+//! for the fused verify entry; only the [B] token ids come back.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::runtime::{DraftSpec, Runtime};
 use crate::tensor::HostTensor;
 
 use super::{
-    arg_refs, lit_f32, lit_i32, lit_scalar_i32, pickup_hidden_advance, pickup_hidden_bootstrap,
-    tensor_row, upload, DraftBackend, EngineCx, GroupState,
+    adopt_hidden_row, arg_refs, hidden_lit, lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32,
+    pickup_hidden_advance, pickup_hidden_bootstrap, tensor_row_into, upload, DraftBackend,
+    EngineCx, GroupState, QFlat,
 };
 
 pub struct Mlp;
@@ -23,6 +29,13 @@ impl DraftBackend for Mlp {
         dspec.k_heads
     }
 
+    fn supports_device(&self, rt: &Runtime, dspec: &DraftSpec) -> bool {
+        rt.manifest
+            .serve_batches
+            .iter()
+            .all(|&b| rt.has_draft_entry(&dspec.name, &format!("step_sample_b{b}")))
+    }
+
     fn bootstrap(
         &self,
         cx: &EngineCx,
@@ -31,6 +44,9 @@ impl DraftBackend for Mlp {
         feats: &HostTensor,
     ) -> Result<()> {
         pickup_hidden_bootstrap(cx, g, feats);
+        if cx.device_verify {
+            g.h_prev = Some(hidden_lit(g, cx.tspec.d_model)?);
+        }
         Ok(())
     }
 
@@ -39,7 +55,7 @@ impl DraftBackend for Mlp {
         cx: &EngineCx,
         g: &mut GroupState,
         drafts: &mut [Vec<i32>],
-        q_full: &mut [Vec<Vec<f32>>],
+        q: &mut QFlat,
     ) -> Result<()> {
         let b = g.b;
         let k = cx.k;
@@ -64,16 +80,63 @@ impl DraftBackend for Mlp {
             let args = arg_refs(&cx.tparams, &cx.dparams, &dyn_b);
             let outs = step.run_bufs(&args)?;
             let lg = step.output_host(&outs, 0)?;
+            let mut lrow = Vec::new();
             for row in 0..b {
-                let lrow = tensor_row(&lg, row, &[b, vocab], 0);
-                let (qf, qc) = cx.draft_dist(&lrow);
-                let xi = cx.sample_draft(&mut g.seqs[row].rng, &qc);
+                tensor_row_into(&lg, row, &[b, vocab], 0, &mut lrow);
+                let (full, compact) = q.slot(row, i);
+                cx.write_draft_dist(&lrow, compact, full);
+                let xi = cx.sample_draft(&mut g.seqs[row].rng, compact);
                 drafts[row][i] = cx.draft_token_id(xi);
-                q_full[row].push(qf);
                 toks[row] = drafts[row][i];
             }
             state_t = outs.into_iter().nth(1).unwrap();
         }
+        Ok(())
+    }
+
+    fn propose_device(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &mut [Vec<i32>],
+        q_dev: &mut Vec<xla::Literal>,
+    ) -> Result<()> {
+        let b = g.b;
+        let k = cx.k;
+        let step = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("step_sample_b{b}"))?;
+        let mut state_t = g.h_prev.take().context("mlp device state")?;
+        let mut toks: Vec<i32> = g.seqs.iter().map(|s| s.last_token).collect();
+        for i in 0..k {
+            let u: Vec<f32> = g
+                .seqs
+                .iter_mut()
+                .map(|s| cx.draft_uniform(&mut s.rng))
+                .collect();
+            let dyn_in = [
+                state_t,
+                lit_i32(&[b], &toks)?,
+                lit_scalar_i32(i as i32)?,
+                lit_f32(&[b], &u)?,
+                lit_scalar_f32(cx.opts.temperature.max(1e-3))?,
+                lit_scalar_i32(cx.opts.mode.device_code())?,
+            ];
+            let dyn_b = upload(cx.rt, &dyn_in)?;
+            let args = arg_refs(&cx.tparams, &cx.dparams, &dyn_b);
+            let outs = step.run_bufs(&args)?;
+            let tok = step.output_host(&outs, 0)?.as_i32(); // [B] — O(B) ints
+            for (row, dr) in drafts.iter_mut().enumerate() {
+                dr[i] = tok[row];
+            }
+            toks = tok;
+            let mut it = outs.into_iter();
+            let _tok_lit = it.next();
+            q_dev.push(it.next().unwrap());
+            state_t = it.next().unwrap();
+        }
+        // The chained state is per-round scratch (host path discards it
+        // too); next round conditions on the verify-picked hidden.
         Ok(())
     }
 
@@ -89,14 +152,31 @@ impl DraftBackend for Mlp {
         Ok(())
     }
 
-    fn adopt_row(
+    fn advance_device(
         &self,
         _cx: &EngineCx,
-        _dst: &mut GroupState,
-        _dst_row: usize,
-        _src: &GroupState,
-        _src_row: usize,
+        g: &mut GroupState,
+        _drafts: &[Vec<i32>],
+        _n_acc: &[usize],
+        _n_acc_lit: xla::Literal,
+        _feats: xla::Literal,
+        h_sel: xla::Literal,
     ) -> Result<()> {
+        g.h_prev = Some(h_sel);
+        Ok(())
+    }
+
+    fn adopt_row(
+        &self,
+        cx: &EngineCx,
+        dst: &mut GroupState,
+        dst_row: usize,
+        src: &GroupState,
+        src_row: usize,
+    ) -> Result<()> {
+        if cx.device_verify {
+            adopt_hidden_row(cx, dst, dst_row, src, src_row)?;
+        }
         Ok(())
     }
 }

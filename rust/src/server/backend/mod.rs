@@ -20,6 +20,16 @@
 //!   * `adopt_row` — copy one row of packed draft state between groups
 //!     (the continuous-batching join path; per-sequence host state moves
 //!     with the `SeqState` itself).
+//!
+//! Backends that carry the device-sampling artifacts additionally serve
+//! the DEVICE verify path (`supports_device` / `propose_device` /
+//! `advance_device`): draft tokens are sampled in-graph from host-fed
+//! uniforms, the full-vocab q distributions stay on device as literals
+//! flowing straight into the target's fused verify entry, and the
+//! conditioning hidden rides back from the verify pass — per round only
+//! O(B·K) token ids cross to the host. The host-side `propose`/`advance`
+//! remain as the fallback for artifact sets lowered before the device
+//! entries existed (and for forced-host parity testing).
 
 pub mod medusa;
 pub mod mlp;
@@ -43,6 +53,11 @@ pub const TKV_BATCH_AXIS: usize = 2;
 /// Batch axis of the packed draft KV cache [2, B, H, Smax, Dh].
 pub const DKV_BATCH_AXIS: usize = 1;
 
+/// Placeholder uniform fed to device entries for draws the host path
+/// would not consume (greedy modes, finished/padding rows). Any value in
+/// (0, 1) works — the in-graph decision it feeds is ignored or forced.
+pub const DUMMY_UNIFORM: f32 = 0.5;
+
 /// Shared engine context every backend call receives: the runtime, model
 /// specs, cached parameter buffers and the sampling configuration.
 pub struct EngineCx<'rt> {
@@ -59,6 +74,9 @@ pub struct EngineCx<'rt> {
     pub opts: EngineOpts,
     /// Drafts per round (opts.k_draft clamped to the backend's max).
     pub k: usize,
+    /// True when this engine runs the device-resident verify path —
+    /// backends branch their bootstrap/adopt plumbing on it.
+    pub device_verify: bool,
 }
 
 impl<'rt> EngineCx<'rt> {
@@ -73,18 +91,20 @@ impl<'rt> EngineCx<'rt> {
             .unwrap_or_else(|| self.rt.manifest.serve_batches.last().unwrap())
     }
 
-    /// Draft logits (possibly truncated vocab) -> (q over full vocab,
-    /// q over draft vocab) at the engine temperature.
-    pub fn draft_dist(&self, logits: &[f32]) -> (Vec<f32>, Vec<f32>) {
-        let qc = sampling::softmax_t(logits, self.opts.temperature.max(1e-3));
+    /// Draft logits (possibly truncated vocab) -> temperature softmax
+    /// written into `compact` (draft vocab) and scattered into `full`
+    /// (full vocab; caller guarantees it arrives zeroed). Flat-buffer
+    /// variant of the old per-round nested-Vec allocation.
+    pub fn write_draft_dist(&self, logits: &[f32], compact: &mut Vec<f32>, full: &mut [f32]) {
+        compact.clear();
+        compact.resize(logits.len(), 0.0);
+        sampling::softmax_t_into(logits, self.opts.temperature.max(1e-3), compact);
         match &self.vocab_map {
-            None => (qc.clone(), qc),
+            None => full.copy_from_slice(compact),
             Some(map) => {
-                let mut full = vec![0f32; self.tspec.vocab];
                 for (i, &fid) in map.iter().enumerate() {
-                    full[fid as usize] = qc[i];
+                    full[fid as usize] = compact[i];
                 }
-                (full, qc)
             }
         }
     }
@@ -96,10 +116,35 @@ impl<'rt> EngineCx<'rt> {
         }
     }
 
+    /// Host-side draft sampling under the explicit-uniform contract:
+    /// stochastic mode consumes exactly one stream draw per position
+    /// (mirroring the device entries' host-fed `u` input), greedy modes
+    /// consume none.
     pub fn sample_draft(&self, rng: &mut Pcg64, q_compact: &[f32]) -> usize {
         match self.opts.mode {
-            SamplingMode::Stochastic => sampling::sample_categorical(rng, q_compact),
+            SamplingMode::Stochastic => {
+                sampling::categorical_from_uniform(q_compact, rng.uniform() as f32)
+            }
             SamplingMode::Greedy | SamplingMode::GreedyDraft => sampling::argmax(q_compact),
+        }
+    }
+
+    /// The uniform a device-sampling entry receives for one row/position:
+    /// a real stream draw in stochastic mode (the draw the host path
+    /// would have consumed), an inert constant otherwise.
+    pub fn draft_uniform(&self, rng: &mut Pcg64) -> f32 {
+        if self.opts.mode == SamplingMode::Stochastic {
+            rng.uniform() as f32
+        } else {
+            DUMMY_UNIFORM
+        }
+    }
+
+    /// Truncated-vocab map as a device literal (eagle3 device entries).
+    pub fn vocab_map_lit(&self) -> Result<Option<xla::Literal>> {
+        match &self.vocab_map {
+            None => Ok(None),
+            Some(map) => Ok(Some(lit_i32(&[map.len()], map)?)),
         }
     }
 
@@ -152,8 +197,57 @@ pub struct GroupState {
     pub tkv_spec: TensorSpec,
     pub dkv: Option<xla::Literal>,
     pub dkv_spec: Option<TensorSpec>,
-    /// [B, d] recurrent hidden carry.
+    /// [B, d] draft conditioning carry: the recurrent hidden (both
+    /// paths), or the verify-picked hidden for MEDUSA/MLP on the device
+    /// path (host path keeps theirs in `SeqState::hidden`).
     pub h_prev: Option<xla::Literal>,
+    /// Device path, recurrent archs: next round's first drafted token
+    /// per row (sampled in-graph by the extend entries)…
+    pub tok0: Vec<i32>,
+    /// …and its full-vocab q distribution, resident as a literal.
+    pub q0_dev: Option<xla::Literal>,
+}
+
+/// Flat reusable [B, K, V] buffer of full-vocab draft distributions plus
+/// a compact-vocab scratch row — replaces the per-round
+/// `Vec<Vec<Vec<f32>>>` allocation churn on the host verify path.
+#[derive(Default)]
+pub struct QFlat {
+    k: usize,
+    v: usize,
+    full: Vec<f32>,
+    compact: Vec<f32>,
+}
+
+impl QFlat {
+    /// Size for this round and zero the full-vocab plane (the scatter
+    /// for truncated-vocab drafts relies on zeroed slots).
+    pub fn reset(&mut self, b: usize, k: usize, v: usize) {
+        self.k = k;
+        self.v = v;
+        self.full.clear();
+        self.full.resize(b * k * v, 0.0);
+    }
+
+    /// Full-vocab q for (row, position).
+    pub fn row(&self, row: usize, i: usize) -> &[f32] {
+        let off = (row * self.k + i) * self.v;
+        &self.full[off..off + self.v]
+    }
+
+    /// Contiguous [K, V] block for one row (what `verify_round` takes).
+    pub fn row_block(&self, row: usize) -> &[f32] {
+        let off = row * self.k * self.v;
+        &self.full[off..off + self.k * self.v]
+    }
+
+    /// Mutable (full-vocab slot, compact scratch) pair for one position —
+    /// disjoint fields, so backends can softmax into the scratch and
+    /// scatter into the slot without temporaries.
+    pub fn slot(&mut self, row: usize, i: usize) -> (&mut [f32], &mut Vec<f32>) {
+        let off = (row * self.k + i) * self.v;
+        (&mut self.full[off..off + self.v], &mut self.compact)
+    }
 }
 
 /// Behaviour class of a draft architecture. Object-safe: the engine
@@ -178,13 +272,14 @@ pub trait DraftBackend {
     ) -> Result<()>;
 
     /// Draft `cx.k` tokens per row, filling `drafts[row][i]` (full-vocab
-    /// token ids) and `q_full[row][i]` (full-vocab draft distributions).
+    /// token ids) and `q.row(row, i)` (full-vocab draft distributions in
+    /// the engine's flat scratch).
     fn propose(
         &self,
         cx: &EngineCx,
         g: &mut GroupState,
         drafts: &mut [Vec<i32>],
-        q_full: &mut [Vec<Vec<f32>>],
+        q: &mut QFlat,
     ) -> Result<()>;
 
     /// Advance draft state past this round's accepted prefixes.
@@ -198,6 +293,48 @@ pub trait DraftBackend {
         n_acc: &[usize],
         feats: &HostTensor,
     ) -> Result<()>;
+
+    // ------------------------------------------------------------------
+    // device verify path (optional; default = unsupported)
+    // ------------------------------------------------------------------
+
+    /// True when the manifest carries every device-sampling entry this
+    /// backend needs (all serve buckets); gates the engine's path choice.
+    fn supports_device(&self, _rt: &Runtime, _dspec: &DraftSpec) -> bool {
+        false
+    }
+
+    /// Device-path proposal: fill `drafts` with the k sampled token ids
+    /// (read back as O(B·K) ints) and push one [B, V] full-vocab q
+    /// LITERAL per position onto `q_dev` — sampling happens in-graph
+    /// from host-fed uniforms; the q distributions never reach the host.
+    fn propose_device(
+        &self,
+        _cx: &EngineCx,
+        _g: &mut GroupState,
+        _drafts: &mut [Vec<i32>],
+        _q_dev: &mut Vec<xla::Literal>,
+    ) -> Result<()> {
+        bail!("backend '{}' has no device verify path", self.name())
+    }
+
+    /// Device-path advance. Consumes the fused verify entry's outputs by
+    /// value: `n_acc_lit` ([B] i32, doubles as the in-graph gather
+    /// index), `feats` ([B, Vt, 3d]) and `h_sel` ([B, d], the
+    /// verify-picked conditioning hidden). `n_acc` is the host copy with
+    /// finished rows forced to 0.
+    fn advance_device(
+        &self,
+        _cx: &EngineCx,
+        _g: &mut GroupState,
+        _drafts: &[Vec<i32>],
+        _n_acc: &[usize],
+        _n_acc_lit: xla::Literal,
+        _feats: xla::Literal,
+        _h_sel: xla::Literal,
+    ) -> Result<()> {
+        bail!("backend '{}' has no device verify path", self.name())
+    }
 
     /// Copy row `src_row` of `src`'s packed draft state into row
     /// `dst_row` of `dst` (continuous-batching join). Per-sequence host
@@ -295,6 +432,10 @@ pub(crate) fn lit_scalar_i32(v: i32) -> Result<xla::Literal> {
     pack::to_literal(&HostTensor::scalar_i32(v))
 }
 
+pub(crate) fn lit_scalar_f32(v: f32) -> Result<xla::Literal> {
+    pack::to_literal(&HostTensor::scalar_f32(v))
+}
+
 pub(crate) fn lit_zeros_f32(shape: &[usize]) -> Result<xla::Literal> {
     pack::to_literal(&HostTensor::zeros(DType::F32, shape))
 }
@@ -311,14 +452,111 @@ pub(crate) fn arg_refs<'a>(
 /// Extract `tensor[row, idx, :]` from a [B, N, D]-shaped host tensor (or
 /// `tensor[row, :]` from [B, D] with idx = 0).
 pub(crate) fn tensor_row(t: &HostTensor, row: usize, shape: &[usize], idx: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    tensor_row_into(t, row, shape, idx, &mut out);
+    out
+}
+
+/// Allocation-free `tensor_row` for the per-round hot loop.
+pub(crate) fn tensor_row_into(
+    t: &HostTensor,
+    row: usize,
+    shape: &[usize],
+    idx: usize,
+    out: &mut Vec<f32>,
+) {
     debug_assert_eq!(t.shape, shape);
     let dlast = *shape.last().unwrap();
     let n_mid = if shape.len() == 3 { shape[1] } else { 1 };
     let off = (row * n_mid + idx) * dlast;
-    t.data[off * 4..(off + dlast) * 4]
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect()
+    out.clear();
+    out.extend(
+        t.data[off * 4..(off + dlast) * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+    );
+}
+
+/// Which AOT row-copy entry a device splice targets.
+#[derive(Clone, Copy)]
+pub(crate) enum KvSide {
+    /// Target KV (`kv_copy_row_b{B}`, a target entry).
+    Target,
+    /// Draft KV (`dkv_copy_row_b{B}`, a draft entry).
+    Draft,
+}
+
+/// Device-side one-row KV splice via the AOT copy entry. Ok(None) when
+/// the artifact set predates the entry or the source is not the
+/// bucket-1 shape the entry was lowered for — callers fall back to the
+/// host `copy_literal_row` path.
+pub(crate) fn copy_kv_row_device(
+    cx: &EngineCx,
+    side: KvSide,
+    b: usize,
+    src_b: usize,
+    dst: &xla::Literal,
+    src: &xla::Literal,
+    row: usize,
+) -> Result<Option<xla::Literal>> {
+    if src_b != 1 {
+        return Ok(None);
+    }
+    let exe = match side {
+        KvSide::Target => {
+            let entry = format!("kv_copy_row_b{b}");
+            if !cx.rt.has_target_entry(&cx.tspec.name, &entry) {
+                return Ok(None);
+            }
+            cx.rt.target_entry(&cx.tspec.name, &entry)?
+        }
+        KvSide::Draft => {
+            let entry = format!("dkv_copy_row_b{b}");
+            if !cx.rt.has_draft_entry(&cx.dspec.name, &entry) {
+                return Ok(None);
+            }
+            cx.rt.draft_entry(&cx.dspec.name, &entry)?
+        }
+    };
+    let row_lit = lit_scalar_i32(row as i32)?;
+    let outs = exe.run_lits(&[dst, src, &row_lit])?;
+    Ok(outs.into_iter().next())
+}
+
+/// Pack the per-sequence host hiddens into the device-path `[B, d]`
+/// conditioning literal (MEDUSA/MLP bootstrap).
+pub(crate) fn hidden_lit(g: &GroupState, d: usize) -> Result<xla::Literal> {
+    let b = g.b;
+    let mut flat = vec![0f32; b * d];
+    for (row, seq) in g.seqs.iter().enumerate() {
+        flat[row * d..(row + 1) * d].copy_from_slice(&seq.hidden);
+    }
+    lit_f32(&[b, d], &flat)
+}
+
+/// Device-path join plumbing shared by the parallel-head backends: move
+/// one row of the packed `[B, d]` conditioning literal between groups.
+pub(crate) fn adopt_hidden_row(
+    cx: &EngineCx,
+    dst: &mut GroupState,
+    dst_row: usize,
+    src: &GroupState,
+    src_row: usize,
+) -> Result<()> {
+    use anyhow::Context;
+    let d = cx.tspec.d_model;
+    let dst_h = dst.h_prev.take().context("adopt_row: dst hidden")?;
+    let h = copy_literal_row(
+        &dst_h,
+        &spec_f32(vec![dst.b, d]),
+        dst_row,
+        src.h_prev.as_ref().context("adopt_row: src hidden")?,
+        &spec_f32(vec![src.b, d]),
+        src_row,
+        0,
+    )?;
+    dst.h_prev = Some(h);
+    Ok(())
 }
 
 /// Copy one batch row between two packed literals (join path). Both

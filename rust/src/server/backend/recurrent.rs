@@ -2,18 +2,58 @@
 //! recurrence. Drafting chains `step` calls; bootstrap/advance extend the
 //! draft KV with fused target features via the `extend_p` / `extend_k`
 //! entries.
+//!
+//! Device verify path: the `*_sample` entries sample each draft token
+//! in-graph from a host-fed uniform and keep the full-vocab q resident
+//! as a literal; the extend entries additionally gather next round's
+//! first draft (token + q + hidden) at the per-row accepted-prefix
+//! index, so the old per-round `[B, T, Vd]` q-logits pull disappears.
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{DraftSpec, Runtime};
+use crate::runtime::{pack, DraftSpec, Runtime};
 use crate::tensor::HostTensor;
 
 use super::{
-    arg_refs, copy_literal_row, lit_f32, lit_i32, lit_zeros_f32, spec_f32, tensor_row, upload,
-    DraftBackend, EngineCx, GroupState, DKV_BATCH_AXIS,
+    arg_refs, copy_kv_row_device, copy_literal_row, lit_f32, lit_i32, lit_scalar_f32,
+    lit_scalar_i32, lit_zeros_f32, spec_f32, tensor_row, upload, DraftBackend, EngineCx,
+    GroupState, KvSide, QFlat, DKV_BATCH_AXIS,
 };
 
 pub struct Recurrent;
+
+/// Manifest entries the device path needs, per serve bucket.
+const DEVICE_ENTRIES: [&str; 3] = ["step_sample", "extend_p_sample", "extend_k_sample"];
+
+impl Recurrent {
+    /// Shared tail of the device-path extend calls: run the given
+    /// `extend_*_sample` entry and adopt its (token0, q0, h_sel, dkv')
+    /// outputs as next round's first-draft state.
+    fn run_extend_sample(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        entry: &str,
+        mut dyn_in: Vec<xla::Literal>,
+    ) -> Result<()> {
+        if let Some(vm) = cx.vocab_map_lit()? {
+            dyn_in.push(vm);
+        }
+        let exe = cx.rt.draft_entry(&cx.dspec.name, entry)?;
+        let dyn_b = upload(cx.rt, &dyn_in)?;
+        let args = arg_refs(&cx.tparams, &cx.dparams, &dyn_b);
+        let outs = exe.run_bufs(&args)?;
+        let tok0 = exe.output_host(&outs, 0)?; // [B] i32 — O(B) ints
+        g.tok0 = tok0.as_i32();
+        g.dkv_spec = Some(exe.spec.outputs[3].clone());
+        let mut it = outs.into_iter();
+        let _tok0_lit = it.next();
+        g.q0_dev = it.next();
+        g.h_prev = it.next();
+        g.dkv = it.next();
+        Ok(())
+    }
+}
 
 impl DraftBackend for Recurrent {
     fn name(&self) -> &'static str {
@@ -23,6 +63,14 @@ impl DraftBackend for Recurrent {
     fn max_k(&self, rt: &Runtime, _dspec: &DraftSpec) -> usize {
         // May exceed the K=6 trained heads up to verify_t - 1 = 7.
         rt.manifest.verify_t - 1
+    }
+
+    fn supports_device(&self, rt: &Runtime, dspec: &DraftSpec) -> bool {
+        rt.manifest.serve_batches.iter().all(|&b| {
+            DEVICE_ENTRIES
+                .iter()
+                .all(|e| rt.has_draft_entry(&dspec.name, &format!("{e}_b{b}")))
+        })
     }
 
     fn bootstrap(
@@ -37,24 +85,14 @@ impl DraftBackend for Recurrent {
         let d = cx.tspec.d_model;
         let fdim = cx.dspec.fuse_dim;
         let f3 = cx.tspec.feat_dim;
-        let feats_full = feats.as_f32();
-        let mut feats_in = vec![0f32; b * sp * fdim];
         let mut tnext = vec![0i32; b * sp];
         for (row, seq) in g.seqs.iter().enumerate() {
             let c = seq.len;
-            for t in 0..sp {
-                let base = (row * sp + t) * f3;
-                feats_in[(row * sp + t) * fdim..(row * sp + t + 1) * fdim]
-                    .copy_from_slice(&feats_full[base + (f3 - fdim)..base + f3]);
-            }
             for t in 0..c - 1 {
                 tnext[row * sp + t] = tok_flat[row * sp + t + 1];
             }
             tnext[row * sp + c - 1] = seq.last_token;
         }
-        let extend = cx
-            .rt
-            .draft_entry(&cx.dspec.name, &format!("extend_p_b{b}"))?;
         let dkv0 = lit_zeros_f32(&[
             2,
             b,
@@ -62,6 +100,44 @@ impl DraftBackend for Recurrent {
             cx.tspec.max_seq,
             cx.tspec.head_dim,
         ])?;
+
+        if cx.device_verify {
+            // Device path: feed the FULL [B, Sp, 3d] prefill features
+            // (the entry slices its fusion columns in-graph) and let the
+            // entry sample the first round's draft 0 at sel = len-1.
+            let sel: Vec<i32> = g.seqs.iter().map(|s| (s.len - 1) as i32).collect();
+            let u: Vec<f32> = g
+                .seqs
+                .iter_mut()
+                .map(|s| cx.draft_uniform(&mut s.rng))
+                .collect();
+            let dyn_in = vec![
+                dkv0,
+                pack::to_literal(feats)?,
+                lit_i32(&[b, sp], &tnext)?,
+                lit_i32(&[b], &vec![0i32; b])?,
+                lit_i32(&[b], &sel)?,
+                lit_f32(&[b], &u)?,
+                lit_scalar_f32(cx.opts.temperature.max(1e-3))?,
+                lit_scalar_i32(cx.opts.mode.device_code())?,
+            ];
+            return self.run_extend_sample(cx, g, &format!("extend_p_sample_b{b}"), dyn_in);
+        }
+
+        // Host path: slice the fusion columns here and pull the q/h
+        // planes back for host-side pickup.
+        let feats_full = feats.as_f32();
+        let mut feats_in = vec![0f32; b * sp * fdim];
+        for row in 0..b {
+            for t in 0..sp {
+                let base = (row * sp + t) * f3;
+                feats_in[(row * sp + t) * fdim..(row * sp + t + 1) * fdim]
+                    .copy_from_slice(&feats_full[base + (f3 - fdim)..base + f3]);
+            }
+        }
+        let extend = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("extend_p_b{b}"))?;
         let dyn_in = [
             dkv0,
             lit_f32(&[b, sp, fdim], &feats_in)?,
@@ -92,7 +168,7 @@ impl DraftBackend for Recurrent {
         cx: &EngineCx,
         g: &mut GroupState,
         drafts: &mut [Vec<i32>],
-        q_full: &mut [Vec<Vec<f32>>],
+        q: &mut QFlat,
     ) -> Result<()> {
         let b = g.b;
         let k = cx.k;
@@ -104,10 +180,10 @@ impl DraftBackend for Recurrent {
         for i in 0..k {
             let mut toks = vec![0i32; b];
             for row in 0..b {
-                let (qf, qc) = cx.draft_dist(&q_logits[row]);
-                let xi = cx.sample_draft(&mut g.seqs[row].rng, &qc);
+                let (full, compact) = q.slot(row, i);
+                cx.write_draft_dist(&q_logits[row], compact, full);
+                let xi = cx.sample_draft(&mut g.seqs[row].rng, compact);
                 drafts[row][i] = cx.draft_token_id(xi);
-                q_full[row].push(qf);
                 toks[row] = drafts[row][i];
             }
             if i + 1 == k {
@@ -131,6 +207,65 @@ impl DraftBackend for Recurrent {
             let _ = it.next(); // logits
             g.h_prev = Some(it.next().unwrap());
             g.dkv = Some(it.next().unwrap());
+        }
+        Ok(())
+    }
+
+    fn propose_device(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &mut [Vec<i32>],
+        q_dev: &mut Vec<xla::Literal>,
+    ) -> Result<()> {
+        let b = g.b;
+        let k = cx.k;
+        // Position 0 was sampled in-graph by the previous extend call
+        // (stream-order-identical to the host path's first propose draw).
+        anyhow::ensure!(
+            g.tok0.len() == b && g.q0_dev.is_some(),
+            "device propose without extend-sampled first draft"
+        );
+        for (row, d) in drafts.iter_mut().enumerate() {
+            d[0] = g.tok0[row];
+        }
+        q_dev.push(g.q0_dev.take().unwrap());
+        let step = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("step_sample_b{b}"))?;
+        let mut toks: Vec<i32> = drafts.iter().map(|d| d[0]).collect();
+        for i in 1..k {
+            let pos: Vec<i32> = g.seqs.iter().map(|s| (s.len + i - 1) as i32).collect();
+            let u: Vec<f32> = g
+                .seqs
+                .iter_mut()
+                .map(|s| cx.draft_uniform(&mut s.rng))
+                .collect();
+            let mut dyn_in = vec![
+                g.dkv.take().context("dkv")?,
+                g.h_prev.take().context("h_prev")?,
+                lit_i32(&[b], &toks)?,
+                lit_i32(&[b], &pos)?,
+                lit_f32(&[b], &u)?,
+                lit_scalar_f32(cx.opts.temperature.max(1e-3))?,
+                lit_scalar_i32(cx.opts.mode.device_code())?,
+            ];
+            if let Some(vm) = cx.vocab_map_lit()? {
+                dyn_in.push(vm);
+            }
+            let dyn_b = upload(cx.rt, &dyn_in)?;
+            let args = arg_refs(&cx.tparams, &cx.dparams, &dyn_b);
+            let outs = step.run_bufs(&args)?;
+            let tok = step.output_host(&outs, 0)?.as_i32(); // [B] — O(B) ints
+            for (row, d) in drafts.iter_mut().enumerate() {
+                d[i] = tok[row];
+            }
+            toks = tok;
+            let mut it = outs.into_iter();
+            let _tok_lit = it.next();
+            q_dev.push(it.next().unwrap());
+            g.h_prev = it.next();
+            g.dkv = it.next();
         }
         Ok(())
     }
@@ -199,6 +334,54 @@ impl DraftBackend for Recurrent {
         Ok(())
     }
 
+    fn advance_device(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &[Vec<i32>],
+        n_acc: &[usize],
+        n_acc_lit: xla::Literal,
+        feats: xla::Literal,
+        _h_sel: xla::Literal,
+    ) -> Result<()> {
+        let b = g.b;
+        let vt = cx.rt.manifest.verify_t;
+        let mut tnext = vec![0i32; b * vt];
+        let mut pos = vec![0i32; b];
+        for row in 0..b {
+            let seq = &g.seqs[row];
+            let j = n_acc[row];
+            for (t, item) in drafts[row].iter().enumerate().take(j) {
+                tnext[row * vt + t] = *item;
+            }
+            tnext[row * vt + j] = seq.last_token;
+            pos[row] = if seq.done {
+                (seq.len.saturating_sub(1 + j)) as i32
+            } else {
+                (seq.len - 1 - j) as i32
+            };
+        }
+        // Next round's first-draft uniform, drawn NOW so the per-stream
+        // order matches the host path (which draws it first thing in the
+        // next propose).
+        let u: Vec<f32> = g
+            .seqs
+            .iter_mut()
+            .map(|s| cx.draft_uniform(&mut s.rng))
+            .collect();
+        let dyn_in = vec![
+            g.dkv.take().context("dkv")?,
+            feats, // verify_fused output, fed back without a host pull
+            lit_i32(&[b, vt], &tnext)?,
+            lit_i32(&[b], &pos)?,
+            n_acc_lit, // per-row q/h gather index, in-graph
+            lit_f32(&[b], &u)?,
+            lit_scalar_f32(cx.opts.temperature.max(1e-3))?,
+            lit_scalar_i32(cx.opts.mode.device_code())?,
+        ];
+        self.run_extend_sample(cx, g, &format!("extend_k_sample_b{b}"), dyn_in)
+    }
+
     fn adopt_row(
         &self,
         cx: &EngineCx,
@@ -207,17 +390,23 @@ impl DraftBackend for Recurrent {
         src: &GroupState,
         src_row: usize,
     ) -> Result<()> {
-        // Draft KV row.
+        // Draft KV row: device splice when the artifact carries the
+        // entry, host strided copy otherwise.
         let dst_dkv = dst.dkv.take().context("adopt_row: dst dkv")?;
-        let dkv = copy_literal_row(
-            &dst_dkv,
-            dst.dkv_spec.as_ref().context("adopt_row: dst dkv spec")?,
-            dst_row,
-            src.dkv.as_ref().context("adopt_row: src dkv")?,
-            src.dkv_spec.as_ref().context("adopt_row: src dkv spec")?,
-            src_row,
-            DKV_BATCH_AXIS,
-        )?;
+        let src_dkv = src.dkv.as_ref().context("adopt_row: src dkv")?;
+        let dkv = match copy_kv_row_device(cx, KvSide::Draft, dst.b, src.b, &dst_dkv, src_dkv, dst_row)?
+        {
+            Some(dkv) => dkv,
+            None => copy_literal_row(
+                &dst_dkv,
+                dst.dkv_spec.as_ref().context("adopt_row: dst dkv spec")?,
+                dst_row,
+                src_dkv,
+                src.dkv_spec.as_ref().context("adopt_row: src dkv spec")?,
+                src_row,
+                DKV_BATCH_AXIS,
+            )?,
+        };
         dst.dkv = Some(dkv);
         // Hidden carry row [B, d].
         let d = cx.tspec.d_model;
@@ -232,6 +421,22 @@ impl DraftBackend for Recurrent {
             0,
         )?;
         dst.h_prev = Some(h);
+        // Device path: the extend-sampled first-draft q row rides along
+        // (tok0 is moved by the engine with the session state).
+        if cx.device_verify {
+            let v = cx.tspec.vocab;
+            let dst_q = dst.q0_dev.take().context("adopt_row: dst q0")?;
+            let q = copy_literal_row(
+                &dst_q,
+                &spec_f32(vec![dst.b, v]),
+                dst_row,
+                src.q0_dev.as_ref().context("adopt_row: src q0")?,
+                &spec_f32(vec![src.b, v]),
+                src_row,
+                0,
+            )?;
+            dst.q0_dev = Some(q);
+        }
         Ok(())
     }
 }

@@ -2,18 +2,29 @@
 //!
 //! One `SpecEngine` serves one (target, draft) pair. Sequences decode in
 //! *groups* whose KV caches live packed in batched XLA literals that flow
-//! executable-to-executable without host round-trips (only
-//! logits/features — a few KB — are pulled to the host each round). Per
-//! round, for a group:
+//! executable-to-executable. Per round, for a group:
 //!
 //!   1. drafts: K tokens per sequence via the architecture's
-//!      `DraftBackend` (`server::backend`); ALL sampling happens here in
-//!      Rust (`spec::sampling`), the executables only produce logits;
+//!      `DraftBackend` (`server::backend`);
 //!   2. verify: one target call over [last_token, draft_1..draft_K];
 //!   3. acceptance: the exact Leviathan rule per position (or the greedy
 //!      / greedy-draft variants), residual resampling, bonus token;
 //!   4. state advance: backend-specific draft-state roll past the
 //!      accepted prefix.
+//!
+//! Two verify implementations share that loop. On the DEVICE path
+//! (preferred whenever the artifacts carry the fused entries) the target
+//! forward, temperature softmax, rejection rule and residual/bonus
+//! sampling run in one `verify_fused` graph: the engine feeds host-drawn
+//! per-position uniforms (O(B·K) f32) plus the drafts' device-resident q
+//! tensors, and a steady-state round returns only `n_accepted` and the
+//! emitted token ids — O(B·K) i32 — to the host. On the HOST fallback
+//! (older artifact sets, `SimCore`-style testing, forced parity runs)
+//! the round pulls the full `[B, K+1, V]` logits and runs the identical
+//! arithmetic in `spec::sampling::verify_round` over flat reusable
+//! scratch. Both paths draw the SAME uniforms in the SAME stream order,
+//! so they are sample-path-equivalent and pinned against each other by
+//! golden-uniform parity tests.
 //!
 //! The engine knows nothing about draft architectures — dispatch lives
 //! entirely behind the `DraftBackend` trait, so new architectures plug in
@@ -24,7 +35,7 @@
 //!
 //! Per-request RNG streams are keyed by a stable request id (not by
 //! bootstrap order), so a sequence's sample path is independent of batch
-//! composition, padding and admission order.
+//! composition, padding, admission order — and of the verify path.
 
 use std::time::Instant;
 
@@ -32,14 +43,16 @@ use anyhow::{bail, Result};
 
 use crate::runtime::Runtime;
 use crate::spec::accept::AcceptanceStats;
-use crate::spec::sampling::{self, SamplingMode, Verdict};
+use crate::spec::sampling::{self, RoundUniforms, SamplingMode};
 use crate::tensor::Checkpoint;
 use crate::train::checkpoint_to_params;
 use crate::util::Pcg64;
 
 use super::backend::{
-    arg_refs, copy_literal_row, lit_i32, lit_scalar_i32, make_backend, tensor_row, upload,
-    upload_params, DraftBackend, EngineCx, GroupState, SeqState, TKV_BATCH_AXIS,
+    arg_refs, copy_kv_row_device, copy_literal_row, lit_f32, lit_i32, lit_scalar_f32,
+    lit_scalar_i32, lit_zeros_f32, make_backend, tensor_row, tensor_row_into, upload,
+    upload_params, DraftBackend, EngineCx, GroupState, KvSide, QFlat, SeqState, DUMMY_UNIFORM,
+    TKV_BATCH_AXIS,
 };
 use super::metrics::EngineMetrics;
 use super::scheduler::{AdmitReq, SchedulerCore};
@@ -53,6 +66,18 @@ pub fn request_rng(seed: u64, request_id: u64) -> Pcg64 {
     Pcg64::new(seed, 1 + request_id)
 }
 
+/// Verify-path preference. `Auto` resolves to the device path when the
+/// loaded artifacts carry the fused entries for this (target, draft)
+/// pair, host otherwise; the forced variants exist for parity tests and
+/// perf comparisons.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum VerifyPath {
+    #[default]
+    Auto,
+    Host,
+    Device,
+}
+
 #[derive(Clone, Debug)]
 pub struct EngineOpts {
     /// Draft tokens per round (chain length). Recurrent archs may exceed
@@ -62,6 +87,7 @@ pub struct EngineOpts {
     pub temperature: f32,
     pub mode: SamplingMode,
     pub seed: u64,
+    pub verify_path: VerifyPath,
 }
 
 impl Default for EngineOpts {
@@ -71,6 +97,7 @@ impl Default for EngineOpts {
             temperature: 1.0,
             mode: SamplingMode::Stochastic,
             seed: 1234,
+            verify_path: VerifyPath::Auto,
         }
     }
 }
@@ -91,11 +118,30 @@ pub struct RequestResult {
     pub rounds: u64,
 }
 
+/// Flat per-round scratch reused across rounds (no per-round nested-Vec
+/// churn on the host path).
+#[derive(Default)]
+struct VerifyScratch {
+    /// [B, K, V] full-vocab draft distributions.
+    q: QFlat,
+    /// [(K+1) · V] temperature softmaxes for the row under verdict.
+    p: Vec<f32>,
+    /// One logits row.
+    lrow: Vec<f32>,
+    /// The row's fixed-count verify uniforms.
+    u: RoundUniforms,
+}
+
 pub struct SpecEngine<'rt> {
     cx: EngineCx<'rt>,
     backend: Box<dyn DraftBackend>,
     pub metrics: EngineMetrics,
     next_req_id: u64,
+    scratch: VerifyScratch,
+    /// Cached all-zero [B, V] q literal per bucket: fills the fused
+    /// entry's masked q slots when k < verify_t-1 without a per-round
+    /// rebuild (device path only).
+    zero_q: std::collections::BTreeMap<usize, xla::Literal>,
 }
 
 impl<'rt> SpecEngine<'rt> {
@@ -116,6 +162,26 @@ impl<'rt> SpecEngine<'rt> {
         let max_k = backend.max_k(rt, &dspec);
         let mut opts = opts;
         opts.k_draft = opts.k_draft.min(max_k);
+        // Device verify needs the fused target entry at every bucket
+        // plus the backend's device-sampling entries.
+        let device_supported = rt
+            .manifest
+            .serve_batches
+            .iter()
+            .all(|&b| rt.has_target_entry(&tspec.name, &format!("verify_fused_b{b}")))
+            && backend.supports_device(rt, &dspec);
+        let device_verify = match opts.verify_path {
+            VerifyPath::Host => false,
+            VerifyPath::Auto => device_supported,
+            VerifyPath::Device => {
+                anyhow::ensure!(
+                    device_supported,
+                    "device verify forced but the artifacts lack the fused entries \
+                     for {draft_name} (re-run `make artifacts`)"
+                );
+                true
+            }
+        };
         // Parameters are uploaded ONCE as device buffers and reused by
         // every call — the single biggest serving-path optimization on
         // this runtime (no per-call h2d of the full model).
@@ -123,6 +189,10 @@ impl<'rt> SpecEngine<'rt> {
         let (dparams, dlits) = upload_params(rt, &checkpoint_to_params(&dspec.params, dckpt)?)?;
         let mut _param_lits = tlits;
         _param_lits.extend(dlits);
+        let metrics = EngineMetrics {
+            verify_path: if device_verify { "device" } else { "host" },
+            ..Default::default()
+        };
         Ok(SpecEngine {
             cx: EngineCx {
                 rt,
@@ -134,10 +204,13 @@ impl<'rt> SpecEngine<'rt> {
                 vocab_map,
                 k: opts.k_draft,
                 opts,
+                device_verify,
             },
             backend,
-            metrics: EngineMetrics::default(),
+            metrics,
             next_req_id: 0,
+            scratch: VerifyScratch::default(),
+            zero_q: std::collections::BTreeMap::new(),
         })
     }
 
@@ -155,6 +228,15 @@ impl<'rt> SpecEngine<'rt> {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Which verify path this engine resolved to.
+    pub fn verify_path(&self) -> &'static str {
+        if self.cx.device_verify {
+            "device"
+        } else {
+            "host"
+        }
     }
 
     // ------------------------------------------------------------------
@@ -244,6 +326,8 @@ impl<'rt> SpecEngine<'rt> {
             dkv: None,
             dkv_spec: None,
             h_prev: None,
+            tok0: vec![0; b],
+            q0_dev: None,
         };
 
         // --- draft bootstrap ------------------------------------------
@@ -262,6 +346,36 @@ impl<'rt> SpecEngine<'rt> {
     // ------------------------------------------------------------------
 
     fn decode_round(&mut self, g: &mut GroupState) -> Result<()> {
+        let before = self.cx.rt.d2h_bytes_total();
+        if self.cx.device_verify {
+            self.decode_round_device(g)?;
+        } else {
+            self.decode_round_host(g)?;
+        }
+        self.metrics.decode_rounds += 1;
+        self.metrics.bytes_to_host += self.cx.rt.d2h_bytes_total() - before;
+        Ok(())
+    }
+
+    /// Apply one row's verdict to its sequence state (both paths).
+    fn apply_verdict(seq: &mut SeqState, drafts_row: &[i32], k: usize, n_acc: usize, token: i32) {
+        seq.stats.record_round(k, n_acc);
+        for item in drafts_row.iter().take(n_acc) {
+            seq.generated.push(*item);
+        }
+        seq.generated.push(token);
+        seq.len += 1 + n_acc; // last_token + accepted drafts now processed
+        seq.last_token = token;
+        seq.rounds += 1;
+        if seq.generated.len() >= seq.max_new {
+            seq.done = true;
+            seq.total_ms = seq.enqueued.elapsed().as_secs_f64() * 1e3;
+        }
+    }
+
+    /// Host fallback: pull the full [B, Vt, V] logits and run the shared
+    /// verify arithmetic in Rust over flat reusable scratch.
+    fn decode_round_host(&mut self, g: &mut GroupState) -> Result<()> {
         let b = g.b;
         let k = self.cx.k;
         let vt = self.cx.rt.manifest.verify_t;
@@ -269,9 +383,9 @@ impl<'rt> SpecEngine<'rt> {
 
         // --- 1. draft K tokens per row (backend-specific) --------------
         let mut drafts = vec![vec![0i32; k]; b];
-        let mut q_full: Vec<Vec<Vec<f32>>> = vec![Vec::with_capacity(k); b];
+        self.scratch.q.reset(b, k, vocab);
         self.backend
-            .propose(&self.cx, g, &mut drafts, &mut q_full)?;
+            .propose(&self.cx, g, &mut drafts, &mut self.scratch.q)?;
 
         // --- 2. verify --------------------------------------------------
         let verify = self
@@ -297,58 +411,134 @@ impl<'rt> SpecEngine<'rt> {
 
         // --- 3. acceptance per row --------------------------------------
         let temp = self.cx.opts.temperature.max(1e-3);
+        let mode = self.cx.opts.mode;
         let mut n_acc = vec![0usize; b];
+        let VerifyScratch { q, p, lrow, u } = &mut self.scratch;
+        p.resize((k + 1) * vocab, 0.0);
         for row in 0..b {
             let seq = &mut g.seqs[row];
             if seq.done {
                 continue;
             }
-            let mut j = 0usize;
-            let mut replacement: Option<i32> = None;
-            while j < k {
-                let l = tensor_row(&logits, row, &[b, vt, vocab], j);
-                let p = sampling::softmax_t(&l, temp);
-                let x = drafts[row][j] as usize;
-                match sampling::verify_token(
-                    &mut seq.rng,
-                    &p,
-                    &q_full[row][j],
-                    x,
-                    self.cx.opts.mode,
-                ) {
-                    Verdict::Accept => j += 1,
-                    Verdict::Reject { replacement: r } => {
-                        replacement = Some(r);
-                        break;
-                    }
-                }
-            }
-            seq.stats.record_round(k, j);
-            for item in drafts[row].iter().take(j) {
-                seq.generated.push(*item);
-            }
-            let y = match replacement {
-                Some(r) => r,
-                None => {
-                    let l = tensor_row(&logits, row, &[b, vt, vocab], j);
-                    let p = sampling::softmax_t(&l, temp);
-                    self.cx.sample_target(&mut seq.rng, &p)
-                }
-            };
-            seq.generated.push(y);
-            seq.len += 1 + j; // last_token + accepted drafts now processed
-            seq.last_token = y;
-            seq.rounds += 1;
-            n_acc[row] = j;
-            if seq.generated.len() >= seq.max_new {
-                seq.done = true;
-                seq.total_ms = seq.enqueued.elapsed().as_secs_f64() * 1e3;
-            }
+            u.draw_into(&mut seq.rng, k, mode);
+            // Rows are softmaxed lazily — only up to the first rejection.
+            let rv = sampling::verify_round_lazy(
+                k,
+                vocab,
+                p,
+                |j, out| {
+                    tensor_row_into(&logits, row, &[b, vt, vocab], j, lrow);
+                    sampling::softmax_t_into(lrow, temp, out);
+                },
+                q.row_block(row),
+                &drafts[row],
+                mode,
+                u,
+            );
+            Self::apply_verdict(seq, &drafts[row], k, rv.n_accepted, rv.token);
+            n_acc[row] = rv.n_accepted;
         }
 
         // --- 4. advance draft state (backend-specific) ------------------
         self.backend
             .advance(&self.cx, g, &drafts, &n_acc, &feats)?;
+        Ok(())
+    }
+
+    /// Device-resident round: softmax + rejection + residual sampling run
+    /// inside the `verify_fused` graph; the host feeds O(B·K) uniforms
+    /// and reads back O(B·K) verdict integers. Draft q's, target KV,
+    /// features and the conditioning hidden stay device-side.
+    fn decode_round_device(&mut self, g: &mut GroupState) -> Result<()> {
+        let b = g.b;
+        let k = self.cx.k;
+        let vt = self.cx.rt.manifest.verify_t;
+        let kq = vt - 1; // q inputs the fused entry was lowered with
+        let vocab = self.cx.tspec.vocab;
+        let mode = self.cx.opts.mode;
+
+        // --- 1. draft (device sampling; tokens come back as ints) -------
+        let mut drafts = vec![vec![0i32; k]; b];
+        let mut q_dev: Vec<xla::Literal> = Vec::with_capacity(kq);
+        self.backend
+            .propose_device(&self.cx, g, &mut drafts, &mut q_dev)?;
+        anyhow::ensure!(q_dev.len() == k, "backend produced {} q tensors", q_dev.len());
+
+        // --- 2. fused verify --------------------------------------------
+        let mut vtok = vec![0i32; b * vt];
+        for (row, seq) in g.seqs.iter().enumerate() {
+            vtok[row * vt] = seq.last_token;
+            for i in 0..k {
+                vtok[row * vt + 1 + i] = drafts[row][i];
+            }
+        }
+        let pos: Vec<i32> = g.seqs.iter().map(|s| s.len as i32).collect();
+        // The SAME fixed-count uniforms the host path would draw; done
+        // rows draw nothing and get inert constants.
+        let mut u_acc = vec![DUMMY_UNIFORM; b * kq];
+        let mut u_samp = vec![DUMMY_UNIFORM; b];
+        if mode.is_stochastic() {
+            for (row, seq) in g.seqs.iter_mut().enumerate() {
+                if seq.done {
+                    continue;
+                }
+                for slot in u_acc[row * kq..row * kq + k].iter_mut() {
+                    *slot = seq.rng.uniform() as f32;
+                }
+                u_samp[row] = seq.rng.uniform() as f32;
+            }
+        }
+        let verify = self
+            .cx
+            .rt
+            .target_entry(&self.cx.tspec.name, &format!("verify_fused_b{b}"))?;
+        let tkv = std::mem::replace(&mut g.tkv, lit_scalar_i32(0)?); // placeholder
+        let mut head = vec![tkv, lit_i32(&[b, vt], &vtok)?, lit_i32(&[b], &pos)?];
+        head.extend(q_dev);
+        let tail = [
+            lit_f32(&[b, kq], &u_acc)?,
+            lit_f32(&[b], &u_samp)?,
+            lit_scalar_f32(self.cx.opts.temperature.max(1e-3))?,
+            lit_scalar_i32(mode.device_code())?,
+            lit_scalar_i32(k as i32)?,
+        ];
+        let mut dyn_b = upload(self.cx.rt, &head)?;
+        // Positions beyond this round's chain are masked in-graph by
+        // k_active; the cached zero literal just fills the lowered arity.
+        if k < kq && !self.zero_q.contains_key(&b) {
+            self.zero_q.insert(b, lit_zeros_f32(&[b, vocab])?);
+        }
+        for _ in k..kq {
+            dyn_b.push(self.cx.rt.to_buffer(&self.zero_q[&b])?);
+        }
+        dyn_b.extend(upload(self.cx.rt, &tail)?);
+        let args = arg_refs(&self.cx.tparams, &[], &dyn_b);
+        let outs = verify.run_bufs(&args)?;
+        // Only the verdict integers are materialized host-side.
+        let n_acc_host = verify.output_host(&outs, 0)?.as_i32(); // [B]
+        let toks_host = verify.output_host(&outs, 1)?.as_i32(); // [B, vt]
+        let mut it = outs.into_iter();
+        let n_acc_lit = it.next().unwrap();
+        let _toks_lit = it.next();
+        g.tkv = it.next().unwrap();
+        let feats = it.next().unwrap();
+        let h_sel = it.next().unwrap();
+
+        // --- 3. bookkeeping per row -------------------------------------
+        let mut n_acc = vec![0usize; b];
+        for (row, seq) in g.seqs.iter_mut().enumerate() {
+            if seq.done {
+                continue; // in-graph verdicts for done rows are garbage
+            }
+            let j = (n_acc_host[row].max(0) as usize).min(k);
+            let token = toks_host[row * vt + j];
+            Self::apply_verdict(seq, &drafts[row], k, j, token);
+            n_acc[row] = j;
+        }
+
+        // --- 4. advance draft state (backend-specific) ------------------
+        self.backend
+            .advance_device(&self.cx, g, &drafts, &n_acc, n_acc_lit, feats, h_sel)?;
         Ok(())
     }
 
@@ -496,21 +686,28 @@ impl<'rt> SchedulerCore for SpecEngine<'rt> {
 
     /// Admit one request into free row `row` of a running group: per-row
     /// prefill at the smallest bucket, then a one-row KV copy into the
-    /// group's packed caches (plus backend draft state adoption).
+    /// group's packed caches (device-side when the copy entry is lowered,
+    /// host fallback otherwise) plus backend draft state adoption.
     fn join(&mut self, g: &mut GroupState, row: usize, req: &AdmitReq) -> Result<()> {
         anyhow::ensure!(row < g.b, "join row {row} out of range (b={})", g.b);
         self.next_req_id = self.next_req_id.max(req.id + 1);
         let mut mini = self.bootstrap_group(std::slice::from_ref(req))?;
-        g.tkv = copy_literal_row(
-            &g.tkv,
-            &g.tkv_spec,
-            row,
-            &mini.tkv,
-            &mini.tkv_spec,
-            0,
-            TKV_BATCH_AXIS,
-        )?;
+        g.tkv = match copy_kv_row_device(&self.cx, KvSide::Target, g.b, mini.b, &g.tkv, &mini.tkv, row)? {
+            Some(tkv) => tkv,
+            None => copy_literal_row(
+                &g.tkv,
+                &g.tkv_spec,
+                row,
+                &mini.tkv,
+                &mini.tkv_spec,
+                0,
+                TKV_BATCH_AXIS,
+            )?,
+        };
         self.backend.adopt_row(&self.cx, g, row, &mini, 0)?;
+        if self.cx.device_verify {
+            g.tok0[row] = mini.tok0[0];
+        }
         g.seqs[row] = mini.seqs.swap_remove(0);
         Ok(())
     }

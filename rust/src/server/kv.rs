@@ -6,6 +6,10 @@
 //! rounds therefore move zero cache bytes on the host — the tensors flow
 //! executable-to-executable — and only group membership changes (a
 //! request joining/leaving under continuous batching) pay one row copy.
+//! When the artifacts carry the `kv_copy_row_b*` / `dkv_copy_row_b*`
+//! entries even that copy is a device-side splice
+//! (`backend::copy_tkv_row_device`); the host `copy_row` below is the
+//! strided fallback for older artifact sets.
 //!
 //! `SlotMap` tracks row occupancy; `copy_row` is the strided row mover.
 

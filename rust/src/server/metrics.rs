@@ -20,6 +20,16 @@ pub struct EngineMetrics {
     pub ttft_ms: Percentiles,
     pub queue_ms: Percentiles,
     pub tau: OnlineStats,
+    /// Which verify implementation this engine resolved to
+    /// ("device" | "host"; empty before an engine stamps it).
+    pub verify_path: &'static str,
+    /// Decode rounds executed (once per group round, unlike `rounds`
+    /// which sums per-request participation).
+    pub decode_rounds: u64,
+    /// Bytes materialized host-side via `output_host` during decode
+    /// rounds (Runtime::d2h_bytes_total deltas) — the transfer the
+    /// device-resident verify eliminates.
+    pub bytes_to_host: u64,
 }
 
 impl EngineMetrics {
@@ -43,19 +53,39 @@ impl EngineMetrics {
         }
     }
 
+    /// Mean device→host bytes per decode round (steady-state transfer).
+    pub fn bytes_to_host_per_round(&self) -> f64 {
+        if self.decode_rounds == 0 {
+            0.0
+        } else {
+            self.bytes_to_host as f64 / self.decode_rounds as f64
+        }
+    }
+
     /// Prometheus-style text block.
     pub fn render(&mut self, engine: &str) -> String {
         let mut out = String::new();
+        let path = if self.verify_path.is_empty() {
+            "host"
+        } else {
+            self.verify_path
+        };
+        out.push_str(&format!(
+            "lkspec_verify_path{{engine=\"{engine}\",path=\"{path}\"}} 1\n"
+        ));
         let mut line = |name: &str, v: f64| {
             out.push_str(&format!("lkspec_{name}{{engine=\"{engine}\"}} {v}\n"));
         };
         line("requests_total", self.requests as f64);
         line("tokens_out_total", self.tokens_out as f64);
         line("rounds_total", self.rounds as f64);
+        line("decode_rounds_total", self.decode_rounds as f64);
         line("drafted_total", self.drafted as f64);
         line("accepted_total", self.accepted as f64);
         line("acceptance_ratio", self.acceptance_ratio());
         line("tau_mean", self.tau.mean());
+        line("bytes_to_host_total", self.bytes_to_host as f64);
+        line("bytes_to_host_per_round", self.bytes_to_host_per_round());
         if !self.latency_ms.is_empty() {
             line("latency_ms_p50", self.latency_ms.pct(50.0));
             line("latency_ms_p95", self.latency_ms.pct(95.0));
@@ -71,6 +101,56 @@ impl EngineMetrics {
         }
         out
     }
+}
+
+// ---------------------------------------------------------------------------
+// analytic steady-state transfer model (bench + tests)
+// ---------------------------------------------------------------------------
+//
+// Closed forms for the device→host bytes one decode round materializes
+// on each verify path; `benches/engine_hotpath.rs` renders these against
+// the manifest dims and the live `bytes_to_host_per_round` counter.
+
+/// Host path, target side: the full [B, Vt, V] logits plus [B, Vt, 3d]
+/// features pulled for host softmax/acceptance and hidden pickup.
+pub fn host_verify_bytes_per_round(b: usize, vt: usize, vocab: usize, feat_dim: usize) -> u64 {
+    (b * vt * (vocab + feat_dim) * 4) as u64
+}
+
+/// Host path, draft side: what host-side sampling forces down per round
+/// (per architecture; `draft_vocab` < `vocab` only for truncated-vocab
+/// drafts).
+pub fn host_draft_bytes_per_round(
+    arch: &str,
+    b: usize,
+    k: usize,
+    vocab: usize,
+    draft_vocab: usize,
+    d_model: usize,
+    vt: usize,
+) -> u64 {
+    let f = 4usize;
+    (match arch {
+        // (k-1) chained step pulls + the extend's [B, Vt, Vd] q-logits
+        // and [B, Vt, d] hidden planes.
+        "eagle3" | "mtp" | "recurrent" => {
+            (k.saturating_sub(1)) * b * draft_vocab * f
+                + b * vt * draft_vocab * f
+                + b * vt * d_model * f
+        }
+        // one [K, B, V] head-logits pull
+        "medusa" => k * b * vocab * f,
+        // k chained [B, V] logits pulls
+        "mlp" => k * b * vocab * f,
+        _ => 0,
+    }) as u64
+}
+
+/// Device path: n_accepted [B] + emitted tokens [B, Vt] + the drafted
+/// token ids the backends read back (O(B·K) i32 — nothing scales with
+/// the vocabulary).
+pub fn device_bytes_per_round(b: usize, k: usize, vt: usize) -> u64 {
+    ((b + b * vt + b * k) * 4) as u64
 }
 
 /// Scheduler-level serving metrics: occupancy, queue waits, throughput
@@ -187,6 +267,45 @@ mod tests {
         assert!(text.contains("lkspec_requests_total{engine=\"test\"} 1"));
         assert!(text.contains("latency_ms_p50"));
         assert!(text.contains("ttft_ms_p50"));
+    }
+
+    #[test]
+    fn transfer_counters_and_path_gauge() {
+        let mut m = EngineMetrics {
+            verify_path: "device",
+            ..Default::default()
+        };
+        m.decode_rounds = 4;
+        m.bytes_to_host = 4 * 256;
+        assert!((m.bytes_to_host_per_round() - 256.0).abs() < 1e-12);
+        let text = m.render("e");
+        assert!(text.contains("lkspec_verify_path{engine=\"e\",path=\"device\"} 1"));
+        assert!(text.contains("lkspec_bytes_to_host_per_round{engine=\"e\"} 256"));
+        assert!(text.contains("lkspec_decode_rounds_total{engine=\"e\"} 4"));
+        // unset path renders as the host fallback
+        let mut m2 = EngineMetrics::default();
+        assert!(m2.render("e").contains("path=\"host\""));
+    }
+
+    /// The whole point of the device verify path: per-round host traffic
+    /// stops scaling with the vocabulary. At the manifest's own dims the
+    /// reduction is >50× for every draft architecture.
+    #[test]
+    fn device_transfer_orders_of_magnitude_below_host() {
+        let (vt, vocab, vd, d, f3) = (8usize, 512usize, 320usize, 96usize, 288usize);
+        for (arch, k) in [("eagle3", 7usize), ("medusa", 6), ("mlp", 6)] {
+            for b in [1usize, 4] {
+                let host = host_verify_bytes_per_round(b, vt, vocab, f3)
+                    + host_draft_bytes_per_round(arch, b, k, vocab, vd, d, vt);
+                let dev = device_bytes_per_round(b, k, vt);
+                assert!(
+                    dev * 50 < host,
+                    "{arch} b={b}: device {dev} not <50x below host {host}"
+                );
+                // device side is pure O(B·K) ints
+                assert_eq!(dev, ((b + b * vt + b * k) * 4) as u64);
+            }
+        }
     }
 
     #[test]

@@ -26,6 +26,6 @@ pub mod router;
 pub mod scheduler;
 
 pub use backend::DraftBackend;
-pub use engine::{EngineOpts, RequestResult, SpecEngine};
+pub use engine::{EngineOpts, RequestResult, SpecEngine, VerifyPath};
 pub use router::{Router, RouterConfig};
 pub use scheduler::{AdmitReq, Scheduler, SchedulerCore, SimCore};

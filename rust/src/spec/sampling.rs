@@ -35,20 +35,46 @@ impl SamplingMode {
             other => anyhow::bail!("unknown sampling mode '{other}'"),
         }
     }
+
+    /// Mode scalar fed to the fused device-verify entrypoints (must stay
+    /// in lockstep with `python/compile/verify_device.py` MODE_*).
+    pub fn device_code(self) -> i32 {
+        match self {
+            SamplingMode::Greedy => 0,
+            SamplingMode::Stochastic => 1,
+            SamplingMode::GreedyDraft => 2,
+        }
+    }
+
+    /// Whether draft/verify decisions consume uniforms at all.
+    pub fn is_stochastic(self) -> bool {
+        !matches!(self, SamplingMode::Greedy)
+    }
 }
 
 /// Temperature softmax. T=0 is handled by callers via argmax.
 pub fn softmax_t(logits: &[f32], temp: f32) -> Vec<f32> {
+    let mut out = vec![0f32; logits.len()];
+    softmax_t_into(logits, temp, &mut out);
+    out
+}
+
+/// Allocation-free temperature softmax into a caller-owned slice (the
+/// serving hot path reuses flat scratch buffers across rounds).
+pub fn softmax_t_into(logits: &[f32], temp: f32, out: &mut [f32]) {
     debug_assert!(temp > 0.0);
+    debug_assert_eq!(logits.len(), out.len());
     let inv = 1.0 / temp;
     let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-    let mut out: Vec<f32> = logits.iter().map(|&z| ((z - m) * inv).exp()).collect();
-    let sum: f32 = out.iter().sum();
-    let norm = 1.0 / sum;
-    for p in &mut out {
-        *p *= norm;
+    let mut sum = 0f32;
+    for (o, &z) in out.iter_mut().zip(logits) {
+        *o = ((z - m) * inv).exp();
+        sum += *o;
     }
-    out
+    let norm = 1.0 / sum;
+    for o in out.iter_mut() {
+        *o *= norm;
+    }
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -132,6 +158,199 @@ pub fn verify_token(
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// explicit-uniform verification (the host/device-shared contract)
+// ---------------------------------------------------------------------------
+//
+// The device-resident verify pipeline keeps randomness host-owned: the
+// engine draws uniforms from each request's PCG64 stream and feeds them
+// to the fused kernel as plain f32 inputs. So that the host fallback
+// makes the same decisions from the same draws, BOTH paths consume a
+// FIXED number of draws per round and use the same selection rules,
+// with identical per-element formulations (mirrored in
+// python/compile/verify_device.py). The only residual divergence is
+// f32 reduction ordering (XLA's vectorized sums/cumsums vs the serial
+// loops here), which can flip a verdict only when a uniform lands
+// within ~1 ulp of a CDF or acceptance boundary:
+//
+//   * per round a live row draws exactly `k` accept uniforms plus ONE
+//     sample uniform (residual or bonus — only one is consumed) in the
+//     stochastic modes, and nothing in greedy mode;
+//   * inverse-CDF selection returns the FIRST index with cumsum >= u,
+//     falling back to the LAST index with positive mass (fp slack);
+//   * the residual draw thresholds the unnormalized residual cumsum at
+//     u·Z_res, which is the same selection as normalizing first.
+//
+// The fixed draw count is what keeps a request's sample path a pure
+// function of (seed, request id) on either path — the scheduler's
+// composition-independence and continuous-vs-lockstep tests rely on it.
+
+/// Per-round verify uniforms drawn up-front from a request's stream.
+#[derive(Clone, Debug, Default)]
+pub struct RoundUniforms {
+    /// One accept draw per drafted position (empty in greedy mode).
+    pub accept: Vec<f32>,
+    /// The round's single residual-or-bonus draw.
+    pub sample: f32,
+}
+
+impl RoundUniforms {
+    pub fn draw(rng: &mut Pcg64, k: usize, mode: SamplingMode) -> RoundUniforms {
+        let mut u = RoundUniforms::default();
+        u.draw_into(rng, k, mode);
+        u
+    }
+
+    /// Reusable-buffer variant for the per-row hot loop.
+    pub fn draw_into(&mut self, rng: &mut Pcg64, k: usize, mode: SamplingMode) {
+        self.accept.clear();
+        self.sample = 0.0;
+        if mode.is_stochastic() {
+            self.accept.extend((0..k).map(|_| rng.uniform() as f32));
+            self.sample = rng.uniform() as f32;
+        }
+    }
+}
+
+/// Inverse-CDF sample at an explicit uniform: first index with
+/// cumsum(probs) >= u, else the last index with positive mass.
+pub fn categorical_from_uniform(probs: &[f32], u: f32) -> usize {
+    let mut c = 0f32;
+    for (i, &p) in probs.iter().enumerate() {
+        c += p;
+        if c >= u {
+            return i;
+        }
+    }
+    probs
+        .iter()
+        .rposition(|&p| p > 0.0)
+        .unwrap_or(probs.len() - 1)
+}
+
+/// Residual sample at an explicit uniform: inverse CDF over the
+/// unnormalized max(p - q, 0) thresholded at u·Z_res; falls back to
+/// sampling from p when the residual is empty (p == q).
+pub fn residual_from_uniform(p: &[f32], q: &[f32], u: f32) -> usize {
+    let mut z = 0f32;
+    for i in 0..p.len() {
+        z += (p[i] - q[i]).max(0.0);
+    }
+    if z <= 0.0 {
+        return categorical_from_uniform(p, u);
+    }
+    let t = u * z;
+    let mut c = 0f32;
+    let mut last = None;
+    for i in 0..p.len() {
+        let r = (p[i] - q[i]).max(0.0);
+        if r > 0.0 {
+            last = Some(i);
+        }
+        c += r;
+        if c >= t {
+            return i;
+        }
+    }
+    last.unwrap_or(p.len() - 1)
+}
+
+/// Outcome of one fused verify round for one sequence row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowVerdict {
+    /// Accepted draft-prefix length (0..=k).
+    pub n_accepted: usize,
+    /// The round's non-draft emission: the residual replacement at the
+    /// first rejection, or the bonus token after a clean sweep.
+    pub token: i32,
+}
+
+/// One verify round for one row under the fixed-uniform contract. This
+/// is the single audited definition both serving paths share: the host
+/// engine calls it (via `verify_round_lazy`); the device kernel
+/// implements the identical arithmetic in-graph
+/// (python/compile/verify_device.py, pinned by the golden-uniform
+/// parity tests).
+///
+/// `fill_p(j, out)` writes the temperature-softmaxed target row `j`
+/// into `out` — called LAZILY, only for rows the acceptance walk
+/// actually reaches (rows 0..=n_accepted), so a rejection at position 2
+/// never pays for softmaxing rows 3..k. `p` is the caller's
+/// [(k+1)·vocab] scratch the rows are materialized into.
+///
+/// * `q` — [k·vocab] full-vocab draft distributions
+/// * `drafted` — k drafted token ids (full vocab)
+pub fn verify_round_lazy(
+    k: usize,
+    vocab: usize,
+    p: &mut [f32],
+    mut fill_p: impl FnMut(usize, &mut [f32]),
+    q: &[f32],
+    drafted: &[i32],
+    mode: SamplingMode,
+    u: &RoundUniforms,
+) -> RowVerdict {
+    debug_assert!(p.len() >= (k + 1) * vocab && q.len() >= k * vocab);
+    let mut j = 0usize;
+    while j < k {
+        let x = drafted[j] as usize;
+        fill_p(j, &mut p[j * vocab..(j + 1) * vocab]);
+        let pj = &p[j * vocab..(j + 1) * vocab];
+        let qj = &q[j * vocab..(j + 1) * vocab];
+        let ok = match mode {
+            SamplingMode::Greedy => argmax(pj) == x,
+            SamplingMode::Stochastic => {
+                let beta = if qj[x] > 0.0 { (pj[x] / qj[x]).min(1.0) } else { 0.0 };
+                u.accept[j] < beta
+            }
+            SamplingMode::GreedyDraft => u.accept[j] < pj[x].min(1.0),
+        };
+        if !ok {
+            break;
+        }
+        j += 1;
+    }
+    if j >= k {
+        // Clean sweep: the bonus row is the only one the walk never
+        // materialized (a rejection row was filled on entry above).
+        fill_p(j, &mut p[j * vocab..(j + 1) * vocab]);
+    }
+    let pj = &p[j * vocab..(j + 1) * vocab];
+    let token = match mode {
+        SamplingMode::Greedy => argmax(pj) as i32,
+        _ if j >= k => categorical_from_uniform(pj, u.sample) as i32,
+        _ => residual_from_uniform(pj, &q[j * vocab..(j + 1) * vocab], u.sample) as i32,
+    };
+    RowVerdict {
+        n_accepted: j,
+        token,
+    }
+}
+
+/// Eager convenience wrapper over `verify_round_lazy` for callers that
+/// already hold all k+1 softmaxed rows (tests, fixtures, simulations).
+pub fn verify_round(
+    k: usize,
+    vocab: usize,
+    p: &[f32],
+    q: &[f32],
+    drafted: &[i32],
+    mode: SamplingMode,
+    u: &RoundUniforms,
+) -> RowVerdict {
+    let mut scratch = vec![0f32; (k + 1) * vocab];
+    verify_round_lazy(
+        k,
+        vocab,
+        &mut scratch,
+        |j, out| out.copy_from_slice(&p[j * vocab..(j + 1) * vocab]),
+        q,
+        drafted,
+        mode,
+        u,
+    )
 }
 
 /// Sample from normalized max(p - q, 0); falls back to p when p == q.
@@ -270,6 +489,130 @@ mod tests {
         assert_eq!(acc_exact, n);
         let rate = acc_greedy as f64 / n as f64;
         assert!(rate < 0.1, "greedy-draft rate {rate} should be ~1/32");
+    }
+
+    #[test]
+    fn categorical_from_uniform_boundaries() {
+        let p = [0.3f32, 0.0, 0.2, 0.0];
+        assert_eq!(categorical_from_uniform(&p, 0.1), 0);
+        assert_eq!(categorical_from_uniform(&p, 0.35), 2);
+        // fp slack past the total mass: last index with positive mass
+        assert_eq!(categorical_from_uniform(&p, 0.9), 2);
+        // all-zero row degenerates to the last index
+        assert_eq!(categorical_from_uniform(&[0.0, 0.0], 0.5), 1);
+    }
+
+    #[test]
+    fn round_uniforms_fixed_draw_count() {
+        // Stochastic modes consume exactly k+1 draws; greedy consumes
+        // none. This is the host/device stream contract.
+        let mut a = Pcg64::new(3, 9);
+        let mut b = a.clone();
+        let u = RoundUniforms::draw(&mut a, 4, SamplingMode::Stochastic);
+        assert_eq!(u.accept.len(), 4);
+        for _ in 0..5 {
+            b.uniform();
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "draw count != k+1");
+
+        let mut c = Pcg64::new(3, 9);
+        let mut d = c.clone();
+        let u = RoundUniforms::draw(&mut c, 4, SamplingMode::Greedy);
+        assert!(u.accept.is_empty());
+        assert_eq!(c.next_u64(), d.next_u64(), "greedy must not draw");
+    }
+
+    /// Golden-uniform fixture: hand-checkable verdicts for the fused
+    /// round (the same vectors back the python three-way parity test).
+    #[test]
+    fn verify_round_golden_uniforms() {
+        let v = 4;
+        let k = 2;
+        // p rows: position 0 and 1 identical to q -> beta = 1; bonus row.
+        let p = [
+            0.1f32, 0.2, 0.3, 0.4, // pos 0
+            0.25, 0.25, 0.25, 0.25, // pos 1
+            0.7, 0.1, 0.1, 0.1, // bonus
+        ];
+        let q = [
+            0.1f32, 0.2, 0.3, 0.4, //
+            0.25, 0.25, 0.25, 0.25,
+        ];
+        let drafted = [3i32, 0];
+        // q == p accepts regardless of the accept draws; bonus at
+        // u=0.75 lands on the first index with cumsum >= 0.75 (id 1).
+        let u = RoundUniforms {
+            accept: vec![0.999, 0.999],
+            sample: 0.75,
+        };
+        let rv = verify_round(k, v, &p, &q, &drafted, SamplingMode::Stochastic, &u);
+        assert_eq!(
+            rv,
+            RowVerdict {
+                n_accepted: 2,
+                token: 1
+            }
+        );
+
+        // Disjoint supports: q(x) > 0, p(x) = 0 -> beta = 0, reject at 0;
+        // the residual equals p so the replacement is its inverse CDF.
+        let p2 = [
+            0.0f32, 0.5, 0.5, 0.0, //
+            0.25, 0.25, 0.25, 0.25,
+            0.25, 0.25, 0.25, 0.25,
+        ];
+        let q2 = [
+            1.0f32, 0.0, 0.0, 0.0, //
+            0.25, 0.25, 0.25, 0.25,
+        ];
+        let u2 = RoundUniforms {
+            accept: vec![0.0, 0.0],
+            sample: 0.6,
+        };
+        let rv2 = verify_round(k, v, &p2, &q2, &[0, 1], SamplingMode::Stochastic, &u2);
+        assert_eq!(
+            rv2,
+            RowVerdict {
+                n_accepted: 0,
+                token: 2
+            }
+        );
+
+        // Greedy: argmax agreement decides, argmax replaces.
+        let rv3 = verify_round(k, v, &p, &q, &[3, 2], SamplingMode::Greedy, &u);
+        assert_eq!(rv3.n_accepted, 1); // pos 1 argmax is 0 (ties -> first)
+        assert_eq!(rv3.token, 0);
+    }
+
+    /// The fused fixed-uniform round preserves the target distribution
+    /// exactly (the Leviathan invariant on the new contract), reusing
+    /// the `rejection_sampling_preserves_target` machinery.
+    #[test]
+    fn fused_verify_round_preserves_target() {
+        let mut rng = Pcg64::new(77, 0);
+        let v = 16;
+        let p0 = dist(&mut rng, v, 2.0);
+        let q0 = dist(&mut rng, v, 2.0);
+        let bonus = dist(&mut rng, v, 2.0);
+        let mut p = p0.clone();
+        p.extend_from_slice(&bonus);
+        let n = 300_000;
+        let mut counts = vec![0f64; v];
+        for _ in 0..n {
+            let x = categorical_from_uniform(&q0, rng.uniform() as f32) as i32;
+            let u = RoundUniforms::draw(&mut rng, 1, SamplingMode::Stochastic);
+            let rv = verify_round(1, v, &p, &q0, &[x], SamplingMode::Stochastic, &u);
+            let emitted = if rv.n_accepted == 1 { x } else { rv.token };
+            counts[emitted as usize] += 1.0;
+        }
+        for i in 0..v {
+            let emp = counts[i] / n as f64;
+            assert!(
+                (emp - p0[i] as f64).abs() < 0.005,
+                "token {i}: empirical {emp:.4} vs target {:.4}",
+                p0[i]
+            );
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@ use lk_spec::data::corpus::{Corpus, CorpusSpec};
 use lk_spec::eval::EvalMode;
 use lk_spec::runtime::Runtime;
 use lk_spec::server::batcher::BatcherConfig;
-use lk_spec::server::engine::{EngineOpts, SpecEngine};
+use lk_spec::server::engine::{EngineOpts, SpecEngine, VerifyPath};
 use lk_spec::server::{RequestResult, Scheduler};
 use lk_spec::tensor::{read_checkpoint, HostTensor};
 use lk_spec::train::{checkpoint_to_params, params_to_checkpoint, DraftTrainer, RunDirs, TargetTrainer};
@@ -56,23 +56,69 @@ fn fixture(rt: &Runtime) -> (PathBuf, Corpus) {
                 .train("dense-s", &corpus, &preset, 30)
                 .expect("target train");
         }
-        if !dirs.draft_ckpt("eagle3_dense-s__kl").exists() {
-            let preset = lk_spec::config::TrainPreset {
-                steps: 40,
-                ..lk_spec::config::TrainPreset::draft("dense-s", "eagle3")
-            };
-            DraftTrainer { rt, dirs: RunDirs::new(&work) }
-                .train(
-                    "eagle3@dense-s",
-                    &lk_spec::config::LossSpec::kl(),
-                    &corpus,
-                    &preset,
-                    20,
-                )
-                .expect("draft train");
+        for arch in ["eagle3", "medusa", "mlp"] {
+            if !dirs.draft_ckpt(&format!("{arch}_dense-s__kl")).exists() {
+                let preset = lk_spec::config::TrainPreset {
+                    steps: 40,
+                    ..lk_spec::config::TrainPreset::draft("dense-s", arch)
+                };
+                DraftTrainer { rt, dirs: RunDirs::new(&work) }
+                    .train(
+                        &format!("{arch}@dense-s"),
+                        &lk_spec::config::LossSpec::kl(),
+                        &corpus,
+                        &preset,
+                        20,
+                    )
+                    .expect("draft train");
+            }
         }
         (work, corpus)
     }
+}
+
+fn engine_for_draft<'rt>(
+    rt: &'rt Runtime,
+    work: &Path,
+    draft: &str,
+    mode: EvalMode,
+    k: usize,
+    seed: u64,
+    verify_path: VerifyPath,
+) -> SpecEngine<'rt> {
+    let dirs = RunDirs::new(work);
+    let tckpt = read_checkpoint(&dirs.target_ckpt("dense-s")).unwrap();
+    let arch = draft.split('@').next().unwrap();
+    let dckpt = read_checkpoint(&dirs.draft_ckpt(&format!("{arch}_dense-s__kl"))).unwrap();
+    let vm = if arch == "eagle3" {
+        Some(
+            Json::parse_file(&dirs.vocab_map())
+                .unwrap()
+                .get("map")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_i64().unwrap() as i32)
+                .collect::<Vec<_>>(),
+        )
+    } else {
+        None
+    };
+    SpecEngine::new(
+        rt,
+        draft,
+        &tckpt,
+        &dckpt,
+        vm,
+        EngineOpts {
+            k_draft: k,
+            temperature: 1.0,
+            mode: mode.sampling(),
+            seed,
+            verify_path,
+        },
+    )
+    .unwrap()
 }
 
 fn engine_for<'rt>(
@@ -82,31 +128,7 @@ fn engine_for<'rt>(
     k: usize,
     seed: u64,
 ) -> SpecEngine<'rt> {
-    let dirs = RunDirs::new(work);
-    let tckpt = read_checkpoint(&dirs.target_ckpt("dense-s")).unwrap();
-    let dckpt = read_checkpoint(&dirs.draft_ckpt("eagle3_dense-s__kl")).unwrap();
-    let vm = Json::parse_file(&dirs.vocab_map())
-        .unwrap()
-        .get("map")
-        .as_arr()
-        .unwrap()
-        .iter()
-        .map(|x| x.as_i64().unwrap() as i32)
-        .collect::<Vec<_>>();
-    SpecEngine::new(
-        rt,
-        "eagle3@dense-s",
-        &tckpt,
-        &dckpt,
-        Some(vm),
-        EngineOpts {
-            k_draft: k,
-            temperature: 1.0,
-            mode: mode.sampling(),
-            seed,
-        },
-    )
-    .unwrap()
+    engine_for_draft(rt, work, "eagle3@dense-s", mode, k, seed, VerifyPath::Auto)
 }
 
 /// One sequential suite: Runtime/PJRT state is !Send, and the fixture
@@ -124,6 +146,7 @@ fn engine_integration_suite() {
     stochastic_composition_independent(&rt, &work, &corpus);
     batch_rows_independent(&rt, &work, &corpus);
     scheduler_join_matches_lockstep(&rt, &work, &corpus);
+    device_verify_matches_host(&rt, &work, &corpus);
     k_sweep_shapes(&rt, &work, &corpus);
     greedy_draft_not_better(&rt, &work, &corpus);
     mtp_param_mapping(&rt);
@@ -356,6 +379,69 @@ fn scheduler_join_matches_lockstep(rt: &Runtime, work: &Path, corpus: &Corpus) {
             "session {i}: per-position acceptance stats differ"
         );
         assert_eq!(a.stats.prefix_hist, b.stats.prefix_hist, "session {i}");
+    }
+}
+
+/// THE golden-uniform parity check for the device-resident verify: with
+/// the same seed both paths draw the same fixed-count uniforms in the
+/// same stream order, so forced-host and forced-device engines must emit
+/// identical tokens and identical per-position acceptance statistics
+/// (n_accepted / accepted drafts / bonus tokens) — for all three draft
+/// architectures and in every sampling mode.
+///
+/// Both paths use identical per-element formulations; the only residual
+/// divergence is f32 reduction ordering (XLA vs serial sums), which
+/// could flip a verdict only when a uniform lands within ~1 ulp of a
+/// CDF/acceptance boundary. At this test's scale (a few hundred
+/// decisions) that is a ~0 probability event; if it ever fires, suspect
+/// a real formulation drift first.
+fn device_verify_matches_host(rt: &Runtime, work: &Path, corpus: &Corpus) {
+    println!("== device_verify_matches_host");
+    if !rt.has_target_entry("dense-s", "verify_fused_b1") {
+        println!("SKIP: artifacts predate the device verify entries");
+        return;
+    }
+    let prompts = corpus
+        .load(lk_spec::data::grammar::Domain::Chat, "eval")
+        .unwrap()
+        .prompts(2, 12);
+    for draft in ["eagle3@dense-s", "medusa@dense-s", "mlp@dense-s"] {
+        for mode in [EvalMode::T1, EvalMode::T0, EvalMode::T1GreedyDraft] {
+            let host = {
+                let mut e =
+                    engine_for_draft(rt, work, draft, mode, 6, 55, VerifyPath::Host);
+                assert_eq!(e.verify_path(), "host");
+                e.generate_batch(&prompts, 20).unwrap()
+            };
+            let dev = {
+                let mut e =
+                    engine_for_draft(rt, work, draft, mode, 6, 55, VerifyPath::Device);
+                assert_eq!(e.verify_path(), "device");
+                let out = e.generate_batch(&prompts, 20).unwrap();
+                // the whole point: no full-vocab pulls in steady state
+                assert!(
+                    e.metrics.bytes_to_host_per_round() < 1024.0,
+                    "{draft} {mode:?}: device path pulled {} B/round",
+                    e.metrics.bytes_to_host_per_round()
+                );
+                out
+            };
+            for (i, (a, b)) in host.iter().zip(&dev).enumerate() {
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "{draft} {mode:?} request {i}: device tokens diverge from host"
+                );
+                assert_eq!(a.stats.drafted, b.stats.drafted, "{draft} {mode:?} req {i}");
+                assert_eq!(
+                    a.stats.accepted, b.stats.accepted,
+                    "{draft} {mode:?} req {i}"
+                );
+                assert_eq!(
+                    a.stats.prefix_hist, b.stats.prefix_hist,
+                    "{draft} {mode:?} req {i}"
+                );
+            }
+        }
     }
 }
 

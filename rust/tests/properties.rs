@@ -10,7 +10,8 @@ use lk_spec::server::kv::copy_row;
 use lk_spec::spec::accept::AcceptanceStats;
 use lk_spec::spec::gradients;
 use lk_spec::spec::sampling::{
-    acceptance_rate, sample_categorical, softmax_t, verify_token, SamplingMode, Verdict,
+    acceptance_rate, categorical_from_uniform, sample_categorical, softmax_t, verify_round,
+    verify_token, RoundUniforms, SamplingMode, Verdict,
 };
 use lk_spec::tensor::{read_checkpoint, write_checkpoint, Checkpoint, DType, HostTensor};
 use lk_spec::util::proptest::{forall, gen};
@@ -55,6 +56,90 @@ fn prop_rejection_sampling_is_lossless() {
                 if (emp - p[i] as f64).abs() > tol {
                     return Err(format!("token {i}: |{emp:.4} - {:.4}| > {tol:.4}", p[i]));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The fused fixed-uniform round (the contract the device kernel and the
+/// host fallback share) is ALSO lossless: for arbitrary (p, q) a k=1
+/// round emits exactly p, with drafts drawn through the same
+/// explicit-uniform inverse CDF the device entries use.
+#[test]
+fn prop_fused_verify_round_is_lossless() {
+    forall(
+        "fused verify_round preserves p",
+        0xFA57,
+        6,
+        |rng| {
+            let v = [4, 8, 16, 48][rng.below(4)];
+            let sharp_p = 1.0 + rng.uniform() * 3.0;
+            let sharp_q = 1.0 + rng.uniform() * 3.0;
+            let p = gen::dist(rng, v, sharp_p);
+            let q = gen::dist(rng, v, sharp_q);
+            let bonus = gen::dist(rng, v, 2.0);
+            (p, q, bonus, rng.next_u64())
+        },
+        |(p, q, bonus, seed)| {
+            let v = p.len();
+            let mut p_rows = p.clone();
+            p_rows.extend_from_slice(bonus);
+            let n = 120_000;
+            let mut rng = Pcg64::new(*seed, 3);
+            let mut counts = vec![0f64; v];
+            for _ in 0..n {
+                let x = categorical_from_uniform(q, rng.uniform() as f32) as i32;
+                let u = RoundUniforms::draw(&mut rng, 1, SamplingMode::Stochastic);
+                let rv = verify_round(1, v, &p_rows, q, &[x], SamplingMode::Stochastic, &u);
+                let emitted = if rv.n_accepted == 1 { x } else { rv.token };
+                counts[emitted as usize] += 1.0;
+            }
+            for i in 0..v {
+                let emp = counts[i] / n as f64;
+                let tol = 0.012 + 3.0 * (p[i] as f64 / n as f64).sqrt();
+                if (emp - p[i] as f64).abs() > tol {
+                    return Err(format!("token {i}: |{emp:.4} - {:.4}| > {tol:.4}", p[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Acceptance rate of the fused round matches alpha = sum min(p, q),
+/// and the accept chain never runs past the first rejection.
+#[test]
+fn prop_fused_round_acceptance_equals_alpha() {
+    forall(
+        "fused round E[accept] == alpha",
+        0xFA58,
+        6,
+        |rng| {
+            let v = [8, 32, 128][rng.below(3)];
+            (
+                gen::dist(rng, v, 2.0),
+                gen::dist(rng, v, 2.0),
+                rng.next_u64(),
+            )
+        },
+        |(p, q, seed)| {
+            let v = p.len();
+            let alpha = acceptance_rate(p, q);
+            let mut p_rows = p.clone();
+            p_rows.extend_from_slice(p); // bonus row, never counted
+            let mut rng = Pcg64::new(*seed, 4);
+            let n = 80_000;
+            let mut acc = 0u64;
+            for _ in 0..n {
+                let x = categorical_from_uniform(q, rng.uniform() as f32) as i32;
+                let u = RoundUniforms::draw(&mut rng, 1, SamplingMode::Stochastic);
+                let rv = verify_round(1, v, &p_rows, q, &[x], SamplingMode::Stochastic, &u);
+                acc += rv.n_accepted as u64;
+            }
+            let emp = acc as f64 / n as f64;
+            if (emp - alpha).abs() > 0.015 {
+                return Err(format!("empirical {emp:.4} vs alpha {alpha:.4}"));
             }
             Ok(())
         },

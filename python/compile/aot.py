@@ -316,6 +316,100 @@ def lower_target(w: EntryWriter, cfg: M.TargetConfig) -> dict:
             ],
         )
 
+        # --- multi-candidate (tree) verification: the verify block is a
+        # candidate TREE (slot 0 = root/last_token, node i at slot i+1,
+        # topology as a parent-index tensor — spec::sampling::TreeSpec).
+        # The plain entry runs the tree-attention forward for the host
+        # rejection path; the fused sibling additionally runs the exact
+        # multi-draft rejection walk in-graph over per-node q tensors and
+        # splices the accepted path's KV back to consecutive positions,
+        # so a steady-state round returns O(B·N) ints.
+        def path_gather(kv, sel, dst0, b=b):
+            """Per-row KV gather of `sel` positions, scattered linearly
+            from dst0 (gathers read the pre-update cache; batch rows
+            never overlap)."""
+            out = kv
+            for bi in range(b):  # B <= 4; unrolled per-row
+                g = jnp.take(kv[:, :, bi], sel[bi], axis=3)
+                out = jax.lax.dynamic_update_slice(
+                    out, g[:, :, None], (0, 0, bi, 0, dst0[bi], 0)
+                )
+            return out
+
+        def verify_tree_fn(*flat, b=b):
+            p = unflatten(flat[:n_params])
+            kv, tokens, pos, parents_blk = flat[n_params:]
+            anc, depths = VD.tree_block_topology(parents_blk, VERIFY_T)
+            return M.target_verify_tree(p, kv, tokens, pos, anc, depths, cfg)
+
+        entries[f"verify_tree_b{b}"] = w.lower(
+            f"tgt_{cfg.name}_verify_tree_b{b}",
+            verify_tree_fn,
+            [
+                ("params", pstructs),
+                ("kv", [kv_spec]),
+                ("tokens", [i32((b, VERIFY_T))]),
+                ("pos", [i32((b,))]),
+                ("parents_blk", [i32((VERIFY_T,))]),
+            ],
+        )
+
+        def verify_tree_fused_fn(*flat, b=b):
+            p = unflatten(flat[:n_params])
+            kv, tokens, pos, parents = flat[n_params : n_params + 4]
+            qs = flat[n_params + 4 : n_params + 4 + kq]
+            u_acc, u_samp, temp, mode, n_active = flat[n_params + 4 + kq :]
+            parents_blk = jnp.concatenate(
+                [jnp.zeros((1,), jnp.int32), parents + 1]
+            )
+            anc, depths = VD.tree_block_topology(parents_blk, VERIFY_T)
+            logits, kv2, feats = M.target_verify_tree(
+                p, kv, tokens, pos, anc, depths, cfg
+            )
+            q = jnp.stack(qs, axis=1)  # [B, N, V]
+            n_path, path, toks, stop_blk = VD.tree_verify(
+                logits, q, tokens[:, 1:], parents, u_acc, u_samp, temp,
+                mode, n_active,
+            )
+            sel = pos[:, None] + 1 + jnp.clip(path, 0, kq - 1)
+            kv3 = path_gather(kv2, sel, pos + 1)
+            h_sel = VD.pick_hidden(feats, stop_blk, cfg.d_model)
+            return n_path, path, toks, kv3, feats, h_sel
+
+        entries[f"verify_tree_fused_b{b}"] = w.lower(
+            f"tgt_{cfg.name}_verify_tree_fused_b{b}",
+            verify_tree_fused_fn,
+            [
+                ("params", pstructs),
+                ("kv", [kv_spec]),
+                ("tokens", [i32((b, VERIFY_T))]),
+                ("pos", [i32((b,))]),
+                ("parents", [i32((kq,))]),
+                ("q", [f32((b, cfg.vocab))] * kq),
+                ("u_acc", [f32((b, kq))]),
+                ("u_samp", [f32((b,))]),
+                ("temp", [f32()]),
+                ("mode", [i32()]),
+                ("n_active", [i32()]),
+            ],
+        )
+
+        # Host-path sibling of the in-graph splice: flatten an accepted
+        # tree path to consecutive cache positions without pulling the
+        # packed KV through the host.
+        def kv_path_gather_fn(kv, sel, dst0, b=b):
+            return (path_gather(kv, sel, dst0, b=b),)
+
+        entries[f"kv_path_gather_b{b}"] = w.lower(
+            f"tgt_{cfg.name}_kv_path_gather_b{b}",
+            kv_path_gather_fn,
+            [
+                ("kv", [kv_spec]),
+                ("sel", [i32((b, kq))]),
+                ("dst0", [i32((b,))]),
+            ],
+        )
+
         # --- device-side one-row KV copy for scheduler joins: splice a
         # freshly prefilled bucket-1 cache row into a running group's
         # packed cache without the host round-trip.
@@ -606,6 +700,37 @@ def lower_draft(w: EntryWriter, dcfg: D.DraftConfig) -> dict:
                     ("dparams", d_structs),
                     ("hidden", [f32((b, d))]),
                     ("u", [f32((b, dcfg.k_heads))]),
+                    ("temp", [f32()]),
+                    ("mode", [i32()]),
+                ],
+            )
+
+            # Tree drafting: every candidate node samples from its
+            # LEVEL's head distribution (parallel heads are token-
+            # independent, so one propose pass feeds the whole tree) —
+            # i.i.d. through per-node uniforms in stochastic mode,
+            # sibling-rank-th largest in the greedy modes. The N
+            # full-vocab q tensors flow straight into verify_tree_fused.
+            n_tree = VERIFY_T - 1
+
+            def prop_tree_sample_fn(*flat):
+                dp = unflat_d(flat[:n_d])
+                hidden, u, level, rank, temp, mode = flat[n_d:]
+                logits = D.medusa_propose(dp, hidden, dcfg)  # [K, B, V]
+                toks, qs = VD.tree_draft_sample(
+                    logits, u, level, rank, temp, mode, n_tree, n_tree
+                )
+                return (toks,) + tuple(qs)
+
+            entries[f"propose_tree_sample_b{b}"] = w.lower(
+                f"dr_{tag}_propose_tree_sample_b{b}",
+                prop_tree_sample_fn,
+                [
+                    ("dparams", d_structs),
+                    ("hidden", [f32((b, d))]),
+                    ("u", [f32((b, n_tree))]),
+                    ("level", [i32((n_tree,))]),
+                    ("rank", [i32((n_tree,))]),
                     ("temp", [f32()]),
                     ("mode", [i32()]),
                 ],

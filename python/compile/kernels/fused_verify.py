@@ -248,3 +248,331 @@ def fused_verify(
     return jax.vmap(row, in_axes=(0, 0, 0, 0, 0, None, None, None))(
         logits, q, drafted, u_acc, u_samp, temp, mode, k_active
     )
+
+
+# ---------------------------------------------------------------------------
+# multi-candidate (tree) verify
+# ---------------------------------------------------------------------------
+#
+# Blocked realization of `verify_device._tree_verify_row` for one
+# sequence, reusing the chain kernel's structure: every vocab-sized
+# object streams through VMEM tiles, only the walk's state lands in HBM.
+# The residual walk is data-dependent, so the grid grows one phase per
+# node slot:
+#
+#   phase 0        online softmax stats (m, s, running argmax) for the
+#                  T = N+1 block rows plus the q(x) gathers per node;
+#   phase 1        with the normalizers final: materialize the root's
+#                  residual r = p[0] and gather r(x_0);
+#   phase 2+i      scan step for node i: the O(1) accept/reject/skip
+#                  decision happens once (first vocab block) from the
+#                  carries, then every block applies the residual update
+#                  r <- max(r - z·q_i, 0) (reject) or the pristine-row
+#                  reset r <- p[i+1] (accept), accumulating the new mass
+#                  and the next candidate's r(x_{i+1}) gather in the same
+#                  pass;
+#   final phase    the two inverse-CDF selections with running-cumsum
+#                  carries: over r at threshold u·z (the unified
+#                  residual/bonus emission) and over the pristine stop
+#                  row at u (the empty-residual fallback).
+#
+# The [T]-level epilogue (mode dispatch, token scatter) is plain jnp.
+
+
+def _sread(ref):
+    return ref[...][0]
+
+
+def _swrite(ref, v):
+    ref[...] = jnp.reshape(v, (1,)).astype(ref.dtype)
+
+
+def _tree_verify_kernel(
+    z_ref, q_ref, drafted_ref, parents_ref, uacc_ref, usamp_ref, inv_ref,
+    mode_ref, nact_ref,
+    m_ref, s_ref, amax_ref, qx_ref, r_ref,
+    rx_ref, z_c_ref, zeff_ref, zone_ref, cur_ref, npath_ref, path_ref,
+    stop_ref, dec_ref,
+    cumr_ref, cump_ref, selr_ref, lastr_ref, selp_ref, lastp_ref, thr_ref,
+    *, vb: int, n: int,
+):
+    ph = pl.program_id(0)
+    j = pl.program_id(1)
+    z = z_ref[...]            # [T, Vb] raw logits tile
+    q = q_ref[...]            # [T, Vb] draft probs (zero row appended)
+    drafted = drafted_ref[...]
+    parents = parents_ref[...]
+    inv = inv_ref[...]
+    cols = j * vb + jax.lax.iota(jnp.int32, vb)
+
+    @pl.when((ph == 0) & (j == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], -1e30)
+        s_ref[...] = jnp.zeros_like(s_ref[...])
+        amax_ref[...] = jnp.zeros_like(amax_ref[...])
+        qx_ref[...] = jnp.zeros_like(qx_ref[...])
+        rx_ref[...] = jnp.zeros_like(rx_ref[...])
+        z_c_ref[...] = jnp.zeros_like(z_c_ref[...])
+        zeff_ref[...] = jnp.ones_like(zeff_ref[...])
+        zone_ref[...] = jnp.ones_like(zone_ref[...])
+        cur_ref[...] = jnp.full_like(cur_ref[...], -1)
+        npath_ref[...] = jnp.zeros_like(npath_ref[...])
+        path_ref[...] = jnp.full_like(path_ref[...], -1)
+        stop_ref[...] = jnp.zeros_like(stop_ref[...])
+        dec_ref[...] = jnp.zeros_like(dec_ref[...])
+        cumr_ref[...] = jnp.zeros_like(cumr_ref[...])
+        cump_ref[...] = jnp.zeros_like(cump_ref[...])
+        selr_ref[...] = jnp.full_like(selr_ref[...], -1)
+        lastr_ref[...] = jnp.full_like(lastr_ref[...], -1)
+        selp_ref[...] = jnp.full_like(selp_ref[...], -1)
+        lastp_ref[...] = jnp.full_like(lastp_ref[...], -1)
+        thr_ref[...] = jnp.zeros_like(thr_ref[...])
+
+    @pl.when(ph == 0)
+    def _stats():
+        m_old = m_ref[...]
+        blk_m = jnp.max(z, axis=-1)
+        blk_am = jnp.argmax(z, axis=-1).astype(jnp.int32)
+        m_new = jnp.maximum(m_old, blk_m)
+        s_ref[...] = s_ref[...] * jnp.exp((m_old - m_new) * inv) + jnp.sum(
+            jnp.exp((z - m_new[:, None]) * inv[:, None]), axis=-1
+        )
+        m_ref[...] = m_new
+        amax_ref[...] = jnp.where(blk_m > m_old, j * vb + blk_am, amax_ref[...])
+        hit = cols[None, :] == drafted[:, None]
+        qx_ref[...] += jnp.sum(jnp.where(hit, q, 0.0), axis=-1)
+
+    def p_row(row_idx):
+        zr = jnp.take(z, row_idx, axis=0)
+        mr = jnp.take(m_ref[...], row_idx)
+        sr = jnp.take(s_ref[...], row_idx)
+        ir = jnp.take(inv, row_idx)
+        return jnp.exp((zr - mr) * ir) / sr
+
+    @pl.when(ph == 1)
+    def _init_root_residual():
+        r_blk = p_row(jnp.int32(0))
+        r_ref[...] = r_blk
+        hit = cols == drafted[0]
+        rx_ref[...] += jnp.sum(jnp.where(hit, r_blk, 0.0))[None]
+
+    is_step = (ph >= 2) & (ph < 2 + n)
+    i = ph - 2  # node slot this step scans
+
+    @pl.when(is_step & (j == 0))
+    def _decide():
+        stop = _sread(stop_ref)
+        cur = _sread(cur_ref)
+        par = jnp.take(parents, i)
+        nact = nact_ref[...][0]
+        scanning = (stop == 0) & (i < nact)
+        exhausted = scanning & (par > cur)
+        is_child = scanning & (par == cur)
+        zone = _sread(zone_ref)
+        z_eff = jnp.where(zone == 1, 1.0, _sread(z_c_ref))
+        rx = _sread(rx_ref)
+        qx_i = jnp.take(qx_ref[...], i)
+        x = jnp.take(drafted, i)
+        mode = mode_ref[...][0]
+        beta_sto = jnp.where(
+            qx_i > 0,
+            jnp.minimum(1.0, rx / jnp.maximum(z_eff * qx_i, 1e-30)),
+            0.0,
+        )
+        beta_gd = jnp.minimum(1.0, rx / z_eff)
+        agree = jnp.take(amax_ref[...], cur + 1) == x
+        acc_prob = jnp.where(
+            mode == VD.MODE_GREEDY,
+            agree.astype(jnp.float32),
+            jnp.where(mode == VD.MODE_GREEDY_DRAFT, beta_gd, beta_sto),
+        )
+        accept = is_child & (jnp.take(uacc_ref[...], i) < acc_prob)
+        reject = is_child & ~accept
+        _swrite(dec_ref, jnp.where(accept, 1, jnp.where(reject, 2, 0)))
+        _swrite(zeff_ref, z_eff)
+        stop_new = (stop == 1) | exhausted | (i >= nact)
+        _swrite(stop_ref, jnp.where(stop_new, 1, 0))
+        npath = _sread(npath_ref)
+        path_ref[...] = jnp.where(
+            accept, path_ref[...].at[npath].set(i), path_ref[...]
+        )
+        _swrite(npath_ref, npath + accept.astype(jnp.int32))
+        _swrite(cur_ref, jnp.where(accept, i, cur))
+        _swrite(zone_ref, jnp.where(accept, 1, jnp.where(reject, 0, zone)))
+        _swrite(z_c_ref, jnp.where(reject, 0.0, _sread(z_c_ref)))
+        _swrite(rx_ref, 0.0)
+
+    @pl.when(is_step)
+    def _step_update():
+        dec = _sread(dec_ref)
+        z_eff = _sread(zeff_ref)
+        r_blk = r_ref[...]
+        r_rej = jnp.maximum(r_blk - z_eff * jnp.take(q, i, axis=0), 0.0)
+        r_new = jnp.where(
+            dec == 1, p_row(i + 1), jnp.where(dec == 2, r_rej, r_blk)
+        )
+        r_ref[...] = r_new
+        z_c_ref[...] += jnp.where(dec == 2, jnp.sum(r_rej), 0.0)[None]
+        nxt = jnp.take(drafted, jnp.minimum(i + 1, n))
+        rx_ref[...] += jnp.sum(jnp.where(cols == nxt, r_new, 0.0))[None]
+
+    ph_final = 2 + n
+
+    @pl.when((ph == ph_final) & (j == 0))
+    def _final_init():
+        z_eff = jnp.where(_sread(zone_ref) == 1, 1.0, _sread(z_c_ref))
+        _swrite(zeff_ref, z_eff)
+        _swrite(thr_ref, usamp_ref[...][0] * z_eff)
+
+    @pl.when(ph == ph_final)
+    def _select():
+        r_blk = r_ref[...]
+        t = _sread(thr_ref)
+        c = _sread(cumr_ref) + jnp.cumsum(r_blk)
+        hit = c >= t
+        any_hit = jnp.any(hit)
+        first = j * vb + jnp.argmax(hit).astype(jnp.int32)
+        selr_ref[...] = jnp.where(
+            (_sread(selr_ref) < 0) & any_hit, first, _sread(selr_ref)
+        )[None]
+        nz = r_blk > 0
+        last = j * vb + (vb - 1) - jnp.argmax(jnp.flip(nz)).astype(jnp.int32)
+        lastr_ref[...] = jnp.where(jnp.any(nz), last, _sread(lastr_ref))[None]
+        cumr_ref[...] += jnp.sum(r_blk)[None]
+
+        p_stop = p_row(_sread(cur_ref) + 1)
+        u = usamp_ref[...][0]
+        cp = _sread(cump_ref) + jnp.cumsum(p_stop)
+        hitp = cp >= u
+        firstp = j * vb + jnp.argmax(hitp).astype(jnp.int32)
+        selp_ref[...] = jnp.where(
+            (_sread(selp_ref) < 0) & jnp.any(hitp), firstp, _sread(selp_ref)
+        )[None]
+        nzp = p_stop > 0
+        lastp = j * vb + (vb - 1) - jnp.argmax(jnp.flip(nzp)).astype(jnp.int32)
+        lastp_ref[...] = jnp.where(jnp.any(nzp), lastp, _sread(lastp_ref))[None]
+        cump_ref[...] += jnp.sum(p_stop)[None]
+
+
+def tree_verify_row(
+    logits: jax.Array,    # [N+1, V] target logits for the tree block
+    q: jax.Array,         # [N, V] per-node full-vocab draft distributions
+    drafted: jax.Array,   # [N] i32 candidate ids
+    parents: jax.Array,   # [N] i32 node parents (-1 root; padding = self)
+    u_acc: jax.Array,     # [N] accept uniforms
+    u_samp: jax.Array,    # [] sample uniform
+    temp: jax.Array,
+    mode: jax.Array,
+    n_active: jax.Array,
+    vocab_block: int = VOCAB_BLOCK,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One sequence's blocked tree-verify round; matches
+    `verify_device._tree_verify_row` (tested)."""
+    k1, v = logits.shape
+    n = q.shape[0]
+    vb = _pick_block(v, vocab_block)
+    nvb = v // vb
+    inv = 1.0 / jnp.maximum(temp, 1e-3)
+    inv_full = jnp.broadcast_to(inv, (k1,)).astype(logits.dtype)
+    q_pad = jnp.concatenate([q, jnp.zeros((k1 - n, v), q.dtype)], axis=0)
+    drafted_pad = jnp.concatenate(
+        [drafted.astype(jnp.int32), jnp.zeros((k1 - n,), jnp.int32)], axis=0
+    )
+    # padding slots are their own parents: inert by the topology contract
+    parents_pad = jnp.concatenate(
+        [
+            parents.astype(jnp.int32),
+            n + jax.lax.iota(jnp.int32, k1 - n),
+        ],
+        axis=0,
+    )
+    uacc_pad = jnp.concatenate(
+        [u_acc.astype(logits.dtype), jnp.zeros((k1 - n,), logits.dtype)], axis=0
+    )
+    usamp_full = jnp.broadcast_to(u_samp, (k1,)).astype(logits.dtype)
+    mode_full = jnp.broadcast_to(mode, (k1,)).astype(jnp.int32)
+    nact_full = jnp.broadcast_to(n_active, (k1,)).astype(jnp.int32)
+
+    row_spec = pl.BlockSpec((k1,), lambda ph, j: (0,))
+    mat_spec = pl.BlockSpec((k1, vb), lambda ph, j: (0, j))
+    vec_spec = pl.BlockSpec((vb,), lambda ph, j: (j,))
+    one_spec = pl.BlockSpec((1,), lambda ph, j: (0,))
+    f_row = jax.ShapeDtypeStruct((k1,), logits.dtype)
+    i_row = jax.ShapeDtypeStruct((k1,), jnp.int32)
+    f_one = jax.ShapeDtypeStruct((1,), logits.dtype)
+    i_one = jax.ShapeDtypeStruct((1,), jnp.int32)
+    kernel = functools.partial(_tree_verify_kernel, vb=vb, n=n)
+    (
+        _m, _s, amax, _qx, _r,
+        _rx, _zc, zeff, _zone, cur, npath, path_full, _stop, _dec,
+        _cumr, _cump, selr, lastr, selp, lastp, _thr,
+    ) = pl.pallas_call(
+        kernel,
+        grid=(n + 3, nvb),
+        in_specs=[
+            mat_spec, mat_spec, row_spec, row_spec, row_spec, row_spec,
+            row_spec, row_spec, row_spec,
+        ],
+        out_specs=[
+            row_spec, row_spec, row_spec, row_spec, vec_spec,
+            one_spec, one_spec, one_spec, one_spec, one_spec, one_spec,
+            row_spec, one_spec, one_spec,
+            one_spec, one_spec, one_spec, one_spec, one_spec, one_spec,
+            one_spec,
+        ],
+        out_shape=[
+            f_row, f_row, i_row, f_row, jax.ShapeDtypeStruct((v,), logits.dtype),
+            f_one, f_one, f_one, i_one, i_one, i_one,
+            i_row, i_one, i_one,
+            f_one, f_one, i_one, i_one, i_one, i_one,
+            f_one,
+        ],
+        interpret=interpret,
+    )(
+        logits, q_pad, drafted_pad, parents_pad, uacc_pad, usamp_full,
+        inv_full, mode_full, nact_full,
+    )
+
+    # [T]-level epilogue: emission dispatch + token scatter.
+    cur = cur[0]
+    npath = npath[0]
+    zeff = zeff[0]
+    sel_r = jnp.where(selr[0] >= 0, selr[0], jnp.where(lastr[0] >= 0, lastr[0], v - 1))
+    sel_p = jnp.where(selp[0] >= 0, selp[0], jnp.where(lastp[0] >= 0, lastp[0], v - 1))
+    tok_sampled = jnp.where(zeff > 0, sel_r, sel_p)
+    stop_blk = cur + 1
+    token = jnp.where(
+        mode == VD.MODE_GREEDY, jnp.take(amax, stop_blk), tok_sampled
+    ).astype(jnp.int32)
+    path = path_full[:n]
+    idx = jnp.arange(k1, dtype=jnp.int32)
+    path_pad = jnp.concatenate([path, jnp.zeros((1,), jnp.int32)])
+    drafted_at_path = jnp.take(drafted.astype(jnp.int32), jnp.clip(path_pad, 0, n - 1))
+    out = jnp.where(idx < npath, drafted_at_path, 0)
+    out = jnp.where(idx == npath, token, out)
+    return npath, path, out, stop_blk
+
+
+def tree_verify(
+    logits: jax.Array,
+    q: jax.Array,
+    drafted: jax.Array,
+    parents: jax.Array,
+    u_acc: jax.Array,
+    u_samp: jax.Array,
+    temp: jax.Array,
+    mode: jax.Array,
+    n_active: jax.Array,
+    vocab_block: int = VOCAB_BLOCK,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Batched blocked tree verify: [B, N+1, V] in,
+    (n_path [B], path [B, N], tokens [B, N+1], stop_blk [B]) out. Matches
+    `verify_device.tree_verify`."""
+    row = functools.partial(
+        tree_verify_row, vocab_block=vocab_block, interpret=interpret
+    )
+    return jax.vmap(row, in_axes=(0, 0, 0, None, 0, 0, None, None, None))(
+        logits, q, drafted, parents, u_acc, u_samp, temp, mode, n_active
+    )

@@ -164,20 +164,36 @@ def _merge_heads(x: jax.Array) -> jax.Array:
     return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
 
 
-def _jnp_attention(q, k, v, q_offset, kv_len):
+def _jnp_attention(q, k, v, q_offset, kv_len, anc=None):
     """Reference-path attention (XLA-fused); see kernels.attention for the
     Pallas version. Profiling note (DESIGN.md §7): interpret-mode Pallas in
     the serving hot path costs while-loop dispatch per tile on CPU, so the
     lowered artifacts use this path; the Pallas kernel is validated against
     the same oracle and is the real-TPU implementation.
 
-    q_offset / kv_len are [B] vectors (per-row positions)."""
+    q_offset / kv_len are [B] vectors (per-row positions). `anc` switches
+    the in-block mask from causal to tree attention: an [Sq, Sq] bool
+    ancestor mask (anc[i, j] iff block slot j is i or an ancestor of i)
+    scattered at each row's block offset — queries still see the whole
+    committed prefix (< q_offset), but within the block only their own
+    root-to-node path. A chain's ancestor mask is lower-triangular, so
+    tree attention with a chain topology IS the causal mask (tested)."""
     d = q.shape[-1]
     scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
     sq, sk = q.shape[2], k.shape[2]
+    b = q.shape[0]
     qpos = q_offset[:, None, None] + jnp.arange(sq)[None, :, None]  # [B,Sq,1]
     jpos = jnp.arange(sk)[None, None, :]  # [1,1,Sk]
-    mask = (jpos <= qpos) & (jpos < kv_len[:, None, None])  # [B,Sq,Sk]
+    if anc is None:
+        mask = (jpos <= qpos) & (jpos < kv_len[:, None, None])  # [B,Sq,Sk]
+    else:
+        prefix = jnp.broadcast_to(jpos < q_offset[:, None, None], (b, sq, sk))
+        blk = jnp.zeros((b, sq, sk), jnp.bool_)
+        for bi in range(b):  # B <= 4; unrolled per-row scatter
+            blk = jax.lax.dynamic_update_slice(
+                blk, anc[None], (bi, 0, q_offset[bi])
+            )
+        mask = prefix | blk
     scores = jnp.where(mask[:, None], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", w, v)
@@ -190,6 +206,7 @@ def attention_block(
     kv: tuple[jax.Array, jax.Array] | None,
     pos,
     use_pallas: bool = False,
+    tree=None,
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
     """Self-attention sublayer with optional external KV cache.
 
@@ -198,6 +215,12 @@ def attention_block(
       kv: optional (k_cache, v_cache) [B, H, Smax, Dh] to read/extend
       pos: ABSOLUTE position of x[:, 0] per row — scalar or [B] vector
         (the engine batches sequences of different lengths)
+      tree: optional (anc [S, S] bool, depth [S] i32) tree-attention
+        topology: RoPE positions become pos + depth (a node's position is
+        its root distance, not its block slot) and the in-block mask
+        becomes the ancestor mask; KV is still WRITTEN at the linear
+        block slots pos..pos+S-1 — the accepted path is spliced back to
+        consecutive positions after verification.
 
     Returns (attn_out [B, S, d], new (k, v) caches). Without an external
     cache, k/v are just the block's own keys (training path).
@@ -209,7 +232,10 @@ def attention_block(
     v = _split_heads(x @ lp["wv"], h)
     s = x.shape[1]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))  # [B]
-    positions = pos[:, None] + jnp.arange(s)[None, :]  # [B, S]
+    if tree is None:
+        positions = pos[:, None] + jnp.arange(s)[None, :]  # [B, S]
+    else:
+        positions = pos[:, None] + tree[1][None, :]  # [B, S] depth-based
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     if kv is None:
@@ -232,7 +258,9 @@ def attention_block(
         # used on the training path where pos == 0 for every row.
         out = attn_kernels.flash_attention(q, kc, vc, 0, s)
     else:
-        out = _jnp_attention(q, kc, vc, q_offset, kv_len)
+        out = _jnp_attention(
+            q, kc, vc, q_offset, kv_len, anc=None if tree is None else tree[0]
+        )
     return _merge_heads(out) @ lp["wo"], (kc, vc)
 
 
@@ -270,9 +298,11 @@ def ffn_block(lp: dict[str, Any], x: jax.Array, cfg: TargetConfig) -> jax.Array:
 
 
 def transformer_layer(
-    lp, x, cfg, kv=None, pos=0, use_pallas=False
+    lp, x, cfg, kv=None, pos=0, use_pallas=False, tree=None
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
-    a, new_kv = attention_block(lp, rmsnorm(x, lp["ln1"]), cfg, kv, pos, use_pallas)
+    a, new_kv = attention_block(
+        lp, rmsnorm(x, lp["ln1"]), cfg, kv, pos, use_pallas, tree
+    )
     x = x + a
     x = x + ffn_block(lp, rmsnorm(x, lp["ln2"]), cfg)
     return x, new_kv
@@ -331,11 +361,12 @@ def target_prefill(
 
 
 def target_verify(
-    params, kv: jax.Array, tokens: jax.Array, pos, cfg: TargetConfig
+    params, kv: jax.Array, tokens: jax.Array, pos, cfg: TargetConfig, tree=None
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Speculative verification step (T = K+1 tokens, or T=1 for vanilla
     decode). tokens [B, T] are written to the cache at positions
-    pos..pos+T-1 and attended causally against the valid prefix.
+    pos..pos+T-1 and attended causally against the valid prefix — or
+    with tree attention when `tree` is given (see `target_verify_tree`).
 
     Returns (logits [B, T, V], kv', feats [B, T, 3d]).
     """
@@ -345,7 +376,7 @@ def target_verify(
     new_kvs = []
     for i, lp in enumerate(params["layers"]):
         kv_i = (kv[i, 0], kv[i, 1])
-        x, kv_i = transformer_layer(lp, x, cfg, kv=kv_i, pos=pos)
+        x, kv_i = transformer_layer(lp, x, cfg, kv=kv_i, pos=pos, tree=tree)
         new_kvs.append(jnp.stack(kv_i))
         if i in taps:
             feats.append(x)
@@ -354,6 +385,29 @@ def target_verify(
     h = rmsnorm(x, params["final_norm"])
     logits = h @ params["head"]
     return logits, jnp.stack(new_kvs), jnp.concatenate(feats[:3], axis=-1)
+
+
+def target_verify_tree(
+    params, kv: jax.Array, tokens: jax.Array, pos, anc, depths, cfg: TargetConfig
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Tree-attention verification step for multi-candidate drafts.
+
+    tokens [B, T] is the tree block (slot 0 = last accepted token, slot
+    i+1 = candidate node i); `anc` [T, T] bool is the within-block
+    ancestor mask and `depths` [T] i32 the per-slot root distances (see
+    `verify_device.tree_block_topology`). Each slot attends to the
+    committed prefix plus its own root path, and its RoPE position is
+    pos + depth — so the logits at slot j give p(· | prefix, path-to-j),
+    exactly the chain contract restricted to each root-to-leaf path. KV
+    is written at the LINEAR slots pos..pos+T-1; the engine splices the
+    accepted path back to consecutive positions after the verdict.
+
+    A thin wrapper over `target_verify` (one shared body, tree-masked
+    attention) so the chain/tree bit-identity can never drift.
+
+    Returns (logits [B, T, V], kv', feats [B, T, 3d]).
+    """
+    return target_verify(params, kv, tokens, pos, cfg, tree=(anc, depths))
 
 
 # ---------------------------------------------------------------------------

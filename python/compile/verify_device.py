@@ -179,6 +179,210 @@ def fused_verify(
     )(logits, q, drafted, u_acc, u_samp, temp, mode, k_active)
 
 
+# ---------------------------------------------------------------------------
+# multi-candidate (tree) verification
+# ---------------------------------------------------------------------------
+#
+# Topology contract (kept in lockstep with `spec::sampling::TreeSpec`):
+# candidate nodes are indexed 0..N in BFS order; parents[i] is the NODE
+# index of i's parent, -1 for root children, so parents is non-decreasing
+# with parents[i] < i. The verify block prepends the root: block position
+# 0 is last_token, node i sits at block position i + 1, and padding slots
+# carry self-parents (inert: a self-parent can never equal the walk's
+# `cur`, and parent > cur stops the scan). Per round a live row draws one
+# draft uniform per node (propose), one accept uniform per node and ONE
+# sample uniform — the same fixed-count stream contract as the chain.
+
+
+def tree_block_topology(parents_blk: jax.Array, t: int) -> tuple[jax.Array, jax.Array]:
+    """Ancestor mask + depths from a block-position parent array.
+
+    parents_blk [T] i32: parent BLOCK position of each block slot; slot 0
+    (the root) is its own parent, as are padding slots. Returns
+    (anc [T, T] bool — anc[i, j] iff j is i or an ancestor of i within
+    the block — and depth [T] i32, root = 0). Walking T-1 parent hops is
+    enough for any topology that fits the block.
+    """
+    idx = jnp.arange(t, dtype=jnp.int32)
+    anc = jnp.zeros((t, t), jnp.bool_).at[idx, idx].set(True)
+    depth = jnp.zeros((t,), jnp.int32)
+    cur = idx
+    for _ in range(t - 1):
+        nxt = parents_blk[cur]
+        depth = depth + (nxt != cur).astype(jnp.int32)
+        anc = anc.at[idx, nxt].set(True)
+        cur = nxt
+    return anc, depth
+
+
+def _tree_verify_row(
+    logits: jax.Array,    # [N+1, V] target logits for the tree block
+    q: jax.Array,         # [N, V] per-node full-vocab draft distributions
+    drafted: jax.Array,   # [N] i32 full-vocab candidate ids
+    parents: jax.Array,   # [N] i32 NODE parents (-1 root; padding = self)
+    u_acc: jax.Array,     # [N] accept uniforms (one per node)
+    u_samp: jax.Array,    # [] sample uniform (residual OR bonus)
+    temp: jax.Array,
+    mode: jax.Array,
+    n_active: jax.Array,  # [] i32: live node count this round (<= N)
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One row's multi-candidate verify walk — the in-graph twin of
+    `spec::sampling::verify_tree_lazy` (same state machine, same
+    per-element formulations; see the Rust rustdoc for the rule).
+
+    Returns (n_path [] i32, path [N] i32 accepted node indices padded
+    with -1, tokens_out [N+1] i32, stop_blk [] i32 — the block position
+    whose hidden conditions the next round).
+    """
+    n1, v = logits.shape
+    n = q.shape[0]
+    p = temp_softmax(logits, temp)                       # [N+1, V]
+    amax = jnp.argmax(p, axis=-1).astype(jnp.int32)      # [N+1]
+
+    def cond(s):
+        i, cur, r, z, zone, npath, path, stop = s
+        return (i < jnp.minimum(n, n_active)) & ~stop
+
+    def body(s):
+        i, cur, r, z, zone, npath, path, stop = s
+        par = parents[i]
+        z_eff = jnp.where(zone, 1.0, z)
+        exhausted = par > cur                # BFS order: no children left
+        is_child = par == cur
+        x = drafted[i]
+        rx = r[x]
+        qi = q[i]
+        qx = qi[x]
+        beta_sto = jnp.where(
+            qx > 0, jnp.minimum(1.0, rx / jnp.maximum(z_eff * qx, 1e-30)), 0.0
+        )
+        beta_gd = jnp.minimum(1.0, rx / z_eff)
+        agree = amax[cur + 1] == x           # pristine-row argmax
+        acc_prob = jnp.where(
+            mode == MODE_GREEDY,
+            agree.astype(r.dtype),
+            jnp.where(mode == MODE_GREEDY_DRAFT, beta_gd, beta_sto),
+        )
+        accept = is_child & (u_acc[i] < acc_prob)
+        reject = is_child & ~accept
+        r_rej = jnp.maximum(r - z_eff * qi, 0.0)
+        r_acc = p[i + 1]                     # pristine row past node i
+        r2 = jnp.where(accept, r_acc, jnp.where(reject, r_rej, r))
+        z2 = jnp.where(reject, jnp.sum(r_rej), z)
+        zone2 = jnp.where(accept, True, jnp.where(reject, False, zone))
+        path2 = jnp.where(accept, path.at[npath].set(i), path)
+        return (
+            i + 1,
+            jnp.where(accept, i, cur),
+            r2,
+            z2,
+            zone2,
+            npath + accept.astype(jnp.int32),
+            path2,
+            stop | exhausted,
+        )
+
+    state = (
+        jnp.int32(0),
+        jnp.int32(-1),
+        p[0],
+        jnp.float32(1.0),
+        jnp.bool_(True),
+        jnp.int32(0),
+        jnp.full((n,), -1, jnp.int32),
+        jnp.bool_(False),
+    )
+    _, cur, r, z, zone, npath, path, _ = jax.lax.while_loop(cond, body, state)
+
+    stop_blk = cur + 1
+    p_stop = p[stop_blk]
+    z_eff = jnp.where(zone, 1.0, z)
+    # Bonus and residual unify: the selection over r thresholded at
+    # u·z_eff IS categorical_from_uniform(p_stop, u) when r is pristine
+    # (z_eff exactly 1) and the residual selection otherwise.
+    tok_r = categorical_from_uniform(r, u_samp * z_eff)
+    tok_p = categorical_from_uniform(p_stop, u_samp)
+    tok_sampled = jnp.where(z_eff > 0, tok_r, tok_p)
+    token = jnp.where(mode == MODE_GREEDY, amax[stop_blk], tok_sampled)
+
+    idx = jnp.arange(n1, dtype=jnp.int32)
+    path_pad = jnp.concatenate([path, jnp.zeros((1,), jnp.int32)])
+    drafted_at_path = jnp.take(drafted, jnp.clip(path_pad, 0, n - 1))
+    out = jnp.where(idx < npath, drafted_at_path, 0)
+    out = jnp.where(idx == npath, token, out)
+    return npath, path, out, stop_blk
+
+
+def tree_verify(
+    logits: jax.Array,    # [B, N+1, V]
+    q: jax.Array,         # [B, N, V]
+    drafted: jax.Array,   # [B, N] i32
+    parents: jax.Array,   # [N] i32 (shared topology)
+    u_acc: jax.Array,     # [B, N]
+    u_samp: jax.Array,    # [B]
+    temp: jax.Array,
+    mode: jax.Array,
+    n_active: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Batched multi-candidate verify: (n_path [B], path [B, N],
+    tokens_out [B, N+1], stop_blk [B]) — tokens_out[b, :n_path[b]] echoes
+    the accepted path's candidates, tokens_out[b, n_path[b]] is the
+    replacement/bonus emission, exactly the chain layout."""
+    return jax.vmap(
+        _tree_verify_row, in_axes=(0, 0, 0, None, 0, 0, None, None, None)
+    )(logits, q, drafted, parents, u_acc, u_samp, temp, mode, n_active)
+
+
+def kth_argmax(probs: jax.Array, rank: jax.Array, kmax: int) -> jax.Array:
+    """rank-th-largest index per row by repeated first-occurrence
+    argmax-and-mask — formulated identically to
+    `spec::sampling::argmax_rank` so host and device enumerate greedy
+    tree candidates in the same order (ties -> lowest index first)."""
+    qq = probs
+    out = jnp.zeros(probs.shape[:-1], jnp.int32)
+    v = probs.shape[-1]
+    for j in range(kmax):
+        cur = jnp.argmax(qq, axis=-1).astype(jnp.int32)
+        out = jnp.where(rank == j, cur, out)
+        qq = jnp.where(
+            jax.nn.one_hot(cur, v, dtype=jnp.bool_), -jnp.inf, qq
+        )
+    return out
+
+
+def tree_draft_sample(
+    head_logits: jax.Array,  # [K, B, Vd] per-level draft logits
+    u: jax.Array,            # [B, N] per-node draft uniforms
+    level: jax.Array,        # [N] i32 head index per node
+    rank: jax.Array,         # [N] i32 sibling rank per node
+    temp: jax.Array,
+    mode: jax.Array,
+    n_slots: int,
+    rank_max: int,
+) -> tuple[jax.Array, list[jax.Array]]:
+    """In-graph tree candidate sampling from parallel-head logits.
+
+    Each node draws from its LEVEL's head distribution: stochastic mode
+    samples i.i.d. through the node's uniform (exactness of the
+    multi-draft rule needs candidates drawn from the per-node q, which
+    for parallel heads is the level distribution); the greedy modes take
+    the node's sibling-rank-th largest token, giving distinct top-k
+    candidates per node. Returns (tokens [B, N] i32, [N] per-node
+    full-vocab q tensors) — the q tensors flow straight into
+    `verify_tree_fused` without touching the host.
+    """
+    qh = temp_softmax(head_logits, temp)  # [K, B, Vd]
+    toks, qs = [], []
+    for i in range(n_slots):
+        qn = jnp.take(qh, level[i], axis=0)          # [B, Vd]
+        tok_sto = categorical_from_uniform(qn, u[:, i])
+        tok_top = kth_argmax(qn, rank[i], rank_max)
+        tok = jnp.where(mode == MODE_STOCHASTIC, tok_sto, tok_top)
+        toks.append(tok.astype(jnp.int32))
+        qs.append(qn)
+    return jnp.stack(toks, axis=1), qs
+
+
 def pick_hidden(feats: jax.Array, sel: jax.Array, d: int) -> jax.Array:
     """Per-row gather of the last-d feature slice at index `sel`.
 

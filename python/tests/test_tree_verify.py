@@ -1,0 +1,405 @@
+"""Multi-candidate (tree) verify correctness: the blocked Pallas walk
+(`kernels.fused_verify.tree_verify_row`) against the jnp serving graph
+(`compile.verify_device._tree_verify_row`) against a literal
+transcription of the Rust host path (`spec::sampling::verify_tree_lazy`)
+— the three implementations whose agreement the engine's tree
+host/device parity rests on — plus the topology helpers, the
+tree-attention forward and the in-graph candidate sampling.
+
+Deliberately hypothesis-free so the suite runs on minimal images; the
+randomized sweeps are seeded and exhaustive over (topology, mode).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import verify_device as VD
+from compile.kernels import fused_verify
+
+# BFS-ordered node-parent arrays (the TreeSpec contract: non-decreasing,
+# parents[i] < i, -1 = root child).
+TREES = {
+    "2x2": [-1, -1, 0, 0, 1, 1],
+    "chain7": [-1, 0, 1, 2, 3, 4, 5],
+    "mixed": [-1, -1, -1, 0, 1],
+    "single": [-1],
+}
+
+
+# ---------------------------------------------------------------------------
+# host-path mirror (keep in lockstep with spec::sampling::verify_tree_lazy)
+# ---------------------------------------------------------------------------
+
+def _host_threshold_select(r, t):
+    """Mirror of `spec::sampling::threshold_select`."""
+    c = 0.0
+    last = None
+    for i, v in enumerate(r):
+        if v > 0:
+            last = i
+        c += v
+        if c >= t:
+            return i
+    return last if last is not None else len(r) - 1
+
+
+def _host_tree_verify(logits, q, drafted, parents, u_acc, u_samp, temp, mode, n_active):
+    """Mirror of `spec::sampling::verify_tree_lazy` (the Rust host walk)."""
+    n1, _ = logits.shape
+    n = len(parents)
+
+    def softmax_t(z, t):
+        z = (z - z.max()) * (1.0 / max(t, 1e-3))
+        e = np.exp(z)
+        return e / e.sum()
+
+    p = np.stack([softmax_t(logits[j], temp) for j in range(n1)])
+    cur = -1
+    r = p[0].copy()
+    z, zone = 1.0, True
+    path = []
+    i = 0
+    while i < min(n, n_active):
+        par = parents[i]
+        if par > cur:
+            break  # BFS order: no children of cur remain
+        if par < cur:
+            i += 1
+            continue
+        x = drafted[i]
+        z_eff = 1.0 if zone else z
+        qi = q[i]
+        # an emptied residual (z == 0) rejects every remaining candidate
+        if mode == VD.MODE_GREEDY:
+            ok = int(np.argmax(p[cur + 1])) == x
+        elif mode == VD.MODE_STOCHASTIC:
+            ok = u_acc[i] < (
+                min(1.0, r[x] / (z_eff * qi[x]))
+                if qi[x] > 0 and z_eff > 0
+                else 0.0
+            )
+        else:  # greedy-draft: q treated as 1
+            ok = z_eff > 0 and u_acc[i] < min(1.0, r[x] / z_eff)
+        if ok:
+            cur = i
+            path.append(i)
+            r = p[i + 1].copy()
+            zone = True
+        else:
+            r = np.maximum(r - z_eff * qi, 0.0)
+            z = float(r.sum())
+            zone = False
+        i += 1
+    z_eff = 1.0 if zone else z
+    if mode == VD.MODE_GREEDY:
+        tok = int(np.argmax(p[cur + 1]))
+    elif z_eff > 0:
+        tok = _host_threshold_select(r, u_samp * z_eff)
+    else:
+        tok = _host_threshold_select(p[cur + 1], u_samp)
+    return len(path), path, tok, cur + 1
+
+
+def _rand_case(rng, parents, v=64):
+    n = len(parents)
+    logits = rng.normal(0, 2, (n + 1, v)).astype(np.float32)
+    q = np.asarray(
+        jax.nn.softmax(jnp.asarray(rng.normal(0, 2, (n, v)), jnp.float32))
+    )
+    drafted = rng.integers(0, v, n).astype(np.int32)
+    u_acc = rng.random(n).astype(np.float32)
+    u_samp = np.float32(rng.random())
+    return logits, q, drafted, u_acc, u_samp
+
+
+# ---------------------------------------------------------------------------
+# three-way agreement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tree", sorted(TREES))
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_graph_matches_host_walk(tree, mode):
+    parents = TREES[tree]
+    n = len(parents)
+    rng = np.random.default_rng(500 + 10 * mode + n)
+    for trial in range(25):
+        temp = float(rng.choice([0.7, 1.0, 1.5]))
+        n_active = int(rng.integers(1, n + 1))
+        logits, q, drafted, u_acc, u_samp = _rand_case(rng, parents)
+        np_, path, out, stop = VD._tree_verify_row(
+            jnp.asarray(logits), jnp.asarray(q), jnp.asarray(drafted),
+            jnp.asarray(parents, jnp.int32), jnp.asarray(u_acc),
+            jnp.asarray(u_samp), jnp.float32(temp), jnp.int32(mode),
+            jnp.int32(n_active),
+        )
+        hn, hpath, htok, hstop = _host_tree_verify(
+            logits.astype(np.float64), q.astype(np.float64), drafted,
+            parents, u_acc, float(u_samp), temp, mode, n_active,
+        )
+        assert int(np_) == hn, (tree, trial)
+        assert list(np.asarray(path)[:hn]) == hpath, (tree, trial)
+        assert int(np.asarray(out)[hn]) == htok, (tree, trial)
+        assert int(stop) == hstop, (tree, trial)
+        # echo layout: accepted candidates then the emission
+        np.testing.assert_array_equal(
+            np.asarray(out)[:hn], drafted[np.asarray(hpath, int)]
+        )
+
+
+@pytest.mark.parametrize("tree", ["2x2", "chain7", "mixed"])
+@pytest.mark.parametrize("vb", [16, 64])
+def test_kernel_matches_graph(tree, vb):
+    parents = TREES[tree]
+    n = len(parents)
+    rng = np.random.default_rng(700 + n + vb)
+    for mode in (0, 1, 2):
+        for trial in range(6):
+            temp = float(rng.choice([0.7, 1.0, 1.5]))
+            n_active = int(rng.integers(1, n + 1))
+            logits, q, drafted, u_acc, u_samp = _rand_case(rng, parents)
+            args = (
+                jnp.asarray(logits), jnp.asarray(q), jnp.asarray(drafted),
+                jnp.asarray(parents, jnp.int32), jnp.asarray(u_acc),
+                jnp.asarray(u_samp), jnp.float32(temp), jnp.int32(mode),
+                jnp.int32(n_active),
+            )
+            ng, pg, outg, sbg = VD._tree_verify_row(*args)
+            nk, pk, outk, sbk = fused_verify.tree_verify_row(*args, vocab_block=vb)
+            assert int(nk) == int(ng), (tree, mode, trial)
+            np.testing.assert_array_equal(np.asarray(pk), np.asarray(pg))
+            np.testing.assert_array_equal(
+                np.asarray(outk)[: int(ng) + 1], np.asarray(outg)[: int(ng) + 1]
+            )
+            assert int(sbk) == int(sbg)
+
+
+def test_chain_topology_degenerates_to_chain_verify():
+    """A chain TreeSpec through the tree rule == the chain `_verify_row`
+    (same uniforms -> same accepted prefix, same emitted token)."""
+    k1, v = 8, 64
+    k = k1 - 1
+    parents = np.arange(-1, k - 1, dtype=np.int32)
+    rng = np.random.default_rng(11)
+    for mode in (0, 1, 2):
+        for trial in range(20):
+            temp = float(rng.choice([0.7, 1.0, 1.5]))
+            k_active = int(rng.integers(1, k + 1))
+            logits, q, drafted, u_acc, u_samp = _rand_case(rng, list(parents))
+            chain_args = (
+                jnp.asarray(logits), jnp.asarray(q), jnp.asarray(drafted),
+                jnp.asarray(u_acc), jnp.asarray(u_samp), jnp.float32(temp),
+                jnp.int32(mode), jnp.int32(k_active),
+            )
+            na, toks = VD._verify_row(*chain_args)
+            nt, _, outt, _ = VD._tree_verify_row(
+                jnp.asarray(logits), jnp.asarray(q), jnp.asarray(drafted),
+                jnp.asarray(parents), jnp.asarray(u_acc), jnp.asarray(u_samp),
+                jnp.float32(temp), jnp.int32(mode), jnp.int32(k_active),
+            )
+            assert int(na) == int(nt), (mode, trial)
+            np.testing.assert_array_equal(
+                np.asarray(toks)[: int(na) + 1], np.asarray(outt)[: int(na) + 1]
+            )
+
+
+# ---------------------------------------------------------------------------
+# exactness
+# ---------------------------------------------------------------------------
+
+def test_two_candidate_tree_preserves_target():
+    """The multi-draft rule with two i.i.d. candidates emits exactly p
+    (SpecInfer/MCSD recursive-rejection invariant) — the tree analog of
+    the chain Leviathan test."""
+    rng = np.random.default_rng(21)
+    v = 16
+    logits = rng.normal(0, 2, (3, v)).astype(np.float32)
+    logits[2] = logits[1]  # bonus rows never counted below
+    q0 = np.asarray(
+        jax.nn.softmax(jnp.asarray(rng.normal(0, 2, (v,)), jnp.float32))
+    ).astype(np.float64)
+
+    def p_of(z):
+        e = np.exp(z - z.max())
+        return e / e.sum()
+
+    p = p_of(logits[0].astype(np.float64))
+    parents = jnp.asarray([-1, -1], jnp.int32)
+    nsamp = 40_000
+    drafted = np.stack(
+        [
+            [_host_threshold_select(q0, u1), _host_threshold_select(q0, u2)]
+            for u1, u2 in rng.random((nsamp, 2))
+        ]
+    ).astype(np.int32)
+    np_, path, out, _ = VD.tree_verify(
+        jnp.broadcast_to(jnp.asarray(logits), (nsamp, 3, v)),
+        jnp.broadcast_to(jnp.asarray(q0, jnp.float32)[None, None], (nsamp, 2, v)),
+        jnp.asarray(drafted),
+        parents,
+        jnp.asarray(rng.random((nsamp, 2)), jnp.float32),
+        jnp.asarray(rng.random(nsamp), jnp.float32),
+        jnp.float32(1.0), jnp.int32(1), jnp.int32(2),
+    )
+    emitted = np.asarray(out)[:, 0]  # first accepted candidate or replacement
+    counts = np.bincount(emitted, minlength=v) / nsamp
+    np.testing.assert_allclose(counts, p, atol=0.012)
+    # with two candidates some rounds must accept the SECOND sibling
+    first_nodes = np.asarray(path)[:, 0]
+    accepted = np.asarray(np_) > 0
+    assert (first_nodes[accepted] == 1).any()
+
+
+@pytest.mark.parametrize("mode", [1, 2])
+def test_empty_residual_rejects_remaining_siblings(mode):
+    """Once rejected siblings cover the whole target row (z == 0), the
+    remaining candidates must be rejected — no 0/0 acceptance — and the
+    emission falls back to the pristine row. Pins graph == kernel ==
+    host mirror on the edge the clamped/NaN arithmetic has to agree on
+    (the fixture matches `tree_verify_empty_residual_rejects_remaining_
+    siblings` in spec::sampling)."""
+    v = 4
+    parents = [-1, -1, -1]
+    logits = np.log(
+        np.asarray(
+            [
+                [0.5, 0.25, 0.25, 1.0],
+                [0.25, 0.25, 0.25, 0.25],
+                [0.25, 0.25, 0.25, 0.25],
+                [0.25, 0.25, 0.25, 0.25],
+            ],
+            np.float32,
+        )
+    )
+    logits[0, 3] = -1e4  # exp underflows to an EXACT zero in f32 and f64
+    q = np.asarray(
+        [[1, 0, 0, 0], [0, 0.5, 0.5, 0], [0, 1, 0, 0]], np.float32
+    )
+    drafted = np.asarray([0, 3, 1], np.int32)
+    u_acc = np.asarray([0.9, 0.999, 0.0], np.float32)
+    u_samp = np.float32(0.6)
+    args = (
+        jnp.asarray(logits), jnp.asarray(q), jnp.asarray(drafted),
+        jnp.asarray(parents, jnp.int32), jnp.asarray(u_acc),
+        jnp.asarray(u_samp), jnp.float32(1.0), jnp.int32(mode), jnp.int32(3),
+    )
+    ng, pg, outg, _ = VD._tree_verify_row(*args)
+    nk, _, outk, _ = fused_verify.tree_verify_row(*args, vocab_block=v)
+    hn, _, htok, _ = _host_tree_verify(
+        logits.astype(np.float64), q.astype(np.float64), drafted,
+        parents, u_acc, float(u_samp), 1.0, mode, 3,
+    )
+    assert int(ng) == 0 and int(nk) == 0 and hn == 0
+    # all three fall back to the pristine root row's inverse CDF
+    assert int(np.asarray(outg)[0]) == htok == int(np.asarray(outk)[0])
+
+
+# ---------------------------------------------------------------------------
+# topology + attention + sampling helpers
+# ---------------------------------------------------------------------------
+
+def test_tree_block_topology():
+    # 2x2 tree in block coordinates (+ a self-parent pad slot)
+    pb = jnp.asarray([0, 0, 0, 1, 1, 2, 2, 7], jnp.int32)
+    anc, depth = VD.tree_block_topology(pb, 8)
+    anc, depth = np.asarray(anc), np.asarray(depth)
+    assert list(depth) == [0, 1, 1, 2, 2, 2, 2, 0]
+    assert anc[3, 0] and anc[3, 1] and anc[3, 3]
+    assert not anc[3, 2] and not anc[3, 4]
+    assert anc[6, 2] and anc[6, 0] and not anc[6, 1]
+    # pad slot: itself only (plus the prefix, handled by the mask)
+    assert anc[7, 7] and not anc[7, :7].any()
+    # chain block parents give the causal (lower-triangular) mask
+    anc_c, depth_c = VD.tree_block_topology(
+        jnp.asarray([0, 0, 1, 2, 3, 4, 5, 6], jnp.int32), 8
+    )
+    assert np.array_equal(np.asarray(anc_c), np.tril(np.ones((8, 8), bool)))
+    assert list(np.asarray(depth_c)) == list(range(8))
+
+
+def test_tree_attention_chain_equals_causal_verify():
+    """`target_verify_tree` with a chain topology is BIT-IDENTICAL to
+    `target_verify` — tree attention generalizes the causal mask."""
+    cfg = M.TARGETS["dense-s"]
+    params = M.init_target(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    b, t, sp = 2, 8, 12
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (b, 32)), jnp.int32)
+    _, kv, _ = M.target_prefill(params, prompt, jnp.int32(sp), cfg)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (b, t)), jnp.int32)
+    pos = jnp.asarray([sp, sp - 2], jnp.int32)
+    lg_c, kv_c, ft_c = M.target_verify(params, kv, tokens, pos, cfg)
+    anc, depth = VD.tree_block_topology(
+        jnp.asarray([0, 0, 1, 2, 3, 4, 5, 6], jnp.int32), t
+    )
+    lg_t, kv_t, ft_t = M.target_verify_tree(params, kv, tokens, pos, anc, depth, cfg)
+    assert float(jnp.max(jnp.abs(lg_c - lg_t))) == 0.0
+    assert float(jnp.max(jnp.abs(kv_c - kv_t))) == 0.0
+    assert float(jnp.max(jnp.abs(ft_c - ft_t))) == 0.0
+
+
+def test_tree_attention_siblings_are_independent():
+    """Sibling candidates must NOT see each other: swapping sibling 2's
+    token cannot change sibling 1's logits row."""
+    cfg = M.TARGETS["dense-s"]
+    params = M.init_target(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(4)
+    b, t, sp = 1, 8, 12
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (b, 32)), jnp.int32)
+    _, kv, _ = M.target_prefill(params, prompt, jnp.int32(sp), cfg)
+    anc, depth = VD.tree_block_topology(
+        jnp.asarray([0, 0, 0, 1, 1, 2, 2, 7], jnp.int32), t
+    )
+    toks = rng.integers(0, cfg.vocab, (b, t)).astype(np.int32)
+    toks2 = toks.copy()
+    toks2[0, 2] = (toks2[0, 2] + 1) % cfg.vocab  # perturb sibling node 1
+    pos = jnp.asarray([sp], jnp.int32)
+    lg1, _, _ = M.target_verify_tree(params, kv, jnp.asarray(toks), pos, anc, depth, cfg)
+    lg2, _, _ = M.target_verify_tree(params, kv, jnp.asarray(toks2), pos, anc, depth, cfg)
+    # slot 1 (node 0) and its subtree slots 3,4 are unchanged…
+    for slot in (0, 1, 3, 4):
+        np.testing.assert_array_equal(np.asarray(lg1)[0, slot], np.asarray(lg2)[0, slot])
+    # …while the perturbed slot's own logits move
+    assert float(jnp.max(jnp.abs(lg1[0, 2] - lg2[0, 2]))) > 0
+
+
+def test_kth_argmax_matches_stable_argsort():
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        p = rng.random((3, 16)).astype(np.float32)
+        for r in range(5):
+            got = np.asarray(VD.kth_argmax(jnp.asarray(p), jnp.int32(r), 5))
+            want = np.argsort(-p, axis=-1, kind="stable")[:, r]
+            np.testing.assert_array_equal(got, want)
+
+
+def test_tree_draft_sample_levels_and_ranks():
+    rng = np.random.default_rng(8)
+    kh, b, v = 3, 2, 32
+    head_logits = jnp.asarray(rng.normal(0, 2, (kh, b, v)), jnp.float32)
+    level = jnp.asarray([0, 0, 1, 1, 2, 2], jnp.int32)
+    rank = jnp.asarray([0, 1, 0, 1, 0, 1], jnp.int32)
+    u = jnp.asarray(rng.random((b, 6)), jnp.float32)
+    # greedy: node tokens are the level head's rank-th largest
+    toks, qs = VD.tree_draft_sample(
+        head_logits, u, level, rank, jnp.float32(1.0), jnp.int32(0), 6, 6
+    )
+    qh = np.asarray(jax.nn.softmax(head_logits))
+    assert len(qs) == 6
+    for i in range(6):
+        lvl, rk = int(level[i]), int(rank[i])
+        np.testing.assert_allclose(np.asarray(qs[i]), qh[lvl], rtol=1e-6)
+        want = np.argsort(-qh[lvl], axis=-1, kind="stable")[:, rk]
+        np.testing.assert_array_equal(np.asarray(toks)[:, i], want)
+    # stochastic: per-node inverse-CDF draws through the node's uniform
+    toks_s, _ = VD.tree_draft_sample(
+        head_logits, u, level, rank, jnp.float32(1.0), jnp.int32(1), 6, 6
+    )
+    for i in range(6):
+        for row in range(b):
+            want = _host_threshold_select(
+                qh[int(level[i])][row].astype(np.float64), float(u[row, i])
+            )
+            assert int(toks_s[row, i]) == want

@@ -15,6 +15,7 @@ use lk_spec::runtime::Runtime;
 use lk_spec::server::batcher::BatcherConfig;
 use lk_spec::server::metrics::{
     device_bytes_per_round, host_draft_bytes_per_round, host_verify_bytes_per_round,
+    tree_device_bytes_per_round, tree_host_bytes_per_round,
 };
 use lk_spec::server::{Scheduler, SimCore};
 use lk_spec::tensor::HostTensor;
@@ -98,6 +99,22 @@ fn bench_verify_transfer() -> anyhow::Result<()> {
                 format!("{:.0}x", host as f64 / dev as f64),
             ]);
         }
+    }
+    // Multi-candidate rounds (the default 2x2 MEDUSA tree, N = 6 nodes):
+    // host traffic still scales with the vocabulary, the fused tree path
+    // stays O(B·N) ints.
+    for b in [1usize, 4] {
+        let n = 6;
+        let host = tree_host_bytes_per_round(b, vt, vocab, f3, 6);
+        let dev = tree_device_bytes_per_round(b, n, vt);
+        table.row(vec![
+            "medusa-tree(2x2)".to_string(),
+            b.to_string(),
+            n.to_string(),
+            host.to_string(),
+            dev.to_string(),
+            format!("{:.0}x", host as f64 / dev as f64),
+        ]);
     }
     table.emit("verify_transfer")?;
     Ok(())

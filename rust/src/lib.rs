@@ -7,8 +7,8 @@
 //! (pluggable `DraftBackend` architectures, continuous-batching
 //! scheduler with mid-flight join/leave over slot-mapped KV rows, exact
 //! rejection sampling). Python/JAX only ever runs at build time
-//! (`make artifacts`); every runtime path is Rust driving AOT-compiled
-//! XLA executables through PJRT.
+//! (`python3 -m compile.aot`); every runtime path is Rust driving
+//! AOT-compiled XLA executables through PJRT.
 //!
 //! See DESIGN.md for the system inventory and experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.

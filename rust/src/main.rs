@@ -66,7 +66,7 @@ fn print_help() {
            train-draft   --draft A@T --loss L | --all  [--steps N]\n\
            eval          --draft A@T --loss L [--domain D] [--mode t0|t1|t1gd] [--k K]\n\
            eval-all      run every paper-table cell (idempotent, cached)\n\
-           serve         --draft A@T --loss L [--requests N] — router demo\n\
+           serve         --draft A@T --loss L [--requests N] [--tree FxF] — router demo\n\
            report        print cached result cells\n\
          \n\
          common options: --artifacts DIR (default artifacts), --runs DIR\n\
@@ -304,6 +304,12 @@ fn serve_demo(args: &Args) -> Result<()> {
     let loss = args.opt_or("loss", "lkl-eta3").to_string();
     let n_requests = args.opt_usize("requests", 12)?;
     let max_new = args.opt_usize("max-new", 32)?;
+    // Multi-candidate drafting: per-level fanouts, e.g. --tree 2x2
+    // (parallel-head drafts only; see DESIGN.md §3).
+    let tree = args
+        .opt("tree")
+        .map(lk_spec::spec::sampling::TreeSpec::parse)
+        .transpose()?;
     args.finish()?;
 
     let corpus = Corpus::open(&data)?;
@@ -332,7 +338,11 @@ fn serve_demo(args: &Args) -> Result<()> {
         };
         // The engine implements SchedulerCore: the router's worker wraps
         // it in a continuous-batching Scheduler (join/leave mid-flight).
-        lk_spec::server::SpecEngine::new(rt, &draft, &tckpt, &dckpt, vocab_map, Default::default())
+        let opts = lk_spec::server::EngineOpts {
+            tree: tree.clone(),
+            ..Default::default()
+        };
+        lk_spec::server::SpecEngine::new(rt, &draft, &tckpt, &dckpt, vocab_map, opts)
     })?;
 
     info!("submitting {} requests…", prompts.len());

@@ -5,7 +5,7 @@
 //!
 //! Device verify path: each chained `step_sample` call samples its token
 //! in-graph from a host-fed uniform and keeps the full-vocab q resident
-//! for the fused verify entry; only the [B] token ids come back.
+//! for the fused verify entry; only the `[B]` token ids come back.
 
 use anyhow::{Context, Result};
 

@@ -30,10 +30,19 @@
 //! O(B·K) token ids cross to the host. The host-side `propose`/`advance`
 //! remain as the fallback for artifact sets lowered before the device
 //! entries existed (and for forced-host parity testing).
+//!
+//! A third optional duty set serves MULTI-CANDIDATE (tree) drafting
+//! (`supports_tree` / `propose_tree` / `advance_tree` plus device
+//! variants): `propose_tree` fills one candidate per
+//! [`TreeSpec`] node instead of K chain slots, and the engine verifies
+//! the whole tree in one tree-attention pass under the exact multi-draft
+//! rule (`spec::sampling::verify_tree`). The `-tree` arch suffix in
+//! [`make_backend`] selects these variants; see DESIGN.md §3/§6.
 
 pub mod medusa;
 pub mod mlp;
 pub mod recurrent;
+pub mod tree;
 
 use std::time::Instant;
 
@@ -41,7 +50,7 @@ use anyhow::{bail, Result};
 
 use crate::runtime::{pack, DraftSpec, Runtime, TargetSpec, TensorSpec};
 use crate::spec::accept::AcceptanceStats;
-use crate::spec::sampling::{self, SamplingMode};
+use crate::spec::sampling::{self, SamplingMode, TreeSpec};
 use crate::tensor::{DType, HostTensor};
 use crate::util::Pcg64;
 
@@ -129,6 +138,29 @@ impl<'rt> EngineCx<'rt> {
         }
     }
 
+    /// Tree-node variant of [`EngineCx::sample_draft`]: stochastic mode
+    /// samples i.i.d. through the node's stream draw (the exactness of
+    /// the multi-draft rule wants candidates drawn from the per-node
+    /// q), the greedy modes take the node's sibling-rank-th largest
+    /// candidate so siblings enumerate distinct top-k tokens — both
+    /// formulated identically to the device `tree_draft_sample`.
+    pub fn sample_draft_tree(
+        &self,
+        rng: &mut Pcg64,
+        q_compact: &[f32],
+        rank: usize,
+        scratch: &mut Vec<f32>,
+    ) -> usize {
+        match self.opts.mode {
+            SamplingMode::Stochastic => {
+                sampling::categorical_from_uniform(q_compact, rng.uniform() as f32)
+            }
+            SamplingMode::Greedy | SamplingMode::GreedyDraft => {
+                sampling::argmax_rank(q_compact, rank, scratch)
+            }
+        }
+    }
+
     /// The uniform a device-sampling entry receives for one row/position:
     /// a real stream draw in stochastic mode (the draw the host path
     /// would have consumed), an inert constant otherwise.
@@ -160,7 +192,7 @@ impl<'rt> EngineCx<'rt> {
 /// `GroupState`. Index contract (mirrors python/compile/drafts.py):
 /// `len` = processed target positions; `last_token` = accepted but not
 /// yet processed; a round's verify block occupies positions len..len+K
-/// and its logits[i] give p(·| …, block[..=i]).
+/// and its `logits[i]` give `p(·| …, block[..=i])`.
 pub struct SeqState {
     /// Stable request id; also keys the RNG stream, so results do not
     /// depend on batch composition or admission order.
@@ -172,7 +204,7 @@ pub struct SeqState {
     pub rng: Pcg64,
     pub stats: AcceptanceStats,
     pub done: bool,
-    /// [d] MEDUSA/MLP conditioning hidden.
+    /// `[d]` MEDUSA/MLP conditioning hidden.
     pub hidden: Vec<f32>,
     /// Recurrent archs: q-logits for draft 1 of the next round.
     pub q1: Vec<f32>,
@@ -319,7 +351,7 @@ pub trait DraftBackend {
     }
 
     /// Device-path advance. Consumes the fused verify entry's outputs by
-    /// value: `n_acc_lit` ([B] i32, doubles as the in-graph gather
+    /// value: `n_acc_lit` (`[B]` i32, doubles as the in-graph gather
     /// index), `feats` ([B, Vt, 3d]) and `h_sel` ([B, d], the
     /// verify-picked conditioning hidden). `n_acc` is the host copy with
     /// finished rows forced to 0.
@@ -336,6 +368,81 @@ pub trait DraftBackend {
         bail!("backend '{}' has no device verify path", self.name())
     }
 
+    // ------------------------------------------------------------------
+    // multi-candidate (tree) drafting (optional; default = unsupported)
+    // ------------------------------------------------------------------
+
+    /// True when this backend can propose candidate trees on the HOST
+    /// path (the engine additionally gates on the target's
+    /// `verify_tree_b{B}` / `kv_path_gather_b{B}` entries).
+    fn supports_tree(&self, _rt: &Runtime, _dspec: &DraftSpec) -> bool {
+        false
+    }
+
+    /// Tree proposal: fill `drafts[row][i]` with candidate node `i`'s
+    /// full-vocab token id and `q.row(row, i)` with the distribution it
+    /// was drawn from (the node's LEVEL head for parallel-head archs).
+    /// Stochastic mode consumes one stream draw per node per row (node
+    /// order); the greedy modes take sibling-rank-th-largest candidates
+    /// and consume none.
+    fn propose_tree(
+        &self,
+        _cx: &EngineCx,
+        _g: &mut GroupState,
+        _tree: &TreeSpec,
+        _drafts: &mut [Vec<i32>],
+        _q: &mut QFlat,
+    ) -> Result<()> {
+        bail!("backend '{}' has no tree drafting path", self.name())
+    }
+
+    /// Roll draft state past a tree round. `stop_blk[row]` is the block
+    /// position whose hidden conditions the next round (the deepest
+    /// accepted node's slot, or 0 after a full rejection); `feats` the
+    /// tree pass's `[B, T, 3d]` features.
+    fn advance_tree(
+        &self,
+        _cx: &EngineCx,
+        _g: &mut GroupState,
+        _stop_blk: &[usize],
+        _feats: &HostTensor,
+    ) -> Result<()> {
+        bail!("backend '{}' has no tree drafting path", self.name())
+    }
+
+    /// True when the manifest carries the backend's in-graph tree
+    /// sampling entries (all serve buckets).
+    fn supports_tree_device(&self, _rt: &Runtime, _dspec: &DraftSpec) -> bool {
+        false
+    }
+
+    /// Device-path tree proposal: fill `drafts` with the sampled
+    /// candidate ids (O(B·N) ints) and push the lowered arity of
+    /// per-node `[B, V]` q LITERALS onto `q_dev` — they flow straight
+    /// into `verify_tree_fused_b{B}` without touching the host.
+    fn propose_tree_device(
+        &self,
+        _cx: &EngineCx,
+        _g: &mut GroupState,
+        _tree: &TreeSpec,
+        _drafts: &mut [Vec<i32>],
+        _q_dev: &mut Vec<xla::Literal>,
+    ) -> Result<()> {
+        bail!("backend '{}' has no tree drafting path", self.name())
+    }
+
+    /// Device-path tree advance: `h_sel` is the fused entry's in-graph
+    /// hidden pickup at the stop position (KV was already path-spliced
+    /// in-graph).
+    fn advance_tree_device(
+        &self,
+        _cx: &EngineCx,
+        _g: &mut GroupState,
+        _h_sel: xla::Literal,
+    ) -> Result<()> {
+        bail!("backend '{}' has no tree drafting path", self.name())
+    }
+
     /// Copy row `src_row` of `src`'s packed draft state into row
     /// `dst_row` of `dst` (continuous-batching join). Per-sequence host
     /// state (`SeqState`) is moved by the caller.
@@ -349,13 +456,24 @@ pub trait DraftBackend {
     ) -> Result<()>;
 }
 
-/// Registry: architecture string -> backend.
+/// Registry: architecture string -> backend. The `-tree` suffix selects
+/// the multi-candidate variant of an architecture (the engine appends it
+/// when `EngineOpts::tree` is set).
 pub fn make_backend(arch: &str) -> Result<Box<dyn DraftBackend>> {
     match arch {
         "eagle3" | "mtp" => Ok(Box::new(recurrent::Recurrent)),
         "medusa" => Ok(Box::new(medusa::Medusa)),
+        "medusa-tree" => Ok(Box::new(tree::MedusaTree)),
         "mlp" => Ok(Box::new(mlp::Mlp)),
-        other => bail!("unknown draft arch '{other}'"),
+        other => match other.strip_suffix("-tree") {
+            // The engine synthesizes '<arch>-tree' from --tree; report
+            // the real cause, not the synthetic name.
+            Some(base) => bail!(
+                "draft arch '{base}' has no multi-candidate/tree backend \
+                 (tree drafting currently needs parallel heads: 'medusa')"
+            ),
+            None => bail!("unknown draft arch '{other}'"),
+        },
     }
 }
 

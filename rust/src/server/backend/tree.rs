@@ -1,0 +1,231 @@
+//! Multi-candidate (tree) drafting over MEDUSA heads.
+//!
+//! MEDUSA's K parallel heads are token-independent: head `l` predicts
+//! the token at offset `l + 1` from one conditioning hidden, regardless
+//! of which candidates were picked in between. That makes it the natural
+//! first tree backend — one `propose` pass feeds EVERY node of a
+//! candidate tree, with node `i` drawing from its LEVEL's head
+//! distribution (the classic MEDUSA tree construction; Yang et al. 2024
+//! multi-candidate speculative decoding). Verification is the engine's
+//! tree round: one tree-attention target pass judging all candidates,
+//! the exact multi-draft rejection walk (`spec::sampling::verify_tree`),
+//! then the accepted path's KV spliced back to consecutive positions.
+//!
+//! Candidate selection per node follows the fixed-uniform contract:
+//! stochastic mode samples i.i.d. from the level distribution through
+//! one host-drawn uniform per node (i.i.d. candidates + the residual
+//! updates in the verify walk keep the output distribution exactly `p`);
+//! the greedy modes enumerate distinct sibling-rank-th-largest tokens.
+//!
+//! Like the chain MEDUSA backend there is no draft-side KV: joins move
+//! only the conditioning hidden, so `bootstrap`/`adopt_row` (and the
+//! chain duties, for completeness) delegate to [`Medusa`].
+//!
+//! Device path: one `propose_tree_sample_b{B}` call samples every node
+//! in-graph and hands the per-node full-vocab q tensors straight to
+//! `verify_tree_fused_b{B}`; only the `[B, N]` candidate ids come back,
+//! and the next round's conditioning hidden is the verify pass's
+//! in-graph pickup at the stop position.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{DraftSpec, Runtime};
+use crate::spec::sampling::TreeSpec;
+use crate::tensor::HostTensor;
+
+use super::medusa::Medusa;
+use super::{
+    arg_refs, lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, pickup_hidden_advance, upload,
+    DraftBackend, EngineCx, GroupState, QFlat, DUMMY_UNIFORM,
+};
+
+pub struct MedusaTree;
+
+impl DraftBackend for MedusaTree {
+    fn name(&self) -> &'static str {
+        "medusa-tree"
+    }
+
+    /// Depth cap: a path accepts at most one node per trained head.
+    fn max_k(&self, rt: &Runtime, dspec: &DraftSpec) -> usize {
+        Medusa.max_k(rt, dspec)
+    }
+
+    fn bootstrap(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        tok_flat: &[i32],
+        feats: &HostTensor,
+    ) -> Result<()> {
+        Medusa.bootstrap(cx, g, tok_flat, feats)
+    }
+
+    fn propose(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &mut [Vec<i32>],
+        q: &mut QFlat,
+    ) -> Result<()> {
+        Medusa.propose(cx, g, drafts, q)
+    }
+
+    fn advance(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &[Vec<i32>],
+        n_acc: &[usize],
+        feats: &HostTensor,
+    ) -> Result<()> {
+        Medusa.advance(cx, g, drafts, n_acc, feats)
+    }
+
+    fn adopt_row(
+        &self,
+        cx: &EngineCx,
+        dst: &mut GroupState,
+        dst_row: usize,
+        src: &GroupState,
+        src_row: usize,
+    ) -> Result<()> {
+        Medusa.adopt_row(cx, dst, dst_row, src, src_row)
+    }
+
+    // ------------------------------------------------------------------
+    // tree duties
+    // ------------------------------------------------------------------
+
+    fn supports_tree(&self, rt: &Runtime, dspec: &DraftSpec) -> bool {
+        rt.manifest
+            .serve_batches
+            .iter()
+            .all(|&b| rt.has_draft_entry(&dspec.name, &format!("propose_b{b}")))
+    }
+
+    fn propose_tree(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        tree: &TreeSpec,
+        drafts: &mut [Vec<i32>],
+        q: &mut QFlat,
+    ) -> Result<()> {
+        let b = g.b;
+        let n = tree.len();
+        let d = cx.tspec.d_model;
+        let vocab = cx.tspec.vocab;
+        let propose = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("propose_b{b}"))?;
+        let mut hidden = vec![0f32; b * d];
+        for (row, seq) in g.seqs.iter().enumerate() {
+            hidden[row * d..(row + 1) * d].copy_from_slice(&seq.hidden);
+        }
+        let dyn_in = [lit_f32(&[b, d], &hidden)?];
+        let dyn_b = upload(cx.rt, &dyn_in)?;
+        let args = arg_refs(&cx.dparams, &[], &dyn_b);
+        let outs = propose.run_bufs(&args)?;
+        let logits = propose.output_host(&outs, 0)?.as_f32(); // [K, B, V]
+        let mut rank_scratch = Vec::new();
+        for row in 0..b {
+            for node in 0..n {
+                let off = (tree.level(node) * b + row) * vocab;
+                let (full, compact) = q.slot(row, node);
+                cx.write_draft_dist(&logits[off..off + vocab], compact, full);
+                let xi = cx.sample_draft_tree(
+                    &mut g.seqs[row].rng,
+                    compact,
+                    tree.rank(node),
+                    &mut rank_scratch,
+                );
+                drafts[row][node] = cx.draft_token_id(xi);
+            }
+        }
+        Ok(())
+    }
+
+    fn advance_tree(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        stop_blk: &[usize],
+        feats: &HostTensor,
+    ) -> Result<()> {
+        // The stop position generalizes the chain's accepted-prefix
+        // boundary; the shared pickup indexes feats by block slot.
+        pickup_hidden_advance(cx, g, stop_blk, feats);
+        Ok(())
+    }
+
+    fn supports_tree_device(&self, rt: &Runtime, dspec: &DraftSpec) -> bool {
+        rt.manifest
+            .serve_batches
+            .iter()
+            .all(|&b| rt.has_draft_entry(&dspec.name, &format!("propose_tree_sample_b{b}")))
+    }
+
+    fn propose_tree_device(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        tree: &TreeSpec,
+        drafts: &mut [Vec<i32>],
+        q_dev: &mut Vec<xla::Literal>,
+    ) -> Result<()> {
+        let b = g.b;
+        let n = tree.len();
+        let kq = cx.rt.manifest.verify_t - 1; // node slots the entry was lowered with
+        // Node-order uniform draws mirror the host path's per-row loop;
+        // slots beyond this tree get inert constants.
+        let mut u = vec![DUMMY_UNIFORM; b * kq];
+        for (row, seq) in g.seqs.iter_mut().enumerate() {
+            for i in 0..n {
+                u[row * kq + i] = cx.draft_uniform(&mut seq.rng);
+            }
+        }
+        let level: Vec<i32> = (0..kq)
+            .map(|i| if i < n { tree.level(i) as i32 } else { 0 })
+            .collect();
+        let rank: Vec<i32> = (0..kq)
+            .map(|i| if i < n { tree.rank(i) as i32 } else { 0 })
+            .collect();
+        let propose = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("propose_tree_sample_b{b}"))?;
+        let dyn_in = [
+            g.h_prev.take().context("medusa-tree device hidden")?,
+            lit_f32(&[b, kq], &u)?,
+            lit_i32(&[kq], &level)?,
+            lit_i32(&[kq], &rank)?,
+            lit_scalar_f32(cx.opts.temperature.max(1e-3))?,
+            lit_scalar_i32(cx.opts.mode.device_code())?,
+        ];
+        let dyn_b = upload(cx.rt, &dyn_in)?;
+        let args = arg_refs(&cx.dparams, &[], &dyn_b);
+        let outs = propose.run_bufs(&args)?;
+        let toks = propose.output_host(&outs, 0)?.as_i32(); // [B, N] — O(B·N) ints
+        for (row, dr) in drafts.iter_mut().enumerate() {
+            for (i, slot) in dr.iter_mut().enumerate() {
+                *slot = toks[row * kq + i];
+            }
+        }
+        // All lowered q slots ride to verify_tree_fused; n_active masks
+        // the slots beyond this tree in-graph.
+        q_dev.extend(outs.into_iter().skip(1));
+        Ok(())
+    }
+
+    fn advance_tree_device(
+        &self,
+        _cx: &EngineCx,
+        g: &mut GroupState,
+        h_sel: xla::Literal,
+    ) -> Result<()> {
+        // The fused tree pass already picked the stop position's hidden
+        // in-graph; it conditions the next round as-is.
+        g.h_prev = Some(h_sel);
+        Ok(())
+    }
+}

@@ -43,7 +43,7 @@ use anyhow::{bail, Result};
 
 use crate::runtime::Runtime;
 use crate::spec::accept::AcceptanceStats;
-use crate::spec::sampling::{self, RoundUniforms, SamplingMode};
+use crate::spec::sampling::{self, RoundUniforms, SamplingMode, TreeSpec};
 use crate::tensor::Checkpoint;
 use crate::train::checkpoint_to_params;
 use crate::util::Pcg64;
@@ -82,12 +82,19 @@ pub enum VerifyPath {
 pub struct EngineOpts {
     /// Draft tokens per round (chain length). Recurrent archs may exceed
     /// the K=6 trained heads up to verify_t - 1 = 7; parallel-head archs
-    /// are capped at their head count.
+    /// are capped at their head count. With a tree configured this is
+    /// overridden to the tree's depth (it sizes the acceptance stats).
     pub k_draft: usize,
     pub temperature: f32,
     pub mode: SamplingMode,
     pub seed: u64,
     pub verify_path: VerifyPath,
+    /// Multi-candidate drafting: verify this candidate tree per round
+    /// instead of a single K-chain (None = chain decoding). Selects the
+    /// architecture's `-tree` backend variant; the tree must fit the
+    /// lowered block (`len() <= verify_t - 1`) and the backend's head
+    /// count (`depth() <= max_k`).
+    pub tree: Option<TreeSpec>,
 }
 
 impl Default for EngineOpts {
@@ -98,6 +105,7 @@ impl Default for EngineOpts {
             mode: SamplingMode::Stochastic,
             seed: 1234,
             verify_path: VerifyPath::Auto,
+            tree: None,
         }
     }
 }
@@ -122,12 +130,15 @@ pub struct RequestResult {
 /// churn on the host path).
 #[derive(Default)]
 struct VerifyScratch {
-    /// [B, K, V] full-vocab draft distributions.
+    /// `[B, N, V]` full-vocab draft distributions (N = chain slots or
+    /// tree nodes).
     q: QFlat,
-    /// [(K+1) · V] temperature softmaxes for the row under verdict.
+    /// `[(N+1)·V]` temperature softmaxes for the row under verdict.
     p: Vec<f32>,
     /// One logits row.
     lrow: Vec<f32>,
+    /// `[V]` residual scratch for the tree walk.
+    r: Vec<f32>,
     /// The row's fixed-count verify uniforms.
     u: RoundUniforms,
 }
@@ -155,21 +166,61 @@ impl<'rt> SpecEngine<'rt> {
     ) -> Result<SpecEngine<'rt>> {
         let dspec = rt.manifest.draft(draft_name)?.clone();
         let tspec = rt.manifest.target(&dspec.target)?.clone();
-        let backend = make_backend(&dspec.arch)?;
+        // A configured tree selects the architecture's multi-candidate
+        // backend variant (registered under the `-tree` suffix).
+        let backend = match &opts.tree {
+            None => make_backend(&dspec.arch)?,
+            Some(_) => make_backend(&format!("{}-tree", dspec.arch))?,
+        };
         if dspec.arch == "eagle3" && vocab_map.is_none() {
             bail!("eagle3 needs a vocab map");
         }
         let max_k = backend.max_k(rt, &dspec);
         let mut opts = opts;
         opts.k_draft = opts.k_draft.min(max_k);
+        if let Some(tree) = &opts.tree {
+            let n_slots = rt.manifest.verify_t - 1;
+            anyhow::ensure!(
+                tree.len() <= n_slots,
+                "tree has {} nodes but the lowered verify block fits {n_slots}",
+                tree.len()
+            );
+            anyhow::ensure!(
+                tree.depth() <= max_k,
+                "tree depth {} exceeds {draft_name}'s max chain length {max_k}",
+                tree.depth()
+            );
+            // The host tree path is the baseline requirement; the fused
+            // entries only upgrade it.
+            let host_ok = rt.manifest.serve_batches.iter().all(|&b| {
+                rt.has_target_entry(&tspec.name, &format!("verify_tree_b{b}"))
+                    && rt.has_target_entry(&tspec.name, &format!("kv_path_gather_b{b}"))
+            }) && backend.supports_tree(rt, &dspec);
+            anyhow::ensure!(
+                host_ok,
+                "tree decoding needs the verify_tree/kv_path_gather entries for \
+                 {draft_name} (re-lower the artifacts: python/compile/aot.py)"
+            );
+            // Stats are per accepted-path position; depth is the tree's K.
+            opts.k_draft = tree.depth();
+        }
         // Device verify needs the fused target entry at every bucket
-        // plus the backend's device-sampling entries.
-        let device_supported = rt
-            .manifest
-            .serve_batches
-            .iter()
-            .all(|&b| rt.has_target_entry(&tspec.name, &format!("verify_fused_b{b}")))
-            && backend.supports_device(rt, &dspec);
+        // plus the backend's device-sampling entries (the tree variants
+        // of both when a tree is configured).
+        let device_supported = match &opts.tree {
+            None => {
+                rt.manifest
+                    .serve_batches
+                    .iter()
+                    .all(|&b| rt.has_target_entry(&tspec.name, &format!("verify_fused_b{b}")))
+                    && backend.supports_device(rt, &dspec)
+            }
+            Some(_) => {
+                rt.manifest.serve_batches.iter().all(|&b| {
+                    rt.has_target_entry(&tspec.name, &format!("verify_tree_fused_b{b}"))
+                }) && backend.supports_tree_device(rt, &dspec)
+            }
+        };
         let device_verify = match opts.verify_path {
             VerifyPath::Host => false,
             VerifyPath::Auto => device_supported,
@@ -177,7 +228,7 @@ impl<'rt> SpecEngine<'rt> {
                 anyhow::ensure!(
                     device_supported,
                     "device verify forced but the artifacts lack the fused entries \
-                     for {draft_name} (re-run `make artifacts`)"
+                     for {draft_name} (re-lower the artifacts: python/compile/aot.py)"
                 );
                 true
             }
@@ -244,7 +295,7 @@ impl<'rt> SpecEngine<'rt> {
     // ------------------------------------------------------------------
 
     /// Target prefill + per-sequence bootstrap + backend draft bootstrap
-    /// for `reqs`, padded up to the serve bucket. Row i hosts reqs[i];
+    /// for `reqs`, padded up to the serve bucket. Row i hosts `reqs[i]`;
     /// padding rows clone the last request but start `done`.
     fn bootstrap_group(&mut self, reqs: &[AdmitReq]) -> Result<GroupState> {
         let n = reqs.len();
@@ -347,10 +398,11 @@ impl<'rt> SpecEngine<'rt> {
 
     fn decode_round(&mut self, g: &mut GroupState) -> Result<()> {
         let before = self.cx.rt.d2h_bytes_total();
-        if self.cx.device_verify {
-            self.decode_round_device(g)?;
-        } else {
-            self.decode_round_host(g)?;
+        match (self.cx.opts.tree.is_some(), self.cx.device_verify) {
+            (false, true) => self.decode_round_device(g)?,
+            (false, false) => self.decode_round_host(g)?,
+            (true, true) => self.decode_round_tree_device(g)?,
+            (true, false) => self.decode_round_tree_host(g)?,
         }
         self.metrics.decode_rounds += 1;
         self.metrics.bytes_to_host += self.cx.rt.d2h_bytes_total() - before;
@@ -413,7 +465,7 @@ impl<'rt> SpecEngine<'rt> {
         let temp = self.cx.opts.temperature.max(1e-3);
         let mode = self.cx.opts.mode;
         let mut n_acc = vec![0usize; b];
-        let VerifyScratch { q, p, lrow, u } = &mut self.scratch;
+        let VerifyScratch { q, p, lrow, u, .. } = &mut self.scratch;
         p.resize((k + 1) * vocab, 0.0);
         for row in 0..b {
             let seq = &mut g.seqs[row];
@@ -436,6 +488,7 @@ impl<'rt> SpecEngine<'rt> {
                 u,
             );
             Self::apply_verdict(seq, &drafts[row], k, rv.n_accepted, rv.token);
+            self.metrics.observe_round_row(k, rv.n_accepted);
             n_acc[row] = rv.n_accepted;
         }
 
@@ -533,12 +586,227 @@ impl<'rt> SpecEngine<'rt> {
             let j = (n_acc_host[row].max(0) as usize).min(k);
             let token = toks_host[row * vt + j];
             Self::apply_verdict(seq, &drafts[row], k, j, token);
+            self.metrics.observe_round_row(k, j);
             n_acc[row] = j;
         }
 
         // --- 4. advance draft state (backend-specific) ------------------
         self.backend
             .advance_device(&self.cx, g, &drafts, &n_acc, n_acc_lit, feats, h_sel)?;
+        Ok(())
+    }
+
+    /// Host tree round: ONE tree-attention target pass judges every
+    /// candidate of the per-round tree, the exact multi-draft rejection
+    /// walk runs in `spec::sampling::verify_tree_lazy` over the pulled
+    /// logits, and the accepted path's KV is spliced back to consecutive
+    /// positions with the device-side `kv_path_gather` entry (the packed
+    /// cache never round-trips through the host).
+    fn decode_round_tree_host(&mut self, g: &mut GroupState) -> Result<()> {
+        // Topology is engine-lifetime state; borrow it (no per-round
+        // clone of the spec's vectors).
+        let tree = self.cx.opts.tree.as_ref().expect("tree round without a tree");
+        let b = g.b;
+        let n = tree.len();
+        let depth = tree.depth();
+        let vt = self.cx.rt.manifest.verify_t;
+        let kq = vt - 1;
+        let vocab = self.cx.tspec.vocab;
+
+        // --- 1. propose one candidate per tree node --------------------
+        let mut drafts = vec![vec![0i32; n]; b];
+        self.scratch.q.reset(b, n, vocab);
+        self.backend
+            .propose_tree(&self.cx, g, tree, &mut drafts, &mut self.scratch.q)?;
+
+        // --- 2. tree-attention verify pass ------------------------------
+        let verify = self
+            .cx
+            .rt
+            .target_entry(&self.cx.tspec.name, &format!("verify_tree_b{b}"))?;
+        let mut vtok = vec![0i32; b * vt];
+        for (row, seq) in g.seqs.iter().enumerate() {
+            vtok[row * vt] = seq.last_token;
+            for i in 0..n {
+                vtok[row * vt + 1 + i] = drafts[row][i];
+            }
+        }
+        let pos: Vec<i32> = g.seqs.iter().map(|s| s.len as i32).collect();
+        let tkv = std::mem::replace(&mut g.tkv, lit_scalar_i32(0)?); // placeholder
+        let dyn_in = [
+            tkv,
+            lit_i32(&[b, vt], &vtok)?,
+            lit_i32(&[b], &pos)?,
+            lit_i32(&[vt], &tree.block_parents(vt))?,
+        ];
+        let dyn_b = upload(self.cx.rt, &dyn_in)?;
+        let args = arg_refs(&self.cx.tparams, &[], &dyn_b);
+        let outs = verify.run_bufs(&args)?;
+        let logits = verify.output_host(&outs, 0)?; // [B, vt, V]
+        let feats = verify.output_host(&outs, 2)?; // [B, vt, 3d]
+        g.tkv = outs.into_iter().nth(1).unwrap();
+
+        // --- 3. the multi-draft rejection walk per row ------------------
+        let temp = self.cx.opts.temperature.max(1e-3);
+        let mode = self.cx.opts.mode;
+        let mut stop_blk = vec![0usize; b];
+        let mut sel = vec![0i32; b * kq];
+        let mut acc_toks: Vec<i32> = Vec::with_capacity(depth);
+        let VerifyScratch { q, p, lrow, u, r } = &mut self.scratch;
+        p.resize((n + 1) * vocab, 0.0);
+        r.resize(vocab, 0.0);
+        for row in 0..b {
+            // A row's path splice defaults to replaying its own block
+            // (done rows included: in-bounds garbage positions).
+            for (t, s) in sel[row * kq..(row + 1) * kq].iter_mut().enumerate() {
+                *s = pos[row] + 1 + t as i32;
+            }
+            let seq = &mut g.seqs[row];
+            if seq.done {
+                continue;
+            }
+            u.draw_into(&mut seq.rng, n, mode);
+            // Pristine rows materialize lazily — root + accepted nodes.
+            let tv = sampling::verify_tree_lazy(
+                tree,
+                vocab,
+                p,
+                |j, out| {
+                    tensor_row_into(&logits, row, &[b, vt, vocab], j, lrow);
+                    sampling::softmax_t_into(lrow, temp, out);
+                },
+                r,
+                q.row_block(row),
+                &drafts[row],
+                mode,
+                u,
+            );
+            acc_toks.clear();
+            acc_toks.extend(tv.path.iter().map(|&node| drafts[row][node]));
+            Self::apply_verdict(seq, &acc_toks, depth, acc_toks.len(), tv.token);
+            self.metrics.observe_round_row(n, tv.path.len());
+            stop_blk[row] = tv.path.last().map(|&node| node + 1).unwrap_or(0);
+            for (t, &node) in tv.path.iter().enumerate() {
+                sel[row * kq + t] = pos[row] + 1 + node as i32;
+            }
+        }
+
+        // --- 4. splice the accepted paths to linear KV ------------------
+        let gather = self
+            .cx
+            .rt
+            .target_entry(&self.cx.tspec.name, &format!("kv_path_gather_b{b}"))?;
+        let dst0: Vec<i32> = pos.iter().map(|&p| p + 1).collect();
+        let tkv = std::mem::replace(&mut g.tkv, lit_scalar_i32(0)?);
+        let splice_in = [
+            tkv,
+            lit_i32(&[b, kq], &sel)?,
+            lit_i32(&[b], &dst0)?,
+        ];
+        let splice_b = upload(self.cx.rt, &splice_in)?;
+        let splice_refs: Vec<&xla::PjRtBuffer> = splice_b.iter().collect();
+        let outs = gather.run_bufs(&splice_refs)?;
+        g.tkv = outs.into_iter().next().unwrap();
+
+        // --- 5. advance draft state (backend-specific) ------------------
+        self.backend.advance_tree(&self.cx, g, &stop_blk, &feats)?;
+        Ok(())
+    }
+
+    /// Device tree round: candidate sampling, the tree-attention target
+    /// forward, the multi-draft rejection walk, the KV path splice and
+    /// the conditioning-hidden pickup all run inside
+    /// `verify_tree_fused_b{B}`; the host feeds O(B·N) uniforms plus the
+    /// topology ints and reads back O(B·N) verdict integers.
+    fn decode_round_tree_device(&mut self, g: &mut GroupState) -> Result<()> {
+        let tree = self.cx.opts.tree.as_ref().expect("tree round without a tree");
+        let b = g.b;
+        let n = tree.len();
+        let depth = tree.depth();
+        let vt = self.cx.rt.manifest.verify_t;
+        let kq = vt - 1;
+        let mode = self.cx.opts.mode;
+
+        // --- 1. draft (in-graph sampling; candidates come back as ints) -
+        let mut drafts = vec![vec![0i32; n]; b];
+        let mut q_dev: Vec<xla::Literal> = Vec::with_capacity(kq);
+        self.backend
+            .propose_tree_device(&self.cx, g, tree, &mut drafts, &mut q_dev)?;
+        anyhow::ensure!(q_dev.len() == kq, "backend produced {} q tensors", q_dev.len());
+
+        // --- 2. fused tree verify ---------------------------------------
+        let mut vtok = vec![0i32; b * vt];
+        for (row, seq) in g.seqs.iter().enumerate() {
+            vtok[row * vt] = seq.last_token;
+            for i in 0..n {
+                vtok[row * vt + 1 + i] = drafts[row][i];
+            }
+        }
+        let pos: Vec<i32> = g.seqs.iter().map(|s| s.len as i32).collect();
+        // The SAME fixed-count uniforms the host walk would draw (one
+        // accept per node + one sample); done rows get inert constants.
+        let mut u_acc = vec![DUMMY_UNIFORM; b * kq];
+        let mut u_samp = vec![DUMMY_UNIFORM; b];
+        if mode.is_stochastic() {
+            for (row, seq) in g.seqs.iter_mut().enumerate() {
+                if seq.done {
+                    continue;
+                }
+                for slot in u_acc[row * kq..row * kq + n].iter_mut() {
+                    *slot = seq.rng.uniform() as f32;
+                }
+                u_samp[row] = seq.rng.uniform() as f32;
+            }
+        }
+        let verify = self
+            .cx
+            .rt
+            .target_entry(&self.cx.tspec.name, &format!("verify_tree_fused_b{b}"))?;
+        let tkv = std::mem::replace(&mut g.tkv, lit_scalar_i32(0)?); // placeholder
+        let mut head = vec![
+            tkv,
+            lit_i32(&[b, vt], &vtok)?,
+            lit_i32(&[b], &pos)?,
+            lit_i32(&[kq], &tree.parents_padded(kq))?,
+        ];
+        head.extend(q_dev);
+        let tail = [
+            lit_f32(&[b, kq], &u_acc)?,
+            lit_f32(&[b], &u_samp)?,
+            lit_scalar_f32(self.cx.opts.temperature.max(1e-3))?,
+            lit_scalar_i32(mode.device_code())?,
+            lit_scalar_i32(n as i32)?,
+        ];
+        let mut dyn_b = upload(self.cx.rt, &head)?;
+        dyn_b.extend(upload(self.cx.rt, &tail)?);
+        let args = arg_refs(&self.cx.tparams, &[], &dyn_b);
+        let outs = verify.run_bufs(&args)?;
+        // Only the verdict integers are materialized host-side.
+        let n_path_host = verify.output_host(&outs, 0)?.as_i32(); // [B]
+        let toks_host = verify.output_host(&outs, 2)?.as_i32(); // [B, vt]
+        let mut it = outs.into_iter();
+        let _n_path_lit = it.next();
+        let _path_lit = it.next();
+        let _toks_lit = it.next();
+        g.tkv = it.next().unwrap(); // already path-spliced in-graph
+        let _feats = it.next();
+        let h_sel = it.next().unwrap();
+
+        // --- 3. bookkeeping per row -------------------------------------
+        for (row, seq) in g.seqs.iter_mut().enumerate() {
+            if seq.done {
+                continue; // in-graph verdicts for done rows are garbage
+            }
+            let j = (n_path_host[row].max(0) as usize).min(depth);
+            // tokens_out shares the chain layout: accepted candidates
+            // then the replacement/bonus emission.
+            let token = toks_host[row * vt + j];
+            Self::apply_verdict(seq, &toks_host[row * vt..row * vt + j], depth, j, token);
+            self.metrics.observe_round_row(n, j);
+        }
+
+        // --- 4. advance draft state (backend-specific) ------------------
+        self.backend.advance_tree_device(&self.cx, g, h_sel)?;
         Ok(())
     }
 

@@ -30,6 +30,16 @@ pub struct EngineMetrics {
     /// rounds (Runtime::d2h_bytes_total deltas) — the transfer the
     /// device-resident verify eliminates.
     pub bytes_to_host: u64,
+    /// Histogram of per-row accepted lengths per round: chain prefix
+    /// lengths, or accepted PATH lengths for tree rounds (index =
+    /// length; grown on demand).
+    pub path_len_hist: Vec<u64>,
+    /// Candidate slots drafted across live row-rounds (K per chain
+    /// round, N tree nodes per tree round) — with `row_rounds` this is
+    /// the nodes-per-round gauge separating tree cost from chain cost.
+    pub nodes_drafted: u64,
+    /// Live (non-padding) row-rounds observed.
+    pub row_rounds: u64,
 }
 
 impl EngineMetrics {
@@ -62,6 +72,41 @@ impl EngineMetrics {
         }
     }
 
+    /// Record one live row's round shape: `n_slots` candidates drafted
+    /// (chain K or tree nodes), `accepted` the accepted prefix/path
+    /// length.
+    pub fn observe_round_row(&mut self, n_slots: usize, accepted: usize) {
+        if self.path_len_hist.len() <= accepted {
+            self.path_len_hist.resize(accepted + 1, 0);
+        }
+        self.path_len_hist[accepted] += 1;
+        self.nodes_drafted += n_slots as u64;
+        self.row_rounds += 1;
+    }
+
+    /// Mean candidate slots drafted per live row-round.
+    pub fn nodes_per_round(&self) -> f64 {
+        if self.row_rounds == 0 {
+            0.0
+        } else {
+            self.nodes_drafted as f64 / self.row_rounds as f64
+        }
+    }
+
+    /// Mean accepted prefix/path length per live row-round.
+    pub fn mean_accepted_len(&self) -> f64 {
+        if self.row_rounds == 0 {
+            return 0.0;
+        }
+        let total: u64 = self
+            .path_len_hist
+            .iter()
+            .enumerate()
+            .map(|(len, &c)| len as u64 * c)
+            .sum();
+        total as f64 / self.row_rounds as f64
+    }
+
     /// Prometheus-style text block.
     pub fn render(&mut self, engine: &str) -> String {
         let mut out = String::new();
@@ -86,6 +131,8 @@ impl EngineMetrics {
         line("tau_mean", self.tau.mean());
         line("bytes_to_host_total", self.bytes_to_host as f64);
         line("bytes_to_host_per_round", self.bytes_to_host_per_round());
+        line("nodes_per_round", self.nodes_per_round());
+        line("accepted_len_mean", self.mean_accepted_len());
         if !self.latency_ms.is_empty() {
             line("latency_ms_p50", self.latency_ms.pct(50.0));
             line("latency_ms_p95", self.latency_ms.pct(95.0));
@@ -98,6 +145,11 @@ impl EngineMetrics {
         if !self.queue_ms.is_empty() {
             line("queue_ms_p50", self.queue_ms.pct(50.0));
             line("queue_ms_p95", self.queue_ms.pct(95.0));
+        }
+        for (len, &count) in self.path_len_hist.iter().enumerate() {
+            out.push_str(&format!(
+                "lkspec_accepted_len_rounds{{engine=\"{engine}\",len=\"{len}\"}} {count}\n"
+            ));
         }
         out
     }
@@ -146,11 +198,31 @@ pub fn host_draft_bytes_per_round(
     }) as u64
 }
 
-/// Device path: n_accepted [B] + emitted tokens [B, Vt] + the drafted
-/// token ids the backends read back (O(B·K) i32 — nothing scales with
-/// the vocabulary).
+/// Device path: n_accepted `[B]` + emitted tokens `[B, Vt]` + the
+/// drafted token ids the backends read back (O(B·K) i32 — nothing
+/// scales with the vocabulary).
 pub fn device_bytes_per_round(b: usize, k: usize, vt: usize) -> u64 {
     ((b + b * vt + b * k) * 4) as u64
+}
+
+/// Tree host path: the full [B, Vt, V] logits + [B, Vt, 3d] features
+/// pulled for the host rejection walk, plus the parallel-head propose
+/// pull ([K, B, V] — one pass feeds every node).
+pub fn tree_host_bytes_per_round(
+    b: usize,
+    vt: usize,
+    vocab: usize,
+    feat_dim: usize,
+    k_heads: usize,
+) -> u64 {
+    host_verify_bytes_per_round(b, vt, vocab, feat_dim) + (k_heads * b * vocab * 4) as u64
+}
+
+/// Tree device path: n_path `[B]` + candidate ids `[B, N]` + emitted
+/// tokens `[B, Vt]` — O(B·N) i32 per round; the per-node q tensors, the
+/// path splice and the conditioning hidden stay in-graph.
+pub fn tree_device_bytes_per_round(b: usize, n_nodes: usize, vt: usize) -> u64 {
+    ((b + b * n_nodes + b * vt) * 4) as u64
 }
 
 /// Scheduler-level serving metrics: occupancy, queue waits, throughput
@@ -306,6 +378,44 @@ mod tests {
                 assert_eq!(dev, ((b + b * vt + b * k) * 4) as u64);
             }
         }
+    }
+
+    /// Tree rounds keep the device-path property: per-round host
+    /// traffic is O(B·N) ints, independent of the vocabulary.
+    #[test]
+    fn tree_transfer_closed_forms() {
+        let (vt, vocab, f3, kh) = (8usize, 512usize, 288usize, 6usize);
+        for b in [1usize, 4] {
+            let n = 6; // the 2x2 default tree
+            let host = tree_host_bytes_per_round(b, vt, vocab, f3, kh);
+            let dev = tree_device_bytes_per_round(b, n, vt);
+            assert_eq!(dev, ((b + b * n + b * vt) * 4) as u64);
+            assert!(
+                dev * 50 < host,
+                "b={b}: tree device {dev} not <50x below host {host}"
+            );
+        }
+    }
+
+    #[test]
+    fn round_shape_histogram_and_gauges() {
+        let mut m = EngineMetrics::default();
+        m.observe_round_row(6, 2); // tree round: 6 nodes, path len 2
+        m.observe_round_row(6, 0);
+        m.observe_round_row(7, 7); // chain round: K=7, clean sweep
+        assert_eq!(m.row_rounds, 3);
+        assert_eq!(m.path_len_hist, vec![1, 0, 1, 0, 0, 0, 0, 1]);
+        assert!((m.nodes_per_round() - 19.0 / 3.0).abs() < 1e-12);
+        assert!((m.mean_accepted_len() - 3.0).abs() < 1e-12);
+        let text = m.render("e");
+        assert!(text.contains("lkspec_nodes_per_round{engine=\"e\"}"));
+        assert!(text.contains("lkspec_accepted_len_rounds{engine=\"e\",len=\"0\"} 1"));
+        assert!(text.contains("lkspec_accepted_len_rounds{engine=\"e\",len=\"7\"} 1"));
+        // fresh metrics render finite gauges, no NaN division
+        let mut fresh = EngineMetrics::default();
+        assert_eq!(fresh.nodes_per_round(), 0.0);
+        assert_eq!(fresh.mean_accepted_len(), 0.0);
+        assert!(!fresh.render("e").contains("NaN"));
     }
 
     #[test]

@@ -5,7 +5,7 @@
 #[derive(Clone, Debug)]
 pub struct AcceptanceStats {
     pub k: usize,
-    /// drafted[i] / accepted[i]: counts at draft position i (0-based).
+    /// `drafted[i]` / `accepted[i]`: counts at draft position i (0-based).
     pub drafted: Vec<u64>,
     pub accepted: Vec<u64>,
     /// Histogram of per-round accepted-prefix lengths (0..=K).

@@ -14,7 +14,7 @@ pub fn grad_kl(p: &[f32], q: &[f32]) -> Vec<f32> {
     q.iter().zip(p).map(|(&qi, &pi)| qi - pi).collect()
 }
 
-/// ∇_{z_q} TV(p, q) = ½ q ⊙ (s − E_q[s]), s = sign(q − p)  (A.3)
+/// `∇_{z_q} TV(p, q) = ½ q ⊙ (s − E_q[s])`, `s = sign(q − p)`  (A.3)
 pub fn grad_tv(p: &[f32], q: &[f32]) -> Vec<f32> {
     let s: Vec<f32> = q
         .iter()

@@ -1,4 +1,4 @@
-//! Sampling & the speculative rejection rule.
+//! Sampling & the speculative rejection rules (chain and tree).
 //!
 //! The serving engine receives LOGITS from the XLA executables; every
 //! distributional decision (temperature, greedy-vs-stochastic, the accept
@@ -6,8 +6,37 @@
 //! the piece the paper had to patch vLLM for (§5.4 / Appendix D): vLLM
 //! sampled drafts greedily while verifying against temperature-scaled
 //! targets, silently deflating acceptance at T=1. Both behaviours are
-//! implemented; `SamplingMode::GreedyDraft` reproduces the bug for the
+//! implemented; [`SamplingMode::GreedyDraft`] reproduces the bug for the
 //! Appendix D ablation.
+//!
+//! # The fixed-uniform contract
+//!
+//! The device-resident verify pipeline keeps randomness host-owned: per
+//! round, a live row draws a FIXED number of uniforms from its
+//! request-keyed PCG64 stream, up-front, in a fixed order — and both the
+//! host fallback and the in-graph kernels consume those same draws with
+//! identical per-element arithmetic. Concretely, in the stochastic modes
+//! one draft draw per drafted position/node (consumed during `propose`),
+//! then one accept draw per position/node plus ONE residual-or-bonus
+//! draw (a [`RoundUniforms`]), and nothing at all in greedy mode. The
+//! fixed count makes a request's sample path a pure function of
+//! `(seed, request id)` on either verify path; [`verify_round`] (chain)
+//! and [`verify_tree`] (multi-candidate) are the host-side definitions
+//! of the shared arithmetic, pinned against the device graphs by
+//! golden-uniform parity tests.
+//!
+//! # Tree verification
+//!
+//! [`TreeSpec`] describes a candidate tree (Yang et al. 2024 /
+//! SpecInfer-style multi-candidate drafts) and [`verify_tree`] runs the
+//! canonical multi-draft rejection rule over it: walk from the root,
+//! judging each child of the current node in sibling order with
+//! `min(1, r(x)/ (z·q(x)))` against its per-node accept uniform, where
+//! `r/z` is the target distribution with every previously-rejected
+//! sibling's draft distribution subtracted out (the residual update that
+//! keeps the output distribution exactly `p` — Khisti et al. 2024). A
+//! degenerate single-chain topology reproduces [`verify_round`] verdicts
+//! bit-for-bit from the same uniforms (property-tested).
 
 use crate::util::Pcg64;
 
@@ -353,6 +382,369 @@ pub fn verify_round(
     )
 }
 
+// ---------------------------------------------------------------------------
+// multi-candidate (tree) verification
+// ---------------------------------------------------------------------------
+
+/// Topology of one candidate tree (Yang et al. 2024 multi-candidate
+/// drafts). Nodes are indexed `0..n` in BFS order; `parents[i]` is the
+/// node index of `i`'s parent, `-1` for children of the root (the last
+/// accepted token). BFS order makes `parents` non-decreasing with
+/// `parents[i] < i`, which is what lets both the host walk and the
+/// in-graph kernel verify the whole tree in ONE forward scan — the
+/// validation in [`TreeSpec::from_parents`] enforces it.
+///
+/// The verify block layout extends the chain contract: block position 0
+/// is the root (`last_token`), node `i` sits at block position `i + 1`,
+/// and the target row judging node `i` is the logits row of its parent's
+/// block position. Node `i`'s level (root children = level 0) selects
+/// the draft head that proposed it; its sibling rank orders greedy-mode
+/// top-k candidates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TreeSpec {
+    parents: Vec<i32>,
+    levels: Vec<usize>,
+    ranks: Vec<usize>,
+}
+
+impl TreeSpec {
+    /// Validated construction from a parent array (BFS order: `parents`
+    /// non-decreasing, `-1 <= parents[i] < i`).
+    pub fn from_parents(parents: Vec<i32>) -> anyhow::Result<TreeSpec> {
+        anyhow::ensure!(!parents.is_empty(), "tree needs at least one node");
+        let mut levels = Vec::with_capacity(parents.len());
+        let mut ranks = Vec::with_capacity(parents.len());
+        let mut last_parent = i32::MIN;
+        let mut rank = 0usize;
+        for (i, &p) in parents.iter().enumerate() {
+            anyhow::ensure!(
+                (-1..i as i32).contains(&p),
+                "node {i}: parent {p} out of range -1..{i}"
+            );
+            anyhow::ensure!(
+                p >= last_parent,
+                "node {i}: parents must be non-decreasing (BFS order)"
+            );
+            rank = if p == last_parent { rank + 1 } else { 0 };
+            last_parent = p;
+            levels.push(if p < 0 { 0 } else { levels[p as usize] + 1 });
+            ranks.push(rank);
+        }
+        Ok(TreeSpec {
+            parents,
+            levels,
+            ranks,
+        })
+    }
+
+    /// The degenerate single-chain topology of length `k` (node `i`'s
+    /// parent is `i - 1`): [`verify_tree`] over it reproduces
+    /// [`verify_round`] exactly.
+    pub fn chain(k: usize) -> TreeSpec {
+        TreeSpec::from_parents((0..k).map(|i| i as i32 - 1).collect()).unwrap()
+    }
+
+    /// Full tree from per-level fanouts: `fanout[l]` children under every
+    /// level-`l - 1` node (level 0 under the root). `[2, 2]` is 2 root
+    /// children with 2 children each — 6 nodes, depth 2.
+    pub fn from_fanout(fanout: &[usize]) -> anyhow::Result<TreeSpec> {
+        anyhow::ensure!(
+            !fanout.is_empty() && fanout.iter().all(|&f| f >= 1),
+            "fanout must be a non-empty list of counts >= 1"
+        );
+        let mut parents = Vec::new();
+        let mut prev_level: Vec<i32> = vec![-1];
+        for &f in fanout {
+            let mut level = Vec::new();
+            for &p in &prev_level {
+                for _ in 0..f {
+                    level.push(parents.len() as i32);
+                    parents.push(p);
+                }
+            }
+            prev_level = level;
+        }
+        TreeSpec::from_parents(parents)
+    }
+
+    /// Parse a fanout string: `"2x2"` (or `"2,2"`) -> `from_fanout(&[2, 2])`.
+    pub fn parse(s: &str) -> anyhow::Result<TreeSpec> {
+        let fanout: Vec<usize> = s
+            .split(|c| c == 'x' || c == ',')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad fanout component '{t}' in '{s}'"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        TreeSpec::from_fanout(&fanout)
+    }
+
+    /// Number of candidate nodes.
+    pub fn len(&self) -> usize {
+        self.parents.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parents.is_empty()
+    }
+
+    /// Parent node index of node `i` (`-1` = root).
+    pub fn parent(&self, i: usize) -> i32 {
+        self.parents[i]
+    }
+
+    /// Level of node `i` (root children are level 0) — the draft head
+    /// that proposes it.
+    pub fn level(&self, i: usize) -> usize {
+        self.levels[i]
+    }
+
+    /// Rank of node `i` among its siblings — the greedy-mode top-k index
+    /// of its candidate token.
+    pub fn rank(&self, i: usize) -> usize {
+        self.ranks[i]
+    }
+
+    /// Maximum accepted-path length (deepest level + 1) — the tree
+    /// analog of the chain length K.
+    pub fn depth(&self) -> usize {
+        self.levels.iter().map(|&l| l + 1).max().unwrap_or(0)
+    }
+
+    /// True for the degenerate single-chain topology.
+    pub fn is_chain(&self) -> bool {
+        self.parents.iter().enumerate().all(|(i, &p)| p == i as i32 - 1)
+    }
+
+    /// Node-parent array padded to `n` slots with the self-index, the
+    /// form the lowered device entries take: a self-parent can never
+    /// satisfy `parent == cur`, and `parent > cur` stops the scan, so
+    /// padding slots are inert by construction.
+    pub fn parents_padded(&self, n: usize) -> Vec<i32> {
+        let mut out = self.parents.clone();
+        for i in out.len()..n {
+            out.push(i as i32);
+        }
+        out
+    }
+
+    /// Block-position parent array for the verify block (`t` slots):
+    /// entry 0 is the root (its own parent, terminating ancestor walks),
+    /// entry `i + 1` maps node `i`'s parent to block coordinates, and
+    /// padding slots are self-parents (depth 0, attend only to
+    /// themselves plus the committed prefix).
+    pub fn block_parents(&self, t: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(t);
+        out.push(0);
+        for &p in &self.parents {
+            out.push(p + 1);
+        }
+        for i in out.len()..t {
+            out.push(i as i32);
+        }
+        out.truncate(t);
+        out
+    }
+}
+
+/// Outcome of one tree-verify round for one sequence row.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TreeVerdict {
+    /// Accepted node indices, root-to-leaf (one per level walked).
+    pub path: Vec<usize>,
+    /// The round's non-draft emission: the residual replacement where
+    /// the walk stopped, or the bonus token past an accepted leaf.
+    pub token: i32,
+}
+
+/// First index whose serial cumulative sum of `r` reaches `t`, else the
+/// last index with positive mass (fp slack), else `len - 1`. With a
+/// normalized `r` and `t = u` this is exactly
+/// [`categorical_from_uniform`]; with an unnormalized residual and
+/// `t = u·z` it is exactly the [`residual_from_uniform`] selection.
+fn threshold_select(r: &[f32], t: f32) -> usize {
+    let mut c = 0f32;
+    let mut last = None;
+    for (i, &v) in r.iter().enumerate() {
+        if v > 0.0 {
+            last = Some(i);
+        }
+        c += v;
+        if c >= t {
+            return i;
+        }
+    }
+    last.unwrap_or(r.len() - 1)
+}
+
+/// One multi-candidate verify round under the fixed-uniform contract —
+/// the single audited definition shared by the host tree path and the
+/// device graphs (`python/compile/verify_device.py::tree_verify`, pinned
+/// by golden-uniform parity tests).
+///
+/// The walk keeps the current target distribution as an UNNORMALIZED
+/// residual `r` with mass `z` (`z` is exactly 1.0 while `r` is a pristine
+/// softmax row). For each scanned node `i` (BFS order, one forward
+/// scan):
+///
+///   * `parent(i) < cur` — stale sibling group, skip;
+///   * `parent(i) > cur` — no children of `cur` remain (BFS order), the
+///     walk stops;
+///   * `parent(i) == cur` — judge candidate `i`: accept when
+///     `u.accept[i] < min(1, r(x)/(z·q_i(x)))` (stochastic; the
+///     greedy-draft bug uses `min(1, r(x)/z)`, greedy mode argmax
+///     agreement against the PRISTINE row). Acceptance descends:
+///     `cur = i`, `r` resets to the pristine row after node `i`.
+///     Rejection folds the candidate out: `r = max(r - z·q_i, 0)`,
+///     `z = Σr` — so the next sibling is judged against the exact
+///     residual, which is what keeps the emitted distribution exactly
+///     `p` (Khisti et al. 2024).
+///
+/// The emission consumes the round's single sample uniform: the
+/// inverse-CDF selection over `r` thresholded at `u.sample·z` — which is
+/// the bonus draw from `p` when the walk ran past a leaf (`z == 1`,
+/// `r` pristine) and the residual replacement otherwise — falling back
+/// to the pristine row when the residual emptied (`p == q`).
+///
+/// `fill_p(j, out)` materializes the temperature-softmaxed target row at
+/// BLOCK position `j` (0 = root) — called lazily, only for the root and
+/// each accepted node. `p` is the caller's `(n + 1)·vocab` scratch those
+/// rows land in; `r` a `vocab`-sized residual scratch.
+///
+/// One accept uniform per NODE (`u.accept.len() == tree.len()`) plus the
+/// single sample draw — drawn up-front whether or not the walk reaches
+/// the node, so the stream position stays a pure function of the round.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_tree_lazy(
+    tree: &TreeSpec,
+    vocab: usize,
+    p: &mut [f32],
+    mut fill_p: impl FnMut(usize, &mut [f32]),
+    r: &mut [f32],
+    q: &[f32],
+    drafted: &[i32],
+    mode: SamplingMode,
+    u: &RoundUniforms,
+) -> TreeVerdict {
+    let n = tree.len();
+    debug_assert!(p.len() >= (n + 1) * vocab && q.len() >= n * vocab && r.len() >= vocab);
+    debug_assert!(!mode.is_stochastic() || u.accept.len() >= n);
+    let mut path = Vec::new();
+    let mut cur: i32 = -1;
+    fill_p(0, &mut p[0..vocab]);
+    r[..vocab].copy_from_slice(&p[0..vocab]);
+    let mut z = 1.0f32;
+    let mut z_isone = true;
+    let mut i = 0usize;
+    while i < n {
+        let par = tree.parent(i);
+        if par > cur {
+            break; // BFS order: no children of `cur` remain
+        }
+        if par < cur {
+            i += 1;
+            continue; // sibling group of an already-passed node
+        }
+        let x = drafted[i] as usize;
+        let z_eff = if z_isone { 1.0 } else { z };
+        let qi = &q[i * vocab..(i + 1) * vocab];
+        let prow = &p[(cur + 1) as usize * vocab..][..vocab];
+        // An emptied residual (z == 0: previous siblings covered all of
+        // the target's mass) rejects every remaining candidate — guards
+        // the 0/0 = NaN that f32::min would otherwise turn into an
+        // accept; the device graphs reject here too (clamped
+        // denominator / NaN comparing false). Chain topologies always
+        // judge with z_eff == 1, so degeneracy is unaffected.
+        let ok = match mode {
+            SamplingMode::Greedy => argmax(prow) == x,
+            SamplingMode::Stochastic => {
+                let beta = if qi[x] > 0.0 && z_eff > 0.0 {
+                    (r[x] / (z_eff * qi[x])).min(1.0)
+                } else {
+                    0.0
+                };
+                u.accept[i] < beta
+            }
+            SamplingMode::GreedyDraft => {
+                z_eff > 0.0 && u.accept[i] < (r[x] / z_eff).min(1.0)
+            }
+        };
+        if ok {
+            cur = i as i32;
+            path.push(i);
+            let row = &mut p[(i + 1) * vocab..(i + 2) * vocab];
+            fill_p(i + 1, row);
+            r[..vocab].copy_from_slice(&p[(i + 1) * vocab..(i + 2) * vocab]);
+            z_isone = true;
+        } else {
+            let mut znew = 0f32;
+            for (rv, &qv) in r[..vocab].iter_mut().zip(qi) {
+                *rv = (*rv - z_eff * qv).max(0.0);
+                znew += *rv;
+            }
+            z = znew;
+            z_isone = false;
+        }
+        i += 1;
+    }
+    let prow = &p[(cur + 1) as usize * vocab..][..vocab];
+    let token = match mode {
+        SamplingMode::Greedy => argmax(prow) as i32,
+        _ => {
+            let z_eff = if z_isone { 1.0 } else { z };
+            if z_eff > 0.0 {
+                threshold_select(&r[..vocab], u.sample * z_eff) as i32
+            } else {
+                categorical_from_uniform(prow, u.sample) as i32
+            }
+        }
+    };
+    TreeVerdict { path, token }
+}
+
+/// Eager convenience wrapper over [`verify_tree_lazy`] for callers that
+/// already hold all `n + 1` softmaxed block rows (tests, fixtures).
+pub fn verify_tree(
+    tree: &TreeSpec,
+    vocab: usize,
+    p: &[f32],
+    q: &[f32],
+    drafted: &[i32],
+    mode: SamplingMode,
+    u: &RoundUniforms,
+) -> TreeVerdict {
+    let n = tree.len();
+    let mut scratch = vec![0f32; (n + 1) * vocab];
+    let mut r = vec![0f32; vocab];
+    verify_tree_lazy(
+        tree,
+        vocab,
+        &mut scratch,
+        |j, out| out.copy_from_slice(&p[j * vocab..(j + 1) * vocab]),
+        &mut r,
+        q,
+        drafted,
+        mode,
+        u,
+    )
+}
+
+/// The `rank`-th-largest index of `probs` by repeated first-occurrence
+/// argmax-and-mask — the greedy-mode candidate for sibling rank `rank`,
+/// formulated identically to the in-graph `kth_argmax`
+/// (`verify_device.py`) so host and device propose the same tokens.
+pub fn argmax_rank(probs: &[f32], rank: usize, scratch: &mut Vec<f32>) -> usize {
+    scratch.clear();
+    scratch.extend_from_slice(probs);
+    let mut best = argmax(scratch);
+    for _ in 0..rank {
+        scratch[best] = f32::NEG_INFINITY;
+        best = argmax(scratch);
+    }
+    best
+}
+
 /// Sample from normalized max(p - q, 0); falls back to p when p == q.
 pub fn sample_residual(rng: &mut Pcg64, p: &[f32], q: &[f32]) -> usize {
     let mut total = 0f64;
@@ -613,6 +1005,245 @@ mod tests {
                 p0[i]
             );
         }
+    }
+
+    #[test]
+    fn tree_spec_construction_and_validation() {
+        let t = TreeSpec::from_fanout(&[2, 2]).unwrap();
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.depth(), 2);
+        assert_eq!((0..6).map(|i| t.parent(i)).collect::<Vec<_>>(), vec![-1, -1, 0, 0, 1, 1]);
+        assert_eq!((0..6).map(|i| t.level(i)).collect::<Vec<_>>(), vec![0, 0, 1, 1, 1, 1]);
+        assert_eq!((0..6).map(|i| t.rank(i)).collect::<Vec<_>>(), vec![0, 1, 0, 1, 0, 1]);
+        assert!(!t.is_chain());
+        assert_eq!(t.parents_padded(7), vec![-1, -1, 0, 0, 1, 1, 6]);
+        assert_eq!(t.block_parents(8), vec![0, 0, 0, 1, 1, 2, 2, 7]);
+
+        let c = TreeSpec::chain(3);
+        assert!(c.is_chain());
+        assert_eq!(c.depth(), 3);
+        assert_eq!(c.block_parents(5), vec![0, 0, 1, 2, 4]);
+        assert_eq!(TreeSpec::parse("2x2").unwrap(), t);
+        assert_eq!(TreeSpec::parse("2,2").unwrap(), t);
+
+        // forward references, decreasing parents and empty trees reject
+        assert!(TreeSpec::from_parents(vec![0]).is_err());
+        assert!(TreeSpec::from_parents(vec![-1, 0, -1]).is_err());
+        assert!(TreeSpec::from_parents(vec![-2]).is_err());
+        assert!(TreeSpec::from_parents(vec![]).is_err());
+        assert!(TreeSpec::parse("2x0").is_err());
+    }
+
+    /// THE degeneration guarantee: a single-chain topology reproduces
+    /// `verify_round` verdicts bit-for-bit from the same uniforms. (The
+    /// randomized sweep lives in tests/properties.rs; this pins the
+    /// golden fixture vectors shared with the python parity suite.)
+    #[test]
+    fn tree_chain_matches_verify_round_golden() {
+        let v = 4;
+        let k = 2;
+        let p = [
+            0.1f32, 0.2, 0.3, 0.4, //
+            0.25, 0.25, 0.25, 0.25, //
+            0.7, 0.1, 0.1, 0.1,
+        ];
+        let q = [
+            0.1f32, 0.2, 0.3, 0.4, //
+            0.25, 0.25, 0.25, 0.25,
+        ];
+        let chain = TreeSpec::chain(k);
+        for (drafted, u, mode) in [
+            (
+                [3i32, 0],
+                RoundUniforms { accept: vec![0.999, 0.999], sample: 0.75 },
+                SamplingMode::Stochastic,
+            ),
+            (
+                [0i32, 1],
+                RoundUniforms { accept: vec![0.0, 0.0], sample: 0.6 },
+                SamplingMode::Stochastic,
+            ),
+            (
+                [3i32, 2],
+                RoundUniforms { accept: vec![0.999, 0.999], sample: 0.75 },
+                SamplingMode::Greedy,
+            ),
+            (
+                [1i32, 0],
+                RoundUniforms { accept: vec![0.2, 0.9], sample: 0.3 },
+                SamplingMode::GreedyDraft,
+            ),
+        ] {
+            let rv = verify_round(k, v, &p, &q, &drafted, mode, &u);
+            let tv = verify_tree(&chain, v, &p, &q, &drafted, mode, &u);
+            assert_eq!(tv.path.len(), rv.n_accepted, "{mode:?} {drafted:?}");
+            assert_eq!(tv.token, rv.token, "{mode:?} {drafted:?}");
+            assert_eq!(tv.path, (0..rv.n_accepted).collect::<Vec<_>>());
+        }
+    }
+
+    /// Hand-checkable branching fixture: sibling 0 rejected, sibling 1
+    /// judged against the RESIDUAL (not the pristine p), then its child
+    /// accepted and the bonus drawn past the leaf.
+    #[test]
+    fn tree_verify_branching_golden() {
+        let v = 4;
+        // topology: two root children (nodes 0, 1), node 1 has one child
+        // (node 2).
+        let tree = TreeSpec::from_parents(vec![-1, -1, 1]).unwrap();
+        let p = [
+            0.4f32, 0.4, 0.1, 0.1, // root row: judges nodes 0 and 1
+            0.25, 0.25, 0.25, 0.25, // after node 0 (never reached)
+            0.1, 0.1, 0.1, 0.7, // after node 1: judges node 2
+            0.5, 0.5, 0.0, 0.0, // after node 2: the bonus row
+        ];
+        let q = [
+            0.8f32, 0.2, 0.0, 0.0, // q for node 0 (drafted 0)
+            0.0, 1.0, 0.0, 0.0, // q for node 1 (drafted 1)
+            0.0, 0.0, 0.0, 1.0, // q for node 2 (drafted 3)
+        ];
+        let drafted = [0i32, 1, 3];
+        // node 0: beta = min(1, 0.4/0.8) = 0.5 -> u=0.6 rejects.
+        // residual r = max(p - q, 0) = [0, 0.2, 0.1, 0.1], z = 0.4.
+        // node 1: beta = min(1, r(1)/(z*q(1))) = min(1, 0.2/0.4) = 0.5
+        //         -> u=0.3 accepts; r resets to p-row after node 1.
+        // node 2: beta = min(1, 0.7/1.0) -> u=0.55 accepts (leaf).
+        // bonus from [0.5, 0.5, 0, 0] at u=0.6 -> cumsum hits at id 1.
+        let u = RoundUniforms {
+            accept: vec![0.6, 0.3, 0.55],
+            sample: 0.6,
+        };
+        let tv = verify_tree(&tree, v, &p, &q, &drafted, SamplingMode::Stochastic, &u);
+        assert_eq!(tv.path, vec![1, 2]);
+        assert_eq!(tv.token, 1);
+
+        // Same draws but u_acc[1] = 0.51 > 0.5: node 1 also rejected;
+        // the replacement comes from the twice-folded residual
+        // r = [0, 0, 0.1, 0.1] (node 1's q removed 0.2 of mass at id 1).
+        let u2 = RoundUniforms {
+            accept: vec![0.6, 0.51, 0.55],
+            sample: 0.4,
+        };
+        let tv2 = verify_tree(&tree, v, &p, &q, &drafted, SamplingMode::Stochastic, &u2);
+        assert!(tv2.path.is_empty());
+        // threshold 0.4 * 0.2 = 0.08 -> first cumsum >= 0.08 is id 2.
+        assert_eq!(tv2.token, 2);
+    }
+
+    /// Greedy tree: the child matching the pristine row's argmax is
+    /// accepted regardless of uniforms; no match emits the argmax.
+    #[test]
+    fn tree_verify_greedy_picks_argmax_child() {
+        let v = 4;
+        let tree = TreeSpec::from_fanout(&[2]).unwrap();
+        let p = [
+            0.1f32, 0.6, 0.2, 0.1, // root row: argmax = 1
+            0.25, 0.25, 0.25, 0.25, //
+            0.7, 0.1, 0.1, 0.1, // after node 1: bonus row, argmax = 0
+        ];
+        let q = [
+            0.5f32, 0.5, 0.0, 0.0, //
+            0.5, 0.5, 0.0, 0.0,
+        ];
+        let u = RoundUniforms::default();
+        // second sibling holds the argmax token
+        let tv = verify_tree(&tree, v, &p, &q, &[0, 1], SamplingMode::Greedy, &u);
+        assert_eq!(tv.path, vec![1]);
+        assert_eq!(tv.token, 0); // bonus = argmax of the leaf row
+        // no sibling matches -> reject, emit argmax of the root row
+        let tv2 = verify_tree(&tree, v, &p, &q, &[0, 2], SamplingMode::Greedy, &u);
+        assert!(tv2.path.is_empty());
+        assert_eq!(tv2.token, 1);
+    }
+
+    /// The tree rule preserves the target distribution exactly for a
+    /// one-level two-candidate tree with i.i.d. candidates (the
+    /// SpecInfer/MCSD recursive-rejection invariant).
+    #[test]
+    fn tree_verify_two_candidates_preserves_target() {
+        let mut rng = Pcg64::new(91, 0);
+        let v = 12;
+        let p0 = dist(&mut rng, v, 2.0);
+        let q0 = dist(&mut rng, v, 2.0);
+        let bonus = dist(&mut rng, v, 2.0);
+        let tree = TreeSpec::from_fanout(&[2]).unwrap();
+        // block rows: root, after-node-0, after-node-1 (both bonus)
+        let mut p = p0.clone();
+        p.extend_from_slice(&bonus);
+        p.extend_from_slice(&bonus);
+        let mut q = q0.clone();
+        q.extend_from_slice(&q0);
+        let n = 200_000;
+        let mut counts = vec![0f64; v];
+        for _ in 0..n {
+            let drafted = [
+                categorical_from_uniform(&q0, rng.uniform() as f32) as i32,
+                categorical_from_uniform(&q0, rng.uniform() as f32) as i32,
+            ];
+            let u = RoundUniforms::draw(&mut rng, 2, SamplingMode::Stochastic);
+            let tv = verify_tree(&tree, v, &p, &q, &drafted, SamplingMode::Stochastic, &u);
+            let first = match tv.path.first() {
+                Some(&node) => drafted[node],
+                None => tv.token,
+            };
+            counts[first as usize] += 1.0;
+        }
+        for i in 0..v {
+            let emp = counts[i] / n as f64;
+            assert!(
+                (emp - p0[i] as f64).abs() < 0.006,
+                "token {i}: empirical {emp:.4} vs target {:.4}",
+                p0[i]
+            );
+        }
+    }
+
+    /// Emptied residual: once rejected siblings cover ALL of the target
+    /// row's mass (z == 0 — reachable when a candidate lands outside
+    /// the residual's support while its q covers it, or through fp
+    /// rounding), every remaining candidate must be rejected (no 0/0
+    /// NaN acceptance) and the emission falls back to the pristine row
+    /// — matching the device graphs' clamped arithmetic.
+    #[test]
+    fn tree_verify_empty_residual_rejects_remaining_siblings() {
+        let v = 4;
+        let tree = TreeSpec::from_fanout(&[3]).unwrap();
+        let p = [
+            0.5f32, 0.25, 0.25, 0.0, // root row
+            0.25, 0.25, 0.25, 0.25, // unreached bonus rows
+            0.25, 0.25, 0.25, 0.25, //
+            0.25, 0.25, 0.25, 0.25,
+        ];
+        // sibling 0 rejects (beta 0.5), leaving r = [0, .25, .25, 0];
+        // sibling 1's q covers r exactly but its candidate sits outside
+        // the support (q1(3) = 0 -> beta 0), so the rejection folds the
+        // residual to exactly zero; sibling 2 then faces z == 0.
+        let q = [
+            1.0f32, 0.0, 0.0, 0.0, //
+            0.0, 0.5, 0.5, 0.0, //
+            0.0, 1.0, 0.0, 0.0,
+        ];
+        let drafted = [0i32, 3, 1];
+        for mode in [SamplingMode::Stochastic, SamplingMode::GreedyDraft] {
+            let u = RoundUniforms {
+                accept: vec![0.9, 0.999, 0.0], // sibling 2 would "accept" on NaN
+                sample: 0.6,
+            };
+            let tv = verify_tree(&tree, v, &p, &q, &drafted, mode, &u);
+            assert!(tv.path.is_empty(), "{mode:?}: accepted from an empty residual");
+            // fallback samples the pristine root row: cumsum hits id 1.
+            assert_eq!(tv.token, 1, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn argmax_rank_orders_candidates() {
+        let probs = [0.1f32, 0.5, 0.3, 0.1];
+        let mut scratch = Vec::new();
+        assert_eq!(argmax_rank(&probs, 0, &mut scratch), 1);
+        assert_eq!(argmax_rank(&probs, 1, &mut scratch), 2);
+        assert_eq!(argmax_rank(&probs, 2, &mut scratch), 0); // tie -> first
+        assert_eq!(argmax_rank(&probs, 3, &mut scratch), 3);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Integration tests over the PJRT runtime + engine. These need
-//! `artifacts/` (built by `make artifacts`); each test skips gracefully
-//! when artifacts are absent so `cargo test` stays green pre-build.
+//! `artifacts/` (built by `python3 -m compile.aot --out ../artifacts`
+//! from `python/`); each test skips gracefully when artifacts are
+//! absent so `cargo test` stays green pre-build.
 //!
 //! The heavyweight invariant here is greedy losslessness: at T=0,
 //! speculative decoding must produce EXACTLY the vanilla greedy sequence
@@ -26,7 +27,7 @@ fn artifacts() -> Option<&'static Path> {
     if p.join("manifest.json").exists() {
         Some(p)
     } else {
-        println!("SKIP: artifacts missing (run `make artifacts`)");
+        println!("SKIP: artifacts missing (run python/compile/aot.py)");
         None
     }
 }
@@ -116,6 +117,39 @@ fn engine_for_draft<'rt>(
             mode: mode.sampling(),
             seed,
             verify_path,
+            tree: None,
+        },
+    )
+    .unwrap()
+}
+
+/// Like `engine_for_draft` but decoding a candidate TREE per round.
+fn tree_engine_for<'rt>(
+    rt: &'rt Runtime,
+    work: &Path,
+    draft: &str,
+    mode: EvalMode,
+    fanout: &str,
+    seed: u64,
+    verify_path: VerifyPath,
+) -> SpecEngine<'rt> {
+    let dirs = RunDirs::new(work);
+    let tckpt = read_checkpoint(&dirs.target_ckpt("dense-s")).unwrap();
+    let arch = draft.split('@').next().unwrap();
+    let dckpt = read_checkpoint(&dirs.draft_ckpt(&format!("{arch}_dense-s__kl"))).unwrap();
+    SpecEngine::new(
+        rt,
+        draft,
+        &tckpt,
+        &dckpt,
+        None,
+        EngineOpts {
+            temperature: 1.0,
+            mode: mode.sampling(),
+            seed,
+            verify_path,
+            tree: Some(lk_spec::spec::sampling::TreeSpec::parse(fanout).unwrap()),
+            ..Default::default()
         },
     )
     .unwrap()
@@ -147,6 +181,7 @@ fn engine_integration_suite() {
     batch_rows_independent(&rt, &work, &corpus);
     scheduler_join_matches_lockstep(&rt, &work, &corpus);
     device_verify_matches_host(&rt, &work, &corpus);
+    tree_decoding_suite(&rt, &work, &corpus);
     k_sweep_shapes(&rt, &work, &corpus);
     greedy_draft_not_better(&rt, &work, &corpus);
     mtp_param_mapping(&rt);
@@ -443,6 +478,108 @@ fn device_verify_matches_host(rt: &Runtime, work: &Path, corpus: &Corpus) {
             }
         }
     }
+}
+
+/// Multi-candidate decoding on the real engine (medusa 2x2 tree).
+/// Three invariants:
+///   1. greedy tree decoding is LOSSLESS — byte-identical to vanilla
+///      greedy (tree attention, the walk, and the KV path splice must
+///      all be exact for this to hold);
+///   2. forced-host and forced-device tree engines emit identical
+///      tokens and per-level acceptance stats from the same seed
+///      (golden-uniform parity through the verify_tree_fused graph);
+///   3. the device path keeps per-round host traffic at O(B·N) ints.
+fn tree_decoding_suite(rt: &Runtime, work: &Path, corpus: &Corpus) {
+    println!("== tree_decoding_suite");
+    if !rt.has_target_entry("dense-s", "verify_tree_b1") {
+        println!("SKIP: artifacts predate the tree verify entries");
+        return;
+    }
+    let prompts = corpus
+        .load(lk_spec::data::grammar::Domain::Chat, "eval")
+        .unwrap()
+        .prompts(3, 12);
+
+    // --- greedy losslessness ------------------------------------------
+    {
+        let mut e = tree_engine_for(
+            rt, work, "medusa@dense-s", EvalMode::T0, "2x2", 19, VerifyPath::Host,
+        );
+        assert_eq!(e.backend_name(), "medusa-tree");
+        for p in prompts.iter().take(2) {
+            let spec = e.generate_batch(std::slice::from_ref(p), 20).unwrap();
+            let vanilla = e.generate_vanilla(p, 20).unwrap();
+            let n = 20.min(spec[0].tokens.len()).min(vanilla.tokens.len());
+            assert_eq!(
+                spec[0].tokens[..n],
+                vanilla.tokens[..n],
+                "greedy tree decoding diverged from vanilla greedy"
+            );
+        }
+    }
+
+    // --- host/device golden-uniform parity ----------------------------
+    let device_ready = rt.has_target_entry("dense-s", "verify_tree_fused_b1")
+        && rt.has_draft_entry("medusa@dense-s", "propose_tree_sample_b1");
+    if !device_ready {
+        println!("SKIP: artifacts lack the fused tree entries");
+        return;
+    }
+    for mode in [EvalMode::T1, EvalMode::T0, EvalMode::T1GreedyDraft] {
+        let host = {
+            let mut e = tree_engine_for(
+                rt, work, "medusa@dense-s", mode, "2x2", 57, VerifyPath::Host,
+            );
+            assert_eq!(e.verify_path(), "host");
+            e.generate_batch(&prompts, 20).unwrap()
+        };
+        let dev = {
+            let mut e = tree_engine_for(
+                rt, work, "medusa@dense-s", mode, "2x2", 57, VerifyPath::Device,
+            );
+            assert_eq!(e.verify_path(), "device");
+            let out = e.generate_batch(&prompts, 20).unwrap();
+            assert!(
+                e.metrics.bytes_to_host_per_round() < 1024.0,
+                "tree {mode:?}: device path pulled {} B/round",
+                e.metrics.bytes_to_host_per_round()
+            );
+            assert!(e.metrics.nodes_per_round() > 5.9, "2x2 tree drafts 6 nodes");
+            out
+        };
+        for (i, (a, b)) in host.iter().zip(&dev).enumerate() {
+            assert_eq!(
+                a.tokens, b.tokens,
+                "tree {mode:?} request {i}: device tokens diverge from host"
+            );
+            assert_eq!(a.stats.accepted, b.stats.accepted, "tree {mode:?} req {i}");
+            assert_eq!(
+                a.stats.prefix_hist, b.stats.prefix_hist,
+                "tree {mode:?} req {i}"
+            );
+        }
+    }
+
+    // --- tree vs chain: acceptance length should not degrade ----------
+    let chain_tau: f64 = {
+        let mut e = engine_for_draft(
+            rt, work, "medusa@dense-s", EvalMode::T1, 2, 7, VerifyPath::Auto,
+        );
+        let r = e.generate_batch(&prompts, 24).unwrap();
+        r.iter().map(|x| x.stats.tokens_per_round()).sum::<f64>() / r.len() as f64
+    };
+    let tree_tau: f64 = {
+        let mut e = tree_engine_for(
+            rt, work, "medusa@dense-s", EvalMode::T1, "2x2", 7, VerifyPath::Auto,
+        );
+        let r = e.generate_batch(&prompts, 24).unwrap();
+        r.iter().map(|x| x.stats.tokens_per_round()).sum::<f64>() / r.len() as f64
+    };
+    println!("   tokens/round: chain-k2 {chain_tau:.3} vs tree-2x2 {tree_tau:.3}");
+    assert!(
+        tree_tau >= chain_tau - 0.35,
+        "2x2 tree ({tree_tau:.3} tok/round) far below the depth-2 chain ({chain_tau:.3})"
+    );
 }
 
 /// Batched lockstep decoding must give each sequence the same results it

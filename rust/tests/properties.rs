@@ -11,7 +11,7 @@ use lk_spec::spec::accept::AcceptanceStats;
 use lk_spec::spec::gradients;
 use lk_spec::spec::sampling::{
     acceptance_rate, categorical_from_uniform, sample_categorical, softmax_t, verify_round,
-    verify_token, RoundUniforms, SamplingMode, Verdict,
+    verify_token, verify_tree, RoundUniforms, SamplingMode, TreeSpec, Verdict,
 };
 use lk_spec::tensor::{read_checkpoint, write_checkpoint, Checkpoint, DType, HostTensor};
 use lk_spec::util::proptest::{forall, gen};
@@ -140,6 +140,125 @@ fn prop_fused_round_acceptance_equals_alpha() {
             let emp = acc as f64 / n as f64;
             if (emp - alpha).abs() > 0.015 {
                 return Err(format!("empirical {emp:.4} vs alpha {alpha:.4}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// THE tree-degeneration property (ISSUE-3 acceptance criterion): a
+/// single-chain topology run through the multi-candidate rule
+/// reproduces `verify_round` verdicts EXACTLY — same uniforms in, same
+/// accepted prefix and same emitted token out, bit-for-bit, in every
+/// sampling mode. (The host-vs-device half of the parity triangle is
+/// pinned by python/tests/test_tree_verify.py over the same
+/// formulations.)
+#[test]
+fn prop_tree_chain_degenerates_to_verify_round() {
+    forall(
+        "chain TreeSpec == verify_round",
+        0x7EE5,
+        48,
+        |rng| {
+            let v = [4, 8, 16, 48][rng.below(4)];
+            let k = 1 + rng.below(7);
+            let mode = [
+                SamplingMode::Stochastic,
+                SamplingMode::Greedy,
+                SamplingMode::GreedyDraft,
+            ][rng.below(3)];
+            let mut p = Vec::new();
+            for _ in 0..=k {
+                p.extend(gen::dist(rng, v, 1.0 + rng.uniform() * 3.0));
+            }
+            let mut q = Vec::new();
+            let mut drafted = Vec::new();
+            for _ in 0..k {
+                let qi = gen::dist(rng, v, 1.0 + rng.uniform() * 3.0);
+                drafted.push(sample_categorical(&mut Pcg64::new(rng.next_u64(), 0), &qi) as i32);
+                q.extend(qi);
+            }
+            let u = RoundUniforms {
+                accept: (0..k).map(|_| rng.uniform() as f32).collect(),
+                sample: rng.uniform() as f32,
+            };
+            (k, v, p, q, drafted, u, mode)
+        },
+        |(k, v, p, q, drafted, u, mode)| {
+            let rv = verify_round(*k, *v, p, q, drafted, *mode, u);
+            let tv = verify_tree(&TreeSpec::chain(*k), *v, p, q, drafted, *mode, u);
+            if tv.path.len() != rv.n_accepted {
+                return Err(format!(
+                    "path len {} != n_accepted {}",
+                    tv.path.len(),
+                    rv.n_accepted
+                ));
+            }
+            if tv.path != (0..rv.n_accepted).collect::<Vec<_>>() {
+                return Err(format!("path {:?} not the prefix", tv.path));
+            }
+            if tv.token != rv.token {
+                return Err(format!("token {} != {}", tv.token, rv.token));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Structural invariants of the tree walk on arbitrary fanout
+/// topologies: the accepted path is a root-to-node chain (one node per
+/// level, each the parent of the next), never deeper than the tree, and
+/// the emission is a valid token id.
+#[test]
+fn prop_tree_verify_path_is_root_chain() {
+    forall(
+        "tree verdict structurally valid",
+        0x7EE6,
+        48,
+        |rng| {
+            let v = [4, 8, 16][rng.below(3)];
+            let fanout: Vec<usize> = (0..1 + rng.below(2)).map(|_| 1 + rng.below(2)).collect();
+            let tree = TreeSpec::from_fanout(&fanout).unwrap();
+            let n = tree.len();
+            let mode = [
+                SamplingMode::Stochastic,
+                SamplingMode::Greedy,
+                SamplingMode::GreedyDraft,
+            ][rng.below(3)];
+            let mut p = Vec::new();
+            for _ in 0..=n {
+                p.extend(gen::dist(rng, v, 2.0));
+            }
+            let mut q = Vec::new();
+            let mut drafted = Vec::new();
+            for _ in 0..n {
+                let qi = gen::dist(rng, v, 2.0);
+                drafted.push(categorical_from_uniform(&qi, rng.uniform() as f32) as i32);
+                q.extend(qi);
+            }
+            let u = RoundUniforms {
+                accept: (0..n).map(|_| rng.uniform() as f32).collect(),
+                sample: rng.uniform() as f32,
+            };
+            (tree, v, p, q, drafted, u, mode)
+        },
+        |(tree, v, p, q, drafted, u, mode)| {
+            let tv = verify_tree(tree, *v, p, q, drafted, *mode, u);
+            if tv.path.len() > tree.depth() {
+                return Err(format!("path {} deeper than {}", tv.path.len(), tree.depth()));
+            }
+            let mut prev: i32 = -1;
+            for (lvl, &node) in tv.path.iter().enumerate() {
+                if tree.level(node) != lvl {
+                    return Err(format!("node {node} at level {} != {lvl}", tree.level(node)));
+                }
+                if tree.parent(node) != prev {
+                    return Err(format!("node {node} parent {} != {prev}", tree.parent(node)));
+                }
+                prev = node as i32;
+            }
+            if !(0..*v as i32).contains(&tv.token) {
+                return Err(format!("token {} out of range", tv.token));
             }
             Ok(())
         },

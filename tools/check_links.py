@@ -1,0 +1,52 @@
+#!/usr/bin/env python3
+"""Markdown link check: every relative link/image target in the given
+markdown files must exist on disk (anchors are stripped; http(s)/mailto
+links are skipped). Exits non-zero listing the broken ones — the CI
+guard that keeps README/DESIGN/ROADMAP from rotting silently.
+
+Usage: check_links.py [FILE.md ...]   (defaults to the repo's top-level
+markdown files, resolved relative to this script's parent directory)
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+DEFAULT = ["README.md", "DESIGN.md", "ROADMAP.md", "PAPER.md", "PAPERS.md", "CHANGES.md"]
+
+
+def check(md: Path) -> list[str]:
+    broken = []
+    for n, line in enumerate(md.read_text().splitlines(), 1):
+        for m in LINK.finditer(line):
+            target = m.group(1)
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, …
+                continue
+            path = target.split("#", 1)[0]
+            if not path:  # pure in-page anchor
+                continue
+            if not (md.parent / path).exists():
+                broken.append(f"{md}:{n}: broken link -> {target}")
+    return broken
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    files = [Path(a) for a in sys.argv[1:]] or [
+        root / f for f in DEFAULT if (root / f).exists()
+    ]
+    broken = []
+    for f in files:
+        if not f.exists():
+            broken.append(f"{f}: file missing")
+            continue
+        broken.extend(check(f))
+    for b in broken:
+        print(b)
+    print(f"checked {len(files)} files: {'FAIL' if broken else 'ok'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

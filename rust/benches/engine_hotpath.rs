@@ -7,7 +7,7 @@
 use std::path::Path;
 use std::time::Instant;
 
-use lk_spec::bench::{bench, skip, Table};
+use lk_spec::bench::{bench, skip, JsonRows, Table};
 use lk_spec::data::corpus::Corpus;
 use lk_spec::data::grammar::Domain;
 use lk_spec::eval::{EvalMode, EvalSettings};
@@ -17,9 +17,11 @@ use lk_spec::server::metrics::{
     device_bytes_per_round, host_draft_bytes_per_round, host_verify_bytes_per_round,
     tree_device_bytes_per_round, tree_host_bytes_per_round,
 };
-use lk_spec::server::{Scheduler, SimCore};
+use lk_spec::server::{DownshiftConfig, Scheduler, SimCore};
+use lk_spec::spec::adaptive::{ControllerCfg, CostModel, SpecController};
 use lk_spec::tensor::HostTensor;
 use lk_spec::train::RunDirs;
+use lk_spec::util::Json;
 
 /// Host-side scheduler bookkeeping cost (slot allocation, join/leave,
 /// metrics) measured against the PJRT-free SimCore — isolates the
@@ -74,12 +76,187 @@ fn bench_scheduler_overhead() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One SimCore serving run for the controller bench; returns the cost
+/// ledger the table and BENCH_engine.json rows are built from.
+struct ControllerRun {
+    rounds: u64,
+    round_k_sum: u64,
+    padded_row_rounds: u64,
+    downshifts: u64,
+    tokens: u64,
+    accepted: u64,
+    live_row_rounds: u64,
+    secs: f64,
+}
+
+impl ControllerRun {
+    fn rounds_per_token(&self) -> f64 {
+        self.rounds as f64 / self.tokens.max(1) as f64
+    }
+
+    /// Simulated round cost: one verify-unit per round plus the draft
+    /// chain (group-level — drafting is batched across rows).
+    fn cost_per_token(&self, draft_cost: f64) -> f64 {
+        (self.rounds as f64 + draft_cost * self.round_k_sum as f64) / self.tokens.max(1) as f64
+    }
+
+    fn accepted_len_mean(&self) -> f64 {
+        self.accepted as f64 / self.live_row_rounds.max(1) as f64
+    }
+}
+
+/// §Controller bench: adaptive K + long-tail downshift against the
+/// fixed-K grid on a low-α long-tail mix (SimCore — always runs).
+///
+/// Workload: four high-α (0.9) short sessions fill the b=4 bucket; a
+/// low-α (0.15) long request queues behind them, joins mid-flight and
+/// ends as a 1-row long tail. No single fixed K serves both phases:
+/// deep chains pay wasted drafts in the tail, short chains slow the
+/// high-α phase — and without downshift the tail burns 3 padding rows
+/// per round. The controller runs K≈max through the high-α phase,
+/// collapses the chain when the tail's acceptance shows up, and the
+/// scheduler migrates the group to the b=1 bucket.
+fn bench_speculation_controller(json: &mut JsonRows) -> anyhow::Result<()> {
+    const DRAFT_COST: f64 = 0.5;
+    const K_MAX: usize = 7;
+    let profiles = vec![
+        vec![0.9; K_MAX], // ids 0..3: the short high-α burst
+        vec![0.9; K_MAX],
+        vec![0.9; K_MAX],
+        vec![0.9; K_MAX],
+        vec![0.15; K_MAX], // id 4: the low-α long tail
+    ];
+    let run = |fixed_k: Option<usize>, downshift: bool| -> anyhow::Result<ControllerRun> {
+        let mut core =
+            SimCore::new(fixed_k.unwrap_or(K_MAX), 0xADA7, vec![1, 4]).with_alpha(profiles.clone());
+        if fixed_k.is_none() {
+            core = core.with_controller(SpecController::new(ControllerCfg {
+                k_max: K_MAX,
+                halflife: 16.0,
+                cost: CostModel::chained(DRAFT_COST),
+                ..Default::default()
+            }));
+        }
+        let cfg = BatcherConfig {
+            buckets: vec![1, 4],
+            max_wait: std::time::Duration::ZERO,
+            queue_cap: 64,
+        };
+        let ds = DownshiftConfig {
+            enabled: downshift,
+            after_rounds: 4,
+        };
+        let mut sched = Scheduler::with_downshift(core, cfg, ds);
+        for i in 0..4 {
+            sched.submit(vec![i + 1, 3], 48).map_err(|_| anyhow::anyhow!("queue full"))?;
+        }
+        sched.submit(vec![9, 9], 96).map_err(|_| anyhow::anyhow!("queue full"))?;
+        let t0 = Instant::now();
+        let (mut tokens, mut accepted) = (0u64, 0u64);
+        let mut served = 0usize;
+        let mut ticks = 0usize;
+        while served < 5 {
+            for (_, r) in sched.tick(Instant::now())? {
+                tokens += r.tokens.len() as u64;
+                accepted += r.stats.accepted.iter().sum::<u64>();
+                served += 1;
+            }
+            ticks += 1;
+            anyhow::ensure!(ticks < 100_000, "controller bench did not converge");
+        }
+        Ok(ControllerRun {
+            rounds: sched.metrics.rounds,
+            round_k_sum: sched.core().round_k_sum,
+            padded_row_rounds: sched.metrics.padded_row_rounds,
+            downshifts: sched.metrics.downshifts,
+            tokens,
+            accepted,
+            live_row_rounds: sched.metrics.live_row_rounds,
+            secs: t0.elapsed().as_secs_f64(),
+        })
+    };
+
+    let mut table = Table::new(
+        "Speculation controller vs fixed K (SimCore low-α long-tail mix)",
+        &[
+            "config",
+            "rounds",
+            "rounds/tok",
+            "cost/tok",
+            "padded row-rounds",
+            "downshifts",
+            "acc len",
+        ],
+    );
+    let mut emit = |name: &str, r: &ControllerRun, json: &mut JsonRows| {
+        table.row(vec![
+            name.to_string(),
+            r.rounds.to_string(),
+            format!("{:.4}", r.rounds_per_token()),
+            format!("{:.4}", r.cost_per_token(DRAFT_COST)),
+            r.padded_row_rounds.to_string(),
+            r.downshifts.to_string(),
+            format!("{:.2}", r.accepted_len_mean()),
+        ]);
+        json.push(vec![
+            ("bench", Json::Str("speculation_controller".into())),
+            ("config", Json::Str(name.into())),
+            ("tok_s", Json::Num(r.tokens as f64 / r.secs.max(1e-9))),
+            ("tokens", Json::Num(r.tokens as f64)),
+            ("rounds", Json::Num(r.rounds as f64)),
+            ("rounds_per_token", Json::Num(r.rounds_per_token())),
+            ("sim_cost_per_token", Json::Num(r.cost_per_token(DRAFT_COST))),
+            ("padded_row_rounds", Json::Num(r.padded_row_rounds as f64)),
+            ("downshifts", Json::Num(r.downshifts as f64)),
+            ("accepted_len_mean", Json::Num(r.accepted_len_mean())),
+            ("bytes_to_host", Json::Num(0.0)), // SimCore: no transfers
+        ]);
+    };
+
+    let mut best_fixed: Option<(usize, ControllerRun)> = None;
+    for k in 1..=K_MAX {
+        let r = run(Some(k), false)?; // fixed K, no downshift: the old behavior
+        emit(&format!("fixed k={k}"), &r, json);
+        let better = match best_fixed.as_ref() {
+            Some((_, b)) => r.cost_per_token(DRAFT_COST) < b.cost_per_token(DRAFT_COST),
+            None => true,
+        };
+        if better {
+            best_fixed = Some((k, r));
+        }
+    }
+    let adaptive = run(None, true)?;
+    emit("adaptive + downshift", &adaptive, json);
+    table.emit("speculation_controller")?;
+
+    let (bk, best) = best_fixed.expect("fixed grid ran");
+    println!(
+        "best fixed K by simulated cost: k={bk} ({:.4} cost/tok, {:.4} rounds/tok, \
+         {} padded row-rounds)\nadaptive + downshift:          \
+         {:.4} cost/tok, {:.4} rounds/tok, {} padded row-rounds{}",
+        best.cost_per_token(DRAFT_COST),
+        best.rounds_per_token(),
+        best.padded_row_rounds,
+        adaptive.cost_per_token(DRAFT_COST),
+        adaptive.rounds_per_token(),
+        adaptive.padded_row_rounds,
+        if adaptive.rounds_per_token() < best.rounds_per_token()
+            && adaptive.padded_row_rounds < best.padded_row_rounds
+        {
+            "  << beats the best fixed K on both"
+        } else {
+            ""
+        },
+    );
+    Ok(())
+}
+
 /// Steady-state device→host transfer per decode round, host vs device
 /// verify path, from the closed forms in `server::metrics` at the
 /// manifest's own dims (512 vocab, Vt=8, 3d=288 features). Always runs —
 /// this is the analytic side of the ISSUE-2 acceptance criterion; the
 /// live counter below cross-checks it when artifacts exist.
-fn bench_verify_transfer() -> anyhow::Result<()> {
+fn bench_verify_transfer(json: &mut JsonRows) -> anyhow::Result<()> {
     let (vt, vocab, vd, d, f3) = (8usize, 512usize, 320usize, 96usize, 288usize);
     let mut table = Table::new(
         "Verify-path d2h transfer per round (analytic, manifest dims)",
@@ -98,6 +275,13 @@ fn bench_verify_transfer() -> anyhow::Result<()> {
                 dev.to_string(),
                 format!("{:.0}x", host as f64 / dev as f64),
             ]);
+            for (path, bytes) in [("host", host), ("device", dev)] {
+                json.push(vec![
+                    ("bench", Json::Str("verify_transfer_analytic".into())),
+                    ("config", Json::Str(format!("{arch} b={b} k={k} {path}"))),
+                    ("bytes_to_host", Json::Num(bytes as f64)),
+                ]);
+            }
         }
     }
     // Multi-candidate rounds (the default 2x2 MEDUSA tree, N = 6 nodes):
@@ -124,8 +308,8 @@ fn bench_verify_transfer() -> anyhow::Result<()> {
 /// forced device, proving the analytic table against the runtime's
 /// `output_host` accounting. Needs artifacts + the dense-s/eagle3
 /// checkpoints (skips quietly otherwise, like the end-to-end section).
-fn bench_live_transfer(rt: &Runtime, dirs: &RunDirs) -> anyhow::Result<()> {
-    use lk_spec::server::engine::{EngineOpts, SpecEngine, VerifyPath};
+fn bench_live_transfer(rt: &Runtime, dirs: &RunDirs, json: &mut JsonRows) -> anyhow::Result<()> {
+    use lk_spec::server::engine::{AdaptiveOpts, EngineOpts, SpecEngine, VerifyPath};
     use lk_spec::tensor::read_checkpoint;
     use lk_spec::util::Json;
     if !rt.has_target_entry("dense-s", "verify_fused_b1") {
@@ -154,6 +338,9 @@ fn bench_live_transfer(rt: &Runtime, dirs: &RunDirs) -> anyhow::Result<()> {
             Some(vm.clone()),
             EngineOpts {
                 verify_path: path,
+                // Fixed k: the analytic closed forms beside this table
+                // assume the full chain every round.
+                adaptive: AdaptiveOpts::fixed(),
                 ..Default::default()
             },
         )?;
@@ -163,14 +350,33 @@ fn bench_live_transfer(rt: &Runtime, dirs: &RunDirs) -> anyhow::Result<()> {
             engine.verify_path().to_string(),
             format!("{:.0}", engine.metrics.bytes_to_host_per_round()),
         ]);
+        json.push(vec![
+            ("bench", Json::Str("verify_transfer_live".into())),
+            ("config", Json::Str(format!("eagle3@dense-s b=1 {}", engine.verify_path()))),
+            ("rounds", Json::Num(engine.metrics.decode_rounds as f64)),
+            ("accepted_len_mean", Json::Num(engine.metrics.mean_accepted_len())),
+            ("bytes_to_host", Json::Num(engine.metrics.bytes_to_host_per_round())),
+        ]);
     }
     table.emit("verify_transfer_live")?;
     Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
+    // Every section appends machine-readable rows; the file is written
+    // on every exit path so the perf trajectory accumulates even on
+    // artifact-less runs (CI uploads it).
+    let mut json = JsonRows::new();
+    let result = run_sections(&mut json);
+    json.write("BENCH_engine.json")?;
+    println!("wrote results/BENCH_engine.json ({} rows)", json.len());
+    result
+}
+
+fn run_sections(json: &mut JsonRows) -> anyhow::Result<()> {
     bench_scheduler_overhead()?;
-    bench_verify_transfer()?;
+    bench_speculation_controller(json)?;
+    bench_verify_transfer(json)?;
     if !Path::new("artifacts/manifest.json").exists() {
         skip("artifacts missing");
         return Ok(());
@@ -221,7 +427,7 @@ fn main() -> anyhow::Result<()> {
         skip("checkpoints missing — per-executable numbers above still valid");
         return Ok(());
     }
-    bench_live_transfer(&rt, &dirs)?;
+    bench_live_transfer(&rt, &dirs, json)?;
     let corpus = Corpus::open(Path::new("data"))?;
     // Standard settings so this re-evaluation is interchangeable with the
     // cached cell it refreshes (same cell name => must be same protocol).
@@ -246,5 +452,12 @@ fn main() -> anyhow::Result<()> {
     for (name, calls, ms) in rt.exec_report().iter().take(8) {
         println!("  {name}: {calls} calls, {ms:.0} ms");
     }
+    json.push(vec![
+        ("bench", Json::Str("end_to_end".into())),
+        ("config", Json::Str("eagle3@dense-s kl chat t1 k=7".into())),
+        ("tok_s", Json::Num(cell.spec_tps)),
+        ("vanilla_tok_s", Json::Num(cell.vanilla_tps)),
+        ("tau", Json::Num(cell.tau)),
+    ]);
     Ok(())
 }

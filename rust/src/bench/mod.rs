@@ -5,7 +5,7 @@
 
 use std::time::Instant;
 
-use crate::util::Percentiles;
+use crate::util::{Json, Percentiles};
 
 /// Measure a closure: warmup then timed iterations; returns stats in ms.
 pub struct BenchResult {
@@ -102,6 +102,42 @@ pub fn fmt(x: f64, digits: usize) -> String {
     format!("{x:.digits$}")
 }
 
+/// Machine-readable bench rows: flat JSON objects accumulated across a
+/// bench binary's sections and written as one array (e.g.
+/// `results/BENCH_engine.json`) so the perf trajectory accumulates as
+/// CI artifacts instead of prose tables.
+#[derive(Default)]
+pub struct JsonRows {
+    rows: Vec<Json>,
+}
+
+impl JsonRows {
+    pub fn new() -> JsonRows {
+        JsonRows::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Append one row; values are `Json` scalars (`Json::Num`,
+    /// `Json::Str`, …).
+    pub fn push(&mut self, fields: Vec<(&str, Json)>) {
+        self.rows.push(Json::obj(fields));
+    }
+
+    /// Write the accumulated rows to `results/<file>`.
+    pub fn write(&self, file: &str) -> anyhow::Result<()> {
+        let dir = std::path::Path::new("results");
+        std::fs::create_dir_all(dir)?;
+        Json::Arr(self.rows.clone()).write_file(&dir.join(file))
+    }
+}
+
 /// Graceful skip for benches whose inputs (trained checkpoints / result
 /// cells) are not present — keeps `cargo bench` green on a fresh clone.
 pub fn skip(msg: &str) {
@@ -121,6 +157,22 @@ mod tests {
         assert!(s.contains("## T"));
         assert!(s.contains("| a  | bb |") || s.contains("| a | bb |"));
         assert!(s.contains("| 1"));
+    }
+
+    #[test]
+    fn json_rows_roundtrip() {
+        let mut rows = JsonRows::new();
+        assert!(rows.is_empty());
+        rows.push(vec![
+            ("bench", Json::Str("x".into())),
+            ("tok_s", Json::Num(12.5)),
+            ("rounds", Json::Num(3.0)),
+        ]);
+        assert_eq!(rows.len(), 1);
+        let text = Json::Arr(rows.rows.clone()).to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.idx(0).get("bench").as_str(), Some("x"));
+        assert_eq!(back.idx(0).get("tok_s").as_f64(), Some(12.5));
     }
 
     #[test]

@@ -11,7 +11,7 @@ use anyhow::{Context, Result};
 use crate::data::corpus::Corpus;
 use crate::data::grammar::Domain;
 use crate::runtime::Runtime;
-use crate::server::engine::{EngineOpts, SpecEngine};
+use crate::server::engine::{AdaptiveOpts, EngineOpts, SpecEngine};
 use crate::spec::accept::AcceptanceStats;
 use crate::spec::sampling::SamplingMode;
 use crate::tensor::read_checkpoint;
@@ -135,6 +135,9 @@ pub fn eval_cell(
         temperature: 1.0,
         mode: mode.sampling(),
         seed: settings.seed,
+        // The paper protocol studies FIXED draft budgets: the cell is
+        // parameterized by k, so the controller must not adapt it.
+        adaptive: AdaptiveOpts::fixed(),
         ..Default::default()
     };
     let mut engine = SpecEngine::new(rt, draft, &tckpt, &dckpt, vocab_map, opts)?;

@@ -5,8 +5,10 @@
 //! system: a speculator **training framework** with the LK loss family as
 //! first-class objectives, and a speculative-decoding **serving engine**
 //! (pluggable `DraftBackend` architectures, continuous-batching
-//! scheduler with mid-flight join/leave over slot-mapped KV rows, exact
-//! rejection sampling). Python/JAX only ever runs at build time
+//! scheduler with mid-flight join/leave over slot-mapped KV rows and
+//! long-tail bucket downshift, an online speculation controller picking
+//! each round's draft budget from measured acceptance, exact rejection
+//! sampling). Python/JAX only ever runs at build time
 //! (`python3 -m compile.aot`); every runtime path is Rust driving
 //! AOT-compiled XLA executables through PJRT.
 //!

@@ -66,7 +66,11 @@ fn print_help() {
            train-draft   --draft A@T --loss L | --all  [--steps N]\n\
            eval          --draft A@T --loss L [--domain D] [--mode t0|t1|t1gd] [--k K]\n\
            eval-all      run every paper-table cell (idempotent, cached)\n\
-           serve         --draft A@T --loss L [--requests N] [--tree FxF] — router demo\n\
+           serve         --draft A@T --loss L [--requests N] — router demo.\n\
+                         Adaptive speculation is ON by default (per-round K /\n\
+                         profiled trees); fixed overrides: --spec-k K, --tree FxF\n\
+                         (--tree auto = profiled topologies, --no-adaptive,\n\
+                         --draft-cost C tune the controller)\n\
            report        print cached result cells\n\
          \n\
          common options: --artifacts DIR (default artifacts), --runs DIR\n\
@@ -304,12 +308,43 @@ fn serve_demo(args: &Args) -> Result<()> {
     let loss = args.opt_or("loss", "lkl-eta3").to_string();
     let n_requests = args.opt_usize("requests", 12)?;
     let max_new = args.opt_usize("max-new", 32)?;
+    // The speculation controller is on by default; --spec-k and
+    // --tree FxF are FIXED overrides (see DESIGN.md §4a). --tree auto
+    // keeps tree decoding but lets the controller plan the topology
+    // per round from measured per-level acceptance.
+    let mut adaptive = lk_spec::server::AdaptiveOpts::default();
+    let spec_k = args.opt("spec-k").map(|s| s.parse::<usize>()).transpose()
+        .map_err(|_| anyhow::anyhow!("--spec-k expects an integer"))?;
+    if spec_k.is_some() || args.flag("no-adaptive") {
+        adaptive.enabled = false;
+    }
+    if let Some(c) = args.opt("draft-cost") {
+        let c: f64 = c
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--draft-cost expects a number"))?;
+        adaptive.draft_cost = Some(c);
+    }
     // Multi-candidate drafting: per-level fanouts, e.g. --tree 2x2
     // (parallel-head drafts only; see DESIGN.md §3).
-    let tree = args
-        .opt("tree")
-        .map(lk_spec::spec::sampling::TreeSpec::parse)
-        .transpose()?;
+    let tree = match args.opt("tree") {
+        Some("auto") => {
+            anyhow::ensure!(
+                adaptive.enabled,
+                "--tree auto plans topologies with the controller; it \
+                 contradicts --no-adaptive / --spec-k (use --tree FxF for \
+                 a fixed topology)"
+            );
+            adaptive.tree = true;
+            None
+        }
+        Some(s) => Some(lk_spec::spec::sampling::TreeSpec::parse(s)?),
+        None => None,
+    };
+    anyhow::ensure!(
+        spec_k.is_none() || tree.is_none(),
+        "--spec-k is a chain-length override; trees size by their \
+         topology — drop one of --spec-k / --tree"
+    );
     args.finish()?;
 
     let corpus = Corpus::open(&data)?;
@@ -337,9 +372,13 @@ fn serve_demo(args: &Args) -> Result<()> {
             None
         };
         // The engine implements SchedulerCore: the router's worker wraps
-        // it in a continuous-batching Scheduler (join/leave mid-flight).
+        // it in a continuous-batching Scheduler (join/leave mid-flight,
+        // long-tail downshift; the speculation controller lives in the
+        // engine itself).
         let opts = lk_spec::server::EngineOpts {
+            k_draft: spec_k.unwrap_or(lk_spec::server::EngineOpts::default().k_draft),
             tree: tree.clone(),
+            adaptive: adaptive.clone(),
             ..Default::default()
         };
         lk_spec::server::SpecEngine::new(rt, &draft, &tckpt, &dckpt, vocab_map, opts)

@@ -15,8 +15,8 @@ use crate::tensor::HostTensor;
 
 use super::{
     adopt_hidden_row, arg_refs, hidden_lit, lit_f32, lit_scalar_f32, lit_scalar_i32,
-    pickup_hidden_advance, pickup_hidden_bootstrap, upload, DraftBackend, EngineCx, GroupState,
-    QFlat, DUMMY_UNIFORM,
+    migrate_hidden_rows, pickup_hidden_advance, pickup_hidden_bootstrap, upload, DraftBackend,
+    EngineCx, GroupState, QFlat, DUMMY_UNIFORM,
 };
 
 pub struct Medusa;
@@ -28,6 +28,11 @@ impl DraftBackend for Medusa {
 
     fn max_k(&self, _rt: &Runtime, dspec: &DraftSpec) -> usize {
         dspec.k_heads
+    }
+
+    fn cost_model(&self) -> crate::spec::adaptive::CostModel {
+        // One propose pass prices every head: drafting deeper is free.
+        crate::spec::adaptive::CostModel::parallel()
     }
 
     fn supports_device(&self, rt: &Runtime, dspec: &DraftSpec) -> bool {
@@ -55,11 +60,11 @@ impl DraftBackend for Medusa {
         &self,
         cx: &EngineCx,
         g: &mut GroupState,
+        k: usize,
         drafts: &mut [Vec<i32>],
         q: &mut QFlat,
     ) -> Result<()> {
         let b = g.b;
-        let k = cx.k;
         let d = cx.tspec.d_model;
         let vocab = cx.tspec.vocab;
         let propose = cx
@@ -90,11 +95,11 @@ impl DraftBackend for Medusa {
         &self,
         cx: &EngineCx,
         g: &mut GroupState,
+        k: usize,
         drafts: &mut [Vec<i32>],
         q_dev: &mut Vec<xla::Literal>,
     ) -> Result<()> {
         let b = g.b;
-        let k = cx.k;
         let kh = cx.dspec.k_heads;
         // Row-major uniform draws mirror the host path's per-row loop;
         // heads beyond this round's k get inert constants (their
@@ -119,7 +124,7 @@ impl DraftBackend for Medusa {
         let outs = propose.run_bufs(&args)?;
         let toks = propose.output_host(&outs, 0)?.as_i32(); // [B, Kh] — O(B·K) ints
         for (row, dr) in drafts.iter_mut().enumerate() {
-            for (i, slot) in dr.iter_mut().enumerate() {
+            for (i, slot) in dr.iter_mut().enumerate().take(k) {
                 *slot = toks[row * kh + i];
             }
         }
@@ -171,6 +176,21 @@ impl DraftBackend for Medusa {
         // path: the conditioning hidden lives in the packed literal.
         if cx.device_verify {
             adopt_hidden_row(cx, dst, dst_row, src, src_row)?;
+        }
+        Ok(())
+    }
+
+    fn migrate_rows(
+        &self,
+        cx: &EngineCx,
+        dst: &mut GroupState,
+        src: &GroupState,
+        src_map: &[usize],
+    ) -> Result<()> {
+        // Host path: all draft state is per-sequence (`SeqState::hidden`,
+        // moved by the engine). Device path: repack the hidden carry.
+        if cx.device_verify {
+            migrate_hidden_rows(cx, dst, src, src_map)?;
         }
         Ok(())
     }

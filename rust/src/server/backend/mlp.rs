@@ -14,8 +14,8 @@ use crate::tensor::HostTensor;
 
 use super::{
     adopt_hidden_row, arg_refs, hidden_lit, lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32,
-    pickup_hidden_advance, pickup_hidden_bootstrap, tensor_row_into, upload, DraftBackend,
-    EngineCx, GroupState, QFlat,
+    migrate_hidden_rows, pickup_hidden_advance, pickup_hidden_bootstrap, tensor_row_into, upload,
+    DraftBackend, EngineCx, GroupState, QFlat,
 };
 
 pub struct Mlp;
@@ -54,11 +54,11 @@ impl DraftBackend for Mlp {
         &self,
         cx: &EngineCx,
         g: &mut GroupState,
+        k: usize,
         drafts: &mut [Vec<i32>],
         q: &mut QFlat,
     ) -> Result<()> {
         let b = g.b;
-        let k = cx.k;
         let d = cx.tspec.d_model;
         let vocab = cx.tspec.vocab;
         let step = cx
@@ -98,11 +98,11 @@ impl DraftBackend for Mlp {
         &self,
         cx: &EngineCx,
         g: &mut GroupState,
+        k: usize,
         drafts: &mut [Vec<i32>],
         q_dev: &mut Vec<xla::Literal>,
     ) -> Result<()> {
         let b = g.b;
-        let k = cx.k;
         let step = cx
             .rt
             .draft_entry(&cx.dspec.name, &format!("step_sample_b{b}"))?;
@@ -176,6 +176,19 @@ impl DraftBackend for Mlp {
     ) -> Result<()> {
         if cx.device_verify {
             adopt_hidden_row(cx, dst, dst_row, src, src_row)?;
+        }
+        Ok(())
+    }
+
+    fn migrate_rows(
+        &self,
+        cx: &EngineCx,
+        dst: &mut GroupState,
+        src: &GroupState,
+        src_map: &[usize],
+    ) -> Result<()> {
+        if cx.device_verify {
+            migrate_hidden_rows(cx, dst, src, src_map)?;
         }
         Ok(())
     }

@@ -13,13 +13,19 @@
 //!   * `bootstrap` — build draft-side state from the target prefill
 //!     (draft-KV extension for recurrent archs, hidden pickup for
 //!     parallel-head archs);
-//!   * `propose`   — produce K draft tokens + full-vocab q distributions
-//!     per batch row (all sampling host-side via `spec::sampling`);
+//!   * `propose`   — produce the round's `k` draft tokens + full-vocab q
+//!     distributions per batch row (all sampling host-side via
+//!     `spec::sampling`); `k` is a PER-ROUND runtime value — the
+//!     engine's speculation controller may change it every round, so
+//!     backends must not cache it (`cx.k` is only the lifetime maximum);
 //!   * `advance`   — roll draft state past this round's accepted prefix
 //!     using the verify pass's features;
 //!   * `adopt_row` — copy one row of packed draft state between groups
 //!     (the continuous-batching join path; per-sequence host state moves
-//!     with the `SeqState` itself).
+//!     with the `SeqState` itself);
+//!   * `migrate_rows` — repack the listed rows of a group's draft state
+//!     into a freshly-allocated smaller group (the scheduler's long-tail
+//!     downshift; the engine moves `SeqState`s/target KV itself).
 //!
 //! Backends that carry the device-sampling artifacts additionally serve
 //! the DEVICE verify path (`supports_device` / `propose_device` /
@@ -81,7 +87,10 @@ pub struct EngineCx<'rt> {
     pub(crate) _param_lits: Vec<xla::Literal>,
     pub vocab_map: Option<Vec<i32>>,
     pub opts: EngineOpts,
-    /// Drafts per round (opts.k_draft clamped to the backend's max).
+    /// MAXIMUM drafts per round (opts.k_draft clamped to the backend's
+    /// max). The actual per-round chain length is the `k` argument the
+    /// engine passes to `propose`/`propose_device` — the speculation
+    /// controller may choose any value in 1..=this each round.
     pub k: usize,
     /// True when this engine runs the device-resident verify path —
     /// backends branch their bootstrap/adopt plumbing on it.
@@ -291,6 +300,14 @@ pub trait DraftBackend {
     /// Maximum chain length this architecture supports per round.
     fn max_k(&self, rt: &Runtime, dspec: &DraftSpec) -> usize;
 
+    /// Per-round cost structure in verify-call units — what the
+    /// speculation controller trades expected accepted tokens against.
+    /// Chained archs pay one draft dispatch per token; parallel-head
+    /// archs price every head in one propose pass.
+    fn cost_model(&self) -> crate::spec::adaptive::CostModel {
+        crate::spec::adaptive::CostModel::chained(0.25)
+    }
+
     /// Build draft-side state for a freshly prefilled group. `tok_flat`
     /// is the [B*Sp] prompt block fed to the target prefill; `feats` its
     /// [B, Sp, feat_dim] feature output. Sequence lengths and bootstrap
@@ -303,13 +320,16 @@ pub trait DraftBackend {
         feats: &HostTensor,
     ) -> Result<()>;
 
-    /// Draft `cx.k` tokens per row, filling `drafts[row][i]` (full-vocab
-    /// token ids) and `q.row(row, i)` (full-vocab draft distributions in
-    /// the engine's flat scratch).
+    /// Draft `k` tokens per row (`1 <= k <= cx.k`, chosen per round by
+    /// the engine), filling `drafts[row][..k]` (full-vocab token ids)
+    /// and `q.row(row, i)` (full-vocab draft distributions in the
+    /// engine's flat scratch). Stochastic mode consumes exactly `k`
+    /// stream draws per row regardless of architecture.
     fn propose(
         &self,
         cx: &EngineCx,
         g: &mut GroupState,
+        k: usize,
         drafts: &mut [Vec<i32>],
         q: &mut QFlat,
     ) -> Result<()>;
@@ -336,14 +356,16 @@ pub trait DraftBackend {
         false
     }
 
-    /// Device-path proposal: fill `drafts` with the k sampled token ids
-    /// (read back as O(B·K) ints) and push one [B, V] full-vocab q
-    /// LITERAL per position onto `q_dev` — sampling happens in-graph
-    /// from host-fed uniforms; the q distributions never reach the host.
+    /// Device-path proposal: fill `drafts` with the round's `k` sampled
+    /// token ids (read back as O(B·K) ints) and push one [B, V]
+    /// full-vocab q LITERAL per position onto `q_dev` — sampling happens
+    /// in-graph from host-fed uniforms; the q distributions never reach
+    /// the host. Like `propose`, `k` is per-round.
     fn propose_device(
         &self,
         _cx: &EngineCx,
         _g: &mut GroupState,
+        _k: usize,
         _drafts: &mut [Vec<i32>],
         _q_dev: &mut Vec<xla::Literal>,
     ) -> Result<()> {
@@ -453,6 +475,19 @@ pub trait DraftBackend {
         dst_row: usize,
         src: &GroupState,
         src_row: usize,
+    ) -> Result<()>;
+
+    /// Long-tail downshift: repack rows `src_map[i]` of `src`'s packed
+    /// draft state into rows `i` of the freshly-allocated smaller group
+    /// `dst` (`dst.b == src_map.len()`, `dst.seqs`/target KV already
+    /// moved by the engine). One host repack per downshift — a rare
+    /// event amortized against every padded round it ends.
+    fn migrate_rows(
+        &self,
+        cx: &EngineCx,
+        dst: &mut GroupState,
+        src: &GroupState,
+        src_map: &[usize],
     ) -> Result<()>;
 }
 
@@ -673,6 +708,44 @@ pub(crate) fn adopt_hidden_row(
         src_row,
         0,
     )?;
+    dst.h_prev = Some(h);
+    Ok(())
+}
+
+/// Repack selected batch rows of a packed literal into a literal of a
+/// different batch size: row `i` of the result is row `src_map[i]` of
+/// `src` (the long-tail downshift mover; `src_map` may repeat rows —
+/// padding rows clone a live one, mirroring the bootstrap convention).
+/// One host round-trip total, not one per row.
+pub(crate) fn repack_literal_rows(
+    src: &xla::Literal,
+    src_spec: &TensorSpec,
+    src_map: &[usize],
+    axis: usize,
+) -> Result<(xla::Literal, TensorSpec)> {
+    let host_src = pack::from_literal(src, src_spec, "repack_rows:src")?;
+    let mut spec = src_spec.clone();
+    spec.name = String::new();
+    spec.shape[axis] = src_map.len();
+    let mut host_dst = HostTensor::zeros(spec.dtype, &spec.shape);
+    for (dst_row, &src_row) in src_map.iter().enumerate() {
+        kv::copy_row(&mut host_dst, dst_row, &host_src, src_row, axis)?;
+    }
+    Ok((pack::to_literal(&host_dst)?, spec))
+}
+
+/// Downshift plumbing shared by the parallel-head backends (and the
+/// recurrent hidden carry): repack the `[B, d]` conditioning literal.
+pub(crate) fn migrate_hidden_rows(
+    cx: &EngineCx,
+    dst: &mut GroupState,
+    src: &GroupState,
+    src_map: &[usize],
+) -> Result<()> {
+    use anyhow::Context;
+    let d = cx.tspec.d_model;
+    let src_h = src.h_prev.as_ref().context("migrate_rows: src hidden")?;
+    let (h, _) = repack_literal_rows(src_h, &spec_f32(vec![src.b, d]), src_map, 0)?;
     dst.h_prev = Some(h);
     Ok(())
 }

@@ -16,8 +16,8 @@ use crate::tensor::HostTensor;
 
 use super::{
     arg_refs, copy_kv_row_device, copy_literal_row, lit_f32, lit_i32, lit_scalar_f32,
-    lit_scalar_i32, lit_zeros_f32, spec_f32, tensor_row, upload, DraftBackend, EngineCx,
-    GroupState, KvSide, QFlat, DKV_BATCH_AXIS,
+    lit_scalar_i32, lit_zeros_f32, migrate_hidden_rows, repack_literal_rows, spec_f32,
+    tensor_row, upload, DraftBackend, EngineCx, GroupState, KvSide, QFlat, DKV_BATCH_AXIS,
 };
 
 pub struct Recurrent;
@@ -167,11 +167,11 @@ impl DraftBackend for Recurrent {
         &self,
         cx: &EngineCx,
         g: &mut GroupState,
+        k: usize,
         drafts: &mut [Vec<i32>],
         q: &mut QFlat,
     ) -> Result<()> {
         let b = g.b;
-        let k = cx.k;
         let step = cx
             .rt
             .draft_entry(&cx.dspec.name, &format!("step_b{b}"))?;
@@ -215,11 +215,11 @@ impl DraftBackend for Recurrent {
         &self,
         cx: &EngineCx,
         g: &mut GroupState,
+        k: usize,
         drafts: &mut [Vec<i32>],
         q_dev: &mut Vec<xla::Literal>,
     ) -> Result<()> {
         let b = g.b;
-        let k = cx.k;
         // Position 0 was sampled in-graph by the previous extend call
         // (stream-order-identical to the host path's first propose draw).
         anyhow::ensure!(
@@ -435,6 +435,32 @@ impl DraftBackend for Recurrent {
                 src_row,
                 0,
             )?;
+            dst.q0_dev = Some(q);
+        }
+        Ok(())
+    }
+
+    fn migrate_rows(
+        &self,
+        cx: &EngineCx,
+        dst: &mut GroupState,
+        src: &GroupState,
+        src_map: &[usize],
+    ) -> Result<()> {
+        // Packed draft KV: one host repack of the selected rows.
+        let src_dkv = src.dkv.as_ref().context("migrate_rows: src dkv")?;
+        let src_spec = src.dkv_spec.as_ref().context("migrate_rows: src dkv spec")?;
+        let (dkv, dkv_spec) = repack_literal_rows(src_dkv, src_spec, src_map, DKV_BATCH_AXIS)?;
+        dst.dkv = Some(dkv);
+        dst.dkv_spec = Some(dkv_spec);
+        // Hidden carry [B, d] (both paths for recurrent archs).
+        migrate_hidden_rows(cx, dst, src, src_map)?;
+        // Device path: the extend-sampled first-draft q row rides along
+        // (tok0 is moved by the engine with the session state).
+        if cx.device_verify {
+            let v = cx.tspec.vocab;
+            let src_q = src.q0_dev.as_ref().context("migrate_rows: src q0")?;
+            let (q, _) = repack_literal_rows(src_q, &spec_f32(vec![src.b, v]), src_map, 0)?;
             dst.q0_dev = Some(q);
         }
         Ok(())

@@ -51,6 +51,10 @@ impl DraftBackend for MedusaTree {
         Medusa.max_k(rt, dspec)
     }
 
+    fn cost_model(&self) -> crate::spec::adaptive::CostModel {
+        Medusa.cost_model()
+    }
+
     fn bootstrap(
         &self,
         cx: &EngineCx,
@@ -65,10 +69,11 @@ impl DraftBackend for MedusaTree {
         &self,
         cx: &EngineCx,
         g: &mut GroupState,
+        k: usize,
         drafts: &mut [Vec<i32>],
         q: &mut QFlat,
     ) -> Result<()> {
-        Medusa.propose(cx, g, drafts, q)
+        Medusa.propose(cx, g, k, drafts, q)
     }
 
     fn advance(
@@ -91,6 +96,16 @@ impl DraftBackend for MedusaTree {
         src_row: usize,
     ) -> Result<()> {
         Medusa.adopt_row(cx, dst, dst_row, src, src_row)
+    }
+
+    fn migrate_rows(
+        &self,
+        cx: &EngineCx,
+        dst: &mut GroupState,
+        src: &GroupState,
+        src_map: &[usize],
+    ) -> Result<()> {
+        Medusa.migrate_rows(cx, dst, src, src_map)
     }
 
     // ------------------------------------------------------------------

@@ -34,8 +34,26 @@
 //! run-to-completion lockstep path (the evaluation protocol).
 //!
 //! Per-request RNG streams are keyed by a stable request id (not by
-//! bootstrap order), so a sequence's sample path is independent of batch
-//! composition, padding, admission order — and of the verify path.
+//! bootstrap order), so with a FIXED draft budget a sequence's sample
+//! path is independent of batch composition, padding, admission order —
+//! and of the verify path.
+//!
+//! The ONLINE SPECULATION CONTROLLER (`spec::adaptive`, on by default)
+//! closes the measure→act loop per round: per-position EWMA acceptance
+//! estimates drive the round's chain length `k_active` (the fused
+//! entries take it as a runtime scalar — no re-lowering) or, for tree
+//! backends without a fixed `--tree`, a freshly planned topology
+//! (runtime parent tensors). Greedy modes emit bit-identical tokens
+//! under any budget schedule, so the composition-independence above is
+//! unconditional there. In STOCHASTIC mode the realized budget schedule
+//! is shared group state: sample paths become a function of
+//! (seed, id, schedule) — still exactly lossless in distribution and
+//! replay-deterministic, and a constant schedule is bit-identical to
+//! the corresponding fixed configuration; strict composition
+//! independence of stochastic sample paths requires the fixed overrides
+//! (`--spec-k` / `--tree FxF`, or `AdaptiveOpts::fixed()` — what the
+//! eval protocol uses). See DESIGN.md §4a for the precise contract and
+//! its impossibility boundary.
 
 use std::time::Instant;
 
@@ -43,6 +61,7 @@ use anyhow::{bail, Result};
 
 use crate::runtime::Runtime;
 use crate::spec::accept::AcceptanceStats;
+use crate::spec::adaptive::{ControllerCfg, CostModel, SpecController};
 use crate::spec::sampling::{self, RoundUniforms, SamplingMode, TreeSpec};
 use crate::tensor::Checkpoint;
 use crate::train::checkpoint_to_params;
@@ -50,9 +69,9 @@ use crate::util::Pcg64;
 
 use super::backend::{
     arg_refs, copy_kv_row_device, copy_literal_row, lit_f32, lit_i32, lit_scalar_f32,
-    lit_scalar_i32, lit_zeros_f32, make_backend, tensor_row, tensor_row_into, upload,
-    upload_params, DraftBackend, EngineCx, GroupState, KvSide, QFlat, SeqState, DUMMY_UNIFORM,
-    TKV_BATCH_AXIS,
+    lit_scalar_i32, lit_zeros_f32, make_backend, repack_literal_rows, tensor_row,
+    tensor_row_into, upload, upload_params, DraftBackend, EngineCx, GroupState, KvSide, QFlat,
+    SeqState, DUMMY_UNIFORM, TKV_BATCH_AXIS,
 };
 use super::metrics::EngineMetrics;
 use super::scheduler::{AdmitReq, SchedulerCore};
@@ -78,23 +97,75 @@ pub enum VerifyPath {
     Device,
 }
 
+/// Online speculation-controller configuration (see `spec::adaptive`).
+/// On by default: `--spec-k` / `--tree FxF` act as fixed overrides that
+/// disable the corresponding adaptation.
+#[derive(Clone, Debug)]
+pub struct AdaptiveOpts {
+    /// Run the controller: adapt the chain length per round (`k_active`
+    /// in `k_min..=k_draft`) and, with `tree`, replan topologies per
+    /// round. With `enabled = false` nothing adapts (a `tree` engine
+    /// keeps its construction-time plan).
+    pub enabled: bool,
+    pub k_min: usize,
+    /// Per-token draft cost override in verify-call units; None = the
+    /// backend's own cost model (chained archs 0.25, parallel heads 0).
+    pub draft_cost: Option<f64>,
+    /// Profiled tree topologies: decode with the arch's `-tree` backend
+    /// and replan the fanouts each round from measured per-level alpha
+    /// (the adaptive replacement for a fixed `--tree FxF`).
+    pub tree: bool,
+    /// Per-level fanout cap for planned topologies.
+    pub fanout_max: usize,
+}
+
+impl Default for AdaptiveOpts {
+    fn default() -> Self {
+        AdaptiveOpts {
+            enabled: true,
+            k_min: 1,
+            draft_cost: None,
+            tree: false,
+            fanout_max: 4,
+        }
+    }
+}
+
+impl AdaptiveOpts {
+    /// Fixed-override configuration (controller off) — what `--spec-k`
+    /// and `--tree FxF` select, and what the paper-eval protocol uses.
+    pub fn fixed() -> AdaptiveOpts {
+        AdaptiveOpts {
+            enabled: false,
+            ..Default::default()
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct EngineOpts {
-    /// Draft tokens per round (chain length). Recurrent archs may exceed
-    /// the K=6 trained heads up to verify_t - 1 = 7; parallel-head archs
-    /// are capped at their head count. With a tree configured this is
-    /// overridden to the tree's depth (it sizes the acceptance stats).
+    /// MAXIMUM draft tokens per round (chain length). Recurrent archs
+    /// may exceed the K=6 trained heads up to verify_t - 1 = 7;
+    /// parallel-head archs are capped at their head count. With a tree
+    /// configured this is overridden to the tree's depth (it sizes the
+    /// acceptance stats). The speculation controller (`adaptive`, on by
+    /// default) picks each round's actual chain length in
+    /// `adaptive.k_min..=k_draft`; with `adaptive.enabled = false` every
+    /// round drafts exactly this many.
     pub k_draft: usize,
     pub temperature: f32,
     pub mode: SamplingMode,
     pub seed: u64,
     pub verify_path: VerifyPath,
-    /// Multi-candidate drafting: verify this candidate tree per round
-    /// instead of a single K-chain (None = chain decoding). Selects the
+    /// Multi-candidate drafting: verify this FIXED candidate tree per
+    /// round instead of a single K-chain (None = chain decoding, unless
+    /// `adaptive.tree` plans topologies per round). Selects the
     /// architecture's `-tree` backend variant; the tree must fit the
     /// lowered block (`len() <= verify_t - 1`) and the backend's head
     /// count (`depth() <= max_k`).
     pub tree: Option<TreeSpec>,
+    /// Online speculation controller (per-round K / profiled trees).
+    pub adaptive: AdaptiveOpts,
 }
 
 impl Default for EngineOpts {
@@ -106,6 +177,7 @@ impl Default for EngineOpts {
             seed: 1234,
             verify_path: VerifyPath::Auto,
             tree: None,
+            adaptive: AdaptiveOpts::default(),
         }
     }
 }
@@ -153,6 +225,18 @@ pub struct SpecEngine<'rt> {
     /// entry's masked q slots when k < verify_t-1 without a per-round
     /// rebuild (device path only).
     zero_q: std::collections::BTreeMap<usize, xla::Literal>,
+    /// The online speculation controller. Always fed (its alpha gauges
+    /// are free telemetry); consulted for the round budget only when
+    /// `opts.adaptive` enables it. Engine-lifetime state: estimates stay
+    /// warm across groups.
+    controller: SpecController,
+    /// Chain-length adaptation active (controller picks `k_active`).
+    adaptive_chain: bool,
+    /// Topology adaptation active (controller replans the tree).
+    adaptive_tree: bool,
+    /// The current candidate-tree topology (fixed `--tree`, or the
+    /// controller's latest plan). None = chain decoding.
+    tree_plan: Option<TreeSpec>,
 }
 
 impl<'rt> SpecEngine<'rt> {
@@ -166,30 +250,24 @@ impl<'rt> SpecEngine<'rt> {
     ) -> Result<SpecEngine<'rt>> {
         let dspec = rt.manifest.draft(draft_name)?.clone();
         let tspec = rt.manifest.target(&dspec.target)?.clone();
-        // A configured tree selects the architecture's multi-candidate
-        // backend variant (registered under the `-tree` suffix).
-        let backend = match &opts.tree {
-            None => make_backend(&dspec.arch)?,
-            Some(_) => make_backend(&format!("{}-tree", dspec.arch))?,
+        // Tree decoding — a fixed `--tree` topology OR controller-planned
+        // topologies — selects the architecture's multi-candidate backend
+        // variant (registered under the `-tree` suffix).
+        let use_tree = opts.tree.is_some() || opts.adaptive.tree;
+        let backend = if use_tree {
+            make_backend(&format!("{}-tree", dspec.arch))?
+        } else {
+            make_backend(&dspec.arch)?
         };
         if dspec.arch == "eagle3" && vocab_map.is_none() {
             bail!("eagle3 needs a vocab map");
         }
         let max_k = backend.max_k(rt, &dspec);
+        let n_slots = rt.manifest.verify_t - 1;
         let mut opts = opts;
-        opts.k_draft = opts.k_draft.min(max_k);
-        if let Some(tree) = &opts.tree {
-            let n_slots = rt.manifest.verify_t - 1;
-            anyhow::ensure!(
-                tree.len() <= n_slots,
-                "tree has {} nodes but the lowered verify block fits {n_slots}",
-                tree.len()
-            );
-            anyhow::ensure!(
-                tree.depth() <= max_k,
-                "tree depth {} exceeds {draft_name}'s max chain length {max_k}",
-                tree.depth()
-            );
+        opts.k_draft = opts.k_draft.min(max_k).max(1);
+        opts.adaptive.k_min = opts.adaptive.k_min.clamp(1, opts.k_draft);
+        if use_tree {
             // The host tree path is the baseline requirement; the fused
             // entries only upgrade it.
             let host_ok = rt.manifest.serve_batches.iter().all(|&b| {
@@ -201,25 +279,42 @@ impl<'rt> SpecEngine<'rt> {
                 "tree decoding needs the verify_tree/kv_path_gather entries for \
                  {draft_name} (re-lower the artifacts: python/compile/aot.py)"
             );
+        }
+        if let Some(tree) = &opts.tree {
+            anyhow::ensure!(
+                tree.len() <= n_slots,
+                "tree has {} nodes but the lowered verify block fits {n_slots}",
+                tree.len()
+            );
+            anyhow::ensure!(
+                tree.depth() <= max_k,
+                "tree depth {} exceeds {draft_name}'s max chain length {max_k}",
+                tree.depth()
+            );
             // Stats are per accepted-path position; depth is the tree's K.
             opts.k_draft = tree.depth();
+            // A fixed topology is a fixed override: no replanning.
+            opts.adaptive.tree = false;
+        } else if use_tree {
+            // Controller-planned topologies: stats sized at the deepest
+            // plannable path (any plan fits depth <= max_k, <= n_slots).
+            opts.k_draft = max_k.min(n_slots);
         }
         // Device verify needs the fused target entry at every bucket
         // plus the backend's device-sampling entries (the tree variants
-        // of both when a tree is configured).
-        let device_supported = match &opts.tree {
-            None => {
-                rt.manifest
-                    .serve_batches
-                    .iter()
-                    .all(|&b| rt.has_target_entry(&tspec.name, &format!("verify_fused_b{b}")))
-                    && backend.supports_device(rt, &dspec)
-            }
-            Some(_) => {
-                rt.manifest.serve_batches.iter().all(|&b| {
-                    rt.has_target_entry(&tspec.name, &format!("verify_tree_fused_b{b}"))
-                }) && backend.supports_tree_device(rt, &dspec)
-            }
+        // of both when tree decoding is selected).
+        let device_supported = if use_tree {
+            rt.manifest
+                .serve_batches
+                .iter()
+                .all(|&b| rt.has_target_entry(&tspec.name, &format!("verify_tree_fused_b{b}")))
+                && backend.supports_tree_device(rt, &dspec)
+        } else {
+            rt.manifest
+                .serve_batches
+                .iter()
+                .all(|&b| rt.has_target_entry(&tspec.name, &format!("verify_fused_b{b}")))
+                && backend.supports_device(rt, &dspec)
         };
         let device_verify = match opts.verify_path {
             VerifyPath::Host => false,
@@ -244,6 +339,33 @@ impl<'rt> SpecEngine<'rt> {
             verify_path: if device_verify { "device" } else { "host" },
             ..Default::default()
         };
+        // The speculation controller: cost model from the backend (or
+        // the operator's override), budget range from the clamped opts.
+        let cost = opts
+            .adaptive
+            .draft_cost
+            .map(CostModel::chained)
+            .unwrap_or_else(|| backend.cost_model());
+        let controller = SpecController::new(ControllerCfg {
+            k_min: opts.adaptive.k_min,
+            k_max: opts.k_draft,
+            cost,
+            ..Default::default()
+        });
+        let adaptive_chain = opts.adaptive.enabled && !use_tree;
+        // Topology replanning is controller work too: with the
+        // controller disabled, `adaptive.tree` still selects the tree
+        // backend but the construction-time plan stays fixed.
+        let adaptive_tree = use_tree && opts.tree.is_none() && opts.adaptive.enabled;
+        let tree_plan = if let Some(t) = &opts.tree {
+            Some(t.clone())
+        } else if use_tree {
+            // Planned topology (replanned per round only when the
+            // controller is enabled; the prior-driven plan otherwise).
+            Some(controller.plan_tree(n_slots, opts.k_draft, opts.adaptive.fanout_max))
+        } else {
+            None
+        };
         Ok(SpecEngine {
             cx: EngineCx {
                 rt,
@@ -262,6 +384,10 @@ impl<'rt> SpecEngine<'rt> {
             next_req_id: 0,
             scratch: VerifyScratch::default(),
             zero_q: std::collections::BTreeMap::new(),
+            controller,
+            adaptive_chain,
+            adaptive_tree,
+            tree_plan,
         })
     }
 
@@ -288,6 +414,22 @@ impl<'rt> SpecEngine<'rt> {
         } else {
             "host"
         }
+    }
+
+    /// The online speculation controller (estimates + current choice).
+    pub fn controller(&self) -> &SpecController {
+        &self.controller
+    }
+
+    /// The candidate-tree topology the next round will verify (fixed
+    /// `--tree`, or the controller's latest plan); None = chain rounds.
+    pub fn tree_plan(&self) -> Option<&TreeSpec> {
+        self.tree_plan.as_ref()
+    }
+
+    /// Whether any per-round adaptation (chain K or topology) is live.
+    pub fn adaptive(&self) -> bool {
+        self.adaptive_chain || self.adaptive_tree
     }
 
     // ------------------------------------------------------------------
@@ -398,15 +540,53 @@ impl<'rt> SpecEngine<'rt> {
 
     fn decode_round(&mut self, g: &mut GroupState) -> Result<()> {
         let before = self.cx.rt.d2h_bytes_total();
-        match (self.cx.opts.tree.is_some(), self.cx.device_verify) {
-            (false, true) => self.decode_round_device(g)?,
-            (false, false) => self.decode_round_host(g)?,
-            (true, true) => self.decode_round_tree_device(g)?,
-            (true, false) => self.decode_round_tree_host(g)?,
+        if self.tree_plan.is_some() {
+            // Profiled topologies: replan from the measured per-level
+            // alpha before the round (a fixed --tree never replans).
+            if self.adaptive_tree {
+                let n_slots = self.cx.rt.manifest.verify_t - 1;
+                self.tree_plan = Some(self.controller.plan_tree(
+                    n_slots,
+                    self.cx.k,
+                    self.cx.opts.adaptive.fanout_max,
+                ));
+            }
+            let (depth, n) = {
+                let t = self.tree_plan.as_ref().unwrap();
+                (t.depth(), t.len())
+            };
+            self.observe_budget(depth, n);
+            if self.cx.device_verify {
+                self.decode_round_tree_device(g)?;
+            } else {
+                self.decode_round_tree_host(g)?;
+            }
+        } else {
+            // Per-round chain length: the fused entries take k_active as
+            // a runtime scalar, so adaptation needs no re-lowering.
+            let k = if self.adaptive_chain {
+                self.controller.choose_k()
+            } else {
+                self.cx.k
+            };
+            self.observe_budget(k, k);
+            if self.cx.device_verify {
+                self.decode_round_device(g, k)?;
+            } else {
+                self.decode_round_host(g, k)?;
+            }
         }
         self.metrics.decode_rounds += 1;
         self.metrics.bytes_to_host += self.cx.rt.d2h_bytes_total() - before;
         Ok(())
+    }
+
+    /// Stamp the round's chosen budget + the controller's current alpha
+    /// estimates into the metrics registry.
+    fn observe_budget(&mut self, depth: usize, slots: usize) {
+        let est = self.controller.estimator();
+        let alpha: Vec<f64> = (0..est.k_max()).map(|i| est.alpha(i)).collect();
+        self.metrics.observe_controller(depth, slots, &alpha);
     }
 
     /// Apply one row's verdict to its sequence state (both paths).
@@ -426,18 +606,18 @@ impl<'rt> SpecEngine<'rt> {
     }
 
     /// Host fallback: pull the full [B, Vt, V] logits and run the shared
-    /// verify arithmetic in Rust over flat reusable scratch.
-    fn decode_round_host(&mut self, g: &mut GroupState) -> Result<()> {
+    /// verify arithmetic in Rust over flat reusable scratch. `k` is this
+    /// round's chain length (controller-chosen, or the fixed maximum).
+    fn decode_round_host(&mut self, g: &mut GroupState, k: usize) -> Result<()> {
         let b = g.b;
-        let k = self.cx.k;
         let vt = self.cx.rt.manifest.verify_t;
         let vocab = self.cx.tspec.vocab;
 
-        // --- 1. draft K tokens per row (backend-specific) --------------
+        // --- 1. draft k tokens per row (backend-specific) --------------
         let mut drafts = vec![vec![0i32; k]; b];
         self.scratch.q.reset(b, k, vocab);
         self.backend
-            .propose(&self.cx, g, &mut drafts, &mut self.scratch.q)?;
+            .propose(&self.cx, g, k, &mut drafts, &mut self.scratch.q)?;
 
         // --- 2. verify --------------------------------------------------
         let verify = self
@@ -489,6 +669,7 @@ impl<'rt> SpecEngine<'rt> {
             );
             Self::apply_verdict(seq, &drafts[row], k, rv.n_accepted, rv.token);
             self.metrics.observe_round_row(k, rv.n_accepted);
+            self.controller.observe_chain(k, rv.n_accepted);
             n_acc[row] = rv.n_accepted;
         }
 
@@ -502,9 +683,8 @@ impl<'rt> SpecEngine<'rt> {
     /// inside the `verify_fused` graph; the host feeds O(B·K) uniforms
     /// and reads back O(B·K) verdict integers. Draft q's, target KV,
     /// features and the conditioning hidden stay device-side.
-    fn decode_round_device(&mut self, g: &mut GroupState) -> Result<()> {
+    fn decode_round_device(&mut self, g: &mut GroupState, k: usize) -> Result<()> {
         let b = g.b;
-        let k = self.cx.k;
         let vt = self.cx.rt.manifest.verify_t;
         let kq = vt - 1; // q inputs the fused entry was lowered with
         let vocab = self.cx.tspec.vocab;
@@ -514,7 +694,7 @@ impl<'rt> SpecEngine<'rt> {
         let mut drafts = vec![vec![0i32; k]; b];
         let mut q_dev: Vec<xla::Literal> = Vec::with_capacity(kq);
         self.backend
-            .propose_device(&self.cx, g, &mut drafts, &mut q_dev)?;
+            .propose_device(&self.cx, g, k, &mut drafts, &mut q_dev)?;
         anyhow::ensure!(q_dev.len() == k, "backend produced {} q tensors", q_dev.len());
 
         // --- 2. fused verify --------------------------------------------
@@ -587,6 +767,7 @@ impl<'rt> SpecEngine<'rt> {
             let token = toks_host[row * vt + j];
             Self::apply_verdict(seq, &drafts[row], k, j, token);
             self.metrics.observe_round_row(k, j);
+            self.controller.observe_chain(k, j);
             n_acc[row] = j;
         }
 
@@ -603,9 +784,9 @@ impl<'rt> SpecEngine<'rt> {
     /// positions with the device-side `kv_path_gather` entry (the packed
     /// cache never round-trips through the host).
     fn decode_round_tree_host(&mut self, g: &mut GroupState) -> Result<()> {
-        // Topology is engine-lifetime state; borrow it (no per-round
-        // clone of the spec's vectors).
-        let tree = self.cx.opts.tree.as_ref().expect("tree round without a tree");
+        // Topology is engine state (fixed, or the controller's current
+        // plan); borrow it (no per-round clone of the spec's vectors).
+        let tree = self.tree_plan.as_ref().expect("tree round without a tree");
         let b = g.b;
         let n = tree.len();
         let depth = tree.depth();
@@ -685,6 +866,7 @@ impl<'rt> SpecEngine<'rt> {
             acc_toks.extend(tv.path.iter().map(|&node| drafts[row][node]));
             Self::apply_verdict(seq, &acc_toks, depth, acc_toks.len(), tv.token);
             self.metrics.observe_round_row(n, tv.path.len());
+            self.controller.observe_tree(tree, tv.path.len());
             stop_blk[row] = tv.path.last().map(|&node| node + 1).unwrap_or(0);
             for (t, &node) in tv.path.iter().enumerate() {
                 sel[row * kq + t] = pos[row] + 1 + node as i32;
@@ -719,7 +901,7 @@ impl<'rt> SpecEngine<'rt> {
     /// `verify_tree_fused_b{B}`; the host feeds O(B·N) uniforms plus the
     /// topology ints and reads back O(B·N) verdict integers.
     fn decode_round_tree_device(&mut self, g: &mut GroupState) -> Result<()> {
-        let tree = self.cx.opts.tree.as_ref().expect("tree round without a tree");
+        let tree = self.tree_plan.as_ref().expect("tree round without a tree");
         let b = g.b;
         let n = tree.len();
         let depth = tree.depth();
@@ -803,6 +985,7 @@ impl<'rt> SpecEngine<'rt> {
             let token = toks_host[row * vt + j];
             Self::apply_verdict(seq, &toks_host[row * vt..row * vt + j], depth, j, token);
             self.metrics.observe_round_row(n, j);
+            self.controller.observe_tree(tree, j);
         }
 
         // --- 4. advance draft state (backend-specific) ------------------
@@ -936,6 +1119,52 @@ impl<'rt> SpecEngine<'rt> {
 // continuous-batching driver interface
 // ---------------------------------------------------------------------------
 
+/// Placeholder left behind when a migrating session's `SeqState` is
+/// moved out of the old group (which the scheduler drops immediately).
+fn drained_seq(seed: u64) -> SeqState {
+    SeqState {
+        id: PAD_STREAM_BASE,
+        len: 2,
+        last_token: 0,
+        generated: Vec::new(),
+        max_new: 0,
+        rng: request_rng(seed, PAD_STREAM_BASE),
+        stats: AcceptanceStats::new(1),
+        done: true,
+        hidden: Vec::new(),
+        q1: Vec::new(),
+        enqueued: Instant::now(),
+        queue_ms: 0.0,
+        ttft_ms: 0.0,
+        total_ms: 0.0,
+        rounds: 0,
+    }
+}
+
+/// Padding row for a migrated group: clones a live row's decode state
+/// (the batched propose calls need a valid hidden/q1 in every row) but
+/// is inert — done, its own pad RNG stream, no generation budget.
+fn pad_clone(src: &SeqState, row: usize, seed: u64) -> SeqState {
+    let id = PAD_STREAM_BASE + row as u64;
+    SeqState {
+        id,
+        len: src.len,
+        last_token: src.last_token,
+        generated: Vec::new(),
+        max_new: 0,
+        rng: request_rng(seed, id),
+        stats: AcceptanceStats::new(src.stats.k),
+        done: true,
+        hidden: src.hidden.clone(),
+        q1: src.q1.clone(),
+        enqueued: src.enqueued,
+        queue_ms: 0.0,
+        ttft_ms: 0.0,
+        total_ms: 0.0,
+        rounds: 0,
+    }
+}
+
 impl<'rt> SchedulerCore for SpecEngine<'rt> {
     type Group = GroupState;
 
@@ -982,6 +1211,65 @@ impl<'rt> SchedulerCore for SpecEngine<'rt> {
 
     fn round(&mut self, g: &mut GroupState) -> Result<()> {
         self.decode_round(g)
+    }
+
+    /// Bucket migration (the scheduler's long-tail downshift, or the
+    /// upshift that re-grows a shrunk group when arrivals queue behind
+    /// it): repack the listed live rows into a fresh group at lowered
+    /// bucket `b_new`. Everything moves by row: target KV (one host
+    /// repack — the lowered `kv_copy_row_b{B}` entries only splice FROM
+    /// bucket-1 sources, so cross-bucket extraction goes through the
+    /// host mover; a device-side gather entry is a ROADMAP follow-up),
+    /// the per-sequence `SeqState`s, and the backend's packed draft
+    /// state via `DraftBackend::migrate_rows`. Padding rows clone the
+    /// last live row and start done — the bootstrap convention.
+    fn migrate(&mut self, g: &mut GroupState, rows: &[usize], b_new: usize) -> Result<GroupState> {
+        let n = rows.len();
+        anyhow::ensure!(n > 0, "migrate of zero rows");
+        anyhow::ensure!(
+            n <= b_new && b_new != g.b,
+            "bad migration target {b_new} for {n} rows (from b={})",
+            g.b
+        );
+        anyhow::ensure!(
+            self.cx.rt.manifest.serve_batches.contains(&b_new),
+            "migration target {b_new} is not a lowered serve bucket"
+        );
+        let src_map: Vec<usize> = (0..b_new).map(|i| rows[i.min(n - 1)]).collect();
+        let (tkv, tkv_spec) = repack_literal_rows(&g.tkv, &g.tkv_spec, &src_map, TKV_BATCH_AXIS)?;
+        // Sessions move; padding rows clone the last live session's
+        // decode state (valid hidden/q1 for the batched propose calls)
+        // but are inert: done, pad-stream RNG, no generation budget.
+        let mut seqs: Vec<SeqState> = Vec::with_capacity(b_new);
+        for (dst_row, &src_row) in src_map.iter().enumerate() {
+            if dst_row < n {
+                seqs.push(std::mem::replace(
+                    &mut g.seqs[src_row],
+                    drained_seq(self.cx.opts.seed),
+                ));
+            } else {
+                let pad = pad_clone(&seqs[n - 1], dst_row, self.cx.opts.seed);
+                seqs.push(pad);
+            }
+        }
+        let tok0 = if g.tok0.is_empty() {
+            vec![0; b_new]
+        } else {
+            src_map.iter().map(|&r| g.tok0[r]).collect()
+        };
+        let mut migrated = GroupState {
+            b: b_new,
+            seqs,
+            tkv,
+            tkv_spec,
+            dkv: None,
+            dkv_spec: None,
+            h_prev: None,
+            tok0,
+            q0_dev: None,
+        };
+        self.backend.migrate_rows(&self.cx, &mut migrated, g, &src_map)?;
+        Ok(migrated)
     }
 
     fn row_done(&self, g: &GroupState, row: usize) -> bool {

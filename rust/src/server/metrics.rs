@@ -40,6 +40,16 @@ pub struct EngineMetrics {
     pub nodes_drafted: u64,
     /// Live (non-padding) row-rounds observed.
     pub row_rounds: u64,
+    /// Speculation-controller telemetry: the budget chosen for the most
+    /// recent round (chain k, or tree depth) …
+    pub adaptive_k_last: u64,
+    /// … its distribution across rounds …
+    pub adaptive_k: OnlineStats,
+    /// … candidate slots the round spent (== k for chains, tree nodes
+    /// for planned topologies) …
+    pub adaptive_slots: OnlineStats,
+    /// … and the controller's latest per-position alpha_hat estimates.
+    pub alpha_hat: Vec<f64>,
 }
 
 impl EngineMetrics {
@@ -82,6 +92,17 @@ impl EngineMetrics {
         self.path_len_hist[accepted] += 1;
         self.nodes_drafted += n_slots as u64;
         self.row_rounds += 1;
+    }
+
+    /// Record the speculation controller's choice for one round: the
+    /// budget depth (chain k / tree depth), the candidate slots spent,
+    /// and a snapshot of the per-position acceptance estimates.
+    pub fn observe_controller(&mut self, depth: usize, slots: usize, alpha: &[f64]) {
+        self.adaptive_k_last = depth as u64;
+        self.adaptive_k.push(depth as f64);
+        self.adaptive_slots.push(slots as f64);
+        self.alpha_hat.clear();
+        self.alpha_hat.extend_from_slice(alpha);
     }
 
     /// Mean candidate slots drafted per live row-round.
@@ -133,6 +154,11 @@ impl EngineMetrics {
         line("bytes_to_host_per_round", self.bytes_to_host_per_round());
         line("nodes_per_round", self.nodes_per_round());
         line("accepted_len_mean", self.mean_accepted_len());
+        if self.adaptive_k.n > 0 {
+            line("adaptive_k_last", self.adaptive_k_last as f64);
+            line("adaptive_k_mean", self.adaptive_k.mean());
+            line("adaptive_slots_mean", self.adaptive_slots.mean());
+        }
         if !self.latency_ms.is_empty() {
             line("latency_ms_p50", self.latency_ms.pct(50.0));
             line("latency_ms_p95", self.latency_ms.pct(95.0));
@@ -149,6 +175,11 @@ impl EngineMetrics {
         for (len, &count) in self.path_len_hist.iter().enumerate() {
             out.push_str(&format!(
                 "lkspec_accepted_len_rounds{{engine=\"{engine}\",len=\"{len}\"}} {count}\n"
+            ));
+        }
+        for (pos, &a) in self.alpha_hat.iter().enumerate() {
+            out.push_str(&format!(
+                "lkspec_alpha_hat{{engine=\"{engine}\",pos=\"{pos}\"}} {a}\n"
             ));
         }
         out
@@ -240,8 +271,28 @@ pub struct SchedulerMetrics {
     pub groups_retired: u64,
     /// Mid-flight admissions into a running group.
     pub joins: u64,
-    /// Occupied/capacity sampled once per round.
+    /// Long-tail groups migrated to a smaller bucket.
+    pub downshifts: u64,
+    /// Shrunk groups re-grown because arrivals queued behind a full
+    /// bucket (the downshift's mirror).
+    pub upshifts: u64,
+    /// Per-SAMPLE occupancy distribution: occupied/capacity once per
+    /// round, plus one 0.0 sample per idle tick with requests pending.
+    /// Diagnostic only — its mean depends on the driver's tick cadence;
+    /// `occupancy_time_mean` is the load gauge.
     pub slot_occupancy: OnlineStats,
+    /// Time-weighted occupancy accumulators (poll-frequency-invariant:
+    /// each sample is weighted by the wall time since the previous one).
+    occ_weighted_secs: f64,
+    occ_secs: f64,
+    last_occ_at: Option<Instant>,
+    /// Ticks with requests queued but no group decoding (the batcher
+    /// holding out for a fuller bucket).
+    pub idle_ticks: u64,
+    /// Row-rounds decoded by live sessions vs burned as padding —
+    /// padding is the compute the long-tail downshift reclaims.
+    pub live_row_rounds: u64,
+    pub padded_row_rounds: u64,
     pub queue_wait_ms: Percentiles,
     pub ttft_ms: Percentiles,
     pub latency_ms: Percentiles,
@@ -252,6 +303,31 @@ impl SchedulerMetrics {
     /// Mark serving start (first admission); anchors the tok/s gauge.
     pub fn note_started(&mut self) {
         self.started.get_or_insert_with(Instant::now);
+    }
+
+    /// Record one occupancy observation at time `at` (a decode round's
+    /// occupied/capacity, or 0.0 for an idle tick with requests
+    /// pending). Feeds both the per-sample distribution and the
+    /// time-weighted mean — the latter weights each observation by the
+    /// wall time since the previous one, so it does not depend on how
+    /// often the driver polls `tick()`.
+    pub fn observe_occupancy(&mut self, occ: f64, at: Instant) {
+        if let Some(prev) = self.last_occ_at.replace(at) {
+            let dt = at.saturating_duration_since(prev).as_secs_f64();
+            self.occ_weighted_secs += occ * dt;
+            self.occ_secs += dt;
+        }
+        self.slot_occupancy.push(occ);
+    }
+
+    /// Time-weighted mean occupancy (poll-frequency-invariant). Falls
+    /// back to the per-sample mean before any wall time has elapsed.
+    pub fn occupancy_time_mean(&self) -> f64 {
+        if self.occ_secs > 0.0 {
+            self.occ_weighted_secs / self.occ_secs
+        } else {
+            self.slot_occupancy.mean()
+        }
     }
 
     pub fn observe_session(&mut self, r: &RequestResult) {
@@ -291,7 +367,13 @@ impl SchedulerMetrics {
         line("groups_formed_total", self.groups_formed as f64);
         line("groups_retired_total", self.groups_retired as f64);
         line("joins_total", self.joins as f64);
+        line("downshifts_total", self.downshifts as f64);
+        line("upshifts_total", self.upshifts as f64);
         line("slot_occupancy_mean", self.slot_occupancy.mean());
+        line("slot_occupancy_time_mean", self.occupancy_time_mean());
+        line("idle_ticks_total", self.idle_ticks as f64);
+        line("live_row_rounds_total", self.live_row_rounds as f64);
+        line("padded_row_rounds_total", self.padded_row_rounds as f64);
         line("tokens_per_second", tps);
         if !self.queue_wait_ms.is_empty() {
             line("queue_wait_ms_p50", self.queue_wait_ms.pct(50.0));
@@ -416,6 +498,58 @@ mod tests {
         assert_eq!(fresh.nodes_per_round(), 0.0);
         assert_eq!(fresh.mean_accepted_len(), 0.0);
         assert!(!fresh.render("e").contains("NaN"));
+    }
+
+    #[test]
+    fn controller_gauges_render() {
+        let mut m = EngineMetrics::default();
+        // gauges absent until the controller stamps a round
+        assert!(!m.render("e").contains("adaptive_k_mean"));
+        m.observe_controller(7, 7, &[0.9, 0.5]);
+        m.observe_controller(3, 3, &[0.8, 0.4]);
+        assert_eq!(m.adaptive_k_last, 3);
+        assert!((m.adaptive_k.mean() - 5.0).abs() < 1e-12);
+        assert_eq!(m.alpha_hat, vec![0.8, 0.4], "latest snapshot wins");
+        let text = m.render("e");
+        assert!(text.contains("lkspec_adaptive_k_last{engine=\"e\"} 3"));
+        assert!(text.contains("lkspec_adaptive_k_mean{engine=\"e\"} 5"));
+        assert!(text.contains("lkspec_alpha_hat{engine=\"e\",pos=\"0\"} 0.8"));
+        assert!(text.contains("lkspec_alpha_hat{engine=\"e\",pos=\"1\"} 0.4"));
+    }
+
+    /// The occupancy-bias fix: idle ticks (requests pending, no group)
+    /// must pull the means down instead of being silently skipped, and
+    /// the time-weighted mean must weight samples by wall time — not by
+    /// how often the driver happens to poll.
+    #[test]
+    fn occupancy_counts_idle_ticks() {
+        use std::time::Duration;
+        let mut m = SchedulerMetrics::default();
+        let t0 = Instant::now();
+        // One decode round at full occupancy that lasted 100 ms…
+        m.observe_occupancy(1.0, t0);
+        m.observe_occupancy(1.0, t0 + Duration::from_millis(100));
+        // …then a burst of rapid idle polls covering 100 ms total.
+        for i in 1..=10u64 {
+            m.observe_occupancy(0.0, t0 + Duration::from_millis(100 + 10 * i));
+            m.idle_ticks += 1;
+        }
+        // Per-sample mean is dragged down by the poll burst (2/12)…
+        assert!((m.slot_occupancy.mean() - 2.0 / 12.0).abs() < 1e-12);
+        // …but the time-weighted mean sees 100 ms busy / 200 ms total,
+        // regardless of how many polls the idle window was split into.
+        assert!((m.occupancy_time_mean() - 0.5).abs() < 1e-9);
+        m.padded_row_rounds += 3;
+        m.live_row_rounds += 1;
+        m.downshifts += 1;
+        m.upshifts += 1;
+        let text = m.render("e");
+        assert!(text.contains("lkspec_sched_idle_ticks_total{engine=\"e\"} 10"));
+        assert!(text.contains("lkspec_sched_downshifts_total{engine=\"e\"} 1"));
+        assert!(text.contains("lkspec_sched_upshifts_total{engine=\"e\"} 1"));
+        assert!(text.contains("lkspec_sched_slot_occupancy_time_mean"));
+        assert!(text.contains("lkspec_sched_padded_row_rounds_total{engine=\"e\"} 3"));
+        assert!(text.contains("lkspec_sched_live_row_rounds_total{engine=\"e\"} 1"));
     }
 
     #[test]

@@ -10,7 +10,9 @@
 //!     autoregressive baseline
 //!   * `batcher`   — request admission / bucket selection policy
 //!   * `scheduler` — continuous batching: decode groups as slot-mapped
-//!     sessions with mid-flight join/leave (one-row KV copies)
+//!     sessions with mid-flight join/leave (one-row KV copies) and
+//!     long-tail downshift (groups migrate to smaller buckets when
+//!     occupancy drops, ending padding verify FLOPs)
 //!   * `router`    — thread-backed front-end with bounded queues and
 //!     backpressure, driving the scheduler
 //!   * `metrics`   — engine + scheduler counters, Prometheus-style text
@@ -26,6 +28,6 @@ pub mod router;
 pub mod scheduler;
 
 pub use backend::DraftBackend;
-pub use engine::{EngineOpts, RequestResult, SpecEngine, VerifyPath};
+pub use engine::{AdaptiveOpts, EngineOpts, RequestResult, SpecEngine, VerifyPath};
 pub use router::{Router, RouterConfig};
-pub use scheduler::{AdmitReq, Scheduler, SchedulerCore, SimCore};
+pub use scheduler::{AdmitReq, DownshiftConfig, Scheduler, SchedulerCore, SimCore};

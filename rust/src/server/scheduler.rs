@@ -13,12 +13,27 @@
 //!     group's packed caches;
 //!   * group formation (cold start) still follows the `Batcher` policy:
 //!     dispatch on a full bucket or when the oldest request exceeds
-//!     `max_wait`.
+//!     `max_wait`;
+//!   * LONG-TAIL DOWNSHIFT: when a group's occupancy has fitted a
+//!     smaller lowered bucket for [`DownshiftConfig::after_rounds`]
+//!     consecutive rounds with nothing queued, the live rows migrate
+//!     into a fresh smaller-bucket group (`SchedulerCore::migrate`) —
+//!     ending the padding verify FLOPs the retired rows were burning.
+//!     Queued requests veto the shift (a free slot is about to be
+//!     joined, not wasted), which also settles the migrate-vs-join race
+//!     on the same slot: admission runs first in every tick. The
+//!     mirror UPSHIFT re-grows a full group when requests queue behind
+//!     it, so an arrival after a shift never waits out the tail.
 //!
 //! Because per-request RNG streams are keyed by stable request ids,
 //! a session's sample path and acceptance statistics are identical
 //! whether it runs lockstep or joins a group mid-flight — the property
-//! the tests below pin down with the PJRT-free `SimCore`.
+//! the tests below pin down with the PJRT-free `SimCore`. (With the
+//! engine's stochastic speculation controller ENABLED the per-round
+//! budget is shared group state, so this equivalence is guaranteed for
+//! fixed budgets and for greedy decoding — see the engine header and
+//! DESIGN.md §4a; migration itself never touches a session's stream,
+//! which the downshift tests pin at fixed budgets.)
 //!
 //! The engine side of the contract is the `SchedulerCore` trait,
 //! implemented by `SpecEngine` (real XLA decode) and by `SimCore` (a
@@ -70,6 +85,33 @@ pub trait SchedulerCore {
     /// Harvest the finished row's result; the row becomes inert padding
     /// until a join replaces it.
     fn take_result(&mut self, g: &mut Self::Group, row: usize) -> RequestResult;
+
+    /// Bucket migration (long-tail downshift, or an upshift when
+    /// arrivals outgrow a shrunk group): repack the listed live rows
+    /// into a fresh group at lowered bucket `b_new` — row `i` of the
+    /// new group hosts old row `rows[i]` with its session state (and
+    /// RNG stream) intact, so migrated sessions' sample paths are
+    /// untouched. The old group is dropped by the scheduler on return.
+    fn migrate(&mut self, g: &mut Self::Group, rows: &[usize], b_new: usize)
+        -> Result<Self::Group>;
+}
+
+/// Long-tail downshift policy.
+#[derive(Clone, Copy, Debug)]
+pub struct DownshiftConfig {
+    pub enabled: bool,
+    /// Consecutive qualifying rounds (occupancy fits a smaller bucket,
+    /// queue empty) before the group migrates.
+    pub after_rounds: u64,
+}
+
+impl Default for DownshiftConfig {
+    fn default() -> Self {
+        DownshiftConfig {
+            enabled: true,
+            after_rounds: 4,
+        }
+    }
 }
 
 struct Active<G> {
@@ -78,6 +120,8 @@ struct Active<G> {
     /// Rounds since the last session finished (stuck detection).
     rounds_since_finish: u64,
     stuck_cap: u64,
+    /// Consecutive rounds the group qualified for a downshift.
+    shrink_rounds: u64,
 }
 
 /// Session scheduler over one `SchedulerCore`.
@@ -86,16 +130,26 @@ pub struct Scheduler<C: SchedulerCore> {
     batcher: Batcher<AdmitReq>,
     active: Option<Active<C::Group>>,
     next_id: u64,
+    downshift: DownshiftConfig,
     pub metrics: SchedulerMetrics,
 }
 
 impl<C: SchedulerCore> Scheduler<C> {
     pub fn new(core: C, cfg: BatcherConfig) -> Scheduler<C> {
+        Scheduler::with_downshift(core, cfg, DownshiftConfig::default())
+    }
+
+    pub fn with_downshift(
+        core: C,
+        cfg: BatcherConfig,
+        downshift: DownshiftConfig,
+    ) -> Scheduler<C> {
         Scheduler {
             core,
             batcher: Batcher::new(cfg),
             active: None,
             next_id: 0,
+            downshift,
             metrics: SchedulerMetrics::default(),
         }
     }
@@ -186,12 +240,42 @@ impl<C: SchedulerCore> Scheduler<C> {
                     slots,
                     rounds_since_finish: 0,
                     stuck_cap: cap,
+                    shrink_rounds: 0,
                 });
+            } else if !self.batcher.is_empty() {
+                // Requests are waiting but no group is decoding (the
+                // batcher is holding out for a fuller bucket): record
+                // the idle tick so the occupancy gauges aren't biased
+                // by sampling only while a group is active.
+                self.metrics.observe_occupancy(0.0, now);
+                self.metrics.idle_ticks += 1;
             }
         } else {
             // Continuous join: a free slot should never idle while
             // requests wait — no batching delay on this path.
             let active = self.active.as_mut().unwrap();
+            // Upshift first: a FULL group with requests queued grows
+            // back to the bucket that fits them (the mirror of the
+            // long-tail downshift — without it, a request arriving
+            // after a shift to a headroom-less bucket would wait out
+            // the whole tail instead of joining).
+            if active.slots.occupied() == active.slots.capacity() && !self.batcher.is_empty() {
+                let occ = active.slots.occupied();
+                let b_new = self.core.bucket(occ + self.batcher.len());
+                if b_new > active.slots.capacity() {
+                    let (rows, ids): (Vec<usize>, Vec<u64>) =
+                        active.slots.iter_occupied().unzip();
+                    let migrated = self.core.migrate(&mut active.group, &rows, b_new)?;
+                    let mut slots = SlotMap::new(b_new);
+                    for id in ids {
+                        slots.alloc(id).expect("fresh upshifted slot map full");
+                    }
+                    active.group = migrated;
+                    active.slots = slots;
+                    active.shrink_rounds = 0;
+                    self.metrics.upshifts += 1;
+                }
+            }
             let free = active.slots.capacity() - active.slots.occupied();
             if free > 0 {
                 for req in self.batcher.take(free) {
@@ -208,10 +292,12 @@ impl<C: SchedulerCore> Scheduler<C> {
         let mut retire = false;
         if let Some(active) = self.active.as_mut() {
             self.core.round(&mut active.group)?;
+            let (occ, cap) = (active.slots.occupied(), active.slots.capacity());
             self.metrics.rounds += 1;
             self.metrics
-                .slot_occupancy
-                .push(active.slots.occupied() as f64 / active.slots.capacity() as f64);
+                .observe_occupancy(occ as f64 / cap as f64, now);
+            self.metrics.live_row_rounds += occ as u64;
+            self.metrics.padded_row_rounds += (cap - occ) as u64;
 
             let mut done_rows: Vec<(usize, u64)> = Vec::new();
             for (row, id) in active.slots.iter_occupied() {
@@ -235,7 +321,35 @@ impl<C: SchedulerCore> Scheduler<C> {
                     active.rounds_since_finish
                 );
             }
-            retire = active.slots.occupied() == 0;
+
+            // --- long-tail downshift ----------------------------------
+            // After the harvest (freed slots count) and only when the
+            // queue is empty: a pending request would join the free
+            // slots on the next tick, so migrating them away would
+            // trade a cheap join for a prefill — admission always wins
+            // the race for a slot.
+            let occ = active.slots.occupied();
+            retire = occ == 0;
+            let fits_smaller = occ > 0 && self.core.bucket(occ) < active.slots.capacity();
+            if self.downshift.enabled && fits_smaller && self.batcher.is_empty() {
+                active.shrink_rounds += 1;
+                if active.shrink_rounds >= self.downshift.after_rounds {
+                    let b_new = self.core.bucket(occ);
+                    let (rows, ids): (Vec<usize>, Vec<u64>) =
+                        active.slots.iter_occupied().unzip();
+                    let migrated = self.core.migrate(&mut active.group, &rows, b_new)?;
+                    let mut slots = SlotMap::new(b_new);
+                    for id in ids {
+                        slots.alloc(id).expect("fresh migrated slot map full");
+                    }
+                    active.group = migrated;
+                    active.slots = slots;
+                    active.shrink_rounds = 0;
+                    self.metrics.downshifts += 1;
+                }
+            } else {
+                active.shrink_rounds = 0;
+            }
         }
         if retire {
             self.active = None;
@@ -253,12 +367,32 @@ impl<C: SchedulerCore> Scheduler<C> {
 /// drive random accepted-prefix lengths, so a session's statistics are a
 /// pure function of (seed, id) — independent of batch composition,
 /// admission order and join timing. Token j of a session echoes
-/// `prompt[j % len] + 1000`. Used by the scheduler unit tests and the
-/// hot-path bench; also handy for policy experiments without artifacts.
+/// `prompt[j % len] + 1000` — position-deterministic, so emitted tokens
+/// are additionally independent of the per-round draft budget. Used by
+/// the scheduler unit tests and the hot-path bench; also handy for
+/// policy experiments without artifacts.
+///
+/// Two optional extensions serve the speculation-controller bench:
+/// [`SimCore::with_alpha`] replaces the uniform accepted-length draw
+/// with a per-position Bernoulli acceptance walk (each request may
+/// carry its own profile, keyed by `id % profiles`), and
+/// [`SimCore::with_controller`] lets a
+/// [`SpecController`](crate::spec::adaptive::SpecController) pick each
+/// round's chain length. Rounds and drafted-slot totals are tracked in
+/// `rounds_run` / `round_k_sum` for cost accounting.
 pub struct SimCore {
     pub k: usize,
     pub seed: u64,
     pub buckets: Vec<usize>,
+    /// Per-position acceptance profiles; a request uses profile
+    /// `id % profiles.len()`. Empty = the legacy uniform draw.
+    pub profiles: Vec<Vec<f64>>,
+    /// Optional online controller choosing each round's chain length.
+    pub controller: Option<crate::spec::adaptive::SpecController>,
+    /// Decode rounds executed (all groups).
+    pub rounds_run: u64,
+    /// Sum of per-round chain lengths (draft-cost accounting).
+    pub round_k_sum: u64,
 }
 
 pub struct SimGroup {
@@ -267,6 +401,7 @@ pub struct SimGroup {
 
 struct SimSeq {
     done: bool,
+    id: u64,
     rng: Pcg64,
     stats: AcceptanceStats,
     tokens: Vec<i32>,
@@ -284,7 +419,30 @@ impl SimCore {
         let mut buckets = buckets;
         buckets.sort_unstable();
         assert!(!buckets.is_empty());
-        SimCore { k, seed, buckets }
+        SimCore {
+            k,
+            seed,
+            buckets,
+            profiles: Vec::new(),
+            controller: None,
+            rounds_run: 0,
+            round_k_sum: 0,
+        }
+    }
+
+    /// Per-position Bernoulli acceptance profiles (request `id` uses
+    /// `profiles[id % len]`). The walk draws a FIXED `k` uniforms per
+    /// round regardless of the round's chain length, so a session's
+    /// acceptance outcomes stay aligned across budget schedules.
+    pub fn with_alpha(mut self, profiles: Vec<Vec<f64>>) -> SimCore {
+        assert!(profiles.iter().all(|p| !p.is_empty()));
+        self.profiles = profiles;
+        self
+    }
+
+    pub fn with_controller(mut self, c: crate::spec::adaptive::SpecController) -> SimCore {
+        self.controller = Some(c);
+        self
     }
 
     fn seq_for(&self, req: &AdmitReq) -> SimSeq {
@@ -292,6 +450,7 @@ impl SimCore {
         let first = req.prompt[0] + 1000;
         SimSeq {
             done: false,
+            id: req.id,
             rng,
             stats: AcceptanceStats::new(self.k),
             tokens: vec![first],
@@ -308,6 +467,7 @@ impl SimCore {
     fn pad_seq(&self) -> SimSeq {
         SimSeq {
             done: true,
+            id: u64::MAX,
             rng: Pcg64::new(self.seed, u64::MAX),
             stats: AcceptanceStats::new(self.k),
             tokens: Vec::new(),
@@ -354,14 +514,43 @@ impl SchedulerCore for SimCore {
     }
 
     fn round(&mut self, g: &mut SimGroup) -> Result<()> {
+        // One chain length per GROUP round, like the real engine (the
+        // lowered entries take one k_active per call).
+        let k_round = match self.controller.as_mut() {
+            Some(c) => c.choose_k().min(self.k),
+            None => self.k,
+        };
+        self.rounds_run += 1;
+        self.round_k_sum += k_round as u64;
         for seq in g.rows.iter_mut() {
             if seq.done {
                 continue;
             }
             // Short final rounds: never draft past the generation cap.
             let remaining = seq.max_new.saturating_sub(seq.tokens.len()).max(1);
-            let n_drafted = self.k.min(remaining);
-            let n_acc = seq.rng.below(n_drafted + 1);
+            let n_drafted = k_round.min(remaining);
+            let n_acc = if self.profiles.is_empty() {
+                seq.rng.below(n_drafted + 1)
+            } else {
+                // Per-position Bernoulli walk over the session's alpha
+                // profile. A FIXED k draws per round keep the stream
+                // aligned across budget schedules (the emitted tokens
+                // are position-deterministic either way).
+                let profile = &self.profiles[(seq.id as usize) % self.profiles.len()];
+                let draws: Vec<f64> = (0..self.k).map(|_| seq.rng.uniform()).collect();
+                let mut acc = 0usize;
+                for (i, &u) in draws.iter().take(n_drafted).enumerate() {
+                    if u < profile[i.min(profile.len() - 1)] {
+                        acc += 1;
+                    } else {
+                        break;
+                    }
+                }
+                acc
+            };
+            if let Some(c) = self.controller.as_mut() {
+                c.observe_chain(n_drafted, n_acc);
+            }
             seq.stats.record_round(n_drafted, n_acc);
             for _ in 0..n_acc + 1 {
                 let j = seq.tokens.len();
@@ -374,6 +563,21 @@ impl SchedulerCore for SimCore {
             }
         }
         Ok(())
+    }
+
+    fn migrate(&mut self, g: &mut SimGroup, rows: &[usize], b_new: usize) -> Result<SimGroup> {
+        anyhow::ensure!(b_new != g.rows.len(), "migration must change the bucket");
+        anyhow::ensure!(rows.len() <= b_new, "migrated rows exceed the target bucket");
+        let mut moved = Vec::with_capacity(b_new);
+        for &r in rows {
+            anyhow::ensure!(r < g.rows.len(), "migrate row out of range");
+            let pad = self.pad_seq();
+            moved.push(std::mem::replace(&mut g.rows[r], pad));
+        }
+        while moved.len() < b_new {
+            moved.push(self.pad_seq());
+        }
+        Ok(SimGroup { rows: moved })
     }
 
     fn row_done(&self, g: &SimGroup, row: usize) -> bool {
@@ -618,6 +822,203 @@ mod tests {
         // The queue drains normally afterwards.
         let out = drain(&mut s, 1000);
         assert_eq!(out.len(), 2);
+    }
+
+    /// Satellite: the long-tail downshift. One long session + three
+    /// short ones fill the b=4 bucket; once the shorts retire the group
+    /// must migrate to the b=1 bucket — and the migrated session's
+    /// tokens AND acceptance stats must be identical to a lockstep run
+    /// of the same (seed, id): migration moves state, never draws.
+    #[test]
+    fn downshift_migrates_long_tail_and_matches_lockstep() {
+        let ds = DownshiftConfig {
+            enabled: true,
+            after_rounds: 2,
+        };
+        let mut s = Scheduler::with_downshift(sim(), cfg(64), ds);
+        s.submit(vec![9, 4], 40).unwrap(); // id 0: the long tail
+        for p in 0..3 {
+            s.submit(vec![10 + p, 2], 4).unwrap(); // ids 1..3: short
+        }
+        let mut got: BTreeMap<u64, RequestResult> = BTreeMap::new();
+        for (id, r) in drain(&mut s, 10_000) {
+            got.insert(id, r);
+        }
+        assert_eq!(got.len(), 4);
+        assert!(
+            s.metrics.downshifts >= 1,
+            "long tail never migrated (downshifts = {})",
+            s.metrics.downshifts
+        );
+        // padding accounting: the b=4 phase burned padding, the
+        // migrated b=1 phase burns none — so padded row-rounds must be
+        // well below (capacity-1) x rounds.
+        assert!(s.metrics.padded_row_rounds < 3 * s.metrics.rounds);
+
+        // Lockstep reference for the migrated session.
+        let mut core = sim();
+        let req = AdmitReq {
+            id: 0,
+            prompt: vec![9, 4],
+            max_new: 40,
+            enqueued: Instant::now(),
+        };
+        let mut g = core.bootstrap(std::slice::from_ref(&req)).unwrap();
+        for _ in 0..1000 {
+            if core.row_done(&g, 0) {
+                break;
+            }
+            core.round(&mut g).unwrap();
+        }
+        let reference = core.take_result(&mut g, 0);
+        let migrated = &got[&0];
+        assert_eq!(migrated.tokens, reference.tokens, "tokens diverge");
+        assert_eq!(migrated.stats.drafted, reference.stats.drafted);
+        assert_eq!(migrated.stats.accepted, reference.stats.accepted);
+        assert_eq!(migrated.stats.prefix_hist, reference.stats.prefix_hist);
+        assert_eq!(migrated.rounds, reference.rounds);
+    }
+
+    /// Edge: a migration racing a join on the same free slot. Admission
+    /// runs first in every tick and a non-empty queue vetoes the shift,
+    /// so the queued request wins the slot and no downshift happens.
+    #[test]
+    fn downshift_race_prefers_join() {
+        let ds = DownshiftConfig {
+            enabled: true,
+            after_rounds: 2,
+        };
+        let mut s = Scheduler::with_downshift(sim(), cfg(64), ds);
+        s.submit(vec![9, 4], 60).unwrap(); // id 0: long
+        for p in 0..3 {
+            s.submit(vec![10 + p, 2], 4).unwrap();
+        }
+        // Run until the three short sessions are done; the group now
+        // qualifies for a downshift (occupancy 1, queue empty) but has
+        // not reached after_rounds = 2 qualifying rounds on the tick
+        // the last short was harvested.
+        let mut done = std::collections::BTreeSet::new();
+        let mut ticks = 0;
+        while !(done.contains(&1) && done.contains(&2) && done.contains(&3)) {
+            for (id, _) in s.tick(Instant::now()).unwrap() {
+                done.insert(id);
+            }
+            ticks += 1;
+            assert!(ticks < 1000);
+        }
+        assert_eq!(s.metrics.downshifts, 0, "shift fired before the race");
+        // The racing request arrives before the would-be migration tick…
+        let late = s.submit(vec![7, 7], 4).unwrap();
+        let _ = s.tick(Instant::now()).unwrap();
+        // …and wins the slot: joined, not migrated.
+        assert_eq!(s.metrics.joins, 1, "queued request must join the group");
+        assert_eq!(s.metrics.downshifts, 0, "join must veto the downshift");
+        let rest = drain(&mut s, 10_000);
+        let ids: Vec<u64> = rest.iter().map(|(id, _)| *id).collect();
+        assert!(ids.contains(&late));
+        assert!(ids.contains(&0));
+        assert_eq!(s.metrics.groups_formed, 1);
+    }
+
+    /// The downshift's mirror: a request arriving AFTER the group
+    /// shrank to a headroom-less bucket must not wait out the tail —
+    /// the scheduler re-grows the group (upshift) and joins it in the
+    /// same tick.
+    #[test]
+    fn upshift_regrows_downshifted_group() {
+        let ds = DownshiftConfig {
+            enabled: true,
+            after_rounds: 1,
+        };
+        let mut s = Scheduler::with_downshift(sim(), cfg(64), ds);
+        s.submit(vec![9, 4], 60).unwrap(); // id 0: the long tail
+        for p in 0..3 {
+            s.submit(vec![10 + p, 2], 4).unwrap();
+        }
+        let mut ticks = 0;
+        while s.metrics.downshifts == 0 {
+            let _ = s.tick(Instant::now()).unwrap();
+            ticks += 1;
+            assert!(ticks < 1000, "downshift never fired");
+        }
+        assert_eq!(s.in_flight(), 1, "only the tail survives the shift");
+        // The b=1 group is FULL; the new arrival must trigger an
+        // upshift and join on the next tick, not queue behind the tail.
+        let late = s.submit(vec![7, 7], 4).unwrap();
+        let mut rest = s.tick(Instant::now()).unwrap();
+        assert_eq!(s.metrics.upshifts, 1, "full shrunk group must re-grow");
+        assert_eq!(s.metrics.joins, 1, "arrival joins the re-grown group");
+        assert_eq!(s.metrics.groups_formed, 1, "never a second group");
+        rest.extend(drain(&mut s, 10_000));
+        let ids: Vec<u64> = rest.iter().map(|(id, _)| *id).collect();
+        assert!(ids.contains(&late) && ids.contains(&0));
+    }
+
+    /// Satellite: occupancy is no longer sampled only while a group is
+    /// active — ticks spent holding a partial bucket record 0.0.
+    #[test]
+    fn occupancy_records_idle_ticks() {
+        let cfg = BatcherConfig {
+            buckets: vec![1, 4],
+            max_wait: Duration::from_secs(1000), // hold for a full bucket
+            queue_cap: 64,
+        };
+        let mut s = Scheduler::new(sim(), cfg);
+        s.submit(vec![1, 2], 4).unwrap();
+        for _ in 0..3 {
+            let out = s.tick(Instant::now()).unwrap();
+            assert!(out.is_empty(), "nothing can finish while batching waits");
+        }
+        assert_eq!(s.pending(), 1);
+        assert_eq!(s.metrics.idle_ticks, 3);
+        assert_eq!(s.metrics.slot_occupancy.n, 3);
+        assert_eq!(s.metrics.slot_occupancy.mean(), 0.0);
+    }
+
+    /// The speculation controller on SimCore: enabling it changes the
+    /// per-round draft budget (and hence round counts) but NEVER the
+    /// emitted token sequences.
+    #[test]
+    fn adaptive_controller_changes_budget_not_tokens() {
+        use crate::spec::adaptive::{ControllerCfg, CostModel, SpecController};
+        let run = |controller: bool| -> (BTreeMap<u64, RequestResult>, u64, u64) {
+            let mut core = SimCore::new(7, 77, vec![1, 4])
+                .with_alpha(vec![vec![0.05; 7]]); // hopeless draft
+            if controller {
+                core = core.with_controller(SpecController::new(ControllerCfg {
+                    k_max: 7,
+                    warmup: 8,
+                    cost: CostModel::chained(0.25),
+                    ..Default::default()
+                }));
+            }
+            let mut s = Scheduler::new(core, cfg(64));
+            for i in 0..4 {
+                s.submit(vec![i + 1, 5, 9], 12).unwrap();
+            }
+            let mut got = BTreeMap::new();
+            for (id, r) in drain(&mut s, 10_000) {
+                got.insert(id, r);
+            }
+            (got, s.core().rounds_run, s.core().round_k_sum)
+        };
+        let (fixed, fixed_rounds, fixed_k_sum) = run(false);
+        let (adaptive, ad_rounds, ad_k_sum) = run(true);
+        assert_eq!(fixed.len(), 4);
+        for id in 0..4u64 {
+            assert_eq!(
+                fixed[&id].tokens, adaptive[&id].tokens,
+                "controller changed emitted tokens for id {id}"
+            );
+        }
+        // Fixed runs spend k = 7 every round; the controller collapses
+        // to short chains once the 5% acceptance shows up.
+        assert_eq!(fixed_k_sum, 7 * fixed_rounds);
+        let ad_mean_k = ad_k_sum as f64 / ad_rounds as f64;
+        assert!(
+            ad_mean_k < 5.0,
+            "controller kept drafting long under 5% acceptance (mean k {ad_mean_k:.2})"
+        );
     }
 
     #[test]

@@ -1,0 +1,598 @@
+//! Online speculation controller: per-round draft budgets from measured
+//! acceptance.
+//!
+//! The serving stack spends a draft budget every round — K chained draft
+//! tokens, or an N-node candidate tree — and the right budget depends on
+//! the acceptance the deployment actually achieves (SpecDec++, arXiv
+//! 2405.19715: adaptive candidate lengths recover 10–20% throughput over
+//! any fixed K; the acceptance-theory analysis in arXiv 2606.30265 shows
+//! per-position acceptance is predictable enough online to drive the
+//! choice). This module closes that measure→act loop:
+//!
+//!   * [`AlphaEwma`] — per-position/per-level EWMA estimators of the
+//!     conditional acceptance rate `alpha_hat[i]` (chain position i, or
+//!     tree level i), fed by every live row-round;
+//!   * [`CostModel`] — a round's cost in verify-call units
+//!     (`verify + fixed_draft + k·per_token_draft`; parallel-head archs
+//!     have `per_token = 0` — one propose pass prices every head);
+//!   * [`SpecController`] — picks `k_active` each round as the argmax of
+//!     expected emitted tokens per unit cost (with hysteresis so the
+//!     choice doesn't flap on estimator noise), and plans per-round
+//!     tree topologies ([`SpecController::plan_tree`]): fanout per level
+//!     chosen from measured per-level alpha by greedy marginal-gain
+//!     allocation under the lowered node budget.
+//!
+//! # Exactness contract
+//!
+//! The controller changes HOW MANY candidates a round spends, never the
+//! acceptance arithmetic. The fused verify entries take `k_active` /
+//! `n_active` as runtime scalars and topology as runtime tensors, so no
+//! re-lowering happens, and every round still consumes the fixed-uniform
+//! draw count *for its chosen k* (k draft + k accept + 1 sample draws).
+//! Consequences, pinned by tests/properties.rs:
+//!
+//!   * **greedy modes**: the emitted sequence is the target's greedy
+//!     path at every position, so ANY k/topology schedule emits
+//!     bit-identical tokens — the controller changes round counts only;
+//!   * **stochastic mode**: every schedule preserves the target
+//!     distribution exactly (the Leviathan invariant holds round by
+//!     round), and a constant schedule k* is bit-identical to a fixed
+//!     `--spec-k k*` run (same draws, same arithmetic). Distinct
+//!     schedules are distinct couplings of the same distribution: at a
+//!     fully-accepted short round the bonus token is drawn from `p`
+//!     where a longer chain would have run accept/reject there, so
+//!     sample-path equality across schedules is information-
+//!     theoretically impossible — see DESIGN.md §4a for the argument.
+//!
+//! The controller's state advances only on (k, n_accepted) observations,
+//! which are identical on the host and device verify paths — so path
+//! parity is preserved with the controller enabled.
+
+use crate::spec::sampling::TreeSpec;
+
+/// Optimistic prior for unobserved positions: assume the acceptance of
+/// the last observed position rather than 0, so cold-start rounds don't
+/// collapse to k = k_min before any evidence exists.
+const PRIOR_ALPHA: f64 = 0.7;
+
+/// Per-position EWMA acceptance estimator. Position `i` tracks the
+/// sibling-group ADVANCE rate of draft position/tree level `i` — the
+/// probability the walk moves past it GIVEN it was reached — alongside
+/// an EWMA of the fanout those observations were made at. The
+/// per-candidate rate [`AlphaEwma::alpha`] deconvolves the two at read
+/// time (`1 - (1 - advance)^(1/fanout)`), so chain observations
+/// (fanout 1) report acceptance directly and tree observations don't
+/// double-count breadth when the planner re-applies a fanout exponent.
+/// Rounds are censored observations: a round with `n_acc < k` observes
+/// advances at positions `0..n_acc` and one failure at `n_acc`;
+/// positions past the first rejection are unobserved (the walk never
+/// judged them).
+#[derive(Clone, Debug)]
+pub struct AlphaEwma {
+    /// Per-position sibling-group advance rate.
+    adv: Vec<f64>,
+    /// Per-position fanout the advance observations were made at.
+    fan: Vec<f64>,
+    /// EWMA weight of one observation (2^(-1/halflife) decay).
+    decay: f64,
+    /// Observations folded in per position (for warmup gating).
+    counts: Vec<u64>,
+}
+
+impl AlphaEwma {
+    /// `k_max` positions; `halflife` in observations (how many rounds
+    /// until an old observation's weight halves).
+    pub fn new(k_max: usize, halflife: f64) -> AlphaEwma {
+        AlphaEwma {
+            adv: vec![PRIOR_ALPHA; k_max.max(1)],
+            fan: vec![1.0; k_max.max(1)],
+            decay: 0.5f64.powf(1.0 / halflife.max(1.0)),
+            counts: vec![0; k_max.max(1)],
+        }
+    }
+
+    pub fn k_max(&self) -> usize {
+        self.adv.len()
+    }
+
+    /// Estimated PER-CANDIDATE conditional acceptance at position `i`
+    /// (clamped to a numerically safe open interval). At fanout 1 this
+    /// is the advance rate itself.
+    pub fn alpha(&self, i: usize) -> f64 {
+        let i = i.min(self.adv.len() - 1);
+        let adv = self.adv[i].clamp(1e-3, 1.0 - 1e-6);
+        let fan = self.fan[i].max(1.0);
+        let alpha = if fan <= 1.0 {
+            adv
+        } else {
+            1.0 - (1.0 - adv).powf(1.0 / fan)
+        };
+        alpha.clamp(1e-3, 1.0 - 1e-6)
+    }
+
+    pub fn observations(&self, i: usize) -> u64 {
+        self.counts[i.min(self.counts.len() - 1)]
+    }
+
+    fn fold(&mut self, i: usize, advanced: f64, fanout: f64) {
+        if i >= self.adv.len() {
+            return;
+        }
+        self.adv[i] = self.decay * self.adv[i] + (1.0 - self.decay) * advanced;
+        self.fan[i] = self.decay * self.fan[i] + (1.0 - self.decay) * fanout.max(1.0);
+        self.counts[i] += 1;
+    }
+
+    /// One chain round: `n_drafted` candidates, accepted prefix
+    /// `n_accepted` (fanout-1 observations: advance == acceptance).
+    pub fn observe_chain(&mut self, n_drafted: usize, n_accepted: usize) {
+        debug_assert!(n_accepted <= n_drafted);
+        for i in 0..n_accepted {
+            self.fold(i, 1.0, 1.0);
+        }
+        if n_accepted < n_drafted {
+            self.fold(n_accepted, 0.0, 1.0);
+        }
+    }
+
+    /// One tree round: the walk advanced `path_len` levels of `tree`.
+    /// Each reached level folds one advance observation (1 for levels
+    /// the walk moved past, 0 for the level where every sibling
+    /// rejected) together with the level's mean fanout, so
+    /// [`AlphaEwma::alpha`]'s deconvolution recovers the per-candidate
+    /// rate. The independence model ignores the residual-update
+    /// correlation between siblings; at fanout 1 this reduces to
+    /// `observe_chain`.
+    pub fn observe_tree(&mut self, tree: &TreeSpec, path_len: usize) {
+        let depth = tree.depth();
+        debug_assert!(path_len <= depth);
+        let mut level_nodes = vec![0usize; depth];
+        for i in 0..tree.len() {
+            level_nodes[tree.level(i)] += 1;
+        }
+        let fanout_at = |l: usize| -> f64 {
+            let parents = if l == 0 { 1 } else { level_nodes[l - 1] };
+            (level_nodes[l] as f64 / parents.max(1) as f64).max(1.0)
+        };
+        for l in 0..path_len {
+            self.fold(l, 1.0, fanout_at(l));
+        }
+        if path_len < depth && level_nodes[path_len] > 0 {
+            self.fold(path_len, 0.0, fanout_at(path_len));
+        }
+    }
+
+    /// Expected accepted prefix length of a k-chain under the current
+    /// estimates: `sum_{i<k} prod_{j<=i} alpha[j]`.
+    pub fn expected_accepted(&self, k: usize) -> f64 {
+        let mut run = 1.0;
+        let mut total = 0.0;
+        for i in 0..k {
+            run *= self.alpha(i);
+            total += run;
+        }
+        total
+    }
+}
+
+/// Round cost in verify-call units. The verify pass prices 1.0 by
+/// definition; drafting prices what the backend actually dispatches:
+/// chained archs (recurrent EAGLE-3/MTP, MLP) pay one draft call per
+/// token, parallel-head archs (MEDUSA) pay one propose pass regardless
+/// of k.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Fixed per-round draft cost (bootstrap/extend/propose passes).
+    pub fixed: f64,
+    /// Marginal cost of one more drafted token (0 for parallel heads).
+    pub per_token: f64,
+}
+
+impl CostModel {
+    pub fn chained(per_token: f64) -> CostModel {
+        CostModel {
+            fixed: 0.0,
+            per_token,
+        }
+    }
+
+    pub fn parallel() -> CostModel {
+        CostModel {
+            fixed: 0.3,
+            per_token: 0.0,
+        }
+    }
+
+    /// Cost of a round drafting `k` tokens (verify included).
+    pub fn round_cost(&self, k: usize) -> f64 {
+        1.0 + self.fixed + self.per_token.max(0.0) * k as f64
+    }
+}
+
+/// Controller configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ControllerCfg {
+    pub k_min: usize,
+    pub k_max: usize,
+    /// EWMA halflife in row-round observations.
+    pub halflife: f64,
+    /// Relative throughput gain required to move off the current k
+    /// (hysteresis against estimator noise).
+    pub hysteresis: f64,
+    /// Row-round observations required before leaving the prior.
+    pub warmup: u64,
+    pub cost: CostModel,
+}
+
+impl Default for ControllerCfg {
+    fn default() -> Self {
+        ControllerCfg {
+            k_min: 1,
+            k_max: 7,
+            halflife: 48.0,
+            hysteresis: 0.02,
+            warmup: 8,
+            cost: CostModel::chained(0.25),
+        }
+    }
+}
+
+/// The online speculation controller: EWMA acceptance in, per-round
+/// draft budget out. One instance per engine (group-level: the lowered
+/// executables take one `k_active` per call), warm across groups.
+#[derive(Clone, Debug)]
+pub struct SpecController {
+    cfg: ControllerCfg,
+    est: AlphaEwma,
+    /// Current chain choice (sticky under hysteresis).
+    k_cur: usize,
+    observed: u64,
+}
+
+impl SpecController {
+    pub fn new(cfg: ControllerCfg) -> SpecController {
+        let cfg = ControllerCfg {
+            k_min: cfg.k_min.clamp(1, cfg.k_max.max(1)),
+            ..cfg
+        };
+        SpecController {
+            est: AlphaEwma::new(cfg.k_max, cfg.halflife),
+            k_cur: cfg.k_max,
+            observed: 0,
+            cfg,
+        }
+    }
+
+    pub fn cfg(&self) -> &ControllerCfg {
+        &self.cfg
+    }
+
+    pub fn estimator(&self) -> &AlphaEwma {
+        &self.est
+    }
+
+    /// Record one live row's chain round.
+    pub fn observe_chain(&mut self, n_drafted: usize, n_accepted: usize) {
+        self.est.observe_chain(n_drafted, n_accepted);
+        self.observed += 1;
+    }
+
+    /// Record one live row's tree round.
+    pub fn observe_tree(&mut self, tree: &TreeSpec, path_len: usize) {
+        self.est.observe_tree(tree, path_len);
+        self.observed += 1;
+    }
+
+    /// Expected emitted tokens per unit cost for a k-chain: the accepted
+    /// prefix plus the always-emitted bonus/replacement token, over the
+    /// round's cost.
+    pub fn throughput(&self, k: usize) -> f64 {
+        (self.est.expected_accepted(k) + 1.0) / self.cfg.cost.round_cost(k)
+    }
+
+    /// The chain length for the next round. Before `warmup` observations
+    /// this is `k_max` (the prior is optimistic by design: a too-long
+    /// chain costs draft tokens, a too-short one costs target rounds).
+    /// After warmup: argmax of [`SpecController::throughput`] over
+    /// `k_min..=k_max`, moving off the current choice only for a
+    /// relative gain above the hysteresis margin.
+    pub fn choose_k(&mut self) -> usize {
+        if self.observed < self.cfg.warmup {
+            return self.k_cur;
+        }
+        let mut best_k = self.cfg.k_min;
+        let mut best = f64::NEG_INFINITY;
+        for k in self.cfg.k_min..=self.cfg.k_max {
+            let t = self.throughput(k);
+            // strict > keeps ties on the smaller k (cheaper round)
+            if t > best {
+                best = t;
+                best_k = k;
+            }
+        }
+        let cur = self.throughput(self.k_cur.clamp(self.cfg.k_min, self.cfg.k_max));
+        if best > cur * (1.0 + self.cfg.hysteresis) {
+            self.k_cur = best_k;
+        } else {
+            self.k_cur = self.k_cur.clamp(self.cfg.k_min, self.cfg.k_max);
+        }
+        self.k_cur
+    }
+
+    /// Plan a per-round candidate-tree topology from the measured
+    /// per-level alpha: greedy marginal-gain allocation of the lowered
+    /// node budget (`n_slots`, = verify_t - 1) across levels, depth
+    /// capped at `depth_max` (the arch's head count) and per-level
+    /// fanout at `fanout_max`.
+    ///
+    /// The objective is the expected accepted path length under the
+    /// independence model: `L(f_1..f_d) = sum_m prod_{l<=m}
+    /// (1 - (1 - alpha_l)^{f_l})`. Starting from the single-node chain,
+    /// each step takes the move (widen some level by one, or deepen by
+    /// one level) with the best gain per node spent; planning stops when
+    /// nothing fits or every gain is negligible. Before warmup this
+    /// yields the default 2-wide shallow tree the static `--tree 2x2`
+    /// flag used to hardcode.
+    pub fn plan_tree(
+        &self,
+        n_slots: usize,
+        depth_max: usize,
+        fanout_max: usize,
+    ) -> TreeSpec {
+        let depth_max = depth_max.max(1);
+        let fanout_max = fanout_max.max(1);
+        let mut fanout: Vec<usize> = vec![1];
+        let nodes_of = |f: &[usize]| -> usize {
+            let mut level = 1usize;
+            let mut total = 0usize;
+            for &fl in f {
+                level *= fl;
+                total += level;
+            }
+            total
+        };
+        let accept_len = |f: &[usize]| -> f64 {
+            let mut run = 1.0;
+            let mut total = 0.0;
+            for (l, &fl) in f.iter().enumerate() {
+                let adv = 1.0 - (1.0 - self.est.alpha(l)).powi(fl as i32);
+                run *= adv;
+                total += run;
+            }
+            total
+        };
+        if n_slots == 0 {
+            return TreeSpec::from_fanout(&fanout).expect("chain(1) is valid");
+        }
+        loop {
+            let base_nodes = nodes_of(&fanout);
+            let base_len = accept_len(&fanout);
+            let mut best: Option<(f64, Vec<usize>)> = None;
+            // widen one level
+            for l in 0..fanout.len() {
+                if fanout[l] >= fanout_max {
+                    continue;
+                }
+                let mut cand = fanout.clone();
+                cand[l] += 1;
+                let dn = nodes_of(&cand).saturating_sub(base_nodes);
+                if dn == 0 || nodes_of(&cand) > n_slots {
+                    continue;
+                }
+                let gain = (accept_len(&cand) - base_len) / dn as f64;
+                let better = match best.as_ref() {
+                    Some((g, _)) => gain > *g,
+                    None => true,
+                };
+                if better {
+                    best = Some((gain, cand));
+                }
+            }
+            // deepen by one level (fanout 1)
+            if fanout.len() < depth_max {
+                let mut cand = fanout.clone();
+                cand.push(1);
+                if nodes_of(&cand) <= n_slots {
+                    let dn = nodes_of(&cand) - base_nodes;
+                    let gain = (accept_len(&cand) - base_len) / dn as f64;
+                    let better = match best.as_ref() {
+                        Some((g, _)) => gain > *g,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((gain, cand));
+                    }
+                }
+            }
+            match best {
+                Some((gain, cand)) if gain > 1e-4 => fanout = cand,
+                _ => break,
+            }
+        }
+        TreeSpec::from_fanout(&fanout).expect("planned fanouts are >= 1")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(k_max: usize, per_token: f64) -> ControllerCfg {
+        ControllerCfg {
+            k_max,
+            warmup: 0,
+            hysteresis: 0.0,
+            cost: CostModel::chained(per_token),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ewma_converges_to_observed_rate() {
+        let mut e = AlphaEwma::new(4, 8.0);
+        // position 0 always accepts, position 1 always rejects
+        for _ in 0..200 {
+            e.observe_chain(4, 1);
+        }
+        assert!(e.alpha(0) > 0.99, "alpha0 {}", e.alpha(0));
+        assert!(e.alpha(1) < 0.01, "alpha1 {}", e.alpha(1));
+        // positions past the first rejection stay at the prior (censored)
+        assert!((e.alpha(2) - PRIOR_ALPHA).abs() < 1e-9);
+        assert_eq!(e.observations(2), 0);
+    }
+
+    #[test]
+    fn expected_accepted_is_cumprod_sum() {
+        let mut e = AlphaEwma::new(3, 1.0);
+        // drive alphas to ~ [1, 0.5, ~1] via alternating observations
+        for _ in 0..400 {
+            e.observe_chain(3, 3);
+            e.observe_chain(3, 1);
+        }
+        let a0 = e.alpha(0);
+        let a1 = e.alpha(1);
+        let a2 = e.alpha(2);
+        let want = a0 + a0 * a1 + a0 * a1 * a2;
+        assert!((e.expected_accepted(3) - want).abs() < 1e-12);
+        assert!(e.expected_accepted(1) <= e.expected_accepted(3));
+    }
+
+    /// Hand-checkable argmax: with alpha = [0.9, 0.9, 0.1, ...] and a
+    /// draft cost of 0.25/token, the closed-form throughput peaks at
+    /// k = 2: going deeper buys ~0.08 expected tokens for 0.25 cost.
+    #[test]
+    fn choose_k_matches_closed_form_argmax() {
+        let mut c = SpecController::new(cfg(5, 0.25));
+        for _ in 0..600 {
+            // alternate full-2 accepts and a reject at position 2 so
+            // alpha ~ [1, 1, 0.5->...]; then force position 2 low:
+            c.observe_chain(3, 2);
+        }
+        // alpha ~ [1, 1, 0]: expected tokens 1+k for k<=2, flat after.
+        let t1 = c.throughput(1);
+        let t2 = c.throughput(2);
+        let t3 = c.throughput(3);
+        assert!(t2 > t1, "t2 {t2} t1 {t1}");
+        assert!(t2 > t3, "t2 {t2} t3 {t3}");
+        assert_eq!(c.choose_k(), 2);
+    }
+
+    /// Parallel heads (zero marginal draft cost): more drafts are free,
+    /// so the controller saturates at k_max whenever alpha > 0.
+    #[test]
+    fn parallel_cost_saturates_k() {
+        let mut c = SpecController::new(ControllerCfg {
+            cost: CostModel::parallel(),
+            warmup: 0,
+            hysteresis: 0.0,
+            ..Default::default()
+        });
+        for _ in 0..100 {
+            c.observe_chain(7, 4);
+        }
+        assert_eq!(c.choose_k(), 7);
+    }
+
+    /// Near-zero acceptance: every extra draft is wasted cost, so the
+    /// controller collapses to k_min.
+    #[test]
+    fn hopeless_draft_collapses_to_k_min() {
+        let mut c = SpecController::new(cfg(7, 0.25));
+        for _ in 0..300 {
+            c.observe_chain(7, 0);
+        }
+        assert_eq!(c.choose_k(), 1);
+    }
+
+    #[test]
+    fn warmup_holds_k_max_and_hysteresis_sticks() {
+        let mut c = SpecController::new(ControllerCfg {
+            warmup: 50,
+            ..cfg(6, 0.25)
+        });
+        assert_eq!(c.choose_k(), 6, "prior choice before any evidence");
+        for _ in 0..49 {
+            c.observe_chain(6, 0);
+        }
+        assert_eq!(c.choose_k(), 6, "still warming up");
+        c.observe_chain(6, 0);
+        assert!(c.choose_k() < 6, "post-warmup evidence applies");
+
+        // hysteresis: a tiny gain must not move the choice
+        let mut s = SpecController::new(ControllerCfg {
+            hysteresis: 10.0, // absurd margin: never move
+            ..cfg(6, 0.25)
+        });
+        for _ in 0..100 {
+            s.observe_chain(6, 0);
+        }
+        assert_eq!(s.choose_k(), 6, "hysteresis pins the current choice");
+    }
+
+    #[test]
+    fn plan_tree_respects_budget_and_caps() {
+        let c = SpecController::new(ControllerCfg {
+            warmup: 0,
+            ..Default::default()
+        });
+        for (slots, depth, fan) in [(7usize, 6usize, 4usize), (3, 2, 2), (1, 1, 1), (0, 3, 3)] {
+            let t = c.plan_tree(slots, depth, fan);
+            assert!(t.len() <= slots.max(1), "{slots} {depth} {fan}: {}", t.len());
+            assert!(t.depth() <= depth.max(1));
+            assert!(!t.is_empty());
+        }
+    }
+
+    /// Low alpha at level 0 with budget to spare: the planner widens
+    /// level 0 (breadth recovers a rejection) instead of deepening.
+    #[test]
+    fn plan_tree_widens_under_low_alpha() {
+        let mut c = SpecController::new(ControllerCfg {
+            warmup: 0,
+            ..Default::default()
+        });
+        for _ in 0..500 {
+            c.observe_tree(&TreeSpec::from_fanout(&[2, 2]).unwrap(), 0);
+        }
+        let t = c.plan_tree(7, 6, 4);
+        // all-reject evidence: whatever the planner keeps must be
+        // shallow — depth 1 wide, or minimal
+        assert!(t.depth() <= 2, "low alpha must not plan deep: {:?}", t.depth());
+    }
+
+    /// High alpha everywhere: depth dominates (a chain-ish deep tree),
+    /// since each level advances with near-certainty.
+    #[test]
+    fn plan_tree_deepens_under_high_alpha() {
+        let mut c = SpecController::new(ControllerCfg {
+            warmup: 0,
+            ..Default::default()
+        });
+        let probe = TreeSpec::from_fanout(&[1, 1, 1, 1, 1, 1]).unwrap();
+        for _ in 0..500 {
+            c.observe_tree(&probe, 6);
+        }
+        let t = c.plan_tree(7, 6, 4);
+        assert!(t.depth() >= 4, "high alpha should plan deep, got {}", t.depth());
+    }
+
+    #[test]
+    fn tree_observation_feeds_levels() {
+        let mut e = AlphaEwma::new(4, 8.0);
+        let tree = TreeSpec::from_fanout(&[2, 2]).unwrap();
+        for _ in 0..100 {
+            e.observe_tree(&tree, 1); // always advance level 0, fail level 1
+        }
+        assert!(e.alpha(0) > 0.9);
+        assert!(e.alpha(1) < 0.1);
+        assert_eq!(e.observations(2), 0, "unreached levels stay censored");
+    }
+
+    #[test]
+    fn cost_model_round_cost() {
+        let c = CostModel::chained(0.25);
+        assert!((c.round_cost(4) - 2.0).abs() < 1e-12);
+        let p = CostModel::parallel();
+        assert!((p.round_cost(1) - p.round_cost(7)).abs() < 1e-12);
+    }
+}

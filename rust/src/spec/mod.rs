@@ -6,14 +6,19 @@
 //!    sampling, the EXACT rejection rule and the broken greedy-draft rule
 //!    (Appendix D ablation)
 //!  * `accept`    — acceptance bookkeeping: per-position rates, τ
+//!  * `adaptive`  — the online speculation controller: per-position EWMA
+//!    acceptance estimators + a cost model picking each round's draft
+//!    budget (chain `k_active`, profiled tree topologies)
 //!  * `gradients` — closed-form ∇KL / ∇TV / ∇L_LK^α on host, used by the
 //!    Table 3 bench and cross-checked against finite differences in tests
 //!  * `overlap`   — 1-D Gaussian/mixture overlap machinery for Figure 2
 
 pub mod accept;
+pub mod adaptive;
 pub mod gradients;
 pub mod overlap;
 pub mod sampling;
 
 pub use accept::AcceptanceStats;
+pub use adaptive::{AlphaEwma, ControllerCfg, CostModel, SpecController};
 pub use sampling::{softmax_t, SamplingMode};

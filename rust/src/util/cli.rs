@@ -14,6 +14,7 @@ const KNOWN_FLAGS: &[&str] = &[
     "quiet",
     "greedy-draft",
     "no-spec",
+    "no-adaptive",
     "force",
     "help",
     "fresh",

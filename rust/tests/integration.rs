@@ -16,7 +16,7 @@ use lk_spec::data::corpus::{Corpus, CorpusSpec};
 use lk_spec::eval::EvalMode;
 use lk_spec::runtime::Runtime;
 use lk_spec::server::batcher::BatcherConfig;
-use lk_spec::server::engine::{EngineOpts, SpecEngine, VerifyPath};
+use lk_spec::server::engine::{AdaptiveOpts, EngineOpts, SpecEngine, VerifyPath};
 use lk_spec::server::{RequestResult, Scheduler};
 use lk_spec::tensor::{read_checkpoint, HostTensor};
 use lk_spec::train::{checkpoint_to_params, params_to_checkpoint, DraftTrainer, RunDirs, TargetTrainer};
@@ -78,7 +78,8 @@ fn fixture(rt: &Runtime) -> (PathBuf, Corpus) {
     }
 }
 
-fn engine_for_draft<'rt>(
+#[allow(clippy::too_many_arguments)]
+fn engine_with<'rt>(
     rt: &'rt Runtime,
     work: &Path,
     draft: &str,
@@ -86,6 +87,7 @@ fn engine_for_draft<'rt>(
     k: usize,
     seed: u64,
     verify_path: VerifyPath,
+    adaptive: AdaptiveOpts,
 ) -> SpecEngine<'rt> {
     let dirs = RunDirs::new(work);
     let tckpt = read_checkpoint(&dirs.target_ckpt("dense-s")).unwrap();
@@ -118,9 +120,38 @@ fn engine_for_draft<'rt>(
             seed,
             verify_path,
             tree: None,
+            adaptive,
         },
     )
     .unwrap()
+}
+
+/// Fixed draft budget — what the parity / composition-independence
+/// suites study (the adaptive suite opts into the live controller).
+fn engine_for_draft<'rt>(
+    rt: &'rt Runtime,
+    work: &Path,
+    draft: &str,
+    mode: EvalMode,
+    k: usize,
+    seed: u64,
+    verify_path: VerifyPath,
+) -> SpecEngine<'rt> {
+    engine_with(rt, work, draft, mode, k, seed, verify_path, AdaptiveOpts::fixed())
+}
+
+/// Like `engine_for_draft` but with the online speculation controller
+/// LIVE (per-round K in 1..=k): what serving runs by default.
+fn adaptive_engine_for_draft<'rt>(
+    rt: &'rt Runtime,
+    work: &Path,
+    draft: &str,
+    mode: EvalMode,
+    k: usize,
+    seed: u64,
+    verify_path: VerifyPath,
+) -> SpecEngine<'rt> {
+    engine_with(rt, work, draft, mode, k, seed, verify_path, AdaptiveOpts::default())
 }
 
 /// Like `engine_for_draft` but decoding a candidate TREE per round.
@@ -181,6 +212,7 @@ fn engine_integration_suite() {
     batch_rows_independent(&rt, &work, &corpus);
     scheduler_join_matches_lockstep(&rt, &work, &corpus);
     device_verify_matches_host(&rt, &work, &corpus);
+    adaptive_controller_greedy_exact(&rt, &work, &corpus);
     tree_decoding_suite(&rt, &work, &corpus);
     k_sweep_shapes(&rt, &work, &corpus);
     greedy_draft_not_better(&rt, &work, &corpus);
@@ -474,6 +506,46 @@ fn device_verify_matches_host(rt: &Runtime, work: &Path, corpus: &Corpus) {
                 assert_eq!(
                     a.stats.prefix_hist, b.stats.prefix_hist,
                     "{draft} {mode:?} req {i}"
+                );
+            }
+        }
+    }
+}
+
+/// Satellite: adaptive-K exactness on the real engine. In greedy mode
+/// (T0) every emitted position is the target's greedy token, so
+/// enabling the speculation controller can change ROUND COUNTS but
+/// never the emitted sequence — checked against the fixed-K engine for
+/// all three chain backends on both verify paths (the fused entries
+/// take k_active as a runtime scalar, so the device path needs no
+/// re-lowering to decode round-varying chains).
+fn adaptive_controller_greedy_exact(rt: &Runtime, work: &Path, corpus: &Corpus) {
+    println!("== adaptive_controller_greedy_exact");
+    let device_ready = rt.has_target_entry("dense-s", "verify_fused_b1");
+    let prompts = corpus
+        .load(lk_spec::data::grammar::Domain::Chat, "eval")
+        .unwrap()
+        .prompts(2, 12);
+    for draft in ["eagle3@dense-s", "medusa@dense-s", "mlp@dense-s"] {
+        for path in [VerifyPath::Host, VerifyPath::Device] {
+            if path == VerifyPath::Device && !device_ready {
+                println!("SKIP device: artifacts predate the fused entries");
+                continue;
+            }
+            let fixed = {
+                let mut e = engine_for_draft(rt, work, draft, EvalMode::T0, 6, 91, path);
+                e.generate_batch(&prompts, 24).unwrap()
+            };
+            let adaptive = {
+                let mut e =
+                    adaptive_engine_for_draft(rt, work, draft, EvalMode::T0, 6, 91, path);
+                assert!(e.adaptive(), "controller should be live");
+                e.generate_batch(&prompts, 24).unwrap()
+            };
+            for (i, (a, b)) in fixed.iter().zip(&adaptive).enumerate() {
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "{draft} {path:?} request {i}: controller changed greedy tokens"
                 );
             }
         }

@@ -670,3 +670,255 @@ fn prop_batcher_never_exceeds_bucket_and_preserves_order() {
         },
     );
 }
+
+// ---------------------------------------------------------------------------
+// adaptive speculation (per-round K schedules)
+// ---------------------------------------------------------------------------
+
+/// Prefix-deterministic synthetic model: the distribution at a position
+/// is a pure function of (salt, token prefix) — the structure the
+/// engine's draft/target models share along the accepted path (same
+/// prefix -> same distribution, wherever round boundaries fall). This
+/// is the substrate the adaptive-K exactness properties run on.
+fn synth_dist(salt: u64, prefix: &[i32], vocab: usize, sharp: f64) -> Vec<f32> {
+    let mut h = salt;
+    for &t in prefix {
+        h = h
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(t as u64 + 1);
+    }
+    let mut rng = Pcg64::new(h, 0x5EED);
+    gen::dist(&mut rng, vocab, sharp)
+}
+
+/// Decode `len` tokens through engine-shaped rounds over the synthetic
+/// model: each round asks `next_k` for its chain length, drafts that
+/// many tokens from the q-model (chained on the speculated prefix),
+/// verifies through the audited `verify_round`, and reports the round's
+/// (k, n_accepted) to `observe` (how a controller stays in the loop).
+/// Stochastic draws come from `rng` under the fixed-uniform contract:
+/// k draft draws + k accept draws + one sample draw per round.
+#[allow(clippy::too_many_arguments)]
+fn decode_schedule(
+    psalt: u64,
+    qsalt: u64,
+    vocab: usize,
+    len: usize,
+    mode: SamplingMode,
+    rng: &mut Pcg64,
+    mut next_k: impl FnMut(usize) -> usize,
+    mut observe: impl FnMut(usize, usize),
+) -> (Vec<i32>, usize) {
+    use lk_spec::spec::sampling::argmax;
+    let mut out: Vec<i32> = Vec::new();
+    let mut rounds = 0usize;
+    while out.len() < len {
+        let k = next_k(rounds).clamp(1, 7);
+        let mut drafts: Vec<i32> = Vec::with_capacity(k);
+        let mut q_rows: Vec<f32> = Vec::new();
+        let mut ctx = out.clone();
+        for _ in 0..k {
+            let q = synth_dist(qsalt, &ctx, vocab, 2.0);
+            let x = match mode {
+                SamplingMode::Stochastic => {
+                    categorical_from_uniform(&q, rng.uniform() as f32) as i32
+                }
+                _ => argmax(&q) as i32,
+            };
+            q_rows.extend_from_slice(&q);
+            drafts.push(x);
+            ctx.push(x);
+        }
+        let mut p_rows: Vec<f32> = Vec::new();
+        let mut ctx = out.clone();
+        for j in 0..=k {
+            p_rows.extend_from_slice(&synth_dist(psalt, &ctx, vocab, 2.0));
+            if j < k {
+                ctx.push(drafts[j]);
+            }
+        }
+        let u = RoundUniforms::draw(rng, k, mode);
+        let rv = verify_round(k, vocab, &p_rows, &q_rows, &drafts, mode, &u);
+        observe(k, rv.n_accepted);
+        out.extend_from_slice(&drafts[..rv.n_accepted]);
+        out.push(rv.token);
+        rounds += 1;
+    }
+    out.truncate(len);
+    (out, rounds)
+}
+
+/// THE adaptive exactness theorem (greedy modes): the emitted sequence
+/// is the target's greedy path position by position, so ANY per-round-K
+/// schedule — every fixed K, arbitrary random schedules, and a live
+/// `SpecController` — emits bit-identical tokens. Only round counts
+/// change (pinned via the all-accepting q == p case, where K=7 rounds
+/// emit 8 tokens and K=1 rounds emit 2).
+#[test]
+fn prop_adaptive_k_schedule_greedy_exact() {
+    use lk_spec::spec::adaptive::{ControllerCfg, SpecController};
+    forall(
+        "greedy emission is k-schedule invariant",
+        0xADA9,
+        16,
+        |rng| {
+            let psalt = rng.next_u64();
+            // Half the cases draft from the target itself (clean sweeps:
+            // round counts collapse at large K); half from an unrelated
+            // model (constant rejections).
+            let qsalt = if rng.below(2) == 0 { psalt } else { rng.next_u64() };
+            (psalt, qsalt, rng.next_u64())
+        },
+        |&(psalt, qsalt, seed)| {
+            let (vocab, len) = (12usize, 40usize);
+            // Reference: the pure greedy rollout of the target model.
+            let mut reference: Vec<i32> = Vec::new();
+            for _ in 0..len {
+                let p = synth_dist(psalt, &reference, vocab, 2.0);
+                reference.push(lk_spec::spec::sampling::argmax(&p) as i32);
+            }
+            let mut rounds_seen = Vec::new();
+            // Every fixed K…
+            for k in 1..=7usize {
+                let mut rng = Pcg64::new(seed, k as u64);
+                let (toks, rounds) = decode_schedule(
+                    psalt, qsalt, vocab, len,
+                    SamplingMode::Greedy, &mut rng, |_| k, |_, _| {},
+                );
+                if toks != reference {
+                    return Err(format!("fixed k={k} diverged from greedy path"));
+                }
+                rounds_seen.push(rounds);
+            }
+            // …a random schedule…
+            let mut sched_rng = Pcg64::new(seed, 99);
+            let mut rng = Pcg64::new(seed, 100);
+            let (toks, _) = decode_schedule(
+                psalt, qsalt, vocab, len,
+                SamplingMode::Greedy, &mut rng,
+                |_| 1 + sched_rng.below(7), |_, _| {},
+            );
+            if toks != reference {
+                return Err("random schedule diverged from greedy path".into());
+            }
+            // …and the live controller, observing its own rounds.
+            let ctrl = std::cell::RefCell::new(SpecController::new(ControllerCfg {
+                warmup: 0,
+                ..Default::default()
+            }));
+            let mut rng = Pcg64::new(seed, 101);
+            let (toks, ctrl_rounds) = decode_schedule(
+                psalt, qsalt, vocab, len,
+                SamplingMode::Greedy, &mut rng,
+                |_| ctrl.borrow_mut().choose_k(),
+                |k, n| ctrl.borrow_mut().observe_chain(k, n),
+            );
+            if toks != reference {
+                return Err("controller schedule diverged from greedy path".into());
+            }
+            // Round counts are where schedules differ: with q == p every
+            // draft accepts, so K=7 needs ~len/8 rounds and K=1 ~len/2.
+            if qsalt == psalt && rounds_seen[0] <= rounds_seen[6] {
+                return Err(format!(
+                    "all-accept case: k=1 rounds {} not above k=7 rounds {}",
+                    rounds_seen[0], rounds_seen[6]
+                ));
+            }
+            let _ = ctrl_rounds;
+            Ok(())
+        },
+    );
+}
+
+/// Stochastic mode under ANY k-schedule stays exactly lossless: the
+/// joint law of the first two emitted tokens equals the target's
+/// autoregressive 2-gram p(a)·p(b|a), with a fresh random schedule per
+/// trial (round boundaries land differently every time).
+#[test]
+fn prop_adaptive_k_schedule_stochastic_lossless() {
+    forall(
+        "any k-schedule preserves the 2-gram law",
+        0xADA5,
+        3,
+        |rng| (rng.next_u64(), rng.next_u64(), rng.next_u64()),
+        |&(psalt, qsalt, seed)| {
+            let vocab = 8usize;
+            let n = 120_000usize;
+            let mut rng = Pcg64::new(seed, 7);
+            let mut joint = vec![0f64; vocab * vocab];
+            for _ in 0..n {
+                let mut sched_rng = rng.fork(11);
+                let (toks, _) = decode_schedule(
+                    psalt, qsalt, vocab, 2,
+                    SamplingMode::Stochastic, &mut rng,
+                    |_| 1 + sched_rng.below(4), |_, _| {},
+                );
+                joint[toks[0] as usize * vocab + toks[1] as usize] += 1.0;
+            }
+            let p0 = synth_dist(psalt, &[], vocab, 2.0);
+            for a in 0..vocab {
+                let p1 = synth_dist(psalt, &[a as i32], vocab, 2.0);
+                for b in 0..vocab {
+                    let want = p0[a] as f64 * p1[b] as f64;
+                    let emp = joint[a * vocab + b] / n as f64;
+                    let tol = 0.012 + 3.0 * (want / n as f64).sqrt();
+                    if (emp - want).abs() > tol {
+                        return Err(format!(
+                            "2-gram ({a},{b}): |{emp:.4} - {want:.4}| > {tol:.4}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Replay determinism of adaptive runs: a schedule consumes exactly
+/// k draft + k accept + 1 sample draws per round, so (seed, schedule)
+/// fully determines the stochastic sample path — equal schedules are
+/// bit-identical however they are produced, and a constant schedule IS
+/// the fixed-K engine. (Distinct schedules are distinct couplings of
+/// the same law — see DESIGN.md §4a for why cross-schedule bit-equality
+/// is impossible in stochastic mode.)
+#[test]
+fn prop_adaptive_constant_schedule_is_fixed_k() {
+    forall(
+        "constant schedule == fixed K, bit for bit",
+        0xADAC,
+        12,
+        |rng| (rng.next_u64(), rng.next_u64(), rng.next_u64(), 1 + rng.below(7)),
+        |&(psalt, qsalt, seed, k)| {
+            let (vocab, len) = (10usize, 30usize);
+            let mut rng_a = Pcg64::new(seed, 1);
+            let (fixed, rounds_a) = decode_schedule(
+                psalt, qsalt, vocab, len,
+                SamplingMode::Stochastic, &mut rng_a, |_| k, |_, _| {},
+            );
+            // The same k produced by a stateful "controller" closure.
+            let mut calls = 0usize;
+            let mut rng_b = Pcg64::new(seed, 1);
+            let (ctrl, rounds_b) = decode_schedule(
+                psalt, qsalt, vocab, len,
+                SamplingMode::Stochastic, &mut rng_b,
+                |_| {
+                    calls += 1;
+                    k
+                },
+                |_, _| {},
+            );
+            if fixed != ctrl {
+                return Err("constant schedule diverged from fixed K".into());
+            }
+            if rounds_a != rounds_b || calls != rounds_b {
+                return Err("round accounting diverged".into());
+            }
+            // And the streams stayed aligned: both RNGs sit at the same
+            // position after identical per-round draw counts.
+            if rng_a.next_u64() != rng_b.next_u64() {
+                return Err("RNG streams misaligned after equal schedules".into());
+            }
+            Ok(())
+        },
+    );
+}

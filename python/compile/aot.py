@@ -666,6 +666,151 @@ def lower_draft(w: EntryWriter, dcfg: D.DraftConfig) -> dict:
                 dkv_copy_row_fn,
                 [("dst", [dkv_spec]), ("src", [dkv1_spec]), ("row", [i32()])],
             )
+
+            # --- multi-candidate (tree) drafting: the recurrent drafter
+            # expands a candidate tree LEVEL-PARALLEL — one tree-attention
+            # pass per level over all node slots, each node recurring on
+            # its parent's hidden (drafts.draft_tree_step). Node i's KV
+            # sits at draft slot pos + i; after the verdict the accepted
+            # path is spliced to consecutive slots by dkv_path_gather —
+            # the draft-side twin of the target's kv_path_gather.
+            n_tree = VERIFY_T - 1
+
+            def tree_step_fn(*flat):
+                tp = unflat_t(flat[:n_t])
+                dp = unflat_d(flat[n_t : n_t + n_d])
+                dkv, h_prev, h_all, tokens, pos, parents = flat[n_t + n_d :]
+                return D.draft_tree_step(
+                    dp, tp, dkv, h_prev, h_all, tokens, pos, parents, dcfg
+                )
+
+            entries[f"tree_step_b{b}"] = w.lower(
+                f"dr_{tag}_tree_step_b{b}",
+                tree_step_fn,
+                [
+                    ("tparams", t_structs),
+                    ("dparams", d_structs),
+                    ("dkv", [dkv_spec]),
+                    ("h_prev", [f32((b, d))]),
+                    ("h_all", [f32((b, n_tree, d))]),
+                    ("tokens", [i32((b, n_tree))]),
+                    ("pos", [i32((b,))]),
+                    ("parents", [i32((n_tree,))]),
+                ],
+            )
+
+            # Draft-side path splice: flatten the accepted tree path's
+            # draft-KV entries to consecutive cache positions (the next
+            # round is topology-agnostic, like the target cache).
+            def dkv_path_gather_fn(dkv, sel, dst0):
+                return (D.dkv_path_gather(dkv, sel, dst0),)
+
+            entries[f"dkv_path_gather_b{b}"] = w.lower(
+                f"dr_{tag}_dkv_path_gather_b{b}",
+                dkv_path_gather_fn,
+                [
+                    ("dkv", [dkv_spec]),
+                    ("sel", [i32((b, n_tree))]),
+                    ("dst0", [i32((b,))]),
+                ],
+            )
+
+            # Device-path tree proposal: the WHOLE level-parallel
+            # expansion in one graph. Node 0 is the extend-sampled first
+            # draft (tok0/q0 ride in device-resident); its level-0
+            # siblings sample from the same q0, deeper levels from their
+            # parent's tree_step distribution — all through host-fed
+            # per-node uniforms. The n_tree full-vocab q tensors flow
+            # straight into verify_tree_fused.
+            def rec_tree_sample_fn(*flat):
+                tp = unflat_t(flat[:n_t])
+                dp = unflat_d(flat[n_t : n_t + n_d])
+                rest = flat[n_t + n_d :]
+                if use_vmap:
+                    (dkv, h_prev, tok0, q0, u, parents, ranks, pos, temp,
+                     mode, vocab_map) = rest
+                else:
+                    (dkv, h_prev, tok0, q0, u, parents, ranks, pos, temp,
+                     mode) = rest
+                    vocab_map = None
+                tokens, qs, dkv2 = D.draft_tree_propose(
+                    dp, tp, dkv, h_prev, tok0, q0, u, parents, ranks, pos,
+                    temp, mode, dcfg, vocab_map, tcfg.vocab, n_tree,
+                )
+                return (tokens,) + tuple(qs) + (dkv2,)
+
+            entries[f"propose_tree_sample_b{b}"] = w.lower(
+                f"dr_{tag}_propose_tree_sample_b{b}",
+                rec_tree_sample_fn,
+                [
+                    ("tparams", t_structs),
+                    ("dparams", d_structs),
+                    ("dkv", [dkv_spec]),
+                    ("h_prev", [f32((b, d))]),
+                    ("tok0", [i32((b,))]),
+                    ("q0", [f32((b, tcfg.vocab))]),
+                    ("u", [f32((b, n_tree))]),
+                    ("parents", [i32((n_tree,))]),
+                    ("ranks", [i32((n_tree,))]),
+                    ("pos", [i32((b,))]),
+                    ("temp", [f32()]),
+                    ("mode", [i32()]),
+                ]
+                + vm_in,
+            )
+
+            # Device-path tree advance: extend_k_sample with the verify
+            # pass's TREE-layout features linearized in-graph along the
+            # accepted path (blk maps chain row t -> block slot), so the
+            # fused tree verify's feats output feeds back without a host
+            # round-trip. Same output contract as extend_k_sample.
+            def ext_tree_sample_fn(*flat):
+                tp = unflat_t(flat[:n_t])
+                dp = unflat_d(flat[n_t : n_t + n_d])
+                rest = flat[n_t + n_d :]
+                if use_vmap:
+                    (dkv, feats_full, blk, tokens_next, pos, sel, u, temp,
+                     mode, vocab_map) = rest
+                else:
+                    (dkv, feats_full, blk, tokens_next, pos, sel, u, temp,
+                     mode) = rest
+                    vocab_map = None
+                feats_lin = jnp.take_along_axis(
+                    feats_full, blk[:, :, None], axis=1
+                )
+                feats = feats_lin[..., tcfg.feat_dim - fdim :]
+                qlog, h, dkv2 = D.draft_extend(
+                    dp, tp, dkv, feats, tokens_next, pos, dcfg
+                )
+                q_sel = jnp.take_along_axis(
+                    qlog, sel[:, None, None], axis=1
+                )[:, 0]
+                h_sel = jnp.take_along_axis(
+                    h, sel[:, None, None], axis=1
+                )[:, 0]
+                tok, q_full = VD.draft_q_and_sample(
+                    q_sel, u, temp, mode, vocab_map, tcfg.vocab
+                )
+                return tok, q_full, h_sel, dkv2
+
+            entries[f"extend_tree_sample_b{b}"] = w.lower(
+                f"dr_{tag}_extend_tree_sample_b{b}",
+                ext_tree_sample_fn,
+                [
+                    ("tparams", t_structs),
+                    ("dparams", d_structs),
+                    ("dkv", [dkv_spec]),
+                    ("feats", [f32((b, VERIFY_T, tcfg.feat_dim))]),
+                    ("blk", [i32((b, VERIFY_T))]),
+                    ("tokens_next", [i32((b, VERIFY_T))]),
+                    ("pos", [i32((b,))]),
+                    ("sel", [i32((b,))]),
+                    ("u", [f32((b,))]),
+                    ("temp", [f32()]),
+                    ("mode", [i32()]),
+                ]
+                + vm_in,
+            )
         elif dcfg.arch == "medusa":
             def prop_fn(*flat):
                 dp = unflat_d(flat[:n_d])

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from . import model as M
+from . import verify_device as VD
 
 
 @dataclasses.dataclass(frozen=True)
@@ -237,6 +238,148 @@ def draft_step(
     )
     logits = _draft_head(dparams, tparams, cfg, x)
     return logits[:, 0], x[:, 0], jnp.stack(kv)
+
+
+def draft_tree_step(
+    dparams,
+    tparams,
+    dkv: jax.Array,
+    h_prev: jax.Array,
+    h_all: jax.Array,
+    tokens: jax.Array,
+    pos,
+    parents: jax.Array,
+    cfg: DraftConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One LEVEL-PARALLEL tree-expansion pass (recurrent archs).
+
+    The multi-candidate analog of `draft_step`: every candidate node of a
+    per-round tree runs through the draft block in ONE pass with tree
+    attention — node `i` sits at draft-KV slot `pos + i`, attends the
+    committed prefix plus its own root path within the block, and takes
+    RoPE position `pos + level(i)` (exactly the positions a chain of
+    `draft_step` calls would use along that path). The EAGLE recurrence
+    is preserved per PATH: node `i`'s input hidden is its PARENT's output
+    hidden, gathered in-graph from `h_all` (root children take the
+    round's `h_prev`), so the engine expands one tree level per call —
+    call `c` produces valid q/h for every node at level `<= c`, and
+    `depth - 1` calls expand the whole tree.
+
+    Args:
+      dkv: [2, B, H, Smax, Dh] draft KV cache; ALL node slots are
+        rewritten each call (junk for not-yet-sampled levels is attended
+        by nobody: a node only attends its ancestors, which are valid)
+      h_prev: [B, d] the round's conditioning hidden (accepted boundary)
+      h_all: [B, N, d] previous call's per-node hiddens (zeros on call 0)
+      tokens: [B, N] candidate token per node (levels sampled so far)
+      pos: [B] absolute draft position of node slot 0
+      parents: [N] i32 node parents (-1 = root child; padding slots are
+        self-parents, making them inert in mask and depth)
+
+    Returns (q_logits [B, N, Vd], h [B, N, d], dkv'). A chain topology
+    reproduces the `draft_step` chain: causal mask, positions pos+i, and
+    the same per-node inputs (tested in tests/test_recurrent_tree.py).
+    """
+    lcfg = draft_layer_cfg(cfg)
+    n = tokens.shape[1]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    p_self = jnp.where(parents < 0, idx, parents)
+    anc, depth = VD.tree_block_topology(p_self, n)
+    h_par = jnp.take(h_all, jnp.clip(parents, 0, n - 1), axis=1)  # [B,N,d]
+    h_nodes = jnp.where((parents < 0)[None, :, None], h_prev[:, None, :], h_par)
+    emb = jnp.take(tparams["embed"], tokens, axis=0)
+    x = _recurrent_input(dparams, cfg, emb, h_nodes)
+    x, kv = M.transformer_layer(
+        dparams["layer"], x, lcfg, kv=(dkv[0], dkv[1]), pos=pos, tree=(anc, depth)
+    )
+    logits = _draft_head(dparams, tparams, cfg, x)
+    return logits, x, jnp.stack(kv)
+
+
+def draft_tree_propose(
+    dparams,
+    tparams,
+    dkv: jax.Array,
+    h_prev: jax.Array,
+    tok0: jax.Array,
+    q0: jax.Array,
+    u: jax.Array,
+    parents: jax.Array,
+    ranks: jax.Array,
+    pos,
+    temp,
+    mode,
+    cfg: DraftConfig,
+    vocab_map: jax.Array | None,
+    full_vocab: int,
+    n_tree: int,
+) -> tuple[jax.Array, list[jax.Array], jax.Array]:
+    """The whole level-parallel tree expansion in one graph (device-path
+    tree proposal for recurrent archs; lowered as
+    `propose_tree_sample_b{B}`).
+
+    Node 0 is the previous extend's in-graph first draft (`tok0` with
+    distribution `q0`, both device-resident); its level-0 siblings sample
+    from the same `q0`; each deeper level samples from its parent's
+    `draft_tree_step` distribution — all through host-fed per-node
+    uniforms `u [B, N]` (slot 0 unused: the host drew node 0's uniform at
+    the previous advance, exactly the chain convention). Runs `n_tree-1`
+    level passes unconditionally so one lowered graph serves every
+    topology; a node at level L is filled at pass L-1 and later passes
+    leave it unchanged.
+
+    Returns (tokens [B, N] i32, [N] full-vocab q tensors, dkv').
+    """
+    idx = jnp.arange(n_tree, dtype=jnp.int32)
+    p_self = jnp.where(parents < 0, idx, parents)
+    _, levels = VD.tree_block_topology(p_self, n_tree)
+    is_root = parents < 0
+    toks, qs = [], []
+    for i in range(n_tree):
+        t_i = VD.tree_root_sample(q0, u[:, i], ranks[i], mode, n_tree)
+        if i == 0:
+            t_i = tok0
+        toks.append(jnp.where(is_root[i], t_i, jnp.zeros_like(t_i)))
+        qs.append(q0)
+    tokens = jnp.stack(toks, axis=1)  # [B, N]
+    d = h_prev.shape[-1]
+    h_all = jnp.zeros((tokens.shape[0], n_tree, d), q0.dtype)
+    dkv_c = dkv
+    for step in range(n_tree - 1):
+        qlog, h_all, dkv_c = draft_tree_step(
+            dparams, tparams, dkv_c, h_prev, h_all, tokens, pos, parents, cfg
+        )
+        qlog_par = jnp.take(qlog, jnp.clip(parents, 0, n_tree - 1), axis=1)
+        new_toks = []
+        for i in range(n_tree):
+            t_i, q_i = VD.tree_child_sample(
+                qlog_par[:, i], u[:, i], ranks[i], temp, mode,
+                vocab_map, full_vocab, n_tree,
+            )
+            live = levels[i] == step + 1
+            qs[i] = jnp.where(live, q_i, qs[i])
+            new_toks.append(jnp.where(live, t_i, tokens[:, i]))
+        tokens = jnp.stack(new_toks, axis=1)
+    return tokens, qs, dkv_c
+
+
+def dkv_path_gather(
+    dkv: jax.Array, sel: jax.Array, dst0: jax.Array
+) -> jax.Array:
+    """Draft-side path splice (recurrent archs): per row, gather the
+    draft-KV entries at absolute positions `sel [B, N]` and scatter them
+    linearly from `dst0 [B]` — the [2, B, H, Smax, Dh]-layout twin of the
+    target's `kv_path_gather`. Gathers read the pre-update cache; batch
+    rows never overlap. Lowered per bucket as `dkv_path_gather_b{B}`.
+    """
+    b = dkv.shape[1]
+    out = dkv
+    for bi in range(b):  # B <= 4; unrolled per-row
+        g = jnp.take(dkv[:, bi], sel[bi], axis=2)  # [2, H, N, Dh]
+        out = jax.lax.dynamic_update_slice(
+            out, g[:, None], (0, bi, 0, dst0[bi], 0)
+        )
+    return out
 
 
 def draft_train_unroll(

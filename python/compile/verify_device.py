@@ -383,6 +383,50 @@ def tree_draft_sample(
     return jnp.stack(toks, axis=1), qs
 
 
+def tree_child_sample(
+    logits_c: jax.Array,   # [B, Vd] draft logits at the node's parent
+    u: jax.Array,          # [B] the node's draft uniform
+    rank: jax.Array,       # [] i32 sibling rank
+    temp: jax.Array,
+    mode: jax.Array,
+    vocab_map: jax.Array | None = None,
+    full_vocab: int | None = None,
+    rank_max: int = 7,
+) -> tuple[jax.Array, jax.Array]:
+    """In-graph candidate sampling for ONE tree node from its parent's
+    draft logits — the device twin of `EngineCx::sample_draft_tree`:
+    stochastic mode samples i.i.d. through the node's uniform, the
+    greedy modes take the sibling-rank-th largest token so siblings
+    enumerate distinct top-k candidates. Returns (token [B] i32
+    full-vocab ids, q_full [B, V]) like `draft_q_and_sample`.
+    """
+    qc = temp_softmax(logits_c, temp)
+    tok_sto = categorical_from_uniform(qc, u)
+    tok_rank = kth_argmax(qc, rank, rank_max)
+    tok_c = jnp.where(mode == MODE_STOCHASTIC, tok_sto, tok_rank).astype(jnp.int32)
+    if vocab_map is None:
+        return tok_c, qc
+    b = logits_c.shape[0]
+    q_full = jnp.zeros((b, full_vocab), qc.dtype).at[:, vocab_map].set(qc)
+    return jnp.take(vocab_map, tok_c).astype(jnp.int32), q_full
+
+
+def tree_root_sample(
+    q_full: jax.Array,  # [B, V] full-vocab ROOT distribution (softmaxed)
+    u: jax.Array,       # [B] the node's draft uniform
+    rank: jax.Array,    # [] i32 sibling rank
+    mode: jax.Array,
+    rank_max: int = 7,
+) -> jax.Array:
+    """Level-0 sibling sampling from the extend-produced full-vocab q0.
+    Selection over the SCATTERED full-vocab q equals compact-then-map
+    (the host path): the vocab map is sorted, so cumsum order and
+    argmax-rank order coincide on the support. Returns [B] i32 ids."""
+    tok_sto = categorical_from_uniform(q_full, u)
+    tok_rank = kth_argmax(q_full, rank, rank_max)
+    return jnp.where(mode == MODE_STOCHASTIC, tok_sto, tok_rank).astype(jnp.int32)
+
+
 def pick_hidden(feats: jax.Array, sel: jax.Array, d: int) -> jax.Array:
     """Per-row gather of the last-d feature slice at index `sel`.
 

@@ -1,0 +1,318 @@
+"""Recurrent (EAGLE-3) tree drafting: the level-parallel expansion
+(`drafts.draft_tree_step` / `drafts.draft_tree_propose`), the draft-side
+path splice (`drafts.dkv_path_gather`) and the per-node candidate
+sampling (`verify_device.tree_child_sample` / `tree_root_sample`) — the
+graphs behind the `tree_step_b{B}` / `propose_tree_sample_b{B}` /
+`dkv_path_gather_b{B}` / `extend_tree_sample_b{B}` AOT entries.
+
+The two contracts under test:
+
+  * CHAIN DEGENERACY — a single-chain topology through the tree graphs
+    reproduces the chained `draft_step` path: same distributions, same
+    hiddens, same draft-KV entries (the recurrent analog of the PR-3
+    medusa-tree property, here at the graph level);
+  * HOST/DEVICE PROPOSAL PARITY — the one-graph device expansion
+    (`draft_tree_propose`) emits exactly the candidates the engine's
+    level-by-level host loop samples from the same uniforms (token-exact:
+    both consume the shared `tree_step` distributions through identical
+    per-element selection rules).
+
+Deliberately hypothesis-free so the suite runs on minimal images.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import drafts as D
+from compile import model as M
+from compile import verify_device as VD
+
+# Tiny config: 2-layer target, 1-block eagle3 draft, truncated vocab.
+TCFG = M.TargetConfig(
+    name="tiny", vocab=64, d_model=16, n_layers=2, n_heads=2, max_seq=48
+)
+DCFG = D.DraftConfig(arch="eagle3", target=TCFG, k_heads=4, draft_vocab=24)
+
+# BFS node-parent arrays (TreeSpec contract).
+CHAIN3 = np.array([-1, 0, 1], np.int32)
+TREE_2X2 = np.array([-1, -1, 0, 0, 1, 1], np.int32)
+TREE_MIXED = np.array([-1, -1, -1, 0, 1], np.int32)
+
+
+def _setup(b=2, prompt=6, seed=0):
+    """Params + a bootstrapped draft state (dkv with a committed prompt
+    prefix, per-row q1 logits and conditioning hidden at position c-1)."""
+    key = jax.random.PRNGKey(seed)
+    kt, kd, kf, ktok = jax.random.split(key, 4)
+    tp = M.init_target(kt, TCFG)
+    dp = D.init_draft(kd, DCFG)
+    vocab_map = jnp.sort(
+        jax.random.choice(kf, TCFG.vocab, (DCFG.draft_vocab,), replace=False)
+    ).astype(jnp.int32)
+    dkv0 = jnp.zeros(
+        (2, b, TCFG.n_heads, TCFG.max_seq, TCFG.head_dim), jnp.float32
+    )
+    feats = jax.random.normal(kf, (b, prompt, DCFG.fuse_dim)) * 0.3
+    tnext = jax.random.randint(ktok, (b, prompt), 0, TCFG.vocab)
+    qlog, h, dkv = D.draft_extend(dp, tp, dkv0, feats, tnext, 0, DCFG)
+    c = prompt  # committed length
+    q1 = qlog[:, c - 1]  # [B, Vd] first-draft logits
+    h_prev = h[:, c - 1]  # [B, d]
+    return tp, dp, vocab_map, dkv, q1, h_prev, c
+
+
+def _levels(parents):
+    lv = []
+    for i, p in enumerate(parents):
+        lv.append(0 if p < 0 else lv[p] + 1)
+    return np.array(lv, np.int32)
+
+
+def _ranks(parents):
+    out, last, r = [], None, 0
+    for p in parents:
+        r = r + 1 if p == last else 0
+        last = p
+        out.append(r)
+    return np.array(out, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# chain degeneracy of the level-parallel step
+# ---------------------------------------------------------------------------
+
+def test_tree_step_chain_matches_draft_step():
+    """A chain topology through `draft_tree_step` reproduces the chained
+    `draft_step` recurrence: same per-node distributions and hiddens,
+    same draft-KV entries at the same slots."""
+    tp, dp, _, dkv, q1, h_prev, c = _setup()
+    b = q1.shape[0]
+    n = 3
+    rng = np.random.default_rng(7)
+    toks = jnp.asarray(rng.integers(0, TCFG.vocab, (b, n)), jnp.int32)
+    pos = jnp.full((b,), c, jnp.int32)
+
+    # --- chained reference: draft_step at pos c, c+1 (k-1 = 2 calls) ---
+    q_ref, h_ref, dkv_ref = [], [], dkv
+    h_cur = h_prev
+    for i in range(n - 1):
+        qlog, h_cur, dkv_ref = D.draft_step(
+            dp, tp, dkv_ref, h_cur, toks[:, i], jnp.full((b,), c + i), DCFG
+        )
+        q_ref.append(qlog)
+        h_ref.append(h_cur)
+
+    # --- level-parallel: depth-1 calls over the full block --------------
+    parents = jnp.asarray(CHAIN3)
+    h_all = jnp.zeros((b, n, TCFG.d_model))
+    dkv_t = dkv
+    outs = []
+    for _ in range(n - 1):
+        qlog, h_all, dkv_t = D.draft_tree_step(
+            dp, tp, dkv_t, h_prev, h_all, toks, pos, parents, DCFG
+        )
+        outs.append(qlog)
+
+    for i in range(n - 1):
+        np.testing.assert_allclose(
+            outs[i][:, i], q_ref[i], rtol=1e-5, atol=1e-5,
+            err_msg=f"node {i} distribution diverged from the chain",
+        )
+    np.testing.assert_allclose(
+        h_all[:, n - 2], h_ref[-1], rtol=1e-5, atol=1e-5
+    )
+    # draft-KV entries the chain wrote (slots c, c+1) must match.
+    np.testing.assert_allclose(
+        dkv_t[:, :, :, c : c + n - 1],
+        dkv_ref[:, :, :, c : c + n - 1],
+        rtol=1e-5, atol=1e-5,
+        err_msg="tree block KV entries diverged from the chained writes",
+    )
+    # committed prefix untouched
+    np.testing.assert_array_equal(dkv_t[:, :, :, :c], dkv[:, :, :, :c])
+
+
+def test_tree_step_padding_slots_inert():
+    """Self-parent padding slots change nothing for the real nodes."""
+    tp, dp, _, dkv, q1, h_prev, c = _setup()
+    b = q1.shape[0]
+    rng = np.random.default_rng(3)
+    toks3 = jnp.asarray(rng.integers(0, TCFG.vocab, (b, 3)), jnp.int32)
+    pos = jnp.full((b,), c, jnp.int32)
+    # exact-size block
+    q_a, h_a, _ = D.draft_tree_step(
+        dp, tp, dkv, h_prev, jnp.zeros((b, 3, TCFG.d_model)),
+        toks3, pos, jnp.asarray(CHAIN3), DCFG,
+    )
+    # padded to 5 slots (self-parents, junk tokens)
+    pad_parents = jnp.asarray(np.array([-1, 0, 1, 3, 4], np.int32))
+    toks5 = jnp.concatenate(
+        [toks3, jnp.full((b, 2), 11, jnp.int32)], axis=1
+    )
+    q_b, h_b, _ = D.draft_tree_step(
+        dp, tp, dkv, h_prev, jnp.zeros((b, 5, TCFG.d_model)),
+        toks5, pos, pad_parents, DCFG,
+    )
+    np.testing.assert_allclose(q_b[:, :3], q_a, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(h_b[:, :3], h_a, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the draft-side path splice
+# ---------------------------------------------------------------------------
+
+def test_dkv_path_gather_splices_rows():
+    rng = np.random.default_rng(5)
+    b, h, s, dh = 2, 2, 12, 4
+    dkv = rng.normal(size=(2, b, h, s, dh)).astype(np.float32)
+    kq = 3
+    sel = np.array([[7, 9, 10], [4, 4, 6]], np.int32)
+    dst0 = np.array([5, 3], np.int32)
+    out = np.array(D.dkv_path_gather(
+        jnp.asarray(dkv), jnp.asarray(sel), jnp.asarray(dst0)
+    ))
+    want = dkv.copy()
+    for bi in range(b):
+        for t in range(kq):
+            want[:, bi, :, dst0[bi] + t] = dkv[:, bi, :, sel[bi, t]]
+    np.testing.assert_array_equal(out, want)
+
+
+# ---------------------------------------------------------------------------
+# device expansion == host level-by-level loop (token-exact)
+# ---------------------------------------------------------------------------
+
+def _host_propose_tree(tp, dp, vocab_map, dkv, q1, h_prev, c, parents, u, mode):
+    """Transcription of the Rust host loop (RecurrentTree::propose_tree):
+    level 0 sampled from q1 compact + vocab-map, one `draft_tree_step`
+    per deeper level, children sampled from the parent's compact
+    distribution — the same selection formulations as the device graph.
+    """
+    b = q1.shape[0]
+    n = len(parents)
+    levels = _levels(parents)
+    ranks = _ranks(parents)
+    depth = int(levels.max()) + 1
+    temp = jnp.float32(1.0)
+
+    def sample(logits_c, ui, rank):
+        qc = VD.temp_softmax(logits_c, temp)  # [B, Vd]
+        if mode == VD.MODE_STOCHASTIC:
+            tok_c = VD.categorical_from_uniform(qc, ui)
+        else:
+            tok_c = VD.kth_argmax(qc, jnp.int32(rank), n)
+        q_full = (
+            jnp.zeros((b, TCFG.vocab), qc.dtype).at[:, vocab_map].set(qc)
+        )
+        return jnp.take(vocab_map, tok_c).astype(jnp.int32), q_full
+
+    toks = np.zeros((b, n), np.int32)
+    qs = np.zeros((b, n, TCFG.vocab), np.float32)
+    for i in range(n):
+        if levels[i] == 0:
+            t_i, q_i = sample(q1, u[:, i], ranks[i])
+            toks[:, i] = np.array(t_i)
+            qs[:, i] = np.array(q_i)
+    h_all = jnp.zeros((b, n, TCFG.d_model))
+    dkv_c = dkv
+    pos = jnp.full((b,), c, jnp.int32)
+    for lvl in range(depth - 1):
+        qlog, h_all, dkv_c = D.draft_tree_step(
+            dp, tp, dkv_c, h_prev, h_all, jnp.asarray(toks), pos,
+            jnp.asarray(parents), DCFG,
+        )
+        for i in range(n):
+            if levels[i] == lvl + 1:
+                t_i, q_i = sample(qlog[:, parents[i]], u[:, i], ranks[i])
+                toks[:, i] = np.array(t_i)
+                qs[:, i] = np.array(q_i)
+    return toks, qs, dkv_c
+
+
+def test_tree_propose_device_matches_host_loop():
+    """`draft_tree_propose` (the one-graph device expansion) emits
+    exactly the host loop's candidates from the same uniforms, in both
+    stochastic and greedy modes, on branching and chain topologies."""
+    tp, dp, vocab_map, dkv, q1, h_prev, c = _setup()
+    b = q1.shape[0]
+    rng = np.random.default_rng(11)
+    for parents in (TREE_2X2, TREE_MIXED, CHAIN3):
+        n = len(parents)
+        u = rng.uniform(size=(b, n)).astype(np.float32)
+        for mode in (VD.MODE_STOCHASTIC, VD.MODE_GREEDY):
+            host_toks, host_qs, _ = _host_propose_tree(
+                tp, dp, vocab_map, dkv, q1, h_prev, c, parents,
+                jnp.asarray(u), mode,
+            )
+            # device inputs: node 0 pre-sampled by the previous extend
+            # (tok0/q0) — here the host's own node-0 result.
+            qc0 = VD.temp_softmax(q1, jnp.float32(1.0))
+            q0_full = (
+                jnp.zeros((b, TCFG.vocab), qc0.dtype)
+                .at[:, vocab_map].set(qc0)
+            )
+            tok0 = jnp.asarray(host_toks[:, 0])
+            dev_toks, dev_qs, _ = D.draft_tree_propose(
+                dp, tp, dkv, h_prev, tok0, q0_full, jnp.asarray(u),
+                jnp.asarray(parents), jnp.asarray(_ranks(parents)),
+                jnp.full((b,), c, jnp.int32), jnp.float32(1.0),
+                jnp.int32(mode), DCFG, vocab_map, TCFG.vocab, n,
+            )
+            np.testing.assert_array_equal(
+                np.array(dev_toks), host_toks,
+                err_msg=f"parents={list(parents)} mode={mode}: candidates"
+                " diverged between device graph and host loop",
+            )
+            for i in range(n):
+                np.testing.assert_allclose(
+                    np.array(dev_qs[i]), host_qs[:, i], rtol=1e-6,
+                    atol=1e-6,
+                    err_msg=f"node {i} q diverged (mode={mode})",
+                )
+
+
+def test_tree_root_sample_full_equals_compact():
+    """Selection over the SCATTERED full-vocab q equals compact-then-map
+    (the sorted vocab map preserves cumsum and rank order) — what lets
+    the device path sample level-0 siblings from the resident q0."""
+    rng = np.random.default_rng(13)
+    b, vd, v = 3, 8, 32
+    vocab_map = jnp.asarray(np.sort(rng.choice(v, vd, replace=False)), jnp.int32)
+    logits = jnp.asarray(rng.normal(size=(b, vd)), jnp.float32)
+    qc = VD.temp_softmax(logits, jnp.float32(1.0))
+    q_full = jnp.zeros((b, v), qc.dtype).at[:, vocab_map].set(qc)
+    u = jnp.asarray(rng.uniform(size=(b,)), jnp.float32)
+    for rank in range(3):
+        for mode in (VD.MODE_STOCHASTIC, VD.MODE_GREEDY):
+            full = VD.tree_root_sample(q_full, u, jnp.int32(rank), jnp.int32(mode), 4)
+            if mode == VD.MODE_STOCHASTIC:
+                compact = VD.categorical_from_uniform(qc, u)
+            else:
+                compact = VD.kth_argmax(qc, jnp.int32(rank), 4)
+            np.testing.assert_array_equal(
+                np.array(full), np.array(jnp.take(vocab_map, compact))
+            )
+
+
+# ---------------------------------------------------------------------------
+# the device advance's feats linearization
+# ---------------------------------------------------------------------------
+
+def test_feats_path_linearization():
+    """`extend_tree_sample`'s in-graph gather: blk maps chain row t to
+    tree block slot, so the linearized feats row t is the feature after
+    the t-th accepted token — identity blk is a no-op (chain rounds)."""
+    rng = np.random.default_rng(17)
+    b, t, f = 2, 8, 12
+    feats = jnp.asarray(rng.normal(size=(b, t, f)), jnp.float32)
+    ident = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    out = jnp.take_along_axis(feats, ident[:, :, None], axis=1)
+    np.testing.assert_array_equal(np.array(out), np.array(feats))
+    blk = np.array([[0, 2, 5, 5, 5, 5, 5, 5], [0, 1, 3, 4, 4, 4, 4, 4]], np.int32)
+    out = np.array(
+        jnp.take_along_axis(feats, jnp.asarray(blk)[:, :, None], axis=1)
+    )
+    for bi in range(b):
+        for tt in range(t):
+            np.testing.assert_array_equal(out[bi, tt], np.array(feats)[bi, blk[bi, tt]])

@@ -15,6 +15,7 @@ use lk_spec::runtime::Runtime;
 use lk_spec::server::batcher::BatcherConfig;
 use lk_spec::server::metrics::{
     device_bytes_per_round, host_draft_bytes_per_round, host_verify_bytes_per_round,
+    recurrent_tree_device_bytes_per_round, recurrent_tree_host_bytes_per_round,
     tree_device_bytes_per_round, tree_host_bytes_per_round,
 };
 use lk_spec::server::{DownshiftConfig, Scheduler, SimCore};
@@ -284,21 +285,41 @@ fn bench_verify_transfer(json: &mut JsonRows) -> anyhow::Result<()> {
             }
         }
     }
-    // Multi-candidate rounds (the default 2x2 MEDUSA tree, N = 6 nodes):
-    // host traffic still scales with the vocabulary, the fused tree path
-    // stays O(B·N) ints.
+    // Multi-candidate rounds (the default 2x2 tree, N = 6 nodes): host
+    // traffic still scales with the vocabulary, the fused tree paths
+    // stay O(B·N) ints — for the parallel-head AND recurrent backends
+    // (the latter pays one [B, Kq, Vd] q pull per expansion level on
+    // the host path).
     for b in [1usize, 4] {
         let n = 6;
-        let host = tree_host_bytes_per_round(b, vt, vocab, f3, 6);
-        let dev = tree_device_bytes_per_round(b, n, vt);
-        table.row(vec![
-            "medusa-tree(2x2)".to_string(),
-            b.to_string(),
-            n.to_string(),
-            host.to_string(),
-            dev.to_string(),
-            format!("{:.0}x", host as f64 / dev as f64),
-        ]);
+        for (name, host, dev) in [
+            (
+                "medusa-tree(2x2)",
+                tree_host_bytes_per_round(b, vt, vocab, f3, 6),
+                tree_device_bytes_per_round(b, n, vt),
+            ),
+            (
+                "recurrent-tree(2x2)",
+                recurrent_tree_host_bytes_per_round(b, vt, vocab, f3, 2, vd, d),
+                recurrent_tree_device_bytes_per_round(b, n, vt),
+            ),
+        ] {
+            table.row(vec![
+                name.to_string(),
+                b.to_string(),
+                n.to_string(),
+                host.to_string(),
+                dev.to_string(),
+                format!("{:.0}x", host as f64 / dev as f64),
+            ]);
+            for (path, bytes) in [("host", host), ("device", dev)] {
+                json.push(vec![
+                    ("bench", Json::Str("verify_transfer_analytic".into())),
+                    ("config", Json::Str(format!("{name} b={b} n={n} {path}"))),
+                    ("bytes_to_host", Json::Num(bytes as f64)),
+                ]);
+            }
+        }
     }
     table.emit("verify_transfer")?;
     Ok(())

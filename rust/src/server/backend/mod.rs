@@ -44,6 +44,36 @@
 //! the whole tree in one tree-attention pass under the exact multi-draft
 //! rule (`spec::sampling::verify_tree`). The `-tree` arch suffix in
 //! [`make_backend`] selects these variants; see DESIGN.md §3/§6.
+//!
+//! # The per-path draft-KV contract (stateful tree backends)
+//!
+//! A stateless tree backend (MEDUSA) carries no per-round draft state
+//! beyond the conditioning hidden. A STATEFUL one (the recurrent
+//! EAGLE-3/MTP family) additionally owns a draft KV cache whose tree
+//! rounds mirror the target cache's: during `propose_tree` node `i`'s
+//! draft-KV entry is written at slot `pos + i` (node-index layout, tree
+//! attention over each node's root path), and after the verdict the
+//! accepted path must be SPLICED back to consecutive slots so the
+//! committed draft cache stays linear and the next round is
+//! topology-agnostic. Ownership is split exactly like the target side:
+//!
+//!   * the ENGINE owns the target splice (`kv_path_gather_b{B}` on the
+//!     host path, in-graph inside `verify_tree_fused_b{B}`);
+//!   * the BACKEND owns the draft splice — `advance_tree` /
+//!     `advance_tree_device` run `dkv_path_gather_b{B}` (the draft-side
+//!     twin: gather entries at the path's absolute positions, scatter
+//!     linearly from the round's block start) BEFORE rolling state
+//!     forward, in the same round as the target splice.
+//!
+//! What `dkv_path_gather_b{B}` guarantees: rows are independent (batch
+//! rows never overlap), gathers read the pre-update cache, and slots
+//! outside `dst0..dst0+N` are untouched — so a row whose splice map is
+//! the identity (done/padding rows) is a no-op. The subsequent
+//! `extend_k` feature fusion then overwrites the spliced block with
+//! target-feature-fused entries — identical arithmetic to a chain round
+//! over the accepted tokens, which is what keeps chain-degeneracy exact
+//! (`tests/properties.rs`) and the committed cache state bit-compatible
+//! with the chain backend's.
 
 pub mod medusa;
 pub mod mlp;
@@ -418,14 +448,20 @@ pub trait DraftBackend {
         bail!("backend '{}' has no tree drafting path", self.name())
     }
 
-    /// Roll draft state past a tree round. `stop_blk[row]` is the block
-    /// position whose hidden conditions the next round (the deepest
-    /// accepted node's slot, or 0 after a full rejection); `feats` the
-    /// tree pass's `[B, T, 3d]` features.
+    /// Roll draft state past a tree round. `drafts[row]` holds the
+    /// round's candidate tokens per node, `paths[row]` the accepted node
+    /// indices root-to-leaf (empty for done rows), `stop_blk[row]` the
+    /// block position whose hidden conditions the next round (the
+    /// deepest accepted node's slot, or 0 after a full rejection);
+    /// `feats` the tree pass's `[B, T, 3d]` features in BLOCK layout.
+    /// Stateful backends splice their per-path draft KV here (see the
+    /// module-level contract).
     fn advance_tree(
         &self,
         _cx: &EngineCx,
         _g: &mut GroupState,
+        _drafts: &[Vec<i32>],
+        _paths: &[Vec<usize>],
         _stop_blk: &[usize],
         _feats: &HostTensor,
     ) -> Result<()> {
@@ -435,6 +471,14 @@ pub trait DraftBackend {
     /// True when the manifest carries the backend's in-graph tree
     /// sampling entries (all serve buckets).
     fn supports_tree_device(&self, _rt: &Runtime, _dspec: &DraftSpec) -> bool {
+        false
+    }
+
+    /// True when this backend's tree advances consume the accepted-path
+    /// node indices (stateful backends building draft-splice maps).
+    /// Gates the engine's `[B, Vt-1]` path readback on the device tree
+    /// round — stateless backends keep their leaner transfer profile.
+    fn tree_paths_needed(&self) -> bool {
         false
     }
 
@@ -453,13 +497,22 @@ pub trait DraftBackend {
         bail!("backend '{}' has no tree drafting path", self.name())
     }
 
-    /// Device-path tree advance: `h_sel` is the fused entry's in-graph
-    /// hidden pickup at the stop position (KV was already path-spliced
-    /// in-graph).
+    /// Device-path tree advance. `n_path_lit` is the fused entry's
+    /// `[B]` accepted-path-length output (doubles as the in-graph q/h
+    /// gather index, like the chain's `n_acc_lit`), `feats` its
+    /// `[B, T, 3d]` BLOCK-layout features literal, `h_sel` the in-graph
+    /// hidden pickup at the stop position (target KV was already
+    /// path-spliced in-graph). Stateless backends adopt `h_sel`;
+    /// stateful ones splice their draft KV and re-extend from `feats`
+    /// (see the module-level contract).
     fn advance_tree_device(
         &self,
         _cx: &EngineCx,
         _g: &mut GroupState,
+        _drafts: &[Vec<i32>],
+        _paths: &[Vec<usize>],
+        _n_path_lit: xla::Literal,
+        _feats: xla::Literal,
         _h_sel: xla::Literal,
     ) -> Result<()> {
         bail!("backend '{}' has no tree drafting path", self.name())
@@ -497,6 +550,7 @@ pub trait DraftBackend {
 pub fn make_backend(arch: &str) -> Result<Box<dyn DraftBackend>> {
     match arch {
         "eagle3" | "mtp" => Ok(Box::new(recurrent::Recurrent)),
+        "eagle3-tree" | "mtp-tree" => Ok(Box::new(recurrent::RecurrentTree)),
         "medusa" => Ok(Box::new(medusa::Medusa)),
         "medusa-tree" => Ok(Box::new(tree::MedusaTree)),
         "mlp" => Ok(Box::new(mlp::Mlp)),
@@ -505,7 +559,8 @@ pub fn make_backend(arch: &str) -> Result<Box<dyn DraftBackend>> {
             // the real cause, not the synthetic name.
             Some(base) => bail!(
                 "draft arch '{base}' has no multi-candidate/tree backend \
-                 (tree drafting currently needs parallel heads: 'medusa')"
+                 (tree drafting needs parallel heads ('medusa') or a \
+                 recurrent drafter ('eagle3'/'mtp'))"
             ),
             None => bail!("unknown draft arch '{other}'"),
         },

@@ -8,16 +8,33 @@
 //! as a literal; the extend entries additionally gather next round's
 //! first draft (token + q + hidden) at the per-row accepted-prefix
 //! index, so the old per-round `[B, T, Vd]` q-logits pull disappears.
+//!
+//! Multi-candidate (tree) drafting lives in [`RecurrentTree`]: the
+//! drafter expands a candidate tree LEVEL-PARALLEL — one tree-attention
+//! pass per level over all node slots (`tree_step_b{B}`), each node
+//! recurring on its parent's hidden, with node `i`'s draft-KV entry at
+//! slot `pos + i` — and the advance splices the accepted path's draft
+//! KV back to consecutive slots (`dkv_path_gather_b{B}`, the draft twin
+//! of the target's path splice; see the module-level per-path contract
+//! in [`super`]) before the usual `extend_k` feature fusion over the
+//! path-gathered verify features. The device path runs the whole
+//! expansion in one `propose_tree_sample_b{B}` graph (node 0 is the
+//! previous extend's in-graph first draft) and advances through
+//! `extend_tree_sample_b{B}`, which linearizes the fused tree verify's
+//! BLOCK-layout features in-graph — per round only O(B·N) ints cross to
+//! the host, same as the MEDUSA tree.
 
 use anyhow::{Context, Result};
 
 use crate::runtime::{pack, DraftSpec, Runtime};
+use crate::spec::sampling::TreeSpec;
 use crate::tensor::HostTensor;
 
 use super::{
     arg_refs, copy_kv_row_device, copy_literal_row, lit_f32, lit_i32, lit_scalar_f32,
     lit_scalar_i32, lit_zeros_f32, migrate_hidden_rows, repack_literal_rows, spec_f32,
     tensor_row, upload, DraftBackend, EngineCx, GroupState, KvSide, QFlat, DKV_BATCH_AXIS,
+    DUMMY_UNIFORM,
 };
 
 pub struct Recurrent;
@@ -26,6 +43,101 @@ pub struct Recurrent;
 const DEVICE_ENTRIES: [&str; 3] = ["step_sample", "extend_p_sample", "extend_k_sample"];
 
 impl Recurrent {
+    /// Chain-layout start position of a round's block for one row —
+    /// where the verify block began, i.e. where the advance's extend
+    /// writes from. `j` is the accepted prefix/path length; called
+    /// POST-VERDICT (`len` already advanced past the accepted tokens).
+    /// The single definition shared by the chain advances and the tree
+    /// splice so the conventions can never drift apart.
+    fn block_start(seq: &super::SeqState, j: usize) -> i32 {
+        if seq.done {
+            seq.len.saturating_sub(1 + j) as i32
+        } else {
+            (seq.len - 1 - j) as i32
+        }
+    }
+
+    /// Shared host-path extend tail: run `extend_k_b{B}` over
+    /// chain-layout fusion features / next-tokens / start positions and
+    /// pick up next round's first-draft q-logits + hidden at `pick[row]`
+    /// (the accepted prefix/path length). Used by the chain `advance`
+    /// and, with path-gathered features, by the tree advance.
+    fn extend_host(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        feats_in: &[f32],
+        tnext: &[i32],
+        pos: &[i32],
+        pick: &[usize],
+    ) -> Result<()> {
+        let b = g.b;
+        let vt = cx.rt.manifest.verify_t;
+        let d = cx.tspec.d_model;
+        let fdim = cx.dspec.fuse_dim;
+        let extend = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("extend_k_b{b}"))?;
+        let dyn_in = [
+            g.dkv.take().context("dkv")?,
+            lit_f32(&[b, vt, fdim], feats_in)?,
+            lit_i32(&[b, vt], tnext)?,
+            lit_i32(&[b], pos)?,
+        ];
+        let dyn_b = upload(cx.rt, &dyn_in)?;
+        let args = arg_refs(&cx.tparams, &cx.dparams, &dyn_b);
+        let outs = extend.run_bufs(&args)?;
+        let q_all = extend.output_host(&outs, 0)?;
+        let h_all = extend.output_host(&outs, 1)?;
+        let vd = cx.dspec.draft_vocab;
+        let mut hprev = vec![0f32; b * d];
+        for row in 0..b {
+            let j = pick[row];
+            let seq = &mut g.seqs[row];
+            seq.q1 = tensor_row(&q_all, row, &[b, vt, vd], j);
+            hprev[row * d..(row + 1) * d]
+                .copy_from_slice(&tensor_row(&h_all, row, &[b, vt, d], j));
+        }
+        g.dkv = Some(outs.into_iter().nth(2).unwrap());
+        g.h_prev = Some(lit_f32(&[b, d], &hprev)?);
+        Ok(())
+    }
+
+    /// Draft-side path splice (`dkv_path_gather_b{B}`): per row, gather
+    /// the draft-KV entries at the accepted path's absolute positions
+    /// and scatter them linearly from the round's block start `pos0` —
+    /// the draft twin of the engine's target `kv_path_gather` call, run
+    /// in the same round (see the module-level per-path contract). Rows
+    /// with an empty path splice the identity (a no-op).
+    fn splice_dkv_path(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        paths: &[Vec<usize>],
+        pos0: &[i32],
+    ) -> Result<()> {
+        let b = g.b;
+        let kq = cx.rt.manifest.verify_t - 1;
+        let mut sel = vec![0i32; b * kq];
+        for row in 0..b {
+            for (t, s) in sel[row * kq..(row + 1) * kq].iter_mut().enumerate() {
+                *s = pos0[row] + t as i32; // identity default
+            }
+            for (t, &node) in paths[row].iter().enumerate() {
+                sel[row * kq + t] = pos0[row] + node as i32;
+            }
+        }
+        let gather = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("dkv_path_gather_b{b}"))?;
+        let dkv = g.dkv.take().context("splice: dkv")?;
+        let sel_lit = lit_i32(&[b, kq], &sel)?;
+        let dst0_lit = lit_i32(&[b], pos0)?;
+        let outs = gather.run_lits(&[&dkv, &sel_lit, &dst0_lit])?;
+        g.dkv = outs.into_iter().next();
+        Ok(())
+    }
+
     /// Shared tail of the device-path extend calls: run the given
     /// `extend_*_sample` entry and adopt its (token0, q0, h_sel, dkv')
     /// outputs as next round's first-draft state.
@@ -280,7 +392,6 @@ impl DraftBackend for Recurrent {
     ) -> Result<()> {
         let b = g.b;
         let vt = cx.rt.manifest.verify_t;
-        let d = cx.tspec.d_model;
         let fdim = cx.dspec.fuse_dim;
         let f3 = cx.tspec.feat_dim;
         let feats_full = feats.as_f32();
@@ -300,38 +411,9 @@ impl DraftBackend for Recurrent {
             }
             tnext[row * vt + j] = seq.last_token;
             // extend starts where this round's verify block started
-            pos[row] = if seq.done {
-                (seq.len.saturating_sub(1 + j)) as i32
-            } else {
-                (seq.len - 1 - j) as i32
-            };
+            pos[row] = Self::block_start(seq, j);
         }
-        let extend = cx
-            .rt
-            .draft_entry(&cx.dspec.name, &format!("extend_k_b{b}"))?;
-        let dyn_in = [
-            g.dkv.take().context("dkv")?,
-            lit_f32(&[b, vt, fdim], &feats_in)?,
-            lit_i32(&[b, vt], &tnext)?,
-            lit_i32(&[b], &pos)?,
-        ];
-        let dyn_b = upload(cx.rt, &dyn_in)?;
-        let args = arg_refs(&cx.tparams, &cx.dparams, &dyn_b);
-        let outs = extend.run_bufs(&args)?;
-        let q_all = extend.output_host(&outs, 0)?;
-        let h_all = extend.output_host(&outs, 1)?;
-        let vd = cx.dspec.draft_vocab;
-        let mut hprev = vec![0f32; b * d];
-        for row in 0..b {
-            let j = n_acc[row];
-            let seq = &mut g.seqs[row];
-            seq.q1 = tensor_row(&q_all, row, &[b, vt, vd], j);
-            hprev[row * d..(row + 1) * d]
-                .copy_from_slice(&tensor_row(&h_all, row, &[b, vt, d], j));
-        }
-        g.dkv = Some(outs.into_iter().nth(2).unwrap());
-        g.h_prev = Some(lit_f32(&[b, d], &hprev)?);
-        Ok(())
+        self.extend_host(cx, g, &feats_in, &tnext, &pos, n_acc)
     }
 
     fn advance_device(
@@ -355,11 +437,7 @@ impl DraftBackend for Recurrent {
                 tnext[row * vt + t] = *item;
             }
             tnext[row * vt + j] = seq.last_token;
-            pos[row] = if seq.done {
-                (seq.len.saturating_sub(1 + j)) as i32
-            } else {
-                (seq.len - 1 - j) as i32
-            };
+            pos[row] = Self::block_start(seq, j);
         }
         // Next round's first-draft uniform, drawn NOW so the per-stream
         // order matches the host path (which draws it first thing in the
@@ -464,5 +542,458 @@ impl DraftBackend for Recurrent {
             dst.q0_dev = Some(q);
         }
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// multi-candidate (tree) drafting over the recurrent drafter
+// ---------------------------------------------------------------------------
+
+/// Tree drafting for the recurrent (EAGLE-3 / MTP) family — the
+/// highest-alpha drafter feeding the multi-candidate tree verify.
+///
+/// Unlike MEDUSA's token-independent heads, the recurrent drafter's
+/// candidates are PATH-DEPENDENT: a node's distribution conditions on
+/// its ancestor candidates through the hidden recurrence and the draft
+/// KV. The expansion is level-parallel (`tree_step_b{B}`): one
+/// tree-attention pass over all node slots per level, node `i`'s KV at
+/// draft slot `pos + i`, input hidden = its parent's output hidden.
+/// Level 0 samples from the round's `q1` (host) / resident `q0`
+/// (device) — exactly where a chain round's first draft comes from —
+/// so `depth - 1` passes expand any topology, and a chain topology
+/// replays the chained `draft_step` path (chain degeneracy,
+/// property-tested in `tests/properties.rs` and at the graph level in
+/// `python/tests/test_recurrent_tree.py`).
+///
+/// Candidate selection per node follows the fixed-uniform contract
+/// (one draft draw per node in node order; greedy takes
+/// sibling-rank-th-largest); the advance owns the draft-side path
+/// splice (`dkv_path_gather_b{B}`) and then re-extends over the
+/// path-gathered verify features — see the module-level per-path
+/// draft-KV contract.
+pub struct RecurrentTree;
+
+/// Host-path manifest entries the tree duties need, per serve bucket.
+const TREE_HOST_ENTRIES: [&str; 2] = ["tree_step", "dkv_path_gather"];
+/// Device-path additions (on top of the chain `DEVICE_ENTRIES`, which
+/// the bootstrap/advance flow still uses).
+const TREE_DEVICE_ENTRIES: [&str; 3] =
+    ["propose_tree_sample", "extend_tree_sample", "dkv_path_gather"];
+
+impl RecurrentTree {
+    /// Chain-row -> block-slot gather map for one row: row 0 is the
+    /// root (slot 0), row `t <= j` the t-th accepted node's slot, rows
+    /// past the path clamp to the stop slot (their values feed only
+    /// overwritten-or-masked state; see the module contract).
+    fn blk_map(path: &[usize], vt: usize, out: &mut [i32]) {
+        let mut cur = 0i32;
+        for (t, slot) in out.iter_mut().enumerate().take(vt) {
+            if t >= 1 && t <= path.len() {
+                cur = path[t - 1] as i32 + 1;
+            }
+            *slot = cur;
+        }
+    }
+}
+
+impl DraftBackend for RecurrentTree {
+    fn name(&self) -> &'static str {
+        "recurrent-tree"
+    }
+
+    fn max_k(&self, rt: &Runtime, dspec: &DraftSpec) -> usize {
+        Recurrent.max_k(rt, dspec)
+    }
+
+    /// Chained cost: every tree LEVEL is one more `tree_step` dispatch
+    /// (siblings ride the same batched pass), so the planner prices
+    /// depth and treats width as near-free — the opposite regime from
+    /// MEDUSA's free parallel heads.
+    fn cost_model(&self) -> crate::spec::adaptive::CostModel {
+        Recurrent.cost_model()
+    }
+
+    fn supports_device(&self, rt: &Runtime, dspec: &DraftSpec) -> bool {
+        Recurrent.supports_device(rt, dspec)
+    }
+
+    fn bootstrap(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        tok_flat: &[i32],
+        feats: &HostTensor,
+    ) -> Result<()> {
+        Recurrent.bootstrap(cx, g, tok_flat, feats)
+    }
+
+    fn propose(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        k: usize,
+        drafts: &mut [Vec<i32>],
+        q: &mut QFlat,
+    ) -> Result<()> {
+        Recurrent.propose(cx, g, k, drafts, q)
+    }
+
+    fn propose_device(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        k: usize,
+        drafts: &mut [Vec<i32>],
+        q_dev: &mut Vec<xla::Literal>,
+    ) -> Result<()> {
+        Recurrent.propose_device(cx, g, k, drafts, q_dev)
+    }
+
+    fn advance(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &[Vec<i32>],
+        n_acc: &[usize],
+        feats: &HostTensor,
+    ) -> Result<()> {
+        Recurrent.advance(cx, g, drafts, n_acc, feats)
+    }
+
+    fn advance_device(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &[Vec<i32>],
+        n_acc: &[usize],
+        n_acc_lit: xla::Literal,
+        feats: xla::Literal,
+        h_sel: xla::Literal,
+    ) -> Result<()> {
+        Recurrent.advance_device(cx, g, drafts, n_acc, n_acc_lit, feats, h_sel)
+    }
+
+    fn adopt_row(
+        &self,
+        cx: &EngineCx,
+        dst: &mut GroupState,
+        dst_row: usize,
+        src: &GroupState,
+        src_row: usize,
+    ) -> Result<()> {
+        Recurrent.adopt_row(cx, dst, dst_row, src, src_row)
+    }
+
+    fn migrate_rows(
+        &self,
+        cx: &EngineCx,
+        dst: &mut GroupState,
+        src: &GroupState,
+        src_map: &[usize],
+    ) -> Result<()> {
+        Recurrent.migrate_rows(cx, dst, src, src_map)
+    }
+
+    // ------------------------------------------------------------------
+    // tree duties
+    // ------------------------------------------------------------------
+
+    fn supports_tree(&self, rt: &Runtime, dspec: &DraftSpec) -> bool {
+        rt.manifest.serve_batches.iter().all(|&b| {
+            TREE_HOST_ENTRIES
+                .iter()
+                .all(|e| rt.has_draft_entry(&dspec.name, &format!("{e}_b{b}")))
+        })
+    }
+
+    /// Host-path tree proposal: level 0 samples siblings from the
+    /// round's `q1` logits, then one `tree_step_b{B}` call per deeper
+    /// level expands all of that level's nodes from their parents'
+    /// hiddens in one batched tree-attention pass (the engine pulls the
+    /// `[B, N, Vd]` q-logits per call — the host path's nature). A
+    /// depth-d tree costs d-1 draft dispatches, same as a d-chain.
+    fn propose_tree(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        tree: &TreeSpec,
+        drafts: &mut [Vec<i32>],
+        q: &mut QFlat,
+    ) -> Result<()> {
+        let b = g.b;
+        let n = tree.len();
+        let kq = cx.rt.manifest.verify_t - 1;
+        let d = cx.tspec.d_model;
+        let vd = cx.dspec.draft_vocab;
+        let depth = tree.depth();
+        let mut rank_scratch = Vec::new();
+        // --- level 0: the extend-produced first-draft distribution ----
+        for row in 0..b {
+            for node in 0..n {
+                if tree.level(node) != 0 {
+                    break; // BFS order: level-0 nodes are a prefix
+                }
+                let (full, compact) = q.slot(row, node);
+                cx.write_draft_dist(&g.seqs[row].q1, compact, full);
+                let xi = cx.sample_draft_tree(
+                    &mut g.seqs[row].rng,
+                    compact,
+                    tree.rank(node),
+                    &mut rank_scratch,
+                );
+                drafts[row][node] = cx.draft_token_id(xi);
+            }
+        }
+        if depth <= 1 {
+            return Ok(());
+        }
+        // --- levels 1..depth: one batched tree_step per level ---------
+        let step = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("tree_step_b{b}"))?;
+        let parents_lit = lit_i32(&[kq], &tree.parents_padded(kq))?;
+        let pos: Vec<i32> = g.seqs.iter().map(|s| s.len as i32).collect();
+        let pos_lit = lit_i32(&[b], &pos)?;
+        // h_prev/parents/pos are reused across the level calls: upload
+        // once, keep the literals alive through the loop (async-copy
+        // safety contract).
+        let h_prev_lit = g.h_prev.take().context("tree propose: h_prev")?;
+        let h_prev_buf = cx.rt.to_buffer(&h_prev_lit)?;
+        let parents_buf = cx.rt.to_buffer(&parents_lit)?;
+        let pos_buf = cx.rt.to_buffer(&pos_lit)?;
+        let mut dkv = g.dkv.take().context("tree propose: dkv")?;
+        let mut h_all: Option<xla::Literal> = None;
+        for lvl in 1..depth {
+            let mut toks = vec![0i32; b * kq];
+            for (row, dr) in drafts.iter().enumerate() {
+                for (i, &t) in dr.iter().enumerate() {
+                    toks[row * kq + i] = t;
+                }
+            }
+            let h_all_lit = match h_all.take() {
+                Some(h) => h,
+                None => lit_zeros_f32(&[b, kq, d])?,
+            };
+            let own_in = [dkv, h_all_lit, lit_i32(&[b, kq], &toks)?];
+            let own_b = upload(cx.rt, &own_in)?;
+            let mut args: Vec<&xla::PjRtBuffer> =
+                cx.tparams.iter().chain(cx.dparams.iter()).collect();
+            args.push(&own_b[0]); // dkv
+            args.push(&h_prev_buf);
+            args.push(&own_b[1]); // h_all
+            args.push(&own_b[2]); // tokens
+            args.push(&pos_buf);
+            args.push(&parents_buf);
+            let outs = step.run_bufs(&args)?;
+            let qlog = step.output_host(&outs, 0)?; // [B, kq, Vd]
+            for row in 0..b {
+                for node in 0..n {
+                    if tree.level(node) != lvl {
+                        continue;
+                    }
+                    let parent = tree.parent(node) as usize;
+                    let lrow = tensor_row(&qlog, row, &[b, kq, vd], parent);
+                    let (full, compact) = q.slot(row, node);
+                    cx.write_draft_dist(&lrow, compact, full);
+                    let xi = cx.sample_draft_tree(
+                        &mut g.seqs[row].rng,
+                        compact,
+                        tree.rank(node),
+                        &mut rank_scratch,
+                    );
+                    drafts[row][node] = cx.draft_token_id(xi);
+                }
+            }
+            let mut it = outs.into_iter();
+            let _qlog_lit = it.next();
+            h_all = it.next();
+            dkv = it.next().context("tree_step: dkv out")?;
+        }
+        g.dkv = Some(dkv);
+        g.h_prev = Some(h_prev_lit);
+        Ok(())
+    }
+
+    /// Tree advance: splice the accepted path's draft KV to consecutive
+    /// slots, then run the SAME `extend_k` feature fusion a chain round
+    /// would — over the path-gathered verify features and the accepted
+    /// tokens — picking up next round's q1/hidden at the path length.
+    fn advance_tree(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &[Vec<i32>],
+        paths: &[Vec<usize>],
+        _stop_blk: &[usize],
+        feats: &HostTensor,
+    ) -> Result<()> {
+        let b = g.b;
+        let vt = cx.rt.manifest.verify_t;
+        let fdim = cx.dspec.fuse_dim;
+        let f3 = cx.tspec.feat_dim;
+        let feats_full = feats.as_f32();
+        let mut feats_in = vec![0f32; b * vt * fdim];
+        let mut tnext = vec![0i32; b * vt];
+        let mut pos = vec![0i32; b];
+        let mut pick = vec![0usize; b];
+        let mut blk = vec![0i32; vt];
+        for row in 0..b {
+            let seq = &g.seqs[row];
+            let j = paths[row].len();
+            pick[row] = j;
+            pos[row] = Recurrent::block_start(seq, j);
+            Self::blk_map(&paths[row], vt, &mut blk);
+            for t in 0..vt {
+                let base = (row * vt + blk[t] as usize) * f3;
+                feats_in[(row * vt + t) * fdim..(row * vt + t + 1) * fdim]
+                    .copy_from_slice(&feats_full[base + (f3 - fdim)..base + f3]);
+            }
+            for (t, &node) in paths[row].iter().enumerate() {
+                tnext[row * vt + t] = drafts[row][node];
+            }
+            tnext[row * vt + j] = seq.last_token;
+        }
+        Recurrent.splice_dkv_path(cx, g, paths, &pos)?;
+        Recurrent.extend_host(cx, g, &feats_in, &tnext, &pos, &pick)
+    }
+
+    fn supports_tree_device(&self, rt: &Runtime, dspec: &DraftSpec) -> bool {
+        // The device tree flow still bootstraps/extends through the
+        // chain device entries (tok0/q0 ride from extend_*_sample).
+        Recurrent.supports_device(rt, dspec)
+            && rt.manifest.serve_batches.iter().all(|&b| {
+                TREE_DEVICE_ENTRIES
+                    .iter()
+                    .all(|e| rt.has_draft_entry(&dspec.name, &format!("{e}_b{b}")))
+            })
+    }
+
+    /// Stateful: the advances build the draft-splice maps (sel/blk)
+    /// from the accepted-path node indices.
+    fn tree_paths_needed(&self) -> bool {
+        true
+    }
+
+    /// Device-path tree proposal: one `propose_tree_sample_b{B}` call
+    /// runs the whole level-parallel expansion in-graph. Node 0 is the
+    /// previous extend's in-graph first draft (tok0/q0, device-resident
+    /// — its uniform was drawn at that advance, the chain convention);
+    /// the host draws uniforms for nodes 1.. now, in node order. Only
+    /// the candidate ids come back (a `[B, Vt-1]` tensor — lowered node
+    /// slots — with the first `n` live); the per-node q tensors flow
+    /// straight into `verify_tree_fused_b{B}`.
+    fn propose_tree_device(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        tree: &TreeSpec,
+        drafts: &mut [Vec<i32>],
+        q_dev: &mut Vec<xla::Literal>,
+    ) -> Result<()> {
+        let b = g.b;
+        let n = tree.len();
+        let kq = cx.rt.manifest.verify_t - 1;
+        anyhow::ensure!(
+            g.tok0.len() == b && g.q0_dev.is_some(),
+            "device tree propose without extend-sampled first draft"
+        );
+        let mut u = vec![DUMMY_UNIFORM; b * kq];
+        for (row, seq) in g.seqs.iter_mut().enumerate() {
+            for i in 1..n {
+                u[row * kq + i] = cx.draft_uniform(&mut seq.rng);
+            }
+        }
+        let ranks: Vec<i32> = (0..kq)
+            .map(|i| if i < n { tree.rank(i) as i32 } else { 0 })
+            .collect();
+        let pos: Vec<i32> = g.seqs.iter().map(|s| s.len as i32).collect();
+        let propose = cx
+            .rt
+            .draft_entry(&cx.dspec.name, &format!("propose_tree_sample_b{b}"))?;
+        let mut dyn_in = vec![
+            g.dkv.take().context("tree propose: dkv")?,
+            g.h_prev.take().context("tree propose: h_prev")?,
+            lit_i32(&[b], &g.tok0)?,
+            g.q0_dev.take().context("tree propose: q0")?,
+            lit_f32(&[b, kq], &u)?,
+            lit_i32(&[kq], &tree.parents_padded(kq))?,
+            lit_i32(&[kq], &ranks)?,
+            lit_i32(&[b], &pos)?,
+            lit_scalar_f32(cx.opts.temperature.max(1e-3))?,
+            lit_scalar_i32(cx.opts.mode.device_code())?,
+        ];
+        if let Some(vm) = cx.vocab_map_lit()? {
+            dyn_in.push(vm);
+        }
+        let dyn_b = upload(cx.rt, &dyn_in)?;
+        let args = arg_refs(&cx.tparams, &cx.dparams, &dyn_b);
+        let outs = propose.run_bufs(&args)?;
+        // [B, Vt-1]: the entry is lowered at kq node slots; the first n
+        // are this round's live candidates (row stride is kq, not n).
+        let toks = propose.output_host(&outs, 0)?.as_i32();
+        for (row, dr) in drafts.iter_mut().enumerate() {
+            for (i, slot) in dr.iter_mut().enumerate() {
+                *slot = toks[row * kq + i];
+            }
+        }
+        let mut it = outs.into_iter();
+        let _toks_lit = it.next();
+        for _ in 0..kq {
+            q_dev.push(it.next().context("tree propose: q out")?);
+        }
+        g.dkv = it.next();
+        Ok(())
+    }
+
+    /// Device-path tree advance: draft-KV path splice, then
+    /// `extend_tree_sample_b{B}` — the extend_k_sample flow with the
+    /// fused verify's BLOCK-layout features linearized in-graph (blk
+    /// maps chain row -> block slot) and next round's first draft
+    /// sampled at the in-graph path-length index (`n_path_lit`).
+    fn advance_tree_device(
+        &self,
+        cx: &EngineCx,
+        g: &mut GroupState,
+        drafts: &[Vec<i32>],
+        paths: &[Vec<usize>],
+        n_path_lit: xla::Literal,
+        feats: xla::Literal,
+        _h_sel: xla::Literal,
+    ) -> Result<()> {
+        let b = g.b;
+        let vt = cx.rt.manifest.verify_t;
+        let mut tnext = vec![0i32; b * vt];
+        let mut blk = vec![0i32; b * vt];
+        let mut pos = vec![0i32; b];
+        for row in 0..b {
+            let seq = &g.seqs[row];
+            let j = paths[row].len();
+            pos[row] = Recurrent::block_start(seq, j);
+            Self::blk_map(&paths[row], vt, &mut blk[row * vt..(row + 1) * vt]);
+            for (t, &node) in paths[row].iter().enumerate() {
+                tnext[row * vt + t] = drafts[row][node];
+            }
+            tnext[row * vt + j] = seq.last_token;
+        }
+        Recurrent.splice_dkv_path(cx, g, paths, &pos)?;
+        // Next round's first-draft uniform, drawn NOW so the per-stream
+        // order matches the host path (node 0 of the next propose).
+        let u: Vec<f32> = g
+            .seqs
+            .iter_mut()
+            .map(|s| cx.draft_uniform(&mut s.rng))
+            .collect();
+        let dyn_in = vec![
+            g.dkv.take().context("tree advance: dkv")?,
+            feats, // verify_tree_fused output, fed back without a pull
+            lit_i32(&[b, vt], &blk)?,
+            lit_i32(&[b, vt], &tnext)?,
+            lit_i32(&[b], &pos)?,
+            n_path_lit, // per-row q/h gather index, in-graph
+            lit_f32(&[b], &u)?,
+            lit_scalar_f32(cx.opts.temperature.max(1e-3))?,
+            lit_scalar_i32(cx.opts.mode.device_code())?,
+        ];
+        Recurrent.run_extend_sample(cx, g, &format!("extend_tree_sample_b{b}"), dyn_in)
     }
 }

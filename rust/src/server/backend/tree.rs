@@ -165,11 +165,15 @@ impl DraftBackend for MedusaTree {
         &self,
         cx: &EngineCx,
         g: &mut GroupState,
+        _drafts: &[Vec<i32>],
+        _paths: &[Vec<usize>],
         stop_blk: &[usize],
         feats: &HostTensor,
     ) -> Result<()> {
-        // The stop position generalizes the chain's accepted-prefix
-        // boundary; the shared pickup indexes feats by block slot.
+        // Stateless tree backend: no draft KV to splice (the per-path
+        // contract's stateful half is a no-op here). The stop position
+        // generalizes the chain's accepted-prefix boundary; the shared
+        // pickup indexes feats by block slot.
         pickup_hidden_advance(cx, g, stop_blk, feats);
         Ok(())
     }
@@ -236,6 +240,10 @@ impl DraftBackend for MedusaTree {
         &self,
         _cx: &EngineCx,
         g: &mut GroupState,
+        _drafts: &[Vec<i32>],
+        _paths: &[Vec<usize>],
+        _n_path_lit: xla::Literal,
+        _feats: xla::Literal,
         h_sel: xla::Literal,
     ) -> Result<()> {
         // The fused tree pass already picked the stop position's hidden

@@ -341,11 +341,25 @@ impl<'rt> SpecEngine<'rt> {
         };
         // The speculation controller: cost model from the backend (or
         // the operator's override), budget range from the clamped opts.
-        let cost = opts
+        let mut cost = opts
             .adaptive
             .draft_cost
             .map(CostModel::chained)
             .unwrap_or_else(|| backend.cost_model());
+        if use_tree && device_verify {
+            // The device tree proposal runs its level-parallel expansion
+            // in ONE lowered graph with a FIXED number of level passes
+            // (one graph serves every topology), so draft cost no longer
+            // scales with planned depth there: fold the chained
+            // per-level price into the fixed term and let the planner
+            // allocate purely by expected accepted length. The host tree
+            // path keeps the per-level price (one tree_step dispatch per
+            // level). Parallel-head models (per_token = 0) are unchanged.
+            cost = CostModel {
+                fixed: cost.fixed + cost.per_token * n_slots.saturating_sub(1) as f64,
+                per_token: 0.0,
+            };
+        }
         let controller = SpecController::new(ControllerCfg {
             k_min: opts.adaptive.k_min,
             k_max: opts.k_draft,
@@ -831,6 +845,7 @@ impl<'rt> SpecEngine<'rt> {
         let temp = self.cx.opts.temperature.max(1e-3);
         let mode = self.cx.opts.mode;
         let mut stop_blk = vec![0usize; b];
+        let mut paths: Vec<Vec<usize>> = vec![Vec::new(); b];
         let mut sel = vec![0i32; b * kq];
         let mut acc_toks: Vec<i32> = Vec::with_capacity(depth);
         let VerifyScratch { q, p, lrow, u, r } = &mut self.scratch;
@@ -871,6 +886,7 @@ impl<'rt> SpecEngine<'rt> {
             for (t, &node) in tv.path.iter().enumerate() {
                 sel[row * kq + t] = pos[row] + 1 + node as i32;
             }
+            paths[row] = tv.path;
         }
 
         // --- 4. splice the accepted paths to linear KV ------------------
@@ -890,8 +906,11 @@ impl<'rt> SpecEngine<'rt> {
         let outs = gather.run_bufs(&splice_refs)?;
         g.tkv = outs.into_iter().next().unwrap();
 
-        // --- 5. advance draft state (backend-specific) ------------------
-        self.backend.advance_tree(&self.cx, g, &stop_blk, &feats)?;
+        // --- 5. advance draft state (backend-specific; stateful tree
+        // backends splice their draft KV here, in the same round as the
+        // target splice above) -------------------------------------------
+        self.backend
+            .advance_tree(&self.cx, g, &drafts, &paths, &stop_blk, &feats)?;
         Ok(())
     }
 
@@ -963,23 +982,38 @@ impl<'rt> SpecEngine<'rt> {
         dyn_b.extend(upload(self.cx.rt, &tail)?);
         let args = arg_refs(&self.cx.tparams, &[], &dyn_b);
         let outs = verify.run_bufs(&args)?;
-        // Only the verdict integers are materialized host-side.
+        // Only the verdict integers are materialized host-side. The
+        // accepted-path node indices (`[B, Vt-1]`, first `n` slots
+        // live) ride along ONLY for stateful backends, which build
+        // their draft-splice maps from them — still O(B·N) ints.
         let n_path_host = verify.output_host(&outs, 0)?.as_i32(); // [B]
+        let path_host = if self.backend.tree_paths_needed() {
+            Some(verify.output_host(&outs, 1)?.as_i32())
+        } else {
+            None
+        };
         let toks_host = verify.output_host(&outs, 2)?.as_i32(); // [B, vt]
         let mut it = outs.into_iter();
-        let _n_path_lit = it.next();
+        let n_path_lit = it.next().unwrap();
         let _path_lit = it.next();
         let _toks_lit = it.next();
         g.tkv = it.next().unwrap(); // already path-spliced in-graph
-        let _feats = it.next();
+        let feats = it.next().unwrap();
         let h_sel = it.next().unwrap();
 
         // --- 3. bookkeeping per row -------------------------------------
+        let mut paths: Vec<Vec<usize>> = vec![Vec::new(); b];
         for (row, seq) in g.seqs.iter_mut().enumerate() {
             if seq.done {
                 continue; // in-graph verdicts for done rows are garbage
             }
             let j = (n_path_host[row].max(0) as usize).min(depth);
+            if let Some(ph) = &path_host {
+                paths[row] = ph[row * kq..row * kq + j]
+                    .iter()
+                    .map(|&x| (x.max(0) as usize).min(n - 1))
+                    .collect();
+            }
             // tokens_out shares the chain layout: accepted candidates
             // then the replacement/bonus emission.
             let token = toks_host[row * vt + j];
@@ -988,8 +1022,11 @@ impl<'rt> SpecEngine<'rt> {
             self.controller.observe_tree(tree, j);
         }
 
-        // --- 4. advance draft state (backend-specific) ------------------
-        self.backend.advance_tree_device(&self.cx, g, h_sel)?;
+        // --- 4. advance draft state (backend-specific; stateful tree
+        // backends splice their draft KV against the in-graph-spliced
+        // target cache and re-extend from the resident features) --------
+        self.backend
+            .advance_tree_device(&self.cx, g, &drafts, &paths, n_path_lit, feats, h_sel)?;
         Ok(())
     }
 

@@ -249,11 +249,41 @@ pub fn tree_host_bytes_per_round(
     host_verify_bytes_per_round(b, vt, vocab, feat_dim) + (k_heads * b * vocab * 4) as u64
 }
 
-/// Tree device path: n_path `[B]` + candidate ids `[B, N]` + emitted
-/// tokens `[B, Vt]` — O(B·N) i32 per round; the per-node q tensors, the
-/// path splice and the conditioning hidden stay in-graph.
+/// Tree device path (stateless backends): n_path `[B]` + candidate ids
+/// `[B, N]` + emitted tokens `[B, Vt]` — O(B·N) i32 per round; the
+/// per-node q tensors, the path splice and the conditioning hidden
+/// stay in-graph.
 pub fn tree_device_bytes_per_round(b: usize, n_nodes: usize, vt: usize) -> u64 {
     ((b + b * n_nodes + b * vt) * 4) as u64
+}
+
+/// Recurrent (EAGLE-3/MTP) tree host path: the target tree pull, one
+/// `[B, Vt-1, Vd]` q-logits pull per expansion level past the first
+/// (level 0 samples from the extend-produced q1 — no extra transfer),
+/// plus the advance's `extend_k` pulls (`[B, Vt, Vd]` q-logits and
+/// `[B, Vt, d]` hidden planes — the same pulls the chain path's
+/// `host_draft_bytes_per_round` counts).
+pub fn recurrent_tree_host_bytes_per_round(
+    b: usize,
+    vt: usize,
+    vocab: usize,
+    feat_dim: usize,
+    depth: usize,
+    draft_vocab: usize,
+    d_model: usize,
+) -> u64 {
+    host_verify_bytes_per_round(b, vt, vocab, feat_dim)
+        + (depth.saturating_sub(1) * b * (vt - 1) * draft_vocab * 4) as u64
+        + (b * vt * (draft_vocab + d_model) * 4) as u64
+}
+
+/// Recurrent tree device path: the stateless tree verdict ints plus the
+/// accepted-path node indices `[B, Vt-1]` (the draft-splice map — the
+/// engine pulls them only for stateful backends) and the advance's
+/// in-graph-sampled first draft (`[B]` ids from `extend_tree_sample`) —
+/// still nothing scaling with the vocabulary.
+pub fn recurrent_tree_device_bytes_per_round(b: usize, n_nodes: usize, vt: usize) -> u64 {
+    tree_device_bytes_per_round(b, n_nodes, vt) + (b * (vt - 1) * 4) as u64 + (b * 4) as u64
 }
 
 /// Scheduler-level serving metrics: occupancy, queue waits, throughput
@@ -463,10 +493,11 @@ mod tests {
     }
 
     /// Tree rounds keep the device-path property: per-round host
-    /// traffic is O(B·N) ints, independent of the vocabulary.
+    /// traffic is O(B·N) ints, independent of the vocabulary — for the
+    /// parallel-head AND the recurrent tree backends.
     #[test]
     fn tree_transfer_closed_forms() {
-        let (vt, vocab, f3, kh) = (8usize, 512usize, 288usize, 6usize);
+        let (vt, vocab, vd, d, f3, kh) = (8usize, 512usize, 320usize, 96usize, 288usize, 6usize);
         for b in [1usize, 4] {
             let n = 6; // the 2x2 default tree
             let host = tree_host_bytes_per_round(b, vt, vocab, f3, kh);
@@ -475,6 +506,28 @@ mod tests {
             assert!(
                 dev * 50 < host,
                 "b={b}: tree device {dev} not <50x below host {host}"
+            );
+            // recurrent tree: depth-2 2x2 — one tree_step q pull plus
+            // the advance's extend q/h pulls on the host path; the
+            // path-indices pull + [B] tok0 ints on the device path.
+            let rhost = recurrent_tree_host_bytes_per_round(b, vt, vocab, f3, 2, vd, d);
+            let rdev = recurrent_tree_device_bytes_per_round(b, n, vt);
+            let extend_pull = (b * vt * (vd + d) * 4) as u64;
+            assert_eq!(
+                rhost,
+                host_verify_bytes_per_round(b, vt, vocab, f3)
+                    + (b * (vt - 1) * vd * 4) as u64
+                    + extend_pull
+            );
+            assert_eq!(rdev, dev + (b * (vt - 1) * 4) as u64 + (b * 4) as u64);
+            assert!(
+                rdev * 50 < rhost,
+                "b={b}: recurrent tree device {rdev} not <50x below host {rhost}"
+            );
+            // depth 1 needs no tree_step pull — the extend pull remains
+            assert_eq!(
+                recurrent_tree_host_bytes_per_round(b, vt, vocab, f3, 1, vd, d),
+                host_verify_bytes_per_round(b, vt, vocab, f3) + extend_pull
             );
         }
     }

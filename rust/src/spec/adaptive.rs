@@ -19,8 +19,35 @@
 //!     expected emitted tokens per unit cost (with hysteresis so the
 //!     choice doesn't flap on estimator noise), and plans per-round
 //!     tree topologies ([`SpecController::plan_tree`]): fanout per level
-//!     chosen from measured per-level alpha by greedy marginal-gain
-//!     allocation under the lowered node budget.
+//!     chosen from measured per-level alpha by greedy marginal
+//!     throughput-gain allocation under the lowered node budget AND the
+//!     backend's cost model — chained drafters pay one draft dispatch
+//!     per tree LEVEL, so depth is priced and breadth is near-free,
+//!     while parallel heads price the whole tree in one propose pass.
+//!
+//! # Cost-model units convention
+//!
+//! Every [`CostModel`] figure is in VERIFY-CALL UNITS: the target's
+//! verify pass defines 1.0, and draft-side work is priced as a fraction
+//! of it. `fixed` is the per-round draft overhead that does not scale
+//! with the budget (a parallel-head propose pass, bootstrap/extend
+//! amortization); `per_token` is the marginal cost of one more CHAINED
+//! draft dispatch — one more chain position, or (for trees) one more
+//! LEVEL of the level-parallel expansion, since a recurrent drafter
+//! dispatches once per level regardless of fanout. So
+//! `round_cost(k) = 1 + fixed + per_token·k` prices a k-chain and,
+//! with `k = depth`, a depth-k candidate tree. Throughput comparisons
+//! (`choose_k`, `plan_tree`) are `(1 + E[accepted]) / round_cost` —
+//! expected emitted tokens per verify-equivalent of work. The
+//! `--draft-cost` CLI override replaces `per_token` only.
+//!
+//! One path-dependence: the DEVICE tree proposal runs its whole
+//! level-parallel expansion in one lowered graph with a fixed number
+//! of level passes, so its draft cost is depth-INVARIANT — the engine
+//! folds the chained per-level price into `fixed` (`per_token = 0`)
+//! when it resolves to that path, and the planner correctly reduces to
+//! pure accepted-length allocation there; the host tree path keeps the
+//! per-level price (one `tree_step` dispatch per level).
 //!
 //! # Exactness contract
 //!
@@ -319,20 +346,42 @@ impl SpecController {
         self.k_cur
     }
 
+    /// Expected emitted tokens per unit cost for a candidate tree with
+    /// per-level fanouts `f` under the independence model: the expected
+    /// accepted path length `L(f_1..f_d) = sum_m prod_{l<=m}
+    /// (1 - (1 - alpha_l)^{f_l})` plus the always-emitted bonus token,
+    /// over the round's cost at `depth = f.len()` (chained drafters
+    /// dispatch once per LEVEL, so depth is what the cost model prices;
+    /// see the module-level units convention).
+    pub fn tree_throughput(&self, fanout: &[usize]) -> f64 {
+        let mut run = 1.0;
+        let mut total = 0.0;
+        for (l, &fl) in fanout.iter().enumerate() {
+            let adv = 1.0 - (1.0 - self.est.alpha(l)).powi(fl as i32);
+            run *= adv;
+            total += run;
+        }
+        (1.0 + total) / self.cfg.cost.round_cost(fanout.len())
+    }
+
     /// Plan a per-round candidate-tree topology from the measured
-    /// per-level alpha: greedy marginal-gain allocation of the lowered
-    /// node budget (`n_slots`, = verify_t - 1) across levels, depth
-    /// capped at `depth_max` (the arch's head count) and per-level
-    /// fanout at `fanout_max`.
+    /// per-level alpha AND the backend's cost model: greedy ascent over
+    /// the lowered node budget (`n_slots`, = verify_t - 1), depth capped
+    /// at `depth_max` (the arch's head count) and per-level fanout at
+    /// `fanout_max`.
     ///
-    /// The objective is the expected accepted path length under the
-    /// independence model: `L(f_1..f_d) = sum_m prod_{l<=m}
-    /// (1 - (1 - alpha_l)^{f_l})`. Starting from the single-node chain,
-    /// each step takes the move (widen some level by one, or deepen by
-    /// one level) with the best gain per node spent; planning stops when
-    /// nothing fits or every gain is negligible. Before warmup this
-    /// yields the default 2-wide shallow tree the static `--tree 2x2`
-    /// flag used to hardcode.
+    /// Each step takes the move — widen some level by one, or deepen by
+    /// one level — with the best marginal [`tree_throughput`] gain per
+    /// node spent; planning stops when nothing fits or every gain is
+    /// negligible. The cost model is what makes this correct for BOTH
+    /// backend families: parallel heads (`per_token = 0`) reduce to the
+    /// pure accepted-length allocation, while chained drafters
+    /// (recurrent EAGLE-3/MTP) pay `per_token` for every extra LEVEL,
+    /// so the planner only deepens when the expected extra tokens beat
+    /// the extra draft dispatch — widening a level stays near-free and
+    /// wins under low alpha.
+    ///
+    /// [`tree_throughput`]: SpecController::tree_throughput
     pub fn plan_tree(
         &self,
         n_slots: usize,
@@ -351,24 +400,15 @@ impl SpecController {
             }
             total
         };
-        let accept_len = |f: &[usize]| -> f64 {
-            let mut run = 1.0;
-            let mut total = 0.0;
-            for (l, &fl) in f.iter().enumerate() {
-                let adv = 1.0 - (1.0 - self.est.alpha(l)).powi(fl as i32);
-                run *= adv;
-                total += run;
-            }
-            total
-        };
         if n_slots == 0 {
             return TreeSpec::from_fanout(&fanout).expect("chain(1) is valid");
         }
         loop {
             let base_nodes = nodes_of(&fanout);
-            let base_len = accept_len(&fanout);
+            let base_j = self.tree_throughput(&fanout);
             let mut best: Option<(f64, Vec<usize>)> = None;
-            // widen one level
+            // widen one level (cost unchanged: siblings ride the same
+            // batched pass)
             for l in 0..fanout.len() {
                 if fanout[l] >= fanout_max {
                     continue;
@@ -379,7 +419,7 @@ impl SpecController {
                 if dn == 0 || nodes_of(&cand) > n_slots {
                     continue;
                 }
-                let gain = (accept_len(&cand) - base_len) / dn as f64;
+                let gain = (self.tree_throughput(&cand) - base_j) / dn as f64;
                 let better = match best.as_ref() {
                     Some((g, _)) => gain > *g,
                     None => true,
@@ -388,13 +428,13 @@ impl SpecController {
                     best = Some((gain, cand));
                 }
             }
-            // deepen by one level (fanout 1)
+            // deepen by one level (fanout 1; chained archs pay per_token)
             if fanout.len() < depth_max {
                 let mut cand = fanout.clone();
                 cand.push(1);
                 if nodes_of(&cand) <= n_slots {
                     let dn = nodes_of(&cand) - base_nodes;
-                    let gain = (accept_len(&cand) - base_len) / dn as f64;
+                    let gain = (self.tree_throughput(&cand) - base_j) / dn as f64;
                     let better = match best.as_ref() {
                         Some((g, _)) => gain > *g,
                         None => true,
@@ -405,7 +445,7 @@ impl SpecController {
                 }
             }
             match best {
-                Some((gain, cand)) if gain > 1e-4 => fanout = cand,
+                Some((gain, cand)) if gain > 1e-5 => fanout = cand,
                 _ => break,
             }
         }
@@ -574,6 +614,64 @@ mod tests {
         }
         let t = c.plan_tree(7, 6, 4);
         assert!(t.depth() >= 4, "high alpha should plan deep, got {}", t.depth());
+    }
+
+    /// The chained cost model prices DEPTH (one draft dispatch per tree
+    /// level): with an exorbitant per-level cost the planner must stay
+    /// at depth 1 and spend the budget on width instead — the recurrent
+    /// (EAGLE-3) tree regime, where siblings ride one batched pass but
+    /// every extra level is another `tree_step` call.
+    #[test]
+    fn plan_tree_chained_cost_prefers_width_over_depth() {
+        let c = SpecController::new(ControllerCfg {
+            warmup: 0,
+            cost: CostModel::chained(3.0),
+            ..Default::default()
+        });
+        // prior alpha 0.7 everywhere: depth would win if levels were free
+        let t = c.plan_tree(7, 6, 4);
+        assert_eq!(t.depth(), 1, "3.0/level must forbid deepening: {t:?}");
+        assert!(t.len() > 1, "width is free — budget should be spent");
+
+        // same estimates, free levels: the planner goes deep instead
+        let free = SpecController::new(ControllerCfg {
+            warmup: 0,
+            cost: CostModel::parallel(),
+            ..Default::default()
+        });
+        assert!(free.plan_tree(7, 6, 4).depth() > 1);
+    }
+
+    /// Moderate chained cost (the recurrent default 0.25/level) still
+    /// deepens under high alpha — each level buys ~1 expected token for
+    /// 0.25 cost — so the recurrent tree is not stuck shallow.
+    #[test]
+    fn plan_tree_moderate_chained_cost_still_deepens() {
+        let mut c = SpecController::new(ControllerCfg {
+            warmup: 0,
+            cost: CostModel::chained(0.25),
+            ..Default::default()
+        });
+        let probe = TreeSpec::from_fanout(&[1, 1, 1, 1, 1, 1]).unwrap();
+        for _ in 0..500 {
+            c.observe_tree(&probe, 6);
+        }
+        assert!(c.plan_tree(7, 6, 4).depth() >= 4);
+    }
+
+    #[test]
+    fn tree_throughput_matches_chain_throughput_on_chains() {
+        let mut c = SpecController::new(cfg(4, 0.25));
+        for _ in 0..100 {
+            c.observe_chain(4, 2);
+        }
+        for k in 1..=4usize {
+            let chain: Vec<usize> = vec![1; k];
+            assert!(
+                (c.tree_throughput(&chain) - c.throughput(k)).abs() < 1e-12,
+                "depth-{k} single chain must price exactly like the k-chain"
+            );
+        }
     }
 
     #[test]

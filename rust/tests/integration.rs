@@ -78,6 +78,23 @@ fn fixture(rt: &Runtime) -> (PathBuf, Corpus) {
     }
 }
 
+/// The eagle3 truncated-vocab map (None for full-vocab archs).
+fn load_vocab_map(dirs: &RunDirs, arch: &str) -> Option<Vec<i32>> {
+    if arch != "eagle3" {
+        return None;
+    }
+    Some(
+        Json::parse_file(&dirs.vocab_map())
+            .unwrap()
+            .get("map")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap() as i32)
+            .collect(),
+    )
+}
+
 #[allow(clippy::too_many_arguments)]
 fn engine_with<'rt>(
     rt: &'rt Runtime,
@@ -93,20 +110,7 @@ fn engine_with<'rt>(
     let tckpt = read_checkpoint(&dirs.target_ckpt("dense-s")).unwrap();
     let arch = draft.split('@').next().unwrap();
     let dckpt = read_checkpoint(&dirs.draft_ckpt(&format!("{arch}_dense-s__kl"))).unwrap();
-    let vm = if arch == "eagle3" {
-        Some(
-            Json::parse_file(&dirs.vocab_map())
-                .unwrap()
-                .get("map")
-                .as_arr()
-                .unwrap()
-                .iter()
-                .map(|x| x.as_i64().unwrap() as i32)
-                .collect::<Vec<_>>(),
-        )
-    } else {
-        None
-    };
+    let vm = load_vocab_map(&dirs, arch);
     SpecEngine::new(
         rt,
         draft,
@@ -154,7 +158,9 @@ fn adaptive_engine_for_draft<'rt>(
     engine_with(rt, work, draft, mode, k, seed, verify_path, AdaptiveOpts::default())
 }
 
-/// Like `engine_for_draft` but decoding a candidate TREE per round.
+/// Like `engine_for_draft` but decoding a candidate TREE per round:
+/// a fixed `--tree FxF` topology, or (fanout = "auto") the controller's
+/// per-round planned topologies.
 fn tree_engine_for<'rt>(
     rt: &'rt Runtime,
     work: &Path,
@@ -168,18 +174,32 @@ fn tree_engine_for<'rt>(
     let tckpt = read_checkpoint(&dirs.target_ckpt("dense-s")).unwrap();
     let arch = draft.split('@').next().unwrap();
     let dckpt = read_checkpoint(&dirs.draft_ckpt(&format!("{arch}_dense-s__kl"))).unwrap();
+    let vm = load_vocab_map(&dirs, arch);
+    let (tree, adaptive) = if fanout == "auto" {
+        let auto = AdaptiveOpts {
+            tree: true,
+            ..Default::default()
+        };
+        (None, auto)
+    } else {
+        (
+            Some(lk_spec::spec::sampling::TreeSpec::parse(fanout).unwrap()),
+            AdaptiveOpts::fixed(),
+        )
+    };
     SpecEngine::new(
         rt,
         draft,
         &tckpt,
         &dckpt,
-        None,
+        vm,
         EngineOpts {
             temperature: 1.0,
             mode: mode.sampling(),
             seed,
             verify_path,
-            tree: Some(lk_spec::spec::sampling::TreeSpec::parse(fanout).unwrap()),
+            tree,
+            adaptive,
             ..Default::default()
         },
     )
@@ -214,6 +234,7 @@ fn engine_integration_suite() {
     device_verify_matches_host(&rt, &work, &corpus);
     adaptive_controller_greedy_exact(&rt, &work, &corpus);
     tree_decoding_suite(&rt, &work, &corpus);
+    recurrent_tree_suite(&rt, &work, &corpus);
     k_sweep_shapes(&rt, &work, &corpus);
     greedy_draft_not_better(&rt, &work, &corpus);
     mtp_param_mapping(&rt);
@@ -652,6 +673,137 @@ fn tree_decoding_suite(rt: &Runtime, work: &Path, corpus: &Corpus) {
         tree_tau >= chain_tau - 0.35,
         "2x2 tree ({tree_tau:.3} tok/round) far below the depth-2 chain ({chain_tau:.3})"
     );
+}
+
+/// Tree decoding on the STATEFUL drafter (recurrent-tree over eagle3):
+/// the per-path draft-KV machinery end to end. Four invariants:
+///   1. greedy tree decoding is LOSSLESS — byte-identical to vanilla
+///      greedy (the level-parallel expansion, the per-path draft-KV
+///      writes, the dkv path splice and the path-gathered extend must
+///      all be exact for this to hold);
+///   2. forced-host and forced-device recurrent-tree engines emit
+///      identical tokens and per-level stats from the same seed
+///      (golden-uniform parity through propose_tree_sample /
+///      verify_tree_fused / extend_tree_sample);
+///   3. the device path keeps per-round host traffic at O(B·N) ints;
+///   4. `--tree auto` plans topologies for it through a CHAINED
+///      (non-zero per-level) cost model — the ISSUE-5 criterion — and
+///      stays greedy-lossless while adapting.
+fn recurrent_tree_suite(rt: &Runtime, work: &Path, corpus: &Corpus) {
+    println!("== recurrent_tree_suite");
+    if !rt.has_target_entry("dense-s", "verify_tree_b1")
+        || !rt.has_draft_entry("eagle3@dense-s", "tree_step_b1")
+        || !rt.has_draft_entry("eagle3@dense-s", "dkv_path_gather_b1")
+    {
+        println!("SKIP: artifacts predate the recurrent tree entries");
+        return;
+    }
+    let prompts = &corpus
+        .load(lk_spec::data::grammar::Domain::Chat, "eval")
+        .unwrap()
+        .prompts(3, 12);
+
+    // --- greedy losslessness (host path) -------------------------------
+    {
+        let mut e = tree_engine_for(
+            rt, work, "eagle3@dense-s", EvalMode::T0, "2x2", 23, VerifyPath::Host,
+        );
+        assert_eq!(e.backend_name(), "recurrent-tree");
+        for p in prompts.iter().take(2) {
+            let spec = e.generate_batch(std::slice::from_ref(p), 20).unwrap();
+            let vanilla = e.generate_vanilla(p, 20).unwrap();
+            let n = 20.min(spec[0].tokens.len()).min(vanilla.tokens.len());
+            assert_eq!(
+                spec[0].tokens[..n],
+                vanilla.tokens[..n],
+                "greedy recurrent-tree decoding diverged from vanilla greedy"
+            );
+        }
+    }
+
+    // --- host/device golden-uniform parity -----------------------------
+    let device_ready = rt.has_target_entry("dense-s", "verify_tree_fused_b1")
+        && rt.has_draft_entry("eagle3@dense-s", "propose_tree_sample_b1")
+        && rt.has_draft_entry("eagle3@dense-s", "extend_tree_sample_b1");
+    if device_ready {
+        for mode in [EvalMode::T1, EvalMode::T0, EvalMode::T1GreedyDraft] {
+            let host = {
+                let mut e = tree_engine_for(
+                    rt, work, "eagle3@dense-s", mode, "2x2", 61, VerifyPath::Host,
+                );
+                assert_eq!(e.verify_path(), "host");
+                e.generate_batch(prompts, 20).unwrap()
+            };
+            let dev = {
+                let mut e = tree_engine_for(
+                    rt, work, "eagle3@dense-s", mode, "2x2", 61, VerifyPath::Device,
+                );
+                assert_eq!(e.verify_path(), "device");
+                let out = e.generate_batch(prompts, 20).unwrap();
+                assert!(
+                    e.metrics.bytes_to_host_per_round() < 1024.0,
+                    "recurrent tree {mode:?}: device path pulled {} B/round",
+                    e.metrics.bytes_to_host_per_round()
+                );
+                out
+            };
+            for (i, (a, b)) in host.iter().zip(&dev).enumerate() {
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "recurrent tree {mode:?} request {i}: device tokens \
+                     diverge from host"
+                );
+                assert_eq!(
+                    a.stats.accepted, b.stats.accepted,
+                    "recurrent tree {mode:?} req {i}"
+                );
+                assert_eq!(
+                    a.stats.prefix_hist, b.stats.prefix_hist,
+                    "recurrent tree {mode:?} req {i}"
+                );
+            }
+        }
+    } else {
+        println!("SKIP parity: artifacts lack the fused recurrent tree entries");
+    }
+
+    // --- `--tree auto`: controller-planned topologies on the chained
+    // cost model (host path: depth is priced per tree_step dispatch;
+    // device path: the one-graph expansion is depth-invariant, so the
+    // engine folds the per-level price into the fixed term) -------------
+    {
+        let mut e = tree_engine_for(
+            rt, work, "eagle3@dense-s", EvalMode::T0, "auto", 29, VerifyPath::Host,
+        );
+        assert_eq!(e.backend_name(), "recurrent-tree");
+        assert!(e.adaptive(), "auto topologies need the live controller");
+        assert!(
+            e.controller().cfg().cost.per_token > 0.0,
+            "recurrent-tree must plan through a chained cost model (host)"
+        );
+        assert!(e.tree_plan().is_some(), "auto mode must hold a planned tree");
+        for p in prompts.iter().take(2) {
+            let spec = e.generate_batch(std::slice::from_ref(p), 20).unwrap();
+            let vanilla = e.generate_vanilla(p, 20).unwrap();
+            let n = 20.min(spec[0].tokens.len()).min(vanilla.tokens.len());
+            assert_eq!(
+                spec[0].tokens[..n],
+                vanilla.tokens[..n],
+                "auto-planned recurrent tree diverged from vanilla greedy"
+            );
+        }
+    }
+    if device_ready {
+        let e = tree_engine_for(
+            rt, work, "eagle3@dense-s", EvalMode::T0, "auto", 29, VerifyPath::Device,
+        );
+        let cost = e.controller().cfg().cost;
+        assert!(
+            cost.per_token == 0.0 && cost.fixed > 0.0,
+            "device tree rounds are depth-invariant: the chained price \
+             must be folded into the fixed term (got {cost:?})"
+        );
+    }
 }
 
 /// Batched lockstep decoding must give each sequence the same results it

@@ -10,8 +10,8 @@ use lk_spec::server::kv::copy_row;
 use lk_spec::spec::accept::AcceptanceStats;
 use lk_spec::spec::gradients;
 use lk_spec::spec::sampling::{
-    acceptance_rate, categorical_from_uniform, sample_categorical, softmax_t, verify_round,
-    verify_token, verify_tree, RoundUniforms, SamplingMode, TreeSpec, Verdict,
+    acceptance_rate, argmax_rank, categorical_from_uniform, sample_categorical, softmax_t,
+    verify_round, verify_token, verify_tree, RoundUniforms, SamplingMode, TreeSpec, Verdict,
 };
 use lk_spec::tensor::{read_checkpoint, write_checkpoint, Checkpoint, DType, HostTensor};
 use lk_spec::util::proptest::{forall, gen};
@@ -868,6 +868,177 @@ fn prop_adaptive_k_schedule_stochastic_lossless() {
                         ));
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One decode round of RECURRENT tree drafting over the synthetic
+/// prefix-deterministic model — the engine-shaped mirror of
+/// `RecurrentTree::propose_tree` + the tree verify round. Unlike the
+/// parallel-head (medusa) construction, node `i`'s draft distribution
+/// conditions on its ANCESTOR candidates (the EAGLE recurrence made
+/// path-dependent): q_i = q(· | prefix, path-to-parent(i)). Uniform
+/// order follows the fixed-uniform contract exactly: one draft draw per
+/// node in node order (stochastic), then one accept draw per node plus
+/// the single sample draw.
+fn decode_recurrent_tree(
+    psalt: u64,
+    qsalt: u64,
+    vocab: usize,
+    len: usize,
+    mode: SamplingMode,
+    rng: &mut Pcg64,
+    tree: &TreeSpec,
+) -> (Vec<i32>, usize) {
+    let n = tree.len();
+    let mut out: Vec<i32> = Vec::new();
+    let mut rounds = 0usize;
+    let mut scratch = Vec::new();
+    let path_ctx = |tree: &TreeSpec, drafts: &[i32], node: i32, out: &[i32]| {
+        // prefix + the candidate tokens along node's root path
+        let mut chain = Vec::new();
+        let mut p = node;
+        while p >= 0 {
+            chain.push(drafts[p as usize]);
+            p = tree.parent(p as usize);
+        }
+        chain.reverse();
+        let mut ctx = out.to_vec();
+        ctx.extend(chain);
+        ctx
+    };
+    while out.len() < len {
+        let mut drafts = vec![0i32; n];
+        let mut q_rows: Vec<f32> = Vec::new();
+        for i in 0..n {
+            let ctx = path_ctx(tree, &drafts, tree.parent(i), &out);
+            let q = synth_dist(qsalt, &ctx, vocab, 2.0);
+            drafts[i] = match mode {
+                SamplingMode::Stochastic => {
+                    categorical_from_uniform(&q, rng.uniform() as f32) as i32
+                }
+                _ => argmax_rank(&q, tree.rank(i), &mut scratch) as i32,
+            };
+            q_rows.extend(q);
+        }
+        // target rows per block slot: root, then one row past each node
+        let mut p_rows: Vec<f32> = synth_dist(psalt, &out, vocab, 2.0);
+        for i in 0..n {
+            let ctx = path_ctx(tree, &drafts, i as i32, &out);
+            p_rows.extend(synth_dist(psalt, &ctx, vocab, 2.0));
+        }
+        let u = RoundUniforms::draw(rng, n, mode);
+        let tv = verify_tree(tree, vocab, &p_rows, &q_rows, &drafts, mode, &u);
+        for &node in &tv.path {
+            out.push(drafts[node]);
+        }
+        out.push(tv.token);
+        rounds += 1;
+    }
+    out.truncate(len);
+    (out, rounds)
+}
+
+/// THE recurrent-tree chain-degeneracy property (the ISSUE-5 acceptance
+/// criterion, mirroring PR-3's medusa-tree property): a degenerate
+/// single-chain topology through the recurrent tree round reproduces
+/// the chain backend's decode EXACTLY — bit-identical token sequences
+/// in the greedy modes AND under golden stochastic uniforms (same
+/// stream draws, same verdicts, same emissions), with identical round
+/// counts. This pins the whole construction: path-dependent candidate
+/// sampling in node order, the per-node q layout, the block row
+/// convention and the verify walk all collapse to the chain round.
+#[test]
+fn prop_recurrent_tree_chain_degenerates_to_chain_decode() {
+    forall(
+        "recurrent chain-tree == chain decode",
+        0xEA91,
+        12,
+        |rng| {
+            let k = 1 + rng.below(6);
+            let psalt = rng.next_u64();
+            // half the cases draft from the target itself (clean sweeps)
+            let qsalt = if rng.below(2) == 0 { psalt } else { rng.next_u64() };
+            let mode = [
+                SamplingMode::Stochastic,
+                SamplingMode::Greedy,
+                SamplingMode::GreedyDraft,
+            ][rng.below(3)];
+            (k, psalt, qsalt, rng.next_u64(), mode)
+        },
+        |&(k, psalt, qsalt, seed, mode)| {
+            let (vocab, len) = (12usize, 36usize);
+            let mut rng_chain = Pcg64::new(seed, 1);
+            let (chain_toks, chain_rounds) = decode_schedule(
+                psalt, qsalt, vocab, len, mode, &mut rng_chain, |_| k, |_, _| {},
+            );
+            let mut rng_tree = Pcg64::new(seed, 1);
+            let (tree_toks, tree_rounds) = decode_recurrent_tree(
+                psalt, qsalt, vocab, len, mode, &mut rng_tree,
+                &TreeSpec::chain(k),
+            );
+            if tree_toks != chain_toks {
+                return Err(format!(
+                    "{mode:?} k={k}: chain-topology tree decode diverged \
+                     from the chain backend"
+                ));
+            }
+            if tree_rounds != chain_rounds {
+                return Err(format!(
+                    "{mode:?} k={k}: round counts differ ({tree_rounds} vs \
+                     {chain_rounds})"
+                ));
+            }
+            // and the streams stayed aligned (same per-round draw count)
+            if rng_chain.next_u64() != rng_tree.next_u64() {
+                return Err("RNG streams misaligned after identical rounds".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Structural sanity of the recurrent tree on BRANCHING topologies: the
+/// decode emits a valid sequence, rounds advance, and in greedy mode
+/// the emission is the target's greedy path position by position (any
+/// topology — breadth only changes round counts, never tokens).
+#[test]
+fn prop_recurrent_tree_greedy_is_topology_invariant() {
+    forall(
+        "recurrent tree greedy == greedy path",
+        0xEA92,
+        10,
+        |rng| {
+            let fanout: Vec<usize> =
+                (0..1 + rng.below(2)).map(|_| 1 + rng.below(2)).collect();
+            (
+                TreeSpec::from_fanout(&fanout).unwrap(),
+                rng.next_u64(),
+                rng.next_u64(),
+                rng.next_u64(),
+            )
+        },
+        |(tree, psalt, qsalt, seed)| {
+            let (vocab, len) = (10usize, 24usize);
+            let mut reference: Vec<i32> = Vec::new();
+            for _ in 0..len {
+                let p = synth_dist(*psalt, &reference, vocab, 2.0);
+                reference.push(lk_spec::spec::sampling::argmax(&p) as i32);
+            }
+            let mut rng = Pcg64::new(*seed, 2);
+            let (toks, rounds) = decode_recurrent_tree(
+                *psalt, *qsalt, vocab, len, SamplingMode::Greedy, &mut rng, tree,
+            );
+            if toks != reference {
+                return Err(format!(
+                    "fanout tree {:?} diverged from the greedy path",
+                    (0..tree.len()).map(|i| tree.parent(i)).collect::<Vec<_>>()
+                ));
+            }
+            if rounds == 0 || rounds > len {
+                return Err(format!("implausible round count {rounds}"));
             }
             Ok(())
         },

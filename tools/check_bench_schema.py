@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Bench-JSON schema smoke: `results/BENCH_engine.json` is the
+machine-readable perf ledger CI uploads per run; downstream trend
+tooling (and docs/METRICS.md, which documents the row shapes) depend on
+its keys staying put. This guard fails CI when a bench section drops a
+required key or emits a non-numeric value — so the artifact and the
+docs that describe it can't drift silently.
+
+Usage: check_bench_schema.py [BENCH_engine.json]
+       (defaults to rust/results/BENCH_engine.json next to this script)
+"""
+
+import json
+import sys
+from pathlib import Path
+
+# Per-bench required numeric keys (every row additionally carries the
+# string discriminators "bench" and "config").
+SCHEMAS: dict[str, set[str]] = {
+    "speculation_controller": {
+        "tok_s",
+        "tokens",
+        "rounds",
+        "rounds_per_token",
+        "sim_cost_per_token",
+        "padded_row_rounds",
+        "downshifts",
+        "accepted_len_mean",
+        "bytes_to_host",
+    },
+    "verify_transfer_analytic": {"bytes_to_host"},
+    "verify_transfer_live": {"rounds", "accepted_len_mean", "bytes_to_host"},
+    "end_to_end": {"tok_s", "vanilla_tok_s", "tau"},
+}
+
+# Sections that must be present in EVERY run (artifact-less CI included;
+# the live/end-to-end sections only appear when checkpoints exist).
+ALWAYS_PRESENT = {"speculation_controller", "verify_transfer_analytic"}
+
+
+def check(path: Path) -> list[str]:
+    errors: list[str] = []
+    try:
+        rows = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(rows, list) or not rows:
+        return [f"{path}: expected a non-empty JSON array of rows"]
+    seen: set[str] = set()
+    for i, row in enumerate(rows):
+        where = f"{path}: row {i}"
+        if not isinstance(row, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        bench = row.get("bench")
+        if not isinstance(bench, str):
+            errors.append(f"{where}: missing string key 'bench'")
+            continue
+        if not isinstance(row.get("config"), str):
+            errors.append(f"{where} ({bench}): missing string key 'config'")
+        required = SCHEMAS.get(bench)
+        if required is None:
+            errors.append(f"{where}: unknown bench '{bench}' (update SCHEMAS)")
+            continue
+        seen.add(bench)
+        for key in sorted(required):
+            v = row.get(key)
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                errors.append(f"{where} ({bench}): key '{key}' missing or non-numeric")
+    for bench in sorted(ALWAYS_PRESENT - seen):
+        errors.append(f"{path}: no rows from always-on section '{bench}'")
+    return errors
+
+
+def main() -> int:
+    default = Path(__file__).resolve().parent.parent / "rust/results/BENCH_engine.json"
+    path = Path(sys.argv[1]) if len(sys.argv) > 1 else default
+    errors = check(path)
+    for e in errors:
+        print(e)
+    print(f"checked {path}: {'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

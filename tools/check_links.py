@@ -13,7 +13,15 @@ import sys
 from pathlib import Path
 
 LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
-DEFAULT = ["README.md", "DESIGN.md", "ROADMAP.md", "PAPER.md", "PAPERS.md", "CHANGES.md"]
+DEFAULT = [
+    "README.md",
+    "DESIGN.md",
+    "ROADMAP.md",
+    "PAPER.md",
+    "PAPERS.md",
+    "CHANGES.md",
+    "docs/METRICS.md",
+]
 
 
 def check(md: Path) -> list[str]:

@@ -426,6 +426,29 @@ def lower_target(w: EntryWriter, cfg: M.TargetConfig) -> dict:
             [("dst", [kv_spec]), ("src", [kv1_spec]), ("row", [i32()])],
         )
 
+    # --- device-side cross-bucket KV row gather (scheduler migrations):
+    # dst row i <- src row row_map[i] along the batch axis (axis 2 of
+    # [L, 2, B, H, S, Dh]). row_map may REPEAT a source row (padding
+    # clones), so one call re-packs a whole group for an up/downshift
+    # with zero KV bytes through the host. Contract pinned by
+    # rust server::kv::gather_rows and tests/test_kv_gather.py.
+    for bsrc in SERVE_BATCHES:
+        for bdst in SERVE_BATCHES:
+            if bsrc == bdst:
+                continue
+            src_spec = f32(
+                (cfg.n_layers, 2, bsrc, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+            )
+
+            def kv_gather_rows_fn(src, row_map):
+                return (VD.gather_rows(src, row_map, 2),)
+
+            entries[f"kv_gather_rows_b{bsrc}x{bdst}"] = w.lower(
+                f"tgt_{cfg.name}_kv_gather_rows_b{bsrc}x{bdst}",
+                kv_gather_rows_fn,
+                [("src", [src_spec]), ("row_map", [i32((bdst,))])],
+            )
+
     return {
         "kind": "target",
         "vocab": cfg.vocab,
@@ -923,6 +946,27 @@ def lower_draft(w: EntryWriter, dcfg: D.DraftConfig) -> dict:
                     ("mode", [i32()]),
                 ],
             )
+
+    if dcfg.is_recurrent:
+        # Draft-side twin of the target's cross-bucket row gather: the
+        # recurrent drafter's KV migrates with the group (axis 1 of
+        # [2, B, H, S, Dh]); head-less drafts carry no KV and need none.
+        for bsrc in SERVE_BATCHES:
+            for bdst in SERVE_BATCHES:
+                if bsrc == bdst:
+                    continue
+                src_spec = f32(
+                    (2, bsrc, tcfg.n_heads, tcfg.max_seq, tcfg.head_dim)
+                )
+
+                def dkv_gather_rows_fn(src, row_map):
+                    return (VD.gather_rows(src, row_map, 1),)
+
+                entries[f"dkv_gather_rows_b{bsrc}x{bdst}"] = w.lower(
+                    f"dr_{tag}_dkv_gather_rows_b{bsrc}x{bdst}",
+                    dkv_gather_rows_fn,
+                    [("src", [src_spec]), ("row_map", [i32((bdst,))])],
+                )
 
     return {
         "kind": "draft",

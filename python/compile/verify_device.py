@@ -427,6 +427,22 @@ def tree_root_sample(
     return jnp.where(mode == MODE_STOCHASTIC, tok_sto, tok_rank).astype(jnp.int32)
 
 
+def gather_rows(kv: jax.Array, row_map: jax.Array, batch_axis: int) -> jax.Array:
+    """Cross-bucket KV row gather: out row i <- kv row row_map[i] along
+    `batch_axis` (2 for target KV [L, 2, B, H, S, Dh], 1 for draft KV
+    [2, B, H, S, Dh]).
+
+    The scheduler's migration primitive: one call re-packs a whole
+    group's cache into a different batch bucket — downshift (4 -> 1),
+    upshift (1 -> 4, with row_map repeating a source row to fill the
+    padding clones) — without a single KV byte crossing the host.
+    Contract pinned bit-for-bit against the strided host reference
+    `rust server::kv::gather_rows` by tests/test_kv_gather.py and the
+    Rust integration parity test.
+    """
+    return jnp.take(kv, row_map, axis=batch_axis)
+
+
 def pick_hidden(feats: jax.Array, sel: jax.Array, d: int) -> jax.Array:
     """Per-row gather of the last-d feature slice at index `sel`.
 

@@ -1,0 +1,89 @@
+"""Parity tests for the cross-bucket KV row gather entry
+(`kv_gather_rows_b{Bsrc}x{Bdst}` / `dkv_gather_rows_b{Bsrc}x{Bdst}`).
+
+The lowered entry is `verify_device.gather_rows` — a single jnp.take
+along the batch axis. The reference here is a plain python loop copying
+row slices one at a time, the same strided semantics as the Rust host
+fallback `server::kv::gather_rows`. The two must agree BIT-FOR-BIT:
+migration sits on the engine's exactness path (a gathered row later
+verifies tokens), so "close" is not good enough.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import verify_device as VD
+from compile.aot import SERVE_BATCHES
+
+# Small-but-nontrivial KV dims: [L, 2, B, H, S, Dh] target layout.
+L, H, S, DH = 2, 3, 7, 5
+
+
+def host_gather(kv: np.ndarray, row_map, batch_axis: int) -> np.ndarray:
+    """Row-at-a-time reference: out row i <- kv row row_map[i]."""
+    out = []
+    for r in row_map:
+        out.append(np.take(kv, [r], axis=batch_axis))
+    return np.concatenate(out, axis=batch_axis)
+
+
+def rand_kv(shape, seed):
+    # Full-range f32 bit patterns (denormal-free) so bit-equality is a
+    # real check, not a round-number coincidence.
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * 1e3).astype(np.float32)
+
+
+def bucket_pairs():
+    return [
+        (bs, bd) for bs in SERVE_BATCHES for bd in SERVE_BATCHES if bs != bd
+    ]
+
+
+@pytest.mark.parametrize("bsrc,bdst", bucket_pairs())
+def test_target_kv_gather_matches_host_loop(bsrc, bdst):
+    kv = rand_kv((L, 2, bsrc, H, S, DH), seed=bsrc * 10 + bdst)
+    # Downshift packs a subset; upshift REPEATS row 0 into the padding
+    # clones — exactly the row_maps the scheduler builds.
+    row_map = [i % bsrc for i in range(bdst)]
+    got = np.asarray(
+        jax.jit(VD.gather_rows, static_argnums=2)(
+            jnp.asarray(kv), jnp.asarray(row_map, jnp.int32), 2
+        )
+    )
+    want = host_gather(kv, row_map, batch_axis=2)
+    assert got.shape == (L, 2, bdst, H, S, DH)
+    assert got.dtype == np.float32
+    np.testing.assert_array_equal(got, want)  # bit-for-bit, no tolerance
+
+
+@pytest.mark.parametrize("bsrc,bdst", bucket_pairs())
+def test_draft_kv_gather_matches_host_loop(bsrc, bdst):
+    dkv = rand_kv((2, bsrc, H, S, DH), seed=100 + bsrc * 10 + bdst)
+    row_map = [min(i, bsrc - 1) for i in range(bdst)]
+    got = np.asarray(
+        jax.jit(VD.gather_rows, static_argnums=2)(
+            jnp.asarray(dkv), jnp.asarray(row_map, jnp.int32), 1
+        )
+    )
+    want = host_gather(dkv, row_map, batch_axis=1)
+    assert got.shape == (2, bdst, H, S, DH)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_gather_permutation_and_clone_semantics():
+    """Permutations relocate rows exactly; repeated sources alias."""
+    kv = rand_kv((L, 2, 4, H, S, DH), seed=7)
+    perm = [3, 1, 0, 2]
+    got = np.asarray(VD.gather_rows(jnp.asarray(kv), jnp.asarray(perm, jnp.int32), 2))
+    for dst, src in enumerate(perm):
+        np.testing.assert_array_equal(got[:, :, dst], kv[:, :, src])
+    # Padding clones: every dst row mapping to the same source is the
+    # same bytes (the scheduler's upshift fills pad rows with row 0).
+    clones = np.asarray(
+        VD.gather_rows(jnp.asarray(kv), jnp.asarray([2, 2, 2, 2], jnp.int32), 2)
+    )
+    for dst in range(4):
+        np.testing.assert_array_equal(clones[:, :, dst], kv[:, :, 2])

@@ -13,8 +13,10 @@ use lk_spec::data::grammar::Domain;
 use lk_spec::eval::{EvalMode, EvalSettings};
 use lk_spec::runtime::Runtime;
 use lk_spec::server::batcher::BatcherConfig;
+use lk_spec::server::kv::{PagedKv, PagedKvConfig};
 use lk_spec::server::metrics::{
     device_bytes_per_round, host_draft_bytes_per_round, host_verify_bytes_per_round,
+    migration_host_kv_bytes_device, migration_host_kv_bytes_host_repack,
     recurrent_tree_device_bytes_per_round, recurrent_tree_host_bytes_per_round,
     tree_device_bytes_per_round, tree_host_bytes_per_round,
 };
@@ -74,6 +76,107 @@ fn bench_scheduler_overhead() -> anyhow::Result<()> {
         ]);
     }
     table.emit("scheduler_overhead")?;
+    Ok(())
+}
+
+/// §Paged-KV bench: effective concurrent capacity of the block pool on
+/// a shared-system-prompt serving mix, dense accounting (prefix cache
+/// off — every session pays its full prompt) vs the radix prefix cache,
+/// at equal block budgets. Pure block-accounting arithmetic on
+/// `PagedKv` — PJRT-free, always runs.
+///
+/// Mix: every request is a 32-token shared system prompt plus a 4-token
+/// distinct user suffix, max_new 12 (block size 16 → 3 blocks/session
+/// dense, 1 private block/session once the prefix is warm). Capacity =
+/// admits until the pool sheds, with no releases in between — i.e. how
+/// many sessions can be resident at once.
+fn bench_paged_kv_capacity(json: &mut JsonRows) -> anyhow::Result<()> {
+    const BLOCK_SIZE: usize = 16;
+    const MAX_NEW: usize = 12;
+    let sys_prompt: Vec<i32> = (0..32).collect();
+    let capacity = |prefix_cache: bool, budget: usize| -> (usize, f64) {
+        let mut kv = PagedKv::new(PagedKvConfig {
+            block_size: BLOCK_SIZE,
+            total_blocks: budget,
+            prefix_cache,
+        });
+        let mut admitted = 0usize;
+        loop {
+            let mut prompt = sys_prompt.clone();
+            prompt.extend([1000 + admitted as i32, 2, 3, 4]);
+            if kv.admit(admitted as u64, &prompt, MAX_NEW).is_err() {
+                break;
+            }
+            admitted += 1;
+        }
+        (admitted, kv.prefix_hit_rate())
+    };
+
+    let mut table = Table::new(
+        "Paged-KV effective capacity (shared-system-prompt mix, block size 16)",
+        &["block budget", "dense", "paged", "ratio", "prefix hit rate"],
+    );
+    for budget in [16usize, 24, 32, 64] {
+        let (dense, _) = capacity(false, budget);
+        let (paged, hit_rate) = capacity(true, budget);
+        let ratio = paged as f64 / dense.max(1) as f64;
+        table.row(vec![
+            budget.to_string(),
+            dense.to_string(),
+            paged.to_string(),
+            format!("{ratio:.2}x"),
+            format!("{hit_rate:.3}"),
+        ]);
+        json.push(vec![
+            ("bench", Json::Str("paged_kv_capacity".into())),
+            ("config", Json::Str(format!("shared-sys-prompt budget={budget}"))),
+            ("block_budget", Json::Num(budget as f64)),
+            ("capacity_dense", Json::Num(dense as f64)),
+            ("capacity_paged", Json::Num(paged as f64)),
+            ("capacity_ratio", Json::Num(ratio)),
+            ("prefix_hit_rate", Json::Num(hit_rate)),
+        ]);
+        // ISSUE-6 acceptance: the prefix cache must at least double the
+        // resident-session capacity at equal block budget on this mix.
+        anyhow::ensure!(
+            ratio >= 2.0,
+            "paged capacity {paged} < 2x dense {dense} at budget {budget}"
+        );
+    }
+    table.emit("paged_kv_capacity")?;
+    Ok(())
+}
+
+/// §Migration transfer: closed-form host KV bytes for one cross-bucket
+/// move at the manifest's target dims (L=4, H=4, Smax=88, Dh=24), host
+/// repack (the pre-paged fallback) vs the `kv_gather_rows_b{s}x{d}`
+/// device path. Analytic twin of the live
+/// `EngineMetrics::host_kv_bytes_per_migration()` counter, which the
+/// integration suite pins to 0.0 on the device path.
+fn bench_kv_migration_analytic(json: &mut JsonRows) -> anyhow::Result<()> {
+    let (n_layers, heads, max_seq, head_dim) = (4usize, 4usize, 88usize, 24usize);
+    let mut table = Table::new(
+        "Cross-bucket KV migration — host bytes per move (analytic, manifest dims)",
+        &["move", "host repack B", "device gather B"],
+    );
+    for (b_src, b_dst, with_draft, name) in [
+        (4usize, 1usize, true, "downshift 4->1 (+draft kv)"),
+        (1, 4, true, "upshift 1->4 (+draft kv)"),
+        (4, 1, false, "downshift 4->1 (target only)"),
+    ] {
+        let host = migration_host_kv_bytes_host_repack(
+            n_layers, b_src, b_dst, heads, max_seq, head_dim, with_draft,
+        );
+        let dev = migration_host_kv_bytes_device();
+        table.row(vec![name.to_string(), host.to_string(), dev.to_string()]);
+        json.push(vec![
+            ("bench", Json::Str("kv_migration_analytic".into())),
+            ("config", Json::Str(name.into())),
+            ("host_kv_bytes_host_repack", Json::Num(host as f64)),
+            ("host_kv_bytes_device", Json::Num(dev as f64)),
+        ]);
+    }
+    table.emit("kv_migration")?;
     Ok(())
 }
 
@@ -396,6 +499,8 @@ fn main() -> anyhow::Result<()> {
 
 fn run_sections(json: &mut JsonRows) -> anyhow::Result<()> {
     bench_scheduler_overhead()?;
+    bench_paged_kv_capacity(json)?;
+    bench_kv_migration_analytic(json)?;
     bench_speculation_controller(json)?;
     bench_verify_transfer(json)?;
     if !Path::new("artifacts/manifest.json").exists() {

@@ -70,7 +70,10 @@ fn print_help() {
                          Adaptive speculation is ON by default (per-round K /\n\
                          profiled trees); fixed overrides: --spec-k K, --tree FxF\n\
                          (--tree auto = profiled topologies, --no-adaptive,\n\
-                         --draft-cost C tune the controller)\n\
+                         --draft-cost C tune the controller).\n\
+                         Paged KV: --kv-blocks N (pool budget, default 256),\n\
+                         --kv-block-size N (tokens/block, default 16),\n\
+                         --no-prefix-cache (disable cross-session sharing)\n\
            report        print cached result cells\n\
          \n\
          common options: --artifacts DIR (default artifacts), --runs DIR\n\
@@ -345,12 +348,30 @@ fn serve_demo(args: &Args) -> Result<()> {
         "--spec-k is a chain-length override; trees size by their \
          topology — drop one of --spec-k / --tree"
     );
+    // Paged-KV admission (DESIGN.md §8): --kv-blocks caps resident KV,
+    // --kv-block-size sets the sharing granularity, --no-prefix-cache
+    // keeps the block pool but disables cross-session prefix sharing
+    // (the dense-accounting baseline).
+    let kv_defaults = lk_spec::server::PagedKvConfig::default();
+    let paged_kv = lk_spec::server::PagedKvConfig {
+        block_size: args.opt_usize("kv-block-size", kv_defaults.block_size)?,
+        total_blocks: args.opt_usize("kv-blocks", kv_defaults.total_blocks)?,
+        prefix_cache: !args.flag("no-prefix-cache"),
+    };
+    anyhow::ensure!(
+        paged_kv.block_size > 0 && paged_kv.total_blocks > 0,
+        "--kv-block-size and --kv-blocks must be positive"
+    );
     args.finish()?;
 
     let corpus = Corpus::open(&data)?;
     let prompts = corpus.load(Domain::Chat, "eval")?.prompts(n_requests, 16);
 
-    let router = Router::spawn(RouterConfig::default(), move || {
+    let router_cfg = RouterConfig {
+        paged_kv: Some(paged_kv),
+        ..Default::default()
+    };
+    let router = Router::spawn(router_cfg, move || {
         // Built inside the worker thread: PJRT state never crosses threads.
         let rt = Box::leak(Box::new(Runtime::new(&artifacts)?));
         let dirs = RunDirs::new(&runs);

@@ -533,8 +533,10 @@ pub trait DraftBackend {
     /// Long-tail downshift: repack rows `src_map[i]` of `src`'s packed
     /// draft state into rows `i` of the freshly-allocated smaller group
     /// `dst` (`dst.b == src_map.len()`, `dst.seqs`/target KV already
-    /// moved by the engine). One host repack per downshift — a rare
-    /// event amortized against every padded round it ends.
+    /// moved by the engine). KV-bearing backends route the repack
+    /// through the device `dkv_gather_rows_b{Bsrc}x{Bdst}` entry so no
+    /// draft-KV bytes cross the host; only the small `[B, d]` / `[B, V]`
+    /// conditioning carries still round-trip.
     fn migrate_rows(
         &self,
         cx: &EngineCx,
@@ -697,7 +699,11 @@ pub(crate) enum KvSide {
 /// Device-side one-row KV splice via the AOT copy entry. Ok(None) when
 /// the artifact set predates the entry or the source is not the
 /// bucket-1 shape the entry was lowered for — callers fall back to the
-/// host `copy_literal_row` path.
+/// host `copy_literal_row` path. The restriction is harmless: the only
+/// caller with a non-bucket-1 source is cross-bucket MIGRATION, which
+/// routes through `gather_kv_rows_device` instead (the
+/// `kv_gather_rows_b{Bsrc}x{Bdst}` entries cover every ordered bucket
+/// pair, so no migration falls back to a host repack).
 pub(crate) fn copy_kv_row_device(
     cx: &EngineCx,
     side: KvSide,
@@ -728,6 +734,51 @@ pub(crate) fn copy_kv_row_device(
     };
     let row_lit = lit_scalar_i32(row as i32)?;
     let outs = exe.run_lits(&[dst, src, &row_lit])?;
+    Ok(outs.into_iter().next())
+}
+
+/// Device-side cross-bucket KV row gather via the AOT
+/// `kv_gather_rows_b{Bsrc}x{Bdst}` / `dkv_gather_rows_b{Bsrc}x{Bdst}`
+/// entries: result row `i` is source row `row_map[i]` (`row_map` may
+/// repeat rows — migration clones a live row into padding slots). The
+/// semantics mirror `kv::gather_rows` exactly; the bit-for-bit parity
+/// is property-tested in `tests/properties.rs` / `tests/integration.rs`.
+/// Ok(None) when the artifact set predates the entry — the migration
+/// path treats that as a hard error (re-lower) rather than falling back
+/// to a host repack, so device-path migrations move ZERO KV bytes
+/// through the host.
+pub(crate) fn gather_kv_rows_device(
+    cx: &EngineCx,
+    side: KvSide,
+    src_b: usize,
+    dst_b: usize,
+    src: &xla::Literal,
+    row_map: &[usize],
+) -> Result<Option<xla::Literal>> {
+    anyhow::ensure!(
+        row_map.len() == dst_b,
+        "gather row_map len {} != dst bucket {dst_b}",
+        row_map.len()
+    );
+    let exe = match side {
+        KvSide::Target => {
+            let entry = format!("kv_gather_rows_b{src_b}x{dst_b}");
+            if !cx.rt.has_target_entry(&cx.tspec.name, &entry) {
+                return Ok(None);
+            }
+            cx.rt.target_entry(&cx.tspec.name, &entry)?
+        }
+        KvSide::Draft => {
+            let entry = format!("dkv_gather_rows_b{src_b}x{dst_b}");
+            if !cx.rt.has_draft_entry(&cx.dspec.name, &entry) {
+                return Ok(None);
+            }
+            cx.rt.draft_entry(&cx.dspec.name, &entry)?
+        }
+    };
+    let map: Vec<i32> = row_map.iter().map(|&r| r as i32).collect();
+    let map_lit = lit_i32(&[dst_b], &map)?;
+    let outs = exe.run_lits(&[src, &map_lit])?;
     Ok(outs.into_iter().next())
 }
 
@@ -769,9 +820,11 @@ pub(crate) fn adopt_hidden_row(
 
 /// Repack selected batch rows of a packed literal into a literal of a
 /// different batch size: row `i` of the result is row `src_map[i]` of
-/// `src` (the long-tail downshift mover; `src_map` may repeat rows —
-/// padding rows clone a live one, mirroring the bootstrap convention).
-/// One host round-trip total, not one per row.
+/// `src` (`src_map` may repeat rows — padding rows clone a live one,
+/// mirroring the bootstrap convention). One host round-trip total, not
+/// one per row. Since the device gather entries took over KV migration
+/// this only moves the SMALL conditioning carries (`[B, d]` hidden,
+/// `[B, V]` q0) — never a KV cache.
 pub(crate) fn repack_literal_rows(
     src: &xla::Literal,
     src_spec: &TensorSpec,

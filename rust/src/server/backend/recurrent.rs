@@ -31,10 +31,10 @@ use crate::spec::sampling::TreeSpec;
 use crate::tensor::HostTensor;
 
 use super::{
-    arg_refs, copy_kv_row_device, copy_literal_row, lit_f32, lit_i32, lit_scalar_f32,
-    lit_scalar_i32, lit_zeros_f32, migrate_hidden_rows, repack_literal_rows, spec_f32,
-    tensor_row, upload, DraftBackend, EngineCx, GroupState, KvSide, QFlat, DKV_BATCH_AXIS,
-    DUMMY_UNIFORM,
+    arg_refs, copy_kv_row_device, copy_literal_row, gather_kv_rows_device, lit_f32, lit_i32,
+    lit_scalar_f32, lit_scalar_i32, lit_zeros_f32, migrate_hidden_rows, repack_literal_rows,
+    spec_f32, tensor_row, upload, DraftBackend, EngineCx, GroupState, KvSide, QFlat,
+    DKV_BATCH_AXIS, DUMMY_UNIFORM,
 };
 
 pub struct Recurrent;
@@ -525,10 +525,23 @@ impl DraftBackend for Recurrent {
         src: &GroupState,
         src_map: &[usize],
     ) -> Result<()> {
-        // Packed draft KV: one host repack of the selected rows.
+        // Packed draft KV: device-side row gather — zero draft-KV bytes
+        // through the host (the entry covers every ordered bucket pair;
+        // older artifact sets must be re-lowered).
         let src_dkv = src.dkv.as_ref().context("migrate_rows: src dkv")?;
         let src_spec = src.dkv_spec.as_ref().context("migrate_rows: src dkv spec")?;
-        let (dkv, dkv_spec) = repack_literal_rows(src_dkv, src_spec, src_map, DKV_BATCH_AXIS)?;
+        let dkv = match gather_kv_rows_device(cx, KvSide::Draft, src.b, dst.b, src_dkv, src_map)? {
+            Some(dkv) => dkv,
+            None => anyhow::bail!(
+                "migrate_rows: artifact set lacks dkv_gather_rows_b{}x{} — \
+                 re-lower the artifacts: python/compile/aot.py",
+                src.b,
+                dst.b
+            ),
+        };
+        let mut dkv_spec = src_spec.clone();
+        dkv_spec.name = String::new();
+        dkv_spec.shape[DKV_BATCH_AXIS] = dst.b;
         dst.dkv = Some(dkv);
         dst.dkv_spec = Some(dkv_spec);
         // Hidden carry [B, d] (both paths for recurrent archs).

@@ -121,6 +121,14 @@ impl<T> Batcher<T> {
             enqueued: Instant::now(),
         });
     }
+
+    /// `requeue_front` preserving the request's ORIGINAL enqueue stamp,
+    /// so a request bounced back by the scheduler (bucket-capacity tail,
+    /// paged-KV load shed) keeps accruing queue age toward the
+    /// `max_wait` staleness flush instead of being reset to fresh.
+    pub fn requeue_front_at(&mut self, payload: T, enqueued: Instant) {
+        self.queue.push_front(Pending { payload, enqueued });
+    }
 }
 
 #[cfg(test)]
@@ -207,6 +215,22 @@ mod tests {
         // … but definitely stale past max_wait.
         let later = Instant::now() + Duration::from_millis(5);
         assert_eq!(b.next_group(later), Some(vec![42]));
+    }
+
+    #[test]
+    fn requeue_front_at_preserves_queue_age() {
+        let mut b = Batcher::new(BatcherConfig {
+            buckets: vec![4],
+            max_wait: Duration::from_millis(1),
+            queue_cap: 8,
+        });
+        let old = Instant::now() - Duration::from_millis(50);
+        // A bounced request with its original (stale) stamp flushes
+        // immediately; a plain requeue would have reset its age.
+        b.requeue_front_at(7, old);
+        assert_eq!(b.next_group(Instant::now()), Some(vec![7]));
+        b.requeue_front(8); // fresh stamp -> must wait again
+        assert!(b.next_group(Instant::now()).is_none());
     }
 
     #[test]

@@ -68,10 +68,10 @@ use crate::train::checkpoint_to_params;
 use crate::util::Pcg64;
 
 use super::backend::{
-    arg_refs, copy_kv_row_device, copy_literal_row, lit_f32, lit_i32, lit_scalar_f32,
-    lit_scalar_i32, lit_zeros_f32, make_backend, repack_literal_rows, tensor_row,
-    tensor_row_into, upload, upload_params, DraftBackend, EngineCx, GroupState, KvSide, QFlat,
-    SeqState, DUMMY_UNIFORM, TKV_BATCH_AXIS,
+    arg_refs, copy_kv_row_device, copy_literal_row, gather_kv_rows_device, lit_f32, lit_i32,
+    lit_scalar_f32, lit_scalar_i32, lit_zeros_f32, make_backend, tensor_row, tensor_row_into,
+    upload, upload_params, DraftBackend, EngineCx, GroupState, KvSide, QFlat, SeqState,
+    DUMMY_UNIFORM, TKV_BATCH_AXIS,
 };
 use super::metrics::EngineMetrics;
 use super::scheduler::{AdmitReq, SchedulerCore};
@@ -1253,13 +1253,14 @@ impl<'rt> SchedulerCore for SpecEngine<'rt> {
     /// Bucket migration (the scheduler's long-tail downshift, or the
     /// upshift that re-grows a shrunk group when arrivals queue behind
     /// it): repack the listed live rows into a fresh group at lowered
-    /// bucket `b_new`. Everything moves by row: target KV (one host
-    /// repack — the lowered `kv_copy_row_b{B}` entries only splice FROM
-    /// bucket-1 sources, so cross-bucket extraction goes through the
-    /// host mover; a device-side gather entry is a ROADMAP follow-up),
-    /// the per-sequence `SeqState`s, and the backend's packed draft
-    /// state via `DraftBackend::migrate_rows`. Padding rows clone the
-    /// last live row and start done — the bootstrap convention.
+    /// bucket `b_new`. The target KV moves entirely ON DEVICE through
+    /// the `kv_gather_rows_b{Bsrc}x{Bdst}` entry (zero KV bytes cross
+    /// the host; artifact sets lowered before the entry existed are a
+    /// hard error — re-lower); the per-sequence `SeqState`s move by
+    /// value and the backend repacks its packed draft state via
+    /// `DraftBackend::migrate_rows` (device gather for KV-bearing
+    /// backends). Padding rows clone the last live row and start done —
+    /// the bootstrap convention.
     fn migrate(&mut self, g: &mut GroupState, rows: &[usize], b_new: usize) -> Result<GroupState> {
         let n = rows.len();
         anyhow::ensure!(n > 0, "migrate of zero rows");
@@ -1273,7 +1274,28 @@ impl<'rt> SchedulerCore for SpecEngine<'rt> {
             "migration target {b_new} is not a lowered serve bucket"
         );
         let src_map: Vec<usize> = (0..b_new).map(|i| rows[i.min(n - 1)]).collect();
-        let (tkv, tkv_spec) = repack_literal_rows(&g.tkv, &g.tkv_spec, &src_map, TKV_BATCH_AXIS)?;
+        let tkv = match gather_kv_rows_device(
+            &self.cx,
+            KvSide::Target,
+            g.b,
+            b_new,
+            &g.tkv,
+            &src_map,
+        )? {
+            Some(tkv) => tkv,
+            None => anyhow::bail!(
+                "migrate: artifact set lacks kv_gather_rows_b{}x{b_new} — \
+                 re-lower the artifacts: python/compile/aot.py",
+                g.b
+            ),
+        };
+        let tkv_spec = {
+            let mut s = g.tkv_spec.clone();
+            s.name = String::new();
+            s.shape[TKV_BATCH_AXIS] = b_new;
+            s
+        };
+        self.metrics.observe_migration_host_kv_bytes(0);
         // Sessions move; padding rows clone the last live session's
         // decode state (valid hidden/q1 for the batched propose calls)
         // but are inert: done, pad-stream RNG, no generation budget.

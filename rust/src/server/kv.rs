@@ -11,7 +11,19 @@
 //! (`backend::copy_tkv_row_device`); the host `copy_row` below is the
 //! strided fallback for older artifact sets.
 //!
-//! `SlotMap` tracks row occupancy; `copy_row` is the strided row mover.
+//! `SlotMap` tracks row occupancy; `copy_row` is the strided row mover
+//! and `gather_rows` its many-row generalization (the host reference for
+//! the device `kv_gather_rows_b{Bsrc}x{Bdst}` migration entry).
+//!
+//! CAPACITY accounting is paged: `BlockPool` hands out fixed-size cache
+//! blocks from a free-list, `RadixCache` shares identical token-prefix
+//! blocks between sessions with reference counts, and `PagedKv` ties
+//! both to per-session `BlockTable`s with reservation-based admission —
+//! a session reserves blocks for its uncached prompt suffix AND its
+//! full `max_new` budget up front, so a decode can never OOM mid-flight;
+//! admission load-sheds instead (see DESIGN.md §8).
+
+use std::collections::BTreeMap;
 
 use anyhow::Result;
 
@@ -49,6 +61,33 @@ pub fn copy_row(
         dst.data[doff..doff + inner].copy_from_slice(&src.data[soff..soff + inner]);
     }
     Ok(())
+}
+
+/// Gather batch rows of `src` into a fresh tensor whose batch dim (at
+/// `axis`) is `row_map.len()`: result row `i` is `src` row `row_map[i]`.
+/// `row_map` may repeat rows (migration clones a live row into padding
+/// slots). This is the HOST REFERENCE for the lowered
+/// `kv_gather_rows_b{Bsrc}x{Bdst}` entry — the device gather must be
+/// bit-identical to it (property-tested in `tests/properties.rs`).
+pub fn gather_rows(src: &HostTensor, row_map: &[usize], axis: usize) -> Result<HostTensor> {
+    anyhow::ensure!(axis < src.shape.len(), "axis out of range");
+    anyhow::ensure!(!row_map.is_empty(), "empty row_map");
+    let sb = src.shape[axis];
+    let mut shape = src.shape.clone();
+    shape[axis] = row_map.len();
+    let mut dst = HostTensor::zeros(src.dtype, &shape);
+    let outer: usize = src.shape[..axis].iter().product();
+    let inner: usize = src.shape[axis + 1..].iter().product::<usize>() * src.dtype.size();
+    let db = row_map.len();
+    for (dst_b, &src_b) in row_map.iter().enumerate() {
+        anyhow::ensure!(src_b < sb, "row {src_b} out of range (batch {sb})");
+        for o in 0..outer {
+            let doff = (o * db + dst_b) * inner;
+            let soff = (o * sb + src_b) * inner;
+            dst.data[doff..doff + inner].copy_from_slice(&src.data[soff..soff + inner]);
+        }
+    }
+    Ok(dst)
 }
 
 /// Row-slot occupancy for one decode group (continuous batching).
@@ -105,6 +144,444 @@ impl SlotMap {
 
     pub fn high_water(&self) -> usize {
         self.high_water
+    }
+}
+
+// ---------------------------------------------------------------------------
+// paged KV: block pool + refcounted radix prefix cache
+// ---------------------------------------------------------------------------
+
+/// Handle to one fixed-size KV block.
+pub type BlockId = usize;
+
+/// Fixed-size block allocator with per-block reference counts and a
+/// LIFO free-list. A block is live while its refcount is non-zero;
+/// `release` returns it to the free-list at zero. Refcounts are how the
+/// radix cache shares one device block between many sessions: each
+/// holding session owns one reference, cache residency owns one more.
+#[derive(Debug)]
+pub struct BlockPool {
+    block_size: usize,
+    refcount: Vec<u32>,
+    free: Vec<BlockId>,
+}
+
+impl BlockPool {
+    pub fn new(block_size: usize, total_blocks: usize) -> BlockPool {
+        assert!(block_size > 0, "block_size must be positive");
+        assert!(total_blocks > 0, "pool must hold at least one block");
+        BlockPool {
+            block_size,
+            refcount: vec![0; total_blocks],
+            // Reversed so alloc() hands out ids 0, 1, 2, … (stable tests).
+            free: (0..total_blocks).rev().collect(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.refcount.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn live_blocks(&self) -> usize {
+        self.refcount.len() - self.free.len()
+    }
+
+    /// Blocks needed to hold `tokens` cache positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.saturating_add(self.block_size - 1) / self.block_size
+    }
+
+    /// Allocate one block (refcount 1), or None when the pool is dry.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.refcount[id], 0, "free-list held a live block");
+        self.refcount[id] = 1;
+        Some(id)
+    }
+
+    pub fn retain(&mut self, id: BlockId) {
+        assert!(self.refcount[id] > 0, "retain of a free block {id}");
+        self.refcount[id] += 1;
+    }
+
+    pub fn release(&mut self, id: BlockId) {
+        assert!(self.refcount[id] > 0, "double free of block {id}");
+        self.refcount[id] -= 1;
+        if self.refcount[id] == 0 {
+            self.free.push(id);
+        }
+    }
+
+    pub fn refcount(&self, id: BlockId) -> u32 {
+        self.refcount[id]
+    }
+}
+
+/// One radix-tree node: a full `block_size`-token chunk keyed under its
+/// parent, owning one cache block. `holders` counts sessions currently
+/// referencing the node — eviction is vetoed while it is non-zero.
+#[derive(Debug)]
+struct RadixNode {
+    chunk: Vec<i32>,
+    block: BlockId,
+    parent: Option<usize>,
+    children: Vec<usize>,
+    holders: u32,
+    last_used: u64,
+}
+
+/// Radix tree over token prefixes at block granularity. Edges are whole
+/// `block_size`-token chunks (a node exists only for a COMPLETE block of
+/// prompt tokens, so a shared block's contents are immutable — partial
+/// tail chunks stay private to their session, which is what makes the
+/// sharing copy-on-extend). LRU eviction frees the least-recently-used
+/// holder-free leaf; interior nodes become evictable once their subtree
+/// is gone.
+#[derive(Debug, Default)]
+pub struct RadixCache {
+    nodes: Vec<Option<RadixNode>>,
+    roots: Vec<usize>,
+    free_nodes: Vec<usize>,
+}
+
+impl RadixCache {
+    /// Walk the tree along `prompt`'s full chunks WITHOUT taking
+    /// references; returns the matched node ids root-first.
+    fn lookup_path(&self, prompt: &[i32], block_size: usize) -> Vec<usize> {
+        let mut path = Vec::new();
+        let mut level: &[usize] = &self.roots;
+        for chunk in prompt.chunks_exact(block_size) {
+            let hit = level.iter().copied().find(|&id| {
+                self.nodes[id]
+                    .as_ref()
+                    .map(|n| n.chunk == chunk)
+                    .unwrap_or(false)
+            });
+            match hit {
+                Some(id) => {
+                    path.push(id);
+                    level = &self.nodes[id].as_ref().unwrap().children;
+                }
+                None => break,
+            }
+        }
+        path
+    }
+
+    /// Take one holder reference on every node of `path` (and one pool
+    /// reference per block — the session's share of the block).
+    fn acquire(&mut self, pool: &mut BlockPool, path: &[usize], tick: u64) {
+        for &id in path {
+            let n = self.nodes[id].as_mut().unwrap();
+            n.holders += 1;
+            n.last_used = tick;
+            pool.retain(n.block);
+        }
+    }
+
+    /// Drop one holder reference (the paired pool release is the
+    /// caller's, via the session's block table).
+    fn release_holder(&mut self, id: usize) {
+        let n = self.nodes[id].as_mut().unwrap();
+        debug_assert!(n.holders > 0, "holder underflow on radix node {id}");
+        n.holders -= 1;
+    }
+
+    /// Insert `chunk` under `parent` (None = root level) owning `block`.
+    /// The cache takes its own pool reference; the caller keeps the
+    /// session's. Starts with one holder (the inserting session).
+    fn insert(
+        &mut self,
+        pool: &mut BlockPool,
+        parent: Option<usize>,
+        chunk: &[i32],
+        block: BlockId,
+        tick: u64,
+    ) -> usize {
+        pool.retain(block); // cache residency reference
+        let node = RadixNode {
+            chunk: chunk.to_vec(),
+            block,
+            parent,
+            children: Vec::new(),
+            holders: 1,
+            last_used: tick,
+        };
+        let id = match self.free_nodes.pop() {
+            Some(id) => {
+                self.nodes[id] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        };
+        match parent {
+            Some(p) => self.nodes[p].as_mut().unwrap().children.push(id),
+            None => self.roots.push(id),
+        }
+        id
+    }
+
+    /// Evict the least-recently-used holder-free LEAF node, returning
+    /// its block to the pool. False when nothing is evictable (every
+    /// leaf has a mid-flight holder — the refcount veto).
+    fn evict_lru(&mut self, pool: &mut BlockPool) -> bool {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(id, slot)| slot.as_ref().map(|n| (id, n)))
+            .filter(|(_, n)| n.holders == 0 && n.children.is_empty())
+            .min_by_key(|(_, n)| n.last_used)
+            .map(|(id, _)| id);
+        let Some(id) = victim else { return false };
+        let node = self.nodes[id].take().unwrap();
+        match node.parent {
+            Some(p) => self.nodes[p]
+                .as_mut()
+                .unwrap()
+                .children
+                .retain(|&c| c != id),
+            None => self.roots.retain(|&r| r != id),
+        }
+        self.free_nodes.push(id);
+        pool.release(node.block);
+        true
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count()
+    }
+}
+
+/// Per-session block table: the shared prefix blocks leased from the
+/// radix cache (read-only) followed by the session's private blocks
+/// (uncached prompt suffix + the full reserved generation budget).
+#[derive(Debug)]
+pub struct BlockTable {
+    pub shared: Vec<BlockId>,
+    shared_nodes: Vec<usize>,
+    pub private: Vec<BlockId>,
+    /// Prompt tokens served from the cache (block-aligned).
+    pub cached_len: usize,
+}
+
+impl BlockTable {
+    pub fn n_blocks(&self) -> usize {
+        self.shared.len() + self.private.len()
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct PagedKvConfig {
+    pub block_size: usize,
+    pub total_blocks: usize,
+    /// False disables prefix sharing (every session fully private) —
+    /// the "dense" baseline the capacity bench compares against.
+    pub prefix_cache: bool,
+}
+
+impl Default for PagedKvConfig {
+    fn default() -> Self {
+        PagedKvConfig {
+            block_size: 16,
+            total_blocks: 256,
+            prefix_cache: true,
+        }
+    }
+}
+
+/// Load-shed verdict from `PagedKv::admit`: the pool cannot reserve the
+/// session's worst-case footprint even after LRU eviction. No state was
+/// changed — the request can simply be requeued.
+#[derive(Debug, PartialEq, Eq)]
+pub struct KvShed {
+    pub blocks_needed: usize,
+    pub blocks_free: usize,
+}
+
+/// The paged-KV manager: block pool + radix prefix cache + per-session
+/// block tables, with RESERVATION-BASED admission. `admit` either
+/// reserves every block the session can ever touch (uncached prompt
+/// suffix + `max_new`) or sheds the request with no state change — a
+/// admitted session can never OOM mid-decode, so live block tables are
+/// never corrupted by allocation failure.
+#[derive(Debug)]
+pub struct PagedKv {
+    pool: BlockPool,
+    cache: RadixCache,
+    prefix_cache: bool,
+    tables: BTreeMap<u64, BlockTable>,
+    tick: u64,
+    /// Prompt tokens seen / served from cache across all admissions
+    /// (the prefix hit-rate numerator/denominator).
+    pub prompt_tokens: u64,
+    pub prompt_tokens_cached: u64,
+    pub sheds: u64,
+    pub evictions: u64,
+}
+
+impl PagedKv {
+    pub fn new(cfg: PagedKvConfig) -> PagedKv {
+        PagedKv {
+            pool: BlockPool::new(cfg.block_size, cfg.total_blocks),
+            cache: RadixCache::default(),
+            prefix_cache: cfg.prefix_cache,
+            tables: BTreeMap::new(),
+            tick: 0,
+            prompt_tokens: 0,
+            prompt_tokens_cached: 0,
+            sheds: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.pool.block_size()
+    }
+
+    pub fn blocks_live(&self) -> usize {
+        self.pool.live_blocks()
+    }
+
+    pub fn blocks_free(&self) -> usize {
+        self.pool.free_blocks()
+    }
+
+    pub fn sessions(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn table(&self, id: u64) -> Option<&BlockTable> {
+        self.tables.get(&id)
+    }
+
+    /// Fraction of admitted prompt tokens served from the prefix cache.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prompt_tokens == 0 {
+            return 0.0;
+        }
+        self.prompt_tokens_cached as f64 / self.prompt_tokens as f64
+    }
+
+    /// Admit session `id`: look up the shared prompt prefix, then
+    /// reserve private blocks for the uncached suffix plus the FULL
+    /// `max_new` budget, LRU-evicting holder-free cache leaves as
+    /// needed. On success the full prompt's complete chunks are
+    /// published to the cache for later sessions. Returns the cached
+    /// token count (block-aligned prefix served without prefill).
+    pub fn admit(&mut self, id: u64, prompt: &[i32], max_new: usize) -> Result<usize, KvShed> {
+        assert!(
+            !self.tables.contains_key(&id),
+            "session {id} already admitted"
+        );
+        self.tick += 1;
+        let bs = self.pool.block_size();
+
+        // 1. Prefix lookup, taking holder references FIRST so eviction
+        //    inside the reservation loop can never free a block this
+        //    session is about to share (the refcount veto).
+        let path = if self.prefix_cache {
+            self.cache.lookup_path(prompt, bs)
+        } else {
+            Vec::new()
+        };
+        self.cache.acquire(&mut self.pool, &path, self.tick);
+        let shared: Vec<BlockId> = path
+            .iter()
+            .map(|&n| self.cache.nodes[n].as_ref().unwrap().block)
+            .collect();
+        let cached_len = shared.len() * bs;
+
+        // 2. Reserve the worst-case private footprint.
+        let need = self.pool.blocks_for(prompt.len() - cached_len + max_new);
+        let mut private = Vec::with_capacity(need);
+        while private.len() < need {
+            match self.pool.alloc() {
+                Some(b) => private.push(b),
+                None => {
+                    if self.cache.evict_lru(&mut self.pool) {
+                        self.evictions += 1;
+                    } else {
+                        // Shed: roll back every reference taken above.
+                        for b in private {
+                            self.pool.release(b);
+                        }
+                        for (&n, &b) in path.iter().zip(&shared) {
+                            self.cache.release_holder(n);
+                            self.pool.release(b);
+                        }
+                        self.sheds += 1;
+                        return Err(KvShed {
+                            blocks_needed: need,
+                            blocks_free: self.pool.free_blocks(),
+                        });
+                    }
+                }
+            }
+        }
+
+        // 3. Publish the prompt's remaining complete chunks so later
+        //    sessions share them. Private block j covers tokens
+        //    [cached_len + j*bs, …), so full prompt chunk ci maps to
+        //    private index ci - shared.len().
+        let mut shared = shared;
+        let mut shared_nodes = path;
+        if self.prefix_cache {
+            let full_chunks = prompt.len() / bs;
+            // Chunk ci's tokens sit in private block ci - shared.len();
+            // promoting in ascending ci order always moves the current
+            // HEAD of `private` (earlier promotions shifted the rest).
+            for ci in shared.len()..full_chunks {
+                let chunk = &prompt[ci * bs..(ci + 1) * bs];
+                let block = private.remove(0);
+                let parent = shared_nodes.last().copied();
+                let node = self
+                    .cache
+                    .insert(&mut self.pool, parent, chunk, block, self.tick);
+                shared.push(block);
+                shared_nodes.push(node);
+            }
+        }
+
+        self.prompt_tokens += prompt.len() as u64;
+        self.prompt_tokens_cached += cached_len as u64;
+        self.tables.insert(
+            id,
+            BlockTable {
+                shared,
+                shared_nodes,
+                private,
+                cached_len,
+            },
+        );
+        Ok(cached_len)
+    }
+
+    /// Release session `id`'s block table: private blocks free
+    /// immediately; shared blocks drop the session's reference and stay
+    /// cache-resident until LRU eviction reclaims them.
+    pub fn release(&mut self, id: u64) {
+        let Some(t) = self.tables.remove(&id) else {
+            return;
+        };
+        for (&node, &block) in t.shared_nodes.iter().zip(&t.shared) {
+            self.cache.release_holder(node);
+            self.pool.release(block);
+        }
+        for b in t.private {
+            self.pool.release(b);
+        }
     }
 }
 
@@ -231,5 +708,169 @@ mod tests {
         assert_eq!(m.occupied(), 0);
         assert_eq!(m.high_water(), 3, "high water survives draining");
         assert!(!m.is_full());
+    }
+
+    #[test]
+    fn gather_rows_matches_copy_row_loop() {
+        let (h, s, dh) = (2usize, 3usize, 2usize);
+        let n = 2 * 4 * h * s * dh;
+        let src = HostTensor::from_f32(
+            &[2, 4, h, s, dh],
+            &(0..n).map(|i| i as f32 * 0.5 - 7.0).collect::<Vec<_>>(),
+        );
+        let map = [3usize, 0, 3, 2];
+        let got = gather_rows(&src, &map, 1).unwrap();
+        let mut want = HostTensor::zeros(DType::F32, &[2, 4, h, s, dh]);
+        for (dst_b, &src_b) in map.iter().enumerate() {
+            copy_row(&mut want, dst_b, &src, src_b, 1).unwrap();
+        }
+        assert_eq!(got.data, want.data, "gather != copy_row loop");
+        assert_eq!(got.shape, want.shape);
+    }
+
+    #[test]
+    fn gather_rows_shrink_and_bounds() {
+        let src = HostTensor::from_i32(&[4, 2], &[0, 1, 10, 11, 20, 21, 30, 31]);
+        let got = gather_rows(&src, &[2], 0).unwrap();
+        assert_eq!(got.shape, vec![1, 2]);
+        assert_eq!(got.as_i32(), vec![20, 21]);
+        assert!(gather_rows(&src, &[4], 0).is_err(), "row out of range");
+        assert!(gather_rows(&src, &[], 0).is_err(), "empty map");
+    }
+
+    #[test]
+    fn block_pool_alloc_release_refcount() {
+        let mut p = BlockPool::new(16, 3);
+        assert_eq!(p.blocks_for(0), 0);
+        assert_eq!(p.blocks_for(16), 1);
+        assert_eq!(p.blocks_for(17), 2);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_eq!((p.live_blocks(), p.free_blocks()), (2, 1));
+        p.retain(a);
+        p.release(a);
+        assert_eq!(p.refcount(a), 1, "retained block survives one release");
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.free_blocks(), 3);
+        let c = p.alloc().unwrap();
+        assert_eq!(p.refcount(c), 1);
+    }
+
+    fn paged(total_blocks: usize, prefix_cache: bool) -> PagedKv {
+        PagedKv::new(PagedKvConfig {
+            block_size: 4,
+            total_blocks,
+            prefix_cache,
+        })
+    }
+
+    /// 8 shared prompt tokens (2 full chunks): session 1 pays 3 blocks,
+    /// later sessions hit the radix cache and pay only the private one.
+    #[test]
+    fn radix_prefix_shares_blocks_between_sessions() {
+        let mut kv = paged(16, true);
+        let prompt: Vec<i32> = (0..10).collect();
+        assert_eq!(kv.admit(1, &prompt, 2), Ok(0), "cold cache: no hit");
+        let live_one = kv.blocks_live();
+        assert_eq!(live_one, 3); // 10 prompt + 2 gen = 12 tokens / bs 4
+        assert_eq!(kv.admit(2, &prompt, 2), Ok(8), "two full chunks hit");
+        assert_eq!(
+            kv.blocks_live(),
+            live_one + 1,
+            "second session adds only its private tail block"
+        );
+        let t = kv.table(2).unwrap();
+        assert_eq!(t.shared.len(), 2);
+        assert_eq!(t.private.len(), 1);
+        assert_eq!(t.cached_len, 8);
+        assert_eq!(
+            kv.table(1).unwrap().shared,
+            t.shared,
+            "both sessions lease the SAME device blocks"
+        );
+        // Divergent continuation shares only the common prefix chunks.
+        let mut other = prompt.clone();
+        other[9] = 99; // inside the partial tail chunk -> same 2 hits
+        assert_eq!(kv.admit(3, &other, 2), Ok(8));
+        let mut fork = prompt.clone();
+        fork[5] = 99; // inside chunk 1 -> only chunk 0 hits
+        assert_eq!(kv.admit(4, &fork, 2), Ok(4));
+        assert_eq!(kv.prefix_hit_rate(), (8 + 8 + 4) as f64 / 40.0);
+        for id in 1..=4 {
+            kv.release(id);
+        }
+        assert!(kv.blocks_live() > 0, "cache retains shared chunks");
+    }
+
+    #[test]
+    fn dense_mode_never_shares() {
+        let mut kv = paged(16, false);
+        let prompt: Vec<i32> = (0..8).collect();
+        assert_eq!(kv.admit(1, &prompt, 4), Ok(0));
+        assert_eq!(kv.admit(2, &prompt, 4), Ok(0));
+        assert_eq!(kv.blocks_live(), 6, "3 blocks per session, no sharing");
+        assert_eq!(kv.prefix_hit_rate(), 0.0);
+        kv.release(1);
+        assert_eq!(kv.blocks_live(), 3, "dense release frees everything");
+    }
+
+    /// The eviction veto: a shared prefix node whose holder is
+    /// mid-flight must survive pool pressure; the admission sheds
+    /// instead. Once the holder leaves, the same admission succeeds by
+    /// evicting the now holder-free node.
+    #[test]
+    fn lru_eviction_vetoed_while_holder_mid_flight() {
+        let mut kv = paged(4, true);
+        let prompt: Vec<i32> = (0..8).collect();
+        // Session 1: 2 shared chunks + 1 private block = 3 of 4 blocks.
+        assert_eq!(kv.admit(1, &prompt, 2), Ok(0));
+        assert_eq!(kv.blocks_free(), 1);
+        // Session 2 needs 3 private blocks (different prompt, no hits);
+        // only 1 free + nothing evictable (session 1 holds both cache
+        // nodes) -> shed, and session 1's table is untouched.
+        let unrelated: Vec<i32> = (100..108).collect();
+        let shed = kv.admit(2, &unrelated, 2).unwrap_err();
+        assert_eq!(shed.blocks_needed, 3);
+        assert_eq!(kv.sheds, 1);
+        assert_eq!(kv.evictions, 0, "veto: no eviction while held");
+        assert_eq!(kv.table(1).unwrap().n_blocks(), 3, "live table intact");
+        assert!(kv.table(2).is_none());
+        assert_eq!(kv.blocks_free(), 1, "shed rolled back every block");
+        // Holder leaves -> the leaf cache node becomes evictable -> the
+        // same admission now succeeds (2 free + 1 reclaimed = 3).
+        kv.release(1);
+        assert_eq!(kv.admit(2, &unrelated, 2), Ok(0));
+        assert_eq!(kv.evictions, 1, "leaf evicted; root chunk survives");
+        kv.release(2);
+    }
+
+    /// Free-list exhaustion under join pressure: admission is
+    /// all-or-nothing, so a shed can never leave a half-built table or
+    /// corrupt an existing one.
+    #[test]
+    fn exhaustion_sheds_without_corrupting_live_tables() {
+        let mut kv = paged(6, true);
+        let prompt: Vec<i32> = (0..8).collect();
+        assert_eq!(kv.admit(1, &prompt, 2), Ok(0)); // 3 blocks
+        assert_eq!(kv.admit(2, &prompt, 2), Ok(8)); // +1 private
+        assert_eq!(kv.admit(3, &prompt, 2), Ok(8)); // +1 private
+        assert_eq!(kv.blocks_free(), 1);
+        // A cache-missing join wanting 3 blocks must shed...
+        let cold: Vec<i32> = (50..58).collect();
+        assert!(kv.admit(4, &cold, 2).is_err());
+        // ...while a cache-hitting join still fits in the last block.
+        assert_eq!(kv.admit(5, &prompt, 2), Ok(8));
+        assert_eq!(kv.blocks_free(), 0);
+        for id in [1, 2, 3, 5] {
+            let t = kv.table(id).unwrap();
+            assert_eq!(t.shared.len() + t.private.len(), t.n_blocks());
+        }
+        // Releasing everything (cache still holds the 2 shared chunks).
+        for id in [1, 2, 3, 5] {
+            kv.release(id);
+        }
+        assert_eq!(kv.blocks_live(), 2, "only cache-resident chunks left");
+        assert_eq!(kv.sessions(), 0);
     }
 }

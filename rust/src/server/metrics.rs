@@ -50,6 +50,11 @@ pub struct EngineMetrics {
     pub adaptive_slots: OnlineStats,
     /// … and the controller's latest per-position alpha_hat estimates.
     pub alpha_hat: Vec<f64>,
+    /// Cross-bucket KV migrations executed (downshift + upshift).
+    pub migrations: u64,
+    /// KV bytes those migrations moved through the host — 0 on the
+    /// device gather path; the gauge exists to PROVE it stays 0.
+    pub migration_host_kv_bytes: u64,
 }
 
 impl EngineMetrics {
@@ -105,6 +110,22 @@ impl EngineMetrics {
         self.alpha_hat.extend_from_slice(alpha);
     }
 
+    /// Record one cross-bucket migration's host-side KV traffic (the
+    /// device `kv_gather_rows` path reports 0 bytes).
+    pub fn observe_migration_host_kv_bytes(&mut self, bytes: u64) {
+        self.migrations += 1;
+        self.migration_host_kv_bytes += bytes;
+    }
+
+    /// Mean host-side KV bytes per cross-bucket migration.
+    pub fn host_kv_bytes_per_migration(&self) -> f64 {
+        if self.migrations == 0 {
+            0.0
+        } else {
+            self.migration_host_kv_bytes as f64 / self.migrations as f64
+        }
+    }
+
     /// Mean candidate slots drafted per live row-round.
     pub fn nodes_per_round(&self) -> f64 {
         if self.row_rounds == 0 {
@@ -154,6 +175,13 @@ impl EngineMetrics {
         line("bytes_to_host_per_round", self.bytes_to_host_per_round());
         line("nodes_per_round", self.nodes_per_round());
         line("accepted_len_mean", self.mean_accepted_len());
+        if self.migrations > 0 {
+            line("migrations_total", self.migrations as f64);
+            line(
+                "kv_host_bytes_per_migration",
+                self.host_kv_bytes_per_migration(),
+            );
+        }
         if self.adaptive_k.n > 0 {
             line("adaptive_k_last", self.adaptive_k_last as f64);
             line("adaptive_k_mean", self.adaptive_k.mean());
@@ -286,6 +314,35 @@ pub fn recurrent_tree_device_bytes_per_round(b: usize, n_nodes: usize, vt: usize
     tree_device_bytes_per_round(b, n_nodes, vt) + (b * (vt - 1) * 4) as u64 + (b * 4) as u64
 }
 
+/// Closed form for what a HOST-repacked cross-bucket migration moves:
+/// the full source KV down (`from_literal`) plus the full repacked
+/// destination back up (`to_literal`), target cache
+/// `[L, 2, B, H, Smax, Dh]` f32. The recurrent draft twin
+/// `[2, B, H, Smax, Dh]` adds its own pair when `with_draft`. This is
+/// the traffic the `kv_gather_rows_b{Bsrc}x{Bdst}` entries delete —
+/// the live counterpart (`EngineMetrics::migration_host_kv_bytes`) must
+/// read 0 on the device path.
+pub fn migration_host_kv_bytes_host_repack(
+    n_layers: usize,
+    b_src: usize,
+    b_dst: usize,
+    heads: usize,
+    max_seq: usize,
+    head_dim: usize,
+    with_draft: bool,
+) -> u64 {
+    let row = heads * max_seq * head_dim * 4;
+    let target = n_layers * 2 * (b_src + b_dst) * row;
+    let draft = if with_draft { 2 * (b_src + b_dst) * row } else { 0 };
+    (target + draft) as u64
+}
+
+/// Device gather path: the only host traffic is the `[B_dst]` i32 row
+/// map — zero KV bytes.
+pub const fn migration_host_kv_bytes_device() -> u64 {
+    0
+}
+
 /// Scheduler-level serving metrics: occupancy, queue waits, throughput
 /// and the join/leave churn of continuous batching.
 #[derive(Default)]
@@ -327,6 +384,21 @@ pub struct SchedulerMetrics {
     pub ttft_ms: Percentiles,
     pub latency_ms: Percentiles,
     started: Option<Instant>,
+    /// Paged-KV gauges, refreshed from `kv::PagedKv` every tick (0 when
+    /// the scheduler runs without a block pool).
+    pub kv_blocks_live: u64,
+    pub kv_blocks_free: u64,
+    /// Prefix-cache hit rate over admitted prompt tokens.
+    pub prefix_hit_rate: f64,
+    /// Admissions load-shed because the pool could not reserve the
+    /// session's worst-case block footprint.
+    pub kv_sheds: u64,
+    /// Holder-free prefix blocks reclaimed by LRU eviction.
+    pub kv_evictions: u64,
+    /// Prompt tokens actually prefilled vs served from the prefix cache
+    /// (the cache-hit prefix needs no prefill — its KV blocks exist).
+    pub prefill_tokens: u64,
+    pub prefill_tokens_saved: u64,
 }
 
 impl SchedulerMetrics {
@@ -405,6 +477,13 @@ impl SchedulerMetrics {
         line("live_row_rounds_total", self.live_row_rounds as f64);
         line("padded_row_rounds_total", self.padded_row_rounds as f64);
         line("tokens_per_second", tps);
+        line("kv_sheds_total", self.kv_sheds as f64);
+        line("kv_evictions_total", self.kv_evictions as f64);
+        line("prefill_tokens_total", self.prefill_tokens as f64);
+        line(
+            "prefill_tokens_saved_total",
+            self.prefill_tokens_saved as f64,
+        );
         if !self.queue_wait_ms.is_empty() {
             line("queue_wait_ms_p50", self.queue_wait_ms.pct(50.0));
             line("queue_wait_ms_p95", self.queue_wait_ms.pct(95.0));
@@ -417,6 +496,20 @@ impl SchedulerMetrics {
             line("latency_ms_p50", self.latency_ms.pct(50.0));
             line("latency_ms_p95", self.latency_ms.pct(95.0));
         }
+        // Paged-KV capacity gauges live in the plain lkspec_ namespace
+        // (they describe the device cache, not the scheduling policy).
+        out.push_str(&format!(
+            "lkspec_kv_blocks_live{{engine=\"{engine}\"}} {}\n",
+            self.kv_blocks_live
+        ));
+        out.push_str(&format!(
+            "lkspec_kv_blocks_free{{engine=\"{engine}\"}} {}\n",
+            self.kv_blocks_free
+        ));
+        out.push_str(&format!(
+            "lkspec_prefix_hit_rate{{engine=\"{engine}\"}} {}\n",
+            self.prefix_hit_rate
+        ));
         out
     }
 }
@@ -603,6 +696,47 @@ mod tests {
         assert!(text.contains("lkspec_sched_slot_occupancy_time_mean"));
         assert!(text.contains("lkspec_sched_padded_row_rounds_total{engine=\"e\"} 3"));
         assert!(text.contains("lkspec_sched_live_row_rounds_total{engine=\"e\"} 1"));
+    }
+
+    /// The migration-transfer contract: the device gather path reports
+    /// ZERO host KV bytes, while the closed form shows what the old
+    /// host repack would have moved at the manifest's own dims.
+    #[test]
+    fn migration_transfer_closed_forms() {
+        let (l, h, smax, dh) = (4usize, 4usize, 88usize, 24usize);
+        let dense = migration_host_kv_bytes_host_repack(l, 4, 1, h, smax, dh, true);
+        let row = h * smax * dh * 4;
+        assert_eq!(dense, ((l * 2 * 5 + 2 * 5) * row) as u64);
+        assert_eq!(migration_host_kv_bytes_device(), 0);
+        assert!(dense > 1_000_000, "host repack moves megabytes: {dense}");
+        // The live gauge: device-path migrations observe 0 bytes each.
+        let mut m = EngineMetrics::default();
+        assert!(!m.render("e").contains("migrations_total"));
+        m.observe_migration_host_kv_bytes(0);
+        m.observe_migration_host_kv_bytes(0);
+        assert_eq!(m.migrations, 2);
+        assert_eq!(m.host_kv_bytes_per_migration(), 0.0);
+        let text = m.render("e");
+        assert!(text.contains("lkspec_migrations_total{engine=\"e\"} 2"));
+        assert!(text.contains("lkspec_kv_host_bytes_per_migration{engine=\"e\"} 0"));
+    }
+
+    #[test]
+    fn paged_kv_gauges_render() {
+        let mut m = SchedulerMetrics {
+            kv_blocks_live: 12,
+            kv_blocks_free: 4,
+            prefix_hit_rate: 0.625,
+            kv_sheds: 2,
+            kv_evictions: 3,
+            ..Default::default()
+        };
+        let text = m.render("e");
+        assert!(text.contains("lkspec_kv_blocks_live{engine=\"e\"} 12"));
+        assert!(text.contains("lkspec_kv_blocks_free{engine=\"e\"} 4"));
+        assert!(text.contains("lkspec_prefix_hit_rate{engine=\"e\"} 0.625"));
+        assert!(text.contains("lkspec_sched_kv_sheds_total{engine=\"e\"} 2"));
+        assert!(text.contains("lkspec_sched_kv_evictions_total{engine=\"e\"} 3"));
     }
 
     #[test]

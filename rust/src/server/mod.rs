@@ -1,7 +1,10 @@
 //! Serving engine (L3): the vLLM-shaped coordination layer around the
 //! AOT-compiled target/draft executables.
 //!
-//!   * `kv`        — KV-cache slot management and batch-row packing
+//!   * `kv`        — KV-cache row packing plus the paged-KV layer: a
+//!     fixed-size block pool with a reference-counted radix prefix
+//!     cache (shared system prompts hold one set of device blocks) and
+//!     reservation-based admission (see DESIGN.md §8)
 //!   * `backend`   — the `DraftBackend` trait + per-architecture
 //!     implementations (recurrent EAGLE-3/MTP, MEDUSA, MLP); new draft
 //!     architectures plug in here without touching the decode loop
@@ -29,5 +32,6 @@ pub mod scheduler;
 
 pub use backend::DraftBackend;
 pub use engine::{AdaptiveOpts, EngineOpts, RequestResult, SpecEngine, VerifyPath};
+pub use kv::{PagedKv, PagedKvConfig};
 pub use router::{Router, RouterConfig};
 pub use scheduler::{AdmitReq, DownshiftConfig, Scheduler, SchedulerCore, SimCore};

@@ -22,6 +22,7 @@ use anyhow::{Context, Result};
 
 use super::batcher::BatcherConfig;
 use super::engine::RequestResult;
+use super::kv::PagedKvConfig;
 use super::scheduler::{Scheduler, SchedulerCore};
 
 pub struct Request {
@@ -35,6 +36,11 @@ pub struct RouterConfig {
     pub batcher: BatcherConfig,
     /// Poll interval of the worker loop when idle.
     pub idle_poll: Duration,
+    /// Paged-KV admission (block pool + radix prefix cache). `Some` —
+    /// the default — bounds resident KV to the block budget and shares
+    /// identical prompt prefixes across sessions; `None` keeps the
+    /// legacy unbounded slot-mapped admission.
+    pub paged_kv: Option<PagedKvConfig>,
 }
 
 impl Default for RouterConfig {
@@ -42,6 +48,7 @@ impl Default for RouterConfig {
         RouterConfig {
             batcher: BatcherConfig::default(),
             idle_poll: Duration::from_millis(1),
+            paged_kv: Some(PagedKvConfig::default()),
         }
     }
 }
@@ -89,6 +96,9 @@ impl Router {
                     }
                 };
                 let mut sched = Scheduler::new(core, cfg.batcher.clone());
+                if let Some(kv) = cfg.paged_kv {
+                    sched = sched.with_paged_kv(kv);
+                }
                 let mut replies: HashMap<u64, mpsc::Sender<Result<RequestResult, String>>> =
                     HashMap::new();
                 let mut shutdown = false;
@@ -203,6 +213,7 @@ mod tests {
                 queue_cap: 16,
             },
             idle_poll: Duration::from_micros(200),
+            ..Default::default()
         }
     }
 

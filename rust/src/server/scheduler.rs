@@ -24,6 +24,15 @@
 //!     on the same slot: admission runs first in every tick. The
 //!     mirror UPSHIFT re-grows a full group when requests queue behind
 //!     it, so an arrival after a shift never waits out the tail.
+//!   * PAGED-KV ADMISSION (optional, [`Scheduler::with_paged_kv`]):
+//!     before any prefill, a session reserves fixed-size cache blocks
+//!     from a `kv::BlockPool` for its uncached prompt suffix and full
+//!     generation budget; a refcounted radix prefix cache shares
+//!     identical system-prompt blocks between sessions, and a session
+//!     whose reservation cannot be met even after LRU eviction is
+//!     load-shed back to the queue front — reservation is
+//!     all-or-nothing, so a live block table is never corrupted by
+//!     allocation failure. See DESIGN.md §8.
 //!
 //! Because per-request RNG streams are keyed by stable request ids,
 //! a session's sample path and acceptance statistics are identical
@@ -48,7 +57,7 @@ use crate::util::Pcg64;
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{request_rng, RequestResult};
-use super::kv::SlotMap;
+use super::kv::{PagedKv, PagedKvConfig, SlotMap};
 use super::metrics::SchedulerMetrics;
 
 /// An admitted request: what a core needs to bootstrap a session.
@@ -131,6 +140,10 @@ pub struct Scheduler<C: SchedulerCore> {
     active: Option<Active<C::Group>>,
     next_id: u64,
     downshift: DownshiftConfig,
+    /// Optional paged-KV admission gate (block pool + radix prefix
+    /// cache); None admits unconditionally (legacy dense accounting).
+    paged: Option<PagedKv>,
+    paged_cfg: Option<PagedKvConfig>,
     pub metrics: SchedulerMetrics,
 }
 
@@ -150,7 +163,55 @@ impl<C: SchedulerCore> Scheduler<C> {
             active: None,
             next_id: 0,
             downshift,
+            paged: None,
+            paged_cfg: None,
             metrics: SchedulerMetrics::default(),
+        }
+    }
+
+    /// Attach a paged-KV block pool with a radix prefix cache: every
+    /// admission (group formation AND mid-flight join) must first
+    /// reserve the session's worst-case block footprint — uncached
+    /// prompt suffix plus its full `max_new` budget. A session whose
+    /// reservation cannot be met even after LRU eviction is LOAD-SHED
+    /// back to the queue front (original queue age preserved) rather
+    /// than admitted into a pool that could OOM a live block table
+    /// mid-decode. Scheduling decisions are otherwise unchanged, so
+    /// emitted tokens and acceptance stats are identical with the pool
+    /// on or off (`paged_admission_never_changes_tokens` pins this).
+    pub fn with_paged_kv(mut self, cfg: PagedKvConfig) -> Scheduler<C> {
+        self.paged = Some(PagedKv::new(cfg));
+        self.paged_cfg = Some(cfg);
+        self
+    }
+
+    /// The attached paged-KV pool, if any (gauges + tests).
+    pub fn paged_kv(&self) -> Option<&PagedKv> {
+        self.paged.as_ref()
+    }
+
+    /// Reserve `req`'s paged-KV footprint (no-op without a pool). The
+    /// prefix-cache lookup happens here — BEFORE the core prefills —
+    /// and the prefill accounting records only the uncached suffix.
+    /// False = load-shed.
+    fn reserve_kv(
+        paged: &mut Option<PagedKv>,
+        metrics: &mut SchedulerMetrics,
+        req: &AdmitReq,
+    ) -> bool {
+        match paged.as_mut() {
+            None => {
+                metrics.prefill_tokens += req.prompt.len() as u64;
+                true
+            }
+            Some(kv) => match kv.admit(req.id, &req.prompt, req.max_new) {
+                Ok(cached) => {
+                    metrics.prefill_tokens += (req.prompt.len() - cached) as u64;
+                    metrics.prefill_tokens_saved += cached as u64;
+                    true
+                }
+                Err(_) => false,
+            },
         }
     }
 
@@ -200,10 +261,13 @@ impl<C: SchedulerCore> Scheduler<C> {
     }
 
     /// Drop the active group and the queue (engine-fault recovery).
+    /// The paged pool is rebuilt from its config — every table and
+    /// cache entry of the faulted engine is invalid.
     pub fn reset(&mut self) {
         self.active = None;
         let n = self.batcher.len();
         let _ = self.batcher.take(n);
+        self.paged = self.paged_cfg.map(PagedKv::new);
     }
 
     /// One scheduling step: admit (form a group, or join free slots of
@@ -220,28 +284,62 @@ impl<C: SchedulerCore> Scheduler<C> {
                 // The batcher's buckets and the core's lowered buckets
                 // are independent configs: if the popped group exceeds
                 // the core's capacity, the tail goes back to the front
-                // of the queue (it will join as slots free up).
+                // of the queue (it will join as slots free up) with its
+                // original queue age intact.
                 if reqs.len() > b {
                     for req in reqs.drain(b..).rev() {
-                        self.batcher.requeue_front(req);
+                        let at = req.enqueued;
+                        self.batcher.requeue_front_at(req, at);
                     }
                 }
-                let mut slots = SlotMap::new(b);
-                let mut cap = 0u64;
-                for r in &reqs {
-                    slots.alloc(r.id).expect("fresh slot map full");
-                    cap = cap.max(4 * r.max_new as u64 + 32);
+                // Paged-KV admission: each session reserves its block
+                // footprint in FIFO order; the first shed returns itself
+                // and everything behind it to the queue front, and a
+                // partial group still forms from the admitted head.
+                let mut shed_at = reqs.len();
+                for (i, r) in reqs.iter().enumerate() {
+                    if !Self::reserve_kv(&mut self.paged, &mut self.metrics, r) {
+                        shed_at = i;
+                        break;
+                    }
                 }
-                let group = self.core.bootstrap(&reqs)?;
-                self.metrics.groups_formed += 1;
-                self.metrics.sessions_admitted += reqs.len() as u64;
-                self.active = Some(Active {
-                    group,
-                    slots,
-                    rounds_since_finish: 0,
-                    stuck_cap: cap,
-                    shrink_rounds: 0,
-                });
+                if shed_at < reqs.len() {
+                    for req in reqs.drain(shed_at..).rev() {
+                        let at = req.enqueued;
+                        self.batcher.requeue_front_at(req, at);
+                    }
+                    // A shed with NO live reservation can never succeed:
+                    // the request alone outsizes the pool.
+                    if let Some(kv) = self.paged.as_ref() {
+                        anyhow::ensure!(
+                            shed_at > 0 || kv.sessions() > 0,
+                            "request needs more KV blocks than the pool holds \
+                             (raise --kv-blocks or shrink the prompt/max_new)"
+                        );
+                    }
+                }
+                if reqs.is_empty() {
+                    self.metrics.observe_occupancy(0.0, now);
+                    self.metrics.idle_ticks += 1;
+                } else {
+                    let b = self.core.bucket(reqs.len());
+                    let mut slots = SlotMap::new(b);
+                    let mut cap = 0u64;
+                    for r in &reqs {
+                        slots.alloc(r.id).expect("fresh slot map full");
+                        cap = cap.max(4 * r.max_new as u64 + 32);
+                    }
+                    let group = self.core.bootstrap(&reqs)?;
+                    self.metrics.groups_formed += 1;
+                    self.metrics.sessions_admitted += reqs.len() as u64;
+                    self.active = Some(Active {
+                        group,
+                        slots,
+                        rounds_since_finish: 0,
+                        stuck_cap: cap,
+                        shrink_rounds: 0,
+                    });
+                }
             } else if !self.batcher.is_empty() {
                 // Requests are waiting but no group is decoding (the
                 // batcher is holding out for a fuller bucket): record
@@ -279,6 +377,16 @@ impl<C: SchedulerCore> Scheduler<C> {
             let free = active.slots.capacity() - active.slots.occupied();
             if free > 0 {
                 for req in self.batcher.take(free) {
+                    // Join pressure load-shed: if the pool cannot
+                    // reserve this join's footprint it waits at the
+                    // queue front (live block tables stay untouched —
+                    // reservation is all-or-nothing) until a finishing
+                    // session or an eviction frees blocks.
+                    if !Self::reserve_kv(&mut self.paged, &mut self.metrics, &req) {
+                        let at = req.enqueued;
+                        self.batcher.requeue_front_at(req, at);
+                        break;
+                    }
                     let row = active.slots.alloc(req.id).expect("free slot disappeared");
                     self.core.join(&mut active.group, row, &req)?;
                     active.stuck_cap = active.stuck_cap.max(4 * req.max_new as u64 + 32);
@@ -312,6 +420,9 @@ impl<C: SchedulerCore> Scheduler<C> {
             for (row, id) in done_rows {
                 let res = self.core.take_result(&mut active.group, row);
                 active.slots.free(id);
+                if let Some(kv) = self.paged.as_mut() {
+                    kv.release(id);
+                }
                 self.metrics.observe_session(&res);
                 finished.push((id, res));
             }
@@ -354,6 +465,13 @@ impl<C: SchedulerCore> Scheduler<C> {
         if retire {
             self.active = None;
             self.metrics.groups_retired += 1;
+        }
+        if let Some(kv) = self.paged.as_ref() {
+            self.metrics.kv_blocks_live = kv.blocks_live() as u64;
+            self.metrics.kv_blocks_free = kv.blocks_free() as u64;
+            self.metrics.prefix_hit_rate = kv.prefix_hit_rate();
+            self.metrics.kv_sheds = kv.sheds;
+            self.metrics.kv_evictions = kv.evictions;
         }
         Ok(finished)
     }
@@ -1037,5 +1155,153 @@ mod tests {
         let text = s.metrics.render("sim");
         assert!(text.contains("lkspec_sched_slot_occupancy_mean"));
         assert!(text.contains("lkspec_sched_tokens_per_second"));
+    }
+
+    fn paged_cfg(total_blocks: usize) -> PagedKvConfig {
+        PagedKvConfig {
+            block_size: 4,
+            total_blocks,
+            prefix_cache: true,
+        }
+    }
+
+    /// Tentpole invariant at the scheduler level: the paged pool is an
+    /// ACCOUNTING layer. With a roomy pool, every admission decision is
+    /// identical to the dense run, so per-id tokens and acceptance
+    /// stats are bit-identical — while the radix cache reports real
+    /// sharing on a shared-system-prompt mix.
+    #[test]
+    fn paged_admission_never_changes_tokens() {
+        let shared_prompt: Vec<i32> = (100..108).collect(); // 2 chunks at bs=4
+        let run = |paged: Option<PagedKvConfig>| -> (BTreeMap<u64, RequestResult>, u64) {
+            let mut s = Scheduler::new(sim(), cfg(64));
+            if let Some(p) = paged {
+                s = s.with_paged_kv(p);
+            }
+            for _ in 0..6 {
+                s.submit(shared_prompt.clone(), 8).unwrap();
+            }
+            let mut got = BTreeMap::new();
+            for (id, r) in drain(&mut s, 10_000) {
+                got.insert(id, r);
+            }
+            (got, s.metrics.prefill_tokens_saved)
+        };
+        let (dense, dense_saved) = run(None);
+        let (paged, paged_saved) = run(Some(paged_cfg(32)));
+        assert_eq!(dense.len(), 6);
+        assert_eq!(dense_saved, 0, "dense path never reports cache savings");
+        for id in 0..6u64 {
+            assert_eq!(paged[&id].tokens, dense[&id].tokens, "tokens diverge for id {id}");
+            assert_eq!(paged[&id].stats.accepted, dense[&id].stats.accepted, "id {id}");
+            assert_eq!(paged[&id].stats.prefix_hist, dense[&id].stats.prefix_hist, "id {id}");
+        }
+        // Sessions 2..6 hit the whole 8-token prompt: 40 of 48 prompt
+        // tokens come from the cache.
+        assert_eq!(paged_saved, 40);
+    }
+
+    /// Paged gauges and prefill counters are refreshed from the pool at
+    /// the end of every tick and rendered in the plain lkspec_ namespace.
+    #[test]
+    fn paged_gauges_and_prefill_counters() {
+        let mut s = Scheduler::new(sim(), cfg(64)).with_paged_kv(paged_cfg(32));
+        let prompt: Vec<i32> = (0..8).collect();
+        for _ in 0..4 {
+            s.submit(prompt.clone(), 8).unwrap();
+        }
+        let out = drain(&mut s, 10_000);
+        assert_eq!(out.len(), 4);
+        // 4 sessions x 8 prompt tokens; sessions 2..4 fully cached.
+        assert_eq!(s.metrics.prefill_tokens + s.metrics.prefill_tokens_saved, 32);
+        assert_eq!(s.metrics.prefill_tokens_saved, 24);
+        assert!(s.metrics.prefix_hit_rate > 0.5);
+        // After the drain only the cache-resident prompt chunks remain
+        // live (2 chunks of the shared prompt).
+        assert_eq!(s.metrics.kv_blocks_live, 2);
+        assert_eq!(s.metrics.kv_blocks_free, 30);
+        assert_eq!(s.metrics.kv_sheds, 0);
+        let text = s.metrics.render("sim");
+        assert!(text.contains("lkspec_kv_blocks_live{engine=\"sim\"} 2"));
+        assert!(text.contains("lkspec_kv_blocks_free{engine=\"sim\"} 30"));
+        assert!(text.contains("lkspec_prefix_hit_rate"));
+        assert!(text.contains("lkspec_sched_prefill_tokens_saved_total{engine=\"sim\"} 24"));
+    }
+
+    /// Satellite edge case: free-list exhaustion under join pressure
+    /// load-sheds the join back to the queue front — live block tables
+    /// are never corrupted, and the shed session completes once a
+    /// finishing session releases its reservation.
+    #[test]
+    fn kv_exhaustion_sheds_join_then_recovers() {
+        // Distinct prompts (no sharing) at bs = 4: id 0 needs
+        // blocks_for(4 + 2) = 2 blocks, ids 1..3 need
+        // blocks_for(4 + 8) = 3 each. A pool of 8 admits ids 0..2
+        // (8 blocks) and sheds id 3 at bootstrap. id 0 finishes on the
+        // very first round (max_new = 2, >= 1 token per round), but its
+        // release frees only 2 blocks (1 private + 1 evictable cache
+        // chunk) — id 3's retry must evict the chunk, STILL come up one
+        // block short, and roll back without touching the two live
+        // tables; it succeeds only after id 1 or 2 finishes.
+        let max_new = |i: u64| if i == 0 { 2 } else { 8 };
+        let mut s = Scheduler::new(sim(), cfg(64)).with_paged_kv(paged_cfg(8));
+        for i in 0..4u64 {
+            s.submit(vec![50 * (i as i32 + 1), 2, 3, 4], max_new(i)).unwrap();
+        }
+        let out = drain(&mut s, 10_000);
+        assert_eq!(out.len(), 4, "shed session must eventually complete");
+        let mut ids: Vec<u64> = out.iter().map(|(id, _)| *id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert!(s.metrics.kv_sheds >= 2, "bootstrap shed + at least one join shed");
+        assert!(s.metrics.kv_evictions >= 1, "retry must evict id 0's idle chunk");
+        // Token streams are unaffected by the shed/retry (id-keyed RNG).
+        let reference = {
+            let mut s2 = Scheduler::new(sim(), cfg(64));
+            for i in 0..4u64 {
+                s2.submit(vec![50 * (i as i32 + 1), 2, 3, 4], max_new(i)).unwrap();
+            }
+            let mut got = BTreeMap::new();
+            for (id, r) in drain(&mut s2, 10_000) {
+                got.insert(id, r);
+            }
+            got
+        };
+        for (id, r) in &out {
+            assert_eq!(r.tokens, reference[id].tokens, "shed changed tokens for id {id}");
+        }
+    }
+
+    /// A request whose worst-case footprint exceeds the WHOLE pool can
+    /// never be admitted — the scheduler must fail loudly instead of
+    /// re-queueing it forever.
+    #[test]
+    fn oversized_request_fails_loudly() {
+        let mut s = Scheduler::new(sim(), cfg(64)).with_paged_kv(paged_cfg(2));
+        // Needs blocks_for(40 + 40) = 20 blocks; the pool holds 2.
+        s.submit((0..40).collect(), 40).unwrap();
+        let err = s.tick(Instant::now()).expect_err("admission must error");
+        assert!(
+            err.to_string().contains("KV blocks"),
+            "unexpected error: {err}"
+        );
+    }
+
+    /// `reset` rebuilds the pool from the stored config: no stale block
+    /// tables or cache nodes survive into the next run.
+    #[test]
+    fn reset_rebuilds_paged_pool() {
+        let mut s = Scheduler::new(sim(), cfg(64)).with_paged_kv(paged_cfg(16));
+        let prompt: Vec<i32> = (0..8).collect();
+        for _ in 0..2 {
+            s.submit(prompt.clone(), 8).unwrap();
+        }
+        let _ = drain(&mut s, 10_000);
+        assert!(s.paged_kv().unwrap().blocks_live() > 0, "cache keeps chunks live");
+        s.reset();
+        let kv = s.paged_kv().unwrap();
+        assert_eq!(kv.blocks_live(), 0);
+        assert_eq!(kv.blocks_free(), 16);
+        assert_eq!(kv.sessions(), 0);
     }
 }

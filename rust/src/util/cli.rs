@@ -15,6 +15,7 @@ const KNOWN_FLAGS: &[&str] = &[
     "greedy-draft",
     "no-spec",
     "no-adaptive",
+    "no-prefix-cache",
     "force",
     "help",
     "fresh",

@@ -17,7 +17,7 @@ use lk_spec::eval::EvalMode;
 use lk_spec::runtime::Runtime;
 use lk_spec::server::batcher::BatcherConfig;
 use lk_spec::server::engine::{AdaptiveOpts, EngineOpts, SpecEngine, VerifyPath};
-use lk_spec::server::{RequestResult, Scheduler};
+use lk_spec::server::{DownshiftConfig, RequestResult, Scheduler};
 use lk_spec::tensor::{read_checkpoint, HostTensor};
 use lk_spec::train::{checkpoint_to_params, params_to_checkpoint, DraftTrainer, RunDirs, TargetTrainer};
 use lk_spec::util::{Json, Pcg64};
@@ -231,6 +231,7 @@ fn engine_integration_suite() {
     stochastic_composition_independent(&rt, &work, &corpus);
     batch_rows_independent(&rt, &work, &corpus);
     scheduler_join_matches_lockstep(&rt, &work, &corpus);
+    scheduler_migration_device_gather_exact(&rt, &work, &corpus);
     device_verify_matches_host(&rt, &work, &corpus);
     adaptive_controller_greedy_exact(&rt, &work, &corpus);
     tree_decoding_suite(&rt, &work, &corpus);
@@ -467,6 +468,103 @@ fn scheduler_join_matches_lockstep(rt: &Runtime, work: &Path, corpus: &Corpus) {
             "session {i}: per-position acceptance stats differ"
         );
         assert_eq!(a.stats.prefix_hist, b.stats.prefix_hist, "session {i}");
+    }
+}
+
+/// Cross-bucket migration through the device gather entry
+/// (`kv_gather_rows_b{Bsrc}x{Bdst}` + the `dkv_` twin for recurrent
+/// drafts) is EXACT and host-free. A downshift (4 -> 1) and an upshift
+/// (1 -> 4, with padding clones) both fire on the real engine, and every
+/// session's tokens and per-position acceptance stats stay bit-identical
+/// to the lockstep run-to-completion reference — across the three chain
+/// backends in greedy and stochastic modes. The engine's migration
+/// ledger must report ZERO KV bytes through the host (only the small
+/// [B, d]-shaped conditioning carries round-trip).
+fn scheduler_migration_device_gather_exact(rt: &Runtime, work: &Path, corpus: &Corpus) {
+    println!("== scheduler_migration_device_gather_exact");
+    if !rt.has_target_entry("dense-s", "kv_gather_rows_b4x1") {
+        println!("SKIP: artifacts predate the kv gather entries");
+        return;
+    }
+    let prompts = corpus
+        .load(lk_spec::data::grammar::Domain::Chat, "eval")
+        .unwrap()
+        .prompts(5, 12);
+    let caps = [40usize, 6, 6, 6, 8]; // one long tail + three shorts + a late joiner
+    for (draft, mode) in [
+        ("eagle3@dense-s", EvalMode::T0),
+        ("eagle3@dense-s", EvalMode::T1),
+        ("medusa@dense-s", EvalMode::T1),
+        ("mlp@dense-s", EvalMode::T0),
+    ] {
+        if draft == "eagle3@dense-s" && !rt.has_draft_entry(draft, "dkv_gather_rows_b4x1") {
+            println!("SKIP {draft}: artifacts lack the dkv gather twin");
+            continue;
+        }
+        let cfg = BatcherConfig {
+            buckets: rt.manifest.serve_batches.clone(),
+            max_wait: Duration::ZERO,
+            queue_cap: 16,
+        };
+        let engine = engine_for_draft(rt, work, draft, mode, 6, 83, VerifyPath::Auto);
+        let ds = DownshiftConfig {
+            enabled: true,
+            after_rounds: 2,
+        };
+        let mut sched = Scheduler::with_downshift(engine, cfg, ds);
+        for i in 0..4 {
+            sched.submit(prompts[i].clone(), caps[i]).unwrap();
+        }
+        // Run until the long tail has been downshifted to b=1…
+        let mut got: BTreeMap<u64, RequestResult> = BTreeMap::new();
+        let mut guard = 0;
+        while sched.metrics.downshifts == 0 {
+            for (id, r) in sched.tick(Instant::now()).unwrap() {
+                got.insert(id, r);
+            }
+            guard += 1;
+            assert!(guard < 1000, "{draft} {mode:?}: downshift never fired");
+        }
+        // …then a late arrival forces the mirror upshift (1 -> 4 with
+        // padding clones in the row map).
+        sched.submit(prompts[4].clone(), caps[4]).unwrap();
+        while !sched.is_idle() {
+            for (id, r) in sched.tick(Instant::now()).unwrap() {
+                got.insert(id, r);
+            }
+            guard += 1;
+            assert!(guard < 2000, "{draft} {mode:?}: scheduler did not converge");
+        }
+        assert_eq!(got.len(), 5, "{draft} {mode:?}");
+        assert!(sched.metrics.downshifts >= 1, "{draft} {mode:?}");
+        assert!(sched.metrics.upshifts >= 1, "{draft} {mode:?}");
+        let em = &sched.core().metrics;
+        assert!(em.migrations >= 2, "{draft} {mode:?}: both shifts must migrate");
+        assert_eq!(
+            em.host_kv_bytes_per_migration(),
+            0.0,
+            "{draft} {mode:?}: migration moved KV bytes through the host"
+        );
+
+        // Lockstep reference: same seed, same request ids.
+        let mut e2 = engine_for_draft(rt, work, draft, mode, 6, 83, VerifyPath::Auto);
+        let reqs: Vec<(Vec<i32>, usize)> =
+            (0..4).map(|i| (prompts[i].clone(), caps[i])).collect();
+        let mut reference = e2.generate_batch_with(&reqs).unwrap();
+        reference.extend(
+            e2.generate_batch_with(&[(prompts[4].clone(), caps[4])])
+                .unwrap(),
+        );
+        for (i, b) in reference.iter().enumerate() {
+            let a = &got[&(i as u64)];
+            assert_eq!(
+                a.tokens, b.tokens,
+                "{draft} {mode:?} session {i}: migrated decode diverged from lockstep"
+            );
+            assert_eq!(a.stats.drafted, b.stats.drafted, "{draft} {mode:?} session {i}");
+            assert_eq!(a.stats.accepted, b.stats.accepted, "{draft} {mode:?} session {i}");
+            assert_eq!(a.stats.prefix_hist, b.stats.prefix_hist, "{draft} {mode:?} session {i}");
+        }
     }
 }
 

@@ -6,7 +6,7 @@ use lk_spec::data::corpus::Dataset;
 use lk_spec::data::grammar::{Domain, DOMAINS};
 use lk_spec::data::vocab::{build_vocab_map, invert_vocab_map};
 use lk_spec::server::batcher::{Batcher, BatcherConfig};
-use lk_spec::server::kv::copy_row;
+use lk_spec::server::kv::{copy_row, gather_rows};
 use lk_spec::spec::accept::AcceptanceStats;
 use lk_spec::spec::gradients;
 use lk_spec::spec::sampling::{
@@ -558,6 +558,58 @@ fn prop_copy_row_identity() {
                         }
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The paged-migration exactness contract: `gather_rows` (the host
+/// reference of the lowered `kv_gather_rows_b{Bsrc}x{Bdst}` entries)
+/// agrees BIT-FOR-BIT with a per-row `copy_row` loop — arbitrary shapes
+/// and axes, row maps with repeats (upshift padding clones), and the
+/// serve-bucket pairs (1,4)/(4,1) the scheduler actually lowers.
+#[test]
+fn prop_gather_rows_equals_copy_row_loop() {
+    forall(
+        "gather_rows == copy_row per dst row",
+        0x6A7E,
+        48,
+        |rng| {
+            let rank = 2 + rng.below(4);
+            let mut shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(5)).collect();
+            let axis = rng.below(rank);
+            // Bias half the cases to the lowered bucket pairs on the
+            // real batch axes: (src 1 -> dst 4) and (src 4 -> dst 1).
+            if rng.below(2) == 0 {
+                shape[axis] = [1, 4][rng.below(2)];
+            }
+            let src_b = shape[axis];
+            let dst_b = 1 + rng.below(5);
+            let row_map: Vec<usize> = (0..dst_b).map(|_| rng.below(src_b)).collect();
+            let n: usize = shape.iter().product();
+            (shape.clone(), axis, row_map, gen::f32s(rng, n, 1e3))
+        },
+        |(shape, axis, row_map, data)| {
+            let src = HostTensor::from_f32(shape, data);
+            let gathered = gather_rows(&src, row_map, *axis).map_err(|e| e.to_string())?;
+            let mut dst_shape = shape.clone();
+            dst_shape[*axis] = row_map.len();
+            let mut reference = HostTensor::zeros(DType::F32, &dst_shape);
+            for (dst_row, &src_row) in row_map.iter().enumerate() {
+                copy_row(&mut reference, dst_row, &src, src_row, *axis)
+                    .map_err(|e| e.to_string())?;
+            }
+            if gathered.shape != reference.shape {
+                return Err(format!(
+                    "shape {:?} != {:?}",
+                    gathered.shape, reference.shape
+                ));
+            }
+            if gathered.data != reference.data {
+                return Err(format!(
+                    "bytes differ for map {row_map:?} on axis {axis} of {shape:?}"
+                ));
             }
             Ok(())
         },

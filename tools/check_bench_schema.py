@@ -31,11 +31,27 @@ SCHEMAS: dict[str, set[str]] = {
     "verify_transfer_analytic": {"bytes_to_host"},
     "verify_transfer_live": {"rounds", "accepted_len_mean", "bytes_to_host"},
     "end_to_end": {"tok_s", "vanilla_tok_s", "tau"},
+    "paged_kv_capacity": {
+        "block_budget",
+        "capacity_dense",
+        "capacity_paged",
+        "capacity_ratio",
+        "prefix_hit_rate",
+    },
+    "kv_migration_analytic": {
+        "host_kv_bytes_host_repack",
+        "host_kv_bytes_device",
+    },
 }
 
 # Sections that must be present in EVERY run (artifact-less CI included;
 # the live/end-to-end sections only appear when checkpoints exist).
-ALWAYS_PRESENT = {"speculation_controller", "verify_transfer_analytic"}
+ALWAYS_PRESENT = {
+    "speculation_controller",
+    "verify_transfer_analytic",
+    "paged_kv_capacity",
+    "kv_migration_analytic",
+}
 
 
 def check(path: Path) -> list[str]:

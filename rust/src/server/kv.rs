@@ -23,7 +23,7 @@
 //! full `max_new` budget up front, so a decode can never OOM mid-flight;
 //! admission load-sheds instead (see DESIGN.md §8).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use anyhow::Result;
 
@@ -233,9 +233,17 @@ struct RadixNode {
     chunk: Vec<i32>,
     block: BlockId,
     parent: Option<usize>,
-    children: Vec<usize>,
+    /// Child node per next-chunk content: lookup is one hash probe per
+    /// level instead of a linear scan over siblings.
+    children: HashMap<Vec<i32>, usize>,
     holders: u32,
     last_used: u64,
+}
+
+impl RadixNode {
+    fn is_evictable(&self) -> bool {
+        self.holders == 0 && self.children.is_empty()
+    }
 }
 
 /// Radix tree over token prefixes at block granularity. Edges are whole
@@ -244,12 +252,17 @@ struct RadixNode {
 /// tail chunks stay private to their session, which is what makes the
 /// sharing copy-on-extend). LRU eviction frees the least-recently-used
 /// holder-free leaf; interior nodes become evictable once their subtree
-/// is gone.
+/// is gone. The `evictable` index keeps eviction O(log n) — admission
+/// under pool pressure can evict many times per reservation, so a full
+/// node scan per eviction would be a latency cliff at large pools.
 #[derive(Debug, Default)]
 pub struct RadixCache {
     nodes: Vec<Option<RadixNode>>,
-    roots: Vec<usize>,
+    roots: HashMap<Vec<i32>, usize>,
     free_nodes: Vec<usize>,
+    /// Exactly the holder-free leaves, ordered by (last_used, id) —
+    /// the invariant every holder/children transition below maintains.
+    evictable: BTreeSet<(u64, usize)>,
 }
 
 impl RadixCache {
@@ -257,16 +270,10 @@ impl RadixCache {
     /// references; returns the matched node ids root-first.
     fn lookup_path(&self, prompt: &[i32], block_size: usize) -> Vec<usize> {
         let mut path = Vec::new();
-        let mut level: &[usize] = &self.roots;
+        let mut level = &self.roots;
         for chunk in prompt.chunks_exact(block_size) {
-            let hit = level.iter().copied().find(|&id| {
-                self.nodes[id]
-                    .as_ref()
-                    .map(|n| n.chunk == chunk)
-                    .unwrap_or(false)
-            });
-            match hit {
-                Some(id) => {
+            match level.get(chunk) {
+                Some(&id) => {
                     path.push(id);
                     level = &self.nodes[id].as_ref().unwrap().children;
                 }
@@ -281,6 +288,9 @@ impl RadixCache {
     fn acquire(&mut self, pool: &mut BlockPool, path: &[usize], tick: u64) {
         for &id in path {
             let n = self.nodes[id].as_mut().unwrap();
+            if n.is_evictable() {
+                self.evictable.remove(&(n.last_used, id));
+            }
             n.holders += 1;
             n.last_used = tick;
             pool.retain(n.block);
@@ -293,6 +303,9 @@ impl RadixCache {
         let n = self.nodes[id].as_mut().unwrap();
         debug_assert!(n.holders > 0, "holder underflow on radix node {id}");
         n.holders -= 1;
+        if n.is_evictable() {
+            self.evictable.insert((n.last_used, id));
+        }
     }
 
     /// Insert `chunk` under `parent` (None = root level) owning `block`.
@@ -311,7 +324,7 @@ impl RadixCache {
             chunk: chunk.to_vec(),
             block,
             parent,
-            children: Vec::new(),
+            children: HashMap::new(),
             holders: 1,
             last_used: tick,
         };
@@ -326,8 +339,16 @@ impl RadixCache {
             }
         };
         match parent {
-            Some(p) => self.nodes[p].as_mut().unwrap().children.push(id),
-            None => self.roots.push(id),
+            Some(p) => {
+                let pn = self.nodes[p].as_mut().unwrap();
+                if pn.is_evictable() {
+                    self.evictable.remove(&(pn.last_used, p));
+                }
+                pn.children.insert(chunk.to_vec(), id);
+            }
+            None => {
+                self.roots.insert(chunk.to_vec(), id);
+            }
         }
         id
     }
@@ -336,23 +357,21 @@ impl RadixCache {
     /// its block to the pool. False when nothing is evictable (every
     /// leaf has a mid-flight holder — the refcount veto).
     fn evict_lru(&mut self, pool: &mut BlockPool) -> bool {
-        let victim = self
-            .nodes
-            .iter()
-            .enumerate()
-            .filter_map(|(id, slot)| slot.as_ref().map(|n| (id, n)))
-            .filter(|(_, n)| n.holders == 0 && n.children.is_empty())
-            .min_by_key(|(_, n)| n.last_used)
-            .map(|(id, _)| id);
-        let Some(id) = victim else { return false };
+        let Some((_, id)) = self.evictable.pop_first() else {
+            return false;
+        };
         let node = self.nodes[id].take().unwrap();
         match node.parent {
-            Some(p) => self.nodes[p]
-                .as_mut()
-                .unwrap()
-                .children
-                .retain(|&c| c != id),
-            None => self.roots.retain(|&r| r != id),
+            Some(p) => {
+                let pn = self.nodes[p].as_mut().unwrap();
+                pn.children.remove(&node.chunk);
+                if pn.is_evictable() {
+                    self.evictable.insert((pn.last_used, p));
+                }
+            }
+            None => {
+                self.roots.remove(&node.chunk);
+            }
         }
         self.free_nodes.push(id);
         pool.release(node.block);

@@ -34,4 +34,4 @@ pub use backend::DraftBackend;
 pub use engine::{AdaptiveOpts, EngineOpts, RequestResult, SpecEngine, VerifyPath};
 pub use kv::{PagedKv, PagedKvConfig};
 pub use router::{Router, RouterConfig};
-pub use scheduler::{AdmitReq, DownshiftConfig, Scheduler, SchedulerCore, SimCore};
+pub use scheduler::{AdmitReq, DownshiftConfig, Scheduler, SchedulerCore, SimCore, SubmitError};

@@ -111,10 +111,12 @@ impl Router {
                                     Ok(id) => {
                                         replies.insert(id, req.reply);
                                     }
-                                    Err(_) => {
-                                        let _ = req
-                                            .reply
-                                            .send(Err("queue full (backpressure)".into()));
+                                    // Per-request verdicts (queue full /
+                                    // oversized for the KV pool): fail
+                                    // ONLY this request — every other
+                                    // session keeps decoding.
+                                    Err(e) => {
+                                        let _ = req.reply.send(Err(e.to_string()));
                                     }
                                 }
                             }
@@ -258,6 +260,28 @@ mod tests {
             .unwrap()
             .unwrap();
         assert_eq!(long.tokens.len(), 48);
+        router.shutdown();
+    }
+
+    /// An oversized request — worst-case KV footprint beyond the whole
+    /// paged pool (default 256 blocks x 16 tokens) — fails ONLY itself:
+    /// it is rejected at submit, never surfaced as a tick-level engine
+    /// fault, so concurrent sessions run to completion and the worker
+    /// keeps serving.
+    #[test]
+    fn oversized_request_fails_only_itself() {
+        let router = Router::spawn(cfg(), || Ok(SimCore::new(4, 7, vec![1, 4]))).unwrap();
+        let rx_ok = router.submit(vec![1, 2], 8).unwrap();
+        let rx_big = router.submit(vec![3, 4], 100_000).unwrap();
+        let big = rx_big.recv_timeout(Duration::from_secs(5)).unwrap();
+        let err = big.unwrap_err();
+        assert!(err.contains("KV blocks"), "got: {err}");
+        let ok = rx_ok.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(ok.tokens.len(), 8, "concurrent session must survive");
+        // The worker is still healthy: a later request is served too.
+        let rx_late = router.submit(vec![5, 6], 4).unwrap();
+        let late = rx_late.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(late.is_ok());
         router.shutdown();
     }
 

@@ -133,6 +133,39 @@ struct Active<G> {
     shrink_rounds: u64,
 }
 
+/// Why `Scheduler::submit` refused a request. Both are PER-REQUEST
+/// verdicts: the scheduler and every other session keep running.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The queue is full (backpressure); the prompt is handed back so
+    /// the caller can retry later.
+    QueueFull(Vec<i32>),
+    /// The request's worst-case KV footprint exceeds the whole paged
+    /// block pool — it can NEVER be admitted, at any load.
+    TooLarge {
+        blocks_needed: usize,
+        pool_blocks: usize,
+    },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull(_) => write!(f, "queue full (backpressure)"),
+            SubmitError::TooLarge {
+                blocks_needed,
+                pool_blocks,
+            } => write!(
+                f,
+                "request needs {blocks_needed} KV blocks but the pool holds \
+                 {pool_blocks} (raise --kv-blocks or shrink the prompt/max_new)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// Session scheduler over one `SchedulerCore`.
 pub struct Scheduler<C: SchedulerCore> {
     core: C,
@@ -223,13 +256,29 @@ impl<C: SchedulerCore> Scheduler<C> {
         &mut self.core
     }
 
-    /// Queue a request; returns its id, or the prompt back when the
-    /// queue is full (backpressure).
+    /// Queue a request; returns its id, or a `SubmitError` saying why
+    /// it was refused. An oversized request — one whose worst-case KV
+    /// footprint `blocks_for(prompt + max_new)` exceeds the WHOLE block
+    /// pool — is rejected here, at submit time: sharing never shrinks a
+    /// session's total footprint (shared blocks are still resident
+    /// blocks), so it could never be admitted, and surfacing it from
+    /// `tick` would read as an engine fault that aborts every
+    /// concurrent session instead of just this one.
     pub fn submit(
         &mut self,
         prompt: Vec<i32>,
         max_new: usize,
-    ) -> std::result::Result<u64, Vec<i32>> {
+    ) -> std::result::Result<u64, SubmitError> {
+        if let Some(cfg) = &self.paged_cfg {
+            let tokens = prompt.len() + max_new;
+            let need = tokens.saturating_add(cfg.block_size - 1) / cfg.block_size;
+            if need > cfg.total_blocks {
+                return Err(SubmitError::TooLarge {
+                    blocks_needed: need,
+                    pool_blocks: cfg.total_blocks,
+                });
+            }
+        }
         let id = self.next_id;
         let req = AdmitReq {
             id,
@@ -242,7 +291,7 @@ impl<C: SchedulerCore> Scheduler<C> {
                 self.next_id += 1;
                 Ok(id)
             }
-            Err(req) => Err(req.prompt),
+            Err(req) => Err(SubmitError::QueueFull(req.prompt)),
         }
     }
 
@@ -309,7 +358,11 @@ impl<C: SchedulerCore> Scheduler<C> {
                         self.batcher.requeue_front_at(req, at);
                     }
                     // A shed with NO live reservation can never succeed:
-                    // the request alone outsizes the pool.
+                    // the request alone outsizes the pool. `submit`
+                    // already rejects such requests (`SubmitError::
+                    // TooLarge`), so this is a backstop invariant — a
+                    // queued request that trips it means the admission
+                    // accounting itself is broken.
                     if let Some(kv) = self.paged.as_ref() {
                         anyhow::ensure!(
                             shed_at > 0 || kv.sessions() > 0,
@@ -376,17 +429,29 @@ impl<C: SchedulerCore> Scheduler<C> {
             }
             let free = active.slots.capacity() - active.slots.occupied();
             if free > 0 {
-                for req in self.batcher.take(free) {
-                    // Join pressure load-shed: if the pool cannot
-                    // reserve this join's footprint it waits at the
-                    // queue front (live block tables stay untouched —
-                    // reservation is all-or-nothing) until a finishing
-                    // session or an eviction frees blocks.
-                    if !Self::reserve_kv(&mut self.paged, &mut self.metrics, &req) {
-                        let at = req.enqueued;
-                        self.batcher.requeue_front_at(req, at);
+                // Join pressure load-shed, mirroring the bootstrap
+                // path: reserve in FIFO order; the first request whose
+                // footprint the pool cannot cover waits at the queue
+                // front TOGETHER with everything taken behind it
+                // (order and queue age preserved — a shed must never
+                // drop the rest of the taken batch) until a finishing
+                // session or an eviction frees blocks. Live block
+                // tables stay untouched: reservation is all-or-nothing.
+                let mut reqs = self.batcher.take(free);
+                let mut shed_at = reqs.len();
+                for (i, r) in reqs.iter().enumerate() {
+                    if !Self::reserve_kv(&mut self.paged, &mut self.metrics, r) {
+                        shed_at = i;
                         break;
                     }
+                }
+                if shed_at < reqs.len() {
+                    for req in reqs.drain(shed_at..).rev() {
+                        let at = req.enqueued;
+                        self.batcher.requeue_front_at(req, at);
+                    }
+                }
+                for req in reqs {
                     let row = active.slots.alloc(req.id).expect("free slot disappeared");
                     self.core.join(&mut active.group, row, &req)?;
                     active.stuck_cap = active.stuck_cap.max(4 * req.max_new as u64 + 32);
@@ -936,7 +1001,7 @@ mod tests {
         s.submit(vec![1, 2], 4).unwrap();
         s.submit(vec![3, 4], 4).unwrap();
         let rejected = s.submit(vec![5, 6], 4);
-        assert_eq!(rejected, Err(vec![5, 6]));
+        assert_eq!(rejected, Err(SubmitError::QueueFull(vec![5, 6])));
         // The queue drains normally afterwards.
         let out = drain(&mut s, 1000);
         assert_eq!(out.len(), 2);
@@ -1272,19 +1337,62 @@ mod tests {
         }
     }
 
-    /// A request whose worst-case footprint exceeds the WHOLE pool can
-    /// never be admitted — the scheduler must fail loudly instead of
-    /// re-queueing it forever.
+    /// Regression: a join-path shed must requeue the shed request AND
+    /// everything taken behind it. Take returns [B, C]; B's footprint
+    /// sheds — C must go back to the queue (it used to be silently
+    /// dropped, its reply channel lost) and be served later.
     #[test]
-    fn oversized_request_fails_loudly() {
+    fn join_shed_requeues_requests_taken_behind_it() {
+        let mut s = Scheduler::new(sim(), cfg(64)).with_paged_kv(paged_cfg(16));
+        // id 0: long tail, blocks_for(2 + 24) = 7 blocks at bs = 4.
+        s.submit(vec![9, 4], 24).unwrap();
+        // ids 1..3: short, 1 block each (2-token prompts publish no
+        // cache chunks, so nothing is evictable later).
+        for p in 0..3 {
+            s.submit(vec![10 + p, 2], 2).unwrap();
+        }
+        // Run until the three shorts retire: 3 free slots, 9 free
+        // blocks, id 0 still decoding.
+        let mut done = Vec::new();
+        let mut ticks = 0;
+        while done.len() < 3 {
+            done.extend(s.tick(Instant::now()).unwrap());
+            ticks += 1;
+            assert!(ticks < 1000);
+        }
+        // id 4 (B) needs blocks_for(4 + 40) = 11 > 9 free -> join shed;
+        // id 5 (C) needs 1 block and is taken in the same batch.
+        s.submit(vec![7, 7, 7, 7], 40).unwrap();
+        s.submit(vec![8, 8], 2).unwrap();
+        done.extend(drain(&mut s, 10_000));
+        assert!(s.metrics.kv_sheds >= 1, "B must shed at least once");
+        let mut ids: Vec<u64> = done.iter().map(|(id, _)| *id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5], "no taken request may be dropped");
+    }
+
+    /// A request whose worst-case footprint exceeds the WHOLE pool can
+    /// never be admitted — it is rejected per-request at SUBMIT time
+    /// (not surfaced from `tick` as an engine fault, which would abort
+    /// every concurrent session), and the scheduler keeps serving.
+    #[test]
+    fn oversized_request_rejected_at_submit() {
         let mut s = Scheduler::new(sim(), cfg(64)).with_paged_kv(paged_cfg(2));
         // Needs blocks_for(40 + 40) = 20 blocks; the pool holds 2.
-        s.submit((0..40).collect(), 40).unwrap();
-        let err = s.tick(Instant::now()).expect_err("admission must error");
-        assert!(
-            err.to_string().contains("KV blocks"),
-            "unexpected error: {err}"
+        let err = s.submit((0..40).collect(), 40).unwrap_err();
+        assert_eq!(
+            err,
+            SubmitError::TooLarge {
+                blocks_needed: 20,
+                pool_blocks: 2
+            }
         );
+        assert!(err.to_string().contains("KV blocks"), "got: {err}");
+        // Nothing was queued; a normal-sized request is unaffected.
+        assert!(s.is_idle());
+        s.submit(vec![1, 2], 4).unwrap();
+        let out = drain(&mut s, 1000);
+        assert_eq!(out.len(), 1);
     }
 
     /// `reset` rebuilds the pool from the stored config: no stale block

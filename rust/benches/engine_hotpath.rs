@@ -20,7 +20,7 @@ use lk_spec::server::metrics::{
     recurrent_tree_device_bytes_per_round, recurrent_tree_host_bytes_per_round,
     tree_device_bytes_per_round, tree_host_bytes_per_round,
 };
-use lk_spec::server::{DownshiftConfig, Scheduler, SimCore};
+use lk_spec::server::{DownshiftConfig, FaultConfig, FaultPlan, Scheduler, SimCore};
 use lk_spec::spec::adaptive::{ControllerCfg, CostModel, SpecController};
 use lk_spec::tensor::HostTensor;
 use lk_spec::train::RunDirs;
@@ -355,6 +355,140 @@ fn bench_speculation_controller(json: &mut JsonRows) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// §Chaos smoke (DESIGN.md §9): one serving run per fault class on the
+/// SimCore + FaultPlan harness — sessions lost, rounds, retry counts,
+/// and (after an engine-fatal) rounds until a fresh probe request
+/// completes against the reset scheduler. PJRT-free, always runs; the
+/// ensure! guards turn the containment contract into a CI tripwire:
+/// transient loses ZERO sessions, session-fatal loses exactly ONE.
+fn bench_chaos_smoke(json: &mut JsonRows) -> anyhow::Result<()> {
+    const SESSIONS: usize = 8;
+    const MAX_NEW: usize = 16;
+    struct ChaosRun {
+        lost: usize,
+        faults_injected: u64,
+        rounds: u64,
+        transient_retries: u64,
+        rounds_to_recover: u64,
+    }
+    let run = |plan: FaultPlan| -> anyhow::Result<ChaosRun> {
+        let cfg = BatcherConfig {
+            buckets: vec![1, 4],
+            max_wait: std::time::Duration::ZERO,
+            queue_cap: 64,
+        };
+        let mut sched = Scheduler::new(
+            SimCore::new(4, 0xC4A0, vec![1, 4]).with_fault_plan(plan),
+            cfg,
+        )
+        .with_fault_config(FaultConfig {
+            transient_retries: 3,
+            backoff: std::time::Duration::ZERO,
+        })
+        .with_paged_kv(PagedKvConfig {
+            block_size: 16,
+            total_blocks: 64,
+            prefix_cache: true,
+        });
+        for i in 0..SESSIONS {
+            sched
+                .submit(vec![i as i32 + 1, 2], MAX_NEW)
+                .map_err(|e| anyhow::anyhow!("chaos submit: {e}"))?;
+        }
+        let (mut served, mut lost) = (0usize, 0usize);
+        let mut rounds_to_recover = 0u64;
+        let mut ticks = 0usize;
+        while served + lost < SESSIONS {
+            match sched.tick(Instant::now()) {
+                Ok(done) => {
+                    served += done.len();
+                    lost += sched.take_failures().len();
+                }
+                Err(_) => {
+                    // Engine-fatal: everything in flight or queued is
+                    // lost; reset rebuilds the paged pool, then a probe
+                    // request pins the recovery claim.
+                    lost += sched.in_flight() + sched.pending();
+                    sched.reset();
+                    sched
+                        .submit(vec![42, 2], 4)
+                        .map_err(|e| anyhow::anyhow!("probe submit: {e}"))?;
+                    loop {
+                        let done = sched.tick(Instant::now())?;
+                        rounds_to_recover += 1;
+                        if !done.is_empty() {
+                            break;
+                        }
+                        anyhow::ensure!(
+                            rounds_to_recover < 1000,
+                            "probe did not complete after reset"
+                        );
+                    }
+                }
+            }
+            ticks += 1;
+            anyhow::ensure!(ticks < 100_000, "chaos run did not converge");
+        }
+        Ok(ChaosRun {
+            lost,
+            faults_injected: sched.core().faults_injected,
+            rounds: sched.metrics.rounds,
+            transient_retries: sched.metrics.transient_retries,
+            rounds_to_recover,
+        })
+    };
+
+    let mut table = Table::new(
+        "Chaos smoke — fault containment per class (SimCore + FaultPlan, 8 sessions)",
+        &["fault class", "lost", "injected", "rounds", "retries", "rounds to recover"],
+    );
+    for (name, plan) in [
+        ("none", FaultPlan::default()),
+        ("transient", FaultPlan::default().transient_at(2, 2)),
+        ("session_fatal", FaultPlan::default().session_fatal_at(2, 1)),
+        ("engine_fatal", FaultPlan::default().engine_fatal_at(2)),
+    ] {
+        let r = run(plan)?;
+        table.row(vec![
+            name.to_string(),
+            r.lost.to_string(),
+            r.faults_injected.to_string(),
+            r.rounds.to_string(),
+            r.transient_retries.to_string(),
+            r.rounds_to_recover.to_string(),
+        ]);
+        json.push(vec![
+            ("bench", Json::Str("chaos_smoke".into())),
+            ("config", Json::Str(format!("{name} sessions={SESSIONS}"))),
+            ("sessions", Json::Num(SESSIONS as f64)),
+            ("sessions_lost", Json::Num(r.lost as f64)),
+            ("faults_injected", Json::Num(r.faults_injected as f64)),
+            ("rounds", Json::Num(r.rounds as f64)),
+            ("transient_retries", Json::Num(r.transient_retries as f64)),
+            ("rounds_to_recover", Json::Num(r.rounds_to_recover as f64)),
+        ]);
+        // The containment contract as a tripwire, not just a report.
+        match name {
+            "none" | "transient" => anyhow::ensure!(
+                r.lost == 0,
+                "{name}: {} sessions lost, contract says zero",
+                r.lost
+            ),
+            "session_fatal" => anyhow::ensure!(
+                r.lost == 1,
+                "session_fatal: {} sessions lost, contract says exactly one",
+                r.lost
+            ),
+            _ => anyhow::ensure!(
+                r.rounds_to_recover >= 1,
+                "engine_fatal: recovery probe never ran"
+            ),
+        }
+    }
+    table.emit("chaos_smoke")?;
+    Ok(())
+}
+
 /// Steady-state device→host transfer per decode round, host vs device
 /// verify path, from the closed forms in `server::metrics` at the
 /// manifest's own dims (512 vocab, Vt=8, 3d=288 features). Always runs —
@@ -502,6 +636,7 @@ fn run_sections(json: &mut JsonRows) -> anyhow::Result<()> {
     bench_paged_kv_capacity(json)?;
     bench_kv_migration_analytic(json)?;
     bench_speculation_controller(json)?;
+    bench_chaos_smoke(json)?;
     bench_verify_transfer(json)?;
     if !Path::new("artifacts/manifest.json").exists() {
         skip("artifacts missing");

@@ -73,7 +73,10 @@ fn print_help() {
                          --draft-cost C tune the controller).\n\
                          Paged KV: --kv-blocks N (pool budget, default 256),\n\
                          --kv-block-size N (tokens/block, default 16),\n\
-                         --no-prefix-cache (disable cross-session sharing)\n\
+                         --no-prefix-cache (disable cross-session sharing).\n\
+                         Robustness: --deadline-ms N (per-request latency\n\
+                         budget; expired requests are shed with a typed\n\
+                         verdict, 0 = off); shutdown drains gracefully\n\
            report        print cached result cells\n\
          \n\
          common options: --artifacts DIR (default artifacts), --runs DIR\n\
@@ -311,6 +314,11 @@ fn serve_demo(args: &Args) -> Result<()> {
     let loss = args.opt_or("loss", "lkl-eta3").to_string();
     let n_requests = args.opt_usize("requests", 12)?;
     let max_new = args.opt_usize("max-new", 32)?;
+    // Per-request latency budget, measured from submission: past it the
+    // request is shed (queued or mid-flight) with a typed
+    // `deadline exceeded` verdict instead of being served late. 0 (the
+    // default) disables deadlines.
+    let deadline_ms = args.opt_u64("deadline-ms", 0)?;
     // The speculation controller is on by default; --spec-k and
     // --tree FxF are FIXED overrides (see DESIGN.md §4a). --tree auto
     // keeps tree decoding but lets the controller plan the topology
@@ -409,7 +417,11 @@ fn serve_demo(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let receivers: Vec<_> = prompts
         .iter()
-        .map(|p| router.submit(p.clone(), max_new))
+        .map(|p| {
+            let deadline = (deadline_ms > 0)
+                .then(|| std::time::Instant::now() + std::time::Duration::from_millis(deadline_ms));
+            router.submit_with(p.clone(), max_new, deadline).map(|s| s.rx)
+        })
         .collect::<Result<_>>()?;
     let mut total_tokens = 0usize;
     let mut taus = Vec::new();

@@ -129,6 +129,36 @@ impl<T> Batcher<T> {
     pub fn requeue_front_at(&mut self, payload: T, enqueued: Instant) {
         self.queue.push_front(Pending { payload, enqueued });
     }
+
+    /// Remove every queued request matching `pred`, returning the
+    /// removed payloads in queue order. Survivors keep their position
+    /// AND their original enqueue stamps (their queue age keeps
+    /// accruing). This is the deadline/cancel shed path: an expired or
+    /// cancelled request leaves the queue before any group formation or
+    /// paged-KV reservation is spent on it.
+    pub fn drain_where(&mut self, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut removed = Vec::new();
+        for p in std::mem::take(&mut self.queue) {
+            if pred(&p.payload) {
+                removed.push(p.payload);
+            } else {
+                self.queue.push_back(p);
+            }
+        }
+        removed
+    }
+
+    /// Pop up to one max-bucket of queued requests immediately,
+    /// ignoring the full/stale policy — the graceful-drain path: a
+    /// draining scheduler flushes the work it already accepted instead
+    /// of waiting out `max_wait` for stragglers that will never arrive.
+    pub fn flush_group(&mut self) -> Option<Vec<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let n = self.queue.len().min(self.max_bucket());
+        Some(self.queue.drain(..n).map(|p| p.payload).collect())
+    }
 }
 
 #[cfg(test)]
@@ -231,6 +261,46 @@ mod tests {
         assert_eq!(b.next_group(Instant::now()), Some(vec![7]));
         b.requeue_front(8); // fresh stamp -> must wait again
         assert!(b.next_group(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn drain_where_sheds_matches_and_keeps_survivor_age() {
+        let mut b = Batcher::new(BatcherConfig {
+            buckets: vec![4],
+            max_wait: Duration::from_millis(1),
+            queue_cap: 8,
+        });
+        let old = Instant::now() - Duration::from_millis(50);
+        b.requeue_front_at(3, old); // stale survivor
+        b.requeue_front_at(2, old); // stale shed target
+        b.requeue_front_at(1, old); // stale survivor
+        // Shed the "expired" request only; order of the rest holds.
+        assert_eq!(b.drain_where(|&x| x == 2), vec![2]);
+        assert_eq!(b.len(), 2);
+        // Survivors kept their stale stamps: they flush immediately
+        // instead of waiting out max_wait again.
+        assert_eq!(b.next_group(Instant::now()), Some(vec![1, 3]));
+        // Nothing queued -> nothing shed.
+        assert!(b.drain_where(|_| true).is_empty());
+    }
+
+    #[test]
+    fn flush_group_bypasses_wait_policy() {
+        let mut b = Batcher::new(cfg(10_000)); // long max_wait
+        for i in 0..5 {
+            if i < 4 {
+                b.push(i).unwrap();
+            } else {
+                b.requeue_front_at(i, Instant::now()); // over cap via requeue
+            }
+        }
+        // The group policy would dispatch a full bucket, so drop to a
+        // partial queue first.
+        assert_eq!(b.flush_group(), Some(vec![4, 0, 1, 2]));
+        // Partial + not stale: next_group waits, flush does not.
+        assert!(b.next_group(Instant::now()).is_none());
+        assert_eq!(b.flush_group(), Some(vec![3]));
+        assert_eq!(b.flush_group(), None);
     }
 
     #[test]

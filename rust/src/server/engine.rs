@@ -55,7 +55,7 @@
 //! eval protocol uses). See DESIGN.md §4a for the precise contract and
 //! its impossibility boundary.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -73,6 +73,7 @@ use super::backend::{
     upload, upload_params, DraftBackend, EngineCx, GroupState, KvSide, QFlat, SeqState,
     DUMMY_UNIFORM, TKV_BATCH_AXIS,
 };
+use super::fault::EngineError;
 use super::metrics::EngineMetrics;
 use super::scheduler::{AdmitReq, SchedulerCore};
 
@@ -83,6 +84,39 @@ const PAD_STREAM_BASE: u64 = 0x7add_0000_0000_0000;
 /// Per-request RNG: one independent PCG stream per stable request id.
 pub fn request_rng(seed: u64, request_id: u64) -> Pcg64 {
     Pcg64::new(seed, 1 + request_id)
+}
+
+/// In-place retries for one device execute before the caller's fault
+/// policy (degrade, or give up) kicks in.
+const EXEC_RETRIES: u32 = 2;
+/// Linear backoff unit between execute retries (attempt n sleeps n×this).
+const EXEC_BACKOFF: Duration = Duration::from_millis(2);
+
+/// Run one device execute with bounded in-place retries. Safe wherever
+/// the closure consumes nothing (uploads + `run_bufs` over borrowed
+/// args): a failed attempt leaves no partial state, so replaying it is
+/// exact. Every FAILED attempt counts into `metrics.transient_faults`;
+/// after `EXEC_RETRIES` retries the last error is returned and the
+/// caller decides the blast radius (degrade to host verify, or
+/// engine-fatal).
+fn exec_with_retry<T>(
+    metrics: &mut EngineMetrics,
+    mut run: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let mut attempt = 0u32;
+    loop {
+        match run() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                metrics.transient_faults += 1;
+                if attempt >= EXEC_RETRIES {
+                    return Err(e);
+                }
+                attempt += 1;
+                std::thread::sleep(EXEC_BACKOFF * attempt);
+            }
+        }
+    }
 }
 
 /// Verify-path preference. `Auto` resolves to the device path when the
@@ -483,9 +517,16 @@ impl<'rt> SpecEngine<'rt> {
             lit_i32(&[b, sp], &tok_flat)?,
             lit_scalar_i32(lens[0] as i32)?,
         ];
-        let dyn_b = upload(self.cx.rt, &dyn_in)?;
-        let args = arg_refs(&self.cx.tparams, &[], &dyn_b);
-        let outs = prefill.run_bufs(&args)?;
+        // No group state exists yet: a prefill blip retries in place,
+        // and past the budget the scheduler's bootstrap containment
+        // decides the blast radius.
+        let rt = self.cx.rt;
+        let tparams = &self.cx.tparams;
+        let outs = exec_with_retry(&mut self.metrics, || {
+            let dyn_b = upload(rt, &dyn_in)?;
+            let args = arg_refs(tparams, &[], &dyn_b);
+            prefill.run_bufs(&args)
+        })?;
         let logits = prefill.output_host(&outs, 0)?;
         let feats = prefill.output_host(&outs, 2)?;
         let tkv_spec = prefill.spec.outputs[1].clone();
@@ -648,9 +689,17 @@ impl<'rt> SpecEngine<'rt> {
         let pos: Vec<i32> = g.seqs.iter().map(|s| s.len as i32).collect();
         let tkv = std::mem::replace(&mut g.tkv, lit_scalar_i32(0)?); // placeholder
         let dyn_in = [tkv, lit_i32(&[b, vt], &vtok)?, lit_i32(&[b], &pos)?];
-        let dyn_b = upload(self.cx.rt, &dyn_in)?;
-        let args = arg_refs(&self.cx.tparams, &[], &dyn_b);
-        let outs = verify.run_bufs(&args)?;
+        // Host verify is the degradation FLOOR: retry the execute in
+        // place (no observable state has mutated yet — the uniforms are
+        // drawn after it), and past the budget give up untyped
+        // (= engine-fatal); there is no slower path left to degrade to.
+        let rt = self.cx.rt;
+        let tparams = &self.cx.tparams;
+        let outs = exec_with_retry(&mut self.metrics, || {
+            let dyn_b = upload(rt, &dyn_in)?;
+            let args = arg_refs(tparams, &[], &dyn_b);
+            verify.run_bufs(&args)
+        })?;
         let logits = verify.output_host(&outs, 0)?; // [B, vt, V]
         let feats = verify.output_host(&outs, 2)?; // [B, vt, 3d]
         g.tkv = outs.into_iter().nth(1).unwrap();
@@ -720,6 +769,11 @@ impl<'rt> SpecEngine<'rt> {
             }
         }
         let pos: Vec<i32> = g.seqs.iter().map(|s| s.len as i32).collect();
+        // Snapshot the RNG streams before the uniform draws: if the
+        // fused execute fails past its retry budget the restore below
+        // un-happens the round, so the degraded retry replays the
+        // identical sample path on the host.
+        let rng_snap: Vec<Pcg64> = g.seqs.iter().map(|s| s.rng.clone()).collect();
         // The SAME fixed-count uniforms the host path would draw; done
         // rows draw nothing and get inert constants.
         let mut u_acc = vec![DUMMY_UNIFORM; b * kq];
@@ -749,18 +803,46 @@ impl<'rt> SpecEngine<'rt> {
             lit_scalar_i32(mode.device_code())?,
             lit_scalar_i32(k as i32)?,
         ];
-        let mut dyn_b = upload(self.cx.rt, &head)?;
-        // Positions beyond this round's chain are masked in-graph by
-        // k_active; the cached zero literal just fills the lowered arity.
         if k < kq && !self.zero_q.contains_key(&b) {
             self.zero_q.insert(b, lit_zeros_f32(&[b, vocab])?);
         }
-        for _ in k..kq {
-            dyn_b.push(self.cx.rt.to_buffer(&self.zero_q[&b])?);
-        }
-        dyn_b.extend(upload(self.cx.rt, &tail)?);
-        let args = arg_refs(&self.cx.tparams, &[], &dyn_b);
-        let outs = verify.run_bufs(&args)?;
+        let rt = self.cx.rt;
+        let tparams = &self.cx.tparams;
+        let zero_q = &self.zero_q;
+        let exec = exec_with_retry(&mut self.metrics, || {
+            let mut dyn_b = upload(rt, &head)?;
+            // Positions beyond this round's chain are masked in-graph by
+            // k_active; the cached zero literal just fills the lowered
+            // arity.
+            for _ in k..kq {
+                dyn_b.push(rt.to_buffer(&zero_q[&b])?);
+            }
+            dyn_b.extend(upload(rt, &tail)?);
+            let args = arg_refs(tparams, &[], &dyn_b);
+            verify.run_bufs(&args)
+        });
+        let outs = match exec {
+            Ok(outs) => outs,
+            Err(e) => {
+                // The fused path exhausted its in-place retries:
+                // un-happen the round (the target KV never left `head`,
+                // the RNG streams restore from the snapshot) and degrade
+                // this engine to host verify. The typed transient fault
+                // makes the scheduler re-run the round, which now
+                // dispatches to the host path and replays the same
+                // sample path.
+                g.tkv = head.swap_remove(0);
+                for (seq, rng) in g.seqs.iter_mut().zip(rng_snap) {
+                    seq.rng = rng;
+                }
+                self.cx.device_verify = false;
+                self.metrics.verify_degrades += 1;
+                self.metrics.verify_path = "host";
+                return Err(EngineError::transient(format!(
+                    "device verify failed; group degraded to host verify: {e:#}"
+                )));
+            }
+        };
         // Only the verdict integers are materialized host-side.
         let n_acc_host = verify.output_host(&outs, 0)?.as_i32(); // [B]
         let toks_host = verify.output_host(&outs, 1)?.as_i32(); // [B, vt]
@@ -834,9 +916,16 @@ impl<'rt> SpecEngine<'rt> {
             lit_i32(&[b], &pos)?,
             lit_i32(&[vt], &tree.block_parents(vt))?,
         ];
-        let dyn_b = upload(self.cx.rt, &dyn_in)?;
-        let args = arg_refs(&self.cx.tparams, &[], &dyn_b);
-        let outs = verify.run_bufs(&args)?;
+        // Degradation floor, as in the chain host round: retry in place
+        // (the rejection walk and its draws come after), then give up
+        // untyped (= engine-fatal).
+        let rt = self.cx.rt;
+        let tparams = &self.cx.tparams;
+        let outs = exec_with_retry(&mut self.metrics, || {
+            let dyn_b = upload(rt, &dyn_in)?;
+            let args = arg_refs(tparams, &[], &dyn_b);
+            verify.run_bufs(&args)
+        })?;
         let logits = verify.output_host(&outs, 0)?; // [B, vt, V]
         let feats = verify.output_host(&outs, 2)?; // [B, vt, 3d]
         g.tkv = outs.into_iter().nth(1).unwrap();
@@ -901,9 +990,17 @@ impl<'rt> SpecEngine<'rt> {
             lit_i32(&[b, kq], &sel)?,
             lit_i32(&[b], &dst0)?,
         ];
-        let splice_b = upload(self.cx.rt, &splice_in)?;
-        let splice_refs: Vec<&xla::PjRtBuffer> = splice_b.iter().collect();
-        let outs = gather.run_bufs(&splice_refs)?;
+        // The verdicts above already advanced every sequence, so this
+        // splice CANNOT be un-happened: retry it in place, and past the
+        // budget the failure stays untyped (= engine-fatal) — never a
+        // transient, which would replay the round on top of mutated
+        // state.
+        let rt = self.cx.rt;
+        let outs = exec_with_retry(&mut self.metrics, || {
+            let splice_b = upload(rt, &splice_in)?;
+            let splice_refs: Vec<&xla::PjRtBuffer> = splice_b.iter().collect();
+            gather.run_bufs(&splice_refs)
+        })?;
         g.tkv = outs.into_iter().next().unwrap();
 
         // --- 5. advance draft state (backend-specific; stateful tree
@@ -944,6 +1041,9 @@ impl<'rt> SpecEngine<'rt> {
             }
         }
         let pos: Vec<i32> = g.seqs.iter().map(|s| s.len as i32).collect();
+        // RNG snapshot before the draws — the degrade path below
+        // un-happens the round; see `decode_round_device`.
+        let rng_snap: Vec<Pcg64> = g.seqs.iter().map(|s| s.rng.clone()).collect();
         // The SAME fixed-count uniforms the host walk would draw (one
         // accept per node + one sample); done rows get inert constants.
         let mut u_acc = vec![DUMMY_UNIFORM; b * kq];
@@ -978,10 +1078,33 @@ impl<'rt> SpecEngine<'rt> {
             lit_scalar_i32(mode.device_code())?,
             lit_scalar_i32(n as i32)?,
         ];
-        let mut dyn_b = upload(self.cx.rt, &head)?;
-        dyn_b.extend(upload(self.cx.rt, &tail)?);
-        let args = arg_refs(&self.cx.tparams, &[], &dyn_b);
-        let outs = verify.run_bufs(&args)?;
+        let rt = self.cx.rt;
+        let tparams = &self.cx.tparams;
+        let exec = exec_with_retry(&mut self.metrics, || {
+            let mut dyn_b = upload(rt, &head)?;
+            dyn_b.extend(upload(rt, &tail)?);
+            let args = arg_refs(tparams, &[], &dyn_b);
+            verify.run_bufs(&args)
+        });
+        let outs = match exec {
+            Ok(outs) => outs,
+            Err(e) => {
+                // Un-happen the round and degrade to the host tree
+                // round, exactly as in `decode_round_device`: the
+                // transient verdict makes the scheduler replay the
+                // round on the host path with the restored streams.
+                g.tkv = head.swap_remove(0);
+                for (seq, rng) in g.seqs.iter_mut().zip(rng_snap) {
+                    seq.rng = rng;
+                }
+                self.cx.device_verify = false;
+                self.metrics.verify_degrades += 1;
+                self.metrics.verify_path = "host";
+                return Err(EngineError::transient(format!(
+                    "device tree verify failed; group degraded to host verify: {e:#}"
+                )));
+            }
+        };
         // Only the verdict integers are materialized host-side. The
         // accepted-path node indices (`[B, Vt-1]`, first `n` slots
         // live) ride along ONLY for stateful backends, which build
@@ -1073,6 +1196,7 @@ impl<'rt> SpecEngine<'rt> {
                 prompt: p.clone(),
                 max_new: *max_new,
                 enqueued: now,
+                deadline: None,
             })
             .collect();
         self.next_req_id += requests.len() as u64;
@@ -1209,6 +1333,17 @@ impl<'rt> SchedulerCore for SpecEngine<'rt> {
         self.cx.bucket(n)
     }
 
+    /// Reject malformed prompts at SUBMIT time, with the same bounds
+    /// `bootstrap_group` enforces — a bad request must bounce off the
+    /// front door instead of engine-fataling the group it lands in.
+    fn validate(&self, prompt: &[i32], _max_new: usize) -> std::result::Result<(), String> {
+        let sp = self.cx.rt.manifest.prompt_len;
+        if prompt.len() < 2 || prompt.len() > sp {
+            return Err(format!("prompt length {} not in 2..={sp}", prompt.len()));
+        }
+        Ok(())
+    }
+
     fn bootstrap(&mut self, reqs: &[AdmitReq]) -> Result<GroupState> {
         // Scheduler-assigned ids are authoritative; keep the engine's own
         // counter ahead of them so lockstep calls never reuse a stream.
@@ -1333,6 +1468,18 @@ impl<'rt> SchedulerCore for SpecEngine<'rt> {
 
     fn row_done(&self, g: &GroupState, row: usize) -> bool {
         g.seqs[row].done
+    }
+
+    /// Turn `row` into inert padding mid-flight (cancellation, deadline
+    /// expiry, session-fatal containment): the row keeps decoding as a
+    /// pad stream — the executables' batch shape must stay full — but
+    /// no session state survives in it and a join can replace it.
+    fn evict(&mut self, g: &mut GroupState, row: usize) {
+        let seq = &mut g.seqs[row];
+        seq.id = PAD_STREAM_BASE + row as u64;
+        seq.done = true;
+        seq.max_new = 0;
+        seq.generated.clear();
     }
 
     fn take_result(&mut self, g: &mut GroupState, row: usize) -> RequestResult {

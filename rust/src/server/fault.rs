@@ -1,0 +1,237 @@
+//! Typed engine faults and per-request error verdicts — the failure
+//! model of the serving stack (DESIGN.md §9).
+//!
+//! The old contract was stringly: any `anyhow` error a core surfaced
+//! from a decode round aborted EVERY in-flight session and reset the
+//! engine. This module types the blast radius instead:
+//!
+//!   * [`FaultKind::Transient`]  — the round failed but group state is
+//!     intact (rounds are atomic on failure); retry with bounded
+//!     backoff, degrading device verify to the host path if it is the
+//!     device that keeps failing.
+//!   * [`FaultKind::SessionFatal`] — one session's state is gone; evict
+//!     only that row (slot + paged-KV blocks freed, typed reply).
+//!   * [`FaultKind::EngineFatal`] — the engine itself (device, caches,
+//!     artifacts) is unrecoverable; the router fails in-flight work,
+//!     resets, and keeps serving fresh groups.
+//!
+//! Cores keep returning `anyhow::Error` — an [`EngineError`] rides
+//! inside it and the scheduler recovers it by downcast. An error
+//! WITHOUT a typed fault classifies as `EngineFatal`: an unknown blast
+//! radius must be treated as the widest one.
+//!
+//! [`RequestError`] is the client-facing half: the typed verdict a
+//! request's reply channel carries when the request fails for any
+//! reason (backpressure, admission, faults, deadlines, cancellation,
+//! shutdown).
+
+use std::fmt;
+
+use super::scheduler::SubmitError;
+
+/// Blast radius of an engine fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The round failed but the group is intact; retry is safe.
+    Transient,
+    /// Exactly one session is unrecoverable; the rest of the group is
+    /// untouched.
+    SessionFatal,
+    /// The engine is unrecoverable; only this kind may reach the
+    /// router's fail-everything path.
+    EngineFatal,
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultKind::Transient => write!(f, "transient"),
+            FaultKind::SessionFatal => write!(f, "session-fatal"),
+            FaultKind::EngineFatal => write!(f, "engine-fatal"),
+        }
+    }
+}
+
+/// A typed engine fault, carried inside `anyhow::Error` so core
+/// signatures stay unchanged; the scheduler recovers it with
+/// [`EngineError::of`] / [`EngineError::classify`].
+#[derive(Clone, Debug)]
+pub struct EngineError {
+    pub kind: FaultKind,
+    /// The offending session for session-fatal faults. A session-fatal
+    /// fault WITHOUT a live session id cannot be contained and is
+    /// handled as engine-fatal.
+    pub session: Option<u64>,
+    pub msg: String,
+}
+
+impl EngineError {
+    pub fn transient(msg: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(EngineError {
+            kind: FaultKind::Transient,
+            session: None,
+            msg: msg.into(),
+        })
+    }
+
+    pub fn session_fatal(session: u64, msg: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(EngineError {
+            kind: FaultKind::SessionFatal,
+            session: Some(session),
+            msg: msg.into(),
+        })
+    }
+
+    pub fn engine_fatal(msg: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(EngineError {
+            kind: FaultKind::EngineFatal,
+            session: None,
+            msg: msg.into(),
+        })
+    }
+
+    /// The typed fault inside `err`, if any (walks the context chain).
+    pub fn of(err: &anyhow::Error) -> Option<&EngineError> {
+        err.downcast_ref::<EngineError>()
+    }
+
+    /// Blast radius of `err`. Untyped errors classify as
+    /// [`FaultKind::EngineFatal`]: an unknown radius is the widest one.
+    pub fn classify(err: &anyhow::Error) -> FaultKind {
+        Self::of(err).map_or(FaultKind::EngineFatal, |e| e.kind)
+    }
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.session {
+            Some(id) => write!(f, "{} fault (session {id}): {}", self.kind, self.msg),
+            None => write!(f, "{} fault: {}", self.kind, self.msg),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Client-facing request verdict: why a single request failed. This is
+/// what a router reply channel carries instead of an opaque string —
+/// callers can branch on the variant (retry on `QueueFull`, surface
+/// `DeadlineExceeded` as HTTP 504, …).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RequestError {
+    /// Backpressure: the bounded queue is full; retry later.
+    QueueFull,
+    /// Worst-case KV footprint exceeds the whole paged pool; the
+    /// request can never be admitted at any load.
+    TooLarge {
+        blocks_needed: usize,
+        pool_blocks: usize,
+    },
+    /// The core refused the request's shape (empty / overlong prompt).
+    Invalid(String),
+    /// The router is draining: accepted work is being finished, new
+    /// work is refused.
+    ShuttingDown,
+    /// A session-fatal engine fault killed this session; every other
+    /// session kept decoding.
+    SessionFault(String),
+    /// The request missed its deadline (shed queued or mid-flight).
+    DeadlineExceeded,
+    /// Cancelled via the router's `cancel` handle.
+    Cancelled,
+    /// An engine-fatal fault failed everything in flight; the engine
+    /// reset and keeps serving new requests.
+    EngineFault(String),
+    /// The engine never came up.
+    EngineInit(String),
+}
+
+impl From<SubmitError> for RequestError {
+    fn from(e: SubmitError) -> RequestError {
+        match e {
+            SubmitError::QueueFull(_) => RequestError::QueueFull,
+            SubmitError::TooLarge {
+                blocks_needed,
+                pool_blocks,
+            } => RequestError::TooLarge {
+                blocks_needed,
+                pool_blocks,
+            },
+            SubmitError::Invalid { reason } => RequestError::Invalid(reason),
+            SubmitError::Draining => RequestError::ShuttingDown,
+        }
+    }
+}
+
+impl fmt::Display for RequestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RequestError::QueueFull => write!(f, "queue full (backpressure)"),
+            RequestError::TooLarge {
+                blocks_needed,
+                pool_blocks,
+            } => write!(
+                f,
+                "request needs {blocks_needed} KV blocks but the pool holds \
+                 {pool_blocks} (raise --kv-blocks or shrink the prompt/max_new)"
+            ),
+            RequestError::Invalid(reason) => write!(f, "invalid request: {reason}"),
+            RequestError::ShuttingDown => write!(f, "router shutting down (drain)"),
+            RequestError::SessionFault(msg) => write!(f, "session fault: {msg}"),
+            RequestError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            RequestError::Cancelled => write!(f, "cancelled"),
+            RequestError::EngineFault(msg) => write!(f, "engine error: {msg}"),
+            RequestError::EngineInit(msg) => write!(f, "engine init failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_walks_the_context_chain() {
+        let e = EngineError::transient("watchdog reset");
+        assert_eq!(EngineError::classify(&e), FaultKind::Transient);
+        // Context wrapping must not erase the typed fault.
+        let wrapped = e.context("while verifying group");
+        assert_eq!(EngineError::classify(&wrapped), FaultKind::Transient);
+        assert!(EngineError::of(&wrapped).is_some());
+    }
+
+    #[test]
+    fn untyped_errors_are_engine_fatal() {
+        let e = anyhow::anyhow!("somebody forgot to type this");
+        assert_eq!(EngineError::classify(&e), FaultKind::EngineFatal);
+        assert!(EngineError::of(&e).is_none());
+    }
+
+    #[test]
+    fn session_fatal_names_the_session() {
+        let e = EngineError::session_fatal(42, "row NaN'd");
+        let ee = EngineError::of(&e).unwrap();
+        assert_eq!(ee.kind, FaultKind::SessionFatal);
+        assert_eq!(ee.session, Some(42));
+        assert!(e.to_string().contains("session 42"), "got: {e}");
+    }
+
+    #[test]
+    fn request_error_from_submit_error() {
+        assert_eq!(
+            RequestError::from(SubmitError::QueueFull(vec![1])),
+            RequestError::QueueFull
+        );
+        assert_eq!(
+            RequestError::from(SubmitError::Draining),
+            RequestError::ShuttingDown
+        );
+        let e = RequestError::from(SubmitError::TooLarge {
+            blocks_needed: 9,
+            pool_blocks: 4,
+        });
+        assert!(e.to_string().contains("KV blocks"));
+    }
+}

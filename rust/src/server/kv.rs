@@ -207,6 +207,11 @@ impl BlockPool {
         Some(id)
     }
 
+    // INVARIANT (unwrap audit, DESIGN.md §9): block ids are assigned by
+    // `alloc` and flow only through the pool's own tables — no request
+    // field ever names a block — so the refcount asserts below guard
+    // internal accounting bugs, not inputs. A malformed request cannot
+    // reach them.
     pub fn retain(&mut self, id: BlockId) {
         assert!(self.refcount[id] > 0, "retain of a free block {id}");
         self.refcount[id] += 1;
@@ -255,6 +260,14 @@ impl RadixNode {
 /// is gone. The `evictable` index keeps eviction O(log n) — admission
 /// under pool pressure can evict many times per reservation, so a full
 /// node scan per eviction would be a latency cliff at large pools.
+///
+/// INVARIANT (unwrap audit, DESIGN.md §9): node ids live only inside
+/// this structure — `roots`/`children` edges, session `shared_nodes`
+/// lists and the `evictable` index all point at slots this cache
+/// populated, and a slot is vacated (`take`) only when every edge to it
+/// is removed in the same call. The `self.nodes[id].as_ref().unwrap()`
+/// dereferences below are therefore unreachable from any request input,
+/// malformed or not.
 #[derive(Debug, Default)]
 pub struct RadixCache {
     nodes: Vec<Option<RadixNode>>,
@@ -500,6 +513,9 @@ impl PagedKv {
     /// published to the cache for later sessions. Returns the cached
     /// token count (block-aligned prefix served without prefill).
     pub fn admit(&mut self, id: u64, prompt: &[i32], max_new: usize) -> Result<usize, KvShed> {
+        // INVARIANT: session ids are scheduler-assigned (monotonic
+        // `next_id`), never client-chosen, so a double admit is a
+        // scheduler bug — not a state a malformed request can induce.
         assert!(
             !self.tables.contains_key(&id),
             "session {id} already admitted"

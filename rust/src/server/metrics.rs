@@ -55,6 +55,12 @@ pub struct EngineMetrics {
     /// KV bytes those migrations moved through the host — 0 on the
     /// device gather path; the gauge exists to PROVE it stays 0.
     pub migration_host_kv_bytes: u64,
+    /// Failed verify/gather execute attempts (each retried in place
+    /// before the round reports a transient fault; DESIGN.md §9).
+    pub transient_faults: u64,
+    /// Times the engine fell back from the fused device verify path to
+    /// host verify after exhausting execute retries.
+    pub verify_degrades: u64,
 }
 
 impl EngineMetrics {
@@ -173,6 +179,8 @@ impl EngineMetrics {
         line("tau_mean", self.tau.mean());
         line("bytes_to_host_total", self.bytes_to_host as f64);
         line("bytes_to_host_per_round", self.bytes_to_host_per_round());
+        line("transient_faults_total", self.transient_faults as f64);
+        line("verify_degrades_total", self.verify_degrades as f64);
         line("nodes_per_round", self.nodes_per_round());
         line("accepted_len_mean", self.mean_accepted_len());
         if self.migrations > 0 {
@@ -399,6 +407,22 @@ pub struct SchedulerMetrics {
     /// (the cache-hit prefix needs no prefill — its KV blocks exist).
     pub prefill_tokens: u64,
     pub prefill_tokens_saved: u64,
+    /// Fault containment (DESIGN.md §9): transient round retries …
+    pub transient_retries: u64,
+    /// … sessions evicted by session-fatal faults (bootstrap cohorts
+    /// and failed joins included) …
+    pub session_faults: u64,
+    /// … and full engine resets after an engine-fatal fault.
+    pub engine_resets: u64,
+    /// Requests shed for a missed deadline while still QUEUED (no
+    /// prefill or block reservation was spent on them) …
+    pub deadline_expired_queued: u64,
+    /// … and mid-flight (row evicted, slot + KV blocks released).
+    pub deadline_expired_inflight: u64,
+    /// Sessions cancelled via the cancel handle (queued or mid-flight).
+    pub cancelled: u64,
+    /// Graceful-drain state gauge (true while draining).
+    pub draining: bool,
 }
 
 impl SchedulerMetrics {
@@ -479,6 +503,19 @@ impl SchedulerMetrics {
         line("tokens_per_second", tps);
         line("kv_sheds_total", self.kv_sheds as f64);
         line("kv_evictions_total", self.kv_evictions as f64);
+        line("transient_retries_total", self.transient_retries as f64);
+        line("session_faults_total", self.session_faults as f64);
+        line("engine_resets_total", self.engine_resets as f64);
+        line(
+            "deadline_expired_queued",
+            self.deadline_expired_queued as f64,
+        );
+        line(
+            "deadline_expired_inflight",
+            self.deadline_expired_inflight as f64,
+        );
+        line("cancelled_total", self.cancelled as f64);
+        line("draining", if self.draining { 1.0 } else { 0.0 });
         line("prefill_tokens_total", self.prefill_tokens as f64);
         line(
             "prefill_tokens_saved_total",
@@ -737,6 +774,41 @@ mod tests {
         assert!(text.contains("lkspec_prefix_hit_rate{engine=\"e\"} 0.625"));
         assert!(text.contains("lkspec_sched_kv_sheds_total{engine=\"e\"} 2"));
         assert!(text.contains("lkspec_sched_kv_evictions_total{engine=\"e\"} 3"));
+    }
+
+    /// The fault/deadline/drain counters of DESIGN.md §9 render in both
+    /// namespaces (engine-side execute faults, scheduler-side verdicts).
+    #[test]
+    fn fault_and_drain_counters_render() {
+        let mut m = SchedulerMetrics {
+            transient_retries: 2,
+            session_faults: 1,
+            engine_resets: 1,
+            deadline_expired_queued: 3,
+            deadline_expired_inflight: 1,
+            cancelled: 2,
+            draining: true,
+            ..Default::default()
+        };
+        let text = m.render("e");
+        assert!(text.contains("lkspec_sched_transient_retries_total{engine=\"e\"} 2"));
+        assert!(text.contains("lkspec_sched_session_faults_total{engine=\"e\"} 1"));
+        assert!(text.contains("lkspec_sched_engine_resets_total{engine=\"e\"} 1"));
+        assert!(text.contains("lkspec_sched_deadline_expired_queued{engine=\"e\"} 3"));
+        assert!(text.contains("lkspec_sched_deadline_expired_inflight{engine=\"e\"} 1"));
+        assert!(text.contains("lkspec_sched_cancelled_total{engine=\"e\"} 2"));
+        assert!(text.contains("lkspec_sched_draining{engine=\"e\"} 1"));
+
+        let mut e = EngineMetrics {
+            transient_faults: 4,
+            verify_degrades: 1,
+            verify_path: "host",
+            ..Default::default()
+        };
+        let text = e.render("e");
+        assert!(text.contains("lkspec_transient_faults_total{engine=\"e\"} 4"));
+        assert!(text.contains("lkspec_verify_degrades_total{engine=\"e\"} 1"));
+        assert!(text.contains("lkspec_verify_path{engine=\"e\",path=\"host\"} 1"));
     }
 
     #[test]

@@ -11,6 +11,9 @@
 //!   * `engine`    — architecture-agnostic draft-then-verify decode loop,
 //!     exact rejection sampling via `spec::sampling`, vanilla
 //!     autoregressive baseline
+//!   * `fault`     — typed engine faults (`Transient` / `SessionFatal` /
+//!     `EngineFatal`) and client-facing request verdicts; the failure
+//!     model of DESIGN.md §9
 //!   * `batcher`   — request admission / bucket selection policy
 //!   * `scheduler` — continuous batching: decode groups as slot-mapped
 //!     sessions with mid-flight join/leave (one-row KV copies) and
@@ -25,6 +28,7 @@
 pub mod backend;
 pub mod batcher;
 pub mod engine;
+pub mod fault;
 pub mod kv;
 pub mod metrics;
 pub mod router;
@@ -32,6 +36,10 @@ pub mod scheduler;
 
 pub use backend::DraftBackend;
 pub use engine::{AdaptiveOpts, EngineOpts, RequestResult, SpecEngine, VerifyPath};
+pub use fault::{EngineError, FaultKind, RequestError};
 pub use kv::{PagedKv, PagedKvConfig};
-pub use router::{Router, RouterConfig};
-pub use scheduler::{AdmitReq, DownshiftConfig, Scheduler, SchedulerCore, SimCore, SubmitError};
+pub use router::{Router, RouterConfig, Submission};
+pub use scheduler::{
+    AdmitReq, DownshiftConfig, FaultConfig, FaultPlan, PlannedFault, Scheduler, SchedulerCore,
+    SimCore, SubmitError,
+};

@@ -10,10 +10,21 @@
 //! (admit / join / decode round / harvest), reply per finished session —
 //! results stream back as sessions finish, not when their group does.
 //!
+//! FAILURE MODEL (DESIGN.md §9). Every reply channel carries a typed
+//! `Result<RequestResult, RequestError>`: per-request refusals
+//! (backpressure, oversized, invalid, draining) and per-session faults
+//! (session-fatal eviction, deadline expiry, cancellation) fail ONLY
+//! their own request. A `tick` error is by contract ENGINE-FATAL — the
+//! worker fails everything in flight with `RequestError::EngineFault`,
+//! resets the scheduler (fresh paged-KV pool), and keeps serving.
+//! `shutdown`/`drain` are graceful: accepted work finishes, new submits
+//! get `RequestError::ShuttingDown`.
+//!
 //! tokio is unavailable offline (DESIGN.md §2); std threads + mpsc
 //! channels implement the same event-loop shape.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -22,13 +33,20 @@ use anyhow::{Context, Result};
 
 use super::batcher::BatcherConfig;
 use super::engine::RequestResult;
+use super::fault::RequestError;
 use super::kv::PagedKvConfig;
-use super::scheduler::{Scheduler, SchedulerCore};
+use super::scheduler::{FaultConfig, Scheduler, SchedulerCore};
+
+/// One reply: exactly one message per accepted submission.
+pub type Reply = std::result::Result<RequestResult, RequestError>;
 
 pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new: usize,
-    pub reply: mpsc::Sender<Result<RequestResult, String>>,
+    /// Absolute deadline; past it the request is shed (queued or
+    /// mid-flight) with a `DeadlineExceeded` verdict.
+    pub deadline: Option<Instant>,
+    pub reply: mpsc::Sender<Reply>,
 }
 
 #[derive(Clone, Debug)]
@@ -41,6 +59,9 @@ pub struct RouterConfig {
     /// identical prompt prefixes across sessions; `None` keeps the
     /// legacy unbounded slot-mapped admission.
     pub paged_kv: Option<PagedKvConfig>,
+    /// Transient-fault retry budget + backoff for the scheduler's
+    /// containment ladder.
+    pub fault: FaultConfig,
 }
 
 impl Default for RouterConfig {
@@ -49,19 +70,31 @@ impl Default for RouterConfig {
             batcher: BatcherConfig::default(),
             idle_poll: Duration::from_millis(1),
             paged_kv: Some(PagedKvConfig::default()),
+            fault: FaultConfig::default(),
         }
     }
 }
 
 enum Msg {
-    Submit(Request),
+    /// Ticket (router-level id, the `cancel` handle) + request.
+    Submit(u64, Request),
+    Cancel(u64),
     Shutdown,
 }
 
-/// Client handle; cheap to clone (multiple submitters).
+/// Handle for one accepted submission.
+pub struct Submission {
+    /// Router-level ticket — pass to [`Router::cancel`].
+    pub id: u64,
+    /// Carries exactly one [`Reply`].
+    pub rx: mpsc::Receiver<Reply>,
+}
+
+/// Client handle (multiple submitter threads may share it behind an Arc).
 pub struct Router {
     tx: mpsc::SyncSender<Msg>,
     worker: Option<JoinHandle<()>>,
+    next_ticket: AtomicU64,
 }
 
 impl Router {
@@ -83,49 +116,70 @@ impl Router {
                     Ok(c) => c,
                     Err(e) => {
                         // Drain & fail every request until shutdown.
-                        let msg = format!("engine init failed: {e:#}");
+                        let err = RequestError::EngineInit(format!("{e:#}"));
                         while let Ok(m) = rx.recv() {
                             match m {
-                                Msg::Submit(req) => {
-                                    let _ = req.reply.send(Err(msg.clone()));
+                                Msg::Submit(_, req) => {
+                                    let _ = req.reply.send(Err(err.clone()));
                                 }
+                                Msg::Cancel(_) => {}
                                 Msg::Shutdown => break,
                             }
                         }
                         return;
                     }
                 };
-                let mut sched = Scheduler::new(core, cfg.batcher.clone());
+                let mut sched =
+                    Scheduler::new(core, cfg.batcher.clone()).with_fault_config(cfg.fault);
                 if let Some(kv) = cfg.paged_kv {
                     sched = sched.with_paged_kv(kv);
                 }
-                let mut replies: HashMap<u64, mpsc::Sender<Result<RequestResult, String>>> =
-                    HashMap::new();
+                // ticket -> scheduler session id, and session id ->
+                // (ticket, reply channel); both purge on the verdict.
+                let mut tickets: HashMap<u64, u64> = HashMap::new();
+                let mut replies: HashMap<u64, (u64, mpsc::Sender<Reply>)> = HashMap::new();
                 let mut shutdown = false;
                 loop {
-                    // Admit what's queued (non-blocking drain).
+                    // Admit what's queued (non-blocking drain). Channel
+                    // order is FIFO, so a client that submits and then
+                    // cancels always finds its ticket mapped.
                     loop {
                         match rx.try_recv() {
-                            Ok(Msg::Submit(req)) => {
-                                match sched.submit(req.prompt, req.max_new) {
+                            Ok(Msg::Submit(ticket, req)) => {
+                                match sched.submit_with(req.prompt, req.max_new, req.deadline) {
                                     Ok(id) => {
-                                        replies.insert(id, req.reply);
+                                        tickets.insert(ticket, id);
+                                        replies.insert(id, (ticket, req.reply));
                                     }
-                                    // Per-request verdicts (queue full /
-                                    // oversized for the KV pool): fail
-                                    // ONLY this request — every other
-                                    // session keeps decoding.
+                                    // Per-request refusals (queue full /
+                                    // oversized / invalid / draining):
+                                    // fail ONLY this request — every
+                                    // other session keeps decoding.
                                     Err(e) => {
-                                        let _ = req.reply.send(Err(e.to_string()));
+                                        let _ = req.reply.send(Err(e.into()));
                                     }
                                 }
                             }
+                            Ok(Msg::Cancel(ticket)) => {
+                                // Unknown / already-answered tickets are
+                                // a no-op by design.
+                                if let Some(&id) = tickets.get(&ticket) {
+                                    sched.cancel(id);
+                                }
+                            }
                             Ok(Msg::Shutdown) => {
+                                // Graceful: refuse new work, flush the
+                                // queue without waiting out the batching
+                                // window, finish what is in flight. The
+                                // channel stays open — post-drain
+                                // submits get typed refusals.
+                                sched.drain();
                                 shutdown = true;
                                 break;
                             }
                             Err(mpsc::TryRecvError::Empty) => break,
                             Err(mpsc::TryRecvError::Disconnected) => {
+                                sched.drain();
                                 shutdown = true;
                                 break;
                             }
@@ -134,19 +188,31 @@ impl Router {
                     match sched.tick(Instant::now()) {
                         Ok(done) => {
                             for (id, res) in done {
-                                if let Some(reply) = replies.remove(&id) {
+                                if let Some((ticket, reply)) = replies.remove(&id) {
+                                    tickets.remove(&ticket);
                                     let _ = reply.send(Ok(res));
+                                }
+                            }
+                            // Typed per-session verdicts: session-fatal
+                            // evictions, deadline expiries, cancels.
+                            for (id, err) in sched.take_failures() {
+                                if let Some((ticket, reply)) = replies.remove(&id) {
+                                    tickets.remove(&ticket);
+                                    let _ = reply.send(Err(err));
                                 }
                             }
                         }
                         Err(e) => {
-                            // Engine fault: fail everything in flight or
-                            // queued, reset, and keep serving — a fresh
-                            // group may still succeed.
-                            let msg = format!("engine error: {e:#}");
-                            for (_, reply) in replies.drain() {
-                                let _ = reply.send(Err(msg.clone()));
+                            // `tick` errors are engine-fatal by
+                            // contract: fail everything in flight or
+                            // queued, reset (fresh paged-KV pool), and
+                            // keep serving — a fresh group may still
+                            // succeed.
+                            let err = RequestError::EngineFault(format!("{e:#}"));
+                            for (_, (_, reply)) in replies.drain() {
+                                let _ = reply.send(Err(err.clone()));
                             }
+                            tickets.clear();
                             sched.reset();
                         }
                     }
@@ -160,31 +226,72 @@ impl Router {
                         std::thread::sleep(cfg.idle_poll);
                     }
                 }
+                // Stragglers racing the exit: answer anything still in
+                // the channel instead of dropping it with the receiver.
+                while let Ok(m) = rx.try_recv() {
+                    if let Msg::Submit(_, req) = m {
+                        let _ = req.reply.send(Err(RequestError::ShuttingDown));
+                    }
+                }
             })
             .context("spawning engine worker")?;
         Ok(Router {
             tx,
             worker: Some(worker),
+            next_ticket: AtomicU64::new(0),
         })
     }
 
     /// Submit a request; returns the reply receiver.
-    pub fn submit(
+    pub fn submit(&self, prompt: Vec<i32>, max_new: usize) -> Result<mpsc::Receiver<Reply>> {
+        self.submit_with(prompt, max_new, None).map(|s| s.rx)
+    }
+
+    /// Submit with an optional absolute deadline; the returned
+    /// [`Submission`] carries the ticket [`Router::cancel`] takes.
+    pub fn submit_with(
         &self,
         prompt: Vec<i32>,
         max_new: usize,
-    ) -> Result<mpsc::Receiver<Result<RequestResult, String>>> {
+        deadline: Option<Instant>,
+    ) -> Result<Submission> {
+        let id = self.next_ticket.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Submit(Request {
-                prompt,
-                max_new,
-                reply,
-            }))
+            .send(Msg::Submit(
+                id,
+                Request {
+                    prompt,
+                    max_new,
+                    deadline,
+                    reply,
+                },
+            ))
             .context("router worker gone")?;
-        Ok(rx)
+        Ok(Submission { id, rx })
     }
 
+    /// Cancel a submission by ticket. Best-effort and idempotent: a
+    /// request that already finished (or was never accepted) ignores it;
+    /// otherwise the reply channel yields `RequestError::Cancelled` and
+    /// the session's slot + paged-KV blocks free for reuse.
+    pub fn cancel(&self, id: u64) -> Result<()> {
+        self.tx
+            .send(Msg::Cancel(id))
+            .context("router worker gone")?;
+        Ok(())
+    }
+
+    /// Begin graceful drain WITHOUT blocking: accepted work keeps
+    /// decoding to completion, new submits are refused with
+    /// `RequestError::ShuttingDown`. Use [`Router::shutdown`] (or drop)
+    /// to also join the worker.
+    pub fn drain(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+
+    /// Graceful shutdown: drain, then join the worker — returns once
+    /// every accepted request has been answered.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(w) = self.worker.take() {
@@ -205,7 +312,7 @@ impl Drop for Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::server::scheduler::SimCore;
+    use crate::server::scheduler::{FaultPlan, SimCore};
 
     fn cfg() -> RouterConfig {
         RouterConfig {
@@ -216,6 +323,15 @@ mod tests {
             },
             idle_poll: Duration::from_micros(200),
             ..Default::default()
+        }
+    }
+
+    /// A fault config with zero backoff so injected transient storms
+    /// don't slow the test suite down.
+    fn fast_faults() -> FaultConfig {
+        FaultConfig {
+            transient_retries: 3,
+            backoff: Duration::ZERO,
         }
     }
 
@@ -275,7 +391,8 @@ mod tests {
         let rx_big = router.submit(vec![3, 4], 100_000).unwrap();
         let big = rx_big.recv_timeout(Duration::from_secs(5)).unwrap();
         let err = big.unwrap_err();
-        assert!(err.contains("KV blocks"), "got: {err}");
+        assert!(matches!(err, RequestError::TooLarge { .. }), "got: {err}");
+        assert!(err.to_string().contains("KV blocks"), "got: {err}");
         let ok = rx_ok.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
         assert_eq!(ok.tokens.len(), 8, "concurrent session must survive");
         // The worker is still healthy: a later request is served too.
@@ -293,8 +410,163 @@ mod tests {
         .unwrap();
         let rx = router.submit(vec![1, 2], 4).unwrap();
         let res = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert!(res.is_err());
-        assert!(res.unwrap_err().contains("boom"));
+        let err = res.unwrap_err();
+        assert!(matches!(err, RequestError::EngineInit(_)), "got: {err}");
+        assert!(err.to_string().contains("boom"));
+        router.shutdown();
+    }
+
+    /// Graceful drain: work accepted before shutdown completes; a
+    /// submit racing in after it gets the typed refusal, not a dead
+    /// channel. The long max_wait pins the order: the queued request
+    /// only dispatches once the drain flush bypasses the batching
+    /// window, so it is provably still in flight when the late submit
+    /// arrives (channel order is FIFO).
+    #[test]
+    fn drain_completes_inflight_and_rejects_new() {
+        let mut c = cfg();
+        c.batcher.max_wait = Duration::from_secs(1000);
+        let router = Router::spawn(c, || Ok(SimCore::new(4, 7, vec![1, 4]))).unwrap();
+        let rx_a = router.submit(vec![1, 2], 48).unwrap();
+        router.drain();
+        let rx_late = router.submit(vec![3, 4], 4).unwrap();
+        let late = rx_late.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(late.unwrap_err(), RequestError::ShuttingDown);
+        let a = rx_a.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(a.tokens.len(), 48, "accepted work must finish under drain");
+        router.shutdown();
+    }
+
+    /// A session-fatal fault fails ONLY the offending session; its
+    /// group-mates complete with the exact tokens an unfaulted run
+    /// yields (SimCore emissions are position-deterministic).
+    #[test]
+    fn session_fatal_fails_only_that_session() {
+        let mut c = cfg();
+        c.fault = fast_faults();
+        let router = Router::spawn(c, || {
+            Ok(SimCore::new(4, 7, vec![1, 4])
+                .with_fault_plan(FaultPlan::default().session_fatal_at(1, 1)))
+        })
+        .unwrap();
+        // Four submits -> scheduler session ids 0..4; the plan kills 1.
+        let rxs: Vec<_> = (0..4)
+            .map(|i| router.submit(vec![10 * (i + 1), 2], 8).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let res = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            if i == 1 {
+                let err = res.unwrap_err();
+                assert!(matches!(err, RequestError::SessionFault(_)), "got: {err}");
+                assert!(err.to_string().contains("injected"), "got: {err}");
+            } else {
+                let r = res.unwrap();
+                assert_eq!(r.tokens.len(), 8, "survivor {i} must complete");
+                assert_eq!(r.tokens[0], 10 * (i as i32 + 1) + 1000);
+            }
+        }
+        router.shutdown();
+    }
+
+    /// An engine-fatal fault fails everything in flight with a typed
+    /// verdict, then the worker resets — rebuilding the paged-KV pool —
+    /// and serves fresh requests to completion.
+    #[test]
+    fn engine_fatal_fails_inflight_then_recovers() {
+        let mut c = cfg();
+        c.fault = fast_faults();
+        let router = Router::spawn(c, || {
+            Ok(SimCore::new(4, 7, vec![1, 4])
+                .with_fault_plan(FaultPlan::default().engine_fatal_at(1)))
+        })
+        .unwrap();
+        let rx1 = router.submit(vec![1, 2], 16).unwrap();
+        let rx2 = router.submit(vec![3, 4], 16).unwrap();
+        for rx in [rx1, rx2] {
+            let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
+            assert!(matches!(err, RequestError::EngineFault(_)), "got: {err}");
+        }
+        // The reset rebuilt the pool: a fresh request decodes fine.
+        let rx = router.submit(vec![5, 6], 8).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(r.tokens[..2], [1005, 1006]);
+        router.shutdown();
+    }
+
+    /// Cancel by ticket: the reply channel yields the typed verdict and
+    /// the worker keeps serving other sessions.
+    #[test]
+    fn cancel_midflight_returns_cancelled() {
+        let router = Router::spawn(cfg(), || Ok(SimCore::new(4, 7, vec![1, 4]))).unwrap();
+        let keep = router.submit(vec![1, 2], 8).unwrap();
+        // Inside the default pool (256 blocks x 16 tokens) but far
+        // beyond what could finish before the cancel lands right behind
+        // it on the FIFO channel.
+        let doomed = router.submit_with(vec![3, 4], 2000, None).unwrap();
+        router.cancel(doomed.id).unwrap();
+        let err = doomed
+            .rx
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap_err();
+        assert_eq!(err, RequestError::Cancelled);
+        let ok = keep.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(ok.tokens.len(), 8);
+        // Cancelling a finished ticket is a no-op, not an error.
+        router.cancel(doomed.id).unwrap();
+        router.shutdown();
+    }
+
+    /// A deadline in the past is shed with the typed verdict before any
+    /// prefill is spent on it.
+    #[test]
+    fn expired_deadline_returns_typed_verdict() {
+        let router = Router::spawn(cfg(), || Ok(SimCore::new(4, 7, vec![1, 4]))).unwrap();
+        let sub = router
+            .submit_with(vec![1, 2], 8, Some(Instant::now() - Duration::from_millis(5)))
+            .unwrap();
+        let err = sub
+            .rx
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap_err();
+        assert_eq!(err, RequestError::DeadlineExceeded);
+        // The worker is unharmed.
+        let rx = router.submit(vec![5, 6], 4).unwrap();
+        assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        router.shutdown();
+    }
+
+    /// An empty prompt bounces off the front door with a typed invalid
+    /// verdict (core-level validation), never reaching the engine.
+    #[test]
+    fn invalid_prompt_rejected_at_submit() {
+        let router = Router::spawn(cfg(), || Ok(SimCore::new(4, 7, vec![1, 4]))).unwrap();
+        let rx = router.submit(vec![], 4).unwrap();
+        let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
+        assert!(matches!(err, RequestError::Invalid(_)), "got: {err}");
+        assert!(err.to_string().contains("empty prompt"), "got: {err}");
+        router.shutdown();
+    }
+
+    /// A transient fault is retried inside the scheduler: no request
+    /// observes it — all replies are Ok with full token streams.
+    #[test]
+    fn transient_fault_invisible_to_clients() {
+        let mut c = cfg();
+        c.fault = fast_faults();
+        let router = Router::spawn(c, || {
+            Ok(SimCore::new(4, 7, vec![1, 4])
+                .with_fault_plan(FaultPlan::default().transient_at(1, 2)))
+        })
+        .unwrap();
+        let rxs: Vec<_> = (0..4)
+            .map(|i| router.submit(vec![i + 1, 2], 8).unwrap())
+            .collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(r.tokens.len(), 8);
+        }
         router.shutdown();
     }
 }

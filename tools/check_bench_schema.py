@@ -42,6 +42,14 @@ SCHEMAS: dict[str, set[str]] = {
         "host_kv_bytes_host_repack",
         "host_kv_bytes_device",
     },
+    "chaos_smoke": {
+        "sessions",
+        "sessions_lost",
+        "faults_injected",
+        "rounds",
+        "transient_retries",
+        "rounds_to_recover",
+    },
 }
 
 # Sections that must be present in EVERY run (artifact-less CI included;
@@ -51,6 +59,7 @@ ALWAYS_PRESENT = {
     "verify_transfer_analytic",
     "paged_kv_capacity",
     "kv_migration_analytic",
+    "chaos_smoke",
 }
 
 

@@ -20,7 +20,10 @@ use lk_spec::server::metrics::{
     recurrent_tree_device_bytes_per_round, recurrent_tree_host_bytes_per_round,
     tree_device_bytes_per_round, tree_host_bytes_per_round,
 };
-use lk_spec::server::{DownshiftConfig, FaultConfig, FaultPlan, Scheduler, SimCore};
+use lk_spec::server::{
+    DownshiftConfig, FaultConfig, FaultPlan, HttpOpts, HttpServer, Router, RouterConfig,
+    Scheduler, SimCore,
+};
 use lk_spec::spec::adaptive::{ControllerCfg, CostModel, SpecController};
 use lk_spec::tensor::HostTensor;
 use lk_spec::train::RunDirs;
@@ -489,6 +492,122 @@ fn bench_chaos_smoke(json: &mut JsonRows) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// §HTTP edge bench: per-token SSE streaming latency through the full
+/// serving stack (accept thread → parser → router → scheduler →
+/// SimCore) over real loopback TCP. Timestamps are CLIENT-side, one
+/// per `event: token` frame — the external view of the ttft /
+/// inter-token percentiles the server exports on `/metrics`
+/// (docs/METRICS.md). PJRT-free, always runs.
+fn bench_http_stream_latency(json: &mut JsonRows) -> anyhow::Result<()> {
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+
+    const REQUESTS: usize = 16;
+    const MAX_NEW: usize = 64;
+
+    fn count_frames(hay: &[u8], needle: &[u8]) -> usize {
+        hay.windows(needle.len()).filter(|w| *w == needle).count()
+    }
+
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            buckets: vec![1, 4],
+            max_wait: std::time::Duration::ZERO,
+            queue_cap: 256,
+        },
+        idle_poll: std::time::Duration::from_micros(200),
+        ..Default::default()
+    };
+    let router = Router::spawn(cfg, || Ok(SimCore::new(4, 0x477F, vec![1, 4])))
+        .map_err(|e| anyhow::anyhow!("http bench router: {e}"))?;
+    let opts = HttpOpts {
+        // Small coalescing window: more token frames per stream, so the
+        // inter-token sample pool is dense enough for a p50.
+        stream_buffer: 4,
+        ..Default::default()
+    };
+    let server = HttpServer::spawn("127.0.0.1:0", Arc::new(router), opts)
+        .map_err(|e| anyhow::anyhow!("http bench spawn: {e}"))?;
+
+    let mut ttft_ms: Vec<f64> = Vec::new();
+    let mut inter_ms: Vec<f64> = Vec::new();
+    let mut frames = 0usize;
+    for i in 0..REQUESTS {
+        let body = format!("{{\"prompt\": [{}, 2, 3], \"max_new\": {MAX_NEW}}}", i + 1);
+        let mut s = TcpStream::connect(server.addr())?;
+        s.set_nodelay(true)?;
+        s.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+        s.write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nHost: b\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )?;
+        let t0 = Instant::now();
+        let mut raw = Vec::new();
+        let mut stamps: Vec<Instant> = Vec::new(); // one per token frame, arrival order
+        let mut buf = [0u8; 4096];
+        loop {
+            let n = s.read(&mut buf)?;
+            if n == 0 {
+                break;
+            }
+            raw.extend_from_slice(&buf[..n]);
+            let now = Instant::now();
+            // Frames that land in one read genuinely arrived together:
+            // they share a stamp (inter-token gap 0 for that pair).
+            while stamps.len() < count_frames(&raw, b"event: token\r\n") {
+                stamps.push(now);
+            }
+        }
+        anyhow::ensure!(!stamps.is_empty(), "stream {i}: no token frames");
+        anyhow::ensure!(
+            count_frames(&raw, b"event: done\r\n") == 1,
+            "stream {i}: missing done frame"
+        );
+        frames += stamps.len();
+        ttft_ms.push(stamps[0].duration_since(t0).as_secs_f64() * 1e3);
+        for w in stamps.windows(2) {
+            inter_ms.push(w[1].duration_since(w[0]).as_secs_f64() * 1e3);
+        }
+    }
+    server.shutdown();
+
+    let p50 = |xs: &mut [f64]| {
+        xs.sort_by(|a, b| a.total_cmp(b));
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs[xs.len() / 2]
+        }
+    };
+    let (ttft_p50, inter_p50) = (p50(&mut ttft_ms), p50(&mut inter_ms));
+    let mut table = Table::new(
+        "HTTP SSE streaming latency (loopback TCP, SimCore, client-side stamps)",
+        &["requests", "tokens", "token frames", "ttft p50 ms", "inter-token p50 ms"],
+    );
+    table.row(vec![
+        REQUESTS.to_string(),
+        (REQUESTS * MAX_NEW).to_string(),
+        frames.to_string(),
+        format!("{ttft_p50:.3}"),
+        format!("{inter_p50:.3}"),
+    ]);
+    table.emit("http_stream_latency")?;
+    json.push(vec![
+        ("bench", Json::Str("http_stream_latency".into())),
+        ("config", Json::Str(format!("simcore stream_buffer=4 n={REQUESTS}x{MAX_NEW}"))),
+        ("requests", Json::Num(REQUESTS as f64)),
+        ("tokens", Json::Num((REQUESTS * MAX_NEW) as f64)),
+        ("events", Json::Num(frames as f64)),
+        ("ttft_ms_p50", Json::Num(ttft_p50)),
+        ("inter_token_ms_p50", Json::Num(inter_p50)),
+    ]);
+    Ok(())
+}
+
 /// Steady-state device→host transfer per decode round, host vs device
 /// verify path, from the closed forms in `server::metrics` at the
 /// manifest's own dims (512 vocab, Vt=8, 3d=288 features). Always runs —
@@ -637,6 +756,7 @@ fn run_sections(json: &mut JsonRows) -> anyhow::Result<()> {
     bench_kv_migration_analytic(json)?;
     bench_speculation_controller(json)?;
     bench_chaos_smoke(json)?;
+    bench_http_stream_latency(json)?;
     bench_verify_transfer(json)?;
     if !Path::new("artifacts/manifest.json").exists() {
         skip("artifacts missing");

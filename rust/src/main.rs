@@ -5,7 +5,7 @@
 //!   train-draft   train speculators with any LK-family objective
 //!   eval          evaluate τ / speedup cells (cached as JSON)
 //!   eval-all      run every cell the paper tables need
-//!   serve         demo: router + engine serving a batch of requests
+//!   serve         router + engine: demo burst, or --http for the SSE edge
 //!   report        print cached results summary
 //!
 //! Typical full reproduction: `make experiments` (see Makefile), which is
@@ -76,7 +76,11 @@ fn print_help() {
                          --no-prefix-cache (disable cross-session sharing).\n\
                          Robustness: --deadline-ms N (per-request latency\n\
                          budget; expired requests are shed with a typed\n\
-                         verdict, 0 = off); shutdown drains gracefully\n\
+                         verdict, 0 = off); shutdown drains gracefully.\n\
+                         HTTP edge: --http ADDR (e.g. 127.0.0.1:8080) serves\n\
+                         POST /v1/generate (SSE token streaming), /healthz,\n\
+                         /metrics until stdin closes; --max-conns N,\n\
+                         --stream-buffer N tune the edge (DESIGN.md §10)\n\
            report        print cached result cells\n\
          \n\
          common options: --artifacts DIR (default artifacts), --runs DIR\n\
@@ -370,6 +374,20 @@ fn serve_demo(args: &Args) -> Result<()> {
         paged_kv.block_size > 0 && paged_kv.total_blocks > 0,
         "--kv-block-size and --kv-blocks must be positive"
     );
+    // HTTP edge (DESIGN.md §10): --http ADDR serves SSE token streams
+    // over the same router instead of running the demo burst.
+    let http_defaults = lk_spec::server::HttpOpts::default();
+    let http_addr = args.opt("http").map(str::to_string);
+    let http_opts = lk_spec::server::HttpOpts {
+        max_conns: args.opt_usize("max-conns", http_defaults.max_conns)?,
+        stream_buffer: args.opt_usize("stream-buffer", http_defaults.stream_buffer)?,
+        default_max_new: max_new,
+        ..http_defaults
+    };
+    anyhow::ensure!(
+        http_opts.max_conns > 0 && http_opts.stream_buffer > 0,
+        "--max-conns and --stream-buffer must be positive"
+    );
     args.finish()?;
 
     let corpus = Corpus::open(&data)?;
@@ -413,6 +431,10 @@ fn serve_demo(args: &Args) -> Result<()> {
         lk_spec::server::SpecEngine::new(rt, &draft, &tckpt, &dckpt, vocab_map, opts)
     })?;
 
+    if let Some(addr) = http_addr {
+        return serve_http(&addr, router, http_opts);
+    }
+
     info!("submitting {} requests…", prompts.len());
     let t0 = std::time::Instant::now();
     let receivers: Vec<_> = prompts
@@ -450,6 +472,27 @@ fn serve_demo(args: &Args) -> Result<()> {
         total_tokens as f64 / secs,
     );
     router.shutdown();
+    Ok(())
+}
+
+/// Serve the router over the HTTP edge until stdin closes, then drain
+/// gracefully: `/healthz` flips to 503 first (load balancers stop
+/// routing), in-flight streams finish, new requests get 503.
+fn serve_http(addr: &str, router: Router, opts: lk_spec::server::HttpOpts) -> Result<()> {
+    let router = std::sync::Arc::new(router);
+    let server = lk_spec::server::HttpServer::spawn(addr, std::sync::Arc::clone(&router), opts)?;
+    let bound = server.addr();
+    println!("serving on http://{bound}  (close stdin / Ctrl-D to drain and exit)");
+    println!(
+        "  curl -N -X POST http://{bound}/v1/generate \\\n    -d '{{\"prompt\": [1, 2, 3], \"max_new\": 32}}'"
+    );
+    let mut sink = String::new();
+    let _ = std::io::Read::read_to_string(&mut std::io::stdin().lock(), &mut sink);
+    info!("stdin closed — draining the http edge");
+    server.shutdown();
+    if let Ok(r) = std::sync::Arc::try_unwrap(router) {
+        r.shutdown();
+    }
     Ok(())
 }
 

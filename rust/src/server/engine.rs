@@ -1470,6 +1470,14 @@ impl<'rt> SchedulerCore for SpecEngine<'rt> {
         g.seqs[row].done
     }
 
+    /// Per-token streaming hook: `generated` is append-only across
+    /// rounds (accepted prefix + bonus token commit, rejections are
+    /// never applied), and `result_of` returns exactly this sequence —
+    /// so streamed deltas concat to the terminal reply bit-for-bit.
+    fn row_tokens(&self, g: &GroupState, row: usize) -> Option<&[i32]> {
+        Some(&g.seqs[row].generated)
+    }
+
     /// Turn `row` into inert padding mid-flight (cancellation, deadline
     /// expiry, session-fatal containment): the row keeps decoding as a
     /// pad stream — the executables' batch shape must stay full — but

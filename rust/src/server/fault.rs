@@ -146,6 +146,27 @@ pub enum RequestError {
     EngineInit(String),
 }
 
+impl RequestError {
+    /// HTTP status code for this verdict — THE verdict→status table of
+    /// the edge contract (DESIGN.md §10). Client-caused refusals map to
+    /// 4xx, server conditions to 5xx; `Cancelled` uses 499 (client
+    /// closed request, nginx convention) because the only way a live
+    /// session cancels through the HTTP edge is its client vanishing.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            RequestError::QueueFull => 429,
+            RequestError::TooLarge { .. } => 413,
+            RequestError::Invalid(_) => 400,
+            RequestError::ShuttingDown => 503,
+            RequestError::DeadlineExceeded => 504,
+            RequestError::Cancelled => 499,
+            RequestError::SessionFault(_)
+            | RequestError::EngineFault(_)
+            | RequestError::EngineInit(_) => 500,
+        }
+    }
+}
+
 impl From<SubmitError> for RequestError {
     fn from(e: SubmitError) -> RequestError {
         match e {
@@ -216,6 +237,28 @@ mod tests {
         assert_eq!(ee.kind, FaultKind::SessionFatal);
         assert_eq!(ee.session, Some(42));
         assert!(e.to_string().contains("session 42"), "got: {e}");
+    }
+
+    /// The verdict→status table (DESIGN.md §10): every variant maps,
+    /// client refusals to 4xx, server conditions to 5xx.
+    #[test]
+    fn verdicts_map_to_http_statuses() {
+        assert_eq!(RequestError::QueueFull.http_status(), 429);
+        assert_eq!(
+            RequestError::TooLarge {
+                blocks_needed: 9,
+                pool_blocks: 4
+            }
+            .http_status(),
+            413
+        );
+        assert_eq!(RequestError::Invalid("empty".into()).http_status(), 400);
+        assert_eq!(RequestError::ShuttingDown.http_status(), 503);
+        assert_eq!(RequestError::DeadlineExceeded.http_status(), 504);
+        assert_eq!(RequestError::Cancelled.http_status(), 499);
+        assert_eq!(RequestError::SessionFault("x".into()).http_status(), 500);
+        assert_eq!(RequestError::EngineFault("x".into()).http_status(), 500);
+        assert_eq!(RequestError::EngineInit("x".into()).http_status(), 500);
     }
 
     #[test]

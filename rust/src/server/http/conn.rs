@@ -1,0 +1,482 @@
+//! Per-connection handling: parse one request, route it, answer, close.
+//!
+//! One request per connection keeps the state machine trivial (no
+//! pipelining, no keep-alive bookkeeping) — the interesting path is the
+//! streaming one. `POST /v1/generate` with `"stream": true` (the
+//! default) maps the router's event grammar onto the wire:
+//!
+//!   * the FIRST event decides the status line — a pre-admission
+//!     `Fault` becomes a plain 4xx/5xx response (the client never sees
+//!     SSE), `Queued` opens a chunked `text/event-stream`;
+//!   * each `Tokens` delta becomes an `event: token` SSE frame
+//!     (coalesced up to `stream_buffer` tokens when the client lags);
+//!   * the terminal `Done`/`Fault` becomes `event: done` (carrying the
+//!     [`AcceptanceStats`] summary) or `event: fault`, then the
+//!     zero-length chunk ends the response.
+//!
+//! Between events the handler probes the socket for client departure: a
+//! read returning 0 means the peer closed, so the session is cancelled
+//! through the router — its slot and paged-KV blocks free instead of
+//! decoding for nobody (pinned by `disconnect_cancels_session` in
+//! tests/http_edge.rs).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::{Duration, Instant};
+
+use crate::server::engine::RequestResult;
+use crate::server::fault::RequestError;
+use crate::server::router::{Event, StreamSubmission};
+use crate::spec::accept::AcceptanceStats;
+use crate::util::Json;
+
+use super::parse::{HttpRequest, ParseLimits, RequestParser};
+use super::sse::{chunk, SseEncoder, LAST_CHUNK};
+use super::Shared;
+
+/// How long the edge waits for the router's admission answer before
+/// declaring the worker wedged.
+const FIRST_EVENT_TIMEOUT: Duration = Duration::from_secs(30);
+/// Event-wait slice between client-liveness probes while streaming.
+const EVENT_POLL: Duration = Duration::from_millis(20);
+
+/// Increments an [`AtomicU64`] gauge and decrements it on drop — keeps
+/// `conns`/`queue_depth` honest across every early-return path.
+pub(super) struct GaugeGuard<'a>(&'a AtomicU64);
+
+impl<'a> GaugeGuard<'a> {
+    pub(super) fn inc(gauge: &'a AtomicU64) -> GaugeGuard<'a> {
+        gauge.fetch_add(1, Ordering::Relaxed);
+        GaugeGuard(gauge)
+    }
+
+    /// Wrap a gauge the caller already incremented (the accept loop
+    /// claims a conn slot before spawning the handler thread).
+    pub(super) fn adopt(gauge: &'a AtomicU64) -> GaugeGuard<'a> {
+        GaugeGuard(gauge)
+    }
+}
+
+impl Drop for GaugeGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Serve one connection end-to-end. Any parse failure answers with the
+/// error's status ([`super::parse::ParseError::http_status`]) and
+/// closes; a vanished client just closes.
+pub(super) fn handle(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.opts.read_timeout));
+    let mut parser = RequestParser::new(ParseLimits::default());
+    let req = loop {
+        let mut buf = [0u8; 4096];
+        let n = match stream.read(&mut buf) {
+            Ok(0) => return, // peer closed before completing a request
+            Ok(n) => n,
+            Err(_) => return, // read timeout or reset: nobody to answer
+        };
+        match parser.feed(&buf[..n]) {
+            Ok(Some(req)) => break req,
+            Ok(None) => {}
+            Err(e) => {
+                shared.metrics.sheds.fetch_add(1, Ordering::Relaxed);
+                let body = error_body(&e.to_string());
+                let _ = stream.write_all(&simple_response(
+                    e.http_status(),
+                    "application/json",
+                    &body,
+                    &[],
+                ));
+                return;
+            }
+        }
+    };
+    route(stream, shared, &req);
+}
+
+/// Refuse a connection over the `max_conns` cap without spawning a
+/// handler thread for it (the caller counts the shed).
+pub(super) fn refuse_overloaded(mut stream: TcpStream) {
+    let body = error_body("server at max connections");
+    let _ = stream.write_all(&simple_response(
+        503,
+        "application/json",
+        &body,
+        &[("Retry-After", "1")],
+    ));
+}
+
+fn route(mut stream: TcpStream, shared: &Shared, req: &HttpRequest) {
+    let path = req.target.split('?').next().unwrap_or(&req.target);
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => healthz(stream, shared),
+        ("GET", "/metrics") => metrics(stream, shared),
+        ("POST", "/v1/generate") => generate(stream, shared, req),
+        _ => {
+            let body = error_body(&format!("no route {} {}", req.method, path));
+            let _ = stream.write_all(&simple_response(404, "application/json", &body, &[]));
+        }
+    }
+}
+
+/// Liveness for load balancers: 200 while serving, 503 once draining —
+/// flip first, then stop sending traffic, then shut down.
+fn healthz(mut stream: TcpStream, shared: &Shared) {
+    let (status, body) = if shared.draining.load(Ordering::SeqCst) {
+        (503, "{\"status\": \"draining\"}")
+    } else {
+        (200, "{\"status\": \"ok\"}")
+    };
+    let _ = stream.write_all(&simple_response(status, "application/json", body, &[]));
+}
+
+/// Edge gauges (`lkspec_http_*`) plus the scheduler's own counters
+/// fetched from the worker thread; if the worker is wedged the edge
+/// block still renders, annotated with the probe failure.
+fn metrics(mut stream: TcpStream, shared: &Shared) {
+    let mut text = shared.metrics.render();
+    match shared.router.metrics_text(Duration::from_secs(2)) {
+        Ok(sched) => text.push_str(&sched),
+        Err(e) => text.push_str(&format!("# scheduler metrics unavailable: {e:#}\n")),
+    }
+    let _ = stream.write_all(&simple_response(
+        200,
+        "text/plain; version=0.0.4",
+        &text,
+        &[],
+    ));
+}
+
+struct GenerateReq {
+    prompt: Vec<i32>,
+    max_new: Option<usize>,
+    stream: bool,
+    deadline_ms: Option<f64>,
+}
+
+fn parse_body(raw: &[u8]) -> Result<GenerateReq, String> {
+    let text = std::str::from_utf8(raw).map_err(|_| "body is not UTF-8".to_string())?;
+    let json = Json::parse(text).map_err(|e| format!("body is not JSON: {e}"))?;
+    let arr = json
+        .get("prompt")
+        .as_arr()
+        .ok_or_else(|| "missing 'prompt' (array of token ids)".to_string())?;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for v in arr {
+        let id = v
+            .as_i64()
+            .ok_or_else(|| "'prompt' must contain integer token ids".to_string())?;
+        prompt.push(id as i32);
+    }
+    Ok(GenerateReq {
+        prompt,
+        max_new: json.get("max_new").as_usize(),
+        stream: json.get("stream").as_bool().unwrap_or(true),
+        deadline_ms: json.get("deadline_ms").as_f64(),
+    })
+}
+
+fn generate(stream: TcpStream, shared: &Shared, req: &HttpRequest) {
+    shared.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+    if shared.draining.load(Ordering::SeqCst) {
+        // Answer the drain refusal at the edge: in-flight streams keep
+        // running, new work never reaches the router.
+        shed(stream, shared, 503, "draining: not accepting new requests", &[]);
+        return;
+    }
+    let body = match parse_body(&req.body) {
+        Ok(b) => b,
+        Err(why) => {
+            shed(stream, shared, 400, &why, &[]);
+            return;
+        }
+    };
+    let max_new = body.max_new.unwrap_or(shared.opts.default_max_new);
+    let deadline = body
+        .deadline_ms
+        .map(|ms| Instant::now() + Duration::from_millis(ms as u64));
+    if body.stream {
+        generate_stream(stream, shared, body.prompt, max_new, deadline);
+    } else {
+        generate_oneshot(stream, shared, body.prompt, max_new, deadline);
+    }
+}
+
+fn generate_oneshot(
+    mut stream: TcpStream,
+    shared: &Shared,
+    prompt: Vec<i32>,
+    max_new: usize,
+    deadline: Option<Instant>,
+) {
+    let sub = match shared.router.submit_with(prompt, max_new, deadline) {
+        Ok(s) => s,
+        Err(e) => {
+            shed(stream, shared, 503, &format!("{e:#}"), &[]);
+            return;
+        }
+    };
+    let _depth = GaugeGuard::inc(&shared.metrics.queue_depth);
+    match sub.rx.recv() {
+        Ok(Ok(res)) => {
+            let body = result_json(&res).to_string();
+            let _ = stream.write_all(&simple_response(200, "application/json", &body, &[]));
+        }
+        Ok(Err(err)) => respond_verdict(stream, shared, &err),
+        Err(_) => shed(stream, shared, 500, "router worker vanished", &[]),
+    }
+}
+
+fn generate_stream(
+    stream: TcpStream,
+    shared: &Shared,
+    prompt: Vec<i32>,
+    max_new: usize,
+    deadline: Option<Instant>,
+) {
+    let sub = match shared.router.submit_stream(prompt, max_new, deadline) {
+        Ok(s) => s,
+        Err(e) => {
+            shed(stream, shared, 503, &format!("{e:#}"), &[]);
+            return;
+        }
+    };
+    // The first event decides the status line: a refusal must be a
+    // plain error response, not a 200 stream that immediately faults.
+    match sub.rx.recv_timeout(FIRST_EVENT_TIMEOUT) {
+        Ok(Event::Queued) => {}
+        Ok(Event::Fault(err)) => {
+            respond_verdict(stream, shared, &err);
+            return;
+        }
+        Ok(Event::Tokens(_)) | Ok(Event::Done(_)) => {
+            // `Queued` always precedes tokens; reaching here is a bug.
+            shed(stream, shared, 500, "event stream violated its grammar", &[]);
+            return;
+        }
+        Err(_) => {
+            shed(stream, shared, 500, "router worker did not answer", &[]);
+            return;
+        }
+    }
+    let _depth = GaugeGuard::inc(&shared.metrics.queue_depth);
+    stream_events(stream, shared, &sub);
+}
+
+fn stream_events(mut stream: TcpStream, shared: &Shared, sub: &StreamSubmission) {
+    const HEAD: &str = "HTTP/1.1 200 OK\r\n\
+                        Content-Type: text/event-stream\r\n\
+                        Cache-Control: no-cache\r\n\
+                        Connection: close\r\n\
+                        Transfer-Encoding: chunked\r\n\r\n";
+    let mut enc = SseEncoder::new();
+    let mut head = HEAD.as_bytes().to_vec();
+    head.extend_from_slice(&chunk(&enc.event("queued", "{}")));
+    if stream.write_all(&head).is_err() {
+        disconnect(shared, sub);
+        return;
+    }
+    // The request is fully read; shrink the read timeout so liveness
+    // probes between events cost ~1ms instead of blocking.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(1)));
+    let started = Instant::now();
+    let mut last_token_at: Option<Instant> = None;
+    let mut carry: Option<Event> = None;
+    loop {
+        let ev = match carry.take() {
+            Some(ev) => ev,
+            None => match sub.rx.recv_timeout(EVENT_POLL) {
+                Ok(ev) => ev,
+                Err(RecvTimeoutError::Timeout) => {
+                    if client_gone(&mut stream) {
+                        disconnect(shared, sub);
+                        return;
+                    }
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    Event::Fault(RequestError::EngineFault("router worker vanished".into()))
+                }
+            },
+        };
+        match ev {
+            Event::Queued => {} // only ever first; already announced
+            Event::Tokens(mut toks) => {
+                // Coalesce queued deltas so a lagging client gets fewer,
+                // bigger frames instead of one chunk per scheduler tick.
+                while toks.len() < shared.opts.stream_buffer {
+                    match sub.rx.try_recv() {
+                        Ok(Event::Tokens(more)) => toks.extend(more),
+                        Ok(other) => {
+                            carry = Some(other);
+                            break;
+                        }
+                        Err(_) => break,
+                    }
+                }
+                let now = Instant::now();
+                match last_token_at {
+                    None => shared.metrics.observe_ttft(ms_between(started, now)),
+                    Some(prev) => shared.metrics.observe_inter_token(ms_between(prev, now)),
+                }
+                last_token_at = Some(now);
+                let data = Json::obj(vec![("tokens", arr_i32(&toks))]).to_string();
+                if stream.write_all(&chunk(&enc.event("token", &data))).is_err() {
+                    disconnect(shared, sub);
+                    return;
+                }
+            }
+            Event::Done(res) => {
+                let mut tail = chunk(&enc.event("done", &done_json(&res).to_string()));
+                tail.extend_from_slice(LAST_CHUNK);
+                let _ = stream.write_all(&tail);
+                return;
+            }
+            Event::Fault(err) => {
+                let data = Json::obj(vec![
+                    ("error", Json::Str(err.to_string())),
+                    ("status", Json::Num(f64::from(err.http_status()))),
+                ])
+                .to_string();
+                let mut tail = chunk(&enc.event("fault", &data));
+                tail.extend_from_slice(LAST_CHUNK);
+                let _ = stream.write_all(&tail);
+                return;
+            }
+        }
+    }
+}
+
+/// A vanished client must cancel its session: probe with a short read.
+/// `Ok(0)` is an orderly close; stray request bytes are ignored
+/// (pipelining is unsupported); timeouts mean "still there".
+fn client_gone(stream: &mut TcpStream) -> bool {
+    let mut scratch = [0u8; 64];
+    match stream.read(&mut scratch) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) => !matches!(
+            e.kind(),
+            std::io::ErrorKind::WouldBlock
+                | std::io::ErrorKind::TimedOut
+                | std::io::ErrorKind::Interrupted
+        ),
+    }
+}
+
+fn disconnect(shared: &Shared, sub: &StreamSubmission) {
+    shared.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
+    let _ = shared.router.cancel(sub.id);
+}
+
+/// Answer a request verdict as a status code; 429 tells clients when to
+/// retry. Every non-200 verdict counts as an edge shed.
+fn respond_verdict(mut stream: TcpStream, shared: &Shared, err: &RequestError) {
+    shared.metrics.sheds.fetch_add(1, Ordering::Relaxed);
+    let retry: &[(&str, &str)] = if matches!(err, RequestError::QueueFull) {
+        &[("Retry-After", "1")]
+    } else {
+        &[]
+    };
+    let body = error_body(&err.to_string());
+    let _ = stream.write_all(&simple_response(
+        err.http_status(),
+        "application/json",
+        &body,
+        retry,
+    ));
+}
+
+fn shed(mut stream: TcpStream, shared: &Shared, status: u16, why: &str, extra: &[(&str, &str)]) {
+    shared.metrics.sheds.fetch_add(1, Ordering::Relaxed);
+    let body = error_body(why);
+    let _ = stream.write_all(&simple_response(status, "application/json", &body, extra));
+}
+
+fn simple_response(status: u16, content_type: &str, body: &str, extra: &[(&str, &str)]) -> Vec<u8> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        reason(status),
+        body.len(),
+    );
+    for (k, v) in extra {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    let mut out = head.into_bytes();
+    out.extend_from_slice(body.as_bytes());
+    out
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        499 => "Client Closed Request",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Error",
+    }
+}
+
+fn error_body(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+/// One-shot response body: the full result, tokens included.
+fn result_json(res: &RequestResult) -> Json {
+    let mut fields = vec![("tokens", arr_i32(&res.tokens))];
+    fields.extend(summary_fields(res));
+    Json::obj(fields)
+}
+
+/// `event: done` data: the result summary WITHOUT the token array — the
+/// tokens already streamed as deltas (their concatenation equals the
+/// one-shot `tokens` field exactly).
+fn done_json(res: &RequestResult) -> Json {
+    Json::obj(summary_fields(res))
+}
+
+fn summary_fields(res: &RequestResult) -> Vec<(&'static str, Json)> {
+    vec![
+        ("n_tokens", Json::Num(res.tokens.len() as f64)),
+        ("rounds", Json::Num(res.rounds as f64)),
+        ("latency_ms", Json::Num(res.latency_ms)),
+        ("ttft_ms", Json::Num(res.ttft_ms)),
+        ("queue_ms", Json::Num(res.queue_ms)),
+        ("stats", stats_json(&res.stats)),
+    ]
+}
+
+fn stats_json(s: &AcceptanceStats) -> Json {
+    Json::obj(vec![
+        ("k", Json::Num(s.k as f64)),
+        ("rounds", Json::Num(s.rounds as f64)),
+        ("generated_tokens", Json::Num(s.generated_tokens as f64)),
+        ("tau", Json::Num(s.tau())),
+        ("drafted", arr_u64(&s.drafted)),
+        ("accepted", arr_u64(&s.accepted)),
+        ("prefix_hist", arr_u64(&s.prefix_hist)),
+    ])
+}
+
+fn arr_i32(xs: &[i32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(f64::from(x))).collect())
+}
+
+fn arr_u64(xs: &[u64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn ms_between(from: Instant, to: Instant) -> f64 {
+    to.duration_since(from).as_secs_f64() * 1e3
+}

@@ -1,0 +1,195 @@
+//! HTTP/1.1 streaming edge over the router (DESIGN.md §10).
+//!
+//! Dependency-light by construction: `std::net::TcpListener`, one
+//! thread per connection, no async runtime — the decode loop is the
+//! concurrency-critical path and it already lives on the router's
+//! worker thread; the edge only shuttles bytes. Three routes:
+//!
+//!   * `POST /v1/generate` — token streaming as Server-Sent Events over
+//!     chunked transfer (`"stream": false` for a one-shot JSON body);
+//!   * `GET /healthz` — 200 serving / 503 draining;
+//!   * `GET /metrics` — `lkspec_http_*` edge gauges plus the
+//!     scheduler's `lkspec_sched_*` block fetched from the worker.
+//!
+//! Admission verdicts map onto status codes via
+//! [`RequestError::http_status`](super::fault::RequestError::http_status):
+//! queue-full is 429 with `Retry-After`, an inadmissible request 413,
+//! drain 503, a deadline miss 504. Connections over `max_conns` are
+//! refused with an immediate 503 — the accept loop never queues work it
+//! cannot serve. Every edge behavior here is pinned PJRT-free by
+//! `tests/http_edge.rs` over [`SimCore`](super::scheduler::SimCore) and
+//! loopback TCP.
+
+mod conn;
+pub mod parse;
+pub mod sse;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::metrics::HttpMetrics;
+use super::router::Router;
+use conn::GaugeGuard;
+
+/// Edge knobs (`serve --http` flags).
+#[derive(Clone, Copy, Debug)]
+pub struct HttpOpts {
+    /// Open-connection cap; excess connections get an immediate 503.
+    pub max_conns: usize,
+    /// Max tokens coalesced into one SSE `token` event when the client
+    /// lags the decode loop.
+    pub stream_buffer: usize,
+    /// `max_new` when the request body doesn't set one.
+    pub default_max_new: usize,
+    /// Socket read timeout while a request head/body arrives.
+    pub read_timeout: Duration,
+}
+
+impl Default for HttpOpts {
+    fn default() -> Self {
+        HttpOpts {
+            max_conns: 64,
+            stream_buffer: 32,
+            default_max_new: 32,
+            read_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// State every connection thread sees.
+struct Shared {
+    router: Arc<Router>,
+    metrics: HttpMetrics,
+    opts: HttpOpts,
+    /// Once set, `/v1/generate` refuses with 503 and `/healthz` flips —
+    /// in-flight streams keep running to completion.
+    draining: AtomicBool,
+}
+
+/// The listening edge. Bind with [`HttpServer::spawn`], stop with
+/// [`HttpServer::shutdown`] (drain → stop accepting → bounded wait for
+/// open streams).
+pub struct HttpServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (use port 0 to let the OS pick — [`HttpServer::addr`]
+    /// reports the real one) and start accepting.
+    pub fn spawn(addr: &str, router: Arc<Router>, opts: HttpOpts) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding http edge on {addr}"))?;
+        let local = listener
+            .local_addr()
+            .context("resolving bound http address")?;
+        let shared = Arc::new(Shared {
+            router,
+            metrics: HttpMetrics::default(),
+            opts,
+            draining: AtomicBool::new(false),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("lkspec-http-accept".into())
+                .spawn(move || accept_loop(listener, shared, stop))
+                .context("spawning http accept thread")?
+        };
+        Ok(HttpServer {
+            addr: local,
+            shared,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Edge gauges, for scraping in-process (benches); HTTP clients use
+    /// `GET /metrics`.
+    pub fn metrics(&self) -> &HttpMetrics {
+        &self.shared.metrics
+    }
+
+    /// Begin graceful drain: `/healthz` flips to 503 so load balancers
+    /// stop routing here, new generate requests are refused with 503,
+    /// the router drains (accepted work decodes to completion).
+    pub fn drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        self.shared.router.drain();
+    }
+
+    /// Drain, stop accepting, and wait (bounded) for open connections
+    /// to finish their streams.
+    pub fn shutdown(mut self) {
+        self.drain();
+        self.stop_accepting();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while self.shared.metrics.conns.load(Ordering::Relaxed) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    fn stop_accepting(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // The accept loop blocks in accept(2); a self-connection wakes
+        // it so it can observe the stop flag and exit.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_accepting();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, stop: Arc<AtomicBool>) {
+    for incoming in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match incoming {
+            Ok(s) => s,
+            Err(_) => continue, // transient accept error (EMFILE, reset)
+        };
+        shared.metrics.conns_total.fetch_add(1, Ordering::Relaxed);
+        // Claim a slot BEFORE spawning so the cap can't be raced past.
+        let open = shared.metrics.conns.fetch_add(1, Ordering::Relaxed) + 1;
+        if open > shared.opts.max_conns as u64 {
+            shared.metrics.conns.fetch_sub(1, Ordering::Relaxed);
+            shared.metrics.sheds.fetch_add(1, Ordering::Relaxed);
+            conn::refuse_overloaded(stream);
+            continue;
+        }
+        let per_conn = Arc::clone(&shared);
+        let spawned = std::thread::Builder::new()
+            .name("lkspec-http-conn".into())
+            .spawn(move || {
+                let _open = GaugeGuard::adopt(&per_conn.metrics.conns);
+                conn::handle(stream, &per_conn);
+            });
+        if spawned.is_err() {
+            shared.metrics.conns.fetch_sub(1, Ordering::Relaxed);
+            shared.metrics.sheds.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}

@@ -1,0 +1,414 @@
+//! Incremental HTTP/1.1 request parser for the streaming edge.
+//!
+//! TCP delivers arbitrary framings — a request head may arrive
+//! byte-at-a-time, glued to its body, or torn anywhere in between — so
+//! the parser accumulates bytes across [`RequestParser::feed`] calls
+//! and yields the request only once it is complete. Feeding the same
+//! byte stream under ANY split sequence produces the identical parse or
+//! the identical error (`prop_http_parser_split_invariant` pins this).
+//!
+//! Limits surface as typed errors that map straight onto status codes
+//! ([`ParseError::http_status`]): an oversized head is 431, an
+//! oversized declared body 413, anything malformed 400 — never a
+//! panic. The grammar is deliberately strict: CRLF line endings only
+//! (a bare LF or CR is malformed), no obsolete line folding, no
+//! whitespace before the header colon (request-smuggling vectors), and
+//! request bodies must be `Content-Length`-delimited — this server
+//! never accepts chunked REQUEST bodies (responses are another matter:
+//! the SSE stream is chunked on the way out).
+
+use std::fmt;
+
+/// Parser limits. The head cap bounds memory per connection BEFORE any
+/// request is accepted; the body cap bounds it after.
+#[derive(Clone, Copy, Debug)]
+pub struct ParseLimits {
+    /// Max bytes of request line + headers, terminator included.
+    pub max_head_bytes: usize,
+    /// Max declared `Content-Length`.
+    pub max_body_bytes: usize,
+    /// Max number of header fields.
+    pub max_headers: usize,
+}
+
+impl Default for ParseLimits {
+    fn default() -> Self {
+        ParseLimits {
+            max_head_bytes: 8192,
+            max_body_bytes: 1 << 20,
+            max_headers: 64,
+        }
+    }
+}
+
+/// Why a request failed to parse; maps onto a status code.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ParseError {
+    /// 400 Bad Request.
+    Malformed(String),
+    /// 431 Request Header Fields Too Large.
+    HeadersTooLarge,
+    /// 413 Payload Too Large (declared `Content-Length` over the cap).
+    BodyTooLarge,
+}
+
+impl ParseError {
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ParseError::Malformed(_) => 400,
+            ParseError::HeadersTooLarge => 431,
+            ParseError::BodyTooLarge => 413,
+        }
+    }
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParseError::Malformed(why) => write!(f, "malformed request: {why}"),
+            ParseError::HeadersTooLarge => write!(f, "request head too large"),
+            ParseError::BodyTooLarge => write!(f, "request body too large"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// One parsed request. Header names are lowercased; values keep their
+/// case with surrounding spaces/tabs trimmed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HttpRequest {
+    pub method: String,
+    pub target: String,
+    /// (name, value) pairs in arrival order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header named `name` (give it lowercased), if any.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parsed head awaiting its body.
+struct Head {
+    req: HttpRequest,
+    body_start: usize,
+    content_length: usize,
+}
+
+/// Incremental parser: feed it byte slices as they arrive.
+pub struct RequestParser {
+    limits: ParseLimits,
+    buf: Vec<u8>,
+    head: Option<Head>,
+    /// Head-terminator scan resumes here (keeps feed O(new bytes)).
+    scanned: usize,
+    /// Errors are sticky; completion is terminal (one request per
+    /// connection — the server answers and closes).
+    failed: Option<ParseError>,
+    done: bool,
+}
+
+impl RequestParser {
+    pub fn new(limits: ParseLimits) -> RequestParser {
+        RequestParser {
+            limits,
+            buf: Vec::new(),
+            head: None,
+            scanned: 0,
+            failed: None,
+            done: false,
+        }
+    }
+
+    /// Accumulate `bytes`; returns the request once complete, `None`
+    /// while more bytes are needed. Errors are sticky: every later call
+    /// returns the same error the stream first produced.
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<Option<HttpRequest>, ParseError> {
+        if let Some(e) = &self.failed {
+            return Err(e.clone());
+        }
+        if self.done {
+            return Err(self.fail(ParseError::Malformed(
+                "bytes after a complete request (pipelining unsupported)".into(),
+            )));
+        }
+        self.buf.extend_from_slice(bytes);
+        if self.head.is_none() {
+            match self.find_head_end() {
+                Some(end) => {
+                    if end > self.limits.max_head_bytes {
+                        return Err(self.fail(ParseError::HeadersTooLarge));
+                    }
+                    match parse_head(&self.limits, &self.buf[..end - 4]) {
+                        Ok((req, content_length)) => {
+                            self.head = Some(Head {
+                                req,
+                                body_start: end,
+                                content_length,
+                            });
+                        }
+                        Err(e) => return Err(self.fail(e)),
+                    }
+                }
+                None => {
+                    // No terminator yet: a head already over the cap can
+                    // only grow — fail now, identically under any split.
+                    if self.buf.len() > self.limits.max_head_bytes {
+                        return Err(self.fail(ParseError::HeadersTooLarge));
+                    }
+                    return Ok(None);
+                }
+            }
+        }
+        let head = self.head.as_ref().expect("head parsed above");
+        if self.buf.len() < head.body_start + head.content_length {
+            return Ok(None);
+        }
+        let head = self.head.take().expect("head parsed above");
+        let mut req = head.req;
+        req.body = self.buf[head.body_start..head.body_start + head.content_length].to_vec();
+        self.done = true;
+        Ok(Some(req))
+    }
+
+    fn fail(&mut self, e: ParseError) -> ParseError {
+        self.failed = Some(e.clone());
+        e
+    }
+
+    /// Byte offset just past the first `\r\n\r\n`, if present.
+    fn find_head_end(&mut self) -> Option<usize> {
+        let from = self.scanned.saturating_sub(3);
+        if let Some(i) = self.buf[from..]
+            .windows(4)
+            .position(|w| w == b"\r\n\r\n")
+        {
+            return Some(from + i + 4);
+        }
+        self.scanned = self.buf.len();
+        None
+    }
+}
+
+/// Parse the head section (everything before the `\r\n\r\n`); returns
+/// the request (body empty) and its declared content length.
+fn parse_head(
+    limits: &ParseLimits,
+    head: &[u8],
+) -> Result<(HttpRequest, usize), ParseError> {
+    let text = std::str::from_utf8(head)
+        .map_err(|_| ParseError::Malformed("non-UTF-8 request head".into()))?;
+    let mut lines = Vec::new();
+    for line in split_crlf(text)? {
+        lines.push(line);
+    }
+    let mut it = lines.into_iter();
+    let request_line = it
+        .next()
+        .ok_or_else(|| ParseError::Malformed("empty request head".into()))?;
+    let (method, target) = parse_request_line(request_line)?;
+    let mut headers: Vec<(String, String)> = Vec::new();
+    let mut content_length: Option<usize> = None;
+    for line in it {
+        if line.starts_with(' ') || line.starts_with('\t') {
+            return Err(ParseError::Malformed(
+                "obsolete line folding in headers".into(),
+            ));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| ParseError::Malformed(format!("header without colon: {line:?}")))?;
+        if name.is_empty() || name.contains(|c: char| c.is_ascii_whitespace()) {
+            // Whitespace in a field name is a classic smuggling vector.
+            return Err(ParseError::Malformed(format!(
+                "invalid header field name: {name:?}"
+            )));
+        }
+        let name = name.to_ascii_lowercase();
+        let value = value.trim_matches([' ', '\t']).to_string();
+        if name == "content-length" {
+            let n: u64 = value
+                .parse()
+                .map_err(|_| ParseError::Malformed(format!("bad content-length: {value:?}")))?;
+            if n > limits.max_body_bytes as u64 {
+                return Err(ParseError::BodyTooLarge);
+            }
+            let n = n as usize;
+            if content_length.replace(n).is_some_and(|prev| prev != n) {
+                return Err(ParseError::Malformed(
+                    "conflicting content-length headers".into(),
+                ));
+            }
+        }
+        if name == "transfer-encoding" {
+            return Err(ParseError::Malformed(
+                "chunked request bodies unsupported (use content-length)".into(),
+            ));
+        }
+        headers.push((name, value));
+        if headers.len() > limits.max_headers {
+            return Err(ParseError::HeadersTooLarge);
+        }
+    }
+    Ok((
+        HttpRequest {
+            method,
+            target,
+            headers,
+            body: Vec::new(),
+        },
+        content_length.unwrap_or(0),
+    ))
+}
+
+/// Split on CRLF exactly, rejecting any stray CR or LF — the CRLF
+/// framing is part of the pinned wire grammar.
+fn split_crlf(text: &str) -> Result<Vec<&str>, ParseError> {
+    let mut out = Vec::new();
+    for line in text.split("\r\n") {
+        if line.contains(['\r', '\n']) {
+            return Err(ParseError::Malformed(
+                "bare CR or LF in request head (CRLF required)".into(),
+            ));
+        }
+        if line.contains(|c: char| c.is_ascii_control()) {
+            return Err(ParseError::Malformed(
+                "control bytes in request head".into(),
+            ));
+        }
+        out.push(line);
+    }
+    Ok(out)
+}
+
+fn parse_request_line(line: &str) -> Result<(String, String), ParseError> {
+    let parts: Vec<&str> = line.split(' ').collect();
+    let [method, target, version] = parts.as_slice() else {
+        return Err(ParseError::Malformed(format!(
+            "bad request line: {line:?}"
+        )));
+    };
+    if *version != "HTTP/1.1" {
+        return Err(ParseError::Malformed(format!(
+            "unsupported protocol version: {version:?}"
+        )));
+    }
+    if method.is_empty() || !method.chars().all(|c| c.is_ascii_uppercase()) {
+        return Err(ParseError::Malformed(format!("bad method: {method:?}")));
+    }
+    if !(target.starts_with('/') || *target == "*") {
+        return Err(ParseError::Malformed(format!(
+            "bad request target: {target:?}"
+        )));
+    }
+    Ok((method.to_string(), target.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_whole(raw: &[u8]) -> Result<Option<HttpRequest>, ParseError> {
+        RequestParser::new(ParseLimits::default()).feed(raw)
+    }
+
+    const GET: &[u8] = b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n";
+    const POST: &[u8] =
+        b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 9\r\n\r\n{\"a\": 1}\n";
+
+    #[test]
+    fn parses_get_and_post() {
+        let get = parse_whole(GET).unwrap().unwrap();
+        assert_eq!(get.method, "GET");
+        assert_eq!(get.target, "/healthz");
+        assert_eq!(get.header("host"), Some("x"));
+        assert!(get.body.is_empty());
+        let post = parse_whole(POST).unwrap().unwrap();
+        assert_eq!(post.method, "POST");
+        assert_eq!(post.body, b"{\"a\": 1}\n");
+    }
+
+    /// The torn-read contract in miniature (the full property lives in
+    /// tests/properties.rs): byte-at-a-time equals whole-buffer.
+    #[test]
+    fn byte_at_a_time_matches_whole() {
+        for raw in [GET, POST] {
+            let whole = parse_whole(raw).unwrap().unwrap();
+            let mut p = RequestParser::new(ParseLimits::default());
+            let mut torn = None;
+            for b in raw {
+                if let Some(req) = p.feed(std::slice::from_ref(b)).unwrap() {
+                    torn = Some(req);
+                }
+            }
+            assert_eq!(torn.as_ref(), Some(&whole));
+        }
+    }
+
+    #[test]
+    fn bare_lf_is_malformed() {
+        let raw = b"GET / HTTP/1.1\nHost: x\r\n\r\n";
+        match parse_whole(raw) {
+            Err(ParseError::Malformed(why)) => assert!(why.contains("CRLF"), "got: {why}"),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_smuggling_shapes() {
+        // Whitespace before the colon.
+        let raw = b"GET / HTTP/1.1\r\nHost : x\r\n\r\n";
+        assert_eq!(parse_whole(raw).unwrap_err().http_status(), 400);
+        // Obsolete line folding.
+        let raw = b"GET / HTTP/1.1\r\nHost: x\r\n folded\r\n\r\n";
+        assert_eq!(parse_whole(raw).unwrap_err().http_status(), 400);
+        // Conflicting content lengths.
+        let raw = b"GET / HTTP/1.1\r\nContent-Length: 1\r\nContent-Length: 2\r\n\r\n";
+        assert_eq!(parse_whole(raw).unwrap_err().http_status(), 400);
+        // Chunked request body.
+        let raw = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        assert_eq!(parse_whole(raw).unwrap_err().http_status(), 400);
+    }
+
+    #[test]
+    fn oversized_head_is_431_under_any_split() {
+        let mut raw = b"GET / HTTP/1.1\r\nX-Pad: ".to_vec();
+        raw.resize(raw.len() + 9000, b'a');
+        raw.extend_from_slice(b"\r\n\r\n");
+        assert_eq!(parse_whole(&raw), Err(ParseError::HeadersTooLarge));
+        let mut p = RequestParser::new(ParseLimits::default());
+        let mut torn = Ok(None);
+        for b in &raw {
+            torn = p.feed(std::slice::from_ref(b));
+            if torn.is_err() {
+                break;
+            }
+        }
+        assert_eq!(torn, Err(ParseError::HeadersTooLarge));
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n";
+        assert_eq!(parse_whole(raw), Err(ParseError::BodyTooLarge));
+        assert_eq!(ParseError::BodyTooLarge.http_status(), 413);
+    }
+
+    #[test]
+    fn errors_are_sticky() {
+        let mut p = RequestParser::new(ParseLimits::default());
+        assert!(p.feed(b"NOT A REQUEST\r\n\r\n").is_err());
+        assert_eq!(
+            p.feed(GET).unwrap_err().http_status(),
+            400,
+            "a poisoned parser must keep refusing"
+        );
+    }
+}

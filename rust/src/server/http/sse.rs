@@ -1,0 +1,97 @@
+//! SSE event and chunked-transfer framing — the pinned wire grammar of
+//! the streaming edge (DESIGN.md §10).
+//!
+//! Every byte this module emits is covered by golden fixtures (here and
+//! in `tests/http_edge.rs`): CRLF line endings throughout, event ids
+//! monotonically increasing from 0, one `data:` line per event. A
+//! refactor that changes the framing fails a byte-equality assertion,
+//! not a prose review.
+
+/// Server-Sent Events encoder with monotonically increasing event ids.
+///
+/// Emits exactly `id: N\r\nevent: E\r\ndata: D\r\n\r\n` per event. Ids
+/// start at 0 and never repeat within a stream, so a client can detect
+/// dropped events and tests can pin ordering.
+pub struct SseEncoder {
+    next_id: u64,
+}
+
+impl SseEncoder {
+    pub fn new() -> SseEncoder {
+        SseEncoder { next_id: 0 }
+    }
+
+    /// Frame one event. `data` must be a single line (JSON here is
+    /// always single-line); a newline would split the SSE data field.
+    pub fn event(&mut self, event: &str, data: &str) -> Vec<u8> {
+        debug_assert!(
+            !data.contains(['\r', '\n']),
+            "SSE data must be single-line"
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        format!("id: {id}\r\nevent: {event}\r\ndata: {data}\r\n\r\n").into_bytes()
+    }
+}
+
+impl Default for SseEncoder {
+    fn default() -> Self {
+        SseEncoder::new()
+    }
+}
+
+/// Frame `payload` as one HTTP/1.1 chunk: lowercase-hex size, CRLF,
+/// payload, CRLF.
+pub fn chunk(payload: &[u8]) -> Vec<u8> {
+    let mut out = format!("{:x}\r\n", payload.len()).into_bytes();
+    out.extend_from_slice(payload);
+    out.extend_from_slice(b"\r\n");
+    out
+}
+
+/// The terminal zero-length chunk that ends a chunked response body.
+pub const LAST_CHUNK: &[u8] = b"0\r\n\r\n";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden bytes: the exact frames a client sees, ids from 0.
+    #[test]
+    fn golden_event_frames() {
+        let mut enc = SseEncoder::new();
+        assert_eq!(
+            enc.event("queued", "{}"),
+            b"id: 0\r\nevent: queued\r\ndata: {}\r\n\r\n"
+        );
+        assert_eq!(
+            enc.event("token", "{\"tokens\": [7]}"),
+            b"id: 1\r\nevent: token\r\ndata: {\"tokens\": [7]}\r\n\r\n"
+        );
+    }
+
+    #[test]
+    fn golden_chunk_framing() {
+        // 5 payload bytes -> "5\r\nhello\r\n"; sizes are lowercase hex.
+        assert_eq!(chunk(b"hello"), b"5\r\nhello\r\n");
+        assert_eq!(chunk(&[0u8; 26]), {
+            let mut want = b"1a\r\n".to_vec();
+            want.extend_from_slice(&[0u8; 26]);
+            want.extend_from_slice(b"\r\n");
+            want
+        });
+        assert_eq!(LAST_CHUNK, b"0\r\n\r\n");
+    }
+
+    /// No bare LF anywhere in a frame: every `\n` is preceded by `\r`.
+    #[test]
+    fn crlf_only() {
+        let mut enc = SseEncoder::new();
+        let frame = enc.event("done", "{\"n\": 1}");
+        for (i, b) in frame.iter().enumerate() {
+            if *b == b'\n' {
+                assert_eq!(frame[i - 1], b'\r', "bare LF at offset {i}");
+            }
+        }
+    }
+}

@@ -1,6 +1,8 @@
 //! Engine + scheduler metrics: counters and latency distributions, with
 //! a Prometheus-style text exposition for scraping/debugging.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::{OnlineStats, Percentiles};
@@ -551,6 +553,85 @@ impl SchedulerMetrics {
     }
 }
 
+/// HTTP edge metrics (`lkspec_http_*` namespace, documented in
+/// docs/METRICS.md). Unlike the scheduler metrics — owned by the single
+/// worker thread — these are bumped from per-connection threads, so the
+/// hot-path counters are lock-free atomics and only the stream-latency
+/// distributions (one observation per SSE token event) sit behind a
+/// mutex.
+#[derive(Default)]
+pub struct HttpMetrics {
+    /// Open connections right now (gauge).
+    pub conns: AtomicU64,
+    pub conns_total: AtomicU64,
+    /// Accepted generate requests still awaiting their terminal event
+    /// (the edge's view of in-flight + queued work).
+    pub queue_depth: AtomicU64,
+    /// Requests refused at the edge: max-conns 503s plus every
+    /// admission verdict served as a status code (429 queue-full, 413
+    /// oversized, 400 invalid, 503 draining).
+    pub sheds: AtomicU64,
+    /// Client disconnects observed mid-stream; each one cancels its
+    /// session through the router so the slot frees.
+    pub disconnects: AtomicU64,
+    pub requests_total: AtomicU64,
+    lat: Mutex<HttpLatency>,
+}
+
+#[derive(Default)]
+struct HttpLatency {
+    ttft_ms: Percentiles,
+    inter_token_ms: Percentiles,
+}
+
+impl HttpMetrics {
+    /// Record one stream's time-to-first-token (request parsed → first
+    /// `token` event on the wire).
+    pub fn observe_ttft(&self, ms: f64) {
+        if let Ok(mut l) = self.lat.lock() {
+            l.ttft_ms.push(ms);
+        }
+    }
+
+    /// Record the gap between consecutive `token` events of one stream.
+    pub fn observe_inter_token(&self, ms: f64) {
+        if let Ok(mut l) = self.lat.lock() {
+            l.inter_token_ms.push(ms);
+        }
+    }
+
+    /// Prometheus-style text block (lkspec_http_* namespace).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut line = |name: &str, v: f64| {
+            out.push_str(&format!("lkspec_http_{name} {v}\n"));
+        };
+        line("conns", self.conns.load(Ordering::Relaxed) as f64);
+        line("conns_total", self.conns_total.load(Ordering::Relaxed) as f64);
+        line("queue_depth", self.queue_depth.load(Ordering::Relaxed) as f64);
+        line("sheds_total", self.sheds.load(Ordering::Relaxed) as f64);
+        line(
+            "disconnects_total",
+            self.disconnects.load(Ordering::Relaxed) as f64,
+        );
+        line(
+            "requests_total",
+            self.requests_total.load(Ordering::Relaxed) as f64,
+        );
+        if let Ok(mut l) = self.lat.lock() {
+            if !l.ttft_ms.is_empty() {
+                line("stream_ttft_ms_p50", l.ttft_ms.pct(50.0));
+                line("stream_ttft_ms_p95", l.ttft_ms.pct(95.0));
+            }
+            if !l.inter_token_ms.is_empty() {
+                line("inter_token_ms_p50", l.inter_token_ms.pct(50.0));
+                line("inter_token_ms_p95", l.inter_token_ms.pct(95.0));
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -828,5 +909,29 @@ mod tests {
         assert!(text.contains("lkspec_sched_joins_total{engine=\"e\"} 1"));
         assert!(text.contains("lkspec_sched_slot_occupancy_mean"));
         assert!(text.contains("lkspec_sched_queue_wait_ms_p50"));
+    }
+
+    #[test]
+    fn http_metrics_gauges() {
+        let m = HttpMetrics::default();
+        m.conns.fetch_add(2, Ordering::Relaxed);
+        m.conns_total.fetch_add(5, Ordering::Relaxed);
+        m.queue_depth.fetch_add(1, Ordering::Relaxed);
+        m.sheds.fetch_add(3, Ordering::Relaxed);
+        m.disconnects.fetch_add(1, Ordering::Relaxed);
+        m.requests_total.fetch_add(4, Ordering::Relaxed);
+        m.observe_ttft(12.0);
+        m.observe_inter_token(1.5);
+        m.observe_inter_token(2.5);
+        let text = m.render();
+        assert!(text.contains("lkspec_http_conns 2"));
+        assert!(text.contains("lkspec_http_conns_total 5"));
+        assert!(text.contains("lkspec_http_queue_depth 1"));
+        assert!(text.contains("lkspec_http_sheds_total 3"));
+        assert!(text.contains("lkspec_http_disconnects_total 1"));
+        assert!(text.contains("lkspec_http_requests_total 4"));
+        assert!(text.contains("lkspec_http_stream_ttft_ms_p50 12"));
+        assert!(text.contains("lkspec_http_inter_token_ms_p50"));
+        assert!(text.contains("lkspec_http_inter_token_ms_p95"));
     }
 }

@@ -20,8 +20,13 @@
 //!     long-tail downshift (groups migrate to smaller buckets when
 //!     occupancy drops, ending padding verify FLOPs)
 //!   * `router`    — thread-backed front-end with bounded queues and
-//!     backpressure, driving the scheduler
-//!   * `metrics`   — engine + scheduler counters, Prometheus-style text
+//!     backpressure, driving the scheduler; one-shot replies or
+//!     incremental [`router::Event`] streams
+//!   * `http`      — dependency-light HTTP/1.1 edge: per-token SSE
+//!     streaming over chunked transfer, `/healthz`, `/metrics`
+//!     (DESIGN.md §10)
+//!   * `metrics`   — engine + scheduler + HTTP-edge counters,
+//!     Prometheus-style text
 //!
 //! See DESIGN.md §3–§4 for the layering contract.
 
@@ -29,6 +34,7 @@ pub mod backend;
 pub mod batcher;
 pub mod engine;
 pub mod fault;
+pub mod http;
 pub mod kv;
 pub mod metrics;
 pub mod router;
@@ -37,8 +43,10 @@ pub mod scheduler;
 pub use backend::DraftBackend;
 pub use engine::{AdaptiveOpts, EngineOpts, RequestResult, SpecEngine, VerifyPath};
 pub use fault::{EngineError, FaultKind, RequestError};
+pub use http::{HttpOpts, HttpServer};
 pub use kv::{PagedKv, PagedKvConfig};
-pub use router::{Router, RouterConfig, Submission};
+pub use metrics::HttpMetrics;
+pub use router::{Event, Router, RouterConfig, StreamSubmission, Submission};
 pub use scheduler::{
     AdmitReq, DownshiftConfig, FaultConfig, FaultPlan, PlannedFault, Scheduler, SchedulerCore,
     SimCore, SubmitError,

@@ -10,6 +10,17 @@
 //! (admit / join / decode round / harvest), reply per finished session —
 //! results stream back as sessions finish, not when their group does.
 //!
+//! STREAMING. [`Router::submit_stream`] opens an incremental per-session
+//! [`Event`] channel instead of the one-shot reply: `Queued` on
+//! admission, a `Tokens` delta whenever the decode loop commits tokens
+//! (fed by [`Scheduler::take_token_events`]), then exactly one terminal
+//! `Done`/`Fault`. The HTTP edge (`server::http`) turns this into SSE.
+//! A dropped event receiver reads as a vanished client: the worker
+//! auto-cancels the session so its slot and paged-KV blocks free
+//! mid-flight. The one-shot [`Router::submit`] path is kept as an
+//! aggregating adapter over the same machinery — exactly one terminal
+//! [`Reply`] per submission, as before.
+//!
 //! FAILURE MODEL (DESIGN.md §9). Every reply channel carries a typed
 //! `Result<RequestResult, RequestError>`: per-request refusals
 //! (backpressure, oversized, invalid, draining) and per-session faults
@@ -40,13 +51,84 @@ use super::scheduler::{FaultConfig, Scheduler, SchedulerCore};
 /// One reply: exactly one message per accepted submission.
 pub type Reply = std::result::Result<RequestResult, RequestError>;
 
+/// One incremental event on a streaming submission's channel. The
+/// grammar per session is `Queued (Tokens)* (Done | Fault)` — exactly
+/// one terminal event, unless the submission was refused before
+/// admission, in which case a lone `Fault` is the whole stream.
+#[derive(Debug)]
+pub enum Event {
+    /// Accepted into the scheduler's bounded queue.
+    Queued,
+    /// Newly committed tokens — a delta. Per session, the concatenated
+    /// deltas equal the terminal result's `tokens` exactly (the
+    /// one-shot reply is byte-identical to the stream).
+    Tokens(Vec<i32>),
+    /// Terminal: the session completed; carries the same
+    /// [`RequestResult`] the one-shot path returns.
+    Done(RequestResult),
+    /// Terminal: the session failed with a typed verdict.
+    Fault(RequestError),
+}
+
+/// Where a submission's outcome goes: the legacy one-shot channel, or
+/// an incremental [`Event`] stream.
+pub enum ReplyTo {
+    /// Exactly one terminal [`Reply`]; token deltas are aggregated into
+    /// the final [`RequestResult`].
+    OneShot(mpsc::Sender<Reply>),
+    /// `Queued`, then token deltas as the decode loop commits them,
+    /// then exactly one terminal event.
+    Stream(mpsc::Sender<Event>),
+}
+
+impl ReplyTo {
+    fn queued(&self) {
+        if let ReplyTo::Stream(tx) = self {
+            let _ = tx.send(Event::Queued);
+        }
+    }
+
+    /// Forward a token delta. Returns false when the receiver is gone —
+    /// a vanished streaming client; the worker auto-cancels the session
+    /// so a dead connection cannot pin a slot. (One-shot receivers only
+    /// take the terminal reply, so deltas are a no-op and "delivered".)
+    fn tokens(&self, delta: Vec<i32>) -> bool {
+        match self {
+            ReplyTo::OneShot(_) => true,
+            ReplyTo::Stream(tx) => tx.send(Event::Tokens(delta)).is_ok(),
+        }
+    }
+
+    fn finish(&self, res: RequestResult) {
+        match self {
+            ReplyTo::OneShot(tx) => {
+                let _ = tx.send(Ok(res));
+            }
+            ReplyTo::Stream(tx) => {
+                let _ = tx.send(Event::Done(res));
+            }
+        }
+    }
+
+    fn fail(&self, err: RequestError) {
+        match self {
+            ReplyTo::OneShot(tx) => {
+                let _ = tx.send(Err(err));
+            }
+            ReplyTo::Stream(tx) => {
+                let _ = tx.send(Event::Fault(err));
+            }
+        }
+    }
+}
+
 pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new: usize,
     /// Absolute deadline; past it the request is shed (queued or
     /// mid-flight) with a `DeadlineExceeded` verdict.
     pub deadline: Option<Instant>,
-    pub reply: mpsc::Sender<Reply>,
+    pub reply: ReplyTo,
 }
 
 #[derive(Clone, Debug)]
@@ -79,15 +161,29 @@ enum Msg {
     /// Ticket (router-level id, the `cancel` handle) + request.
     Submit(u64, Request),
     Cancel(u64),
+    /// Render the scheduler's metrics text into the given channel.
+    Metrics(mpsc::Sender<String>),
     Shutdown,
 }
 
-/// Handle for one accepted submission.
+/// Handle for one accepted one-shot submission.
 pub struct Submission {
     /// Router-level ticket — pass to [`Router::cancel`].
     pub id: u64,
-    /// Carries exactly one [`Reply`].
+    /// Carries exactly one TERMINAL [`Reply`] — the aggregating adapter
+    /// over the event stream: token deltas are folded into the final
+    /// [`RequestResult`], so the channel yields a single message, then
+    /// disconnects. (`one_shot_reply_is_exactly_one_message` pins this;
+    /// use [`Router::submit_stream`] for per-token events.)
     pub rx: mpsc::Receiver<Reply>,
+}
+
+/// Handle for one accepted STREAMING submission.
+pub struct StreamSubmission {
+    /// Router-level ticket — pass to [`Router::cancel`].
+    pub id: u64,
+    /// Carries `Queued (Tokens)* (Done | Fault)` — see [`Event`].
+    pub rx: mpsc::Receiver<Event>,
 }
 
 /// Client handle (multiple submitter threads may share it behind an Arc).
@@ -119,10 +215,13 @@ impl Router {
                         let err = RequestError::EngineInit(format!("{e:#}"));
                         while let Ok(m) = rx.recv() {
                             match m {
-                                Msg::Submit(_, req) => {
-                                    let _ = req.reply.send(Err(err.clone()));
-                                }
+                                Msg::Submit(_, req) => req.reply.fail(err.clone()),
                                 Msg::Cancel(_) => {}
+                                Msg::Metrics(tx) => {
+                                    let _ = tx.send(format!(
+                                        "# engine init failed: {err}\n"
+                                    ));
+                                }
                                 Msg::Shutdown => break,
                             }
                         }
@@ -137,7 +236,7 @@ impl Router {
                 // ticket -> scheduler session id, and session id ->
                 // (ticket, reply channel); both purge on the verdict.
                 let mut tickets: HashMap<u64, u64> = HashMap::new();
-                let mut replies: HashMap<u64, (u64, mpsc::Sender<Reply>)> = HashMap::new();
+                let mut replies: HashMap<u64, (u64, ReplyTo)> = HashMap::new();
                 let mut shutdown = false;
                 loop {
                     // Admit what's queued (non-blocking drain). Channel
@@ -148,6 +247,7 @@ impl Router {
                             Ok(Msg::Submit(ticket, req)) => {
                                 match sched.submit_with(req.prompt, req.max_new, req.deadline) {
                                     Ok(id) => {
+                                        req.reply.queued();
                                         tickets.insert(ticket, id);
                                         replies.insert(id, (ticket, req.reply));
                                     }
@@ -155,9 +255,7 @@ impl Router {
                                     // oversized / invalid / draining):
                                     // fail ONLY this request — every
                                     // other session keeps decoding.
-                                    Err(e) => {
-                                        let _ = req.reply.send(Err(e.into()));
-                                    }
+                                    Err(e) => req.reply.fail(e.into()),
                                 }
                             }
                             Ok(Msg::Cancel(ticket)) => {
@@ -166,6 +264,14 @@ impl Router {
                                 if let Some(&id) = tickets.get(&ticket) {
                                     sched.cancel(id);
                                 }
+                            }
+                            Ok(Msg::Metrics(tx)) => {
+                                let mut text = sched.metrics.render("router");
+                                text.push_str(&format!(
+                                    "lkspec_sched_queue_depth{{engine=\"router\"}} {}\n",
+                                    sched.pending()
+                                ));
+                                let _ = tx.send(text);
                             }
                             Ok(Msg::Shutdown) => {
                                 // Graceful: refuse new work, flush the
@@ -187,10 +293,23 @@ impl Router {
                     }
                     match sched.tick(Instant::now()) {
                         Ok(done) => {
+                            // Token deltas BEFORE terminal events, so a
+                            // stream's last delta precedes its Done. A
+                            // failed send means the event receiver is
+                            // gone — the streaming client vanished —
+                            // and the session auto-cancels (slot +
+                            // paged-KV blocks free on the next tick).
+                            for (id, delta) in sched.take_token_events() {
+                                if let Some((_, reply)) = replies.get(&id) {
+                                    if !reply.tokens(delta) {
+                                        sched.cancel(id);
+                                    }
+                                }
+                            }
                             for (id, res) in done {
                                 if let Some((ticket, reply)) = replies.remove(&id) {
                                     tickets.remove(&ticket);
-                                    let _ = reply.send(Ok(res));
+                                    reply.finish(res);
                                 }
                             }
                             // Typed per-session verdicts: session-fatal
@@ -198,7 +317,7 @@ impl Router {
                             for (id, err) in sched.take_failures() {
                                 if let Some((ticket, reply)) = replies.remove(&id) {
                                     tickets.remove(&ticket);
-                                    let _ = reply.send(Err(err));
+                                    reply.fail(err);
                                 }
                             }
                         }
@@ -210,7 +329,7 @@ impl Router {
                             // succeed.
                             let err = RequestError::EngineFault(format!("{e:#}"));
                             for (_, (_, reply)) in replies.drain() {
-                                let _ = reply.send(Err(err.clone()));
+                                reply.fail(err.clone());
                             }
                             tickets.clear();
                             sched.reset();
@@ -230,7 +349,7 @@ impl Router {
                 // the channel instead of dropping it with the receiver.
                 while let Ok(m) = rx.try_recv() {
                     if let Msg::Submit(_, req) = m {
-                        let _ = req.reply.send(Err(RequestError::ShuttingDown));
+                        req.reply.fail(RequestError::ShuttingDown);
                     }
                 }
             })
@@ -264,11 +383,53 @@ impl Router {
                     prompt,
                     max_new,
                     deadline,
-                    reply,
+                    reply: ReplyTo::OneShot(reply),
                 },
             ))
             .context("router worker gone")?;
         Ok(Submission { id, rx })
+    }
+
+    /// Submit a STREAMING request: the returned channel carries
+    /// [`Event`]s — `Queued` on admission, `Tokens` deltas as the
+    /// decode loop commits them, then exactly one terminal
+    /// `Done`/`Fault`. Dropping the receiver mid-stream cancels the
+    /// session (the worker treats an undeliverable delta as a vanished
+    /// client), freeing its slot and paged-KV blocks.
+    pub fn submit_stream(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        deadline: Option<Instant>,
+    ) -> Result<StreamSubmission> {
+        let id = self.next_ticket.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(
+                id,
+                Request {
+                    prompt,
+                    max_new,
+                    deadline,
+                    reply: ReplyTo::Stream(reply),
+                },
+            ))
+            .context("router worker gone")?;
+        Ok(StreamSubmission { id, rx })
+    }
+
+    /// Scheduler metrics rendered in Prometheus text format (plus a
+    /// live `lkspec_sched_queue_depth` gauge), fetched from the worker
+    /// thread. Waits at most `timeout` — the worker answers between
+    /// decode rounds — and errors if the worker is gone or busy past
+    /// the deadline (the HTTP edge maps that to 503).
+    pub fn metrics_text(&self, timeout: Duration) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Metrics(tx))
+            .context("router worker gone")?;
+        rx.recv_timeout(timeout)
+            .context("router worker did not answer the metrics probe")
     }
 
     /// Cancel a submission by ticket. Best-effort and idempotent: a
@@ -546,6 +707,110 @@ mod tests {
         let err = rx.recv_timeout(Duration::from_secs(5)).unwrap().unwrap_err();
         assert!(matches!(err, RequestError::Invalid(_)), "got: {err}");
         assert!(err.to_string().contains("empty prompt"), "got: {err}");
+        router.shutdown();
+    }
+
+    /// Satellite regression (streaming refactor): the legacy one-shot
+    /// path still delivers EXACTLY one terminal reply — the channel
+    /// yields the result, then disconnects, so a second message can
+    /// never arrive.
+    #[test]
+    fn one_shot_reply_is_exactly_one_message() {
+        let router = Router::spawn(cfg(), || Ok(SimCore::new(4, 7, vec![1, 4]))).unwrap();
+        let rx = router.submit(vec![1, 2], 8).unwrap();
+        let first = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(first.unwrap().tokens.len(), 8);
+        // The worker dropped its sender with the terminal reply: the
+        // channel is disconnected, not merely empty — no token deltas
+        // leaked onto it and nothing else can ever arrive.
+        assert_eq!(rx.recv(), Err(mpsc::RecvError));
+        router.shutdown();
+    }
+
+    /// The streaming tentpole at the router layer: event grammar is
+    /// `Queued (Tokens)+ Done`, deltas arrive incrementally (not one
+    /// terminal burst), and their concatenation is bit-identical to the
+    /// one-shot reply for the same prompt (SimCore emissions are
+    /// position-deterministic, so the two submissions agree).
+    #[test]
+    fn stream_events_match_one_shot_reply() {
+        let router = Router::spawn(cfg(), || Ok(SimCore::new(4, 7, vec![1, 4]))).unwrap();
+        let sub = router.submit_stream(vec![1, 2], 24, None).unwrap();
+        let mut events = Vec::new();
+        loop {
+            let ev = sub.rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            let terminal = matches!(ev, Event::Done(_) | Event::Fault(_));
+            events.push(ev);
+            if terminal {
+                break;
+            }
+        }
+        assert!(matches!(events[0], Event::Queued), "first event is Queued");
+        let deltas: Vec<&Vec<i32>> = events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Tokens(t) => Some(t),
+                _ => None,
+            })
+            .collect();
+        assert!(deltas.len() > 1, "tokens must stream, not burst");
+        let streamed: Vec<i32> = deltas.into_iter().flatten().copied().collect();
+        let done = match events.last().unwrap() {
+            Event::Done(res) => res,
+            other => panic!("expected Done, got {other:?}"),
+        };
+        assert_eq!(streamed, done.tokens, "deltas concat to the result");
+        // After the terminal event the stream disconnects.
+        assert!(sub.rx.recv().is_err());
+        let oneshot = router
+            .submit(vec![1, 2], 24)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+        assert_eq!(streamed, oneshot.tokens, "stream == one-shot, bit for bit");
+        router.shutdown();
+    }
+
+    /// Dropping a stream's receiver mid-flight reads as a vanished
+    /// client: the worker auto-cancels the session (slot + paged-KV
+    /// blocks free) and keeps serving; the cancel shows in the metrics
+    /// text fetched from the worker.
+    #[test]
+    fn dropped_stream_receiver_cancels_session() {
+        let router = Router::spawn(cfg(), || Ok(SimCore::new(4, 7, vec![1, 4]))).unwrap();
+        let sub = router.submit_stream(vec![3, 4], 2000, None).unwrap();
+        // Wait for live streaming, then vanish.
+        loop {
+            match sub.rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+                Event::Tokens(_) => break,
+                Event::Queued => {}
+                other => panic!("unexpected event: {other:?}"),
+            }
+        }
+        drop(sub.rx);
+        // The auto-cancel lands within a tick or two; a fresh request
+        // completing proves the worker is healthy either way.
+        let ok = router
+            .submit(vec![5, 6], 8)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap()
+            .unwrap();
+        assert_eq!(ok.tokens.len(), 8);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let text = router.metrics_text(Duration::from_secs(5)).unwrap();
+            if text.contains("lkspec_sched_cancelled_total{engine=\"router\"} 1") {
+                assert!(text.contains("lkspec_sched_queue_depth{engine=\"router\"} 0"));
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "dropped receiver never cancelled the session:\n{text}"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
         router.shutdown();
     }
 

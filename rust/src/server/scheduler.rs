@@ -113,6 +113,17 @@ pub trait SchedulerCore {
     /// until a join replaces it.
     fn take_result(&mut self, g: &mut Self::Group, row: usize) -> RequestResult;
 
+    /// Committed tokens of live row `row` so far — the prefix of what
+    /// [`SchedulerCore::take_result`] will eventually return. The
+    /// sequence must be APPEND-ONLY across rounds (accepted tokens are
+    /// committed, never rolled back), because per-token streaming emits
+    /// deltas against it. `None` — the default — means the core cannot
+    /// observe mid-flight progress; streaming then degrades to one
+    /// terminal burst at harvest, and nothing else changes.
+    fn row_tokens(&self, _g: &Self::Group, _row: usize) -> Option<&[i32]> {
+        None
+    }
+
     /// Bucket migration (long-tail downshift, or an upshift when
     /// arrivals outgrow a shrunk group): repack the listed live rows
     /// into a fresh group at lowered bucket `b_new` — row `i` of the
@@ -252,6 +263,10 @@ pub struct Scheduler<C: SchedulerCore> {
     deadlines: HashMap<u64, Instant>,
     /// Typed per-session verdicts accumulated since `take_failures`.
     failures: Vec<(u64, RequestError)>,
+    /// Tokens already surfaced as stream events, per live session.
+    streamed: HashMap<u64, usize>,
+    /// Per-session token deltas accumulated since `take_token_events`.
+    token_events: Vec<(u64, Vec<i32>)>,
     pub metrics: SchedulerMetrics,
 }
 
@@ -278,6 +293,8 @@ impl<C: SchedulerCore> Scheduler<C> {
             cancelled: HashSet::new(),
             deadlines: HashMap::new(),
             failures: Vec::new(),
+            streamed: HashMap::new(),
+            token_events: Vec::new(),
             metrics: SchedulerMetrics::default(),
         }
     }
@@ -434,6 +451,19 @@ impl<C: SchedulerCore> Scheduler<C> {
         std::mem::take(&mut self.failures)
     }
 
+    /// Per-session token deltas committed since the last call — the
+    /// streaming feed. Deltas for one session, concatenated in order,
+    /// equal the session's terminal `RequestResult::tokens` EXACTLY
+    /// (`stream_deltas_concat_to_result` pins this): mid-flight deltas
+    /// come from [`SchedulerCore::row_tokens`], and harvest emits
+    /// whatever tail the core had not yet surfaced. Sessions that end
+    /// in a typed failure may have emitted deltas before the verdict;
+    /// the failure discards them (same contract as the one-shot path,
+    /// which drops partial output on failure).
+    pub fn take_token_events(&mut self) -> Vec<(u64, Vec<i32>)> {
+        std::mem::take(&mut self.token_events)
+    }
+
     /// Requests queued but not yet admitted.
     pub fn pending(&self) -> usize {
         self.batcher.len()
@@ -461,6 +491,8 @@ impl<C: SchedulerCore> Scheduler<C> {
         self.cancelled.clear();
         self.deadlines.clear();
         self.failures.clear();
+        self.streamed.clear();
+        self.token_events.clear();
         self.metrics.engine_resets += 1;
     }
 
@@ -523,6 +555,7 @@ impl<C: SchedulerCore> Scheduler<C> {
                 RequestError::DeadlineExceeded
             };
             self.deadlines.remove(&id);
+            self.streamed.remove(&id);
             self.failures.push((id, verdict));
         }
     }
@@ -792,6 +825,7 @@ impl<C: SchedulerCore> Scheduler<C> {
                                 kv.release(id);
                             }
                             self.deadlines.remove(&id);
+                            self.streamed.remove(&id);
                             self.metrics.session_faults += 1;
                             self.failures
                                 .push((id, RequestError::SessionFault(format!("{e:#}"))));
@@ -821,6 +855,20 @@ impl<C: SchedulerCore> Scheduler<C> {
             self.metrics.live_row_rounds += occ as u64;
             self.metrics.padded_row_rounds += (cap - occ) as u64;
 
+            // --- stream progress --------------------------------------
+            // Surface the round's newly committed tokens as per-session
+            // deltas (cores without `row_tokens` visibility are covered
+            // by the harvest tail below).
+            for (row, id) in active.slots.iter_occupied() {
+                if let Some(toks) = self.core.row_tokens(&active.group, row) {
+                    let seen = self.streamed.get(&id).copied().unwrap_or(0);
+                    if toks.len() > seen {
+                        self.token_events.push((id, toks[seen..].to_vec()));
+                        self.streamed.insert(id, toks.len());
+                    }
+                }
+            }
+
             let mut done_rows: Vec<(usize, u64)> = Vec::new();
             for (row, id) in active.slots.iter_occupied() {
                 if self.core.row_done(&active.group, row) {
@@ -838,6 +886,14 @@ impl<C: SchedulerCore> Scheduler<C> {
                     kv.release(id);
                 }
                 self.deadlines.remove(&id);
+                // Harvest tail: whatever the mid-flight deltas had not
+                // yet surfaced (everything, for a `row_tokens`-less
+                // core) — so concatenated deltas always equal
+                // `res.tokens` exactly, before the Done event fires.
+                let seen = self.streamed.remove(&id).unwrap_or(0);
+                if res.tokens.len() > seen {
+                    self.token_events.push((id, res.tokens[seen..].to_vec()));
+                }
                 self.metrics.observe_session(&res);
                 finished.push((id, res));
             }
@@ -921,6 +977,13 @@ pub struct PlannedFault {
 #[derive(Clone, Debug, Default)]
 pub struct FaultPlan {
     pub faults: Vec<PlannedFault>,
+    /// Edge-chaos extension (DESIGN.md §10): a chaos HTTP client severs
+    /// its TCP connection after observing this many `token` events. The
+    /// core never sees connections — the HTTP edge tests read the field
+    /// and act it out client-side — but it lives here so ONE declarative
+    /// plan describes a whole chaos scenario (engine faults + edge
+    /// faults) and the vocabulary stays in one place.
+    pub drop_conn_at: Option<u64>,
 }
 
 impl FaultPlan {
@@ -951,6 +1014,13 @@ impl FaultPlan {
             session: None,
             times: 1,
         });
+        self
+    }
+
+    /// Edge chaos: the test's HTTP client drops its connection after
+    /// `token_events` streamed `token` events (see the field docs).
+    pub fn drop_conn_at(mut self, token_events: u64) -> FaultPlan {
+        self.drop_conn_at = Some(token_events);
         self
     }
 }
@@ -1212,6 +1282,13 @@ impl SchedulerCore for SimCore {
 
     fn row_done(&self, g: &SimGroup, row: usize) -> bool {
         g.rows[row].done
+    }
+
+    fn row_tokens(&self, g: &SimGroup, row: usize) -> Option<&[i32]> {
+        // Truncate like `take_result`: a final short round can commit
+        // past the generation cap, and the overshoot is never served.
+        let seq = &g.rows[row];
+        Some(&seq.tokens[..seq.tokens.len().min(seq.max_new)])
     }
 
     fn evict(&mut self, g: &mut SimGroup, row: usize) {
@@ -2127,6 +2204,68 @@ mod tests {
             Err(SubmitError::TooLarge { .. }) => {}
             other => panic!("expected TooLarge, got {other:?}"),
         }
+    }
+
+    /// Streaming contract: per-session `take_token_events` deltas,
+    /// concatenated in order, equal the terminal result's tokens
+    /// EXACTLY — and mid-flight deltas arrive round by round, not as
+    /// one terminal burst (the SSE edge is built on both halves).
+    #[test]
+    fn stream_deltas_concat_to_result() {
+        let mut s = Scheduler::new(sim(), cfg(64));
+        s.submit(vec![1, 2], 17).unwrap();
+        s.submit(vec![3, 4, 5], 9).unwrap();
+        let mut streamed: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+        let mut bursts: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut done: Vec<(u64, RequestResult)> = Vec::new();
+        let mut ticks = 0;
+        while !s.is_idle() {
+            done.extend(s.tick(Instant::now()).unwrap());
+            for (id, delta) in s.take_token_events() {
+                assert!(!delta.is_empty(), "empty deltas are never emitted");
+                streamed.entry(id).or_default().extend(delta);
+                *bursts.entry(id).or_default() += 1;
+            }
+            ticks += 1;
+            assert!(ticks < 1000, "scheduler did not converge");
+        }
+        assert_eq!(done.len(), 2);
+        for (id, res) in done {
+            assert_eq!(streamed[&id], res.tokens, "deltas must concat to the reply");
+            assert!(bursts[&id] > 1, "session {id} streamed in one burst");
+        }
+    }
+
+    /// An evicted (cancelled) session stops streaming and leaks no
+    /// per-session stream state; survivors stream to completion.
+    #[test]
+    fn cancelled_session_stops_streaming() {
+        let mut s = Scheduler::new(sim(), cfg(64));
+        let keep = s.submit(vec![1, 2], 8).unwrap();
+        let doomed = s.submit(vec![3, 4], 2000).unwrap();
+        let _ = s.tick(Instant::now()).unwrap();
+        let _ = s.take_token_events();
+        s.cancel(doomed);
+        let mut streamed: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+        let mut ticks = 0;
+        while !s.is_idle() {
+            let _ = s.tick(Instant::now()).unwrap();
+            for (id, delta) in s.take_token_events() {
+                streamed.entry(id).or_default().extend(delta);
+            }
+            ticks += 1;
+            assert!(ticks < 1000, "scheduler did not converge");
+        }
+        assert!(
+            !streamed.contains_key(&doomed),
+            "cancelled session must not stream after the verdict"
+        );
+        assert!(!streamed[&keep].is_empty());
+        assert_eq!(
+            s.take_failures(),
+            vec![(doomed, RequestError::Cancelled)],
+            "cancel verdict still delivered"
+        );
     }
 
     /// `reset` rebuilds the pool from the stored config: no stale block

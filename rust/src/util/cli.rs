@@ -169,6 +169,18 @@ mod tests {
         assert_eq!(a.opt_list("list"), ["a", "b", "c"]);
     }
 
+    /// The HTTP edge flags ride the implicit-declaration grammar:
+    /// `--http 127.0.0.1:0` must parse as a value option (colons and
+    /// port 0 included), not a flag.
+    #[test]
+    fn address_values_parse_as_options() {
+        let a = args("serve --http 127.0.0.1:0 --max-conns 8 --stream-buffer 4");
+        assert_eq!(a.opt("http"), Some("127.0.0.1:0"));
+        assert_eq!(a.opt_usize("max-conns", 64).unwrap(), 8);
+        assert_eq!(a.opt_usize("stream-buffer", 32).unwrap(), 4);
+        a.finish().unwrap();
+    }
+
     #[test]
     fn unknown_option_rejected() {
         let a = args("x --tpyo 3");

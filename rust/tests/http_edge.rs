@@ -1,0 +1,502 @@
+//! Deterministic HTTP streaming-edge suite (DESIGN.md §10): the whole
+//! serving stack — parser, SSE framing, router event streams, scheduler
+//! — driven over REAL loopback TCP against [`SimCore`], PJRT-free.
+//!
+//! The client side here is deliberately independent of the server's
+//! encoders: a minimal chunked-transfer decoder and SSE splitter live
+//! in this file, so a framing bug cannot hide behind a shared helper.
+//! Edge chaos (mid-stream disconnects) is declared through the same
+//! [`FaultPlan`] vocabulary the ChaosCore engine faults use — the test
+//! client reads `drop_conn_at` and acts it out by severing its socket.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lk_spec::server::batcher::BatcherConfig;
+use lk_spec::server::scheduler::{FaultPlan, SimCore};
+use lk_spec::server::{HttpOpts, HttpServer, Router, RouterConfig};
+use lk_spec::util::Json;
+
+// ---------------------------------------------------------------------------
+// harness: SimCore server + raw-TCP client helpers
+// ---------------------------------------------------------------------------
+
+/// Spin up the full stack on a loopback port the OS picks.
+fn edge(
+    buckets: Vec<usize>,
+    queue_cap: usize,
+    max_wait: Duration,
+    plan: FaultPlan,
+) -> HttpServer {
+    let cfg = RouterConfig {
+        batcher: BatcherConfig {
+            buckets: buckets.clone(),
+            max_wait,
+            queue_cap,
+        },
+        idle_poll: Duration::from_micros(200),
+        ..Default::default()
+    };
+    let router =
+        Router::spawn(cfg, move || Ok(SimCore::new(4, 7, buckets).with_fault_plan(plan)))
+            .expect("router spawn");
+    HttpServer::spawn("127.0.0.1:0", Arc::new(router), HttpOpts::default())
+        .expect("http edge spawn")
+}
+
+fn connect(server: &HttpServer) -> TcpStream {
+    let s = TcpStream::connect(server.addr()).expect("loopback connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.set_nodelay(true).unwrap();
+    s
+}
+
+/// One request, whole response (the server closes after answering).
+fn request(server: &HttpServer, raw: &str) -> Vec<u8> {
+    let mut s = connect(server);
+    s.write_all(raw.as_bytes()).unwrap();
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).expect("read response");
+    out
+}
+
+fn post_generate(server: &HttpServer, body: &str) -> Vec<u8> {
+    request(
+        server,
+        &format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+/// Open a generate stream and return the socket once `min_token_events`
+/// `token` frames (and the head) have arrived, plus the bytes so far.
+fn open_stream(server: &HttpServer, body: &str, min_token_events: usize) -> (TcpStream, Vec<u8>) {
+    let mut s = connect(server);
+    s.write_all(
+        format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let mut seen = Vec::new();
+    let mut buf = [0u8; 1024];
+    while count(&seen, b"event: token") < min_token_events
+        || count(&seen, b"event: queued") < 1
+    {
+        let n = s.read(&mut buf).expect("stream bytes");
+        assert!(n > 0, "server closed before the expected events arrived");
+        seen.extend_from_slice(&buf[..n]);
+    }
+    (s, seen)
+}
+
+fn metrics_text(server: &HttpServer) -> String {
+    let resp = parse_response(&request(server, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n"));
+    assert_eq!(resp.status, 200);
+    String::from_utf8(resp.body).unwrap()
+}
+
+struct Response {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Response {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn body_json(&self) -> Json {
+        Json::parse(std::str::from_utf8(&self.body).unwrap()).expect("JSON body")
+    }
+}
+
+fn parse_response(raw: &[u8]) -> Response {
+    let head_end = find(raw, b"\r\n\r\n").expect("response head terminator");
+    let head = std::str::from_utf8(&raw[..head_end]).unwrap();
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap();
+    let status: u16 = status_line
+        .strip_prefix("HTTP/1.1 ")
+        .unwrap_or_else(|| panic!("bad status line: {status_line:?}"))
+        .split(' ')
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap();
+    let mut headers = Vec::new();
+    for line in lines {
+        let (k, v) = line.split_once(':').expect("header colon");
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let rest = &raw[head_end + 4..];
+    let chunked = headers
+        .iter()
+        .any(|(k, v)| k == "transfer-encoding" && v == "chunked");
+    let body = if chunked { decode_chunked(rest) } else { rest.to_vec() };
+    Response {
+        status,
+        headers,
+        body,
+    }
+}
+
+/// Minimal chunked-transfer decoder, independent of the server's
+/// encoder: lowercase-hex size line, CRLF, payload, CRLF, until the
+/// zero chunk — anything else panics the test.
+fn decode_chunked(mut rest: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    loop {
+        let line_end = find(rest, b"\r\n").expect("chunk size line");
+        let size =
+            usize::from_str_radix(std::str::from_utf8(&rest[..line_end]).unwrap(), 16)
+                .expect("hex chunk size");
+        rest = &rest[line_end + 2..];
+        if size == 0 {
+            assert_eq!(&rest[..2], b"\r\n", "terminal chunk must end with CRLF");
+            return out;
+        }
+        out.extend_from_slice(&rest[..size]);
+        assert_eq!(&rest[size..size + 2], b"\r\n", "chunk payload must end with CRLF");
+        rest = &rest[size + 2..];
+    }
+}
+
+struct SseEvent {
+    id: u64,
+    event: String,
+    data: String,
+}
+
+/// Strict SSE splitter: every frame must be exactly id/event/data.
+fn parse_sse(payload: &[u8]) -> Vec<SseEvent> {
+    let text = std::str::from_utf8(payload).expect("SSE payload is UTF-8");
+    let mut events = Vec::new();
+    for frame in text.split("\r\n\r\n").filter(|f| !f.is_empty()) {
+        let (mut id, mut event, mut data) = (None, None, None);
+        for line in frame.split("\r\n") {
+            if let Some(v) = line.strip_prefix("id: ") {
+                id = Some(v.parse().unwrap());
+            } else if let Some(v) = line.strip_prefix("event: ") {
+                event = Some(v.to_string());
+            } else if let Some(v) = line.strip_prefix("data: ") {
+                data = Some(v.to_string());
+            } else {
+                panic!("unexpected SSE line: {line:?}");
+            }
+        }
+        events.push(SseEvent {
+            id: id.expect("id field"),
+            event: event.expect("event field"),
+            data: data.expect("data field"),
+        });
+    }
+    events
+}
+
+/// Concatenate the token deltas of every `token` event, in order.
+fn stream_tokens(events: &[SseEvent]) -> Vec<i64> {
+    events
+        .iter()
+        .filter(|e| e.event == "token")
+        .flat_map(|e| {
+            Json::parse(&e.data)
+                .unwrap()
+                .get("tokens")
+                .as_arr()
+                .expect("tokens array")
+                .iter()
+                .map(|t| t.as_i64().unwrap())
+                .collect::<Vec<_>>()
+        })
+        .collect()
+}
+
+fn find(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+fn count(hay: &[u8], needle: &[u8]) -> usize {
+    if hay.len() < needle.len() {
+        return 0;
+    }
+    hay.windows(needle.len()).filter(|w| *w == needle).count()
+}
+
+// ---------------------------------------------------------------------------
+// the edge contract
+// ---------------------------------------------------------------------------
+
+/// THE streaming guarantee: concatenating the streamed token deltas
+/// yields exactly the one-shot reply's token sequence (SimCore tokens
+/// are position-deterministic, so two sessions over the same prompt
+/// must agree bit-for-bit).
+#[test]
+fn stream_is_bit_identical_to_one_shot() {
+    let server = edge(vec![1, 4], 16, Duration::from_millis(1), FaultPlan::default());
+    // 96 tokens: 3x the stream_buffer coalescing cap, so the stream is
+    // provably incremental (at least three token events) even when the
+    // simulated decode outruns the handler.
+    let one_shot = parse_response(&post_generate(
+        &server,
+        "{\"prompt\": [1, 2], \"max_new\": 96, \"stream\": false}",
+    ));
+    assert_eq!(one_shot.status, 200);
+    assert_eq!(one_shot.header("content-type"), Some("application/json"));
+    let body = one_shot.body_json();
+    let want: Vec<i64> = body
+        .get("tokens")
+        .as_arr()
+        .expect("tokens array")
+        .iter()
+        .map(|t| t.as_i64().unwrap())
+        .collect();
+    assert_eq!(want.len(), 96);
+    assert_eq!(body.get("n_tokens").as_usize(), Some(96));
+
+    let streamed = parse_response(&post_generate(
+        &server,
+        "{\"prompt\": [1, 2], \"max_new\": 96}",
+    ));
+    assert_eq!(streamed.status, 200);
+    let events = parse_sse(&streamed.body);
+    assert_eq!(events[0].event, "queued");
+    assert!(
+        events.iter().filter(|e| e.event == "token").count() >= 3,
+        "tokens must stream incrementally, not as one terminal burst"
+    );
+    assert_eq!(
+        stream_tokens(&events),
+        want,
+        "streamed deltas must concatenate to the one-shot tokens exactly"
+    );
+    let done = events.last().unwrap();
+    assert_eq!(done.event, "done");
+    let d = Json::parse(&done.data).unwrap();
+    assert_eq!(d.get("n_tokens").as_usize(), Some(96));
+    let stats = d.get("stats");
+    assert!(stats.get("tau").as_f64().unwrap() >= 1.0);
+    assert!(stats.get("drafted").as_arr().is_some());
+    assert!(stats.get("generated_tokens").as_usize().unwrap() >= 96);
+    server.shutdown();
+}
+
+/// Golden wire framing: the response head, the byte-exact first frame,
+/// CRLF discipline, monotonic event ids, one terminal event, and the
+/// chunked round-trip through this file's own decoder.
+#[test]
+fn golden_sse_framing_is_pinned() {
+    let server = edge(vec![1, 4], 16, Duration::from_millis(1), FaultPlan::default());
+    let raw = post_generate(&server, "{\"prompt\": [5], \"max_new\": 6}");
+    assert!(raw.starts_with(b"HTTP/1.1 200 OK\r\n"));
+    let head_end = find(&raw, b"\r\n\r\n").unwrap();
+    let head = std::str::from_utf8(&raw[..head_end]).unwrap();
+    for needle in [
+        "Content-Type: text/event-stream",
+        "Cache-Control: no-cache",
+        "Connection: close",
+        "Transfer-Encoding: chunked",
+    ] {
+        assert!(head.contains(needle), "missing {needle:?} in:\n{head}");
+    }
+    // CRLF discipline across the WHOLE response: no bare LF anywhere.
+    for (i, b) in raw.iter().enumerate() {
+        if *b == b'\n' {
+            assert_eq!(raw[i - 1], b'\r', "bare LF at byte {i}");
+        }
+    }
+    assert!(raw.ends_with(b"0\r\n\r\n"), "terminal chunk must close the body");
+    let payload = decode_chunked(&raw[head_end + 4..]);
+    assert!(
+        payload.starts_with(b"id: 0\r\nevent: queued\r\ndata: {}\r\n\r\n"),
+        "first frame not pinned, got: {}",
+        String::from_utf8_lossy(&payload[..payload.len().min(64)])
+    );
+    let events = parse_sse(&payload);
+    for (i, e) in events.iter().enumerate() {
+        assert_eq!(e.id, i as u64, "event ids must increase monotonically from 0");
+    }
+    assert_eq!(events.last().unwrap().event, "done");
+    assert_eq!(
+        events
+            .iter()
+            .filter(|e| e.event == "done" || e.event == "fault")
+            .count(),
+        1,
+        "exactly one terminal event"
+    );
+    server.shutdown();
+}
+
+/// Edge chaos: the client severs its connection mid-stream (driven by
+/// the FaultPlan's `drop_conn_at`); the edge must notice, cancel the
+/// session through the router, and free the slot for new work.
+#[test]
+fn mid_stream_disconnect_cancels_the_session() {
+    let plan = FaultPlan::default().drop_conn_at(2);
+    let drop_after = plan.drop_conn_at.unwrap() as usize;
+    let server = edge(vec![1, 4], 16, Duration::from_millis(1), plan);
+    // Admissible, but far too long to finish on its own: the session
+    // can only end because the vanished client cancels it.
+    let (s, _) = open_stream(&server, "{\"prompt\": [1, 2], \"max_new\": 2000}", drop_after);
+    drop(s); // act out DropConnAt: FIN mid-stream
+
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let m = metrics_text(&server);
+        if m.contains("lkspec_sched_cancelled_total{engine=\"router\"} 1")
+            && m.contains("lkspec_http_disconnects_total 1")
+            && m.contains("lkspec_http_queue_depth 0")
+        {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "disconnect-cancel not observed; metrics:\n{m}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // The freed slot serves fresh work to completion.
+    let resp = parse_response(&post_generate(
+        &server,
+        "{\"prompt\": [9], \"max_new\": 4, \"stream\": false}",
+    ));
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.body_json().get("tokens").as_arr().unwrap().len(), 4);
+    server.shutdown();
+}
+
+/// Graceful drain through the edge: `/healthz` flips to 503, new
+/// generate requests are refused with 503, and the in-flight stream
+/// keeps decoding to its full `done` event.
+#[test]
+fn drain_refuses_new_work_and_finishes_inflight() {
+    let server = edge(vec![1, 4], 16, Duration::from_millis(1), FaultPlan::default());
+    let (mut s, mut seen) = open_stream(&server, "{\"prompt\": [3, 4], \"max_new\": 64}", 1);
+    server.drain();
+    let hz = parse_response(&request(&server, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n"));
+    assert_eq!(hz.status, 503);
+    assert!(String::from_utf8(hz.body).unwrap().contains("draining"));
+    let refused = parse_response(&post_generate(&server, "{\"prompt\": [7], \"max_new\": 4}"));
+    assert_eq!(refused.status, 503);
+    assert!(
+        String::from_utf8(refused.body).unwrap().contains("draining"),
+        "refusal must say why"
+    );
+    // The stream opened before the drain runs to completion.
+    s.read_to_end(&mut seen).expect("stream tail");
+    let resp = parse_response(&seen);
+    let events = parse_sse(&resp.body);
+    let done = events.last().unwrap();
+    assert_eq!(done.event, "done", "in-flight work must finish under drain");
+    assert_eq!(
+        Json::parse(&done.data).unwrap().get("n_tokens").as_usize(),
+        Some(64)
+    );
+    let m = metrics_text(&server);
+    assert!(
+        m.contains("lkspec_http_sheds_total 1"),
+        "the drain refusal must count as a shed; metrics:\n{m}"
+    );
+    server.shutdown();
+}
+
+/// Backpressure at the edge: with the scheduler queue held full
+/// (buckets never fill, `max_wait` outlasts the test), the next request
+/// bounces with 429 + `Retry-After`, and the edge's queue-depth gauge
+/// agrees with the scheduler's own.
+#[test]
+fn queue_full_returns_429_and_gauges_agree() {
+    let server = edge(vec![4], 2, Duration::from_secs(1000), FaultPlan::default());
+    let body = "{\"prompt\": [1], \"max_new\": 4}";
+    let mut held = Vec::new();
+    for _ in 0..2 {
+        // Wait for `queued` so the two admissions are ordered.
+        let (s, _) = open_stream(&server, body, 0);
+        held.push(s);
+    }
+    let resp = parse_response(&post_generate(&server, body));
+    assert_eq!(resp.status, 429);
+    assert_eq!(resp.header("retry-after"), Some("1"));
+    assert!(
+        String::from_utf8(resp.body.clone()).unwrap().contains("queue full"),
+        "429 body must carry the verdict"
+    );
+    let m = metrics_text(&server);
+    assert!(m.contains("lkspec_http_queue_depth 2"), "metrics:\n{m}");
+    assert!(
+        m.contains("lkspec_sched_queue_depth{engine=\"router\"} 2"),
+        "edge and scheduler must agree on queued work; metrics:\n{m}"
+    );
+    assert!(m.contains("lkspec_http_sheds_total 1"), "metrics:\n{m}");
+    drop(held);
+    server.shutdown();
+}
+
+/// A session-fatal engine fault mid-stream arrives as an SSE `fault`
+/// event (the 200 head is already on the wire) and still terminates the
+/// chunked body cleanly.
+#[test]
+fn mid_stream_fault_arrives_as_sse_fault_event() {
+    let server = edge(
+        vec![1, 4],
+        16,
+        Duration::from_millis(1),
+        FaultPlan::default().session_fatal_at(2, 0),
+    );
+    let raw = post_generate(&server, "{\"prompt\": [1, 2], \"max_new\": 500}");
+    let resp = parse_response(&raw);
+    assert_eq!(resp.status, 200, "the fault struck after the 200 head");
+    assert!(raw.ends_with(b"0\r\n\r\n"), "fault must still close the body");
+    let events = parse_sse(&resp.body);
+    let last = events.last().unwrap();
+    assert_eq!(last.event, "fault");
+    let d = Json::parse(&last.data).unwrap();
+    assert_eq!(d.get("status").as_i64(), Some(500));
+    assert!(
+        d.get("error").as_str().unwrap().contains("session fault"),
+        "got: {}",
+        last.data
+    );
+    server.shutdown();
+}
+
+/// Admission and parse errors surface as their mapped status codes —
+/// never a hang, never a panic, never a 200.
+#[test]
+fn edge_maps_errors_to_status_codes() {
+    let server = edge(vec![1, 4], 16, Duration::from_millis(1), FaultPlan::default());
+    let hz = parse_response(&request(&server, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n"));
+    assert_eq!(hz.status, 200);
+    // Malformed request head -> 400 (parser verdict).
+    let resp = parse_response(&request(&server, "NOT HTTP\r\n\r\n"));
+    assert_eq!(resp.status, 400);
+    // Unknown route -> 404.
+    let resp = parse_response(&request(&server, "GET /nope HTTP/1.1\r\nHost: t\r\n\r\n"));
+    assert_eq!(resp.status, 404);
+    // Non-JSON body -> 400.
+    let resp = parse_response(&post_generate(&server, "not json"));
+    assert_eq!(resp.status, 400);
+    // Missing prompt -> 400 naming the field.
+    let resp = parse_response(&post_generate(&server, "{\"max_new\": 4}"));
+    assert_eq!(resp.status, 400);
+    assert!(String::from_utf8(resp.body).unwrap().contains("prompt"));
+    // Inadmissible size -> 413 (the paged pool can never hold it).
+    let resp = parse_response(&post_generate(
+        &server,
+        "{\"prompt\": [1], \"max_new\": 100000}",
+    ));
+    assert_eq!(resp.status, 413);
+    assert!(String::from_utf8(resp.body).unwrap().contains("KV blocks"));
+    server.shutdown();
+}

@@ -6,6 +6,7 @@ use lk_spec::data::corpus::Dataset;
 use lk_spec::data::grammar::{Domain, DOMAINS};
 use lk_spec::data::vocab::{build_vocab_map, invert_vocab_map};
 use lk_spec::server::batcher::{Batcher, BatcherConfig};
+use lk_spec::server::http::parse::{HttpRequest, ParseError, ParseLimits, RequestParser};
 use lk_spec::server::kv::{copy_row, gather_rows};
 use lk_spec::spec::accept::AcceptanceStats;
 use lk_spec::spec::gradients;
@@ -1142,6 +1143,130 @@ fn prop_adaptive_constant_schedule_is_fixed_k() {
                 return Err("RNG streams misaligned after equal schedules".into());
             }
             Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// HTTP request parser: torn-read invariance (server/http/parse.rs)
+// ---------------------------------------------------------------------------
+
+/// Feed a parser the given byte pieces in order; stop at the first
+/// completed request or sticky error — exactly what a connection
+/// handler's read loop does.
+fn run_http_parser(pieces: &[&[u8]]) -> Result<Option<HttpRequest>, ParseError> {
+    let mut p = RequestParser::new(ParseLimits::default());
+    for piece in pieces {
+        match p.feed(piece) {
+            Ok(None) => {}
+            done => return done,
+        }
+    }
+    Ok(None)
+}
+
+/// TCP may tear a request anywhere: whole-buffer, byte-at-a-time, and
+/// random-split framings of the same byte stream must produce the
+/// IDENTICAL parse — same request, or same typed error — for
+/// well-formed and malformed corpus entries alike.
+#[test]
+fn prop_http_parser_split_invariant() {
+    let mut oversized_head = b"GET / HTTP/1.1\r\nX-Pad: ".to_vec();
+    oversized_head.resize(oversized_head.len() + 9000, b'a');
+    oversized_head.extend_from_slice(b"\r\n\r\n");
+    let corpus: Vec<Vec<u8>> = vec![
+        b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n".to_vec(),
+        b"GET /metrics HTTP/1.1\r\nAccept: text/plain\r\nX-Trace: abc\r\n\r\n".to_vec(),
+        b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 34\r\n\r\n\
+          {\"prompt\": [1, 2], \"max_new\": 8}\r\n"
+            .to_vec(),
+        // Malformed: wrong version, bare LF, smuggling shapes -> 400.
+        b"GET / HTTP/1.0\r\nHost: x\r\n\r\n".to_vec(),
+        b"GET / HTTP/1.1\nHost: x\r\n\r\n".to_vec(),
+        b"GET / HTTP/1.1\r\nHost : x\r\n\r\n".to_vec(),
+        b"junk\r\n\r\n".to_vec(),
+        // Oversized: declared body -> 413, giant head -> 431.
+        b"POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n".to_vec(),
+        oversized_head,
+    ];
+    forall(
+        "http parser split invariance",
+        0x7C9E11,
+        64,
+        |rng| {
+            let raw = corpus[rng.below(corpus.len())].clone();
+            let mut cuts: Vec<usize> = (0..1 + rng.below(6)).map(|_| rng.below(raw.len())).collect();
+            cuts.sort_unstable();
+            (raw, cuts)
+        },
+        |(raw, cuts)| {
+            let whole = run_http_parser(&[&raw[..]]);
+            let bytes: Vec<&[u8]> = raw.chunks(1).collect();
+            if run_http_parser(&bytes) != whole {
+                return Err(format!("byte-at-a-time diverged from whole (want {whole:?})"));
+            }
+            let mut pieces = Vec::new();
+            let mut prev = 0usize;
+            for &c in cuts {
+                pieces.push(&raw[prev..c]);
+                prev = c;
+            }
+            pieces.push(&raw[prev..]);
+            if run_http_parser(&pieces) != whole {
+                return Err(format!("split at {cuts:?} diverged from whole (want {whole:?})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Garbage in, typed verdict out: random binary noise, CRLF-sprinkled
+/// ASCII, and corrupted valid prefixes must never panic the parser —
+/// every failure is a 400/413/431 verdict, and verdicts are sticky.
+#[test]
+fn prop_http_parser_never_panics_on_garbage() {
+    forall(
+        "http parser survives garbage",
+        0xBADB17E5,
+        128,
+        |rng| {
+            let len = 1 + rng.below(600);
+            let mode = rng.below(3);
+            let mut raw = Vec::with_capacity(len + 32);
+            if mode == 2 {
+                raw.extend_from_slice(b"POST /v1/generate HTTP/1.1\r\n");
+            }
+            for _ in 0..len {
+                let b = match (mode, rng.below(8)) {
+                    (0, _) => rng.below(256) as u8,
+                    (_, 0) => b'\r',
+                    (_, 1) => b'\n',
+                    (_, 2) => b' ',
+                    (_, 3) => b':',
+                    _ => b'a' + rng.below(26) as u8,
+                };
+                raw.push(b);
+            }
+            raw.extend_from_slice(b"\r\n\r\n");
+            raw
+        },
+        |raw| {
+            let mut p = RequestParser::new(ParseLimits::default());
+            match p.feed(raw) {
+                Ok(_) => Ok(()), // parsed or still waiting — both fine
+                Err(e) => {
+                    let status = e.http_status();
+                    if !matches!(status, 400 | 413 | 431) {
+                        return Err(format!("unmapped status {status} for {e:?}"));
+                    }
+                    // Sticky: the poisoned parser keeps refusing with
+                    // the same verdict.
+                    match p.feed(b"GET /healthz HTTP/1.1\r\n\r\n") {
+                        Err(e2) if e2 == e => Ok(()),
+                        other => Err(format!("error not sticky: {other:?} after {e:?}")),
+                    }
+                }
+            }
         },
     );
 }

@@ -50,6 +50,13 @@ SCHEMAS: dict[str, set[str]] = {
         "transient_retries",
         "rounds_to_recover",
     },
+    "http_stream_latency": {
+        "requests",
+        "tokens",
+        "events",
+        "ttft_ms_p50",
+        "inter_token_ms_p50",
+    },
 }
 
 # Sections that must be present in EVERY run (artifact-less CI included;
@@ -60,6 +67,7 @@ ALWAYS_PRESENT = {
     "paged_kv_capacity",
     "kv_migration_analytic",
     "chaos_smoke",
+    "http_stream_latency",
 }
 
 

@@ -55,6 +55,7 @@ PROMPT_LEN = 32    # prefill bucket
 VERIFY_T = 8       # K+1 tokens per verification round (K=7 eval max)
 SERVE_BATCHES = (1, 4)
 DRAFT_VOCAB = 320
+PREFILL_CHUNK = 16  # chunked-prefill step (divides PROMPT_LEN)
 
 # The sweep needs these (target, arch) pairs (DESIGN.md §5):
 #   eagle3 on all non-mtp targets; medusa+mlp on dense-s; mtp on mtp-l.
@@ -277,6 +278,29 @@ def lower_target(w: EntryWriter, cfg: M.TargetConfig) -> dict:
                     ("pos", [i32((b,))]),  # per-row positions
                 ],
             )
+
+        # --- chunked prefill: one fixed-length chunk written at a
+        # runtime position offset over a carried KV. This is exactly the
+        # verify forward (same causal mask + RoPE arithmetic), so
+        # composing chunks at pos = 0, C, 2C, ... over a zero-initialized
+        # KV reproduces whole-prompt prefill for every computed position
+        # — which is what lets a radix prefix hit skip whole chunks of
+        # compute, not just KV capacity (DESIGN.md §11).
+        def prefill_chunk_fn(*flat):
+            p = unflatten(flat[:n_params])
+            kv, tokens, pos = flat[n_params:]
+            return M.target_verify(p, kv, tokens, pos, cfg)
+
+        entries[f"prefill_chunk_b{b}"] = w.lower(
+            f"tgt_{cfg.name}_prefill_chunk_b{b}",
+            prefill_chunk_fn,
+            [
+                ("params", pstructs),
+                ("kv", [kv_spec]),
+                ("tokens", [i32((b, PREFILL_CHUNK))]),
+                ("pos", [i32((b,))]),
+            ],
+        )
 
         # --- device-resident verify: target forward + fused rejection
         # sampling in one graph. Draft q's arrive as K separate [B, V]
@@ -1007,6 +1031,7 @@ def main() -> None:
         "train_batch": TRAIN_BATCH,
         "prompt_len": PROMPT_LEN,
         "verify_t": VERIFY_T,
+        "prefill_chunk": PREFILL_CHUNK,
         "serve_batches": list(SERVE_BATCHES),
         "draft_vocab": DRAFT_VOCAB,
         "targets": {},

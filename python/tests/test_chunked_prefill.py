@@ -1,0 +1,124 @@
+"""Chunked-prefill parity: composing fixed-length `target_verify` chunks
+at pos = 0, C, 2C, ... over a zero-initialized KV must reproduce
+whole-prompt `target_prefill` — KV, features, final-position logits, and
+the greedy first token. This is the correctness keystone for the serving
+`prefill_chunk_b{B}` entries (DESIGN.md §11): the chunk forward is the
+verify forward, so the causal mask `(jpos <= qpos) & (jpos < kv_len)`
+and RoPE positions `pos + arange(s)` compose to exactly the whole-prompt
+arithmetic for every computed position.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def small_cfg(**kw):
+    base = dict(name="test", vocab=128, d_model=32, n_layers=3, n_heads=2, max_seq=64)
+    base.update(kw)
+    return M.TargetConfig(**base)
+
+
+def zero_kv(cfg, b):
+    # Stacked serving layout [L, 2, B, H, Smax, Dh] — matches the
+    # kv_spec the AOT entries carry executable-to-executable.
+    return jnp.zeros(
+        (cfg.n_layers, 2, b, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    )
+
+
+def run_chunks(p, tokens, chunk, cfg):
+    """Drive prefill as fixed-size verify chunks; returns the last
+    chunk's logits plus the carried kv/feats, mirroring the engine's
+    PendingPrefill accumulation."""
+    b, sp = tokens.shape
+    assert sp % chunk == 0
+    kv = zero_kv(cfg, b)
+    feats = []
+    logits = None
+    for j in range(sp // chunk):
+        pos = jnp.full((b,), j * chunk, dtype=jnp.int32)
+        logits, kv, ft = M.target_verify(
+            p, kv, tokens[:, j * chunk : (j + 1) * chunk], pos, cfg
+        )
+        feats.append(ft)
+    return logits, kv, jnp.concatenate(feats, axis=1)
+
+
+@pytest.mark.parametrize("experts", [0, 4])
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_chunked_equals_whole_prompt(experts, chunk):
+    cfg = small_cfg(n_experts=experts)
+    p = M.init_target(KEY, cfg)
+    sp = 32
+    x = jax.random.randint(jax.random.PRNGKey(1), (2, sp), 0, cfg.vocab)
+
+    lg_whole, kv_whole, ft_whole = M.target_prefill(p, x, sp, cfg)
+    lg_last, kv_chunk, ft_chunk = run_chunks(p, x, chunk, cfg)
+
+    # KV parity over the written region (beyond sp both are zeros).
+    np.testing.assert_allclose(
+        kv_chunk[:, :, :, :, :sp], kv_whole[:, :, :, :, :sp], atol=1e-5
+    )
+
+    # Feature-carry parity (the EAGLE-style draft conditioning input).
+    np.testing.assert_allclose(ft_chunk, ft_whole, atol=1e-5)
+
+    # The last chunk's final-position logits are what the engine samples
+    # the first token from; they must match the whole-prompt logits at
+    # position sp-1 — and the greedy argmax must match exactly.
+    np.testing.assert_allclose(lg_last[:, -1], lg_whole[:, -1], atol=1e-4)
+    assert (jnp.argmax(lg_last[:, -1], -1) == jnp.argmax(lg_whole[:, -1], -1)).all()
+
+
+def test_skipped_prefix_chunks_resume_identically():
+    """A radix prefix hit lets the engine skip already-computed chunks
+    and seed the carry from a cached KV snapshot. Model that: compute
+    chunks 0..j from one run, resume j.. with the same carried KV, and
+    require the result to match the uninterrupted composition."""
+    cfg = small_cfg()
+    p = M.init_target(KEY, cfg)
+    sp, chunk = 32, 8
+    x = jax.random.randint(jax.random.PRNGKey(2), (1, sp), 0, cfg.vocab)
+
+    lg_full, kv_full, ft_full = run_chunks(p, x, chunk, cfg)
+
+    # "Cached" carry: first two chunks computed by an earlier session.
+    kv = zero_kv(cfg, 1)
+    for j in range(2):
+        pos = jnp.full((1,), j * chunk, dtype=jnp.int32)
+        _, kv, _ = M.target_verify(p, kv, x[:, j * chunk : (j + 1) * chunk], pos, cfg)
+    # Resume from chunk 2 over the cached carry.
+    lg = None
+    for j in range(2, sp // chunk):
+        pos = jnp.full((1,), j * chunk, dtype=jnp.int32)
+        lg, kv, _ = M.target_verify(p, kv, x[:, j * chunk : (j + 1) * chunk], pos, cfg)
+
+    np.testing.assert_allclose(
+        kv[:, :, :, :, :sp], kv_full[:, :, :, :, :sp], atol=1e-5
+    )
+    np.testing.assert_allclose(lg[:, -1], lg_full[:, -1], atol=1e-4)
+
+
+def test_decode_after_chunked_prefill_matches():
+    """End-to-end: a verify round launched off a chunked-prefill carry
+    produces the same logits as one launched off whole-prompt prefill —
+    greedy decode downstream is therefore token-identical."""
+    cfg = small_cfg()
+    p = M.init_target(KEY, cfg)
+    sp, chunk, t = 32, 16, 8
+    x = jax.random.randint(jax.random.PRNGKey(3), (1, sp + t), 0, cfg.vocab)
+
+    _, kv_w, _ = M.target_prefill(p, x[:, :sp], sp, cfg)
+    _, kv_c, _ = run_chunks(p, x[:, :sp], chunk, cfg)
+
+    pos = jnp.full((1,), sp, dtype=jnp.int32)
+    lg_w, _, _ = M.target_verify(p, kv_w, x[:, sp:], pos, cfg)
+    lg_c, _, _ = M.target_verify(p, kv_c, x[:, sp:], pos, cfg)
+    np.testing.assert_allclose(lg_c, lg_w, atol=1e-4)
+    assert (jnp.argmax(lg_c, -1) == jnp.argmax(lg_w, -1)).all()

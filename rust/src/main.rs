@@ -74,6 +74,10 @@ fn print_help() {
                          Paged KV: --kv-blocks N (pool budget, default 256),\n\
                          --kv-block-size N (tokens/block, default 16),\n\
                          --no-prefix-cache (disable cross-session sharing).\n\
+                         Chunked prefill: on by default when the artifacts\n\
+                         carry the chunk entry; --prefill-chunk 0 = off,\n\
+                         N pins the expected chunk length; --prefill-budget M\n\
+                         caps chunks per decode round (DESIGN.md §11).\n\
                          Robustness: --deadline-ms N (per-request latency\n\
                          budget; expired requests are shed with a typed\n\
                          verdict, 0 = off); shutdown drains gracefully.\n\
@@ -374,6 +378,18 @@ fn serve_demo(args: &Args) -> Result<()> {
         paged_kv.block_size > 0 && paged_kv.total_blocks > 0,
         "--kv-block-size and --kv-blocks must be positive"
     );
+    // Chunked prefill (DESIGN.md §11): long joining prompts amortize
+    // across decode rounds instead of stalling the group. On by default
+    // whenever the artifacts carry the prefill_chunk_b1 entry.
+    // --prefill-chunk 0 turns the lane off; a nonzero value pins the
+    // expected chunk length (a mismatch with the lowered entry leaves
+    // the lane off). --prefill-budget caps chunks per decode round.
+    let prefill_chunk = args
+        .opt("prefill-chunk")
+        .map(|s| s.parse::<usize>())
+        .transpose()
+        .map_err(|_| anyhow::anyhow!("--prefill-chunk expects an integer"))?;
+    let prefill_budget = args.opt_usize("prefill-budget", 4)?;
     // HTTP edge (DESIGN.md §10): --http ADDR serves SSE token streams
     // over the same router instead of running the demo burst.
     let http_defaults = lk_spec::server::HttpOpts::default();
@@ -395,6 +411,8 @@ fn serve_demo(args: &Args) -> Result<()> {
 
     let router_cfg = RouterConfig {
         paged_kv: Some(paged_kv),
+        prefill_chunk,
+        prefill_budget,
         ..Default::default()
     };
     let router = Router::spawn(router_cfg, move || {

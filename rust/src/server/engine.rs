@@ -59,11 +59,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::runtime::Runtime;
+use crate::runtime::{pack, Runtime};
 use crate::spec::accept::AcceptanceStats;
-use crate::spec::adaptive::{ControllerCfg, CostModel, SpecController};
+use crate::spec::adaptive::{
+    ControllerCfg, CostModel, PrefillArbiter, PrefillArbiterCfg, SpecController,
+};
 use crate::spec::sampling::{self, RoundUniforms, SamplingMode, TreeSpec};
-use crate::tensor::Checkpoint;
+use crate::tensor::{Checkpoint, HostTensor};
 use crate::train::checkpoint_to_params;
 use crate::util::Pcg64;
 
@@ -271,6 +273,71 @@ pub struct SpecEngine<'rt> {
     /// The current candidate-tree topology (fixed `--tree`, or the
     /// controller's latest plan). None = chain decoding.
     tree_plan: Option<TreeSpec>,
+    /// Chunked prefill (DESIGN.md §11): the lowered `prefill_chunk_b1`
+    /// entry's (chunk length, carried-KV shape); None on artifact sets
+    /// that predate the entry — the scheduler then joins whole prompts.
+    prefill_chunk: Option<(usize, Vec<usize>)>,
+    /// In-flight chunked prefills, keyed by the target group row.
+    pending_prefill: std::collections::HashMap<usize, PendingPrefill>,
+    /// Chunk-boundary carry snapshots for the cached-prefix skip.
+    chunk_cache: ChunkCache,
+}
+
+/// One session's in-flight chunked prefill (`prefill_begin` →
+/// `prefill_step`… → row splice). The carry is exactly the whole-prompt
+/// prefill state after `done` positions: the chunk entry is the verify
+/// forward, so composing chunks at pos = 0, C, 2C, … over a zeroed KV
+/// reproduces `prefill_b{B}` bit-for-bit on every computed position
+/// (pinned by python/tests/test_chunked_prefill.py).
+struct PendingPrefill {
+    req: AdmitReq,
+    /// Prompt positions already in the carry (cache-skipped + computed).
+    done: usize,
+    /// Carried target KV `[L, 2, 1, H, Smax, Dh]` after `done` positions.
+    kv: xla::Literal,
+    /// Features for positions `0..done`, flat `[done * feat_dim]` — the
+    /// draft bootstrap's conditioning input. Cache-seeded prefixes are
+    /// included: every snapshot's feats cover its whole boundary.
+    feats: Vec<f32>,
+    /// Queue wait measured at admission (`prefill_begin`).
+    queue_ms: f64,
+}
+
+/// Bounded (FIFO-evicted) cache of chunk-boundary prefill carries keyed
+/// by the exact token prefix: a joining session whose prompt shares a
+/// cached boundary seeds its carry from the snapshot and SKIPS those
+/// chunks' compute entirely — the radix prefix cache's block sharing
+/// upgraded to compute sharing. Snapshots live host-side (a few hundred
+/// KB each at the lowered shapes), uploaded once on a hit.
+struct ChunkCache {
+    cap: usize,
+    map: std::collections::HashMap<Vec<i32>, (HostTensor, Vec<f32>)>,
+    order: std::collections::VecDeque<Vec<i32>>,
+}
+
+impl ChunkCache {
+    fn new(cap: usize) -> ChunkCache {
+        ChunkCache {
+            cap: cap.max(1),
+            map: std::collections::HashMap::new(),
+            order: std::collections::VecDeque::new(),
+        }
+    }
+
+    fn get(&self, key: &[i32]) -> Option<&(HostTensor, Vec<f32>)> {
+        self.map.get(key)
+    }
+
+    fn put(&mut self, key: Vec<i32>, kv: HostTensor, feats: Vec<f32>) {
+        if self.map.insert(key.clone(), (kv, feats)).is_none() {
+            self.order.push_back(key);
+            if self.order.len() > self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+    }
 }
 
 impl<'rt> SpecEngine<'rt> {
@@ -414,6 +481,16 @@ impl<'rt> SpecEngine<'rt> {
         } else {
             None
         };
+        // Chunked-prefill support: chunk length from the lowered
+        // `prefill_chunk_b1` entry's tokens input `[1, C]`, carried-KV
+        // shape from its kv input. Absent on artifact sets lowered
+        // before the entry existed — the scheduler then falls back to
+        // whole-prompt joins.
+        let prefill_chunk = tspec.entries.get("prefill_chunk_b1").and_then(|e| {
+            let c = e.inputs.iter().find(|a| a.group == "tokens")?.shape.last().copied()?;
+            let kv = e.inputs.iter().find(|a| a.group == "kv")?.shape.clone();
+            (c > 0).then_some((c, kv))
+        });
         Ok(SpecEngine {
             cx: EngineCx {
                 rt,
@@ -436,6 +513,9 @@ impl<'rt> SpecEngine<'rt> {
             adaptive_chain,
             adaptive_tree,
             tree_plan,
+            prefill_chunk,
+            pending_prefill: std::collections::HashMap::new(),
+            chunk_cache: ChunkCache::new(32),
         })
     }
 
@@ -1350,6 +1430,9 @@ impl<'rt> SchedulerCore for SpecEngine<'rt> {
         if let Some(max_id) = reqs.iter().map(|r| r.id).max() {
             self.next_req_id = self.next_req_id.max(max_id + 1);
         }
+        // A fresh group replaces whatever ran before it; any carries
+        // parked against the old group's rows are dead.
+        self.pending_prefill.clear();
         self.bootstrap_group(reqs)
     }
 
@@ -1381,6 +1464,227 @@ impl<'rt> SchedulerCore for SpecEngine<'rt> {
         Ok(())
     }
 
+    fn prefill_chunk_len(&self) -> Option<usize> {
+        self.prefill_chunk.as_ref().map(|(c, _)| *c)
+    }
+
+    /// The verify-vs-prefill exchange rate comes from the SAME cost
+    /// model the speculation controller prices K with, so the arbiter's
+    /// "one chunk ≈ chunk/verify_t rounds" stays honest per backend.
+    fn prefill_arbiter(&self, max_chunks_per_round: usize) -> Option<PrefillArbiter> {
+        let (c, _) = self.prefill_chunk.as_ref()?;
+        Some(PrefillArbiter::new(PrefillArbiterCfg {
+            max_chunks_per_round,
+            ..PrefillArbiterCfg::for_chunk(
+                *c,
+                self.cx.rt.manifest.verify_t,
+                self.backend.cost_model(),
+                self.cx.k,
+            )
+        }))
+    }
+
+    /// Park a chunked prefill on free row `row`: seed the carry from the
+    /// longest cached chunk-boundary prefix of the prompt (a zeroed KV
+    /// otherwise) and return how many positions were actually skipped —
+    /// at most the scheduler's authorization `skip`, which caps the skip
+    /// at whole chunks the radix cache proved shared AND below the final
+    /// chunk (the first token's logits must be computed). The row stays
+    /// inert padding until the final `prefill_step` splices the session.
+    fn prefill_begin(
+        &mut self,
+        g: &mut GroupState,
+        row: usize,
+        req: &AdmitReq,
+        skip: usize,
+    ) -> Result<usize> {
+        anyhow::ensure!(row < g.b, "prefill row {row} out of range (b={})", g.b);
+        anyhow::ensure!(
+            !self.pending_prefill.contains_key(&row),
+            "row {row} already has a prefill in flight"
+        );
+        let (c, kv_shape) = self
+            .prefill_chunk
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("artifact set lacks prefill_chunk_b1"))?;
+        anyhow::ensure!(
+            skip % c == 0 && skip < req.prompt.len(),
+            "bad skip authorization {skip} (chunk {c}, prompt {})",
+            req.prompt.len()
+        );
+        self.next_req_id = self.next_req_id.max(req.id + 1);
+        // Longest cached boundary ≤ the authorization. The radix cache
+        // authorizes by block sharing; the snapshot cache is smaller and
+        // FIFO-bounded, so a miss here just recomputes — never corrupts.
+        let mut start = skip;
+        let mut carry = None;
+        while start > 0 {
+            if let Some((kv, feats)) = self.chunk_cache.get(&req.prompt[..start]) {
+                carry = Some((pack::to_literal(kv)?, feats.clone()));
+                break;
+            }
+            start -= c;
+        }
+        let (kv, feats) = match carry {
+            Some(v) => v,
+            None => (lit_zeros_f32(&kv_shape)?, Vec::new()),
+        };
+        // Clear whatever drained session the row still pads with.
+        self.evict(g, row);
+        self.pending_prefill.insert(
+            row,
+            PendingPrefill {
+                req: req.clone(),
+                done: start,
+                kv,
+                feats,
+                queue_ms: Instant::now()
+                    .saturating_duration_since(req.enqueued)
+                    .as_secs_f64()
+                    * 1e3,
+            },
+        );
+        Ok(start)
+    }
+
+    /// Advance row `row`'s parked prefill by one chunk: one
+    /// `prefill_chunk_b1` dispatch at pos = `done` over the carried KV.
+    /// Intermediate boundaries publish their carry to the snapshot cache
+    /// (future joins sharing the prefix skip the compute). The final
+    /// chunk holds the last prompt position: sample the first token from
+    /// its logits — bit-equal to whole-prompt prefill, pinned by
+    /// python/tests/test_chunked_prefill.py — then bootstrap the draft
+    /// and splice the row exactly like `join`. Returns true when live.
+    fn prefill_step(&mut self, g: &mut GroupState, row: usize) -> Result<bool> {
+        let (c, _) = self
+            .prefill_chunk
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("artifact set lacks prefill_chunk_b1"))?;
+        let mut pending = match self.pending_prefill.remove(&row) {
+            Some(p) => p,
+            None => anyhow::bail!("no prefill in flight on row {row}"),
+        };
+        let len = pending.req.prompt.len();
+        anyhow::ensure!(pending.done < len, "prefill already complete on row {row}");
+        let mut chunk_tok = vec![0i32; c];
+        for (i, slot) in chunk_tok.iter_mut().enumerate() {
+            if pending.done + i < len {
+                *slot = pending.req.prompt[pending.done + i];
+            }
+        }
+        let entry = self.cx.rt.target_entry(&self.cx.tspec.name, "prefill_chunk_b1")?;
+        let dyn_in = [
+            pending.kv,
+            lit_i32(&[1, c], &chunk_tok)?,
+            lit_i32(&[1], &[pending.done as i32])?,
+        ];
+        let rt = self.cx.rt;
+        let tparams = &self.cx.tparams;
+        // A chunk blip retries in place (the carry is untouched by a
+        // failed attempt); past the budget the error surfaces and the
+        // scheduler's lane containment evicts just this session.
+        let outs = exec_with_retry(&mut self.metrics, || {
+            let dyn_b = upload(rt, &dyn_in)?;
+            let args = arg_refs(tparams, &[], &dyn_b);
+            entry.run_bufs(&args)
+        })?;
+        let logits = entry.output_host(&outs, 0)?;
+        let feats_t = entry.output_host(&outs, 2)?;
+        pending.kv = outs.into_iter().nth(1).unwrap();
+        pending.feats.extend(feats_t.as_f32());
+        let prev_done = pending.done;
+        pending.done += c;
+
+        if pending.done < len {
+            // Publish the boundary carry for future shared-prefix joins.
+            // Feats cover 0..done by induction (cache seeds included),
+            // so the snapshot is a complete resume point.
+            let kv_host =
+                pack::from_literal(&pending.kv, &entry.spec.outputs[1], "prefill_chunk carry")?;
+            self.chunk_cache.put(
+                pending.req.prompt[..pending.done].to_vec(),
+                kv_host,
+                pending.feats.clone(),
+            );
+            self.pending_prefill.insert(row, pending);
+            return Ok(false);
+        }
+
+        // --- final chunk: sample the first token, splice the row -----
+        let sp = self.cx.rt.manifest.prompt_len;
+        let vocab = self.cx.tspec.vocab;
+        let f3 = self.cx.tspec.feat_dim;
+        let idx = (len - 1) - prev_done;
+        let lrow = tensor_row(&logits, 0, &[1, c, vocab], idx);
+        let p = sampling::softmax_t(&lrow, self.cx.opts.temperature.max(1e-3));
+        let mut rng = request_rng(self.cx.opts.seed, pending.req.id);
+        let first = self.cx.sample_target(&mut rng, &p);
+        let seq = SeqState {
+            id: pending.req.id,
+            len,
+            last_token: first,
+            generated: vec![first],
+            max_new: pending.req.max_new,
+            rng,
+            stats: AcceptanceStats::new(self.cx.k),
+            done: false,
+            hidden: Vec::new(),
+            q1: Vec::new(),
+            enqueued: pending.req.enqueued,
+            queue_ms: pending.queue_ms,
+            ttft_ms: 0.0,
+            total_ms: 0.0,
+            rounds: 0,
+        };
+        // Whole-prompt layouts for the draft bootstrap: tokens and feats
+        // zero-padded past the prompt. Positions ≥ len are masked by the
+        // causal/len mask on every verify path, and draft-side deviation
+        // cannot change emitted tokens (greedy = target argmax path;
+        // stochastic = Leviathan-lossless) — only acceptance rates.
+        let mut tok_flat = vec![0i32; sp];
+        tok_flat[..len].copy_from_slice(&pending.req.prompt);
+        let mut feats_flat = vec![0f32; sp * f3];
+        let nf = pending.feats.len().min(sp * f3);
+        feats_flat[..nf].copy_from_slice(&pending.feats[..nf]);
+        let feats = HostTensor::from_f32(&[1, sp, f3], &feats_flat);
+        let tkv_spec = {
+            let mut s = entry.spec.outputs[1].clone();
+            s.name = String::new();
+            s
+        };
+        let mut mini = GroupState {
+            b: 1,
+            seqs: vec![seq],
+            tkv: pending.kv,
+            tkv_spec,
+            dkv: None,
+            dkv_spec: None,
+            h_prev: None,
+            tok0: vec![0; 1],
+            q0_dev: None,
+        };
+        self.backend.bootstrap(&self.cx, &mut mini, &tok_flat, &feats)?;
+        mini.seqs[0].ttft_ms = mini.seqs[0].enqueued.elapsed().as_secs_f64() * 1e3;
+        g.tkv = match copy_kv_row_device(&self.cx, KvSide::Target, g.b, 1, &g.tkv, &mini.tkv, row)? {
+            Some(tkv) => tkv,
+            None => copy_literal_row(
+                &g.tkv,
+                &g.tkv_spec,
+                row,
+                &mini.tkv,
+                &mini.tkv_spec,
+                0,
+                TKV_BATCH_AXIS,
+            )?,
+        };
+        self.backend.adopt_row(&self.cx, g, row, &mini, 0)?;
+        if self.cx.device_verify {
+            g.tok0[row] = mini.tok0[0];
+        }
+        g.seqs[row] = mini.seqs.swap_remove(0);
+        Ok(true)
+    }
+
     fn round(&mut self, g: &mut GroupState) -> Result<()> {
         self.decode_round(g)
     }
@@ -1399,6 +1703,13 @@ impl<'rt> SchedulerCore for SpecEngine<'rt> {
     fn migrate(&mut self, g: &mut GroupState, rows: &[usize], b_new: usize) -> Result<GroupState> {
         let n = rows.len();
         anyhow::ensure!(n > 0, "migrate of zero rows");
+        // Carries are keyed by row index; the scheduler holds bucket
+        // moves while any prefill is in flight — backstop it here.
+        anyhow::ensure!(
+            self.pending_prefill.is_empty(),
+            "migrate with {} chunked prefill(s) in flight",
+            self.pending_prefill.len()
+        );
         anyhow::ensure!(
             n <= b_new && b_new != g.b,
             "bad migration target {b_new} for {n} rows (from b={})",
@@ -1483,6 +1794,8 @@ impl<'rt> SchedulerCore for SpecEngine<'rt> {
     /// pad stream — the executables' batch shape must stay full — but
     /// no session state survives in it and a join can replace it.
     fn evict(&mut self, g: &mut GroupState, row: usize) {
+        // Drop any carry parked on the row (prefill-lane containment).
+        self.pending_prefill.remove(&row);
         let seq = &mut g.seqs[row];
         seq.id = PAD_STREAM_BASE + row as u64;
         seq.done = true;

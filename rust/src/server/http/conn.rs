@@ -1,9 +1,16 @@
-//! Per-connection handling: parse one request, route it, answer, close.
+//! Per-connection handling: parse requests, route them, answer —
+//! sequentially reusing the connection (HTTP/1.1 keep-alive).
 //!
-//! One request per connection keeps the state machine trivial (no
-//! pipelining, no keep-alive bookkeeping) — the interesting path is the
-//! streaming one. `POST /v1/generate` with `"stream": true` (the
-//! default) maps the router's event grammar onto the wire:
+//! A connection serves requests one at a time in a loop: each request
+//! gets a fresh parser seeded with whatever bytes the previous read
+//! pulled past its request's body, so torn reads and glued ("pipelined")
+//! requests both work. The connection holds its `--max-conns` slot for
+//! its whole lifetime — reuse is sequential, never concurrent — and
+//! closes on parse errors (the stream framing is unrecoverable), a
+//! client `Connection: close`, the idle read timeout, or after an SSE
+//! stream (which still answers `Connection: close`). The interesting
+//! path is the streaming one. `POST /v1/generate` with `"stream": true`
+//! (the default) maps the router's event grammar onto the wire:
 //!
 //!   * the FIRST event decides the status line — a pre-admission
 //!     `Fault` becomes a plain 4xx/5xx response (the client never sees
@@ -65,37 +72,64 @@ impl Drop for GaugeGuard<'_> {
     }
 }
 
-/// Serve one connection end-to-end. Any parse failure answers with the
-/// error's status ([`super::parse::ParseError::http_status`]) and
+/// Serve one connection end-to-end: sequential requests until the
+/// client closes, asks to close, goes idle past the read timeout, or a
+/// request ends the reuse (parse failure — the framing is
+/// unrecoverable — or an SSE stream). Any parse failure answers with
+/// the error's status ([`super::parse::ParseError::http_status`]) and
 /// closes; a vanished client just closes.
 pub(super) fn handle(mut stream: TcpStream, shared: &Shared) {
     let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(shared.opts.read_timeout));
-    let mut parser = RequestParser::new(ParseLimits::default());
-    let req = loop {
-        let mut buf = [0u8; 4096];
-        let n = match stream.read(&mut buf) {
-            Ok(0) => return, // peer closed before completing a request
-            Ok(n) => n,
-            Err(_) => return, // read timeout or reset: nobody to answer
-        };
-        match parser.feed(&buf[..n]) {
-            Ok(Some(req)) => break req,
-            Ok(None) => {}
-            Err(e) => {
-                shared.metrics.sheds.fetch_add(1, Ordering::Relaxed);
-                let body = error_body(&e.to_string());
-                let _ = stream.write_all(&simple_response(
-                    e.http_status(),
-                    "application/json",
-                    &body,
-                    &[],
-                ));
-                return;
+    let mut residual: Vec<u8> = Vec::new();
+    loop {
+        // Re-arm per request: streaming shrinks the timeout for its
+        // liveness probes, and the full window doubles as the
+        // keep-alive idle budget between requests.
+        let _ = stream.set_read_timeout(Some(shared.opts.read_timeout));
+        let mut parser = RequestParser::new(ParseLimits::default());
+        // The previous read may have pulled bytes past its request's
+        // body; they are the start of THIS request.
+        let mut seed = Some(std::mem::take(&mut residual));
+        let req = loop {
+            let fed = match seed.take() {
+                Some(bytes) => parser.feed(&bytes),
+                None => {
+                    let mut buf = [0u8; 4096];
+                    let n = match stream.read(&mut buf) {
+                        Ok(0) => return, // peer closed between/inside requests
+                        Ok(n) => n,
+                        Err(_) => return, // idle timeout or reset: nobody to answer
+                    };
+                    parser.feed(&buf[..n])
+                }
+            };
+            match fed {
+                Ok(Some(req)) => break req,
+                Ok(None) => {}
+                Err(e) => {
+                    shared.metrics.sheds.fetch_add(1, Ordering::Relaxed);
+                    let body = error_body(&e.to_string());
+                    let _ = stream.write_all(&simple_response(
+                        e.http_status(),
+                        "application/json",
+                        &body,
+                        &[],
+                        false,
+                    ));
+                    return;
+                }
             }
+        };
+        residual = parser.residual().to_vec();
+        // RFC 9112 connection option: any `close` token ends reuse
+        // after this response.
+        let client_close = req
+            .header("connection")
+            .is_some_and(|v| v.split(',').any(|t| t.trim().eq_ignore_ascii_case("close")));
+        if !route(&mut stream, shared, &req, !client_close) {
+            return;
         }
-    };
-    route(stream, shared, &req);
+    }
 }
 
 /// Refuse a connection over the `max_conns` cap without spawning a
@@ -107,37 +141,49 @@ pub(super) fn refuse_overloaded(mut stream: TcpStream) {
         "application/json",
         &body,
         &[("Retry-After", "1")],
+        false,
     ));
 }
 
-fn route(mut stream: TcpStream, shared: &Shared, req: &HttpRequest) {
+/// Dispatch one request; returns whether the connection stays reusable
+/// (`allow_keep` ANDed with the route's own verdict — SSE streams and
+/// wedged-worker responses close).
+fn route(stream: &mut TcpStream, shared: &Shared, req: &HttpRequest, allow_keep: bool) -> bool {
     let path = req.target.split('?').next().unwrap_or(&req.target);
     match (req.method.as_str(), path) {
-        ("GET", "/healthz") => healthz(stream, shared),
-        ("GET", "/metrics") => metrics(stream, shared),
-        ("POST", "/v1/generate") => generate(stream, shared, req),
+        ("GET", "/healthz") => healthz(stream, shared, allow_keep),
+        ("GET", "/metrics") => metrics(stream, shared, allow_keep),
+        ("POST", "/v1/generate") => generate(stream, shared, req, allow_keep),
         _ => {
             let body = error_body(&format!("no route {} {}", req.method, path));
-            let _ = stream.write_all(&simple_response(404, "application/json", &body, &[]));
+            let _ = stream.write_all(&simple_response(
+                404,
+                "application/json",
+                &body,
+                &[],
+                allow_keep,
+            ));
+            allow_keep
         }
     }
 }
 
 /// Liveness for load balancers: 200 while serving, 503 once draining —
 /// flip first, then stop sending traffic, then shut down.
-fn healthz(mut stream: TcpStream, shared: &Shared) {
+fn healthz(stream: &mut TcpStream, shared: &Shared, keep: bool) -> bool {
     let (status, body) = if shared.draining.load(Ordering::SeqCst) {
         (503, "{\"status\": \"draining\"}")
     } else {
         (200, "{\"status\": \"ok\"}")
     };
-    let _ = stream.write_all(&simple_response(status, "application/json", body, &[]));
+    let _ = stream.write_all(&simple_response(status, "application/json", body, &[], keep));
+    keep
 }
 
 /// Edge gauges (`lkspec_http_*`) plus the scheduler's own counters
 /// fetched from the worker thread; if the worker is wedged the edge
 /// block still renders, annotated with the probe failure.
-fn metrics(mut stream: TcpStream, shared: &Shared) {
+fn metrics(stream: &mut TcpStream, shared: &Shared, keep: bool) -> bool {
     let mut text = shared.metrics.render();
     match shared.router.metrics_text(Duration::from_secs(2)) {
         Ok(sched) => text.push_str(&sched),
@@ -148,7 +194,9 @@ fn metrics(mut stream: TcpStream, shared: &Shared) {
         "text/plain; version=0.0.4",
         &text,
         &[],
+        keep,
     ));
+    keep
 }
 
 struct GenerateReq {
@@ -180,19 +228,20 @@ fn parse_body(raw: &[u8]) -> Result<GenerateReq, String> {
     })
 }
 
-fn generate(stream: TcpStream, shared: &Shared, req: &HttpRequest) {
+fn generate(stream: &mut TcpStream, shared: &Shared, req: &HttpRequest, keep: bool) -> bool {
     shared.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
     if shared.draining.load(Ordering::SeqCst) {
-        // Answer the drain refusal at the edge: in-flight streams keep
-        // running, new work never reaches the router.
-        shed(stream, shared, 503, "draining: not accepting new requests", &[]);
-        return;
+        // Answer the drain refusal at the edge and close: in-flight
+        // streams keep running, new work never reaches the router, and
+        // a draining server should not hold idle keep-alive slots.
+        shed(stream, shared, 503, "draining: not accepting new requests", &[], false);
+        return false;
     }
     let body = match parse_body(&req.body) {
         Ok(b) => b,
         Err(why) => {
-            shed(stream, shared, 400, &why, &[]);
-            return;
+            shed(stream, shared, 400, &why, &[], keep);
+            return keep;
         }
     };
     let max_new = body.max_new.unwrap_or(shared.opts.default_max_new);
@@ -200,49 +249,58 @@ fn generate(stream: TcpStream, shared: &Shared, req: &HttpRequest) {
         .deadline_ms
         .map(|ms| Instant::now() + Duration::from_millis(ms as u64));
     if body.stream {
-        generate_stream(stream, shared, body.prompt, max_new, deadline);
+        generate_stream(stream, shared, body.prompt, max_new, deadline, keep)
     } else {
-        generate_oneshot(stream, shared, body.prompt, max_new, deadline);
+        generate_oneshot(stream, shared, body.prompt, max_new, deadline, keep)
     }
 }
 
 fn generate_oneshot(
-    mut stream: TcpStream,
+    stream: &mut TcpStream,
     shared: &Shared,
     prompt: Vec<i32>,
     max_new: usize,
     deadline: Option<Instant>,
-) {
+    keep: bool,
+) -> bool {
     let sub = match shared.router.submit_with(prompt, max_new, deadline) {
         Ok(s) => s,
         Err(e) => {
-            shed(stream, shared, 503, &format!("{e:#}"), &[]);
-            return;
+            shed(stream, shared, 503, &format!("{e:#}"), &[], keep);
+            return keep;
         }
     };
     let _depth = GaugeGuard::inc(&shared.metrics.queue_depth);
     match sub.rx.recv() {
         Ok(Ok(res)) => {
             let body = result_json(&res).to_string();
-            let _ = stream.write_all(&simple_response(200, "application/json", &body, &[]));
+            let _ = stream.write_all(&simple_response(200, "application/json", &body, &[], keep));
+            keep
         }
-        Ok(Err(err)) => respond_verdict(stream, shared, &err),
-        Err(_) => shed(stream, shared, 500, "router worker vanished", &[]),
+        Ok(Err(err)) => {
+            respond_verdict(stream, shared, &err, keep);
+            keep
+        }
+        Err(_) => {
+            shed(stream, shared, 500, "router worker vanished", &[], false);
+            false
+        }
     }
 }
 
 fn generate_stream(
-    stream: TcpStream,
+    stream: &mut TcpStream,
     shared: &Shared,
     prompt: Vec<i32>,
     max_new: usize,
     deadline: Option<Instant>,
-) {
+    keep: bool,
+) -> bool {
     let sub = match shared.router.submit_stream(prompt, max_new, deadline) {
         Ok(s) => s,
         Err(e) => {
-            shed(stream, shared, 503, &format!("{e:#}"), &[]);
-            return;
+            shed(stream, shared, 503, &format!("{e:#}"), &[], keep);
+            return keep;
         }
     };
     // The first event decides the status line: a refusal must be a
@@ -250,24 +308,27 @@ fn generate_stream(
     match sub.rx.recv_timeout(FIRST_EVENT_TIMEOUT) {
         Ok(Event::Queued) => {}
         Ok(Event::Fault(err)) => {
-            respond_verdict(stream, shared, &err);
-            return;
+            respond_verdict(stream, shared, &err, keep);
+            return keep;
         }
         Ok(Event::Tokens(_)) | Ok(Event::Done(_)) => {
             // `Queued` always precedes tokens; reaching here is a bug.
-            shed(stream, shared, 500, "event stream violated its grammar", &[]);
-            return;
+            shed(stream, shared, 500, "event stream violated its grammar", &[], false);
+            return false;
         }
         Err(_) => {
-            shed(stream, shared, 500, "router worker did not answer", &[]);
-            return;
+            shed(stream, shared, 500, "router worker did not answer", &[], false);
+            return false;
         }
     }
     let _depth = GaugeGuard::inc(&shared.metrics.queue_depth);
+    // The SSE response is `Connection: close` by design: its liveness
+    // probes consume the socket, so reuse after a stream is unsound.
     stream_events(stream, shared, &sub);
+    false
 }
 
-fn stream_events(mut stream: TcpStream, shared: &Shared, sub: &StreamSubmission) {
+fn stream_events(stream: &mut TcpStream, shared: &Shared, sub: &StreamSubmission) {
     const HEAD: &str = "HTTP/1.1 200 OK\r\n\
                         Content-Type: text/event-stream\r\n\
                         Cache-Control: no-cache\r\n\
@@ -292,7 +353,7 @@ fn stream_events(mut stream: TcpStream, shared: &Shared, sub: &StreamSubmission)
             None => match sub.rx.recv_timeout(EVENT_POLL) {
                 Ok(ev) => ev,
                 Err(RecvTimeoutError::Timeout) => {
-                    if client_gone(&mut stream) {
+                    if client_gone(stream) {
                         disconnect(shared, sub);
                         return;
                     }
@@ -375,7 +436,7 @@ fn disconnect(shared: &Shared, sub: &StreamSubmission) {
 
 /// Answer a request verdict as a status code; 429 tells clients when to
 /// retry. Every non-200 verdict counts as an edge shed.
-fn respond_verdict(mut stream: TcpStream, shared: &Shared, err: &RequestError) {
+fn respond_verdict(stream: &mut TcpStream, shared: &Shared, err: &RequestError, keep: bool) {
     shared.metrics.sheds.fetch_add(1, Ordering::Relaxed);
     let retry: &[(&str, &str)] = if matches!(err, RequestError::QueueFull) {
         &[("Retry-After", "1")]
@@ -388,18 +449,36 @@ fn respond_verdict(mut stream: TcpStream, shared: &Shared, err: &RequestError) {
         "application/json",
         &body,
         retry,
+        keep,
     ));
 }
 
-fn shed(mut stream: TcpStream, shared: &Shared, status: u16, why: &str, extra: &[(&str, &str)]) {
+fn shed(
+    stream: &mut TcpStream,
+    shared: &Shared,
+    status: u16,
+    why: &str,
+    extra: &[(&str, &str)],
+    keep: bool,
+) {
     shared.metrics.sheds.fetch_add(1, Ordering::Relaxed);
     let body = error_body(why);
-    let _ = stream.write_all(&simple_response(status, "application/json", &body, extra));
+    let _ = stream.write_all(&simple_response(status, "application/json", &body, extra, keep));
 }
 
-fn simple_response(status: u16, content_type: &str, body: &str, extra: &[(&str, &str)]) -> Vec<u8> {
+/// A `Content-Length`-delimited response. `keep` decides the
+/// `Connection` header — the length framing is what makes sequential
+/// reuse sound (the client knows exactly where this response ends).
+fn simple_response(
+    status: u16,
+    content_type: &str,
+    body: &str,
+    extra: &[(&str, &str)],
+    keep: bool,
+) -> Vec<u8> {
+    let conn = if keep { "keep-alive" } else { "close" };
     let mut head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {conn}\r\n",
         reason(status),
         body.len(),
     );

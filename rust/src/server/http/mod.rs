@@ -16,7 +16,11 @@
 //! queue-full is 429 with `Retry-After`, an inadmissible request 413,
 //! drain 503, a deadline miss 504. Connections over `max_conns` are
 //! refused with an immediate 503 — the accept loop never queues work it
-//! cannot serve. Every edge behavior here is pinned PJRT-free by
+//! cannot serve. Connections are persistent (HTTP/1.1 keep-alive):
+//! sequential requests reuse the socket — and its `max_conns` slot —
+//! until the client closes, sends `Connection: close`, idles past
+//! `read_timeout`, or finishes an SSE stream. Every edge behavior here
+//! is pinned PJRT-free by
 //! `tests/http_edge.rs` over [`SimCore`](super::scheduler::SimCore) and
 //! loopback TCP.
 

@@ -109,10 +109,13 @@ pub struct RequestParser {
     head: Option<Head>,
     /// Head-terminator scan resumes here (keeps feed O(new bytes)).
     scanned: usize,
-    /// Errors are sticky; completion is terminal (one request per
-    /// connection — the server answers and closes).
+    /// Errors are sticky; completion is terminal for THIS parser (one
+    /// request per parser). Keep-alive connections read [`Self::residual`]
+    /// after completion and seed a fresh parser with it.
     failed: Option<ParseError>,
     done: bool,
+    /// Offset just past the completed request's body (valid once `done`).
+    body_end: usize,
 }
 
 impl RequestParser {
@@ -124,6 +127,7 @@ impl RequestParser {
             scanned: 0,
             failed: None,
             done: false,
+            body_end: 0,
         }
     }
 
@@ -136,7 +140,7 @@ impl RequestParser {
         }
         if self.done {
             return Err(self.fail(ParseError::Malformed(
-                "bytes after a complete request (pipelining unsupported)".into(),
+                "fed past a complete request (seed a fresh parser with residual())".into(),
             )));
         }
         self.buf.extend_from_slice(bytes);
@@ -174,8 +178,23 @@ impl RequestParser {
         let head = self.head.take().expect("head parsed above");
         let mut req = head.req;
         req.body = self.buf[head.body_start..head.body_start + head.content_length].to_vec();
+        self.body_end = head.body_start + head.content_length;
         self.done = true;
         Ok(Some(req))
+    }
+
+    /// Bytes received past the completed request — the start of the
+    /// next request on a keep-alive connection (TCP reads tear on
+    /// arbitrary boundaries, so the final read of one request may carry
+    /// the head of the next). Empty until `feed` yields a request; the
+    /// connection loop seeds the NEXT parser with these bytes instead
+    /// of feeding this one further.
+    pub fn residual(&self) -> &[u8] {
+        if self.done {
+            &self.buf[self.body_end..]
+        } else {
+            &[]
+        }
     }
 
     fn fail(&mut self, e: ParseError) -> ParseError {
@@ -399,6 +418,23 @@ mod tests {
         let raw = b"POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n";
         assert_eq!(parse_whole(raw), Err(ParseError::BodyTooLarge));
         assert_eq!(ParseError::BodyTooLarge.http_status(), 413);
+    }
+
+    /// Two requests glued into one read: the first parses, the second
+    /// rides out through `residual()` into a fresh parser — the
+    /// keep-alive loop's contract.
+    #[test]
+    fn residual_carries_the_next_request() {
+        let mut glued = GET.to_vec();
+        glued.extend_from_slice(POST);
+        let mut p = RequestParser::new(ParseLimits::default());
+        let first = p.feed(&glued).unwrap().unwrap();
+        assert_eq!(first.target, "/healthz");
+        let mut p2 = RequestParser::new(ParseLimits::default());
+        let second = p2.feed(p.residual()).unwrap().unwrap();
+        assert_eq!(second.target, "/v1/generate");
+        assert_eq!(second.body, b"{\"a\": 1}\n");
+        assert!(p2.residual().is_empty());
     }
 
     #[test]

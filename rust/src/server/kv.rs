@@ -511,7 +511,12 @@ impl PagedKv {
     /// `max_new` budget, LRU-evicting holder-free cache leaves as
     /// needed. On success the full prompt's complete chunks are
     /// published to the cache for later sessions. Returns the cached
-    /// token count (block-aligned prefix served without prefill).
+    /// token count: the block-aligned shared prefix. Capacity-wise the
+    /// hit always saves blocks; compute-wise it becomes skipped work
+    /// only when the scheduler's chunked-prefill lane is on — it
+    /// authorizes skipping whole prefill chunks inside this prefix
+    /// (whole-prompt joins recompute it, and `prefill_tokens_saved`
+    /// counts only the skipped-compute case; see DESIGN.md §11).
     pub fn admit(&mut self, id: u64, prompt: &[i32], max_new: usize) -> Result<usize, KvShed> {
         // INVARIANT: session ids are scheduler-assigned (monotonic
         // `next_id`), never client-chosen, so a double admit is a

@@ -405,10 +405,20 @@ pub struct SchedulerMetrics {
     pub kv_sheds: u64,
     /// Holder-free prefix blocks reclaimed by LRU eviction.
     pub kv_evictions: u64,
-    /// Prompt tokens actually prefilled vs served from the prefix cache
-    /// (the cache-hit prefix needs no prefill — its KV blocks exist).
+    /// Prompt tokens whose prefill COMPUTE actually ran vs tokens whose
+    /// compute was skipped entirely. Under chunked prefill a radix
+    /// prefix hit skips the cached chunks' XLA compute (DESIGN.md §11),
+    /// so `saved` counts real FLOPs avoided; whole-prompt prefill
+    /// computes every position regardless of cache residency, so it
+    /// counts the full prompt into `prefill_tokens` and saves nothing
+    /// (block sharing still shows in `prefix_hit_rate`).
     pub prefill_tokens: u64,
     pub prefill_tokens_saved: u64,
+    /// Prefill chunks executed by the chunked-prefill lane …
+    pub prefill_chunks: u64,
+    /// … and scheduler ticks in which the lane ran at least one chunk
+    /// between decode rounds.
+    pub prefill_lane_rounds: u64,
     /// Fault containment (DESIGN.md §9): transient round retries …
     pub transient_retries: u64,
     /// … sessions evicted by session-fatal faults (bootstrap cohorts
@@ -523,6 +533,8 @@ impl SchedulerMetrics {
             "prefill_tokens_saved_total",
             self.prefill_tokens_saved as f64,
         );
+        line("prefill_chunks_total", self.prefill_chunks as f64);
+        line("prefill_lane_rounds", self.prefill_lane_rounds as f64);
         if !self.queue_wait_ms.is_empty() {
             line("queue_wait_ms_p50", self.queue_wait_ms.pct(50.0));
             line("queue_wait_ms_p95", self.queue_wait_ms.pct(95.0));

@@ -141,6 +141,15 @@ pub struct RouterConfig {
     /// identical prompt prefixes across sessions; `None` keeps the
     /// legacy unbounded slot-mapped admission.
     pub paged_kv: Option<PagedKvConfig>,
+    /// Chunked-prefill lane (DESIGN.md §11). `None` = auto: the lane
+    /// arms whenever the engine's artifacts carry the chunk entry.
+    /// `Some(0)` turns it off (whole-prompt joins). `Some(n)` pins the
+    /// expected chunk length: a mismatch with the lowered entry leaves
+    /// the lane off rather than running with a wrong cost model.
+    pub prefill_chunk: Option<usize>,
+    /// Max prefill chunks the arbiter may spend per scheduler tick
+    /// under queue pressure. 0 disables the lane.
+    pub prefill_budget: usize,
     /// Transient-fault retry budget + backoff for the scheduler's
     /// containment ladder.
     pub fault: FaultConfig,
@@ -152,6 +161,8 @@ impl Default for RouterConfig {
             batcher: BatcherConfig::default(),
             idle_poll: Duration::from_millis(1),
             paged_kv: Some(PagedKvConfig::default()),
+            prefill_chunk: None,
+            prefill_budget: 4,
             fault: FaultConfig::default(),
         }
     }
@@ -228,10 +239,22 @@ impl Router {
                         return;
                     }
                 };
+                // Chunked-prefill lane: arbiter priced by the core's own
+                // cost model; off when disabled, unsupported, or the
+                // operator-pinned chunk length mismatches the artifacts.
+                let arbiter = match (cfg.prefill_chunk, cfg.prefill_budget) {
+                    (Some(0), _) | (_, 0) => None,
+                    (want, budget) => core
+                        .prefill_arbiter(budget)
+                        .filter(|a| want.map_or(true, |w| a.cfg().chunk == w)),
+                };
                 let mut sched =
                     Scheduler::new(core, cfg.batcher.clone()).with_fault_config(cfg.fault);
                 if let Some(kv) = cfg.paged_kv {
                     sched = sched.with_paged_kv(kv);
+                }
+                if let Some(arb) = arbiter {
+                    sched = sched.with_chunked_prefill(arb);
                 }
                 // ticket -> scheduler session id, and session id ->
                 // (ticket, reply channel); both purge on the verdict.

@@ -67,6 +67,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::spec::accept::AcceptanceStats;
+use crate::spec::adaptive::PrefillArbiter;
 use crate::util::Pcg64;
 
 use super::batcher::{Batcher, BatcherConfig};
@@ -151,6 +152,50 @@ pub trait SchedulerCore {
     /// dropped. Must leave every OTHER row's state and RNG stream
     /// untouched.
     fn evict(&mut self, g: &mut Self::Group, row: usize);
+
+    /// Chunked-prefill support (DESIGN.md §11): the fixed chunk length
+    /// this core lowers. `None` — the default — means unsupported, and
+    /// the scheduler prefills whole prompts inside `join`.
+    fn prefill_chunk_len(&self) -> Option<usize> {
+        None
+    }
+
+    /// A budget arbiter sized from this core's OWN cost model (the same
+    /// one its speculation controller plans K with), capped at
+    /// `max_chunks_per_round` chunks per tick. `None` when chunked
+    /// prefill is unsupported. The router calls this so operators
+    /// configure one number (`--prefill-budget`) and the verify-vs-
+    /// prefill exchange rate stays consistent with the engine's.
+    fn prefill_arbiter(&self, _max_chunks_per_round: usize) -> Option<PrefillArbiter> {
+        None
+    }
+
+    /// Begin a chunked prefill for `req` on free row `row`. `skip` is
+    /// the chunk-aligned token count the scheduler AUTHORIZES the core
+    /// to skip (a cached prefix whose compute need not rerun); the
+    /// return value is the count actually skipped (≤ `skip` — a core
+    /// without the cached carry resident recomputes it). The row is
+    /// not live yet: it emits no tokens and must read as not-done until
+    /// [`SchedulerCore::prefill_step`] reports completion. On `Err` the
+    /// row is left (or put back) inert — the same contract as a failed
+    /// `join`, so only the joining request fails.
+    fn prefill_begin(
+        &mut self,
+        _g: &mut Self::Group,
+        _row: usize,
+        _req: &AdmitReq,
+        _skip: usize,
+    ) -> Result<usize> {
+        bail!("core does not support chunked prefill")
+    }
+
+    /// Advance row `row`'s pending prefill by one chunk. Returns true
+    /// once the prompt is fully prefilled and the row is LIVE: first
+    /// token sampled from the final chunk's logits, decode-ready on the
+    /// next round.
+    fn prefill_step(&mut self, _g: &mut Self::Group, _row: usize) -> Result<bool> {
+        bail!("core does not support chunked prefill")
+    }
 }
 
 /// Transient-fault retry policy (see DESIGN.md §9): how many times a
@@ -253,6 +298,13 @@ pub struct Scheduler<C: SchedulerCore> {
     /// cache); None admits unconditionally (legacy dense accounting).
     paged: Option<PagedKv>,
     paged_cfg: Option<PagedKvConfig>,
+    /// Chunked-prefill budget arbiter; None joins whole prompts only.
+    arbiter: Option<PrefillArbiter>,
+    /// Sessions mid-prefill: id → (row, remaining-chunk estimate). A
+    /// prefilling row occupies its slot (its KV is being written) but
+    /// is skipped by streaming, harvest, and bucket migration until the
+    /// lane completes it.
+    prefilling: HashMap<u64, (usize, usize)>,
     fault_cfg: FaultConfig,
     /// Graceful-drain state: refuse new submits, flush the queue,
     /// finish in-flight rows. `is_idle()` is the completion signal.
@@ -288,6 +340,8 @@ impl<C: SchedulerCore> Scheduler<C> {
             downshift,
             paged: None,
             paged_cfg: None,
+            arbiter: None,
+            prefilling: HashMap::new(),
             fault_cfg: FaultConfig::default(),
             draining: false,
             cancelled: HashSet::new(),
@@ -321,6 +375,19 @@ impl<C: SchedulerCore> Scheduler<C> {
         self
     }
 
+    /// Attach the chunked-prefill lane (DESIGN.md §11): a JOINING
+    /// session whose prompt exceeds the core's chunk length enters a
+    /// `Prefilling` row state and advances chunk-by-chunk between
+    /// decode rounds, under the arbiter's per-round chunk budget —
+    /// instead of stalling the whole group on one long whole-prompt
+    /// prefill. Requires a core that reports `prefill_chunk_len`; cold
+    /// bootstraps still prefill whole prompts (no decode cadence exists
+    /// to protect yet).
+    pub fn with_chunked_prefill(mut self, arbiter: PrefillArbiter) -> Scheduler<C> {
+        self.arbiter = Some(arbiter);
+        self
+    }
+
     /// The attached paged-KV pool, if any (gauges + tests).
     pub fn paged_kv(&self) -> Option<&PagedKv> {
         self.paged.as_ref()
@@ -328,26 +395,15 @@ impl<C: SchedulerCore> Scheduler<C> {
 
     /// Reserve `req`'s paged-KV footprint (no-op without a pool). The
     /// prefix-cache lookup happens here — BEFORE the core prefills —
-    /// and the prefill accounting records only the uncached suffix.
-    /// False = load-shed.
-    fn reserve_kv(
-        paged: &mut Option<PagedKv>,
-        metrics: &mut SchedulerMetrics,
-        req: &AdmitReq,
-    ) -> bool {
+    /// returning the cached prefix length; None = load-shed. Prefill
+    /// COMPUTE accounting is the caller's job: whole-prompt prefill
+    /// recomputes the cached prefix anyway (the hit saves only block
+    /// capacity), while the chunked lane actually skips those chunks
+    /// and credits `prefill_tokens_saved`.
+    fn reserve_kv(paged: &mut Option<PagedKv>, req: &AdmitReq) -> Option<usize> {
         match paged.as_mut() {
-            None => {
-                metrics.prefill_tokens += req.prompt.len() as u64;
-                true
-            }
-            Some(kv) => match kv.admit(req.id, &req.prompt, req.max_new) {
-                Ok(cached) => {
-                    metrics.prefill_tokens += (req.prompt.len() - cached) as u64;
-                    metrics.prefill_tokens_saved += cached as u64;
-                    true
-                }
-                Err(_) => false,
-            },
+            None => Some(0),
+            Some(kv) => kv.admit(req.id, &req.prompt, req.max_new).ok(),
         }
     }
 
@@ -488,6 +544,7 @@ impl<C: SchedulerCore> Scheduler<C> {
         let n = self.batcher.len();
         let _ = self.batcher.take(n);
         self.paged = self.paged_cfg.map(PagedKv::new);
+        self.prefilling.clear();
         self.cancelled.clear();
         self.deadlines.clear();
         self.failures.clear();
@@ -544,6 +601,7 @@ impl<C: SchedulerCore> Scheduler<C> {
         for (row, id) in doomed {
             self.core.evict(&mut active.group, row);
             active.slots.free(id);
+            self.prefilling.remove(&id);
             if let Some(kv) = self.paged.as_mut() {
                 kv.release(id);
             }
@@ -558,6 +616,80 @@ impl<C: SchedulerCore> Scheduler<C> {
             self.streamed.remove(&id);
             self.failures.push((id, verdict));
         }
+    }
+
+    /// Advance pending chunked prefills under the arbiter's per-round
+    /// chunk budget, shortest-remaining-first — a near-done prompt goes
+    /// live (TTFT) before a longer one monopolizes the lane. The budget
+    /// is a HARD bound: the decode round that follows in the same tick
+    /// is never delayed by more than `max_chunks_per_round` chunks of
+    /// prefill compute. A failing step evicts only the prefilling
+    /// session (typed verdict, slot + paged blocks freed) unless the
+    /// fault is engine-fatal.
+    fn run_prefill_lane(&mut self) -> Result<()> {
+        let Some(arb) = self.arbiter.as_ref() else {
+            return Ok(());
+        };
+        if self.prefilling.is_empty() {
+            return Ok(());
+        }
+        let Some(active) = self.active.as_mut() else {
+            return Ok(());
+        };
+        // `.max(1)`: the per-session count is an ESTIMATE (the core may
+        // take an extra step to finish); never let a zero estimate
+        // starve a still-pending session out of the quota.
+        let backlog: usize = self.prefilling.values().map(|&(_, n)| n.max(1)).sum();
+        let mut quota = arb.chunks_for_round(self.batcher.len(), backlog);
+        let mut order: Vec<(usize, u64, usize)> = self
+            .prefilling
+            .iter()
+            .map(|(&id, &(row, n))| (n, id, row))
+            .collect();
+        order.sort_unstable();
+        let mut ran = false;
+        'lane: for (_, id, row) in order {
+            while quota > 0 {
+                match self.core.prefill_step(&mut active.group, row) {
+                    Ok(done) => {
+                        quota -= 1;
+                        ran = true;
+                        self.metrics.prefill_chunks += 1;
+                        if done {
+                            self.prefilling.remove(&id);
+                            continue 'lane;
+                        }
+                        if let Some(e) = self.prefilling.get_mut(&id) {
+                            e.1 = e.1.saturating_sub(1);
+                        }
+                    }
+                    Err(e) => {
+                        if EngineError::classify(&e) == FaultKind::EngineFatal {
+                            return Err(e);
+                        }
+                        // Contained: only the half-prefilled session
+                        // fails; every live row's state is untouched.
+                        self.prefilling.remove(&id);
+                        self.core.evict(&mut active.group, row);
+                        active.slots.free(id);
+                        if let Some(kv) = self.paged.as_mut() {
+                            kv.release(id);
+                        }
+                        self.deadlines.remove(&id);
+                        self.streamed.remove(&id);
+                        self.metrics.session_faults += 1;
+                        self.failures
+                            .push((id, RequestError::SessionFault(format!("{e:#}"))));
+                        continue 'lane;
+                    }
+                }
+            }
+            break;
+        }
+        if ran {
+            self.metrics.prefill_lane_rounds += 1;
+        }
+        Ok(())
     }
 
     /// One scheduling step: shed expired/cancelled work, admit (form a
@@ -611,10 +743,13 @@ impl<C: SchedulerCore> Scheduler<C> {
                 // partial group still forms from the admitted head.
                 let mut shed_at = reqs.len();
                 for (i, r) in reqs.iter().enumerate() {
-                    if !Self::reserve_kv(&mut self.paged, &mut self.metrics, r) {
+                    if Self::reserve_kv(&mut self.paged, r).is_none() {
                         shed_at = i;
                         break;
                     }
+                    // Cold bootstrap prefills the whole prompt: every
+                    // token's compute runs, cache hit or not.
+                    self.metrics.prefill_tokens += r.prompt.len() as u64;
                 }
                 if shed_at < reqs.len() {
                     for req in reqs.drain(shed_at..).rev() {
@@ -701,8 +836,14 @@ impl<C: SchedulerCore> Scheduler<C> {
             // back to the bucket that fits them (the mirror of the
             // long-tail downshift — without it, a request arriving
             // after a shift to a headroom-less bucket would wait out
-            // the whole tail instead of joining).
-            if active.slots.occupied() == active.slots.capacity() && !self.batcher.is_empty() {
+            // the whole tail instead of joining). Pending prefills veto
+            // the shift: their core-side carry is keyed by row index,
+            // so rows must not move mid-prefill (they finish within a
+            // few lane rounds and the shift fires then).
+            if active.slots.occupied() == active.slots.capacity()
+                && !self.batcher.is_empty()
+                && self.prefilling.is_empty()
+            {
                 let occ = active.slots.occupied();
                 let b_new = self.core.bucket(occ + self.batcher.len());
                 if b_new > active.slots.capacity() {
@@ -730,11 +871,15 @@ impl<C: SchedulerCore> Scheduler<C> {
                 // session or an eviction frees blocks. Live block
                 // tables stay untouched: reservation is all-or-nothing.
                 let mut reqs = self.batcher.take(free);
+                let mut cached = Vec::with_capacity(reqs.len());
                 let mut shed_at = reqs.len();
                 for (i, r) in reqs.iter().enumerate() {
-                    if !Self::reserve_kv(&mut self.paged, &mut self.metrics, r) {
-                        shed_at = i;
-                        break;
+                    match Self::reserve_kv(&mut self.paged, r) {
+                        Some(c) => cached.push(c),
+                        None => {
+                            shed_at = i;
+                            break;
+                        }
                     }
                 }
                 if shed_at < reqs.len() {
@@ -743,13 +888,46 @@ impl<C: SchedulerCore> Scheduler<C> {
                         self.batcher.requeue_front_at(req, at);
                     }
                 }
-                for req in reqs {
+                for (req, cached) in reqs.into_iter().zip(cached) {
                     // Invariant, not a request-reachable panic: at most
                     // `free` requests were taken, admission is the only
                     // slot writer in a tick, and the shed step above ran
                     // before the take.
                     let row = active.slots.alloc(req.id).expect("free slot disappeared");
-                    match self.core.join(&mut active.group, row, &req) {
+                    // Chunked lane: a joining prompt longer than one
+                    // chunk amortizes across rounds. The cache-hit
+                    // prefix is skipped in COMPLETE chunks only, and
+                    // never the final chunk — its logits seed the first
+                    // sampled token (DESIGN.md §11).
+                    let chunk = self
+                        .arbiter
+                        .as_ref()
+                        .and_then(|_| self.core.prefill_chunk_len())
+                        .filter(|&c| req.prompt.len() > c);
+                    let joined = match chunk {
+                        Some(c) => {
+                            let len = req.prompt.len();
+                            let skip_auth = (cached / c * c).min((len - 1) / c * c);
+                            match self
+                                .core
+                                .prefill_begin(&mut active.group, row, &req, skip_auth)
+                            {
+                                Ok(skipped) => {
+                                    self.metrics.prefill_tokens += (len - skipped) as u64;
+                                    self.metrics.prefill_tokens_saved += skipped as u64;
+                                    let chunks = (len - skipped + c - 1) / c;
+                                    self.prefilling.insert(req.id, (row, chunks));
+                                    Ok(())
+                                }
+                                Err(e) => Err(e),
+                            }
+                        }
+                        None => {
+                            self.metrics.prefill_tokens += req.prompt.len() as u64;
+                            self.core.join(&mut active.group, row, &req)
+                        }
+                    };
+                    match joined {
                         Ok(()) => {
                             active.stuck_cap =
                                 active.stuck_cap.max(4 * req.max_new as u64 + 32);
@@ -778,6 +956,9 @@ impl<C: SchedulerCore> Scheduler<C> {
                 }
             }
         }
+
+        // --- prefill lane (chunked prefill, DESIGN.md §11) ------------
+        self.run_prefill_lane()?;
 
         // --- one decode round + harvest -------------------------------
         let mut retire = false;
@@ -821,6 +1002,7 @@ impl<C: SchedulerCore> Scheduler<C> {
                             };
                             self.core.evict(&mut active.group, row);
                             active.slots.free(id);
+                            self.prefilling.remove(&id);
                             if let Some(kv) = self.paged.as_mut() {
                                 kv.release(id);
                             }
@@ -858,8 +1040,13 @@ impl<C: SchedulerCore> Scheduler<C> {
             // --- stream progress --------------------------------------
             // Surface the round's newly committed tokens as per-session
             // deltas (cores without `row_tokens` visibility are covered
-            // by the harvest tail below).
+            // by the harvest tail below). Prefilling rows are skipped:
+            // their row state is not live (the engine's is a stale pad
+            // whose tokens belong to a finished session).
             for (row, id) in active.slots.iter_occupied() {
+                if self.prefilling.contains_key(&id) {
+                    continue;
+                }
                 if let Some(toks) = self.core.row_tokens(&active.group, row) {
                     let seen = self.streamed.get(&id).copied().unwrap_or(0);
                     if toks.len() > seen {
@@ -871,6 +1058,9 @@ impl<C: SchedulerCore> Scheduler<C> {
 
             let mut done_rows: Vec<(usize, u64)> = Vec::new();
             for (row, id) in active.slots.iter_occupied() {
+                if self.prefilling.contains_key(&id) {
+                    continue; // mid-prefill: never harvestable
+                }
                 if self.core.row_done(&active.group, row) {
                     done_rows.push((row, id));
                 }
@@ -913,7 +1103,11 @@ impl<C: SchedulerCore> Scheduler<C> {
             let occ = active.slots.occupied();
             retire = occ == 0;
             let fits_smaller = occ > 0 && self.core.bucket(occ) < active.slots.capacity();
-            if self.downshift.enabled && fits_smaller && self.batcher.is_empty() {
+            if self.downshift.enabled
+                && fits_smaller
+                && self.batcher.is_empty()
+                && self.prefilling.is_empty()
+            {
                 active.shrink_rounds += 1;
                 if active.shrink_rounds >= self.downshift.after_rounds {
                     let b_new = self.core.bucket(occ);
@@ -1059,6 +1253,15 @@ pub struct SimCore {
     pub fault_plan: FaultPlan,
     /// Faults actually fired (tests assert the plan was consumed).
     pub faults_injected: u64,
+    /// Chunked-prefill modeling: fixed chunk length (None = whole-
+    /// prompt joins only)…
+    pub prefill_chunk: Option<usize>,
+    /// …and prefill chunks actually executed (cost accounting: one
+    /// chunk = `chunk` tokens of prefill compute).
+    pub prefill_chunks_run: u64,
+    /// ChaosCore: fail `prefill_step` (session-fatal, one-shot) when
+    /// `prefill_chunks_run` reaches this value.
+    pub fail_prefill_at: Option<u64>,
 }
 
 pub struct SimGroup {
@@ -1078,6 +1281,10 @@ struct SimSeq {
     queue_ms: f64,
     ttft_ms: f64,
     total_ms: f64,
+    /// Prompt tokens still to prefill (chunked lane); > 0 means the row
+    /// is mid-prefill: decode rounds skip it and its RNG stream is
+    /// untouched, so chunking can never shift a session's draws.
+    prefill_remaining: usize,
 }
 
 impl SimCore {
@@ -1095,7 +1302,18 @@ impl SimCore {
             round_k_sum: 0,
             fault_plan: FaultPlan::default(),
             faults_injected: 0,
+            prefill_chunk: None,
+            prefill_chunks_run: 0,
+            fail_prefill_at: None,
         }
+    }
+
+    /// Model chunked prefill: a joining prompt longer than `chunk`
+    /// enters through `prefill_begin`/`prefill_step` instead of `join`.
+    pub fn with_chunked_prefill(mut self, chunk: usize) -> SimCore {
+        assert!(chunk > 0, "chunk length must be positive");
+        self.prefill_chunk = Some(chunk);
+        self
     }
 
     /// Attach a ChaosCore fault-injection plan (see [`FaultPlan`]).
@@ -1135,6 +1353,7 @@ impl SimCore {
             queue_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
             ttft_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
             total_ms: 0.0,
+            prefill_remaining: 0,
         }
     }
 
@@ -1152,6 +1371,7 @@ impl SimCore {
             queue_ms: 0.0,
             ttft_ms: 0.0,
             total_ms: 0.0,
+            prefill_remaining: 0,
         }
     }
 }
@@ -1223,7 +1443,9 @@ impl SchedulerCore for SimCore {
         self.rounds_run += 1;
         self.round_k_sum += k_round as u64;
         for seq in g.rows.iter_mut() {
-            if seq.done {
+            if seq.done || seq.prefill_remaining > 0 {
+                // Done padding, or a row still mid-prefill (chunked
+                // lane): neither decodes, neither touches its RNG.
                 continue;
             }
             // Short final rounds: never draft past the generation cap.
@@ -1297,6 +1519,70 @@ impl SchedulerCore for SimCore {
         // stream or tokens can shift (the containment tests pin this
         // bit-for-bit against unfaulted runs).
         g.rows[row] = self.pad_seq();
+    }
+
+    fn prefill_chunk_len(&self) -> Option<usize> {
+        self.prefill_chunk
+    }
+
+    fn prefill_arbiter(&self, max_chunks_per_round: usize) -> Option<PrefillArbiter> {
+        use crate::spec::adaptive::{CostModel, PrefillArbiterCfg};
+        let chunk = self.prefill_chunk?;
+        Some(PrefillArbiter::new(PrefillArbiterCfg {
+            max_chunks_per_round,
+            ..PrefillArbiterCfg::for_chunk(chunk, 8, CostModel::chained(0.25), 4)
+        }))
+    }
+
+    fn prefill_begin(
+        &mut self,
+        g: &mut SimGroup,
+        row: usize,
+        req: &AdmitReq,
+        skip: usize,
+    ) -> Result<usize> {
+        let chunk = self.prefill_chunk.expect("chunked prefill not enabled");
+        anyhow::ensure!(row < g.rows.len(), "prefill row out of range");
+        anyhow::ensure!(
+            skip % chunk == 0 && skip < req.prompt.len(),
+            "bad skip authorization"
+        );
+        let mut seq = self.seq_for(req);
+        // Not live yet: the first token samples when the final chunk
+        // lands (`prefill_step` → true), which is also when TTFT
+        // stamps — chunking changes WHEN the token appears, never what
+        // it is. The sim honors the full authorized skip (its "cached
+        // carry" is free), so saved-compute accounting is exact.
+        seq.tokens.clear();
+        seq.prefill_remaining = req.prompt.len() - skip;
+        g.rows[row] = seq;
+        Ok(skip)
+    }
+
+    fn prefill_step(&mut self, g: &mut SimGroup, row: usize) -> Result<bool> {
+        let chunk = self.prefill_chunk.expect("chunked prefill not enabled");
+        let id = g.rows[row].id;
+        if self.fail_prefill_at == Some(self.prefill_chunks_run) {
+            // One-shot: a fault doesn't advance the chunk counter, so
+            // without clearing it would re-fire on the NEXT session the
+            // lane visits in the same round.
+            self.fail_prefill_at = None;
+            self.faults_injected += 1;
+            return Err(EngineError::session_fatal(
+                id,
+                format!("injected prefill-chunk fault on session {id}"),
+            ));
+        }
+        let seq = &mut g.rows[row];
+        anyhow::ensure!(seq.prefill_remaining > 0, "no prefill pending on row {row}");
+        self.prefill_chunks_run += 1;
+        seq.prefill_remaining = seq.prefill_remaining.saturating_sub(chunk);
+        if seq.prefill_remaining == 0 {
+            seq.tokens.push(seq.prompt[0] + 1000);
+            seq.ttft_ms = seq.enqueued.elapsed().as_secs_f64() * 1e3;
+            return Ok(true);
+        }
+        Ok(false)
     }
 
     fn take_result(&mut self, g: &mut SimGroup, row: usize) -> RequestResult {
@@ -1796,9 +2082,11 @@ mod tests {
             assert_eq!(paged[&id].stats.accepted, dense[&id].stats.accepted, "id {id}");
             assert_eq!(paged[&id].stats.prefix_hist, dense[&id].stats.prefix_hist, "id {id}");
         }
-        // Sessions 2..6 hit the whole 8-token prompt: 40 of 48 prompt
-        // tokens come from the cache.
-        assert_eq!(paged_saved, 40);
+        // Whole-prompt prefill recomputes cached prefixes: the radix
+        // hits share BLOCKS (visible in prefix_hit_rate), but no
+        // prefill COMPUTE is skipped without the chunked lane —
+        // `saved` counts FLOPs avoided, not capacity shared.
+        assert_eq!(paged_saved, 0);
     }
 
     /// Paged gauges and prefill counters are refreshed from the pool at
@@ -1812,9 +2100,11 @@ mod tests {
         }
         let out = drain(&mut s, 10_000);
         assert_eq!(out.len(), 4);
-        // 4 sessions x 8 prompt tokens; sessions 2..4 fully cached.
-        assert_eq!(s.metrics.prefill_tokens + s.metrics.prefill_tokens_saved, 32);
-        assert_eq!(s.metrics.prefill_tokens_saved, 24);
+        // 4 sessions x 8 prompt tokens, all prefilled whole-prompt (no
+        // chunked lane): every token's compute ran, nothing saved —
+        // the cache sharing shows up in prefix_hit_rate instead.
+        assert_eq!(s.metrics.prefill_tokens, 32);
+        assert_eq!(s.metrics.prefill_tokens_saved, 0);
         assert!(s.metrics.prefix_hit_rate > 0.5);
         // After the drain only the cache-resident prompt chunks remain
         // live (2 chunks of the shared prompt).
@@ -1825,7 +2115,9 @@ mod tests {
         assert!(text.contains("lkspec_kv_blocks_live{engine=\"sim\"} 2"));
         assert!(text.contains("lkspec_kv_blocks_free{engine=\"sim\"} 30"));
         assert!(text.contains("lkspec_prefix_hit_rate"));
-        assert!(text.contains("lkspec_sched_prefill_tokens_saved_total{engine=\"sim\"} 24"));
+        assert!(text.contains("lkspec_sched_prefill_tokens_saved_total{engine=\"sim\"} 0"));
+        assert!(text.contains("lkspec_sched_prefill_chunks_total{engine=\"sim\"} 0"));
+        assert!(text.contains("lkspec_sched_prefill_lane_rounds{engine=\"sim\"} 0"));
     }
 
     /// Satellite edge case: free-list exhaustion under join pressure
@@ -2284,5 +2576,174 @@ mod tests {
         assert_eq!(kv.blocks_live(), 0);
         assert_eq!(kv.blocks_free(), 16);
         assert_eq!(kv.sessions(), 0);
+    }
+
+    // --- chunked prefill lane (DESIGN.md §11) --------------------------
+
+    fn arb(chunk: usize, cap: usize) -> PrefillArbiter {
+        use crate::spec::adaptive::{CostModel, PrefillArbiterCfg};
+        PrefillArbiter::new(PrefillArbiterCfg {
+            max_chunks_per_round: cap,
+            ..PrefillArbiterCfg::for_chunk(chunk, 8, CostModel::chained(0.25), 4)
+        })
+    }
+
+    /// Chunked-prefill keystone at the scheduler level: interleaving a
+    /// joining long prompt chunk-by-chunk changes WHEN its first token
+    /// appears, never WHAT any session emits — per-id tokens and
+    /// acceptance stats are bit-equal to the whole-prompt-join run.
+    #[test]
+    fn chunked_prefill_join_bit_equal_to_whole_prompt() {
+        let long: Vec<i32> = (200..248).collect(); // 48 tokens = 12 chunks at c=4
+        let run = |chunked: bool| -> (BTreeMap<u64, RequestResult>, u64, u64) {
+            let core = if chunked {
+                sim().with_chunked_prefill(4)
+            } else {
+                sim()
+            };
+            let mut s = Scheduler::new(core, cfg(64));
+            if chunked {
+                s = s.with_chunked_prefill(arb(4, 2));
+            }
+            // id 0: a long-running keeper holds the group open; ids
+            // 1..3 fill the b=4 bucket.
+            s.submit(vec![1, 7], 40).unwrap();
+            for i in 1..4 {
+                s.submit(vec![i + 1, 7], 6).unwrap();
+            }
+            let _ = s.tick(Instant::now()).unwrap();
+            // The long prompt arrives against a DECODING group and must
+            // join through the lane (or whole-prompt, for the control).
+            s.submit(long.clone(), 8).unwrap();
+            let mut got = BTreeMap::new();
+            for (id, r) in drain(&mut s, 10_000) {
+                got.insert(id, r);
+            }
+            (got, s.metrics.joins, s.core().prefill_chunks_run)
+        };
+        let (whole, _, whole_chunks) = run(false);
+        let (chunked, joins, lane_chunks) = run(true);
+        assert_eq!(whole_chunks, 0);
+        assert_eq!(lane_chunks, 12, "48-token prompt = 12 lane chunks");
+        assert!(joins >= 1, "the long prompt must JOIN, not form a group");
+        assert_eq!(whole.len(), 5);
+        assert_eq!(chunked.len(), 5);
+        for id in 0..5u64 {
+            assert_eq!(chunked[&id].tokens, whole[&id].tokens, "tokens diverge, id {id}");
+            assert_eq!(chunked[&id].stats.drafted, whole[&id].stats.drafted, "id {id}");
+            assert_eq!(chunked[&id].stats.accepted, whole[&id].stats.accepted, "id {id}");
+            assert_eq!(
+                chunked[&id].stats.prefix_hist, whole[&id].stats.prefix_hist,
+                "id {id}"
+            );
+        }
+    }
+
+    /// Under the chunked lane a radix prefix hit skips whole chunks of
+    /// COMPUTE: `prefill_tokens_saved` counts exactly the chunk-aligned
+    /// cached prefix (never the final chunk, whose logits seed the
+    /// first sampled token), and the lane executes only the remainder.
+    #[test]
+    fn chunked_prefill_skips_cached_chunks_compute() {
+        let shared: Vec<i32> = (300..316).collect(); // 16 tokens = 4 chunks
+        let core = sim().with_chunked_prefill(4);
+        let mut s = Scheduler::new(core, cfg(64))
+            .with_paged_kv(paged_cfg(32))
+            .with_chunked_prefill(arb(4, 4));
+        // Bootstrap cohort (keeper + first shared-prompt session):
+        // whole-prompt prefill, 2 + 16 tokens of compute, zero saved.
+        s.submit(vec![1, 7], 40).unwrap();
+        s.submit(shared.clone(), 6).unwrap();
+        let _ = s.tick(Instant::now()).unwrap();
+        assert_eq!(s.metrics.prefill_tokens, 18);
+        assert_eq!(s.metrics.prefill_tokens_saved, 0);
+        // The second shared-prompt session JOINS: its whole prompt is
+        // cache-resident, but the final chunk still runs — 12 tokens of
+        // compute skipped, exactly one chunk executed.
+        s.submit(shared.clone(), 6).unwrap();
+        let out = drain(&mut s, 10_000);
+        assert_eq!(out.len(), 3);
+        assert_eq!(s.metrics.prefill_tokens_saved, 12);
+        assert_eq!(s.metrics.prefill_tokens, 18 + 4);
+        assert_eq!(s.core().prefill_chunks_run, 1);
+        assert_eq!(s.metrics.prefill_chunks, 1);
+        assert!(s.metrics.prefill_lane_rounds >= 1);
+        let text = s.metrics.render("sim");
+        assert!(text.contains("lkspec_sched_prefill_chunks_total{engine=\"sim\"} 1"));
+    }
+
+    /// The arbiter's bound is HARD: no tick runs more prefill chunks
+    /// than `max_chunks_per_round`, and the decode cadence advances
+    /// every tick while the long prompt amortizes through the lane.
+    #[test]
+    fn prefill_lane_never_exceeds_chunk_budget_per_tick() {
+        let core = sim().with_chunked_prefill(4);
+        let mut s = Scheduler::new(core, cfg(64)).with_chunked_prefill(arb(4, 2));
+        s.submit(vec![1, 7], 60).unwrap(); // keeper: decodes throughout
+        let _ = s.tick(Instant::now()).unwrap();
+        let id = s.submit((200..248).collect(), 4).unwrap(); // 12 chunks
+        let mut done = Vec::new();
+        let mut ticks = 0;
+        while !done.iter().any(|(i, _)| *i == id) {
+            let chunks0 = s.core().prefill_chunks_run;
+            let rounds0 = s.core().rounds_run;
+            done.extend(s.tick(Instant::now()).unwrap());
+            assert!(
+                s.core().prefill_chunks_run - chunks0 <= 2,
+                "lane exceeded the per-round chunk budget"
+            );
+            assert!(
+                s.core().rounds_run > rounds0,
+                "decode round stalled behind the lane"
+            );
+            ticks += 1;
+            assert!(ticks < 1000, "long prompt never completed");
+        }
+        assert_eq!(s.core().prefill_chunks_run, 12);
+        assert!(s.metrics.prefill_lane_rounds >= 6, "12 chunks at <= 2/round");
+    }
+
+    /// ChaosCore for the lane: a session-fatal fault during a prefill
+    /// chunk evicts ONLY the prefilling session — decoding rows are
+    /// bit-equal to an unfaulted run, and the slot + paged blocks free.
+    #[test]
+    fn prefill_lane_fault_evicts_only_prefilling_session() {
+        let run = |fail: Option<u64>| {
+            let core = sim().with_chunked_prefill(4);
+            let mut s = Scheduler::new(core, cfg(64))
+                .with_paged_kv(paged_cfg(64))
+                .with_chunked_prefill(arb(4, 2));
+            s.submit(vec![1, 7], 30).unwrap();
+            let _ = s.tick(Instant::now()).unwrap();
+            s.core_mut().fail_prefill_at = fail;
+            let long_id = s.submit((200..248).collect(), 8).unwrap();
+            let mut got = BTreeMap::new();
+            let mut failures = Vec::new();
+            let mut ticks = 0;
+            while !s.is_idle() {
+                for (id, r) in s.tick(Instant::now()).unwrap() {
+                    got.insert(id, r);
+                }
+                failures.extend(s.take_failures());
+                ticks += 1;
+                assert!(ticks < 10_000, "chaos run did not converge");
+            }
+            (got, failures, long_id, s)
+        };
+        let (clean, none, _, _) = run(None);
+        assert!(none.is_empty());
+        let (got, failures, long_id, s) = run(Some(3));
+        assert_eq!(failures.len(), 1, "exactly the prefilling session fails");
+        assert_eq!(failures[0].0, long_id);
+        assert!(
+            matches!(&failures[0].1, RequestError::SessionFault(m) if m.contains("prefill")),
+            "got: {:?}",
+            failures[0].1
+        );
+        assert!(!got.contains_key(&long_id));
+        assert_eq!(got[&0].tokens, clean[&0].tokens, "survivor tokens shifted");
+        assert_eq!(s.metrics.session_faults, 1);
+        assert_eq!(s.core().faults_injected, 1);
+        assert_eq!(s.paged_kv().unwrap().sessions(), 0);
     }
 }

@@ -453,6 +453,102 @@ impl SpecController {
     }
 }
 
+// ---------------------------------------------------------------------------
+// prefill/decode budget arbiter (chunked prefill, DESIGN.md §11)
+// ---------------------------------------------------------------------------
+
+/// Configuration for the [`PrefillArbiter`]: prices one prefill chunk in
+/// the SAME verify-call units the speculation controller budgets rounds
+/// in, so the verify-vs-prefill FLOP split is one coherent budget.
+#[derive(Clone, Debug)]
+pub struct PrefillArbiterCfg {
+    /// Tokens per prefill chunk (the lowered `prefill_chunk_b{B}`
+    /// length).
+    pub chunk: usize,
+    /// Hard cap on chunks run between two decode rounds, applied even
+    /// under queue pressure — the bound the stall-containment tests pin.
+    pub max_chunks_per_round: usize,
+    /// Round cost model (the controller's: verify + draft spend).
+    pub cost: CostModel,
+    /// Nominal chain length pricing the steady-state round.
+    pub k_nominal: usize,
+    /// One chunk's cost in verify-call units. A verify pass processes
+    /// `verify_t` tokens, so a C-token chunk is roughly `C / verify_t`
+    /// verify-equivalents of target compute.
+    pub chunk_cost: f64,
+    /// Steady-state fraction of a round's cost the prefill lane may
+    /// spend when nothing is queued (decode cadence protection).
+    pub steady_fraction: f64,
+}
+
+impl PrefillArbiterCfg {
+    /// Standard pricing for a `chunk`-token chunk against a
+    /// `verify_t`-token verify block.
+    pub fn for_chunk(chunk: usize, verify_t: usize, cost: CostModel, k_nominal: usize) -> Self {
+        PrefillArbiterCfg {
+            chunk,
+            max_chunks_per_round: 4,
+            cost,
+            k_nominal,
+            chunk_cost: chunk as f64 / verify_t.max(1) as f64,
+            steady_fraction: 0.5,
+        }
+    }
+}
+
+/// Per-round verify-vs-prefill budget arbiter: decides how many prefill
+/// chunks the scheduler's prefill lane may run between decode rounds.
+///
+/// The policy is the controller's own cost framing extended to the
+/// prefill lane (SpecDec++'s per-round budget decision, applied to the
+/// prefill/verify split): at steady state (nothing queued) the lane
+/// spends at most `steady_fraction` of one round's cost — decode cadence
+/// is protected, a joining long prompt amortizes across rounds; under
+/// queue pressure (requests waiting on slots held hostage by prefill
+/// backlog) the lane runs up to `max_chunks_per_round`, trading this
+/// round's cadence for earlier admissions. Never exceeds the backlog,
+/// and always grants at least one chunk when a backlog exists — the
+/// lane cannot starve.
+#[derive(Clone, Debug)]
+pub struct PrefillArbiter {
+    cfg: PrefillArbiterCfg,
+}
+
+impl PrefillArbiter {
+    pub fn new(cfg: PrefillArbiterCfg) -> PrefillArbiter {
+        assert!(cfg.chunk > 0, "chunk length must be positive");
+        assert!(cfg.chunk_cost > 0.0, "chunk cost must be positive");
+        PrefillArbiter { cfg }
+    }
+
+    pub fn cfg(&self) -> &PrefillArbiterCfg {
+        &self.cfg
+    }
+
+    /// The hard per-round chunk bound (stall containment).
+    pub fn max_chunks_per_round(&self) -> usize {
+        self.cfg.max_chunks_per_round.max(1)
+    }
+
+    /// Chunks the prefill lane may run before the next decode round,
+    /// given `queued` requests waiting for admission and a prefill
+    /// backlog of `backlog_chunks` chunks across prefilling sessions.
+    pub fn chunks_for_round(&self, queued: usize, backlog_chunks: usize) -> usize {
+        if backlog_chunks == 0 {
+            return 0;
+        }
+        let cap = self.max_chunks_per_round();
+        let quota = if queued > 0 {
+            cap
+        } else {
+            let round = self.cfg.cost.round_cost(self.cfg.k_nominal);
+            let budget = self.cfg.steady_fraction.max(0.0) * round;
+            ((budget / self.cfg.chunk_cost).floor() as usize).clamp(1, cap)
+        };
+        quota.min(backlog_chunks)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -692,5 +788,51 @@ mod tests {
         assert!((c.round_cost(4) - 2.0).abs() < 1e-12);
         let p = CostModel::parallel();
         assert!((p.round_cost(1) - p.round_cost(7)).abs() < 1e-12);
+    }
+
+    fn arbiter(max_chunks: usize, steady_fraction: f64) -> PrefillArbiter {
+        PrefillArbiter::new(PrefillArbiterCfg {
+            max_chunks_per_round: max_chunks,
+            steady_fraction,
+            ..PrefillArbiterCfg::for_chunk(16, 8, CostModel::chained(0.25), 4)
+        })
+    }
+
+    #[test]
+    fn arbiter_zero_backlog_spends_nothing() {
+        let a = arbiter(4, 0.5);
+        assert_eq!(a.chunks_for_round(0, 0), 0);
+        assert_eq!(a.chunks_for_round(9, 0), 0);
+    }
+
+    #[test]
+    fn arbiter_steady_state_protects_decode_cadence() {
+        // round_cost(4) = 2.0, chunk_cost = 2.0: half a round's budget
+        // is one chunk's worth, floored to 0 then clamped up — the lane
+        // never starves but also never exceeds the steady budget + 1.
+        let a = arbiter(4, 0.5);
+        let steady = a.chunks_for_round(0, 100);
+        assert_eq!(steady, 1, "steady state must drip, not burst");
+        // A roomier steady fraction grants more, still capped.
+        let roomy = arbiter(4, 4.0);
+        assert_eq!(roomy.chunks_for_round(0, 100), 4);
+    }
+
+    #[test]
+    fn arbiter_queue_pressure_spends_the_cap() {
+        let a = arbiter(4, 0.5);
+        assert_eq!(a.chunks_for_round(3, 100), 4);
+        // …but never more than the backlog itself.
+        assert_eq!(a.chunks_for_round(3, 2), 2);
+    }
+
+    #[test]
+    fn arbiter_bound_is_hard() {
+        // The stall-containment bound: whatever the pressure, never
+        // more than max_chunks_per_round between two decode rounds.
+        let a = arbiter(2, 10.0);
+        for queued in 0..8 {
+            assert!(a.chunks_for_round(queued, 1000) <= 2);
+        }
     }
 }

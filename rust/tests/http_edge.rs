@@ -53,12 +53,48 @@ fn connect(server: &HttpServer) -> TcpStream {
     s
 }
 
-/// One request, whole response (the server closes after answering).
+/// One request, whole response. The edge keeps connections alive, so
+/// the helper injects `Connection: close` (after the request line) to
+/// get the old answer-and-close shape; sequential reuse is pinned
+/// separately by `two_requests_one_connection`.
 fn request(server: &HttpServer, raw: &str) -> Vec<u8> {
+    let raw = raw.replacen("\r\n", "\r\nConnection: close\r\n", 1);
     let mut s = connect(server);
     s.write_all(raw.as_bytes()).unwrap();
     let mut out = Vec::new();
     s.read_to_end(&mut out).expect("read response");
+    out
+}
+
+/// Read exactly one `Content-Length`-framed response off a keep-alive
+/// socket (`read_to_end` would block until the server's idle timeout).
+fn read_one_response(s: &mut TcpStream) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut buf = [0u8; 1024];
+    let (head_end, content_length) = loop {
+        if let Some(he) = find(&out, b"\r\n\r\n") {
+            let head = std::str::from_utf8(&out[..he]).unwrap();
+            let cl = head
+                .split("\r\n")
+                .skip(1)
+                .find_map(|l| {
+                    l.split_once(':')
+                        .filter(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+                        .map(|(_, v)| v.trim().parse::<usize>().unwrap())
+                })
+                .expect("content-length header");
+            break (he, cl);
+        }
+        let n = s.read(&mut buf).expect("response head");
+        assert!(n > 0, "server closed mid-head");
+        out.extend_from_slice(&buf[..n]);
+    };
+    while out.len() < head_end + 4 + content_length {
+        let n = s.read(&mut buf).expect("response body");
+        assert!(n > 0, "server closed mid-body");
+        out.extend_from_slice(&buf[..n]);
+    }
+    out.truncate(head_end + 4 + content_length);
     out
 }
 
@@ -467,6 +503,52 @@ fn mid_stream_fault_arrives_as_sse_fault_event() {
         d.get("error").as_str().unwrap().contains("session fault"),
         "got: {}",
         last.data
+    );
+    server.shutdown();
+}
+
+/// HTTP/1.1 keep-alive: two sequential requests over ONE connection —
+/// glued into a single write, so the parser's residual hand-off is
+/// exercised too. The first response (no `Connection` header sent) must
+/// answer `keep-alive` and be `Content-Length`-framed; the second sends
+/// `Connection: close` and the server closes after answering. The whole
+/// exchange consumes exactly one connection slot.
+#[test]
+fn two_requests_one_connection() {
+    let server = edge(vec![1, 4], 16, Duration::from_millis(1), FaultPlan::default());
+    let mut s = connect(&server);
+    let body = "{\"prompt\": [1, 2], \"max_new\": 8, \"stream\": false}";
+    let first_req = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let second_req = "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n";
+    s.write_all(format!("{first_req}{second_req}").as_bytes())
+        .unwrap();
+    let first = parse_response(&read_one_response(&mut s));
+    assert_eq!(first.status, 200);
+    assert_eq!(
+        first.header("connection"),
+        Some("keep-alive"),
+        "HTTP/1.1 without Connection: close must keep the connection"
+    );
+    assert_eq!(first.body_json().get("tokens").as_arr().unwrap().len(), 8);
+    let mut rest = Vec::new();
+    s.read_to_end(&mut rest)
+        .expect("second response then orderly close");
+    let second = parse_response(&rest);
+    assert_eq!(second.status, 200);
+    assert_eq!(
+        second.header("connection"),
+        Some("close"),
+        "the server must honor the client's Connection: close"
+    );
+    assert!(String::from_utf8(second.body).unwrap().contains("ok"));
+    // One keep-alive connection + the metrics probe's own = 2 total.
+    let m = metrics_text(&server);
+    assert!(
+        m.contains("lkspec_http_conns_total 2"),
+        "both requests must share one connection slot; metrics:\n{m}"
     );
     server.shutdown();
 }

@@ -1,0 +1,313 @@
+//! Chunked-prefill scenario suite over `SimCore` (DESIGN.md §11) —
+//! PJRT-free, so it runs everywhere `cargo test` does, including the
+//! CI smoke step.
+//!
+//! The in-module lane tests in `server/scheduler.rs` pin the keystone
+//! invariants one prompt at a time; this suite drives BURSTY mixes —
+//! several long prompts landing against a live decode cohort — and
+//! checks the properties the bench relies on:
+//!
+//!   * chunked-prefill decode is bit-equal to whole-prompt joins for
+//!     every session in the mix (greedy AND stochastic: `SimCore`
+//!     draws per-session RNG streams, so equality of token streams
+//!     means the chunk schedule never perturbed a single draw);
+//!   * no tick ever runs more prefill chunks than the arbiter budget,
+//!     and decode rounds keep advancing while a burst amortizes;
+//!   * under the radix prefix cache, shared-prefix bursts skip cached
+//!     chunks as COMPUTE (accounted in `prefill_tokens_saved`);
+//!   * a fault inside one session's prefill chunk evicts only that
+//!     session, even mid-burst.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use lk_spec::server::batcher::BatcherConfig;
+use lk_spec::server::{PagedKvConfig, RequestError, RequestResult, Scheduler, SimCore};
+use lk_spec::spec::adaptive::{CostModel, PrefillArbiter, PrefillArbiterCfg};
+
+fn cfg(queue_cap: usize) -> BatcherConfig {
+    BatcherConfig {
+        buckets: vec![1, 4],
+        max_wait: Duration::ZERO,
+        queue_cap,
+    }
+}
+
+fn arb(chunk: usize, cap: usize) -> PrefillArbiter {
+    PrefillArbiter::new(PrefillArbiterCfg {
+        max_chunks_per_round: cap,
+        ..PrefillArbiterCfg::for_chunk(chunk, 8, CostModel::chained(0.25), 4)
+    })
+}
+
+fn paged_cfg(total_blocks: usize) -> PagedKvConfig {
+    PagedKvConfig {
+        block_size: 4,
+        total_blocks,
+        prefix_cache: true,
+    }
+}
+
+/// Tick until idle, collecting results; panics if the scheduler fails
+/// to converge within `guard` ticks.
+fn drain(s: &mut Scheduler<SimCore>, guard: usize) -> Vec<(u64, RequestResult)> {
+    let mut out = Vec::new();
+    let mut ticks = 0;
+    while !s.is_idle() {
+        out.extend(s.tick(Instant::now()).unwrap());
+        ticks += 1;
+        assert!(ticks < guard, "scheduler did not converge");
+    }
+    out
+}
+
+/// A bursty long-prompt scenario: a b=4 decode cohort is live, then
+/// `burst` long prompts (staggered lengths) arrive over several ticks.
+/// Returns per-id results plus the lane's chunk count.
+fn run_burst(
+    seed: u64,
+    chunk: Option<usize>,
+    budget: usize,
+    burst: usize,
+) -> (BTreeMap<u64, RequestResult>, u64) {
+    let mut core = SimCore::new(4, seed, vec![1, 4]);
+    if let Some(c) = chunk {
+        core = core.with_chunked_prefill(c);
+    }
+    let mut s = Scheduler::new(core, cfg(64));
+    if let Some(c) = chunk {
+        s = s.with_chunked_prefill(arb(c, budget));
+    }
+    // Cohort: one long-running keeper + three short sessions.
+    s.submit(vec![1, 7], 48).unwrap();
+    for i in 1..4 {
+        s.submit(vec![i + 1, 7], 5).unwrap();
+    }
+    let _ = s.tick(Instant::now()).unwrap();
+    // The burst: long prompts with staggered lengths, two per tick, so
+    // the lane has to multiplex sessions mid-prefill.
+    for (n, w) in (0..burst).zip([24usize, 40, 32, 48, 28, 36].iter().cycle()) {
+        let base = 200 + 100 * n as i32;
+        s.submit((base..base + *w as i32).collect(), 6).unwrap();
+        if n % 2 == 1 {
+            let _ = s.tick(Instant::now()).unwrap();
+        }
+    }
+    let mut got = BTreeMap::new();
+    for (id, r) in drain(&mut s, 20_000) {
+        got.insert(id, r);
+    }
+    (got, s.core().prefill_chunks_run)
+}
+
+/// THE scenario the bench measures, as a correctness property: a burst
+/// of long prompts against a live cohort, chunked vs whole-prompt —
+/// every session's tokens and acceptance stats are bit-equal. Swept
+/// over seeds, chunk lengths, and budgets so the equality is a
+/// property of the lane, not of one lucky schedule.
+#[test]
+fn bursty_long_prompt_mix_bit_equal_across_chunk_schedules() {
+    for seed in [42u64, 7, 1234] {
+        let (whole, whole_chunks) = run_burst(seed, None, 0, 4);
+        assert_eq!(whole_chunks, 0);
+        for (chunk, budget) in [(4usize, 1usize), (4, 2), (8, 2), (2, 4)] {
+            let (chunked, lane_chunks) = run_burst(seed, Some(chunk), budget, 4);
+            assert!(lane_chunks > 0, "burst never used the lane (c={chunk})");
+            assert_eq!(
+                chunked.len(),
+                whole.len(),
+                "session count diverged (seed {seed}, c={chunk}, budget {budget})"
+            );
+            for (id, w) in &whole {
+                let c = &chunked[id];
+                assert_eq!(
+                    c.tokens, w.tokens,
+                    "tokens diverged: seed {seed}, c={chunk}, budget {budget}, id {id}"
+                );
+                assert_eq!(c.stats.drafted, w.stats.drafted, "id {id}");
+                assert_eq!(c.stats.accepted, w.stats.accepted, "id {id}");
+                assert_eq!(c.stats.prefix_hist, w.stats.prefix_hist, "id {id}");
+            }
+        }
+    }
+}
+
+/// Decode cadence under a burst: with six long prompts queued behind a
+/// live cohort, no tick runs more chunks than the budget, decode
+/// rounds advance EVERY tick, and the keeper's token stream never goes
+/// quiet while the lane is backed up.
+#[test]
+fn burst_never_stalls_decode_beyond_chunk_budget() {
+    let core = SimCore::new(4, 42, vec![1, 4]).with_chunked_prefill(4);
+    let mut s = Scheduler::new(core, cfg(64)).with_chunked_prefill(arb(4, 2));
+    let keeper = s.submit(vec![1, 7], 120).unwrap();
+    let _ = s.tick(Instant::now()).unwrap();
+    let _ = s.take_token_events();
+    // Six long prompts land at once: 6 * 10 = 60 chunks of backlog.
+    for n in 0..6 {
+        let base = 200 + 100 * n;
+        s.submit((base..base + 40).collect(), 4).unwrap();
+    }
+    let mut done = Vec::new();
+    let mut ticks = 0usize;
+    let mut quiet = 0usize;
+    while !s.is_idle() {
+        let chunks0 = s.core().prefill_chunks_run;
+        let rounds0 = s.core().rounds_run;
+        done.extend(s.tick(Instant::now()).unwrap());
+        assert!(
+            s.core().prefill_chunks_run - chunks0 <= 2,
+            "tick {ticks} ran more chunks than the budget"
+        );
+        assert!(s.core().rounds_run > rounds0, "decode stalled on tick {ticks}");
+        // The keeper must keep streaming: it may skip a tick while the
+        // group re-forms around joins, but never goes quiet for long.
+        if s.take_token_events().iter().any(|(id, t)| *id == keeper && !t.is_empty()) {
+            quiet = 0;
+        } else if done.iter().all(|(id, _)| *id != keeper) {
+            quiet += 1;
+            assert!(quiet < 8, "keeper stream went quiet behind the burst");
+        }
+        ticks += 1;
+        assert!(ticks < 10_000, "burst did not converge");
+    }
+    assert_eq!(s.core().prefill_chunks_run, 60, "6 prompts x 10 chunks");
+    assert!(s.metrics.prefill_lane_rounds >= 30, "60 chunks at <= 2/tick");
+}
+
+/// A shared-prefix burst under the radix cache: the first long session
+/// prefills in full; the rest skip every cache-resident chunk as
+/// compute. Saved tokens scale with the burst, and the lane runs far
+/// fewer chunks than the uncached control.
+#[test]
+fn shared_prefix_burst_skips_cached_chunks() {
+    let shared: Vec<i32> = (500..532).collect(); // 32 tokens = 8 chunks
+    let run = |prefix_cache: bool| {
+        let core = SimCore::new(4, 42, vec![1, 4]).with_chunked_prefill(4);
+        let mut s = Scheduler::new(core, cfg(64))
+            .with_paged_kv(PagedKvConfig {
+                prefix_cache,
+                ..paged_cfg(128)
+            })
+            .with_chunked_prefill(arb(4, 4));
+        s.submit(vec![1, 7], 60).unwrap();
+        let _ = s.tick(Instant::now()).unwrap();
+        // Four sessions share the 32-token prefix, arriving as a burst.
+        for _ in 0..4 {
+            s.submit(shared.clone(), 4).unwrap();
+            let _ = s.tick(Instant::now()).unwrap();
+        }
+        let n = drain(&mut s, 20_000).len();
+        assert_eq!(n, 5);
+        (
+            s.core().prefill_chunks_run,
+            s.metrics.prefill_tokens_saved,
+            s.metrics.prefill_tokens,
+        )
+    };
+    let (cold_chunks, cold_saved, _) = run(false);
+    let (warm_chunks, warm_saved, warm_tokens) = run(true);
+    assert_eq!(cold_saved, 0);
+    // Warm: each of the 3 followers skips 7 of its 8 chunks (the final
+    // chunk always runs — its logits seed the first sampled token).
+    assert_eq!(warm_saved, 3 * 28, "three followers x 28 cached tokens");
+    assert_eq!(
+        cold_chunks - warm_chunks,
+        3 * 7,
+        "cache must remove whole chunks of lane compute"
+    );
+    // Accounting identity: executed + saved covers every prompt token.
+    assert_eq!(warm_tokens + warm_saved, 2 + 32 + 4 * 32);
+}
+
+/// Chaos mid-burst: one session faults during its prefill chunk. Only
+/// that session is evicted; every other session in the burst — and the
+/// decoding cohort — finishes bit-equal to the unfaulted run.
+#[test]
+fn prefill_fault_mid_burst_contains_blast_radius() {
+    let run = |fail: Option<u64>| {
+        let core = SimCore::new(4, 42, vec![1, 4]).with_chunked_prefill(4);
+        let mut s = Scheduler::new(core, cfg(64))
+            .with_paged_kv(paged_cfg(128))
+            .with_chunked_prefill(arb(4, 2));
+        s.submit(vec![1, 7], 40).unwrap();
+        let _ = s.tick(Instant::now()).unwrap();
+        s.core_mut().fail_prefill_at = fail;
+        let mut ids = Vec::new();
+        for n in 0..3 {
+            let base = 200 + 100 * n;
+            ids.push(s.submit((base..base + 24).collect(), 6).unwrap());
+            let _ = s.tick(Instant::now()).unwrap();
+        }
+        let mut got = BTreeMap::new();
+        let mut failures = Vec::new();
+        let mut ticks = 0;
+        while !s.is_idle() {
+            for (id, r) in s.tick(Instant::now()).unwrap() {
+                got.insert(id, r);
+            }
+            failures.extend(s.take_failures());
+            ticks += 1;
+            assert!(ticks < 10_000, "chaos burst did not converge");
+        }
+        (got, failures, ids, s)
+    };
+    let (clean, none, _, _) = run(None);
+    assert!(none.is_empty());
+    assert_eq!(clean.len(), 4);
+    // Fault on the 4th chunk overall: lands inside the first long
+    // prompt's prefill (24 tokens = 6 chunks).
+    let (got, failures, ids, s) = run(Some(3));
+    assert_eq!(failures.len(), 1, "exactly one session faults");
+    let (victim, err) = &failures[0];
+    assert!(ids.contains(victim), "the victim is one of the burst sessions");
+    assert!(
+        matches!(err, RequestError::SessionFault(m) if m.contains("prefill")),
+        "got: {err:?}"
+    );
+    assert!(!got.contains_key(victim));
+    for (id, r) in &got {
+        assert_eq!(r.tokens, clean[id].tokens, "survivor {id} diverged");
+    }
+    assert_eq!(s.metrics.session_faults, 1);
+    assert_eq!(s.paged_kv().unwrap().sessions(), 0, "victim blocks freed");
+}
+
+/// TTFT ordering sanity for the bench: under the lane, a long prompt's
+/// first token lands AFTER its prefill chunks complete, and `ttft_ms`
+/// covers the lane time (>= queue time, monotone with prompt length in
+/// chunk count).
+#[test]
+fn lane_ttft_accounts_for_chunked_prefill() {
+    let core = SimCore::new(4, 42, vec![1, 4]).with_chunked_prefill(4);
+    let mut s = Scheduler::new(core, cfg(64)).with_chunked_prefill(arb(4, 1));
+    s.submit(vec![1, 7], 60).unwrap();
+    let _ = s.tick(Instant::now()).unwrap();
+    let id = s.submit((200..240).collect(), 4).unwrap(); // 10 chunks at 1/tick
+    let mut first_token_tick = None;
+    let mut lane_done_tick = None;
+    let mut results = BTreeMap::new();
+    for tick in 0..10_000 {
+        for (rid, r) in s.tick(Instant::now()).unwrap() {
+            results.insert(rid, r);
+        }
+        if lane_done_tick.is_none() && s.core().prefill_chunks_run >= 10 {
+            lane_done_tick = Some(tick);
+        }
+        if first_token_tick.is_none()
+            && s.take_token_events().iter().any(|(i, t)| *i == id && !t.is_empty())
+        {
+            first_token_tick = Some(tick);
+        }
+        if results.contains_key(&id) {
+            break;
+        }
+    }
+    let (lane_done, first) = (lane_done_tick.unwrap(), first_token_tick.unwrap());
+    assert!(
+        first >= lane_done,
+        "first token (tick {first}) before prefill completed (tick {lane_done})"
+    );
+    let r = &results[&id];
+    assert!(r.ttft_ms >= 0.0 && r.ttft_ms >= r.queue_ms, "ttft excludes lane time");
+}

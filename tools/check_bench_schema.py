@@ -57,6 +57,16 @@ SCHEMAS: dict[str, set[str]] = {
         "ttft_ms_p50",
         "inter_token_ms_p50",
     },
+    "prefill_interference": {
+        "short_ttft_p50",
+        "short_ttft_p99",
+        "long_ttft_p50",
+        "long_ttft_p99",
+        "decode_gap_p50",
+        "decode_gap_p99",
+        "prefill_chunks",
+        "prefill_tokens_saved",
+    },
 }
 
 # Sections that must be present in EVERY run (artifact-less CI included;
@@ -68,6 +78,7 @@ ALWAYS_PRESENT = {
     "kv_migration_analytic",
     "chaos_smoke",
     "http_stream_latency",
+    "prefill_interference",
 }
 
 

@@ -1,0 +1,266 @@
+"""Trainer-side tests for the online adaptation loop (DESIGN.md §12):
+LK loss terms vs hand-computed fixtures, the sim acceptance fit the Rust
+`sim_finetune` mirrors, LKT checkpoint round-trip + corruption, swap
+atomicity under a killed writer, and the stdout JSONL subprocess
+contract `AdaptDriver` speaks.
+
+Deliberately stdlib-only (no jax, no hypothesis): this suite must run on
+the minimal CI image alongside the Rust swap-chaos tests.
+"""
+
+import json
+import math
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from train import lk_finetune as lk
+
+PY_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCRIPT = os.path.join(PY_ROOT, "train", "lk_finetune.py")
+
+
+def rec(slot, accept, p=None, q=None, **extra):
+    r = {
+        "session": 1,
+        "round": extra.get("round", 0),
+        "pos": 5,
+        "slot": slot,
+        "ctx": [-1, -1, 1001, 1002],
+        "draft": 1003,
+        "accept": accept,
+    }
+    if p is not None:
+        r["p"] = p
+    if q is not None:
+        r["q"] = q
+    return r
+
+
+# ---------------------------------------------------------------------------
+# LK terms on the two-atom collapse — hand-computed fixtures
+# ---------------------------------------------------------------------------
+
+
+def test_lk_terms_hand_computed():
+    t = lk.lk_terms_2atom(0.8, 0.5)
+    assert t["alpha"] == pytest.approx(0.7)
+    assert t["tv"] == pytest.approx(0.3)
+    assert t["kl"] == pytest.approx(0.8 * math.log(0.8 / 0.5) + 0.2 * math.log(0.2 / 0.5))
+    assert t["nll"] == pytest.approx(-math.log(0.7))
+
+
+def test_lk_terms_matched_distributions_are_free():
+    t = lk.lk_terms_2atom(0.3, 0.3)
+    assert t["alpha"] == pytest.approx(1.0)
+    assert t["tv"] == 0.0
+    assert t["kl"] == pytest.approx(0.0)
+    assert t["nll"] == pytest.approx(0.0)
+
+
+def test_lk_terms_disjoint_support_is_clamped_finite():
+    t = lk.lk_terms_2atom(1.0, 0.0)
+    assert t["alpha"] == 0.0
+    assert t["tv"] == 1.0
+    assert math.isfinite(t["kl"]) and t["kl"] > 20.0
+    assert math.isfinite(t["nll"]) and t["nll"] > 20.0
+
+
+# ---------------------------------------------------------------------------
+# sim fit — the exact math the Rust BuiltinSim trainer runs in-process
+# ---------------------------------------------------------------------------
+
+
+def test_sim_fit_hand_computed_profile():
+    records = (
+        [rec(0, True)] * 3
+        + [rec(0, False)]
+        + [rec(1, True), rec(1, False)]
+        + [rec(3, True)]
+    )
+    profile, a0, a1 = lk.sim_fit(records, k=4, gain=0.5)
+    # slot0 alpha .75 -> .875; slot1 .5 -> .75; slot2 unexercised
+    # inherits the FITTED .75 then gains again -> .875; slot3 1.0 -> 1.0.
+    assert profile == pytest.approx([0.875, 0.75, 0.875, 1.0])
+    assert a0 == pytest.approx(5 / 7)
+    assert a1 == pytest.approx(5 / 7 + 0.5 * 2 / 7)
+
+
+def test_sim_fit_empty_slots_default_half():
+    profile, a0, a1 = lk.sim_fit([], k=2, gain=0.5)
+    assert a0 == 0.0 and a1 == 0.5
+    # slot0 defaults 0.5 -> 0.75; slot1 inherits 0.75 -> 0.875.
+    assert profile == pytest.approx([0.75, 0.875])
+
+
+# ---------------------------------------------------------------------------
+# LK fit — descent moves the draft toward the target
+# ---------------------------------------------------------------------------
+
+
+def lk_records():
+    out = []
+    for i in range(24):
+        out.append(rec(0, i % 3 != 0, p=0.9, q=0.4, round=i))
+        out.append(rec(1, i % 2 == 0, p=0.7, q=0.2, round=i))
+    return out
+
+
+def test_lk_fit_improves_fitted_acceptance():
+    records = lk_records()
+    profile, a0, a1, theta = lk.lk_fit(records, k=2, gain=0.5)
+    # Pre-fit two-atom acceptances: 1-|p-q| = 0.5 per slot.
+    assert all(0.0 <= a <= 1.0 for a in profile)
+    assert all(a > 0.5 for a in profile), profile
+    assert all(t > 0.0 for t in theta), theta
+    assert a1 > a0
+
+
+def test_lk_fit_is_deterministic():
+    a = lk.lk_fit(lk_records(), k=2, gain=0.5)
+    b = lk.lk_fit(lk_records(), k=2, gain=0.5)
+    assert a == b
+
+
+def test_lk_fit_without_probs_falls_back_to_sim():
+    records = [rec(0, True)] * 3 + [rec(0, False)]
+    profile, a0, a1, theta = lk.lk_fit(records, k=1, gain=0.5)
+    sim_profile, sim_a0, _ = lk.sim_fit(records, k=1, gain=0.5)
+    assert profile == pytest.approx(sim_profile)
+    assert a0 == pytest.approx(sim_a0)
+    assert theta == [0.0]
+
+
+# ---------------------------------------------------------------------------
+# LKT checkpoint: round-trip, validation, swap atomicity
+# ---------------------------------------------------------------------------
+
+
+def test_lkt_roundtrip(tmp_path):
+    path = str(tmp_path / "ck.lkt")
+    meta = {"epoch": 3, "mode": "lk"}
+    tensors = {
+        "adapt/theta": ("f32", [2], [0.25, 0.5]),
+        "adapt/profile": ("f32", [2], [0.625, 0.75]),
+        "counts": ("i32", [3], [4, -2, 7]),
+    }
+    lk.write_lkt(path, meta, tensors)
+    meta2, tensors2 = lk.read_lkt(path)
+    assert meta2 == meta
+    assert set(tensors2) == set(tensors)
+    assert tensors2["counts"] == ("i32", [3], [4, -2, 7])
+    got = tensors2["adapt/theta"]
+    assert got[0] == "f32" and got[1] == [2]
+    assert got[2] == pytest.approx([0.25, 0.5])
+
+
+def test_lkt_rejects_corruption(tmp_path):
+    path = str(tmp_path / "bad.lkt")
+    with open(path, "wb") as f:
+        f.write(b"NOPE")
+    with pytest.raises(ValueError):
+        lk.read_lkt(path)
+    lk.write_lkt(path, {}, {"t": ("f32", [4], [0.0] * 4)})
+    with open(path, "rb") as f:
+        data = f.read()
+    with open(path, "wb") as f:
+        f.write(data[:-3])  # chop tensor data
+    with pytest.raises(ValueError):
+        lk.read_lkt(path)
+
+
+def test_swap_atomicity_under_killed_writer(tmp_path):
+    """Kill a writer mid-checkpoint repeatedly: the committed path must
+    be absent or fully valid — never torn (tmp + os.replace)."""
+    path = str(tmp_path / "live.lkt")
+    child_src = (
+        "import sys\n"
+        f"sys.path.insert(0, {PY_ROOT!r})\n"
+        "from train import lk_finetune as lk\n"
+        "vals = [0.5] * 200_000\n"
+        "i = 0\n"
+        "while True:\n"
+        f"    lk.write_lkt({path!r}, {{'i': i}}, {{'w': ('f32', [200_000], vals)}})\n"
+        "    i += 1\n"
+    )
+    for trial in range(4):
+        proc = subprocess.Popen([sys.executable, "-c", child_src])
+        time.sleep(0.05 + 0.04 * trial)
+        proc.send_signal(signal.SIGKILL)
+        proc.wait()
+        if os.path.exists(path):
+            meta, tensors = lk.read_lkt(path)  # must parse cleanly
+            assert tensors["w"][1] == [200_000]
+
+
+# ---------------------------------------------------------------------------
+# subprocess contract (what the Rust AdaptDriver speaks)
+# ---------------------------------------------------------------------------
+
+
+def run_trainer(tmp_path, records, mode=None, transcript_override=None):
+    transcript = str(tmp_path / "transcript.jsonl")
+    if transcript_override is None:
+        with open(transcript, "w", encoding="utf-8") as f:
+            for r in records:
+                f.write(json.dumps(r) + "\n")
+    else:
+        transcript = transcript_override
+    config = str(tmp_path / "config.json")
+    with open(config, "w", encoding="utf-8") as f:
+        json.dump(
+            {
+                "transcript": transcript,
+                "out_dir": str(tmp_path / "out"),
+                "epoch": 2,
+                "gain": 0.5,
+            },
+            f,
+        )
+    argv = [sys.executable, SCRIPT, "--config", config]
+    if mode:
+        argv += ["--mode", mode]
+    proc = subprocess.run(argv, capture_output=True, text=True, timeout=120)
+    events = [json.loads(line) for line in proc.stdout.splitlines() if line.strip()]
+    assert all(set(e) == {"kind", "payload"} for e in events), proc.stdout
+    return proc, events
+
+
+@pytest.mark.parametrize("mode", [None, "lk"])
+def test_trainer_contract_happy_path(tmp_path, mode):
+    records = lk_records()
+    proc, events = run_trainer(tmp_path, records, mode=mode)
+    assert proc.returncode == 0, proc.stderr
+    kinds = [e["kind"] for e in events]
+    assert kinds[0] == "start" and kinds[-1] == "done"
+    assert "progress" in kinds
+    done = events[-1]["payload"]
+    assert done["epoch"] == 2
+    # The checkpoint the serving side validates-then-commits.
+    with open(done["checkpoint"], "r", encoding="utf-8") as f:
+        ckpt = json.load(f)
+    assert ckpt["format"] == "lkspec-sim-draft"
+    assert ckpt["epoch"] == 2
+    assert ckpt["profile"] and all(0.0 <= a <= 1.0 for a in ckpt["profile"])
+    # Manifest re-emitted next to it, LKT alongside.
+    out_dir = os.path.dirname(done["checkpoint"])
+    with open(os.path.join(out_dir, "manifest.json"), "r", encoding="utf-8") as f:
+        manifest = json.load(f)
+    assert manifest["epoch"] == 2 and manifest["checkpoint"] == done["checkpoint"]
+    meta, tensors = lk.read_lkt(manifest["lkt"])
+    assert meta["epoch"] == 2 and "adapt/profile" in tensors
+    if mode == "lk":
+        assert done["alpha_after"] > done["alpha_before"]
+
+
+def test_trainer_error_is_a_protocol_event(tmp_path):
+    proc, events = run_trainer(
+        tmp_path, [], transcript_override=str(tmp_path / "missing.jsonl")
+    )
+    assert proc.returncode == 1
+    assert [e["kind"] for e in events] == ["error"]
+    assert events[0]["payload"]["message"]

@@ -1,0 +1,3 @@
+"""Background fine-tune entry points for the online adaptation loop
+(DESIGN.md §12). Stdlib-only: the trainer must run on minimal CI images
+with no jax installed."""

@@ -1,0 +1,421 @@
+#!/usr/bin/env python3
+"""Background LK fine-tune over harvested acceptance transcripts
+(DESIGN.md §12).
+
+The serving engine's `AdaptDriver` launches this script as
+
+    lk_finetune.py --config <epoch_dir>/config.json
+
+with config keys `{"transcript", "out_dir", "epoch", "gain"}`, and reads
+JSONL protocol events from stdout (`{"kind": .., "payload": ..}` lines,
+flushed per event). The final event must be
+`{"kind": "done", "payload": {"checkpoint", "epoch", "alpha_before",
+"alpha_after"}}`; an `{"kind": "error"}` event or a non-zero exit maps to
+a typed, transient trainer fault on the serving side — stale draft
+weights keep serving.
+
+Two modes:
+
+* ``sim`` (default): the deterministic acceptance-profile fit mirrored
+  in-process by the Rust ``sim_finetune`` — per-slot empirical
+  acceptance over the transcript, then a fitted profile closing
+  fraction ``gain`` of each slot's acceptance gap.
+* ``lk``: the LK objectives from the paper on the harvested support.
+  Each record collapses target/draft to a two-atom Bernoulli pair
+  ``P=(p, 1-p)``, ``Q=(q, 1-q)`` over {drafted token, rest}; a per-slot
+  interpolation knob ``theta_n`` moves the draft toward the target
+  (``q' = (1-theta)·q + theta·p`` — the stylized effect of distilling on
+  one's own rejections), trained by finite-difference descent on
+  ``sum_n gamma^n · lambda_n · L_n(theta_n)`` with the adaptive
+  ``lambda_n = exp(-eta · alpha_hat_n)`` schedule and
+  ``L = w_kl·KL + w_tv·TV + w_nll·(-log alpha)``.
+
+Both modes emit, atomically (tmp + ``os.replace``, matching every
+checkpoint writer in the repo):
+
+* ``draft_sim.json`` — the ``lkspec-sim-draft`` profile checkpoint the
+  serving side validates-then-commits at a round boundary;
+* ``draft_lk.lkt`` — an LKT1 tensor checkpoint (theta + fitted profile)
+  byte-compatible with ``rust/src/tensor/checkpoint.rs``;
+* ``manifest.json`` — the re-emitted adaptation manifest pointing at
+  both, so a restarted server can find the newest epoch.
+
+Everything here is importable (``from train import lk_finetune``) and
+covered by ``python/tests/test_lk_finetune.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import struct
+import sys
+from typing import Any
+
+# ---------------------------------------------------------------------------
+# transcript
+# ---------------------------------------------------------------------------
+
+
+def load_transcript(path: str) -> list[dict[str, Any]]:
+    """Parse the harvested replay transcript (one JSON record per line:
+    session/round/pos/slot/ctx/draft/accept, optional q/p)."""
+    records = []
+    with open(path, "r", encoding="utf-8") as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{i + 1}: bad transcript line: {e}") from e
+            for key in ("slot", "accept"):
+                if key not in rec:
+                    raise ValueError(f"{path}:{i + 1}: record missing '{key}'")
+            records.append(rec)
+    return records
+
+
+# ---------------------------------------------------------------------------
+# sim fit (must mirror rust sim_finetune bit-for-bit in float64)
+# ---------------------------------------------------------------------------
+
+
+def sim_fit(records: list[dict[str, Any]], k: int, gain: float):
+    """Per-slot empirical acceptance, then a fitted profile closing
+    fraction `gain` of each slot's acceptance gap. Slots never exercised
+    inherit the previous slot's fitted estimate (deep slots only run
+    after shallow accepts). Returns (profile, alpha_before, alpha_after).
+    """
+    k = max(k, 1)
+    acc = [0] * k
+    tot = [0] * k
+    for r in records:
+        s = min(int(r["slot"]), k - 1)
+        tot[s] += 1
+        acc[s] += 1 if r["accept"] else 0
+    gain = min(max(gain, 0.0), 1.0)
+    profile: list[float] = []
+    a_n = a_d = 0.0
+    for i in range(k):
+        if tot[i] > 0:
+            a_n += acc[i]
+            a_d += tot[i]
+            alpha = acc[i] / tot[i]
+        else:
+            alpha = profile[-1] if profile else 0.5
+        profile.append(min(max(alpha + gain * (1.0 - alpha), 0.0), 1.0))
+    alpha_before = a_n / a_d if a_d > 0 else 0.0
+    alpha_after = alpha_before + gain * (1.0 - alpha_before)
+    return profile, alpha_before, alpha_after
+
+
+# ---------------------------------------------------------------------------
+# LK objectives on the two-atom collapse
+# ---------------------------------------------------------------------------
+
+_EPS = 1e-12
+
+
+def lk_terms_2atom(p: float, q: float) -> dict[str, float]:
+    """LK loss terms for the Bernoulli pair P=(p, 1-p), Q=(q, 1-q) over
+    {drafted token, everything else}: acceptance alpha = sum min(P, Q) =
+    1 - |p - q|, total variation, KL(P || Q), and -log alpha."""
+    p = min(max(p, 0.0), 1.0)
+    q = min(max(q, 0.0), 1.0)
+    tv = abs(p - q)
+    alpha = 1.0 - tv
+    qc, pc = max(q, _EPS), max(1.0 - q, _EPS)
+    kl = 0.0
+    if p > 0.0:
+        kl += p * math.log(p / qc)
+    if p < 1.0:
+        kl += (1.0 - p) * math.log((1.0 - p) / pc)
+    return {
+        "alpha": alpha,
+        "tv": tv,
+        "kl": kl,
+        "nll": -math.log(max(alpha, _EPS)),
+    }
+
+
+def _slot_loss(pairs, theta, weights):
+    """Mean LK loss over one slot's (p, q) pairs with the draft moved
+    toward the target by theta: q' = (1-theta)·q + theta·p."""
+    w_kl, w_tv, w_nll = weights
+    total = 0.0
+    for p, q in pairs:
+        t = lk_terms_2atom(p, (1.0 - theta) * q + theta * p)
+        total += w_kl * t["kl"] + w_tv * t["tv"] + w_nll * t["nll"]
+    return total / len(pairs)
+
+
+def lk_fit(
+    records,
+    k,
+    gain,
+    steps=60,
+    lr=0.5,
+    eta=1.0,
+    gamma=0.9,
+    weights=(1.0, 1.0, 1.0),
+    on_step=None,
+):
+    """Fit per-slot theta by finite-difference descent on the weighted
+    LK objective; slots without (p, q) evidence fall back to the sim fit.
+    Returns (profile, alpha_before, alpha_after, theta)."""
+    k = max(k, 1)
+    by_slot: list[list[tuple[float, float]]] = [[] for _ in range(k)]
+    for r in records:
+        if "p" in r and "q" in r:
+            by_slot[min(int(r["slot"]), k - 1)].append((float(r["p"]), float(r["q"])))
+    sim_profile, alpha_before, _ = sim_fit(records, k, gain)
+    # Adaptive lambda is frozen at the pre-fit acceptance (sg[alpha]).
+    alpha_hat = [
+        (sum(1.0 - abs(p - q) for p, q in pairs) / len(pairs)) if pairs else 0.0
+        for pairs in by_slot
+    ]
+    theta = [0.0] * k
+    eps = 1e-3
+    for step in range(steps):
+        loss = 0.0
+        for n, pairs in enumerate(by_slot):
+            if not pairs:
+                continue
+            scale = (gamma**n) * math.exp(-eta * alpha_hat[n])
+            grad = (
+                _slot_loss(pairs, min(theta[n] + eps, 1.0), weights)
+                - _slot_loss(pairs, max(theta[n] - eps, 0.0), weights)
+            ) / (2.0 * eps)
+            theta[n] = min(max(theta[n] - lr * scale * grad, 0.0), 1.0)
+            loss += scale * _slot_loss(pairs, theta[n], weights)
+        if on_step is not None:
+            on_step(step, loss)
+    profile = []
+    for n, pairs in enumerate(by_slot):
+        if pairs:
+            a = sum(1.0 - (1.0 - theta[n]) * abs(p - q) for p, q in pairs) / len(pairs)
+            profile.append(min(max(a, 0.0), 1.0))
+        else:
+            profile.append(sim_profile[n])
+    tot = [len(pairs) for pairs in by_slot]
+    n_rec = sum(tot)
+    alpha_after = (
+        sum(t * a for t, a in zip(tot, profile)) / n_rec if n_rec else profile[0]
+    )
+    return profile, alpha_before, alpha_after, theta
+
+
+# ---------------------------------------------------------------------------
+# checkpoint writers (atomic; LKT1 byte-compatible with the Rust reader)
+# ---------------------------------------------------------------------------
+
+_LKT_MAGIC = b"LKT1"
+_DTYPE_CODE = {"f32": 0, "i32": 1, "u32": 2}
+_DTYPE_PACK = {"f32": "f", "i32": "i", "u32": "I"}
+_CODE_DTYPE = {v: k for k, v in _DTYPE_CODE.items()}
+
+
+def _atomic_write(path: str, data: bytes) -> None:
+    """tmp + os.replace so a killed writer never commits a torn file."""
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def write_lkt(path: str, meta: dict[str, Any], tensors: dict[str, tuple]) -> None:
+    """Write an LKT1 checkpoint: `tensors` maps name -> (dtype, shape,
+    flat values) with dtype in {f32, i32, u32}. Matches the layout in
+    rust/src/tensor/checkpoint.rs (all integers little-endian)."""
+    out = bytearray(_LKT_MAGIC)
+    meta_bytes = json.dumps(meta).encode("utf-8")
+    out += struct.pack("<I", len(meta_bytes)) + meta_bytes
+    out += struct.pack("<I", len(tensors))
+    for name in sorted(tensors):
+        dtype, shape, values = tensors[name]
+        n = 1
+        for d in shape:
+            n *= d
+        if n != len(values):
+            raise ValueError(f"tensor '{name}': shape {shape} != {len(values)} values")
+        name_bytes = name.encode("utf-8")
+        out += struct.pack("<I", len(name_bytes)) + name_bytes
+        out += struct.pack("<BB", _DTYPE_CODE[dtype], len(shape))
+        for d in shape:
+            out += struct.pack("<I", d)
+        out += struct.pack(f"<{n}{_DTYPE_PACK[dtype]}", *values)
+    _atomic_write(path, bytes(out))
+
+
+def read_lkt(path: str):
+    """Read + fully validate an LKT1 checkpoint; returns (meta, tensors)
+    with tensors mapping name -> (dtype, shape, flat values)."""
+    with open(path, "rb") as f:
+        data = f.read()
+
+    off = 0
+
+    def take(n: int) -> bytes:
+        nonlocal off
+        if off + n > len(data):
+            raise ValueError(f"{path}: truncated at byte {off} (+{n})")
+        chunk = data[off : off + n]
+        off += n
+        return chunk
+
+    if take(4) != _LKT_MAGIC:
+        raise ValueError(f"{path}: not an LKT1 checkpoint")
+    meta_len = struct.unpack("<I", take(4))[0]
+    meta = json.loads(take(meta_len).decode("utf-8"))
+    count = struct.unpack("<I", take(4))[0]
+    tensors = {}
+    for _ in range(count):
+        name_len = struct.unpack("<I", take(4))[0]
+        name = take(name_len).decode("utf-8")
+        code, rank = struct.unpack("<BB", take(2))
+        if code not in _CODE_DTYPE:
+            raise ValueError(f"{path}: bad dtype code {code} for '{name}'")
+        dtype = _CODE_DTYPE[code]
+        shape = [struct.unpack("<I", take(4))[0] for _ in range(rank)]
+        n = 1
+        for d in shape:
+            n *= d
+        values = list(struct.unpack(f"<{n}{_DTYPE_PACK[dtype]}", take(4 * n)))
+        tensors[name] = (dtype, shape, values)
+    if off != len(data):
+        raise ValueError(f"{path}: {len(data) - off} trailing bytes")
+    return meta, tensors
+
+
+def write_sim_checkpoint(path, epoch, profile, alpha_before, alpha_after):
+    """The `lkspec-sim-draft` profile checkpoint SimCore's
+    validate-then-commit hot-swap consumes."""
+    doc = {
+        "format": "lkspec-sim-draft",
+        "epoch": epoch,
+        "profile": profile,
+        "alpha_before": alpha_before,
+        "alpha_after": alpha_after,
+    }
+    _atomic_write(path, (json.dumps(doc, indent=2) + "\n").encode("utf-8"))
+
+
+def write_manifest(out_dir, epoch, mode, checkpoint, lkt, alpha_before, alpha_after, n):
+    """Re-emit the adaptation manifest so a restarted server (or the
+    next fine-tune) can locate the newest epoch's artifacts."""
+    doc = {
+        "format": "lkspec-adapt-manifest",
+        "epoch": epoch,
+        "mode": mode,
+        "checkpoint": checkpoint,
+        "lkt": lkt,
+        "alpha_before": alpha_before,
+        "alpha_after": alpha_after,
+        "records": n,
+    }
+    _atomic_write(
+        os.path.join(out_dir, "manifest.json"),
+        (json.dumps(doc, indent=2) + "\n").encode("utf-8"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# protocol + entry point
+# ---------------------------------------------------------------------------
+
+
+def emit(kind: str, payload: dict[str, Any], out=None) -> None:
+    """One protocol event, flushed: the serving side treats any
+    non-`{"kind", "payload"}` stdout line as a malformed-protocol fault
+    and an event gap past the deadline as a hang."""
+    out = out or sys.stdout
+    out.write(json.dumps({"kind": kind, "payload": payload}) + "\n")
+    out.flush()
+
+
+def run(config_path: str, mode_override: str | None = None) -> int:
+    with open(config_path, "r", encoding="utf-8") as f:
+        cfg = json.load(f)
+    transcript = cfg["transcript"]
+    out_dir = cfg["out_dir"]
+    epoch = int(cfg.get("epoch", 0))
+    gain = float(cfg.get("gain", 0.5))
+    mode = mode_override or cfg.get("mode", "sim")
+    if mode not in ("sim", "lk"):
+        raise ValueError(f"unknown mode '{mode}' (expected sim or lk)")
+
+    records = load_transcript(transcript)
+    if not records:
+        raise ValueError(f"{transcript}: empty transcript")
+    k = 1 + max(int(r["slot"]) for r in records)
+    emit("start", {"epoch": epoch, "mode": mode, "records": len(records), "k": k})
+
+    if mode == "sim":
+        profile, a0, a1 = sim_fit(records, k, gain)
+        theta = [0.0] * k
+        emit("progress", {"step": 0, "loss": 1.0 - a0})
+    else:
+        steps = int(cfg.get("steps", 60))
+        profile, a0, a1, theta = lk_fit(
+            records,
+            k,
+            gain,
+            steps=steps,
+            lr=float(cfg.get("lr", 0.5)),
+            eta=float(cfg.get("eta", 1.0)),
+            gamma=float(cfg.get("gamma", 0.9)),
+            on_step=lambda step, loss: (
+                emit("progress", {"step": step, "loss": loss})
+                if step % 10 == 0 or step == steps - 1
+                else None
+            ),
+        )
+
+    ckpt = os.path.join(out_dir, "draft_sim.json")
+    lkt = os.path.join(out_dir, "draft_lk.lkt")
+    write_sim_checkpoint(ckpt, epoch, profile, a0, a1)
+    write_lkt(
+        lkt,
+        {
+            "epoch": epoch,
+            "mode": mode,
+            "alpha_before": a0,
+            "alpha_after": a1,
+            "records": len(records),
+        },
+        {
+            "adapt/theta": ("f32", [k], theta),
+            "adapt/profile": ("f32", [k], profile),
+        },
+    )
+    write_manifest(out_dir, epoch, mode, ckpt, lkt, a0, a1, len(records))
+    emit(
+        "done",
+        {"checkpoint": ckpt, "epoch": epoch, "alpha_before": a0, "alpha_after": a1},
+    )
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--config", required=True, help="JSON config from AdaptDriver")
+    ap.add_argument("--mode", choices=("sim", "lk"), help="override config mode")
+    args = ap.parse_args(argv)
+    try:
+        return run(args.config, args.mode)
+    except Exception as e:  # contained: maps to a typed transient fault
+        emit("error", {"message": f"{type(e).__name__}: {e}"})
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,8 +21,8 @@ use lk_spec::server::metrics::{
     tree_device_bytes_per_round, tree_host_bytes_per_round,
 };
 use lk_spec::server::{
-    DownshiftConfig, FaultConfig, FaultPlan, HttpOpts, HttpServer, Router, RouterConfig,
-    Scheduler, SimCore,
+    AdaptConfig, DownshiftConfig, FaultConfig, FaultPlan, HttpOpts, HttpServer, Router,
+    RouterConfig, Scheduler, SimCore,
 };
 use lk_spec::spec::adaptive::{
     ControllerCfg, CostModel, PrefillArbiter, PrefillArbiterCfg, SpecController,
@@ -491,6 +491,106 @@ fn bench_chaos_smoke(json: &mut JsonRows) -> anyhow::Result<()> {
         }
     }
     table.emit("chaos_smoke")?;
+    Ok(())
+}
+
+/// §Adaptation drift (DESIGN.md §12): serve a domain-shifted SimCore
+/// mix — half the sessions hit an acceptance profile the draft handles
+/// well (~0.8), half a shifted one it handles badly (~0.25) — with the
+/// online-adaptation loop attached (builtin sim trainer, hot-swap at
+/// round boundaries). Reports the empirical acceptance over the replay
+/// ring before the last fine-tune vs over the window after the last
+/// committed swap. PJRT-free, always runs; the ensure! turns the
+/// ISSUE-10 acceptance criterion — fine-tuning on harvested transcripts
+/// strictly improves alpha_hat — into a CI tripwire.
+fn bench_adaptation_drift(json: &mut JsonRows) -> anyhow::Result<()> {
+    const SESSIONS: usize = 8;
+    const MAX_NEW: usize = 48;
+    let out_dir = std::env::temp_dir().join(format!(
+        "lkspec-bench-adapt-{}",
+        std::process::id()
+    ));
+    let cfg = BatcherConfig {
+        buckets: vec![1, 4],
+        max_wait: std::time::Duration::ZERO,
+        queue_cap: 64,
+    };
+    let mut sched = Scheduler::new(
+        // Domain-shifted mix: request id keys the profile, so the two
+        // streams interleave inside every decode group.
+        SimCore::new(4, 0xADA7, vec![1, 4])
+            .with_alpha(vec![vec![0.8; 4], vec![0.25; 4]]),
+        cfg,
+    )
+    .with_adaptation(AdaptConfig {
+        interval_rounds: 4,
+        min_records: 24,
+        out_dir: out_dir.clone(),
+        ..AdaptConfig::default()
+    });
+    for i in 0..SESSIONS {
+        sched
+            .submit(vec![i as i32 + 1, 2, 3], MAX_NEW)
+            .map_err(|e| anyhow::anyhow!("adapt submit: {e}"))?;
+    }
+    let mut served = 0usize;
+    let mut ticks = 0usize;
+    while served < SESSIONS {
+        served += sched.tick(Instant::now())?.len();
+        ticks += 1;
+        anyhow::ensure!(ticks < 100_000, "adaptation run did not converge");
+    }
+    // Let an in-flight fine-tune resolve; idle ticks still poll the
+    // trainer and commit the swap at the (empty) round boundary.
+    while sched.adapt().map(|d| d.trainer_running()).unwrap_or(false) {
+        sched.tick(Instant::now())?;
+        ticks += 1;
+        anyhow::ensure!(ticks < 110_000, "trainer did not resolve");
+    }
+    let rounds = sched.metrics.rounds;
+    let m = sched.adapt().expect("adaptation attached").metrics.clone();
+    let _ = std::fs::remove_dir_all(&out_dir);
+
+    let mut table = Table::new(
+        "Adaptation drift — harvested fine-tune on a domain-shifted mix (SimCore, 8 sessions)",
+        &["sessions", "rounds", "harvested", "swaps", "runs", "alpha pre", "alpha post"],
+    );
+    table.row(vec![
+        SESSIONS.to_string(),
+        rounds.to_string(),
+        m.records_harvested_total.to_string(),
+        m.swaps_total.to_string(),
+        m.trainer_runs_total.to_string(),
+        format!("{:.3}", m.alpha_hat_pre),
+        format!("{:.3}", m.alpha_hat_post),
+    ]);
+    json.push(vec![
+        ("bench", Json::Str("adaptation_drift".into())),
+        ("config", Json::Str(format!(
+            "shifted-mix sessions={SESSIONS} interval=4 trainer=sim"
+        ))),
+        ("sessions", Json::Num(SESSIONS as f64)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("records_harvested", Json::Num(m.records_harvested_total as f64)),
+        ("swaps", Json::Num(m.swaps_total as f64)),
+        ("trainer_runs", Json::Num(m.trainer_runs_total as f64)),
+        ("alpha_hat_pre", Json::Num(m.alpha_hat_pre)),
+        ("alpha_hat_post", Json::Num(m.alpha_hat_post)),
+        ("alpha_gain", Json::Num(m.alpha_hat_post - m.alpha_hat_pre)),
+    ]);
+    anyhow::ensure!(
+        m.swaps_total >= 1 && m.records_harvested_total > 0,
+        "adaptation loop never swapped ({} swaps, {} records)",
+        m.swaps_total,
+        m.records_harvested_total
+    );
+    anyhow::ensure!(
+        m.alpha_hat_post > m.alpha_hat_pre,
+        "fine-tune did not improve acceptance: pre {:.3} post {:.3}",
+        m.alpha_hat_pre,
+        m.alpha_hat_post
+    );
+    table.emit("adaptation_drift")?;
     Ok(())
 }
 
@@ -1030,6 +1130,7 @@ fn run_sections(json: &mut JsonRows) -> anyhow::Result<()> {
     bench_speculation_controller(json)?;
     bench_chaos_smoke(json)?;
     bench_prefill_interference(json)?;
+    bench_adaptation_drift(json)?;
     bench_http_stream_latency(json)?;
     bench_verify_transfer(json)?;
     if !Path::new("artifacts/manifest.json").exists() {

@@ -84,7 +84,13 @@ fn print_help() {
                          HTTP edge: --http ADDR (e.g. 127.0.0.1:8080) serves\n\
                          POST /v1/generate (SSE token streaming), /healthz,\n\
                          /metrics until stdin closes; --max-conns N,\n\
-                         --stream-buffer N tune the edge (DESIGN.md §10)\n\
+                         --stream-buffer N tune the edge (DESIGN.md §10).\n\
+                         Online adaptation: --adapt (harvest live acceptance\n\
+                         verdicts, background LK fine-tune, hot-swap draft\n\
+                         weights at round boundaries), --adapt-interval N\n\
+                         (rounds between fine-tunes), --trainer-cmd CMD\n\
+                         (subprocess trainer, e.g. \"python3\n\
+                         python/train/lk_finetune.py\"; DESIGN.md §12)\n\
            report        print cached result cells\n\
          \n\
          common options: --artifacts DIR (default artifacts), --runs DIR\n\
@@ -404,6 +410,31 @@ fn serve_demo(args: &Args) -> Result<()> {
         http_opts.max_conns > 0 && http_opts.stream_buffer > 0,
         "--max-conns and --stream-buffer must be positive"
     );
+    // Online drafter adaptation (DESIGN.md §12): --adapt turns on the
+    // harvest → background fine-tune → hot-swap loop with the built-in
+    // sim trainer; --trainer-cmd "python3 python/train/lk_finetune.py"
+    // runs a real subprocess trainer over the JSONL protocol instead
+    // (and implies --adapt); --adapt-interval N sets the decode-round
+    // cadence between fine-tune launches.
+    let adapt_interval = args.opt_u64("adapt-interval", 0)?;
+    let trainer_cmd = args.opt("trainer-cmd").map(str::to_string);
+    let adapt_cfg = if args.flag("adapt") || adapt_interval > 0 || trainer_cmd.is_some() {
+        let mut cfg = lk_spec::server::AdaptConfig {
+            out_dir: runs.join("adapt"),
+            ..Default::default()
+        };
+        if adapt_interval > 0 {
+            cfg.interval_rounds = adapt_interval;
+        }
+        if let Some(cmd) = &trainer_cmd {
+            let argv: Vec<String> = cmd.split_whitespace().map(str::to_string).collect();
+            anyhow::ensure!(!argv.is_empty(), "--trainer-cmd expects a command line");
+            cfg.trainer = lk_spec::server::TrainerSpec::Command(argv);
+        }
+        Some(cfg)
+    } else {
+        None
+    };
     args.finish()?;
 
     let corpus = Corpus::open(&data)?;
@@ -413,6 +444,7 @@ fn serve_demo(args: &Args) -> Result<()> {
         paged_kv: Some(paged_kv),
         prefill_chunk,
         prefill_budget,
+        adapt: adapt_cfg,
         ..Default::default()
     };
     let router = Router::spawn(router_cfg, move || {

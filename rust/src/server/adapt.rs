@@ -1,0 +1,1331 @@
+//! Online drafter adaptation (DESIGN.md §12): the serving→training→
+//! serving loop that closes the paper's thesis inside the engine.
+//!
+//! Serving measures acceptance every round and — before this module —
+//! threw the evidence away. Here the evidence becomes training signal:
+//!
+//!   * [`ReplayBuffer`] — a bounded FIFO ring of [`ReplayRecord`]s
+//!     harvested from every decode path (host/device × chain/tree).
+//!     Each record is one draft slot's outcome: context tail, draft
+//!     token, accept/reject, and — on host-verify rounds, where the
+//!     distributions are materialized anyway — the draft and target
+//!     probabilities of the drafted token. Records are the sufficient
+//!     statistics of the LK losses' acceptance objective collapsed onto
+//!     the serving distribution.
+//!   * [`TrainerHandle`] — orchestration of a background fine-tune
+//!     subprocess under the gadogado `distill-train.py` contract
+//!     (SNIPPETS.md Snippet 1): JSON config in (a file path argument),
+//!     JSONL progress events out (`{"kind": .., "payload": ..}` lines
+//!     on stdout), atomic checkpoint swap on the trainer side. Crash,
+//!     hang (event deadline) and malformed output map to a typed
+//!     [`TrainerFault`] whose [`FaultKind`] is ALWAYS `Transient`:
+//!     adaptation is advisory, so no trainer failure may ever widen
+//!     past "keep serving the stale weights".
+//!   * [`AdaptDriver`] — the scheduler-resident stage: every
+//!     `interval_rounds` decode rounds it snapshots the ring to a
+//!     transcript JSONL, launches the trainer (epoch-tagged output
+//!     dir), polls it between rounds, and on success hot-swaps the
+//!     draft weights through [`SchedulerCore::swap_draft`] at a round
+//!     boundary — validate-then-commit, rollback (keep old weights) on
+//!     any load failure. Draining cancels an in-flight trainer.
+//!
+//! The exactness contract is untouched by construction: draft weights
+//! only change WHAT is proposed, never the accept/resample rule, so
+//! greedy decode stays the target's argmax path and stochastic decode
+//! stays distribution-lossless across arbitrary swap boundaries
+//! (`tests/adapt_loop.rs` pins both, plus the chaos matrix).
+
+use std::collections::VecDeque;
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::fault::FaultKind;
+use super::metrics::AdaptMetrics;
+use super::scheduler::SchedulerCore;
+use crate::util::Json;
+
+// ---------------------------------------------------------------------------
+// Replay records + the bounded harvest ring
+// ---------------------------------------------------------------------------
+
+/// Committed-context tokens carried per record (the "context features"
+/// of the harvest schema — enough for n-gram-conditioned calibration;
+/// the fine-tuner recomputes full distributions from the checkpointed
+/// models when it needs more than the tail).
+pub const CTX_TAIL: usize = 4;
+
+/// One draft slot's outcome, harvested at verdict time. The core fields
+/// (everything except `q_draft`/`p_target`) are PATH-INDEPENDENT: host
+/// and device verify emit identical records for identical verdicts —
+/// the fused kernel returns only verdict integers, so the probability
+/// fields are populated exclusively by host-verify rounds and are NaN
+/// (serialized as `null`) otherwise.
+#[derive(Clone, Debug)]
+pub struct ReplayRecord {
+    /// Session (request) id — keys the per-request RNG stream too.
+    pub session: u64,
+    /// The core's decode-round counter when the slot was judged.
+    pub round: u64,
+    /// Committed-sequence position the draft targeted.
+    pub pos: u32,
+    /// Draft slot within the round (head index `n` of the LK losses).
+    pub slot: u8,
+    /// Last `CTX_TAIL` committed tokens before `pos`, oldest first,
+    /// left-padded with -1.
+    pub ctx: [i32; CTX_TAIL],
+    /// The proposed draft token.
+    pub draft: i32,
+    /// The exact-rejection verdict for this slot.
+    pub accepted: bool,
+    /// q(draft | ctx) — the draft model's probability (NaN off-host).
+    pub q_draft: f32,
+    /// p(draft | ctx) — the target's probability (NaN off-host).
+    pub p_target: f32,
+}
+
+impl ReplayRecord {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("session", Json::Num(self.session as f64)),
+            ("round", Json::Num(self.round as f64)),
+            ("pos", Json::Num(self.pos as f64)),
+            ("slot", Json::Num(self.slot as f64)),
+            (
+                "ctx",
+                Json::Arr(self.ctx.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            ("draft", Json::Num(self.draft as f64)),
+            ("accept", Json::Bool(self.accepted)),
+        ];
+        if self.q_draft.is_finite() {
+            fields.push(("q", Json::Num(self.q_draft as f64)));
+        }
+        if self.p_target.is_finite() {
+            fields.push(("p", Json::Num(self.p_target as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(v: &Json) -> Result<ReplayRecord> {
+        let mut ctx = [-1i32; CTX_TAIL];
+        let arr = v.get("ctx").as_arr().context("record missing ctx array")?;
+        anyhow::ensure!(arr.len() == CTX_TAIL, "ctx tail must hold {CTX_TAIL} tokens");
+        for (slot, t) in ctx.iter_mut().zip(arr) {
+            *slot = t.as_f64().context("non-numeric ctx token")? as i32;
+        }
+        Ok(ReplayRecord {
+            session: v.req_usize("session")? as u64,
+            round: v.req_usize("round")? as u64,
+            pos: v.req_usize("pos")? as u32,
+            slot: v.req_usize("slot")? as u8,
+            ctx,
+            draft: v.req_f64("draft")? as i32,
+            accepted: v.get("accept").as_bool().context("record missing accept")?,
+            q_draft: v.get("q").as_f64().map_or(f32::NAN, |x| x as f32),
+            p_target: v.get("p").as_f64().map_or(f32::NAN, |x| x as f32),
+        })
+    }
+}
+
+/// Bounded-memory FIFO ring of harvested records. `push` past capacity
+/// evicts the OLDEST record (eviction order == insertion order), so the
+/// ring always holds the freshest window of the serving distribution —
+/// exactly what an online fine-tune should see.
+pub struct ReplayBuffer {
+    cap: usize,
+    ring: VecDeque<ReplayRecord>,
+    /// Records ever pushed / evicted (gauges; depth = pushed - evicted
+    /// only until the first snapshot-less restart, so both are kept).
+    pub pushed_total: u64,
+    pub evicted_total: u64,
+}
+
+impl ReplayBuffer {
+    pub fn new(cap: usize) -> ReplayBuffer {
+        ReplayBuffer {
+            cap: cap.max(1),
+            ring: VecDeque::new(),
+            pushed_total: 0,
+            evicted_total: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn push(&mut self, rec: ReplayRecord) {
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.evicted_total += 1;
+        }
+        self.ring.push_back(rec);
+        self.pushed_total += 1;
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ReplayRecord> {
+        self.ring.iter()
+    }
+
+    /// Highest round stamp in the ring (swap-boundary bookkeeping).
+    pub fn max_round(&self) -> u64 {
+        self.ring.iter().map(|r| r.round).max().unwrap_or(0)
+    }
+
+    /// Accepted fraction over records with `round >= since` — the
+    /// alpha_hat gauge the drift bench reads pre/post swap.
+    pub fn alpha_hat_since(&self, since: u64) -> Option<f64> {
+        let mut acc = 0u64;
+        let mut n = 0u64;
+        for r in self.ring.iter().filter(|r| r.round >= since) {
+            n += 1;
+            acc += r.accepted as u64;
+        }
+        (n > 0).then(|| acc as f64 / n as f64)
+    }
+
+    /// Serialize the ring (oldest first) as transcript JSONL.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for rec in &self.ring {
+            out.push_str(&rec.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the transcript atomically (tmp + rename — the trainer may
+    /// race the write on a slow filesystem otherwise).
+    pub fn snapshot_jsonl(&self, path: &Path) -> Result<usize> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let tmp = path.with_extension("jsonl.tmp");
+        std::fs::write(&tmp, self.to_jsonl())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(self.ring.len())
+    }
+
+    /// Parse a transcript back (tests + the built-in sim fine-tuner).
+    pub fn parse_jsonl(text: &str) -> Result<Vec<ReplayRecord>> {
+        text.lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| {
+                let v = Json::parse(l).map_err(|e| anyhow::anyhow!("transcript line: {e}"))?;
+                ReplayRecord::from_json(&v)
+            })
+            .collect()
+    }
+}
+
+/// Shared handle to the ring: the core pushes at verdict time (single
+/// worker thread), the driver snapshots between rounds. A mutex rather
+/// than `Rc<RefCell>` so cores stay `Send` for the router's worker
+/// hand-off; contention is nil (one thread).
+pub type ReplaySink = Arc<Mutex<ReplayBuffer>>;
+
+pub fn replay_sink(cap: usize) -> ReplaySink {
+    Arc::new(Mutex::new(ReplayBuffer::new(cap)))
+}
+
+/// Harvest one row's round verdict into the ring — THE single entry
+/// point for all four decode paths, so host/device and chain/tree
+/// harvests agree by construction wherever their verdicts agree.
+///
+/// `drafts_row` holds the slots that reached a verdict: the full chain
+/// (accepted prefix + the first rejection) on the chain paths, the
+/// accepted path on the tree paths (rejected siblings never form a
+/// linear slot order). Slots `0..n_acc` are accepted; slot `n_acc`, if
+/// present, is the first rejection. `committed` is the row's committed
+/// tokens BEFORE this round's verdict is applied (the context source);
+/// `probs[i] = (q_i, p_i)` where available (host verify), else empty.
+#[allow(clippy::too_many_arguments)]
+pub fn harvest_row(
+    sink: &ReplaySink,
+    session: u64,
+    round: u64,
+    pos0: usize,
+    committed: &[i32],
+    drafts_row: &[i32],
+    n_acc: usize,
+    probs: &[(f32, f32)],
+) {
+    let judged = drafts_row.len().min(n_acc + 1);
+    let Ok(mut buf) = sink.lock() else { return };
+    for i in 0..judged {
+        let mut ctx = [-1i32; CTX_TAIL];
+        // Context for slot i: last CTX_TAIL of committed ++ accepted
+        // drafts before it (a draft conditions on the speculated
+        // prefix, not just the committed one).
+        let take_drafts = i.min(n_acc);
+        let n_committed = CTX_TAIL.saturating_sub(take_drafts).min(committed.len());
+        let mut w = CTX_TAIL;
+        for &t in drafts_row[..take_drafts].iter().rev().take(CTX_TAIL) {
+            w -= 1;
+            ctx[w] = t;
+        }
+        for &t in committed[committed.len() - n_committed..].iter().rev() {
+            if w == 0 {
+                break;
+            }
+            w -= 1;
+            ctx[w] = t;
+        }
+        let (q, p) = probs.get(i).copied().unwrap_or((f32::NAN, f32::NAN));
+        buf.push(ReplayRecord {
+            session,
+            round,
+            pos: (pos0 + i) as u32,
+            slot: i as u8,
+            ctx,
+            draft: drafts_row[i],
+            accepted: i < n_acc,
+            q_draft: q,
+            p_target: p,
+        });
+    }
+}
+
+/// Harvest one row's TREE verdict. The sequential multi-draft walk
+/// judges, in BFS order, the earlier siblings of each accepted node
+/// (all rejected — the walk descends at the first acceptance) and, when
+/// it terminates early, every child of the final accepted node (all
+/// rejected). That judged set is exactly reconstructible from the
+/// topology (`parent_of`) plus the accepted `path`, so tree rounds
+/// harvest true accept AND reject records even though the verdict only
+/// names the accepted path. Node records use the node's LEVEL as the
+/// slot (the draft head that proposed it); q/p are per-node in tree
+/// coordinates and are not carried (NaN), like the device chain path.
+#[allow(clippy::too_many_arguments)]
+pub fn harvest_tree_row(
+    sink: &ReplaySink,
+    session: u64,
+    round: u64,
+    pos0: usize,
+    committed: &[i32],
+    candidates: &[i32],
+    parent_of: impl Fn(usize) -> i32,
+    path: &[usize],
+) {
+    let Ok(mut buf) = sink.lock() else { return };
+    let n = candidates.len();
+    let mut acc_prefix: Vec<i32> = Vec::with_capacity(path.len());
+    let mut push = |buf: &mut ReplayBuffer, node: usize, level: usize, accepted: bool,
+                    acc_prefix: &[i32]| {
+        let mut ctx = [-1i32; CTX_TAIL];
+        let take_acc = level.min(acc_prefix.len()).min(CTX_TAIL);
+        let n_committed = CTX_TAIL.saturating_sub(take_acc).min(committed.len());
+        let mut w = CTX_TAIL;
+        for &t in acc_prefix[..take_acc].iter().rev() {
+            w -= 1;
+            ctx[w] = t;
+        }
+        for &t in committed[committed.len() - n_committed..].iter().rev() {
+            if w == 0 {
+                break;
+            }
+            w -= 1;
+            ctx[w] = t;
+        }
+        buf.push(ReplayRecord {
+            session,
+            round,
+            pos: (pos0 + level) as u32,
+            slot: level as u8,
+            ctx,
+            draft: candidates[node],
+            accepted,
+            q_draft: f32::NAN,
+            p_target: f32::NAN,
+        });
+    };
+    let mut cur: i32 = -1;
+    for (level, &a) in path.iter().enumerate() {
+        for i in 0..a.min(n) {
+            if parent_of(i) == cur {
+                push(&mut buf, i, level, false, &acc_prefix);
+            }
+        }
+        if a < n {
+            push(&mut buf, a, level, true, &acc_prefix);
+            acc_prefix.push(candidates[a]);
+            cur = a as i32;
+        }
+    }
+    // Early termination: every remaining child of the final accepted
+    // node was judged and rejected (an accepted leaf has no children,
+    // so this loop is empty on full-depth walks).
+    let level = path.len();
+    for i in 0..n {
+        if parent_of(i) == cur {
+            push(&mut buf, i, level, false, &acc_prefix);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trainer subprocess orchestration (SNIPPETS.md Snippet 1 contract)
+// ---------------------------------------------------------------------------
+
+/// How the driver runs a fine-tune.
+#[derive(Clone, Debug)]
+pub enum TrainerSpec {
+    /// Spawn `argv ++ ["--config", <path>]` — the Snippet-1 contract
+    /// (e.g. `python3 python/train/lk_finetune.py`). Stdout must be
+    /// JSONL events; the final event must be `kind == "done"` with a
+    /// `checkpoint` payload path.
+    Command(Vec<String>),
+    /// In-process deterministic fine-tune over the snapshot (the same
+    /// acceptance-profile fit `lk_finetune.py --mode sim` performs) —
+    /// what the PJRT-free bench and tests use: no subprocess, no
+    /// python, bit-deterministic.
+    BuiltinSim,
+}
+
+/// A typed trainer failure. EVERY variant classifies as
+/// [`FaultKind::Transient`]: the adaptation loop is advisory by
+/// contract — a dead trainer means stale (still exact) draft weights,
+/// never a degraded serving path.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TrainerFault {
+    /// Nonzero exit (or killed) before a `done` event.
+    Crashed { code: Option<i32> },
+    /// No stdout event within the deadline; the child was killed.
+    Hang { after: Duration },
+    /// A stdout line that is not a `{"kind", "payload"}` object.
+    Protocol { line: String },
+    /// The trainer reported a structured `error` event.
+    Reported { message: String },
+    /// Spawn / IO plumbing failed.
+    Io { message: String },
+}
+
+impl TrainerFault {
+    /// The blast radius of ANY trainer fault: transient — contained to
+    /// the adaptation loop, serving continues on the stale weights.
+    pub fn kind(&self) -> FaultKind {
+        FaultKind::Transient
+    }
+}
+
+impl std::fmt::Display for TrainerFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrainerFault::Crashed { code } => write!(f, "trainer crashed (exit {code:?})"),
+            TrainerFault::Hang { after } => {
+                write!(f, "trainer hang: no event for {:.1}s", after.as_secs_f64())
+            }
+            TrainerFault::Protocol { line } => write!(f, "malformed trainer event: {line:?}"),
+            TrainerFault::Reported { message } => write!(f, "trainer error: {message}"),
+            TrainerFault::Io { message } => write!(f, "trainer io: {message}"),
+        }
+    }
+}
+
+/// One parsed `{"kind": .., "payload": ..}` stdout line.
+#[derive(Clone, Debug)]
+pub struct TrainerEvent {
+    pub kind: String,
+    pub payload: Json,
+}
+
+/// What a successful fine-tune hands back (the `done` payload).
+#[derive(Clone, Debug)]
+pub struct TrainerOutcome {
+    pub checkpoint: PathBuf,
+    pub epoch: u64,
+    pub alpha_before: f64,
+    pub alpha_after: f64,
+}
+
+enum ReaderMsg {
+    Event(TrainerEvent),
+    Malformed(String),
+    Eof,
+}
+
+enum TrainerBody {
+    Child {
+        child: std::process::Child,
+        rx: Receiver<ReaderMsg>,
+        last_event: Instant,
+        deadline: Duration,
+        eof: bool,
+    },
+    /// BuiltinSim: resolved at launch.
+    Immediate(Option<Result<TrainerOutcome, TrainerFault>>),
+}
+
+/// Poll result of an in-flight fine-tune.
+pub enum TrainerPoll {
+    Running,
+    Finished(Result<TrainerOutcome, TrainerFault>),
+}
+
+/// A launched fine-tune: subprocess + stdout reader thread, or the
+/// resolved built-in result. Dropping the handle kills the child.
+pub struct TrainerHandle {
+    body: TrainerBody,
+    /// Events observed so far (progress surfacing / tests).
+    pub events: Vec<TrainerEvent>,
+    done: Option<TrainerOutcome>,
+}
+
+impl TrainerHandle {
+    /// Spawn `argv ++ ["--config", config_path]` with stdout piped and
+    /// a reader thread parsing the event stream.
+    pub fn spawn(
+        argv: &[String],
+        config_path: &Path,
+        deadline: Duration,
+    ) -> std::result::Result<TrainerHandle, TrainerFault> {
+        if argv.is_empty() {
+            return Err(TrainerFault::Io {
+                message: "empty trainer command".into(),
+            });
+        }
+        let mut cmd = std::process::Command::new(&argv[0]);
+        cmd.args(&argv[1..])
+            .arg("--config")
+            .arg(config_path)
+            .stdin(std::process::Stdio::null())
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::null());
+        let mut child = cmd.spawn().map_err(|e| TrainerFault::Io {
+            message: format!("spawning {:?}: {e}", argv[0]),
+        })?;
+        let stdout = child.stdout.take().ok_or_else(|| TrainerFault::Io {
+            message: "no stdout pipe".into(),
+        })?;
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let reader = std::io::BufReader::new(stdout);
+            for line in reader.lines() {
+                let Ok(line) = line else { break };
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let msg = match Json::parse(&line) {
+                    Ok(v) => match v.get("kind").as_str() {
+                        Some(kind) => ReaderMsg::Event(TrainerEvent {
+                            kind: kind.to_string(),
+                            payload: v.get("payload").clone(),
+                        }),
+                        None => ReaderMsg::Malformed(line),
+                    },
+                    Err(_) => ReaderMsg::Malformed(line),
+                };
+                if tx.send(msg).is_err() {
+                    return;
+                }
+            }
+            let _ = tx.send(ReaderMsg::Eof);
+        });
+        Ok(TrainerHandle {
+            body: TrainerBody::Child {
+                child,
+                rx,
+                last_event: Instant::now(),
+                deadline,
+                eof: false,
+            },
+            events: Vec::new(),
+            done: None,
+        })
+    }
+
+    /// Wrap an already-computed outcome (the BuiltinSim path).
+    pub fn immediate(result: Result<TrainerOutcome, TrainerFault>) -> TrainerHandle {
+        TrainerHandle {
+            body: TrainerBody::Immediate(Some(result)),
+            events: Vec::new(),
+            done: None,
+        }
+    }
+
+    fn outcome_from_done(payload: &Json) -> Result<TrainerOutcome, TrainerFault> {
+        let ckpt = payload.get("checkpoint").as_str().ok_or_else(|| {
+            TrainerFault::Protocol {
+                line: format!("done event without checkpoint: {}", payload.to_string()),
+            }
+        })?;
+        Ok(TrainerOutcome {
+            checkpoint: PathBuf::from(ckpt),
+            epoch: payload.get("epoch").as_f64().unwrap_or(0.0) as u64,
+            alpha_before: payload.get("alpha_before").as_f64().unwrap_or(f64::NAN),
+            alpha_after: payload.get("alpha_after").as_f64().unwrap_or(f64::NAN),
+        })
+    }
+
+    /// Drain events; detect completion, crash, hang, protocol breach.
+    /// Non-blocking — called between decode rounds.
+    pub fn poll(&mut self, now: Instant) -> TrainerPoll {
+        match &mut self.body {
+            TrainerBody::Immediate(slot) => match slot.take() {
+                Some(r) => TrainerPoll::Finished(r),
+                None => TrainerPoll::Running,
+            },
+            TrainerBody::Child {
+                child,
+                rx,
+                last_event,
+                deadline,
+                eof,
+            } => {
+                loop {
+                    match rx.try_recv() {
+                        Ok(ReaderMsg::Event(ev)) => {
+                            *last_event = now;
+                            if ev.kind == "done" {
+                                match Self::outcome_from_done(&ev.payload) {
+                                    Ok(out) => self.done = Some(out),
+                                    Err(f) => {
+                                        let _ = child.kill();
+                                        let _ = child.wait();
+                                        return TrainerPoll::Finished(Err(f));
+                                    }
+                                }
+                            } else if ev.kind == "error" {
+                                let msg = ev
+                                    .payload
+                                    .get("message")
+                                    .as_str()
+                                    .unwrap_or("unspecified")
+                                    .to_string();
+                                let _ = child.kill();
+                                let _ = child.wait();
+                                return TrainerPoll::Finished(Err(TrainerFault::Reported {
+                                    message: msg,
+                                }));
+                            }
+                            self.events.push(ev);
+                        }
+                        Ok(ReaderMsg::Malformed(line)) => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            return TrainerPoll::Finished(Err(TrainerFault::Protocol { line }));
+                        }
+                        Ok(ReaderMsg::Eof) => {
+                            *eof = true;
+                            break;
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            *eof = true;
+                            break;
+                        }
+                    }
+                }
+                if *eof {
+                    // Stream closed: the exit status decides. `done`
+                    // must have been seen AND the exit be clean.
+                    let status = match child.wait() {
+                        Ok(s) => s,
+                        Err(e) => {
+                            return TrainerPoll::Finished(Err(TrainerFault::Io {
+                                message: format!("wait: {e}"),
+                            }))
+                        }
+                    };
+                    return TrainerPoll::Finished(match (self.done.take(), status.success()) {
+                        (Some(out), true) => Ok(out),
+                        (None, true) => Err(TrainerFault::Protocol {
+                            line: "exit 0 without a done event".into(),
+                        }),
+                        (_, false) => Err(TrainerFault::Crashed {
+                            code: status.code(),
+                        }),
+                    });
+                }
+                let quiet = now.saturating_duration_since(*last_event);
+                if quiet > *deadline {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return TrainerPoll::Finished(Err(TrainerFault::Hang { after: quiet }));
+                }
+                TrainerPoll::Running
+            }
+        }
+    }
+
+    /// Kill an in-flight fine-tune (graceful drain / engine reset).
+    pub fn cancel(&mut self) {
+        if let TrainerBody::Child { child, .. } = &mut self.body {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+impl Drop for TrainerHandle {
+    fn drop(&mut self) {
+        self.cancel();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in sim fine-tune (the PJRT-free loop closure)
+// ---------------------------------------------------------------------------
+
+/// The deterministic acceptance-profile fit `lk_finetune.py --mode sim`
+/// performs, in-process: per-slot empirical acceptance over the
+/// transcript, then a fitted profile that closes fraction `gain` of
+/// each slot's acceptance gap — the stylized effect of an LK fine-tune
+/// on the serving distribution (a drafter trained on its own rejections
+/// recovers part of 1-alpha; `gain` is the modeled recovery). Returns
+/// `(fitted per-slot profile, alpha_before, alpha_after)`.
+pub fn sim_finetune(records: &[ReplayRecord], k: usize, gain: f64) -> (Vec<f64>, f64, f64) {
+    let k = k.max(1);
+    let mut acc = vec![0u64; k];
+    let mut tot = vec![0u64; k];
+    for r in records {
+        let s = (r.slot as usize).min(k - 1);
+        tot[s] += 1;
+        acc[s] += r.accepted as u64;
+    }
+    let gain = gain.clamp(0.0, 1.0);
+    let mut profile = Vec::with_capacity(k);
+    let (mut a_n, mut a_d) = (0.0f64, 0.0f64);
+    for i in 0..k {
+        // Slots never exercised inherit the previous slot's estimate
+        // (deep slots only run after shallow accepts).
+        let alpha = if tot[i] > 0 {
+            a_n += acc[i] as f64;
+            a_d += tot[i] as f64;
+            acc[i] as f64 / tot[i] as f64
+        } else {
+            profile.last().copied().unwrap_or(0.5)
+        };
+        profile.push((alpha + gain * (1.0 - alpha)).clamp(0.0, 1.0));
+    }
+    let alpha_before = if a_d > 0.0 { a_n / a_d } else { 0.0 };
+    let alpha_after = alpha_before + gain * (1.0 - alpha_before);
+    (profile, alpha_before, alpha_after)
+}
+
+/// Write the sim-draft checkpoint the [`SchedulerCore::swap_draft`] of
+/// `SimCore` consumes: a JSON artifact tagged with the adaptation
+/// epoch. Atomic (tmp + rename), like every checkpoint writer here.
+pub fn write_sim_checkpoint(
+    path: &Path,
+    epoch: u64,
+    profile: &[f64],
+    alpha_before: f64,
+    alpha_after: f64,
+) -> Result<()> {
+    let v = Json::obj(vec![
+        ("format", Json::Str("lkspec-sim-draft".into())),
+        ("epoch", Json::Num(epoch as f64)),
+        ("profile", Json::arr_f64(profile)),
+        ("alpha_before", Json::Num(alpha_before)),
+        ("alpha_after", Json::Num(alpha_after)),
+    ]);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, v.to_string_pretty())?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Parse + validate a sim-draft checkpoint (the validate half of
+/// SimCore's validate-then-commit swap).
+pub fn read_sim_checkpoint(path: &Path) -> Result<(u64, Vec<f64>)> {
+    let v = Json::parse_file(path)?;
+    anyhow::ensure!(
+        v.get("format").as_str() == Some("lkspec-sim-draft"),
+        "{}: not a sim-draft checkpoint",
+        path.display()
+    );
+    let arr = v
+        .get("profile")
+        .as_arr()
+        .context("sim-draft checkpoint missing profile")?;
+    anyhow::ensure!(!arr.is_empty(), "sim-draft profile is empty");
+    let mut profile = Vec::with_capacity(arr.len());
+    for x in arr {
+        let a = x.as_f64().context("non-numeric profile entry")?;
+        anyhow::ensure!((0.0..=1.0).contains(&a), "profile entry {a} outside [0, 1]");
+        profile.push(a);
+    }
+    Ok((v.get("epoch").as_f64().unwrap_or(0.0) as u64, profile))
+}
+
+// ---------------------------------------------------------------------------
+// Trainer chaos vocabulary (ChaosCore extension, DESIGN.md §9/§12)
+// ---------------------------------------------------------------------------
+
+/// Deterministic trainer-fault injection: when the driver is about to
+/// launch fine-tune run `at_run` (0-based), it launches a known-faulty
+/// subprocess instead — exercising the REAL subprocess machinery
+/// (reader thread, deadline, exit-status mapping), not a mock.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TrainerChaosKind {
+    /// The child dies mid-stream after a valid first event.
+    Kill,
+    /// The child emits nothing until the (shrunk) deadline kills it.
+    Hang,
+    /// The child emits a line that is not a protocol event.
+    Malformed,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TrainerChaos {
+    pub at_run: u64,
+    pub kind: TrainerChaosKind,
+}
+
+// ---------------------------------------------------------------------------
+// The adaptation driver
+// ---------------------------------------------------------------------------
+
+/// Adaptation-loop configuration (`Scheduler::with_adaptation`).
+#[derive(Clone, Debug)]
+pub struct AdaptConfig {
+    /// Decode rounds between fine-tune launches.
+    pub interval_rounds: u64,
+    /// Replay-ring capacity (records).
+    pub buffer_cap: usize,
+    /// Do not launch with fewer harvested records than this.
+    pub min_records: usize,
+    /// How fine-tunes run.
+    pub trainer: TrainerSpec,
+    /// Hang deadline: a subprocess silent this long is killed.
+    pub trainer_deadline: Duration,
+    /// Epoch-tagged checkpoint/transcript dirs land under here.
+    pub out_dir: PathBuf,
+    /// BuiltinSim learning gain (fraction of the acceptance gap a
+    /// fine-tune recovers; also forwarded to `lk_finetune.py --mode
+    /// sim` via the config file).
+    pub gain: f64,
+    /// Deterministic trainer chaos (from `FaultPlan::trainer`).
+    pub chaos: Vec<TrainerChaos>,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        AdaptConfig {
+            interval_rounds: 64,
+            buffer_cap: 4096,
+            min_records: 32,
+            trainer: TrainerSpec::BuiltinSim,
+            trainer_deadline: Duration::from_secs(120),
+            out_dir: PathBuf::from("runs/adapt"),
+            gain: 0.5,
+            chaos: Vec::new(),
+        }
+    }
+}
+
+impl AdaptConfig {
+    /// Copy the trainer-chaos plan out of a ChaosCore
+    /// [`FaultPlan`](super::scheduler::FaultPlan) — one declarative
+    /// plan describes a whole scenario, engine and trainer faults
+    /// included.
+    pub fn with_chaos(mut self, chaos: Vec<TrainerChaos>) -> AdaptConfig {
+        self.chaos = chaos;
+        self
+    }
+}
+
+/// The scheduler-resident adaptation stage. Owned by the scheduler and
+/// stepped once per tick AFTER the decode round — every launch, poll
+/// and hot-swap happens at a round boundary, never mid-round.
+pub struct AdaptDriver {
+    pub cfg: AdaptConfig,
+    /// The harvest ring, shared with the core (`attach_replay`).
+    pub buffer: ReplaySink,
+    trainer: Option<TrainerHandle>,
+    pub metrics: AdaptMetrics,
+    /// Fine-tune epoch counter (tags checkpoint dirs).
+    epoch: u64,
+    /// Launches so far (keys the chaos plan).
+    runs_launched: u64,
+    last_launch_round: u64,
+    /// Ring round stamp at the last committed swap (alpha_hat_post
+    /// windows on records after it).
+    swap_round: Option<u64>,
+    /// Human-readable trainer-fault log (surfaced by tests/operators).
+    pub faults: Vec<TrainerFault>,
+}
+
+impl AdaptDriver {
+    pub fn new(cfg: AdaptConfig) -> AdaptDriver {
+        let buffer = replay_sink(cfg.buffer_cap);
+        AdaptDriver {
+            buffer,
+            trainer: None,
+            metrics: AdaptMetrics::default(),
+            epoch: 0,
+            runs_launched: 0,
+            last_launch_round: 0,
+            swap_round: None,
+            cfg,
+            faults: Vec::new(),
+        }
+    }
+
+    pub fn trainer_running(&self) -> bool {
+        self.trainer.is_some()
+    }
+
+    /// Kill an in-flight fine-tune (drain / reset). The ring and the
+    /// serving weights are untouched.
+    pub fn cancel(&mut self) {
+        if let Some(mut t) = self.trainer.take() {
+            t.cancel();
+            self.metrics.trainer_state = 0;
+        }
+    }
+
+    fn launch(&mut self, rounds: u64) {
+        let epoch = self.epoch + 1;
+        let epoch_dir = self.cfg.out_dir.join(format!("epoch_{epoch:04}"));
+        let transcript = epoch_dir.join("transcript.jsonl");
+        let (snapshot, alpha_pre) = {
+            let buf = match self.buffer.lock() {
+                Ok(b) => b,
+                Err(_) => return,
+            };
+            match buf.snapshot_jsonl(&transcript) {
+                Ok(_) => {}
+                Err(e) => {
+                    self.faults.push(TrainerFault::Io {
+                        message: format!("transcript snapshot: {e:#}"),
+                    });
+                    self.metrics.trainer_faults_total += 1;
+                    return;
+                }
+            }
+            (
+                buf.iter().cloned().collect::<Vec<_>>(),
+                buf.alpha_hat_since(0).unwrap_or(0.0),
+            )
+        };
+        self.metrics.alpha_hat_pre = alpha_pre;
+        let chaos = self
+            .cfg
+            .chaos
+            .iter()
+            .find(|c| c.at_run == self.runs_launched)
+            .map(|c| c.kind);
+        self.runs_launched += 1;
+        self.last_launch_round = rounds;
+        self.metrics.trainer_runs_total += 1;
+        self.metrics.trainer_state = 1;
+        let deadline = self.cfg.trainer_deadline;
+        let handle = match chaos {
+            // Chaos launches go through the REAL subprocess path.
+            Some(TrainerChaosKind::Kill) => TrainerHandle::spawn(
+                &[
+                    "sh".into(),
+                    "-c".into(),
+                    r#"printf '%s\n' '{"kind":"start","payload":{}}'; exit 3"#.into(),
+                ],
+                &transcript,
+                deadline,
+            ),
+            Some(TrainerChaosKind::Malformed) => TrainerHandle::spawn(
+                &["sh".into(), "-c".into(), "echo this is not a protocol event".into()],
+                &transcript,
+                deadline,
+            ),
+            Some(TrainerChaosKind::Hang) => TrainerHandle::spawn(
+                &["sh".into(), "-c".into(), "sleep 30".into()],
+                &transcript,
+                deadline.min(Duration::from_millis(50)),
+            ),
+            None => match &self.cfg.trainer {
+                TrainerSpec::BuiltinSim => {
+                    let k = 1 + snapshot.iter().map(|r| r.slot as usize).max().unwrap_or(0);
+                    let (profile, a0, a1) = sim_finetune(&snapshot, k, self.cfg.gain);
+                    let ckpt = epoch_dir.join("draft_sim.json");
+                    Ok(TrainerHandle::immediate(
+                        match write_sim_checkpoint(&ckpt, epoch, &profile, a0, a1) {
+                            Ok(()) => Ok(TrainerOutcome {
+                                checkpoint: ckpt,
+                                epoch,
+                                alpha_before: a0,
+                                alpha_after: a1,
+                            }),
+                            Err(e) => Err(TrainerFault::Io {
+                                message: format!("sim checkpoint: {e:#}"),
+                            }),
+                        },
+                    ))
+                }
+                TrainerSpec::Command(argv) => {
+                    let config = epoch_dir.join("config.json");
+                    let cfg_json = Json::obj(vec![
+                        ("transcript", Json::Str(transcript.display().to_string())),
+                        ("out_dir", Json::Str(epoch_dir.display().to_string())),
+                        ("epoch", Json::Num(epoch as f64)),
+                        ("gain", Json::Num(self.cfg.gain)),
+                    ]);
+                    match cfg_json.write_file(&config) {
+                        Ok(()) => TrainerHandle::spawn(argv, &config, deadline),
+                        Err(e) => Err(TrainerFault::Io {
+                            message: format!("trainer config: {e:#}"),
+                        }),
+                    }
+                }
+            },
+        };
+        match handle {
+            Ok(h) => self.trainer = Some(h),
+            Err(f) => {
+                self.metrics.trainer_faults_total += 1;
+                self.metrics.trainer_state = 3;
+                self.faults.push(f);
+            }
+        }
+    }
+
+    /// The per-tick stage: refresh gauges, poll an in-flight trainer
+    /// (hot-swapping on success, containing any fault), and launch a
+    /// new fine-tune when the round cadence and harvest volume allow.
+    pub fn step<C: SchedulerCore>(&mut self, core: &mut C, rounds: u64, now: Instant) {
+        {
+            if let Ok(buf) = self.buffer.lock() {
+                self.metrics.buffer_depth = buf.len() as u64;
+                self.metrics.buffer_evicted_total = buf.evicted_total;
+                self.metrics.records_harvested_total = buf.pushed_total;
+                if let Some(since) = self.swap_round {
+                    if let Some(a) = buf.alpha_hat_since(since) {
+                        self.metrics.alpha_hat_post = a;
+                    }
+                }
+            }
+        }
+        if let Some(trainer) = self.trainer.as_mut() {
+            match trainer.poll(now) {
+                TrainerPoll::Running => {}
+                TrainerPoll::Finished(Err(fault)) => {
+                    // Typed, transient, contained: count it, keep the
+                    // stale weights serving. Nothing downstream of the
+                    // decode loop observes the failure.
+                    debug_assert_eq!(fault.kind(), FaultKind::Transient);
+                    self.trainer = None;
+                    self.metrics.trainer_faults_total += 1;
+                    self.metrics.trainer_state = 3;
+                    self.faults.push(fault);
+                }
+                TrainerPoll::Finished(Ok(outcome)) => {
+                    self.trainer = None;
+                    self.metrics.trainer_state = 2;
+                    // Validate-then-commit at a round boundary: the
+                    // core re-reads + re-validates the checkpoint and
+                    // only then replaces its live weights; ANY failure
+                    // keeps the old weights (rollback = not swapping).
+                    match core.swap_draft(&outcome.checkpoint) {
+                        Ok(()) => {
+                            self.epoch = outcome.epoch.max(self.epoch + 1);
+                            self.metrics.swaps_total += 1;
+                            if outcome.alpha_before.is_finite() {
+                                self.metrics.alpha_hat_pre = outcome.alpha_before;
+                            }
+                            self.swap_round = Some(
+                                self.buffer
+                                    .lock()
+                                    .map(|b| b.max_round() + 1)
+                                    .unwrap_or(rounds),
+                            );
+                        }
+                        Err(e) => {
+                            self.metrics.swap_rollbacks_total += 1;
+                            self.metrics.trainer_faults_total += 1;
+                            self.faults.push(TrainerFault::Io {
+                                message: format!("hot-swap rolled back: {e:#}"),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        if self.trainer.is_none()
+            && rounds.saturating_sub(self.last_launch_round) >= self.cfg.interval_rounds
+        {
+            let enough = self
+                .buffer
+                .lock()
+                .map(|b| b.len() >= self.cfg.min_records)
+                .unwrap_or(false);
+            if enough {
+                self.launch(rounds);
+            }
+        }
+    }
+}
+
+/// Build an engine checkpoint-swap error with rollback context (shared
+/// phrasing between the engine and sim cores).
+pub fn swap_error(path: &Path, e: anyhow::Error) -> anyhow::Error {
+    e.context(format!(
+        "draft hot-swap validate failed for {} (old weights kept serving)",
+        path.display()
+    ))
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lk_adapt_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn rec(session: u64, round: u64, slot: u8, accepted: bool) -> ReplayRecord {
+        ReplayRecord {
+            session,
+            round,
+            pos: 10 + slot as u32,
+            slot,
+            ctx: [-1, 7, 8, 9],
+            draft: 1000 + slot as i32,
+            accepted,
+            q_draft: f32::NAN,
+            p_target: f32::NAN,
+        }
+    }
+
+    #[test]
+    fn ring_bounded_fifo_eviction() {
+        let mut buf = ReplayBuffer::new(3);
+        for i in 0..5u64 {
+            buf.push(rec(i, i, 0, true));
+        }
+        assert_eq!(buf.len(), 3);
+        assert_eq!(buf.pushed_total, 5);
+        assert_eq!(buf.evicted_total, 2);
+        // Oldest-first eviction: sessions 0 and 1 are gone.
+        let sessions: Vec<u64> = buf.iter().map(|r| r.session).collect();
+        assert_eq!(sessions, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn transcript_jsonl_roundtrip() {
+        let mut buf = ReplayBuffer::new(16);
+        buf.push(ReplayRecord {
+            q_draft: 0.25,
+            p_target: 0.75,
+            ..rec(1, 2, 0, true)
+        });
+        buf.push(rec(1, 2, 1, false)); // NaN q/p -> omitted fields
+        let text = buf.to_jsonl();
+        let back = ReplayBuffer::parse_jsonl(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].session, 1);
+        assert_eq!(back[0].ctx, [-1, 7, 8, 9]);
+        assert!((back[0].q_draft - 0.25).abs() < 1e-6);
+        assert!((back[0].p_target - 0.75).abs() < 1e-6);
+        assert!(back[0].accepted);
+        assert!(!back[1].accepted);
+        assert!(back[1].q_draft.is_nan() && back[1].p_target.is_nan());
+        // File snapshot is parseable too (atomic write path).
+        let path = tmpdir("rt").join("t.jsonl");
+        assert_eq!(buf.snapshot_jsonl(&path).unwrap(), 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(ReplayBuffer::parse_jsonl(&text).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn harvest_parity_host_vs_device_shapes() {
+        // The same verdict harvested host-style (probs present) and
+        // device-style (verdict ints only) must agree on every
+        // path-independent field — the parity the engine gets by
+        // construction from the shared harvest_row entry point.
+        let committed = vec![5, 6, 7, 8, 9];
+        let drafts = vec![101, 102, 103, 104];
+        let host = replay_sink(64);
+        let dev = replay_sink(64);
+        let probs = [(0.9f32, 0.8f32), (0.7, 0.6), (0.5, 0.1)];
+        harvest_row(&host, 3, 12, 40, &committed, &drafts, 2, &probs);
+        harvest_row(&dev, 3, 12, 40, &committed, &drafts, 2, &[]);
+        let h = host.lock().unwrap();
+        let d = dev.lock().unwrap();
+        // n_acc = 2 over 4 drafts: accepted slots 0, 1 plus the first
+        // rejection at slot 2 are judged; slot 3 never reached a
+        // verdict and is NOT harvested.
+        assert_eq!(h.len(), 3);
+        assert_eq!(d.len(), 3);
+        for (a, b) in h.iter().zip(d.iter()) {
+            assert_eq!(a.session, b.session);
+            assert_eq!(a.round, b.round);
+            assert_eq!(a.pos, b.pos);
+            assert_eq!(a.slot, b.slot);
+            assert_eq!(a.ctx, b.ctx);
+            assert_eq!(a.draft, b.draft);
+            assert_eq!(a.accepted, b.accepted);
+            assert!(b.q_draft.is_nan() && b.p_target.is_nan());
+        }
+        // Context chains through the speculated prefix: slot 2's tail
+        // is [8, 9, 101, 102] (last committed ++ accepted drafts).
+        let ctxs: Vec<[i32; CTX_TAIL]> = h.iter().map(|r| r.ctx).collect();
+        assert_eq!(ctxs[0], [6, 7, 8, 9]);
+        assert_eq!(ctxs[1], [7, 8, 9, 101]);
+        assert_eq!(ctxs[2], [8, 9, 101, 102]);
+        assert_eq!(h.iter().map(|r| r.accepted).collect::<Vec<_>>(), [true, true, false]);
+        assert!((h.iter().next().unwrap().q_draft - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sim_finetune_closes_the_gap() {
+        let mut records = Vec::new();
+        for i in 0..100u64 {
+            records.push(rec(i, i, 0, i % 4 != 0)); // slot 0: alpha 0.75
+            records.push(rec(i, i, 1, i % 2 == 0)); // slot 1: alpha 0.50
+        }
+        let (profile, a0, a1) = sim_finetune(&records, 3, 0.5);
+        assert!((profile[0] - 0.875).abs() < 1e-9);
+        assert!((profile[1] - 0.75).abs() < 1e-9);
+        // Unexercised slot inherits its predecessor's fit.
+        assert!((profile[2] - 0.75).abs() < 1e-9);
+        assert!((a0 - 0.625).abs() < 1e-9);
+        assert!(a1 > a0);
+        // A gain of zero is the identity fit.
+        let (p0, b0, b1) = sim_finetune(&records, 2, 0.0);
+        assert!((p0[0] - 0.75).abs() < 1e-9 && (p0[1] - 0.5).abs() < 1e-9);
+        assert!((b0 - b1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sim_checkpoint_roundtrip_and_validation() {
+        let dir = tmpdir("ckpt");
+        let path = dir.join("draft_sim.json");
+        write_sim_checkpoint(&path, 7, &[0.9, 0.6], 0.5, 0.75).unwrap();
+        let (epoch, profile) = read_sim_checkpoint(&path).unwrap();
+        assert_eq!(epoch, 7);
+        assert_eq!(profile, vec![0.9, 0.6]);
+        // Validation rejects wrong format and out-of-range entries.
+        std::fs::write(&path, "{\"format\": \"other\"}").unwrap();
+        assert!(read_sim_checkpoint(&path).is_err());
+        std::fs::write(
+            &path,
+            "{\"format\": \"lkspec-sim-draft\", \"profile\": [1.5]}",
+        )
+        .unwrap();
+        assert!(read_sim_checkpoint(&path).is_err());
+    }
+
+    #[test]
+    fn trainer_protocol_happy_path() {
+        let dir = tmpdir("ok");
+        let ckpt = dir.join("out.json");
+        write_sim_checkpoint(&ckpt, 1, &[0.5], 0.4, 0.7).unwrap();
+        let script = format!(
+            r#"printf '%s\n' '{{"kind":"start","payload":{{}}}}'; \
+               printf '%s\n' '{{"kind":"progress","payload":{{"step":1,"loss":0.5}}}}'; \
+               printf '%s\n' '{{"kind":"done","payload":{{"checkpoint":"{}","epoch":1,"alpha_before":0.4,"alpha_after":0.7}}}}'"#,
+            ckpt.display()
+        );
+        let mut h =
+            TrainerHandle::spawn(&["sh".into(), "-c".into(), script], &ckpt, Duration::from_secs(10))
+                .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match h.poll(Instant::now()) {
+                TrainerPoll::Running => {
+                    assert!(Instant::now() < deadline, "trainer did not finish");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                TrainerPoll::Finished(r) => {
+                    let out = r.expect("clean run");
+                    assert_eq!(out.epoch, 1);
+                    assert!((out.alpha_after - 0.7).abs() < 1e-9);
+                    assert!(h.events.iter().any(|e| e.kind == "progress"));
+                    break;
+                }
+            }
+        }
+    }
+
+    fn run_to_fault(mut h: TrainerHandle) -> TrainerFault {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match h.poll(Instant::now()) {
+                TrainerPoll::Running => {
+                    assert!(Instant::now() < deadline, "fault never surfaced");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                TrainerPoll::Finished(r) => return r.expect_err("expected a fault"),
+            }
+        }
+    }
+
+    #[test]
+    fn trainer_crash_hang_malformed_are_typed_transient() {
+        let cfg = tmpdir("faults").join("cfg.json");
+        std::fs::write(&cfg, "{}").unwrap();
+        let crash = run_to_fault(
+            TrainerHandle::spawn(
+                &["sh".into(), "-c".into(), "exit 3".into()],
+                &cfg,
+                Duration::from_secs(5),
+            )
+            .unwrap(),
+        );
+        assert!(matches!(crash, TrainerFault::Crashed { code: Some(3) }), "{crash}");
+        let malformed = run_to_fault(
+            TrainerHandle::spawn(
+                &["sh".into(), "-c".into(), "echo not-an-event".into()],
+                &cfg,
+                Duration::from_secs(5),
+            )
+            .unwrap(),
+        );
+        assert!(matches!(malformed, TrainerFault::Protocol { .. }), "{malformed}");
+        let hang = run_to_fault(
+            TrainerHandle::spawn(
+                &["sh".into(), "-c".into(), "sleep 30".into()],
+                &cfg,
+                Duration::from_millis(50),
+            )
+            .unwrap(),
+        );
+        assert!(matches!(hang, TrainerFault::Hang { .. }), "{hang}");
+        // A clean exit without a done event is a protocol breach too.
+        let silent = run_to_fault(
+            TrainerHandle::spawn(
+                &["sh".into(), "-c".into(), "true".into()],
+                &cfg,
+                Duration::from_secs(5),
+            )
+            .unwrap(),
+        );
+        assert!(matches!(silent, TrainerFault::Protocol { .. }), "{silent}");
+        for f in [crash, malformed, hang, silent] {
+            assert_eq!(f.kind(), FaultKind::Transient, "{f}");
+        }
+    }
+
+    #[test]
+    fn alpha_hat_windows_on_round() {
+        let mut buf = ReplayBuffer::new(16);
+        buf.push(rec(0, 1, 0, false));
+        buf.push(rec(0, 1, 1, false));
+        buf.push(rec(0, 5, 0, true));
+        buf.push(rec(0, 6, 0, true));
+        assert!((buf.alpha_hat_since(0).unwrap() - 0.5).abs() < 1e-9);
+        assert!((buf.alpha_hat_since(5).unwrap() - 1.0).abs() < 1e-9);
+        assert!(buf.alpha_hat_since(7).is_none());
+        assert_eq!(buf.max_round(), 6);
+    }
+}

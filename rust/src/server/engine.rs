@@ -281,6 +281,13 @@ pub struct SpecEngine<'rt> {
     pending_prefill: std::collections::HashMap<usize, PendingPrefill>,
     /// Chunk-boundary carry snapshots for the cached-prefix skip.
     chunk_cache: ChunkCache,
+    /// Online-adaptation harvest ring (DESIGN.md §12); None = no
+    /// adaptation loop attached. Every decode path pushes per-slot
+    /// verdict records through `adapt::harvest_row` — the host chain
+    /// round also carries the drafted token's (q, p), which it
+    /// materializes anyway; the fused device rounds return only verdict
+    /// ints, so their records omit the probabilities.
+    replay: Option<super::adapt::ReplaySink>,
 }
 
 /// One session's in-flight chunked prefill (`prefill_begin` →
@@ -516,7 +523,35 @@ impl<'rt> SpecEngine<'rt> {
             prefill_chunk,
             pending_prefill: std::collections::HashMap::new(),
             chunk_cache: ChunkCache::new(32),
+            replay: None,
         })
+    }
+
+    /// Hot-swap the DRAFT model's weights from a fine-tuned `.lkt`
+    /// checkpoint (DESIGN.md §12). Validate-then-commit: the checkpoint
+    /// is read, shape-checked against the draft manifest's `TensorSpec`s
+    /// (`checkpoint_to_params` — extra tensors like the fine-tuner's
+    /// `adapt/*` state are ignored), and uploaded to fresh device
+    /// buffers BEFORE the live `dparams` are replaced; any failure
+    /// returns with the old weights still serving (rollback = not
+    /// swapping). The old parameter literals are deliberately retained
+    /// in `_param_lits`: uploads are async (literals must outlive their
+    /// buffers, see `upload_params`), and in-flight work may still
+    /// reference the old buffers this round — a few MB of host memory
+    /// per swap buys memory-safety without a device fence.
+    ///
+    /// Exactness is untouched by construction: draft weights change
+    /// what is PROPOSED; the accept/resample rule and the target model
+    /// never change.
+    pub fn swap_draft_checkpoint(&mut self, ckpt: &std::path::Path) -> Result<()> {
+        let wrap = |e: anyhow::Error| super::adapt::swap_error(ckpt, e);
+        let c = crate::tensor::read_checkpoint(ckpt).map_err(wrap)?;
+        let params = checkpoint_to_params(&self.cx.dspec.params, &c).map_err(wrap)?;
+        let (dparams, dlits) = upload_params(self.cx.rt, &params).map_err(wrap)?;
+        // Commit point: everything validated and resident.
+        self.cx.dparams = dparams;
+        self.cx._param_lits.extend(dlits);
+        Ok(())
     }
 
     pub fn target_name(&self) -> &str {
@@ -810,6 +845,31 @@ impl<'rt> SpecEngine<'rt> {
                 mode,
                 u,
             );
+            // Adaptation harvest (host verify is the one path where the
+            // drafted token's q and p are already materialized: q from
+            // the proposal block, p from the lazily softmaxed rows —
+            // both filled through the first rejection, exactly the
+            // judged slots).
+            if let Some(sink) = &self.replay {
+                let judged = (rv.n_accepted + 1).min(k);
+                let qb = q.row_block(row);
+                let probs: Vec<(f32, f32)> = (0..judged)
+                    .map(|i| {
+                        let d = drafts[row][i].max(0) as usize;
+                        (qb[i * vocab + d], p[i * vocab + d])
+                    })
+                    .collect();
+                super::adapt::harvest_row(
+                    sink,
+                    seq.id,
+                    self.metrics.decode_rounds,
+                    seq.len,
+                    &seq.generated,
+                    &drafts[row],
+                    rv.n_accepted,
+                    &probs,
+                );
+            }
             Self::apply_verdict(seq, &drafts[row], k, rv.n_accepted, rv.token);
             self.metrics.observe_round_row(k, rv.n_accepted);
             self.controller.observe_chain(k, rv.n_accepted);
@@ -941,6 +1001,21 @@ impl<'rt> SpecEngine<'rt> {
             }
             let j = (n_acc_host[row].max(0) as usize).min(k);
             let token = toks_host[row * vt + j];
+            // Adaptation harvest: the fused kernel returns only verdict
+            // ints, so these records carry no q/p (same core fields as
+            // the host path's — pinned by the harvest-parity test).
+            if let Some(sink) = &self.replay {
+                super::adapt::harvest_row(
+                    sink,
+                    seq.id,
+                    self.metrics.decode_rounds,
+                    seq.len,
+                    &seq.generated,
+                    &drafts[row],
+                    j,
+                    &[],
+                );
+            }
             Self::apply_verdict(seq, &drafts[row], k, j, token);
             self.metrics.observe_round_row(k, j);
             self.controller.observe_chain(k, j);
@@ -1048,6 +1123,22 @@ impl<'rt> SpecEngine<'rt> {
             );
             acc_toks.clear();
             acc_toks.extend(tv.path.iter().map(|&node| drafts[row][node]));
+            // Adaptation harvest: the judged node set (accepted path +
+            // the sibling rejections the sequential walk made) is
+            // reconstructed from topology + path; per-node q/p live in
+            // tree coordinates and are not carried.
+            if let Some(sink) = &self.replay {
+                super::adapt::harvest_tree_row(
+                    sink,
+                    seq.id,
+                    self.metrics.decode_rounds,
+                    seq.len,
+                    &seq.generated,
+                    &drafts[row],
+                    |i| tree.parent(i),
+                    &tv.path,
+                );
+            }
             Self::apply_verdict(seq, &acc_toks, depth, acc_toks.len(), tv.token);
             self.metrics.observe_round_row(n, tv.path.len());
             self.controller.observe_tree(tree, tv.path.len());
@@ -1190,7 +1281,11 @@ impl<'rt> SpecEngine<'rt> {
         // live) ride along ONLY for stateful backends, which build
         // their draft-splice maps from them — still O(B·N) ints.
         let n_path_host = verify.output_host(&outs, 0)?.as_i32(); // [B]
-        let path_host = if self.backend.tree_paths_needed() {
+        // The accepted-path node indices are pulled for stateful
+        // backends (draft-splice maps) and whenever the adaptation loop
+        // is harvesting — reconstructing the judged node set needs node
+        // coordinates, not just tokens. Still O(B·N) ints.
+        let path_host = if self.backend.tree_paths_needed() || self.replay.is_some() {
             Some(verify.output_host(&outs, 1)?.as_i32())
         } else {
             None
@@ -1220,6 +1315,20 @@ impl<'rt> SpecEngine<'rt> {
             // tokens_out shares the chain layout: accepted candidates
             // then the replacement/bonus emission.
             let token = toks_host[row * vt + j];
+            // Adaptation harvest: judged node set from topology + the
+            // in-graph accepted path, as on the host tree round.
+            if let Some(sink) = &self.replay {
+                super::adapt::harvest_tree_row(
+                    sink,
+                    seq.id,
+                    self.metrics.decode_rounds,
+                    seq.len,
+                    &seq.generated,
+                    &drafts[row],
+                    |i| tree.parent(i),
+                    &paths[row],
+                );
+            }
             Self::apply_verdict(seq, &toks_host[row * vt..row * vt + j], depth, j, token);
             self.metrics.observe_round_row(n, j);
             self.controller.observe_tree(tree, j);
@@ -1408,6 +1517,14 @@ fn pad_clone(src: &SeqState, row: usize, seed: u64) -> SeqState {
 
 impl<'rt> SchedulerCore for SpecEngine<'rt> {
     type Group = GroupState;
+
+    fn attach_replay(&mut self, sink: super::adapt::ReplaySink) {
+        self.replay = Some(sink);
+    }
+
+    fn swap_draft(&mut self, ckpt: &std::path::Path) -> Result<()> {
+        self.swap_draft_checkpoint(ckpt)
+    }
 
     fn bucket(&self, n: usize) -> usize {
         self.cx.bucket(n)

@@ -644,6 +644,61 @@ impl HttpMetrics {
     }
 }
 
+/// Adaptation-loop gauges (`lkspec_adapt_*` namespace, DESIGN.md §12).
+/// Owned by the scheduler's `AdaptDriver` and refreshed once per tick,
+/// so plain fields suffice (single worker thread, like
+/// [`SchedulerMetrics`]).
+#[derive(Default, Clone, Debug)]
+pub struct AdaptMetrics {
+    /// Replay-ring depth right now (records held).
+    pub buffer_depth: u64,
+    /// Records evicted FIFO when the ring was full.
+    pub buffer_evicted_total: u64,
+    /// Records ever harvested from decode verdicts.
+    pub records_harvested_total: u64,
+    /// Trainer lifecycle gauge: 0 idle, 1 running, 2 last run swapped,
+    /// 3 last run faulted.
+    pub trainer_state: u64,
+    /// Fine-tune subprocess launches.
+    pub trainer_runs_total: u64,
+    /// Typed trainer faults (crash / hang / malformed / rollback) — all
+    /// transient by contract; serving continued on stale weights.
+    pub trainer_faults_total: u64,
+    /// Draft hot-swaps committed at a round boundary.
+    pub swaps_total: u64,
+    /// Fine-tunes whose checkpoint failed validate-then-commit (old
+    /// weights kept serving).
+    pub swap_rollbacks_total: u64,
+    /// Empirical acceptance over the ring before the last fine-tune …
+    pub alpha_hat_pre: f64,
+    /// … and over records harvested after the last committed swap.
+    pub alpha_hat_post: f64,
+}
+
+impl AdaptMetrics {
+    /// Prometheus-style text block (lkspec_adapt_* namespace).
+    pub fn render(&self, engine: &str) -> String {
+        let mut out = String::new();
+        let mut line = |name: &str, v: f64| {
+            out.push_str(&format!("lkspec_adapt_{name}{{engine=\"{engine}\"}} {v}\n"));
+        };
+        line("buffer_depth", self.buffer_depth as f64);
+        line("buffer_evicted_total", self.buffer_evicted_total as f64);
+        line(
+            "records_harvested_total",
+            self.records_harvested_total as f64,
+        );
+        line("trainer_state", self.trainer_state as f64);
+        line("trainer_runs_total", self.trainer_runs_total as f64);
+        line("trainer_faults_total", self.trainer_faults_total as f64);
+        line("swaps_total", self.swaps_total as f64);
+        line("swap_rollbacks_total", self.swap_rollbacks_total as f64);
+        line("alpha_hat_pre", self.alpha_hat_pre);
+        line("alpha_hat_post", self.alpha_hat_post);
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

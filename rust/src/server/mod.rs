@@ -25,11 +25,17 @@
 //!   * `http`      — dependency-light HTTP/1.1 edge: per-token SSE
 //!     streaming over chunked transfer, `/healthz`, `/metrics`
 //!     (DESIGN.md §10)
-//!   * `metrics`   — engine + scheduler + HTTP-edge counters,
-//!     Prometheus-style text
+//!   * `adapt`     — the online-adaptation loop (DESIGN.md §12):
+//!     replay-buffer harvest of live acceptance verdicts, background
+//!     LK-loss fine-tune orchestration (subprocess, JSONL protocol,
+//!     typed fault containment), and validate-then-commit draft
+//!     weight hot-swaps at round boundaries
+//!   * `metrics`   — engine + scheduler + HTTP-edge + adaptation
+//!     counters, Prometheus-style text
 //!
 //! See DESIGN.md §3–§4 for the layering contract.
 
+pub mod adapt;
 pub mod backend;
 pub mod batcher;
 pub mod engine;
@@ -40,12 +46,16 @@ pub mod metrics;
 pub mod router;
 pub mod scheduler;
 
+pub use adapt::{
+    AdaptConfig, AdaptDriver, ReplayBuffer, ReplayRecord, ReplaySink, TrainerChaos,
+    TrainerChaosKind, TrainerFault, TrainerHandle, TrainerSpec,
+};
 pub use backend::DraftBackend;
 pub use engine::{AdaptiveOpts, EngineOpts, RequestResult, SpecEngine, VerifyPath};
 pub use fault::{EngineError, FaultKind, RequestError};
 pub use http::{HttpOpts, HttpServer};
 pub use kv::{PagedKv, PagedKvConfig};
-pub use metrics::HttpMetrics;
+pub use metrics::{AdaptMetrics, HttpMetrics};
 pub use router::{Event, Router, RouterConfig, StreamSubmission, Submission};
 pub use scheduler::{
     AdmitReq, DownshiftConfig, FaultConfig, FaultPlan, PlannedFault, Scheduler, SchedulerCore,

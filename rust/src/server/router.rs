@@ -42,6 +42,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use super::adapt::AdaptConfig;
 use super::batcher::BatcherConfig;
 use super::engine::RequestResult;
 use super::fault::RequestError;
@@ -153,6 +154,10 @@ pub struct RouterConfig {
     /// Transient-fault retry budget + backoff for the scheduler's
     /// containment ladder.
     pub fault: FaultConfig,
+    /// Online-adaptation loop (DESIGN.md §12): harvest live acceptance
+    /// verdicts, background LK fine-tunes, draft hot-swaps between
+    /// rounds. `None` — the default — serves with fixed draft weights.
+    pub adapt: Option<AdaptConfig>,
 }
 
 impl Default for RouterConfig {
@@ -164,6 +169,7 @@ impl Default for RouterConfig {
             prefill_chunk: None,
             prefill_budget: 4,
             fault: FaultConfig::default(),
+            adapt: None,
         }
     }
 }
@@ -256,6 +262,9 @@ impl Router {
                 if let Some(arb) = arbiter {
                     sched = sched.with_chunked_prefill(arb);
                 }
+                if let Some(adapt) = cfg.adapt {
+                    sched = sched.with_adaptation(adapt);
+                }
                 // ticket -> scheduler session id, and session id ->
                 // (ticket, reply channel); both purge on the verdict.
                 let mut tickets: HashMap<u64, u64> = HashMap::new();
@@ -294,6 +303,9 @@ impl Router {
                                     "lkspec_sched_queue_depth{{engine=\"router\"}} {}\n",
                                     sched.pending()
                                 ));
+                                if let Some(driver) = sched.adapt() {
+                                    text.push_str(&driver.metrics.render("router"));
+                                }
                                 let _ = tx.send(text);
                             }
                             Ok(Msg::Shutdown) => {

@@ -70,6 +70,7 @@ use crate::spec::accept::AcceptanceStats;
 use crate::spec::adaptive::PrefillArbiter;
 use crate::util::Pcg64;
 
+use super::adapt::{harvest_row, AdaptConfig, AdaptDriver, ReplaySink, TrainerChaos};
 use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{request_rng, RequestResult};
 use super::fault::{EngineError, FaultKind, RequestError};
@@ -196,6 +197,24 @@ pub trait SchedulerCore {
     fn prefill_step(&mut self, _g: &mut Self::Group, _row: usize) -> Result<bool> {
         bail!("core does not support chunked prefill")
     }
+
+    /// Online-adaptation harvest (DESIGN.md §12): attach the replay
+    /// ring this core should push per-slot verdict records into. The
+    /// default — no harvest — is correct for cores without an
+    /// adaptation loop; harvesting cores push via
+    /// [`adapt::harvest_row`](super::adapt::harvest_row) at verdict
+    /// time on every decode path.
+    fn attach_replay(&mut self, _sink: super::adapt::ReplaySink) {}
+
+    /// Hot-swap the draft model's weights from a fine-tuned checkpoint
+    /// at a round boundary — validate-then-commit: the core must fully
+    /// load AND validate `ckpt` before replacing its live weights, and
+    /// on ANY error leave the old weights serving (rollback is simply
+    /// not swapping). Never affects the exactness contract: draft
+    /// weights change what is PROPOSED, never the accept/resample rule.
+    fn swap_draft(&mut self, ckpt: &std::path::Path) -> Result<()> {
+        bail!("core does not support draft hot-swap ({})", ckpt.display())
+    }
 }
 
 /// Transient-fault retry policy (see DESIGN.md §9): how many times a
@@ -319,6 +338,10 @@ pub struct Scheduler<C: SchedulerCore> {
     streamed: HashMap<u64, usize>,
     /// Per-session token deltas accumulated since `take_token_events`.
     token_events: Vec<(u64, Vec<i32>)>,
+    /// Online-adaptation driver (DESIGN.md §12): harvest → background
+    /// fine-tune → hot-swap, stepped once per tick AFTER the decode
+    /// round. None = no adaptation loop (the default).
+    adapt: Option<AdaptDriver>,
     pub metrics: SchedulerMetrics,
 }
 
@@ -349,6 +372,7 @@ impl<C: SchedulerCore> Scheduler<C> {
             failures: Vec::new(),
             streamed: HashMap::new(),
             token_events: Vec::new(),
+            adapt: None,
             metrics: SchedulerMetrics::default(),
         }
     }
@@ -386,6 +410,38 @@ impl<C: SchedulerCore> Scheduler<C> {
     pub fn with_chunked_prefill(mut self, arbiter: PrefillArbiter) -> Scheduler<C> {
         self.arbiter = Some(arbiter);
         self
+    }
+
+    /// Attach the online-adaptation loop (DESIGN.md §12): the core
+    /// harvests per-slot verdict records into the driver's replay ring,
+    /// and every `interval_rounds` decode rounds the driver snapshots a
+    /// transcript, runs a background LK fine-tune, and hot-swaps the
+    /// draft weights through [`SchedulerCore::swap_draft`] at a round
+    /// boundary. Serving semantics are unchanged by contract: draft
+    /// weights steer what is PROPOSED, never the accept/resample rule,
+    /// so greedy output stays the target's greedy path and stochastic
+    /// output stays distribution-lossless across arbitrary swap
+    /// boundaries (`tests/adapt_loop.rs` pins both).
+    pub fn with_adaptation(mut self, cfg: AdaptConfig) -> Scheduler<C> {
+        let driver = AdaptDriver::new(cfg);
+        self.core.attach_replay(driver.buffer.clone());
+        self.adapt = Some(driver);
+        self
+    }
+
+    /// The adaptation driver, if attached (gauges + tests).
+    pub fn adapt(&self) -> Option<&AdaptDriver> {
+        self.adapt.as_ref()
+    }
+
+    /// Step the adaptation driver at the tick's round boundary. The
+    /// take/put-back dance lets the driver borrow the core mutably for
+    /// the hot-swap without aliasing `self`.
+    fn step_adapt(&mut self, now: Instant) {
+        if let Some(mut driver) = self.adapt.take() {
+            driver.step(&mut self.core, self.metrics.rounds, now);
+            self.adapt = Some(driver);
+        }
     }
 
     /// The attached paged-KV pool, if any (gauges + tests).
@@ -494,6 +550,13 @@ impl<C: SchedulerCore> Scheduler<C> {
     pub fn drain(&mut self) {
         self.draining = true;
         self.metrics.draining = true;
+        // Cancel-on-drain: an in-flight fine-tune is advisory work — a
+        // graceful shutdown kills the subprocess instead of waiting out
+        // a training run. The ring and the serving weights are left as
+        // they are.
+        if let Some(driver) = self.adapt.as_mut() {
+            driver.cancel();
+        }
     }
 
     pub fn is_draining(&self) -> bool {
@@ -550,6 +613,12 @@ impl<C: SchedulerCore> Scheduler<C> {
         self.failures.clear();
         self.streamed.clear();
         self.token_events.clear();
+        // An in-flight fine-tune was reading transcripts of the faulted
+        // engine's sessions; kill it rather than swap weights trained
+        // against state the reset just invalidated.
+        if let Some(driver) = self.adapt.as_mut() {
+            driver.cancel();
+        }
         self.metrics.engine_resets += 1;
     }
 
@@ -1028,6 +1097,7 @@ impl<C: SchedulerCore> Scheduler<C> {
                     self.metrics.kv_sheds = kv.sheds;
                     self.metrics.kv_evictions = kv.evictions;
                 }
+                self.step_adapt(now);
                 return Ok(finished);
             }
             let (occ, cap) = (active.slots.occupied(), active.slots.capacity());
@@ -1138,6 +1208,11 @@ impl<C: SchedulerCore> Scheduler<C> {
             self.metrics.kv_sheds = kv.sheds;
             self.metrics.kv_evictions = kv.evictions;
         }
+        // --- adaptation round boundary (DESIGN.md §12) ----------------
+        // AFTER the round and harvest: polls / launches the background
+        // fine-tune and commits any hot-swap between rounds, never
+        // mid-round.
+        self.step_adapt(now);
         Ok(finished)
     }
 }
@@ -1178,6 +1253,15 @@ pub struct FaultPlan {
     /// plan describes a whole chaos scenario (engine faults + edge
     /// faults) and the vocabulary stays in one place.
     pub drop_conn_at: Option<u64>,
+    /// Trainer-chaos extension (DESIGN.md §12): fault the Nth
+    /// background fine-tune launch. Like `drop_conn_at`, the core never
+    /// sees these — the [`AdaptDriver`] reads the list (via
+    /// [`AdaptConfig::with_chaos`]) and substitutes a known-faulty
+    /// subprocess at launch time, so the REAL orchestration machinery
+    /// (reader thread, deadline kill, exit-status mapping) is what gets
+    /// exercised — but the vocabulary stays in the one declarative
+    /// plan.
+    pub trainer: Vec<TrainerChaos>,
 }
 
 impl FaultPlan {
@@ -1215,6 +1299,35 @@ impl FaultPlan {
     /// `token_events` streamed `token` events (see the field docs).
     pub fn drop_conn_at(mut self, token_events: u64) -> FaultPlan {
         self.drop_conn_at = Some(token_events);
+        self
+    }
+
+    /// Trainer chaos: the `run`th fine-tune launch (0-based) dies
+    /// mid-stream after a valid first event.
+    pub fn trainer_kill_at(mut self, run: u64) -> FaultPlan {
+        self.trainer.push(TrainerChaos {
+            at_run: run,
+            kind: super::adapt::TrainerChaosKind::Kill,
+        });
+        self
+    }
+
+    /// Trainer chaos: the `run`th launch emits nothing until the
+    /// deadline kills it.
+    pub fn trainer_hang_at(mut self, run: u64) -> FaultPlan {
+        self.trainer.push(TrainerChaos {
+            at_run: run,
+            kind: super::adapt::TrainerChaosKind::Hang,
+        });
+        self
+    }
+
+    /// Trainer chaos: the `run`th launch emits a non-protocol line.
+    pub fn trainer_malformed_at(mut self, run: u64) -> FaultPlan {
+        self.trainer.push(TrainerChaos {
+            at_run: run,
+            kind: super::adapt::TrainerChaosKind::Malformed,
+        });
         self
     }
 }
@@ -1262,6 +1375,12 @@ pub struct SimCore {
     /// ChaosCore: fail `prefill_step` (session-fatal, one-shot) when
     /// `prefill_chunks_run` reaches this value.
     pub fail_prefill_at: Option<u64>,
+    /// Online-adaptation harvest sink ([`SchedulerCore::attach_replay`]).
+    pub replay: Option<ReplaySink>,
+    /// Epoch of the last committed draft hot-swap (0 = the bootstrap
+    /// profiles) and total swaps committed — test observability.
+    pub draft_epoch: u64,
+    pub swaps_committed: u64,
 }
 
 pub struct SimGroup {
@@ -1305,6 +1424,9 @@ impl SimCore {
             prefill_chunk: None,
             prefill_chunks_run: 0,
             fail_prefill_at: None,
+            replay: None,
+            draft_epoch: 0,
+            swaps_committed: 0,
         }
     }
 
@@ -1473,6 +1595,26 @@ impl SchedulerCore for SimCore {
             if let Some(c) = self.controller.as_mut() {
                 c.observe_chain(n_drafted, n_acc);
             }
+            // Adaptation harvest: the sim's proposals are its committed
+            // tokens (position-deterministic), so the drafted chain is
+            // reconstructible before the verdict mutates the row. q/p
+            // are unavailable here, as on the device-verify paths.
+            if let Some(sink) = &self.replay {
+                let pos0 = seq.tokens.len();
+                let drafts: Vec<i32> = (0..n_drafted)
+                    .map(|i| seq.prompt[(pos0 + i) % seq.prompt.len()] + 1000)
+                    .collect();
+                harvest_row(
+                    sink,
+                    seq.id,
+                    self.rounds_run - 1,
+                    pos0,
+                    &seq.tokens,
+                    &drafts,
+                    n_acc,
+                    &[],
+                );
+            }
             seq.stats.record_round(n_drafted, n_acc);
             for _ in 0..n_acc + 1 {
                 let j = seq.tokens.len();
@@ -1519,6 +1661,26 @@ impl SchedulerCore for SimCore {
         // stream or tokens can shift (the containment tests pin this
         // bit-for-bit against unfaulted runs).
         g.rows[row] = self.pad_seq();
+    }
+
+    fn attach_replay(&mut self, sink: ReplaySink) {
+        self.replay = Some(sink);
+    }
+
+    fn swap_draft(&mut self, ckpt: &std::path::Path) -> Result<()> {
+        // Validate-then-commit: parse + range-check the whole sim-draft
+        // checkpoint before touching the live profiles; any error keeps
+        // the old profiles serving (rollback = not swapping). Swapping
+        // changes the Bernoulli acceptance walk only — emitted tokens
+        // are position-deterministic and the walk draws a FIXED `k`
+        // uniforms per round, so neither token values nor RNG alignment
+        // can shift (the swap-safety properties pin this).
+        let (epoch, profile) = super::adapt::read_sim_checkpoint(ckpt)
+            .map_err(|e| super::adapt::swap_error(ckpt, e))?;
+        self.profiles = vec![profile];
+        self.draft_epoch = epoch;
+        self.swaps_committed += 1;
+        Ok(())
     }
 
     fn prefill_chunk_len(&self) -> Option<usize> {

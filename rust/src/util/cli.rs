@@ -16,6 +16,7 @@ const KNOWN_FLAGS: &[&str] = &[
     "no-spec",
     "no-adaptive",
     "no-prefix-cache",
+    "adapt",
     "force",
     "help",
     "fresh",

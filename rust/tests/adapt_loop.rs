@@ -1,0 +1,620 @@
+//! Online-adaptation suite (DESIGN.md §12), PJRT-free.
+//!
+//! Two layers of swap-safety evidence:
+//!
+//!  1. Sampling-level properties over the audited `verify_round`: a
+//!     draft hot-swap only changes WHAT is proposed, never the
+//!     accept/resample rule, so greedy decode stays the target's argmax
+//!     path and stochastic decode stays distribution-lossless across
+//!     arbitrary swap round boundaries — for all three chain-drafting
+//!     constructions (recurrent EAGLE/MTP-shaped, parallel-head
+//!     MEDUSA-shaped, single-step MLP-shaped) × all three sampling
+//!     modes.
+//!  2. Scheduler-level properties over `SimCore` + the REAL
+//!     `AdaptDriver`: harvest → background fine-tune → hot-swap at
+//!     round boundaries leaves every session's served tokens
+//!     bit-identical to a no-adaptation run, and every trainer fault
+//!     (crash / hang / malformed protocol / bad checkpoint) is a typed
+//!     TRANSIENT fault that keeps the stale weights serving.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use lk_spec::server::batcher::BatcherConfig;
+use lk_spec::server::{
+    AdaptConfig, FaultKind, FaultPlan, RequestResult, Scheduler, SimCore, TrainerFault,
+    TrainerSpec,
+};
+use lk_spec::spec::sampling::{
+    argmax, categorical_from_uniform, verify_round, RoundUniforms, SamplingMode,
+};
+use lk_spec::util::proptest::{forall, gen};
+use lk_spec::util::Pcg64;
+
+// ---------------------------------------------------------------------------
+// sampling-level swap safety (exactness across swap boundaries)
+// ---------------------------------------------------------------------------
+
+/// Prefix-deterministic synthetic model (the properties.rs substrate):
+/// the distribution at a position is a pure function of (salt, prefix).
+fn synth_dist(salt: u64, prefix: &[i32], vocab: usize, sharp: f64) -> Vec<f32> {
+    let mut h = salt;
+    for &t in prefix {
+        h = h
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(t as u64 + 1);
+    }
+    let mut rng = Pcg64::new(h, 0x5EED);
+    gen::dist(&mut rng, vocab, sharp)
+}
+
+/// The three chain-backend conditioning shapes (`server::backend`):
+/// how draft slot `i`'s distribution conditions on context.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum DraftShape {
+    /// EAGLE-3/MTP: slot i sees prefix + all speculated drafts before it.
+    Recurrent,
+    /// MEDUSA: head i sees only the committed prefix (per-head salt).
+    ParallelHead,
+    /// MLP: slot i sees a one-token window (the immediately previous
+    /// token only).
+    SingleStep,
+}
+
+const SHAPES: [DraftShape; 3] = [
+    DraftShape::Recurrent,
+    DraftShape::ParallelHead,
+    DraftShape::SingleStep,
+];
+
+fn draft_dist(
+    shape: DraftShape,
+    qsalt: u64,
+    out: &[i32],
+    drafts: &[i32],
+    slot: usize,
+    vocab: usize,
+) -> Vec<f32> {
+    match shape {
+        DraftShape::Recurrent => {
+            let mut ctx = out.to_vec();
+            ctx.extend_from_slice(&drafts[..slot]);
+            synth_dist(qsalt, &ctx, vocab, 2.0)
+        }
+        DraftShape::ParallelHead => {
+            let head_salt = qsalt ^ (slot as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            synth_dist(head_salt, out, vocab, 2.0)
+        }
+        DraftShape::SingleStep => {
+            let last = if slot > 0 {
+                drafts.get(slot - 1).copied()
+            } else {
+                out.last().copied()
+            };
+            let window: Vec<i32> = last.into_iter().collect();
+            synth_dist(qsalt, &window, vocab, 2.0)
+        }
+    }
+}
+
+/// Decode `len` tokens through engine-shaped k-chains where the DRAFT
+/// MODEL is a per-round function (`qsalt_of(round)`) — the sampling-
+/// level shape of a hot-swap: weights change only at round boundaries,
+/// the verify rule never changes. Uniform order follows the fixed-
+/// uniform contract: per round, one draft draw per slot (stochastic
+/// mode only), then k accept draws + one sample draw (stochastic
+/// modes). The target model (`psalt`) conditions on the speculated
+/// prefix as the engine's verify pass does.
+fn decode_with_swaps(
+    shape: DraftShape,
+    psalt: u64,
+    mut qsalt_of: impl FnMut(usize) -> u64,
+    vocab: usize,
+    len: usize,
+    k: usize,
+    mode: SamplingMode,
+    rng: &mut Pcg64,
+) -> (Vec<i32>, usize) {
+    let mut out: Vec<i32> = Vec::new();
+    let mut rounds = 0usize;
+    while out.len() < len {
+        let qsalt = qsalt_of(rounds);
+        let mut drafts: Vec<i32> = Vec::with_capacity(k);
+        let mut q_rows: Vec<f32> = Vec::new();
+        for i in 0..k {
+            let q = draft_dist(shape, qsalt, &out, &drafts, i, vocab);
+            let x = match mode {
+                SamplingMode::Stochastic => {
+                    categorical_from_uniform(&q, rng.uniform() as f32) as i32
+                }
+                _ => argmax(&q) as i32,
+            };
+            q_rows.extend_from_slice(&q);
+            drafts.push(x);
+        }
+        let mut p_rows: Vec<f32> = Vec::new();
+        let mut ctx = out.clone();
+        for j in 0..=k {
+            p_rows.extend_from_slice(&synth_dist(psalt, &ctx, vocab, 2.0));
+            if j < k {
+                ctx.push(drafts[j]);
+            }
+        }
+        let u = RoundUniforms::draw(rng, k, mode);
+        let rv = verify_round(k, vocab, &p_rows, &q_rows, &drafts, mode, &u);
+        out.extend_from_slice(&drafts[..rv.n_accepted]);
+        out.push(rv.token);
+        rounds += 1;
+    }
+    out.truncate(len);
+    (out, rounds)
+}
+
+/// A random swap schedule: toggle between two drafters at 1–3 random
+/// round boundaries (deterministic in `seed`).
+fn toggle_schedule(seed: u64, qa: u64, qb: u64) -> impl FnMut(usize) -> u64 {
+    let mut rng = Pcg64::new(seed, 0x5A9);
+    let n = 1 + rng.below(3);
+    let mut cuts: Vec<usize> = (0..n).map(|_| rng.below(20)).collect();
+    cuts.sort_unstable();
+    move |round| {
+        let flips = cuts.iter().filter(|&&c| c <= round).count();
+        if flips % 2 == 0 {
+            qa
+        } else {
+            qb
+        }
+    }
+}
+
+/// GREEDY swap safety: the emitted sequence is the target's greedy path
+/// position by position, so swapping the drafter at ARBITRARY round
+/// boundaries — any of the three chain-backend conditioning shapes —
+/// leaves the output bit-identical to the vanilla target decode.
+#[test]
+fn prop_greedy_decode_is_swap_invariant() {
+    forall(
+        "greedy emission invariant under draft hot-swaps",
+        0x5AFE,
+        16,
+        |rng| {
+            let k = 1 + rng.below(6);
+            (rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64(), k)
+        },
+        |&(psalt, qa, qb, seed, k)| {
+            let (vocab, len) = (12usize, 40usize);
+            let mut reference: Vec<i32> = Vec::new();
+            for _ in 0..len {
+                let p = synth_dist(psalt, &reference, vocab, 2.0);
+                reference.push(argmax(&p) as i32);
+            }
+            for shape in SHAPES {
+                let mut rng = Pcg64::new(seed, 1);
+                let (toks, rounds) = decode_with_swaps(
+                    shape,
+                    psalt,
+                    toggle_schedule(seed, qa, qb),
+                    vocab,
+                    len,
+                    k,
+                    SamplingMode::Greedy,
+                    &mut rng,
+                );
+                if toks != reference {
+                    return Err(format!(
+                        "{shape:?} k={k}: swap schedule diverged from the greedy path"
+                    ));
+                }
+                if rounds == 0 || rounds > len {
+                    return Err(format!("{shape:?}: implausible round count {rounds}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// STOCHASTIC swap safety: the emission law stays EXACTLY the target
+/// law under arbitrary swap schedules — the joint law of the first two
+/// tokens equals the autoregressive 2-gram p(a)·p(b|a), with a fresh
+/// random swap boundary (and drafter pair) per trial, for each
+/// conditioning shape. The Leviathan rule is per-round, so losslessness
+/// cannot depend on WHICH drafter proposed, only that verify uses the
+/// matching q — which is what a round-boundary swap preserves.
+#[test]
+fn prop_stochastic_decode_stays_lossless_across_swaps() {
+    forall(
+        "any swap schedule preserves the 2-gram law",
+        0x5AFF,
+        3,
+        |rng| {
+            let shape = SHAPES[rng.below(3)];
+            (rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64(), shape)
+        },
+        |&(psalt, qa, qb, seed, shape)| {
+            let vocab = 8usize;
+            let n = 40_000usize;
+            let mut rng = Pcg64::new(seed, 7);
+            let mut joint = vec![0f64; vocab * vocab];
+            for t in 0..n {
+                let (toks, _) = decode_with_swaps(
+                    shape,
+                    psalt,
+                    toggle_schedule(seed ^ t as u64, qa, qb),
+                    vocab,
+                    2,
+                    1 + (t % 3),
+                    SamplingMode::Stochastic,
+                    &mut rng,
+                );
+                joint[toks[0] as usize * vocab + toks[1] as usize] += 1.0;
+            }
+            let p0 = synth_dist(psalt, &[], vocab, 2.0);
+            for a in 0..vocab {
+                let p1 = synth_dist(psalt, &[a as i32], vocab, 2.0);
+                for b in 0..vocab {
+                    let want = p0[a] as f64 * p1[b] as f64;
+                    let emp = joint[a * vocab + b] / n as f64;
+                    let tol = 0.018 + 3.0 * (want / n as f64).sqrt();
+                    if (emp - want).abs() > tol {
+                        return Err(format!(
+                            "{shape:?} 2-gram ({a},{b}): |{emp:.4} - {want:.4}| > {tol:.4}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// GREEDY-DRAFT (the Appendix D ablation mode) swap safety: the mode is
+/// deliberately lossy, so the exactness claims above don't apply — the
+/// invariant that MUST survive a swap is determinism under the
+/// fixed-uniform contract: the decode is a pure function of
+/// (seed, swap schedule), so an identical replay is bit-identical with
+/// aligned RNG streams, for every conditioning shape.
+#[test]
+fn prop_greedy_draft_swap_replay_is_deterministic() {
+    forall(
+        "greedy-draft decode replays bit-identically under swaps",
+        0x5B00,
+        24,
+        |rng| {
+            let k = 1 + rng.below(6);
+            let shape = SHAPES[rng.below(3)];
+            (rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64(), k, shape)
+        },
+        |&(psalt, qa, qb, seed, k, shape)| {
+            let (vocab, len) = (10usize, 30usize);
+            let mut rng_a = Pcg64::new(seed, 3);
+            let (ta, ra) = decode_with_swaps(
+                shape, psalt, toggle_schedule(seed, qa, qb),
+                vocab, len, k, SamplingMode::GreedyDraft, &mut rng_a,
+            );
+            let mut rng_b = Pcg64::new(seed, 3);
+            let (tb, rb) = decode_with_swaps(
+                shape, psalt, toggle_schedule(seed, qa, qb),
+                vocab, len, k, SamplingMode::GreedyDraft, &mut rng_b,
+            );
+            if ta != tb || ra != rb {
+                return Err(format!("{shape:?} k={k}: replay diverged"));
+            }
+            if rng_a.next_u64() != rng_b.next_u64() {
+                return Err("RNG streams misaligned after identical replays".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// scheduler-level swap safety + trainer chaos (SimCore + real AdaptDriver)
+// ---------------------------------------------------------------------------
+
+fn cfg(queue_cap: usize) -> BatcherConfig {
+    BatcherConfig {
+        buckets: vec![1, 4],
+        max_wait: std::time::Duration::ZERO,
+        queue_cap,
+    }
+}
+
+/// A low-acceptance starting drafter: plenty of rejections to harvest,
+/// plenty of headroom for the fine-tune to close.
+fn shifted_sim(seed: u64) -> SimCore {
+    SimCore::new(4, seed, vec![1, 4]).with_alpha(vec![vec![0.35, 0.3, 0.25, 0.2]])
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lk_adapt_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn adapt_cfg(tag: &str, interval: u64) -> AdaptConfig {
+    AdaptConfig {
+        interval_rounds: interval,
+        min_records: 8,
+        trainer: TrainerSpec::BuiltinSim,
+        out_dir: tmp_dir(tag),
+        ..AdaptConfig::default()
+    }
+}
+
+/// Submit a fixed workload and tick to completion, collecting tokens.
+fn run_workload(s: &mut Scheduler<SimCore>) -> Vec<(u64, RequestResult)> {
+    for i in 0..6i32 {
+        s.submit(vec![i + 1, 2 * i + 7, 3], 40 + 4 * i as usize).unwrap();
+    }
+    let mut out = Vec::new();
+    let mut ticks = 0;
+    while !s.is_idle() {
+        out.extend(s.tick(Instant::now()).unwrap());
+        ticks += 1;
+        assert!(ticks < 20_000, "scheduler did not converge");
+    }
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+fn tokens_of(results: &[(u64, RequestResult)]) -> Vec<(u64, Vec<i32>)> {
+    results
+        .iter()
+        .map(|(id, r)| (*id, r.tokens.clone()))
+        .collect()
+}
+
+/// THE scheduler-level swap-safety property: with the REAL adaptation
+/// loop running (harvest → BuiltinSim fine-tune → hot-swap through
+/// `SchedulerCore::swap_draft`, swaps landing at driver-chosen round
+/// boundaries that vary with the interval), every session's served
+/// tokens are BIT-IDENTICAL to a run with no adaptation at all. The
+/// drafter only shapes acceptance (rounds), never emissions.
+#[test]
+fn prop_hot_swaps_never_change_served_tokens() {
+    forall(
+        "served tokens invariant under live hot-swaps",
+        0xADA7,
+        6,
+        |rng| (rng.next_u64(), 2 + rng.below(5) as u64),
+        |&(seed, interval)| {
+            let mut base = Scheduler::new(shifted_sim(seed), cfg(64));
+            let base_toks = tokens_of(&run_workload(&mut base));
+
+            let tag = format!("swap_{seed:x}_{interval}");
+            let mut s = Scheduler::new(shifted_sim(seed), cfg(64))
+                .with_adaptation(adapt_cfg(&tag, interval));
+            let adapt_toks = tokens_of(&run_workload(&mut s));
+            let driver = s.adapt().expect("driver attached");
+            if driver.metrics.swaps_total == 0 {
+                return Err(format!(
+                    "no hot-swap fired (interval {interval}) — property vacuous"
+                ));
+            }
+            if driver.metrics.records_harvested_total == 0 {
+                return Err("no records harvested".into());
+            }
+            if adapt_toks != base_toks {
+                return Err(format!(
+                    "served tokens changed across {} hot-swap(s)",
+                    driver.metrics.swaps_total
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The adaptation-drift claim at test scale: fine-tuning on the live
+/// transcript strictly improves the harvested acceptance rate once the
+/// swapped drafter starts serving (the bench pins the same claim on the
+/// domain-shifted corpus mix).
+#[test]
+fn fine_tune_improves_harvested_alpha() {
+    let mut s =
+        Scheduler::new(shifted_sim(0xD01F), cfg(64)).with_adaptation(adapt_cfg("drift", 3));
+    let _ = run_workload(&mut s);
+    let m = &s.adapt().unwrap().metrics;
+    assert!(m.swaps_total >= 1, "no swap committed");
+    assert!(
+        m.alpha_hat_pre > 0.0 && m.alpha_hat_pre < 1.0,
+        "pre-swap alpha_hat {:.3} not a proper rate",
+        m.alpha_hat_pre
+    );
+    assert!(
+        m.alpha_hat_post > m.alpha_hat_pre,
+        "alpha_hat did not improve: {:.3} -> {:.3}",
+        m.alpha_hat_pre,
+        m.alpha_hat_post
+    );
+}
+
+/// The adapt gauges render under the `lkspec_adapt_` namespace.
+#[test]
+fn adapt_metrics_render() {
+    let mut s =
+        Scheduler::new(shifted_sim(0x3E7), cfg(64)).with_adaptation(adapt_cfg("metrics", 4));
+    let _ = run_workload(&mut s);
+    let text = s.adapt().unwrap().metrics.render("sim");
+    for gauge in [
+        "lkspec_adapt_buffer_depth",
+        "lkspec_adapt_records_harvested_total",
+        "lkspec_adapt_trainer_runs_total",
+        "lkspec_adapt_swaps_total",
+        "lkspec_adapt_alpha_hat_post",
+    ] {
+        assert!(text.contains(gauge), "missing gauge {gauge} in:\n{text}");
+    }
+    assert!(text.contains("engine=\"sim\""));
+}
+
+/// Run the workload under a trainer-chaos plan; return the served
+/// tokens and the driver's (faults, metrics) evidence.
+fn run_with_chaos(
+    tag: &str,
+    plan: FaultPlan,
+    seed: u64,
+) -> (Vec<(u64, Vec<i32>)>, Vec<TrainerFault>, u64, u64) {
+    let acfg = adapt_cfg(tag, 3).with_chaos(plan.trainer.clone());
+    let mut s = Scheduler::new(
+        shifted_sim(seed).with_fault_plan(plan),
+        cfg(64),
+    )
+    .with_adaptation(acfg);
+    let toks = tokens_of(&run_workload(&mut s));
+    // The faulty subprocess may still be mid-flight when serving ends:
+    // keep ticking the idle scheduler (each tick polls the trainer)
+    // until the launch resolves one way or the other.
+    let mut spins = 0;
+    while s.adapt().unwrap().trainer_running() {
+        let _ = s.tick(Instant::now()).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        spins += 1;
+        assert!(spins < 2_000, "trainer launch never resolved");
+    }
+    let driver = s.adapt().unwrap();
+    (
+        toks,
+        driver.faults.clone(),
+        driver.metrics.trainer_faults_total,
+        driver.metrics.swaps_total,
+    )
+}
+
+/// Trainer chaos matrix: a mid-fine-tune crash / hang / malformed
+/// event stream each maps to its TYPED TrainerFault, every one of them
+/// classifies TRANSIENT (advisory loop — never session- or
+/// engine-fatal), serving stays bit-identical to the unfaulted
+/// no-trainer run, and the stale drafter keeps serving (a later clean
+/// run may still swap).
+#[test]
+fn trainer_chaos_faults_are_typed_transient_and_contained() {
+    let seed = 0xC4A05u64;
+    let mut base = Scheduler::new(shifted_sim(seed), cfg(64));
+    let base_toks = tokens_of(&run_workload(&mut base));
+
+    let cases: [(&str, FaultPlan, fn(&TrainerFault) -> bool); 3] = [
+        ("kill", FaultPlan::default().trainer_kill_at(0), |f| {
+            matches!(f, TrainerFault::Crashed { .. })
+        }),
+        ("hang", FaultPlan::default().trainer_hang_at(0), |f| {
+            matches!(f, TrainerFault::Hang { .. })
+        }),
+        ("malformed", FaultPlan::default().trainer_malformed_at(0), |f| {
+            matches!(f, TrainerFault::Protocol { .. })
+        }),
+    ];
+    for (tag, plan, is_expected) in cases {
+        let (toks, faults, faults_total, _swaps) = run_with_chaos(tag, plan, seed);
+        assert_eq!(
+            toks, base_toks,
+            "{tag}: trainer fault leaked into served tokens"
+        );
+        assert!(
+            faults_total >= 1,
+            "{tag}: fault not counted (faults: {faults:?})"
+        );
+        let fault = faults
+            .iter()
+            .find(|f| is_expected(f))
+            .unwrap_or_else(|| panic!("{tag}: expected fault variant missing in {faults:?}"));
+        assert_eq!(
+            fault.kind(),
+            FaultKind::Transient,
+            "{tag}: trainer fault must be transient"
+        );
+    }
+}
+
+/// After a faulted run, the NEXT clean launch still fine-tunes and
+/// swaps: a trainer fault costs one epoch, not the loop.
+#[test]
+fn trainer_fault_then_recovery_swaps() {
+    let (_, faults, faults_total, swaps) = run_with_chaos(
+        "recover",
+        FaultPlan::default().trainer_kill_at(0),
+        0xC4A06,
+    );
+    assert!(faults_total >= 1, "chaos run recorded no fault");
+    assert!(
+        faults.iter().any(|f| matches!(f, TrainerFault::Crashed { .. })),
+        "missing crash fault: {faults:?}"
+    );
+    assert!(
+        swaps >= 1,
+        "clean follow-up run never swapped (swaps = {swaps})"
+    );
+}
+
+/// A trainer that completes but hands back an unloadable checkpoint:
+/// validate-then-commit ROLLS BACK (swap_rollbacks counted, no swap
+/// committed) and the stale drafter keeps serving bit-identically.
+#[test]
+fn bad_checkpoint_rolls_back_and_keeps_serving() {
+    let seed = 0xBADC4u64;
+    let mut base = Scheduler::new(shifted_sim(seed), cfg(64));
+    let base_toks = tokens_of(&run_workload(&mut base));
+
+    let mut acfg = adapt_cfg("rollback", 3);
+    acfg.trainer = TrainerSpec::Command(vec![
+        "sh".into(),
+        "-c".into(),
+        r#"printf '%s\n' '{"kind":"done","payload":{"checkpoint":"/nonexistent/ckpt.json","epoch":1}}'"#
+            .into(),
+    ]);
+    let mut s = Scheduler::new(shifted_sim(seed), cfg(64)).with_adaptation(acfg);
+    let toks = tokens_of(&run_workload(&mut s));
+    let mut spins = 0;
+    while s.adapt().unwrap().metrics.swap_rollbacks_total == 0 {
+        let _ = s.tick(Instant::now()).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        spins += 1;
+        assert!(spins < 2_000, "rollback never recorded");
+    }
+    let driver = s.adapt().unwrap();
+    assert_eq!(driver.metrics.swaps_total, 0, "bad checkpoint must not commit");
+    assert!(
+        driver
+            .faults
+            .iter()
+            .any(|f| matches!(f, TrainerFault::Io { message } if message.contains("rolled back"))),
+        "rollback fault missing: {:?}",
+        driver.faults
+    );
+    assert_eq!(toks, base_toks, "rollback leaked into served tokens");
+}
+
+/// Graceful drain kills an in-flight fine-tune instead of waiting it
+/// out (cancel-on-drain), and the drained scheduler still answers every
+/// accepted request.
+#[test]
+fn drain_cancels_inflight_trainer() {
+    // Hang chaos: the run-0 subprocess sleeps far longer than any test
+    // budget; only a cancel can clear it promptly.
+    let plan = FaultPlan::default().trainer_hang_at(0);
+    let acfg = adapt_cfg("drain", 2).with_chaos(plan.trainer.clone());
+    let mut s = Scheduler::new(shifted_sim(0xD4A1), cfg(64)).with_adaptation(acfg);
+    for i in 0..4i32 {
+        s.submit(vec![i + 1, 9], 60).unwrap();
+    }
+    let mut ticks = 0;
+    while !s.adapt().unwrap().trainer_running() {
+        let _ = s.tick(Instant::now()).unwrap();
+        ticks += 1;
+        assert!(ticks < 10_000, "chaos trainer never launched");
+    }
+    s.drain();
+    assert!(
+        !s.adapt().unwrap().trainer_running(),
+        "drain must cancel the in-flight fine-tune"
+    );
+    let mut done = 0usize;
+    let mut spins = 0;
+    while !s.is_idle() {
+        done += s.tick(Instant::now()).unwrap().len();
+        spins += 1;
+        assert!(spins < 20_000, "drain did not converge");
+    }
+    assert_eq!(done, 4, "drained scheduler dropped sessions");
+}

@@ -67,6 +67,16 @@ SCHEMAS: dict[str, set[str]] = {
         "prefill_chunks",
         "prefill_tokens_saved",
     },
+    "adaptation_drift": {
+        "sessions",
+        "rounds",
+        "records_harvested",
+        "swaps",
+        "trainer_runs",
+        "alpha_hat_pre",
+        "alpha_hat_post",
+        "alpha_gain",
+    },
 }
 
 # Sections that must be present in EVERY run (artifact-less CI included;
@@ -79,6 +89,7 @@ ALWAYS_PRESENT = {
     "chaos_smoke",
     "http_stream_latency",
     "prefill_interference",
+    "adaptation_drift",
 }
 
 
